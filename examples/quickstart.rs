@@ -1,0 +1,37 @@
+//! Quickstart: solve a distributed linear-regression problem with GADMM in
+//! a dozen lines — build a dataset, shard it over 8 workers, run Algorithm
+//! 1, and inspect the paper's metrics.
+//!
+//!     cargo run --release --example quickstart
+
+use gadmm::data::synthetic;
+use gadmm::model::Problem;
+use gadmm::optim::{run, Gadmm, RunOptions};
+use gadmm::topology::UnitCosts;
+use gadmm::util::rng::Pcg64;
+
+fn main() {
+    gadmm::util::logging::init();
+
+    // 600 samples, 20 features, split evenly across 8 workers.
+    let dataset = synthetic::linreg(600, 20, &mut Pcg64::seeded(7));
+    let problem = Problem::from_dataset(&dataset, 8);
+    println!("problem: {} (F* = {:.6e})", problem.name, problem.f_star);
+
+    // GADMM with ρ = 3 until the paper's 1e−4 objective error.
+    let mut engine = Gadmm::new(&problem, 3.0);
+    let trace = run(&mut engine, &problem, &UnitCosts, &RunOptions::with_target(1e-4, 50_000));
+
+    match trace.iters_to_target() {
+        Some(k) => println!(
+            "converged in {k} iterations — total communication cost {} (= {k} × N transmissions)",
+            trace.tc_to_target().unwrap()
+        ),
+        None => println!("did not converge: final error {:.3e}", trace.final_error()),
+    }
+    // Every worker ends at (nearly) the same model:
+    let consensus = engine.consensus_mean();
+    let dist = gadmm::linalg::vector::dist2(&consensus, &problem.theta_star);
+    println!("‖consensus − θ*‖ = {dist:.3e}, final ACV = {:.3e}",
+        trace.records.last().map(|r| r.acv).unwrap_or(f64::NAN));
+}

@@ -1,0 +1,102 @@
+"""AOT lowering: JAX+Pallas entry points → HLO text artifacts + manifest.
+
+HLO *text* is the interchange format (NOT ``lowered.compiler_ir("hlo")`` or
+serialized protos): jax ≥ 0.5 emits HloModuleProtos with 64-bit instruction
+ids that the rust side's xla_extension 0.5.1 rejects; the text parser
+reassigns ids and round-trips cleanly. Lowered with ``return_tuple=True`` —
+the rust loader unwraps with ``to_tuple1`` (see
+/opt/xla-example/README.md and rust/src/runtime/pjrt.rs).
+
+Usage:
+    python -m compile.aot --out-dir ../artifacts                 # default set
+    python -m compile.aot --out-dir ../artifacts \
+        --shapes linreg_prox:50:50,logreg_newton_step:90:34
+
+The default set covers every shape the examples, integration tests and
+benches execute (paper-scale synthetic shards plus the small test shards).
+"""
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from . import model  # noqa: E402
+
+# (entry, m, d) triples every consumer needs:
+#   - synthetic 1200x50 split over N=24 -> shards 50x50 (linreg + logreg)
+#   - synthetic 1200x50 split over N=4  -> shards 300x50 (e2e logreg demo)
+#   - integration-test shards: linreg 120x8 over 6 workers -> 20x8,
+#     logreg 120x5 over 4 workers -> 30x5
+DEFAULT_SHAPES = [
+    ("linreg_prox", 50, 50),
+    ("logreg_newton_step", 50, 50),
+    ("linreg_prox", 300, 50),
+    ("logreg_newton_step", 300, 50),
+    ("linreg_prox", 20, 8),
+    ("logreg_newton_step", 30, 5),
+]
+
+
+def to_hlo_text(lowered):
+    """StableHLO → XlaComputation → HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_entry(entry, m, d):
+    fn = model.entry_fn(entry)
+    args = model.example_args(entry, m, d)
+    return jax.jit(fn).lower(*args)
+
+
+def build(out_dir, shapes):
+    os.makedirs(out_dir, exist_ok=True)
+    entries = []
+    for entry, m, d in shapes:
+        text = to_hlo_text(lower_entry(entry, m, d))
+        fname = f"{entry}_m{m}_d{d}.hlo.txt"
+        path = os.path.join(out_dir, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        entries.append({"entry": entry, "m": m, "d": d, "file": fname})
+        print(f"  lowered {entry} m={m} d={d} -> {fname} ({len(text)} chars)")
+    manifest = {"dtype": "f64", "entries": entries}
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {len(entries)} artifacts + manifest.json to {out_dir}")
+
+
+def parse_shapes(spec):
+    shapes = []
+    for part in spec.split(","):
+        entry, m, d = part.strip().split(":")
+        shapes.append((entry, int(m), int(d)))
+    return shapes
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--shapes",
+        default=None,
+        help="comma-separated entry:m:d triples (default: the standard set)",
+    )
+    args = ap.parse_args()
+    shapes = parse_shapes(args.shapes) if args.shapes else DEFAULT_SHAPES
+    build(args.out_dir, shapes)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,141 @@
+"""L1 Pallas kernels for the GADMM subproblem solves.
+
+Two fused kernels carry the compute hot-spot of every worker iteration:
+
+* ``gram_2x``      — 2·XᵀX, streamed over sample tiles (linreg curvature).
+* ``logreg_fused`` — logistic margins → sigmoid coefficients → gradient and
+  Hessian accumulation, in one pass over the shard.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the grid walks the sample
+dimension in ``BLOCK_M``-row tiles so each X tile streams HBM→VMEM while the
+(d×d) accumulator stays VMEM-resident across grid steps (output index_map is
+constant); the inner contraction is an MXU-shaped ``jnp.dot``. On this CPU
+image the kernels MUST run with ``interpret=True`` (real TPU lowering emits
+Mosaic custom-calls the CPU PJRT plugin cannot execute); correctness is
+asserted against ``ref.py`` by pytest+hypothesis, and the real-TPU VMEM/MXU
+estimate is recorded in EXPERIMENTS.md §Perf.
+
+Shards whose sample count is not a multiple of ``BLOCK_M`` are zero-padded:
+zero rows contribute nothing to Gram/gradient/Hessian accumulations (for the
+logistic kernel the padded labels are +1; the zero feature row annihilates
+the contribution), so padding is exact, not approximate.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Sample-tile height. 128 aligns with the MXU systolic array on real
+# hardware; small shards fall back to a single tile.
+BLOCK_M = 128
+
+
+def _pad_rows(x, block_m):
+    """Zero-pad the sample dimension to a multiple of block_m."""
+    m = x.shape[0]
+    m_pad = ((m + block_m - 1) // block_m) * block_m
+    if m_pad == m:
+        return x
+    pad = [(0, m_pad - m)] + [(0, 0)] * (x.ndim - 1)
+    return jnp.pad(x, pad)
+
+
+def _gram_kernel(x_ref, o_ref):
+    """One grid step: o += 2 * x_tileᵀ x_tile (o initialized at step 0)."""
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    tile = x_ref[...]
+    o_ref[...] += 2.0 * jnp.dot(tile.T, tile, preferred_element_type=o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m",))
+def gram_2x(x, block_m=BLOCK_M):
+    """2·XᵀX via the tiled Pallas kernel (interpret mode on CPU)."""
+    m, d = x.shape
+    block_m = min(block_m, max(m, 1))
+    xp = _pad_rows(x, block_m)
+    grid = (xp.shape[0] // block_m,)
+    return pl.pallas_call(
+        _gram_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_m, d), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((d, d), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((d, d), x.dtype),
+        interpret=True,
+    )(xp)
+
+
+def _logreg_kernel(x_ref, y_ref, theta_ref, wvec_ref, g_ref, h_ref):
+    """One grid step of the fused logistic gradient/Hessian accumulation.
+
+    wvec carries the scalar data-term weight broadcast to a (1,)-vector so
+    it rides SMEM-friendly layouts.
+    """
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        g_ref[...] = jnp.zeros_like(g_ref)
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    x = x_ref[...]
+    y = y_ref[...]
+    theta = theta_ref[...]
+    weight = wvec_ref[0]
+    z = y * jnp.dot(x, theta, preferred_element_type=x.dtype)
+    # Stable sigmoid(-z).
+    a = jnp.abs(z)
+    e = jnp.exp(-a)
+    s_neg = jnp.where(z >= 0, e / (1.0 + e), 1.0 / (1.0 + e))
+    coeff = -weight * y * s_neg
+    w = weight * s_neg * (1.0 - s_neg)
+    g_ref[...] += jnp.dot(x.T, coeff, preferred_element_type=x.dtype)
+    xw = x * w[:, None]
+    h_ref[...] += jnp.dot(xw.T, x, preferred_element_type=x.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m",))
+def logreg_fused(x, y, theta, weight, block_m=BLOCK_M):
+    """Fused logistic (gradient, Hessian) of the weighted data term."""
+    m, d = x.shape
+    block_m = min(block_m, max(m, 1))
+    xp = _pad_rows(x, block_m)
+    # Padded labels are +1: the zero feature rows annihilate contributions.
+    yp = jnp.concatenate([y, jnp.ones(xp.shape[0] - m, dtype=y.dtype)])
+    wvec = jnp.asarray(weight, dtype=x.dtype).reshape((1,))
+    grid = (xp.shape[0] // block_m,)
+    return pl.pallas_call(
+        _logreg_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, d), lambda i: (i, 0)),
+            pl.BlockSpec((block_m,), lambda i: (i,)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((d,), lambda i: (0,)),
+            pl.BlockSpec((d, d), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((d,), x.dtype),
+            jax.ShapeDtypeStruct((d, d), x.dtype),
+        ],
+        interpret=True,
+    )(xp, yp, theta, wvec)
+
+
+def vmem_bytes_estimate(m, d, dtype_bytes=8, block_m=BLOCK_M):
+    """Estimated VMEM working set of one grid step (TPU sizing aid):
+    one X tile + the (d×d) accumulator + d-vectors."""
+    block_m = min(block_m, max(m, 1))
+    tile = block_m * d * dtype_bytes
+    acc = d * d * dtype_bytes
+    vecs = 4 * d * dtype_bytes + block_m * dtype_bytes
+    return tile + acc + vecs

@@ -1,0 +1,42 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness references: `python/tests/test_kernels.py` sweeps
+shapes/dtypes with hypothesis and asserts the Pallas implementations in
+`gadmm_kernels.py` match these to numerical tolerance. They are also what
+`model.py` would compute without the fused kernels.
+"""
+
+import jax.numpy as jnp
+
+
+def gram_2x(x):
+    """2 XᵀX — the linear-regression subproblem's curvature block."""
+    return 2.0 * (x.T @ x)
+
+
+def linreg_rhs(x, y, q):
+    """2 Xᵀy − q — the linear-regression subproblem RHS."""
+    return 2.0 * (x.T @ y) - q
+
+
+def sigmoid(z):
+    """Numerically-stable logistic sigmoid."""
+    a = jnp.abs(z)
+    e = jnp.exp(-a)
+    return jnp.where(z >= 0, 1.0 / (1.0 + e), e / (1.0 + e))
+
+
+def logreg_grad_hess(x, y, theta, weight):
+    """Fused logistic gradient and Hessian of the data term.
+
+    With labels y in {-1, +1} and margins z = y * (X @ theta):
+      grad = weight * X^T (-y * sigmoid(-z))
+      hess = weight * X^T diag(sigmoid(z) sigmoid(-z)) X
+    """
+    z = y * (x @ theta)
+    s_neg = sigmoid(-z)
+    coeff = -weight * y * s_neg
+    w = weight * s_neg * (1.0 - s_neg)
+    grad = x.T @ coeff
+    hess = (x * w[:, None]).T @ x
+    return grad, hess

@@ -1,0 +1,105 @@
+"""L2 JAX model: the GADMM per-worker subproblem solves.
+
+Both entry points lower to single HLO modules (through ``aot.py``) that the
+rust runtime executes via PJRT. The curvature/gradient blocks come from the
+L1 Pallas kernels; the linear solve is a fixed-iteration conjugate-gradient
+loop in pure jnp (no LAPACK custom-calls, so the lowered HLO runs on any
+PJRT backend — xla_extension 0.5.1 included).
+
+Entry-point ABIs (match ``rust/src/runtime/pjrt.rs``):
+
+* ``linreg_prox(x[m,d], y[m], q[d], c[], w[]) -> (theta[d],)``
+    theta = argmin w·‖Xθ−y‖² + ⟨q,θ⟩ + (c/2)‖θ‖²,
+    i.e. solve (2wXᵀX + cI)θ = 2wXᵀy − q.
+* ``logreg_newton_step(x[m,d], y[m], theta[d], q[d], c[], mu[], w[]) ->
+  (theta_new[d],)``
+    One full Newton step of
+    argmin w·Σ log(1+exp(−y Xθ)) + (μ/2)‖θ‖² + ⟨q,θ⟩ + (c/2)‖θ‖²;
+    rust iterates steps to convergence.
+"""
+
+import jax
+import jax.numpy as jnp
+
+jax.config.update("jax_enable_x64", True)
+
+from .kernels import gadmm_kernels as kernels  # noqa: E402
+
+
+def _cg_solve(matvec, b, iters):
+    """Conjugate gradients with a fixed iteration count (lowers to a clean
+    HLO while-loop; exact after d steps in exact arithmetic for SPD A)."""
+    x0 = jnp.zeros_like(b)
+    r0 = b
+    p0 = r0
+    rs0 = jnp.dot(r0, r0)
+
+    def body(_, state):
+        x, r, p, rs = state
+        ap = matvec(p)
+        denom = jnp.dot(p, ap)
+        alpha = jnp.where(denom > 0, rs / jnp.maximum(denom, 1e-300), 0.0)
+        x = x + alpha * p
+        r = r - alpha * ap
+        rs_new = jnp.dot(r, r)
+        beta = jnp.where(rs > 0, rs_new / jnp.maximum(rs, 1e-300), 0.0)
+        p = r + beta * p
+        return (x, r, p, rs_new)
+
+    x, _, _, _ = jax.lax.fori_loop(0, iters, body, (x0, r0, p0, rs0))
+    return x
+
+
+def linreg_prox(x, y, q, c, w):
+    """Weighted linreg subproblem via Gram assembly (Pallas) + CG."""
+    d = x.shape[1]
+    a = w * kernels.gram_2x(x) + c * jnp.eye(d, dtype=x.dtype)
+    rhs = 2.0 * w * (x.T @ y) - q
+    theta = _cg_solve(lambda v: a @ v, rhs, iters=2 * d)
+    return (theta,)
+
+
+def logreg_newton_step(x, y, theta, q, c, mu, w):
+    """One Newton step of the weighted logistic subproblem; μ, c, w are
+    runtime scalars so one artifact serves every worker of a shape."""
+    d = x.shape[1]
+    grad_data, hess_data = kernels.logreg_fused(x, y, theta, w)
+    grad = grad_data + mu * theta + q + c * theta
+
+    def hv(v):
+        return hess_data @ v + (mu + c) * v
+
+    step = _cg_solve(hv, grad, iters=2 * d)
+    return (theta - step,)
+
+
+def entry_fn(name):
+    """Resolve an AOT entry point by name."""
+    return {
+        "linreg_prox": linreg_prox,
+        "logreg_newton_step": logreg_newton_step,
+    }[name]
+
+
+def example_args(name, m, d, dtype=jnp.float64):
+    """ShapeDtypeStructs for lowering an entry point at shape (m, d)."""
+    s = jax.ShapeDtypeStruct
+    if name == "linreg_prox":
+        return (
+            s((m, d), dtype),
+            s((m,), dtype),
+            s((d,), dtype),
+            s((), dtype),
+            s((), dtype),
+        )
+    if name == "logreg_newton_step":
+        return (
+            s((m, d), dtype),
+            s((m,), dtype),
+            s((d,), dtype),
+            s((d,), dtype),
+            s((), dtype),
+            s((), dtype),
+            s((), dtype),
+        )
+    raise KeyError(name)

@@ -1,0 +1,17 @@
+//! Regenerates **Fig. 2** (linear regression, synthetic, N=24, GADMM
+//! ρ∈{3,5,7} vs all baselines) and **Fig. 3** (linear regression, Body-Fat
+//! surrogate, N=10): objective error / TC / running-time summaries.
+
+use gadmm::experiments::curves::{self, Figure};
+
+fn main() {
+    gadmm::util::logging::init();
+    let fast = std::env::var("GADMM_BENCH_FAST").is_ok();
+    let max_iters = if fast { 30_000 } else { 300_000 };
+    for fig in [Figure::Fig2, Figure::Fig3] {
+        let t0 = std::time::Instant::now();
+        let out = curves::run(fig, 1e-4, max_iters, 1);
+        println!("{}", out.rendered);
+        println!("[{} completed in {:.2?}]", fig.name(), t0.elapsed());
+    }
+}

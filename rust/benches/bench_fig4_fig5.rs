@@ -1,0 +1,16 @@
+//! Regenerates **Fig. 4** (logistic regression, synthetic, N=24) and
+//! **Fig. 5** (logistic regression, Derm surrogate, N=10).
+
+use gadmm::experiments::curves::{self, Figure};
+
+fn main() {
+    gadmm::util::logging::init();
+    let fast = std::env::var("GADMM_BENCH_FAST").is_ok();
+    let max_iters = if fast { 30_000 } else { 300_000 };
+    for fig in [Figure::Fig4, Figure::Fig5] {
+        let t0 = std::time::Instant::now();
+        let out = curves::run(fig, 1e-4, max_iters, 1);
+        println!("{}", out.rendered);
+        println!("[{} completed in {:.2?}]", fig.name(), t0.elapsed());
+    }
+}

@@ -1,0 +1,96 @@
+//! Microbenchmarks of the hot path: the per-iteration cost of every layer-3
+//! compute kernel (local solves, gradient evaluations, full GADMM
+//! iterations) at paper scale. This is the §Perf baseline/after harness.
+
+use gadmm::comm::Meter;
+use gadmm::data::synthetic;
+use gadmm::linalg::{Cholesky, Matrix};
+use gadmm::model::{LocalLoss, Problem};
+use gadmm::optim::{Engine, Gadmm};
+use gadmm::topology::UnitCosts;
+use gadmm::util::bench::{bench, black_box};
+use gadmm::util::rng::Pcg64;
+
+fn main() {
+    println!("== hot-path microbenchmarks (paper scale: N=24, 1200x50) ==");
+    let mut rng = Pcg64::seeded(1);
+
+    // Dense kernels.
+    let d = 50;
+    let a = {
+        let mut m = Matrix::zeros(d, d);
+        for v in &mut m.data {
+            *v = rng.normal();
+        }
+        let mut g = m.gram();
+        g.add_diag(d as f64);
+        g
+    };
+    let x = rng.normal_vec(d);
+    println!("{}", bench("gemv d=50", 100, 2000, || black_box(a.matvec(&x))).report());
+    let chol = Cholesky::factor(&a).unwrap();
+    println!(
+        "{}",
+        bench("cholesky factor d=50", 10, 500, || black_box(Cholesky::factor(&a).unwrap())).report()
+    );
+    println!(
+        "{}",
+        bench("cholesky solve d=50 (cached factor)", 100, 2000, || black_box(chol.solve(&x)))
+            .report()
+    );
+
+    // Worker-local solves at the synthetic shard shape (50x50).
+    let ds = synthetic::linreg_default(1);
+    let p = Problem::from_dataset(&ds, 24);
+    let q = rng.normal_vec(50);
+    let warm = vec![0.0; 50];
+    let c = 2.0 * 3.0 * p.data_weight;
+    // Warm the factor cache, then measure the steady-state solve.
+    let _ = p.losses[0].prox_argmin(&q, c, &warm);
+    println!(
+        "{}",
+        bench("linreg prox (cached factor, m=50 d=50)", 100, 2000, || {
+            black_box(p.losses[0].prox_argmin(&q, c, &warm))
+        })
+        .report()
+    );
+    let mut g = vec![0.0; 50];
+    println!(
+        "{}",
+        bench("linreg grad (m=50 d=50)", 100, 2000, || {
+            p.losses[0].grad_into(&x, &mut g);
+            black_box(&g);
+        })
+        .report()
+    );
+
+    let dslog = synthetic::logreg_default(1);
+    let plog = Problem::from_dataset(&dslog, 24);
+    let small_q: Vec<f64> = q.iter().map(|v| 0.1 * v).collect();
+    let warm_log = plog.theta_star.clone();
+    println!(
+        "{}",
+        bench("logreg prox newton (warm, m=50 d=50)", 20, 300, || {
+            black_box(plog.losses[0].prox_argmin(&small_q, 0.3 * plog.data_weight, &warm_log))
+        })
+        .report()
+    );
+
+    // Full engine iterations at paper scale.
+    let costs = UnitCosts;
+    let mut engine = Gadmm::new(&p, 3.0);
+    let mut meter = Meter::new(&costs);
+    let mut k = 0usize;
+    println!(
+        "{}",
+        bench("GADMM full iteration (N=24, d=50)", 5, 300, || {
+            engine.step(k, &mut meter);
+            k += 1;
+        })
+        .report()
+    );
+    println!(
+        "{}",
+        bench("objective eval (N=24, d=50)", 20, 500, || black_box(engine.objective())).report()
+    );
+}

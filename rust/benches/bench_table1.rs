@@ -1,0 +1,15 @@
+//! Regenerates **Table 1**: iterations and total communication cost to
+//! reach objective error 1e−4 on the real-dataset surrogates for
+//! N ∈ {14, 20, 24, 26}, comparing LAG-PS, LAG-WK, GADMM and GD.
+//! `GADMM_BENCH_FAST=1` shrinks the grid for smoke runs.
+
+fn main() {
+    gadmm::util::logging::init();
+    let fast = std::env::var("GADMM_BENCH_FAST").is_ok();
+    let workers: &[usize] = if fast { &[14] } else { &[14, 20, 24, 26] };
+    let max_iters = if fast { 50_000 } else { 300_000 };
+    let t0 = std::time::Instant::now();
+    let out = gadmm::experiments::table1::run(workers, 1e-4, max_iters, 1);
+    println!("{}", out.rendered);
+    println!("[bench_table1 completed in {:.2?}]", t0.elapsed());
+}

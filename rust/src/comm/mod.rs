@@ -1,0 +1,174 @@
+//! Communication accounting.
+//!
+//! The paper's TC metric charges one unit (or one link-energy) per
+//! *transmission slot*: a worker that broadcasts its model to its (≤2)
+//! chain neighbours occupies one slot and pays the cost of its most
+//! expensive receiving link (it transmits once at the power needed to reach
+//! the farther neighbour); a centralized uplink is a unicast slot; the
+//! server downlink is a single broadcast slot bottlenecked by the weakest
+//! channel. This reproduces Table 1's arithmetic exactly: GADMM pays `N`
+//! per iteration, GD/ADMM pay `N + 1`, LAG pays `1 + #uploads`.
+
+use crate::topology::LinkCosts;
+
+/// Accumulating cost meter. Unit TC counts transmission slots; energy TC
+/// weighs each slot by the provided [`LinkCosts`] model.
+pub struct Meter<'a> {
+    costs: &'a dyn LinkCosts,
+    /// Cumulative transmission slots (unit-cost TC).
+    pub tc_unit: f64,
+    /// Cumulative energy-model TC.
+    pub tc_energy: f64,
+    /// Cumulative communication rounds.
+    pub rounds: usize,
+    /// Total transmission slots (diagnostics).
+    pub transmissions: usize,
+    /// Per-worker uplink-slot counts (Fig. 6 re-weights these under many
+    /// topology draws without re-running the algorithm).
+    pub uplink_counts: Vec<usize>,
+    /// Count of server broadcast slots.
+    pub server_broadcasts: usize,
+}
+
+impl<'a> Meter<'a> {
+    pub fn new(costs: &'a dyn LinkCosts) -> Meter<'a> {
+        Meter {
+            costs,
+            tc_unit: 0.0,
+            tc_energy: 0.0,
+            rounds: 0,
+            transmissions: 0,
+            uplink_counts: Vec::new(),
+            server_broadcasts: 0,
+        }
+    }
+
+    /// Begin a communication round (head phase, tail phase, uplink slot,
+    /// downlink slot, …).
+    pub fn begin_round(&mut self) {
+        self.rounds += 1;
+    }
+
+    /// Worker `from` broadcasts its model to its chain neighbours in one
+    /// slot; energy is the max receiving-link cost.
+    pub fn neighbor_broadcast(&mut self, from: usize, neighbors: &[usize]) {
+        if neighbors.is_empty() {
+            return;
+        }
+        self.transmissions += 1;
+        self.tc_unit += 1.0;
+        self.tc_energy += neighbors
+            .iter()
+            .map(|&to| self.costs.link(from, to))
+            .fold(0.0, f64::max);
+    }
+
+    /// Worker `from` unicasts to worker `to` (one slot).
+    pub fn unicast(&mut self, from: usize, to: usize) {
+        self.transmissions += 1;
+        self.tc_unit += 1.0;
+        self.tc_energy += self.costs.link(from, to);
+    }
+
+    /// Worker `n` unicasts to the central controller.
+    pub fn uplink(&mut self, n: usize) {
+        self.transmissions += 1;
+        self.tc_unit += 1.0;
+        self.tc_energy += self.costs.uplink(n);
+        if self.uplink_counts.len() <= n {
+            self.uplink_counts.resize(n + 1, 0);
+        }
+        self.uplink_counts[n] += 1;
+    }
+
+    /// Central controller broadcasts to all workers (one slot, weakest
+    /// channel is the bottleneck).
+    pub fn server_broadcast(&mut self) {
+        self.transmissions += 1;
+        self.tc_unit += 1.0;
+        self.tc_energy += self.costs.server_broadcast();
+        self.server_broadcasts += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::{EnergyCostModel, Placement, UnitCosts};
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn unit_accounting_matches_paper_arithmetic() {
+        let costs = UnitCosts;
+        let mut m = Meter::new(&costs);
+        // One GADMM iteration on N=14: every worker transmits once.
+        m.begin_round();
+        for w in (0..14usize).step_by(2) {
+            let neigh: Vec<usize> = [w.checked_sub(1), Some(w + 1).filter(|&x| x < 14)]
+                .into_iter()
+                .flatten()
+                .collect();
+            m.neighbor_broadcast(w, &neigh);
+        }
+        m.begin_round();
+        for w in (1..14).step_by(2) {
+            let neigh: Vec<usize> = [Some(w - 1), Some(w + 1).filter(|&x| x < 14)]
+                .into_iter()
+                .flatten()
+                .collect();
+            m.neighbor_broadcast(w, &neigh);
+        }
+        assert_eq!(m.tc_unit, 14.0); // N per iteration — Table 1: 78·14 = 1092
+        assert_eq!(m.rounds, 2);
+
+        // One GD iteration: N uplinks + broadcast = N + 1.
+        let mut g = Meter::new(&costs);
+        g.begin_round();
+        for w in 0..14 {
+            g.uplink(w);
+        }
+        g.begin_round();
+        g.server_broadcast();
+        assert_eq!(g.tc_unit, 15.0); // Table 1: 524·15 = 7860
+    }
+
+    #[test]
+    fn energy_uses_max_link_for_broadcast() {
+        let p = Placement {
+            side: 10.0,
+            positions: vec![(0.0, 0.0), (1.0, 0.0), (5.0, 0.0)],
+        };
+        let costs = EnergyCostModel::new(&p, 0);
+        let mut m = Meter::new(&costs);
+        m.neighbor_broadcast(0, &[1, 2]);
+        let expect = crate::topology::tx_energy(5.0);
+        assert!((m.tc_energy - expect).abs() < 1e-12);
+        assert_eq!(m.tc_unit, 1.0);
+    }
+
+    #[test]
+    fn empty_neighbor_list_is_free() {
+        let costs = UnitCosts;
+        let mut m = Meter::new(&costs);
+        m.neighbor_broadcast(0, &[]);
+        assert_eq!(m.tc_unit, 0.0);
+        assert_eq!(m.transmissions, 0);
+    }
+
+    #[test]
+    fn randomized_meter_is_additive() {
+        let mut rng = Pcg64::seeded(9);
+        let p = Placement::random(6, 10.0, &mut rng);
+        let costs = EnergyCostModel::new(&p, p.central_worker());
+        let mut m = Meter::new(&costs);
+        let mut expect = 0.0;
+        for _ in 0..50 {
+            let a = rng.range(0, 6);
+            let b = (a + 1 + rng.range(0, 5)) % 6;
+            m.unicast(a, b);
+            expect += costs.link(a, b);
+        }
+        assert!((m.tc_energy - expect).abs() < 1e-9);
+        assert_eq!(m.tc_unit, 50.0);
+    }
+}

@@ -1,0 +1,199 @@
+//! Experiment configuration: structured settings for every run, loadable
+//! from JSON files (see `configs/` in the repo root) and overridable from
+//! the CLI. Defaults reproduce the paper's setups.
+
+use crate::data::Task;
+use crate::util::json::{self, Json};
+use std::path::Path;
+
+/// Which dataset a run uses.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DatasetKind {
+    SyntheticLinreg,
+    SyntheticLogreg,
+    Bodyfat,
+    Derm,
+}
+
+impl DatasetKind {
+    pub fn task(&self) -> Task {
+        match self {
+            DatasetKind::SyntheticLinreg | DatasetKind::Bodyfat => Task::LinearRegression,
+            DatasetKind::SyntheticLogreg | DatasetKind::Derm => Task::LogisticRegression,
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<DatasetKind, String> {
+        match s {
+            "synthetic-linreg" | "linreg" => Ok(DatasetKind::SyntheticLinreg),
+            "synthetic-logreg" | "logreg" => Ok(DatasetKind::SyntheticLogreg),
+            "bodyfat" => Ok(DatasetKind::Bodyfat),
+            "derm" => Ok(DatasetKind::Derm),
+            other => Err(format!(
+                "unknown dataset '{other}' (expected synthetic-linreg, synthetic-logreg, bodyfat, derm)"
+            )),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            DatasetKind::SyntheticLinreg => "synthetic-linreg",
+            DatasetKind::SyntheticLogreg => "synthetic-logreg",
+            DatasetKind::Bodyfat => "bodyfat",
+            DatasetKind::Derm => "derm",
+        }
+    }
+
+    /// Materialize the dataset (deterministic in `seed`).
+    pub fn build(&self, seed: u64) -> crate::data::Dataset {
+        match self {
+            DatasetKind::SyntheticLinreg => crate::data::synthetic::linreg_default(seed),
+            DatasetKind::SyntheticLogreg => crate::data::synthetic::logreg_default(seed),
+            DatasetKind::Bodyfat => crate::data::real::bodyfat(seed),
+            DatasetKind::Derm => crate::data::real::derm(seed),
+        }
+    }
+}
+
+/// One experiment run's full configuration.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    pub dataset: DatasetKind,
+    pub workers: usize,
+    pub rho: f64,
+    /// Objective-error target (paper: 1e−4).
+    pub target: f64,
+    pub max_iters: usize,
+    pub seed: u64,
+    /// Square side for random placements (meters).
+    pub area_side: f64,
+    /// D-GADMM re-chain period τ.
+    pub tau: usize,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            dataset: DatasetKind::SyntheticLinreg,
+            workers: 24,
+            rho: 5.0,
+            target: 1e-4,
+            max_iters: 200_000,
+            seed: 1,
+            area_side: 10.0,
+            tau: 15,
+        }
+    }
+}
+
+impl RunConfig {
+    /// Parse from a JSON object; unknown keys are rejected to catch typos.
+    pub fn from_json(v: &Json) -> Result<RunConfig, String> {
+        let mut cfg = RunConfig::default();
+        let Json::Obj(pairs) = v else {
+            return Err("config root must be a JSON object".into());
+        };
+        for (k, val) in pairs {
+            match k.as_str() {
+                "dataset" => {
+                    cfg.dataset =
+                        DatasetKind::parse(val.as_str().ok_or("dataset must be a string")?)?
+                }
+                "workers" => cfg.workers = val.as_usize().ok_or("workers must be a number")?,
+                "rho" => cfg.rho = val.as_f64().ok_or("rho must be a number")?,
+                "target" => cfg.target = val.as_f64().ok_or("target must be a number")?,
+                "max_iters" => {
+                    cfg.max_iters = val.as_usize().ok_or("max_iters must be a number")?
+                }
+                "seed" => cfg.seed = val.as_f64().ok_or("seed must be a number")? as u64,
+                "area_side" => cfg.area_side = val.as_f64().ok_or("area_side must be a number")?,
+                "tau" => cfg.tau = val.as_usize().ok_or("tau must be a number")?,
+                other => return Err(format!("unknown config key '{other}'")),
+            }
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn load(path: &Path) -> Result<RunConfig, String> {
+        let text =
+            std::fs::read_to_string(path).map_err(|e| format!("{}: {e}", path.display()))?;
+        let v = json::parse(&text).map_err(|e| format!("{}: {e}", path.display()))?;
+        RunConfig::from_json(&v)
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.workers < 2 {
+            return Err("workers must be ≥ 2".into());
+        }
+        if self.workers % 2 != 0 {
+            return Err("GADMM requires an even number of workers".into());
+        }
+        if self.rho <= 0.0 {
+            return Err("rho must be positive".into());
+        }
+        if self.target <= 0.0 {
+            return Err("target must be positive".into());
+        }
+        if self.tau == 0 {
+            return Err("tau must be ≥ 1".into());
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("dataset", self.dataset.name())
+            .set("workers", self.workers)
+            .set("rho", self.rho)
+            .set("target", self.target)
+            .set("max_iters", self.max_iters)
+            .set("seed", self.seed)
+            .set("area_side", self.area_side)
+            .set("tau", self.tau)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_valid() {
+        RunConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let cfg = RunConfig {
+            dataset: DatasetKind::Derm,
+            workers: 10,
+            rho: 0.5,
+            target: 1e-5,
+            max_iters: 5000,
+            seed: 9,
+            area_side: 250.0,
+            tau: 1,
+        };
+        let back = RunConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back.dataset, DatasetKind::Derm);
+        assert_eq!(back.workers, 10);
+        assert_eq!(back.rho, 0.5);
+        assert_eq!(back.tau, 1);
+    }
+
+    #[test]
+    fn rejects_bad_configs() {
+        assert!(RunConfig::from_json(&json::parse(r#"{"workers": 5}"#).unwrap()).is_err());
+        assert!(RunConfig::from_json(&json::parse(r#"{"rho": -1}"#).unwrap()).is_err());
+        assert!(RunConfig::from_json(&json::parse(r#"{"typo_key": 1}"#).unwrap()).is_err());
+        assert!(RunConfig::from_json(&json::parse(r#"{"dataset": "mnist"}"#).unwrap()).is_err());
+    }
+
+    #[test]
+    fn dataset_kind_builds() {
+        let ds = DatasetKind::Bodyfat.build(1);
+        assert_eq!(ds.num_samples(), 252);
+        assert_eq!(DatasetKind::parse("bodyfat").unwrap().task(), Task::LinearRegression);
+    }
+}

@@ -1,0 +1,200 @@
+//! Worker actor: owns its shard state and exchanges models with its chain
+//! neighbours over channels. The body of `run_worker` is Algorithm 1 from
+//! the worker's point of view.
+
+use crate::model::LocalLoss;
+use crate::runtime::LocalSolver;
+use std::sync::mpsc::{Receiver, Sender};
+
+/// Leader → worker control messages.
+pub enum LeaderMsg {
+    /// Run one full GADMM iteration (head phase, tail phase, dual update)
+    /// and report.
+    Iterate,
+    Shutdown,
+}
+
+/// Worker → worker neighbour messages.
+pub struct WorkerMsg {
+    pub from: usize,
+    pub theta: Vec<f64>,
+}
+
+/// Worker → leader monitoring report (instrumentation, not algorithm
+/// state — the leader never feeds models back).
+pub struct Report {
+    pub id: usize,
+    pub loss_value: f64,
+    pub theta: Vec<f64>,
+}
+
+/// Everything a worker thread owns.
+pub struct WorkerCtx<'a> {
+    pub id: usize,
+    pub is_head: bool,
+    /// Physical ids of the chain neighbours.
+    pub left: Option<usize>,
+    pub right: Option<usize>,
+    pub rho: f64,
+    pub dim: usize,
+    /// Subproblem solver (native or PJRT-backed).
+    pub solver: Box<dyn LocalSolver + Send + 'a>,
+    /// Loss used for monitoring reports (and dual bookkeeping checks).
+    pub loss: &'a dyn LocalLoss,
+    pub inbox: Receiver<WorkerMsg>,
+    /// Senders to [left, right] neighbours.
+    pub neighbors_tx: [Option<Sender<WorkerMsg>>; 2],
+    pub commands: Receiver<LeaderMsg>,
+    pub report: Sender<Report>,
+}
+
+/// Worker main loop.
+pub fn run_worker(ctx: WorkerCtx<'_>) {
+    let d = ctx.dim;
+    let mut theta = vec![0.0; d];
+    // λ owned by this worker (couples it to its right neighbour); the left
+    // neighbour's λ is tracked from its dual update rule, which this worker
+    // can mirror locally because it sees both endpoints' models.
+    let mut lambda_own = vec![0.0; d];
+    let mut lambda_left = vec![0.0; d];
+    // Cached neighbour models (zero-initialized like everything else).
+    let mut theta_left = vec![0.0; d];
+    let mut theta_right = vec![0.0; d];
+    let mut q = vec![0.0; d];
+
+    let expected_neighbors = ctx.left.is_some() as usize + ctx.right.is_some() as usize;
+
+    loop {
+        match ctx.commands.recv() {
+            Err(_) | Ok(LeaderMsg::Shutdown) => return,
+            Ok(LeaderMsg::Iterate) => {}
+        }
+
+        if ctx.is_head {
+            // Head phase: solve against cached (iteration-k) tail models,
+            // then broadcast; finally receive the fresh tail models.
+            theta = solve_local(
+                &ctx, &mut q, &theta, &theta_left, &theta_right, &lambda_left, &lambda_own,
+            );
+            send_model(&ctx, &theta);
+            recv_models(&ctx, expected_neighbors, &mut theta_left, &mut theta_right);
+        } else {
+            // Tail phase: wait for fresh head models first (eq. 13 uses
+            // θ^{k+1} of both head neighbours), then solve and send back.
+            recv_models(&ctx, expected_neighbors, &mut theta_left, &mut theta_right);
+            theta = solve_local(
+                &ctx, &mut q, &theta, &theta_left, &theta_right, &lambda_left, &lambda_own,
+            );
+            send_model(&ctx, &theta);
+        }
+
+        // Dual updates (eq. 15), purely local: this worker's own λ couples
+        // (θ_w, θ_right); it also mirrors its left neighbour's λ because the
+        // update only involves (θ_left, θ_w), both known here.
+        if ctx.right.is_some() {
+            for j in 0..d {
+                lambda_own[j] += ctx.rho * (theta[j] - theta_right[j]);
+            }
+        }
+        if ctx.left.is_some() {
+            for j in 0..d {
+                lambda_left[j] += ctx.rho * (theta_left[j] - theta[j]);
+            }
+        }
+
+        ctx.report
+            .send(Report {
+                id: ctx.id,
+                loss_value: ctx.loss.value(&theta),
+                theta: theta.clone(),
+            })
+            .expect("leader alive");
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn solve_local(
+    ctx: &WorkerCtx<'_>,
+    q: &mut [f64],
+    theta_cur: &[f64],
+    theta_left: &[f64],
+    theta_right: &[f64],
+    lambda_left: &[f64],
+    lambda_own: &[f64],
+) -> Vec<f64> {
+    let d = ctx.dim;
+    q.iter_mut().for_each(|x| *x = 0.0);
+    let mut couplings = 0.0;
+    if ctx.left.is_some() {
+        for j in 0..d {
+            q[j] += -lambda_left[j] - ctx.rho * theta_left[j];
+        }
+        couplings += 1.0;
+    }
+    if ctx.right.is_some() {
+        for j in 0..d {
+            q[j] += lambda_own[j] - ctx.rho * theta_right[j];
+        }
+        couplings += 1.0;
+    }
+    let c = ctx.rho * couplings;
+    ctx.solver.prox_argmin(q, c, theta_cur)
+}
+
+fn send_model(ctx: &WorkerCtx<'_>, theta: &[f64]) {
+    for tx in ctx.neighbors_tx.iter().flatten() {
+        // A real radio would broadcast once; channel fan-out models the two
+        // receivers of that single transmission.
+        let _ = tx.send(WorkerMsg {
+            from: ctx.id,
+            theta: theta.to_vec(),
+        });
+    }
+}
+
+fn recv_models(
+    ctx: &WorkerCtx<'_>,
+    expected: usize,
+    theta_left: &mut Vec<f64>,
+    theta_right: &mut Vec<f64>,
+) {
+    for _ in 0..expected {
+        let msg = ctx.inbox.recv().expect("neighbor alive");
+        if Some(msg.from) == ctx.left {
+            *theta_left = msg.theta;
+        } else if Some(msg.from) == ctx.right {
+            *theta_right = msg.theta;
+        } else {
+            panic!("worker {} received model from non-neighbor {}", ctx.id, msg.from);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn worker_msg_carries_model() {
+        let msg = WorkerMsg {
+            from: 3,
+            theta: vec![1.0, 2.0],
+        };
+        assert_eq!(msg.from, 3);
+        assert_eq!(msg.theta.len(), 2);
+    }
+
+    #[test]
+    fn vec_ops_available_for_worker_math() {
+        // Smoke-check the worker's dual arithmetic pattern.
+        let mut lam = vec![0.0; 3];
+        let a = vec![1.0, 2.0, 3.0];
+        let b = vec![0.5, 1.5, 2.5];
+        let rho = 2.0;
+        for j in 0..3 {
+            lam[j] += rho * (a[j] - b[j]);
+        }
+        assert_eq!(lam, vec![1.0, 1.0, 1.0]);
+        assert_eq!(crate::linalg::vector::sub(&a, &b), vec![0.5, 0.5, 0.5]);
+    }
+}

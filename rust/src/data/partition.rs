@@ -1,0 +1,72 @@
+//! Sharding a dataset across N workers.
+
+use super::{Dataset, Shard};
+
+/// Evenly partition samples into `n_workers` contiguous shards. When the
+/// sample count is not divisible, the first `m % n` workers receive one
+/// extra sample (the paper's real datasets, e.g. 252 samples over 20
+/// workers, need this).
+pub fn partition_even(ds: &Dataset, n_workers: usize) -> Vec<Shard> {
+    assert!(n_workers >= 1);
+    let m = ds.num_samples();
+    assert!(
+        m >= n_workers,
+        "cannot split {m} samples across {n_workers} workers"
+    );
+    let base = m / n_workers;
+    let extra = m % n_workers;
+    let mut shards = Vec::with_capacity(n_workers);
+    let mut lo = 0usize;
+    for w in 0..n_workers {
+        let take = base + usize::from(w < extra);
+        let hi = lo + take;
+        shards.push(Shard {
+            worker: w,
+            features: ds.features.slice_rows(lo, hi),
+            targets: ds.targets[lo..hi].to_vec(),
+        });
+        lo = hi;
+    }
+    debug_assert_eq!(lo, m);
+    shards
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn covers_all_samples_exactly_once() {
+        let ds = synthetic::linreg(1200, 50, &mut Pcg64::seeded(1));
+        for n in [1, 7, 24, 26] {
+            let shards = partition_even(&ds, n);
+            assert_eq!(shards.len(), n);
+            let total: usize = shards.iter().map(|s| s.features.rows).sum();
+            assert_eq!(total, 1200);
+            // Sizes differ by at most 1.
+            let sizes: Vec<usize> = shards.iter().map(|s| s.features.rows).collect();
+            let (min, max) = (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
+            assert!(max - min <= 1);
+            // First shard's first row is the dataset's first row.
+            assert_eq!(shards[0].features.row(0), ds.features.row(0));
+        }
+    }
+
+    #[test]
+    fn remainder_distribution() {
+        let ds = synthetic::linreg(252, 5, &mut Pcg64::seeded(2));
+        let shards = partition_even(&ds, 20); // 252 = 12*20 + 12
+        let sizes: Vec<usize> = shards.iter().map(|s| s.features.rows).collect();
+        assert_eq!(sizes.iter().filter(|&&s| s == 13).count(), 12);
+        assert_eq!(sizes.iter().filter(|&&s| s == 12).count(), 8);
+    }
+
+    #[test]
+    #[should_panic(expected = "cannot split")]
+    fn too_many_workers_panics() {
+        let ds = synthetic::linreg(10, 3, &mut Pcg64::seeded(3));
+        partition_even(&ds, 11);
+    }
+}

@@ -1,0 +1,169 @@
+//! Figure 7: D-GADMM vs GADMM under a *time-varying* physical topology —
+//! linear regression, synthetic dataset, ρ=1, N=50 workers re-placed
+//! uniformly in a 250×250 m² area every 15 iterations (the system coherence
+//! time). D-GADMM re-chains at every coherence boundary (paying the paper's
+//! 2-iteration / 4-round chain-build overhead); GADMM keeps its initial
+//! logical chain. Both are charged energy TC against the *moving* topology
+//! through [`crate::topology::DynamicCosts`].
+
+use crate::comm::Meter;
+use crate::config::DatasetKind;
+use crate::metrics::{IterRecord, Trace};
+use crate::model::Problem;
+use crate::optim::{Dgadmm, Engine, Gadmm, RechainMode, RunOptions};
+use crate::topology::{chain, DynamicCosts, EnergyCostModel, Placement};
+use crate::util::json::Json;
+use crate::util::rng::Pcg64;
+use std::time::Instant;
+
+pub struct Fig7Output {
+    pub gadmm: Trace,
+    pub dgadmm: Trace,
+    pub report: Json,
+}
+
+/// Drive an engine with the topology re-randomized every `coherence`
+/// iterations.
+fn run_dynamic<E: Engine>(
+    engine: &mut E,
+    problem: &Problem,
+    costs: &DynamicCosts,
+    workers: usize,
+    area: f64,
+    coherence: usize,
+    opts: &RunOptions,
+    topo_rng: &mut Pcg64,
+) -> Trace {
+    let mut meter = Meter::new(costs);
+    let mut trace = Trace::new(&engine.name(), &problem.name, opts.target);
+    let t0 = Instant::now();
+    for k in 0..opts.max_iters {
+        if k > 0 && k % coherence == 0 {
+            // Workers moved: swap in the new physical topology.
+            let placement = Placement::random(workers, area, topo_rng);
+            costs.swap(EnergyCostModel::new(&placement, placement.central_worker()));
+        }
+        engine.step(k, &mut meter);
+        let obj_err = (engine.objective() - problem.f_star).abs();
+        trace.push(IterRecord {
+            iter: k + 1,
+            obj_err,
+            tc_unit: meter.tc_unit,
+            tc_energy: meter.tc_energy,
+            rounds: meter.rounds,
+            elapsed: t0.elapsed(),
+            acv: engine.acv(),
+        });
+        if obj_err <= opts.target || !obj_err.is_finite() || obj_err > opts.divergence {
+            break;
+        }
+    }
+    trace
+}
+
+pub fn run(
+    workers: usize,
+    rho: f64,
+    coherence: usize,
+    target: f64,
+    max_iters: usize,
+    seed: u64,
+) -> Fig7Output {
+    let ds = DatasetKind::SyntheticLinreg.build(seed);
+    let problem = Problem::from_dataset(&ds, workers);
+    let opts = RunOptions::with_target(target, max_iters);
+    let area = 250.0;
+
+    // Same initial placement and topology-evolution seed for both runs.
+    let mut placement_rng = Pcg64::new(seed, 0xf17a);
+    let initial = Placement::random(workers, area, &mut placement_rng);
+    let initial_model = EnergyCostModel::new(&initial, initial.central_worker());
+
+    // GADMM: fixed logical chain built once on the initial topology.
+    let gadmm = {
+        let costs = DynamicCosts::new(initial_model.clone());
+        let mut chain_rng = Pcg64::new(seed, 0xc4a1);
+        let logical = chain::rechain(workers, &costs, &mut chain_rng);
+        let mut engine = Gadmm::with_chain(&problem, rho, logical);
+        let mut topo_rng = Pcg64::new(seed, 0x70b0);
+        run_dynamic(
+            &mut engine,
+            &problem,
+            &costs,
+            workers,
+            area,
+            coherence,
+            &opts,
+            &mut topo_rng,
+        )
+    };
+
+    // D-GADMM: re-chains every coherence interval (announced overhead).
+    let dgadmm = {
+        let costs = DynamicCosts::new(initial_model);
+        let mut engine = Dgadmm::new(&problem, rho, coherence, RechainMode::Announced, &costs, seed);
+        let mut topo_rng = Pcg64::new(seed, 0x70b0); // same topology evolution
+        run_dynamic(
+            &mut engine,
+            &problem,
+            &costs,
+            workers,
+            area,
+            coherence,
+            &opts,
+            &mut topo_rng,
+        )
+    };
+
+    let summarize = |t: &Trace| {
+        Json::obj()
+            .set("algorithm", t.algorithm.as_str())
+            .set(
+                "iters_to_target",
+                t.iters_to_target().map(|k| Json::Num(k as f64)).unwrap_or(Json::Null),
+            )
+            .set(
+                "tc_energy_to_target",
+                t.energy_to_target().map(Json::Num).unwrap_or(Json::Null),
+            )
+            .set("final_err", t.final_error())
+            .set("trace", t.to_json(200))
+    };
+    let report = Json::obj()
+        .set("figure", "fig7")
+        .set("workers", workers)
+        .set("rho", rho)
+        .set("coherence", coherence)
+        .set("gadmm", summarize(&gadmm))
+        .set("dgadmm", summarize(&dgadmm));
+    Fig7Output {
+        gadmm,
+        dgadmm,
+        report,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dgadmm_beats_static_gadmm_under_movement() {
+        // Scaled-down Fig 7 (N=10): D-GADMM must converge in fewer
+        // iterations AND lower energy TC than chain-frozen GADMM whose
+        // physical neighbours keep moving away.
+        let out = run(10, 3.0, 15, 1e-4, 30_000, 2);
+        let (gk, dk) = (out.gadmm.iters_to_target(), out.dgadmm.iters_to_target());
+        let dk = dk.expect("D-GADMM should converge");
+        if let Some(gk) = gk {
+            // Iterations: within the chain-build overhead of static GADMM
+            // (at this tiny N both converge in ~20 iterations; the decisive
+            // N=50 comparison runs in bench_fig7_fig8).
+            assert!(dk <= gk + 2 * (dk / 15 + 1), "D-GADMM {dk} ≫ GADMM {gk}");
+            // Energy: adapting the chain to the moving workers must pay off.
+            let ge = out.gadmm.energy_to_target().unwrap();
+            let de = out.dgadmm.energy_to_target().unwrap();
+            assert!(de < ge, "D-GADMM energy {de} ≥ GADMM {ge}");
+        }
+    }
+}

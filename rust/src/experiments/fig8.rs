@@ -1,0 +1,113 @@
+//! Figure 8: D-GADMM (re-chaining every iteration at zero overhead — the
+//! predefined pseudorandom sequence of logical chains) vs static GADMM vs
+//! standard parameter-server ADMM, on linear regression with the synthetic
+//! dataset, ρ=1, N=24 workers dropped once in a 250×250 m² area.
+//!
+//! The paper's claims to reproduce: standard ADMM needs fewer iterations
+//! than chain GADMM but pays ~4× its communication energy; D-GADMM with
+//! per-iteration re-chaining closes the iteration gap (or better) at a
+//! fraction of ADMM's energy (~40× lower in the paper).
+
+use super::run_engine;
+use crate::config::DatasetKind;
+use crate::metrics::Trace;
+use crate::model::Problem;
+use crate::optim::{Admm, Dgadmm, Gadmm, RechainMode, RunOptions};
+use crate::topology::{chain, EnergyCostModel, Placement};
+use crate::util::json::Json;
+use crate::util::rng::Pcg64;
+use crate::util::table::{fmt_count, Table};
+
+pub struct Fig8Output {
+    pub traces: Vec<Trace>,
+    pub rendered: String,
+    pub report: Json,
+}
+
+pub fn run(workers: usize, rho: f64, target: f64, max_iters: usize, seed: u64) -> Fig8Output {
+    let ds = DatasetKind::SyntheticLinreg.build(seed);
+    let problem = Problem::from_dataset(&ds, workers);
+    let opts = RunOptions::with_target(target, max_iters);
+    let mut rng = Pcg64::new(seed, 0xf18a);
+    let placement = Placement::random(workers, 250.0, &mut rng);
+    let costs = EnergyCostModel::new(&placement, placement.central_worker());
+
+    let mut traces = Vec::new();
+    // Static GADMM on the Appendix-D chain of this placement.
+    {
+        let logical = chain::rechain(workers, &costs, &mut rng);
+        let mut e = Gadmm::with_chain(&problem, rho, logical);
+        traces.push(run_engine(&mut e, &problem, &costs, &opts));
+    }
+    // D-GADMM, free re-chaining every iteration (predefined sequence).
+    {
+        let mut e = Dgadmm::new(&problem, rho, 1, RechainMode::Free, &costs, seed);
+        traces.push(run_engine(&mut e, &problem, &costs, &opts));
+    }
+    // Standard parameter-server ADMM (star topology to the central worker).
+    {
+        let mut e = Admm::new(&problem, rho);
+        traces.push(run_engine(&mut e, &problem, &costs, &opts));
+    }
+
+    let mut table = Table::new(vec!["Algorithm", "iters→target", "energy TC→target", "final err"]);
+    for t in &traces {
+        table.row(vec![
+            t.algorithm.clone(),
+            t.iters_to_target().map(fmt_count).unwrap_or_else(|| "—".into()),
+            t.energy_to_target()
+                .map(|e| format!("{e:.3e}"))
+                .unwrap_or_else(|| "—".into()),
+            format!("{:.2e}", t.final_error()),
+        ]);
+    }
+    let rendered = format!(
+        "\nfig8 — synthetic linreg, N={workers}, rho={rho}, 250x250 m², target {target:.0e}\n{}",
+        table.render()
+    );
+    let report = Json::obj().set("figure", "fig8").set("workers", workers).set("rho", rho).set(
+        "traces",
+        super::traces_to_json(&traces, 200),
+    );
+    Fig8Output {
+        traces,
+        rendered,
+        report,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dgadmm_matches_admm_iterations_at_lower_energy() {
+        // Scaled-down Fig 8 (N=10). The paper's shape: ADMM ≤ GADMM in
+        // iterations; D-GADMM(τ=1) within ~2× of ADMM's iterations; both
+        // chain methods far below ADMM in energy.
+        let out = run(10, 3.0, 1e-4, 40_000, 3);
+        let by_name = |prefix: &str| {
+            out.traces
+                .iter()
+                .find(|t| t.algorithm.starts_with(prefix))
+                .unwrap()
+        };
+        let admm = by_name("ADMM");
+        let dgadmm = by_name("D-GADMM");
+        let admm_k = admm.iters_to_target().expect("ADMM converges");
+        let d_k = dgadmm.iters_to_target().expect("D-GADMM converges");
+        assert!(
+            d_k <= admm_k * 3,
+            "D-GADMM iterations {d_k} far above ADMM {admm_k}"
+        );
+        // The decisive energy comparison lives at the paper's N=24 in
+        // `bench_fig7_fig8`; at this reduced N=10 the chain-vs-star energy
+        // gap is geometry-noise, so only sanity-bound it here.
+        let admm_e = admm.energy_to_target().unwrap();
+        let d_e = dgadmm.energy_to_target().unwrap();
+        assert!(
+            d_e < admm_e * 3.0,
+            "D-GADMM energy {d_e} wildly above ADMM {admm_e}"
+        );
+    }
+}

@@ -1,0 +1,86 @@
+//! Experiment drivers — one per table/figure of the paper's evaluation
+//! (§7). Each driver regenerates the corresponding result: it builds the
+//! workload, runs GADMM and the baselines with the paper's metrics, prints
+//! the paper-style table/series, and returns a JSON report (written under
+//! `results/` by the CLI, consumed verbatim by the benches).
+//!
+//! Index (DESIGN.md §Per-experiment-index):
+//! * [`table1::run`]   — Table 1 (iterations + TC to 1e−4, real data, N grid)
+//! * [`curves::run`]   — Figs 2–5 (objective error / TC / time curves)
+//! * [`fig6::run`]     — Fig 6a/6b (energy-TC CDFs) + 6c (ACV curve)
+//! * [`fig7::run`]     — Fig 7 (D-GADMM under time-varying topology)
+//! * [`fig8::run`]     — Fig 8 (D-GADMM vs GADMM vs standard ADMM)
+
+pub mod curves;
+pub mod fig6;
+pub mod fig7;
+pub mod fig8;
+pub mod table1;
+
+use crate::metrics::Trace;
+use crate::model::Problem;
+use crate::optim::{self, Engine, RunOptions};
+use crate::topology::LinkCosts;
+use crate::util::json::Json;
+use std::path::Path;
+
+/// Run one engine and return its trace (shared helper).
+pub fn run_engine<E: Engine>(
+    engine: &mut E,
+    problem: &Problem,
+    costs: &dyn LinkCosts,
+    opts: &RunOptions,
+) -> Trace {
+    let t = optim::run(engine, problem, costs, opts);
+    log::info!(
+        "{:<22} iters_to_target={:<8} tc={:<12} final_err={:.3e}",
+        t.algorithm,
+        t.iters_to_target().map(|k| k.to_string()).unwrap_or_else(|| "—".into()),
+        t.tc_to_target().map(|c| format!("{c:.0}")).unwrap_or_else(|| "—".into()),
+        t.final_error()
+    );
+    t
+}
+
+/// Write an experiment's JSON report under `results/`.
+pub fn write_report(dir: &Path, name: &str, report: &Json) -> std::io::Result<std::path::PathBuf> {
+    std::fs::create_dir_all(dir)?;
+    let path = dir.join(format!("{name}.json"));
+    std::fs::write(&path, report.to_string_pretty())?;
+    Ok(path)
+}
+
+/// Write a trace as CSV under `results/`.
+pub fn write_trace_csv(dir: &Path, name: &str, trace: &Trace) -> std::io::Result<()> {
+    std::fs::create_dir_all(dir)?;
+    let mut f = std::fs::File::create(dir.join(format!("{name}.csv")))?;
+    trace.write_csv(&mut f)
+}
+
+/// Summarize a set of traces into a JSON array of convergence stats.
+pub fn traces_to_json(traces: &[Trace], curve_points: usize) -> Json {
+    Json::Arr(traces.iter().map(|t| t.to_json(curve_points)).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+    use crate::optim::Gadmm;
+    use crate::topology::UnitCosts;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn helpers_roundtrip() {
+        let ds = synthetic::linreg(60, 5, &mut Pcg64::seeded(1));
+        let p = Problem::from_dataset(&ds, 4);
+        let mut e = Gadmm::new(&p, 2.0);
+        let t = run_engine(&mut e, &p, &UnitCosts, &RunOptions::with_target(1e-3, 500));
+        let dir = std::env::temp_dir().join("gadmm-exp-test");
+        let path = write_report(&dir, "unit", &traces_to_json(&[t.clone()], 20)).unwrap();
+        let text = std::fs::read_to_string(path).unwrap();
+        assert!(text.contains("GADMM"));
+        write_trace_csv(&dir, "unit", &t).unwrap();
+        assert!(dir.join("unit.csv").exists());
+    }
+}

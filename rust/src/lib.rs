@@ -1,0 +1,30 @@
+//! # GADMM — Group Alternating Direction Method of Multipliers
+//!
+//! Production-quality reproduction of *"GADMM: Fast and Communication
+//! Efficient Framework for Distributed Machine Learning"* (Elgabli et al.,
+//! 2019) as a three-layer rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the decentralized coordinator: chain topology,
+//!   head/tail group scheduling, neighbour-only messaging, dynamic
+//!   re-chaining (D-GADMM), communication-cost accounting, all baseline
+//!   algorithms, experiment drivers for every table/figure in the paper.
+//! * **L2/L1 (python/, build-time only)** — the per-worker subproblem solves
+//!   authored in JAX + Pallas, AOT-lowered to HLO text under `artifacts/`.
+//! * **runtime** — loads those artifacts through the PJRT C API (`xla`
+//!   crate) so Python is never on the training path.
+//!
+//! Start with [`optim`] for the algorithms, [`coordinator`] for the
+//! distributed execution, and [`experiments`] for the paper's evaluation.
+
+pub mod comm;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod experiments;
+pub mod linalg;
+pub mod metrics;
+pub mod model;
+pub mod optim;
+pub mod runtime;
+pub mod topology;
+pub mod util;

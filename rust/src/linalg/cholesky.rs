@@ -1,0 +1,168 @@
+//! Cholesky factorization and SPD solves.
+//!
+//! Every GADMM local subproblem for linear regression reduces to solving
+//! `(2XᵀX + cI) θ = rhs` with a fixed SPD matrix: the factorization is
+//! computed once per worker and reused every iteration (the single biggest
+//! hot-path optimization, see EXPERIMENTS.md §Perf). Logistic Newton steps
+//! refactor each step because the Hessian changes.
+
+use super::matrix::Matrix;
+
+/// Lower-triangular Cholesky factor `L` with `L Lᵀ = A`.
+#[derive(Clone, Debug)]
+pub struct Cholesky {
+    pub n: usize,
+    /// Row-major lower triangle (full square storage; the upper part is 0).
+    l: Vec<f64>,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum FactorError {
+    #[error("matrix is not positive definite (pivot {pivot} at index {index})")]
+    NotPositiveDefinite { index: usize, pivot: f64 },
+    #[error("matrix is not square: {rows}x{cols}")]
+    NotSquare { rows: usize, cols: usize },
+}
+
+impl Cholesky {
+    /// Factor an SPD matrix. O(n³/3).
+    pub fn factor(a: &Matrix) -> Result<Cholesky, FactorError> {
+        if a.rows != a.cols {
+            return Err(FactorError::NotSquare {
+                rows: a.rows,
+                cols: a.cols,
+            });
+        }
+        let n = a.rows;
+        let mut l = vec![0.0; n * n];
+        for i in 0..n {
+            for j in 0..=i {
+                // sum = A[i][j] - Σ_{k<j} L[i][k] L[j][k]
+                let mut sum = a.at(i, j);
+                let (ri, rj) = (&l[i * n..i * n + j], &l[j * n..j * n + j]);
+                sum -= super::vector::dot(ri, rj);
+                if i == j {
+                    if sum <= 0.0 || !sum.is_finite() {
+                        return Err(FactorError::NotPositiveDefinite { index: i, pivot: sum });
+                    }
+                    l[i * n + i] = sum.sqrt();
+                } else {
+                    l[i * n + j] = sum / l[j * n + j];
+                }
+            }
+        }
+        Ok(Cholesky { n, l })
+    }
+
+    /// Solve `A x = b` via forward/back substitution. O(n²).
+    pub fn solve(&self, b: &[f64]) -> Vec<f64> {
+        let mut x = b.to_vec();
+        self.solve_in_place(&mut x);
+        x
+    }
+
+    /// Allocation-free solve (hot path — called once per GADMM iteration
+    /// per worker).
+    pub fn solve_in_place(&self, x: &mut [f64]) {
+        let n = self.n;
+        debug_assert_eq!(x.len(), n);
+        // Forward: L y = b
+        for i in 0..n {
+            let row = &self.l[i * n..i * n + i];
+            let s = super::vector::dot(row, &x[..i]);
+            x[i] = (x[i] - s) / self.l[i * n + i];
+        }
+        // Backward: Lᵀ x = y
+        for i in (0..n).rev() {
+            let mut s = x[i];
+            for k in i + 1..n {
+                s -= self.l[k * n + i] * x[k];
+            }
+            x[i] = s / self.l[i * n + i];
+        }
+    }
+
+    /// log det(A) = 2 Σ log L[i][i] (useful for diagnostics).
+    pub fn logdet(&self) -> f64 {
+        (0..self.n).map(|i| self.l[i * self.n + i].ln()).sum::<f64>() * 2.0
+    }
+}
+
+/// One-shot SPD solve (factor + substitute).
+pub fn solve_spd(a: &Matrix, b: &[f64]) -> Result<Vec<f64>, FactorError> {
+    Ok(Cholesky::factor(a)?.solve(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn random_spd(n: usize, rng: &mut Pcg64) -> Matrix {
+        // A = BᵀB + n·I is SPD with overwhelming probability.
+        let mut b = Matrix::zeros(n, n);
+        for v in &mut b.data {
+            *v = rng.normal();
+        }
+        let mut a = b.gram();
+        a.add_diag(n as f64);
+        a
+    }
+
+    #[test]
+    fn factor_known_matrix() {
+        // A = [[4,2],[2,3]] => L = [[2,0],[1,sqrt(2)]]
+        let a = Matrix::from_rows(&[vec![4.0, 2.0], vec![2.0, 3.0]]);
+        let ch = Cholesky::factor(&a).unwrap();
+        assert!((ch.l[0] - 2.0).abs() < 1e-14);
+        assert!((ch.l[2] - 1.0).abs() < 1e-14);
+        assert!((ch.l[3] - 2f64.sqrt()).abs() < 1e-14);
+    }
+
+    #[test]
+    fn solve_recovers_solution() {
+        let mut rng = Pcg64::seeded(5);
+        for n in [1, 2, 5, 17, 50] {
+            let a = random_spd(n, &mut rng);
+            let x_true = rng.normal_vec(n);
+            let b = a.matvec(&x_true);
+            let x = solve_spd(&a, &b).unwrap();
+            let err = crate::linalg::vector::dist2(&x, &x_true);
+            assert!(err < 1e-8, "n={n} err={err}");
+        }
+    }
+
+    #[test]
+    fn rejects_indefinite() {
+        let a = Matrix::from_rows(&[vec![1.0, 2.0], vec![2.0, 1.0]]); // eigenvalues 3, -1
+        assert!(matches!(
+            Cholesky::factor(&a),
+            Err(FactorError::NotPositiveDefinite { .. })
+        ));
+    }
+
+    #[test]
+    fn rejects_non_square() {
+        let a = Matrix::zeros(2, 3);
+        assert!(matches!(Cholesky::factor(&a), Err(FactorError::NotSquare { .. })));
+    }
+
+    #[test]
+    fn logdet_identity_zero() {
+        let ch = Cholesky::factor(&Matrix::identity(7)).unwrap();
+        assert!(ch.logdet().abs() < 1e-14);
+    }
+
+    #[test]
+    fn reused_factor_matches_fresh_solves() {
+        let mut rng = Pcg64::seeded(9);
+        let a = random_spd(20, &mut rng);
+        let ch = Cholesky::factor(&a).unwrap();
+        for _ in 0..5 {
+            let b = rng.normal_vec(20);
+            let x1 = ch.solve(&b);
+            let x2 = solve_spd(&a, &b).unwrap();
+            assert!(crate::linalg::vector::dist2(&x1, &x2) < 1e-12);
+        }
+    }
+}

@@ -1,0 +1,297 @@
+//! Dense row-major matrix with the operations the GADMM hot path needs.
+
+use super::vector as vec_ops;
+
+/// Dense row-major `rows × cols` matrix of f64.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Matrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f64>,
+}
+
+impl Matrix {
+    pub fn zeros(rows: usize, cols: usize) -> Matrix {
+        Matrix {
+            rows,
+            cols,
+            data: vec![0.0; rows * cols],
+        }
+    }
+
+    pub fn identity(n: usize) -> Matrix {
+        let mut m = Matrix::zeros(n, n);
+        for i in 0..n {
+            m.data[i * n + i] = 1.0;
+        }
+        m
+    }
+
+    pub fn from_rows(rows: &[Vec<f64>]) -> Matrix {
+        let r = rows.len();
+        let c = if r == 0 { 0 } else { rows[0].len() };
+        let mut data = Vec::with_capacity(r * c);
+        for row in rows {
+            assert_eq!(row.len(), c, "ragged rows");
+            data.extend_from_slice(row);
+        }
+        Matrix { rows: r, cols: c, data }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Matrix {
+        assert_eq!(data.len(), rows * cols);
+        Matrix { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, i: usize, j: usize) -> &mut f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &mut self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Select a contiguous row range as a new matrix (used by the data
+    /// partitioner to shard samples across workers).
+    pub fn slice_rows(&self, lo: usize, hi: usize) -> Matrix {
+        assert!(lo <= hi && hi <= self.rows);
+        Matrix {
+            rows: hi - lo,
+            cols: self.cols,
+            data: self.data[lo * self.cols..hi * self.cols].to_vec(),
+        }
+    }
+
+    pub fn transpose(&self) -> Matrix {
+        let mut out = Matrix::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                out.data[j * self.rows + i] = self.data[i * self.cols + j];
+            }
+        }
+        out
+    }
+
+    /// `self * other` — ikj-ordered gemm, cache-friendly for row-major.
+    pub fn matmul(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
+        let (m, k, n) = (self.rows, self.cols, other.cols);
+        let mut out = Matrix::zeros(m, n);
+        for i in 0..m {
+            let a_row = &self.data[i * k..(i + 1) * k];
+            let o_row = &mut out.data[i * n..(i + 1) * n];
+            for (p, &a) in a_row.iter().enumerate() {
+                if a == 0.0 {
+                    continue;
+                }
+                let b_row = &other.data[p * n..(p + 1) * n];
+                vec_ops::axpy(a, b_row, o_row);
+            }
+        }
+        out
+    }
+
+    /// `selfᵀ * self` (Gram matrix), exploiting symmetry: only the upper
+    /// triangle is computed and mirrored. This is the dominant setup cost of
+    /// the linear-regression local solve.
+    pub fn gram(&self) -> Matrix {
+        let (m, n) = (self.rows, self.cols);
+        let mut out = Matrix::zeros(n, n);
+        for r in 0..m {
+            let row = &self.data[r * n..(r + 1) * n];
+            for i in 0..n {
+                let xi = row[i];
+                if xi == 0.0 {
+                    continue;
+                }
+                let orow = &mut out.data[i * n..(i + 1) * n];
+                for j in i..n {
+                    orow[j] += xi * row[j];
+                }
+            }
+        }
+        for i in 0..n {
+            for j in 0..i {
+                out.data[i * n + j] = out.data[j * n + i];
+            }
+        }
+        out
+    }
+
+    /// `self * x` for a vector x.
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(self.cols, x.len(), "matvec shape mismatch");
+        let mut out = vec![0.0; self.rows];
+        self.matvec_into(x, &mut out);
+        out
+    }
+
+    /// Allocation-free matvec into a caller buffer (hot path).
+    #[inline]
+    pub fn matvec_into(&self, x: &[f64], out: &mut [f64]) {
+        debug_assert_eq!(out.len(), self.rows);
+        for i in 0..self.rows {
+            out[i] = vec_ops::dot(self.row(i), x);
+        }
+    }
+
+    /// `selfᵀ * x`.
+    pub fn tmatvec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(self.rows, x.len(), "tmatvec shape mismatch");
+        let mut out = vec![0.0; self.cols];
+        self.tmatvec_into(x, &mut out);
+        out
+    }
+
+    /// Allocation-free transposed matvec into a caller buffer (hot path of
+    /// every gradient evaluation).
+    #[inline]
+    pub fn tmatvec_into(&self, x: &[f64], out: &mut [f64]) {
+        debug_assert_eq!(out.len(), self.cols);
+        out.iter_mut().for_each(|o| *o = 0.0);
+        for i in 0..self.rows {
+            vec_ops::axpy(x[i], self.row(i), out);
+        }
+    }
+
+    /// `selfᵀ · diag(w) · self`, the logistic-regression Hessian kernel.
+    pub fn weighted_gram(&self, w: &[f64]) -> Matrix {
+        assert_eq!(w.len(), self.rows);
+        let (m, n) = (self.rows, self.cols);
+        let mut out = Matrix::zeros(n, n);
+        for r in 0..m {
+            let wr = w[r];
+            if wr == 0.0 {
+                continue;
+            }
+            let row = &self.data[r * n..(r + 1) * n];
+            for i in 0..n {
+                let xi = wr * row[i];
+                if xi == 0.0 {
+                    continue;
+                }
+                let orow = &mut out.data[i * n..(i + 1) * n];
+                for j in i..n {
+                    orow[j] += xi * row[j];
+                }
+            }
+        }
+        for i in 0..n {
+            for j in 0..i {
+                out.data[i * n + j] = out.data[j * n + i];
+            }
+        }
+        out
+    }
+
+    pub fn scale(&mut self, a: f64) {
+        for x in &mut self.data {
+            *x *= a;
+        }
+    }
+
+    pub fn add_assign(&mut self, other: &Matrix) {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+    }
+
+    /// Add `a` to the diagonal in place (ridge / augmented-Lagrangian term).
+    pub fn add_diag(&mut self, a: f64) {
+        assert_eq!(self.rows, self.cols);
+        for i in 0..self.rows {
+            self.data[i * self.cols + i] += a;
+        }
+    }
+
+    pub fn frobenius_norm(&self) -> f64 {
+        self.data.iter().map(|x| x * x).sum::<f64>().sqrt()
+    }
+
+    pub fn max_abs_diff(&self, other: &Matrix) -> f64 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f64::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_known() {
+        let a = Matrix::from_rows(&[vec![1.0, 2.0], vec![3.0, 4.0]]);
+        let b = Matrix::from_rows(&[vec![5.0, 6.0], vec![7.0, 8.0]]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data, vec![19.0, 22.0, 43.0, 50.0]);
+    }
+
+    #[test]
+    fn identity_is_neutral() {
+        let a = Matrix::from_rows(&[vec![1.0, -2.0, 3.0], vec![0.5, 0.0, -1.0]]);
+        let i3 = Matrix::identity(3);
+        assert_eq!(a.matmul(&i3), a);
+    }
+
+    #[test]
+    fn gram_matches_explicit() {
+        let a = Matrix::from_rows(&[vec![1.0, 2.0], vec![3.0, 4.0], vec![5.0, 6.0]]);
+        let g = a.gram();
+        let explicit = a.transpose().matmul(&a);
+        assert!(g.max_abs_diff(&explicit) < 1e-12);
+    }
+
+    #[test]
+    fn weighted_gram_matches_explicit() {
+        let a = Matrix::from_rows(&[vec![1.0, 2.0], vec![3.0, 4.0], vec![5.0, 6.0]]);
+        let w = vec![0.5, 2.0, 1.5];
+        let g = a.weighted_gram(&w);
+        // explicit: Aᵀ diag(w) A
+        let mut wa = a.clone();
+        for i in 0..3 {
+            for j in 0..2 {
+                *wa.at_mut(i, j) *= w[i];
+            }
+        }
+        let explicit = a.transpose().matmul(&wa);
+        assert!(g.max_abs_diff(&explicit) < 1e-12);
+    }
+
+    #[test]
+    fn matvec_and_transpose() {
+        let a = Matrix::from_rows(&[vec![1.0, 2.0, 3.0], vec![4.0, 5.0, 6.0]]);
+        assert_eq!(a.matvec(&[1.0, 0.0, -1.0]), vec![-2.0, -2.0]);
+        assert_eq!(a.tmatvec(&[1.0, 1.0]), vec![5.0, 7.0, 9.0]);
+        assert_eq!(a.transpose().matvec(&[1.0, 1.0]), vec![5.0, 7.0, 9.0]);
+    }
+
+    #[test]
+    fn slice_rows_sharding() {
+        let a = Matrix::from_rows(&[vec![1.0], vec![2.0], vec![3.0], vec![4.0]]);
+        let s = a.slice_rows(1, 3);
+        assert_eq!(s.rows, 2);
+        assert_eq!(s.data, vec![2.0, 3.0]);
+    }
+
+    #[test]
+    fn add_diag() {
+        let mut a = Matrix::zeros(3, 3);
+        a.add_diag(2.5);
+        assert_eq!(a.at(1, 1), 2.5);
+        assert_eq!(a.at(0, 1), 0.0);
+    }
+}

@@ -1,0 +1,12 @@
+//! Dense linear-algebra substrate: matrices, vector kernels, Cholesky.
+//!
+//! No BLAS/LAPACK is available offline; these routines are sized for the
+//! paper's workloads (d ≤ a few hundred features) and are the native
+//! backend's hot path. See EXPERIMENTS.md §Perf for measurements.
+
+pub mod cholesky;
+pub mod matrix;
+pub mod vector;
+
+pub use cholesky::{solve_spd, Cholesky, FactorError};
+pub use matrix::Matrix;

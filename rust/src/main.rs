@@ -1,0 +1,288 @@
+//! `gadmm` — the launcher CLI.
+//!
+//! ```text
+//! gadmm train  [--dataset D] [--workers N] [--rho R] [--target T]
+//!              [--backend native|pjrt] [--chain sequential|greedy]
+//!              [--config FILE] [--out results/]
+//! gadmm table1 [--workers 14,20,24,26] [--target 1e-4]
+//! gadmm fig2|fig3|fig4|fig5 [--target 1e-4]
+//! gadmm fig6  [--draws 1000]       gadmm fig6c
+//! gadmm fig7  [--workers 50] [--tau 15]
+//! gadmm fig8  [--workers 24]
+//! gadmm all   — every table and figure, reports under results/
+//! ```
+
+use gadmm::config::{DatasetKind, RunConfig};
+use gadmm::coordinator;
+use gadmm::data::partition_even;
+use gadmm::experiments::{curves, fig6, fig7, fig8, table1, write_report, write_trace_csv};
+use gadmm::model::Problem;
+use gadmm::optim::RunOptions;
+use gadmm::runtime::{artifacts_dir, service::PjrtService, Manifest, NativeSolver};
+use gadmm::topology::{chain, EnergyCostModel, Placement, UnitCosts};
+use gadmm::util::cli::Args;
+use gadmm::util::rng::Pcg64;
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+const FLAGS: &[&str] = &["quiet", "csv"];
+
+fn main() -> ExitCode {
+    gadmm::util::logging::init();
+    let args = match Args::from_env(FLAGS) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return ExitCode::FAILURE;
+        }
+    };
+    let sub = args.subcommand.clone().unwrap_or_else(|| "help".into());
+    match dispatch(&sub, &args) {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn out_dir(args: &Args) -> PathBuf {
+    PathBuf::from(args.get_string("out", "results"))
+}
+
+fn dispatch(sub: &str, args: &Args) -> Result<(), String> {
+    match sub {
+        "train" => cmd_train(args),
+        "table1" => {
+            let workers = args.get_usize_list("workers", &[14, 20, 24, 26])?;
+            let target = args.get_f64("target", 1e-4)?;
+            let max_iters = args.get_usize("max-iters", 300_000)?;
+            let out = table1::run(&workers, target, max_iters, args.get_u64("seed", 1)?);
+            println!("{}", out.rendered);
+            let path = write_report(&out_dir(args), "table1", &out.report).map_err(|e| e.to_string())?;
+            println!("report: {}", path.display());
+            Ok(())
+        }
+        "fig2" | "fig3" | "fig4" | "fig5" => {
+            let fig = match sub {
+                "fig2" => curves::Figure::Fig2,
+                "fig3" => curves::Figure::Fig3,
+                "fig4" => curves::Figure::Fig4,
+                _ => curves::Figure::Fig5,
+            };
+            let target = args.get_f64("target", 1e-4)?;
+            let max_iters = args.get_usize("max-iters", 300_000)?;
+            let out = curves::run(fig, target, max_iters, args.get_u64("seed", 1)?);
+            println!("{}", out.rendered);
+            let dir = out_dir(args);
+            let path = write_report(&dir, fig.name(), &out.report).map_err(|e| e.to_string())?;
+            if args.flag("csv") {
+                for t in &out.traces {
+                    let safe = t.algorithm.replace(['(', ')', '=', ','], "_");
+                    write_trace_csv(&dir, &format!("{}_{safe}", fig.name()), t)
+                        .map_err(|e| e.to_string())?;
+                }
+            }
+            println!("report: {}", path.display());
+            Ok(())
+        }
+        "fig6" => {
+            let draws = args.get_usize("draws", 1000)?;
+            let workers = args.get_usize("workers", 24)?;
+            let target = args.get_f64("target", 1e-4)?;
+            let max_iters = args.get_usize("max-iters", 300_000)?;
+            let seed = args.get_u64("seed", 1)?;
+            let dir = out_dir(args);
+            for kind in [DatasetKind::SyntheticLinreg, DatasetKind::SyntheticLogreg] {
+                let out = fig6::run_panel(kind, workers, draws, target, max_iters, seed);
+                println!("{} medians:", out.panel);
+                for (name, cdf) in &out.cdfs {
+                    let med = if cdf.values.is_empty() {
+                        "—".to_string()
+                    } else {
+                        format!("{:.3e}", cdf.quantile(0.5))
+                    };
+                    println!("  {name:<22} median energy TC {med} ({} samples)", cdf.values.len());
+                }
+                write_report(&dir, out.panel, &out.report).map_err(|e| e.to_string())?;
+            }
+            // 6c rides along.
+            let (trace, report) = fig6::run_acv(target, max_iters, seed);
+            println!(
+                "fig6c: ACV at convergence {:.3e} (iters {:?})",
+                trace.records.last().map(|r| r.acv).unwrap_or(f64::NAN),
+                trace.iters_to_target()
+            );
+            write_report(&dir, "fig6c", &report).map_err(|e| e.to_string())?;
+            Ok(())
+        }
+        "fig6c" => {
+            let (trace, report) = fig6::run_acv(
+                args.get_f64("target", 1e-4)?,
+                args.get_usize("max-iters", 300_000)?,
+                args.get_u64("seed", 1)?,
+            );
+            println!(
+                "fig6c: ACV at convergence {:.3e} (iters {:?})",
+                trace.records.last().map(|r| r.acv).unwrap_or(f64::NAN),
+                trace.iters_to_target()
+            );
+            write_report(&out_dir(args), "fig6c", &report).map_err(|e| e.to_string())?;
+            Ok(())
+        }
+        "fig7" => {
+            let out = fig7::run(
+                args.get_usize("workers", 50)?,
+                args.get_f64("rho", 3.0)?,
+                args.get_usize("tau", 15)?,
+                args.get_f64("target", 1e-4)?,
+                args.get_usize("max-iters", 100_000)?,
+                args.get_u64("seed", 1)?,
+            );
+            println!(
+                "fig7: GADMM iters {:?} energy {:?} | D-GADMM iters {:?} energy {:?}",
+                out.gadmm.iters_to_target(),
+                out.gadmm.energy_to_target(),
+                out.dgadmm.iters_to_target(),
+                out.dgadmm.energy_to_target()
+            );
+            write_report(&out_dir(args), "fig7", &out.report).map_err(|e| e.to_string())?;
+            Ok(())
+        }
+        "fig8" => {
+            let out = fig8::run(
+                args.get_usize("workers", 24)?,
+                args.get_f64("rho", 3.0)?,
+                args.get_f64("target", 1e-4)?,
+                args.get_usize("max-iters", 100_000)?,
+                args.get_u64("seed", 1)?,
+            );
+            println!("{}", out.rendered);
+            write_report(&out_dir(args), "fig8", &out.report).map_err(|e| e.to_string())?;
+            Ok(())
+        }
+        "all" => {
+            for s in ["table1", "fig2", "fig3", "fig4", "fig5", "fig6", "fig7", "fig8"] {
+                println!("=== {s} ===");
+                dispatch(s, args)?;
+            }
+            Ok(())
+        }
+        "help" | "--help" | "-h" => {
+            println!("{}", HELP);
+            Ok(())
+        }
+        other => Err(format!("unknown subcommand '{other}' (try `gadmm help`)")),
+    }
+}
+
+/// `gadmm train`: one full training run (optionally on the PJRT backend /
+/// greedy chain), through the distributed coordinator.
+fn cmd_train(args: &Args) -> Result<(), String> {
+    let mut cfg = match args.get("config") {
+        Some(path) => RunConfig::load(std::path::Path::new(path))?,
+        None => RunConfig::default(),
+    };
+    if let Some(ds) = args.get("dataset") {
+        cfg.dataset = DatasetKind::parse(ds)?;
+    }
+    cfg.workers = args.get_usize("workers", cfg.workers)?;
+    cfg.rho = args.get_f64("rho", cfg.rho)?;
+    cfg.target = args.get_f64("target", cfg.target)?;
+    cfg.max_iters = args.get_usize("max-iters", cfg.max_iters)?;
+    cfg.seed = args.get_u64("seed", cfg.seed)?;
+    cfg.validate()?;
+
+    let backend = args.get_string("backend", "native");
+    let chain_kind = args.get_string("chain", "sequential");
+
+    let ds = cfg.dataset.build(cfg.seed);
+    let problem = Problem::from_dataset(&ds, cfg.workers);
+    log::info!(
+        "problem {} | d={} F*={:.6e} backend={backend} chain={chain_kind}",
+        problem.name,
+        problem.dim,
+        problem.f_star
+    );
+
+    let mut rng = Pcg64::new(cfg.seed, 0x7a41);
+    let placement = Placement::random(cfg.workers, cfg.area_side, &mut rng);
+    let energy = EnergyCostModel::new(&placement, placement.central_worker());
+    let logical = match chain_kind.as_str() {
+        "sequential" => chain::Chain::sequential(cfg.workers),
+        "greedy" => chain::rechain(cfg.workers, &energy, &mut rng),
+        other => return Err(format!("unknown chain '{other}'")),
+    };
+    let opts = RunOptions::with_target(cfg.target, cfg.max_iters);
+    let costs = UnitCosts;
+
+    let result = match backend.as_str() {
+        "native" => {
+            let solvers = (0..cfg.workers)
+                .map(|w| {
+                    Box::new(NativeSolver::new(&*problem.losses[w]))
+                        as Box<dyn gadmm::runtime::LocalSolver + Send + '_>
+                })
+                .collect();
+            coordinator::train(&problem, solvers, cfg.rho, logical, &costs, &opts)
+        }
+        "pjrt" => {
+            let manifest = Manifest::load(&artifacts_dir())?;
+            let shards = partition_even(&ds, cfg.workers);
+            let service = PjrtService::spawn(
+                manifest,
+                cfg.dataset.task(),
+                shards,
+                problem.logreg_mu,
+                problem.data_weight,
+            )
+            .map_err(|e| format!("{e:#}"))?;
+            coordinator::train(&problem, service.solvers(), cfg.rho, logical, &costs, &opts)
+        }
+        other => return Err(format!("unknown backend '{other}'")),
+    };
+
+    match result.trace.iters_to_target() {
+        Some(k) => println!(
+            "converged: {} iterations, TC {}, final err {:.3e}",
+            k,
+            result.trace.tc_to_target().unwrap_or(f64::NAN),
+            result.trace.final_error()
+        ),
+        None => println!(
+            "did not reach {:.0e} within {} iterations (final err {:.3e})",
+            cfg.target,
+            cfg.max_iters,
+            result.trace.final_error()
+        ),
+    }
+    let dir = out_dir(args);
+    write_trace_csv(&dir, "train", &result.trace).map_err(|e| e.to_string())?;
+    write_report(
+        &dir,
+        "train",
+        &gadmm::util::json::Json::obj()
+            .set("config", cfg.to_json())
+            .set("backend", backend.as_str())
+            .set("trace", result.trace.to_json(200)),
+    )
+    .map_err(|e| e.to_string())?;
+    Ok(())
+}
+
+const HELP: &str = "gadmm — decentralized GADMM training framework (paper reproduction)
+
+subcommands:
+  train    run GADMM through the distributed coordinator
+           --dataset synthetic-linreg|synthetic-logreg|bodyfat|derm
+           --workers N --rho R --target T --max-iters K --seed S
+           --backend native|pjrt   --chain sequential|greedy
+           --config FILE (JSON, see configs/)
+  table1   Table 1 grid (iterations + TC, real datasets)
+  fig2..5  objective-error / TC / time curves per figure
+  fig6     energy-TC CDFs over random topologies (+ fig6c ACV)
+  fig7     D-GADMM vs GADMM, time-varying topology
+  fig8     D-GADMM vs GADMM vs standard ADMM
+  all      everything above; JSON reports under results/
+
+common options: --out DIR (default results/), --csv, --seed S";

@@ -1,0 +1,277 @@
+//! Run traces and the paper's evaluation metrics: objective error, total
+//! communication cost (TC), total running time, and average consensus
+//! violation (ACV). Includes CSV/JSONL writers and empirical CDFs (Fig. 6).
+
+use crate::util::json::Json;
+use std::io::Write;
+use std::time::Duration;
+
+/// One iteration's measurements.
+#[derive(Clone, Debug)]
+pub struct IterRecord {
+    pub iter: usize,
+    /// `|Σ_n f_n(θ_n^k) − F*|`.
+    pub obj_err: f64,
+    /// Cumulative TC under unit link costs (paper Table 1 / Figs 2–5).
+    pub tc_unit: f64,
+    /// Cumulative TC under the energy model (paper Fig 6–8).
+    pub tc_energy: f64,
+    /// Cumulative communication rounds.
+    pub rounds: usize,
+    /// Cumulative wall-clock compute time.
+    pub elapsed: Duration,
+    /// Average consensus violation Σ‖θ_n − θ_{n+1}‖₁ / N (0 for
+    /// centralized algorithms, which hold one consensus iterate).
+    pub acv: f64,
+}
+
+/// A complete run of one algorithm on one problem.
+#[derive(Clone, Debug)]
+pub struct Trace {
+    pub algorithm: String,
+    pub problem: String,
+    pub records: Vec<IterRecord>,
+    /// First iteration index at which `obj_err <= target` (if reached).
+    pub converged_at: Option<usize>,
+    pub target: f64,
+}
+
+impl Trace {
+    pub fn new(algorithm: &str, problem: &str, target: f64) -> Trace {
+        Trace {
+            algorithm: algorithm.to_string(),
+            problem: problem.to_string(),
+            records: Vec::new(),
+            converged_at: None,
+            target,
+        }
+    }
+
+    pub fn push(&mut self, rec: IterRecord) {
+        if self.converged_at.is_none() && rec.obj_err <= self.target {
+            self.converged_at = Some(rec.iter);
+        }
+        self.records.push(rec);
+    }
+
+    /// Iterations to reach the target accuracy (Table 1 top).
+    pub fn iters_to_target(&self) -> Option<usize> {
+        self.converged_at
+    }
+
+    /// TC (unit costs) accumulated up to convergence (Table 1 bottom).
+    pub fn tc_to_target(&self) -> Option<f64> {
+        self.at_convergence().map(|r| r.tc_unit)
+    }
+
+    /// Energy-model TC accumulated up to convergence (Fig 6).
+    pub fn energy_to_target(&self) -> Option<f64> {
+        self.at_convergence().map(|r| r.tc_energy)
+    }
+
+    /// Wall time up to convergence.
+    pub fn time_to_target(&self) -> Option<Duration> {
+        self.at_convergence().map(|r| r.elapsed)
+    }
+
+    fn at_convergence(&self) -> Option<&IterRecord> {
+        self.converged_at
+            .and_then(|k| self.records.iter().find(|r| r.iter == k))
+    }
+
+    pub fn final_error(&self) -> f64 {
+        self.records.last().map(|r| r.obj_err).unwrap_or(f64::INFINITY)
+    }
+
+    /// Downsample to at most `n` records (for plotting/JSON export), always
+    /// keeping the first and last.
+    pub fn downsample(&self, n: usize) -> Vec<&IterRecord> {
+        let len = self.records.len();
+        if len <= n || n < 2 {
+            return self.records.iter().collect();
+        }
+        let mut out = Vec::with_capacity(n);
+        for i in 0..n {
+            let idx = i * (len - 1) / (n - 1);
+            out.push(&self.records[idx]);
+        }
+        out.dedup_by_key(|r| r.iter);
+        out
+    }
+
+    /// CSV export: `iter,obj_err,tc_unit,tc_energy,rounds,seconds,acv`.
+    pub fn write_csv<W: Write>(&self, w: &mut W) -> std::io::Result<()> {
+        writeln!(w, "iter,obj_err,tc_unit,tc_energy,rounds,seconds,acv")?;
+        for r in &self.records {
+            writeln!(
+                w,
+                "{},{:.6e},{},{:.6e},{},{:.6e},{:.6e}",
+                r.iter,
+                r.obj_err,
+                r.tc_unit,
+                r.tc_energy,
+                r.rounds,
+                r.elapsed.as_secs_f64(),
+                r.acv
+            )?;
+        }
+        Ok(())
+    }
+
+    /// JSON summary (downsampled curve + convergence stats).
+    pub fn to_json(&self, curve_points: usize) -> Json {
+        let curve: Vec<Json> = self
+            .downsample(curve_points)
+            .into_iter()
+            .map(|r| {
+                Json::obj()
+                    .set("iter", r.iter)
+                    .set("obj_err", r.obj_err)
+                    .set("tc_unit", r.tc_unit)
+                    .set("tc_energy", r.tc_energy)
+                    .set("seconds", r.elapsed.as_secs_f64())
+                    .set("acv", r.acv)
+            })
+            .collect();
+        Json::obj()
+            .set("algorithm", self.algorithm.as_str())
+            .set("problem", self.problem.as_str())
+            .set("target", self.target)
+            .set(
+                "iters_to_target",
+                self.iters_to_target().map(|k| Json::Num(k as f64)).unwrap_or(Json::Null),
+            )
+            .set(
+                "tc_to_target",
+                self.tc_to_target().map(Json::Num).unwrap_or(Json::Null),
+            )
+            .set("final_error", self.final_error())
+            .set("curve", Json::Arr(curve))
+    }
+}
+
+/// Empirical CDF over a sample of scalars (Fig. 6a/6b).
+#[derive(Clone, Debug)]
+pub struct Cdf {
+    /// Sorted sample values.
+    pub values: Vec<f64>,
+}
+
+impl Cdf {
+    pub fn from_samples(mut samples: Vec<f64>) -> Cdf {
+        samples.retain(|v| v.is_finite());
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Cdf { values: samples }
+    }
+
+    /// P(X ≤ x).
+    pub fn at(&self, x: f64) -> f64 {
+        if self.values.is_empty() {
+            return f64::NAN;
+        }
+        let count = self.values.partition_point(|&v| v <= x);
+        count as f64 / self.values.len() as f64
+    }
+
+    /// Inverse CDF (quantile), p in [0,1].
+    pub fn quantile(&self, p: f64) -> f64 {
+        assert!(!self.values.is_empty());
+        let idx = ((self.values.len() as f64 - 1.0) * p.clamp(0.0, 1.0)).round() as usize;
+        self.values[idx]
+    }
+
+    /// Evenly spaced (value, probability) pairs for plotting. Empty input
+    /// (an algorithm that never converged) yields an empty curve.
+    pub fn curve(&self, points: usize) -> Vec<(f64, f64)> {
+        if self.values.is_empty() {
+            return Vec::new();
+        }
+        (0..points)
+            .map(|i| {
+                let p = i as f64 / (points - 1).max(1) as f64;
+                (self.quantile(p), p)
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(iter: usize, err: f64) -> IterRecord {
+        IterRecord {
+            iter,
+            obj_err: err,
+            tc_unit: (iter * 10) as f64,
+            tc_energy: iter as f64 * 0.5,
+            rounds: iter * 2,
+            elapsed: Duration::from_millis(iter as u64),
+            acv: err / 10.0,
+        }
+    }
+
+    #[test]
+    fn convergence_detection() {
+        let mut t = Trace::new("gadmm", "test", 1e-4);
+        for (k, e) in [(1, 1.0), (2, 1e-3), (3, 5e-5), (4, 1e-6)] {
+            t.push(rec(k, e));
+        }
+        assert_eq!(t.iters_to_target(), Some(3));
+        assert_eq!(t.tc_to_target(), Some(30.0));
+        assert!((t.final_error() - 1e-6).abs() < 1e-18);
+    }
+
+    #[test]
+    fn no_convergence() {
+        let mut t = Trace::new("gd", "test", 1e-4);
+        t.push(rec(1, 1.0));
+        assert_eq!(t.iters_to_target(), None);
+        assert_eq!(t.tc_to_target(), None);
+    }
+
+    #[test]
+    fn downsample_keeps_endpoints() {
+        let mut t = Trace::new("x", "y", 0.0);
+        for k in 0..1000 {
+            t.push(rec(k, 1.0 / (k + 1) as f64));
+        }
+        let ds = t.downsample(50);
+        assert!(ds.len() <= 50);
+        assert_eq!(ds.first().unwrap().iter, 0);
+        assert_eq!(ds.last().unwrap().iter, 999);
+    }
+
+    #[test]
+    fn csv_roundtrip_lines() {
+        let mut t = Trace::new("x", "y", 0.0);
+        t.push(rec(1, 0.5));
+        t.push(rec(2, 0.25));
+        let mut buf = Vec::new();
+        t.write_csv(&mut buf).unwrap();
+        let s = String::from_utf8(buf).unwrap();
+        assert_eq!(s.lines().count(), 3);
+        assert!(s.starts_with("iter,"));
+    }
+
+    #[test]
+    fn cdf_basics() {
+        let c = Cdf::from_samples(vec![3.0, 1.0, 2.0, 4.0]);
+        assert_eq!(c.at(0.5), 0.0);
+        assert_eq!(c.at(2.0), 0.5);
+        assert_eq!(c.at(10.0), 1.0);
+        assert_eq!(c.quantile(0.0), 1.0);
+        assert_eq!(c.quantile(1.0), 4.0);
+        let curve = c.curve(5);
+        assert_eq!(curve.len(), 5);
+    }
+
+    #[test]
+    fn trace_json_summary() {
+        let mut t = Trace::new("gadmm", "p", 1e-4);
+        t.push(rec(1, 1e-5));
+        let j = t.to_json(10);
+        assert_eq!(j.path("iters_to_target").unwrap().as_usize(), Some(1));
+        assert_eq!(j.path("algorithm").unwrap().as_str(), Some("gadmm"));
+    }
+}

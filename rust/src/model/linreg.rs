@@ -1,0 +1,259 @@
+//! Worker-local squared loss `f_n(θ) = w·‖X_n θ − y_n‖²` where `w` is a
+//! shared normalization weight (the library uses `w = 1/m_total`, making the
+//! global objective the mean squared error). Normalization keeps local
+//! Hessians O(1) so the paper's ρ ∈ [1, 7] regime is meaningful.
+//!
+//! The canonical subproblem has the closed form
+//! `(2XᵀX + cI) θ = 2Xᵀy − q`. The Gram matrix `XᵀX` and `Xᵀy` are computed
+//! once at construction, and the Cholesky factor of `(2XᵀX + cI)` is cached
+//! per distinct `c` — GADMM uses a fixed `c` per worker, so after the first
+//! iteration every local solve is a single O(d²) back-substitution. This is
+//! the paper's "matrix inversion" step (§7) and this library's L3 hot path.
+
+use super::LocalLoss;
+use crate::linalg::{vector as vec_ops, Cholesky, Matrix};
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+pub struct LinRegLoss {
+    x: Matrix,
+    #[cfg_attr(not(test), allow(dead_code))]
+    y: Vec<f64>,
+    /// Gram matrix XᵀX (d×d), precomputed.
+    gram: Matrix,
+    /// Xᵀy, precomputed.
+    xty: Vec<f64>,
+    /// ‖y‖², precomputed (for O(d²) objective evaluation).
+    yty: f64,
+    /// Cached Cholesky factors of (2·Gram + c·I), keyed by `c.to_bits()`.
+    factors: Mutex<HashMap<u64, std::sync::Arc<Cholesky>>>,
+    /// Cached smoothness constant 2·w·λmax(XᵀX).
+    smoothness: f64,
+    /// Normalization weight w.
+    #[cfg_attr(not(test), allow(dead_code))]
+    weight: f64,
+}
+
+impl LinRegLoss {
+    /// Unweighted loss (w = 1): `f(θ) = ‖Xθ − y‖²`.
+    pub fn new(x: Matrix, y: Vec<f64>) -> LinRegLoss {
+        LinRegLoss::weighted(x, y, 1.0)
+    }
+
+    /// Weighted loss `f(θ) = w·‖Xθ − y‖²`. The weight is folded into the
+    /// precomputed Gram/Xᵀy/yᵀy so every downstream path is unchanged.
+    pub fn weighted(x: Matrix, y: Vec<f64>, w: f64) -> LinRegLoss {
+        assert_eq!(x.rows, y.len());
+        assert!(w > 0.0);
+        let mut gram = x.gram();
+        gram.scale(w);
+        let mut xty = x.tmatvec(&y);
+        vec_ops::scale(w, &mut xty);
+        let yty = w * vec_ops::dot(&y, &y);
+        let smoothness = 2.0 * lambda_max(&gram);
+        LinRegLoss {
+            x,
+            y,
+            gram,
+            xty,
+            yty,
+            factors: Mutex::new(HashMap::new()),
+            smoothness,
+            weight: w,
+        }
+    }
+
+    pub fn from_shard(shard: &crate::data::Shard, w: f64) -> LinRegLoss {
+        LinRegLoss::weighted(shard.features.clone(), shard.targets.clone(), w)
+    }
+
+    fn factor_for(&self, c: f64) -> std::sync::Arc<Cholesky> {
+        let mut cache = self.factors.lock().unwrap();
+        cache
+            .entry(c.to_bits())
+            .or_insert_with(|| {
+                let mut a = self.gram.clone();
+                a.scale(2.0);
+                a.add_diag(c);
+                std::sync::Arc::new(Cholesky::factor(&a).expect("2XᵀX + cI is SPD for c > 0"))
+            })
+            .clone()
+    }
+
+    /// Residual-based objective (used in tests to validate the O(d²) path).
+    #[cfg(test)]
+    fn value_via_residual(&self, theta: &[f64]) -> f64 {
+        let r = vec_ops::sub(&self.x.matvec(theta), &self.y);
+        self.weight * vec_ops::norm2_sq(&r)
+    }
+}
+
+/// Power-iteration estimate of the largest eigenvalue of an SPD matrix.
+pub fn lambda_max(a: &Matrix) -> f64 {
+    assert_eq!(a.rows, a.cols);
+    let n = a.rows;
+    if n == 0 {
+        return 0.0;
+    }
+    // Deterministic start vector; 100 iterations are plenty for a stepsize.
+    let mut v: Vec<f64> = (0..n).map(|i| 1.0 + (i as f64 * 0.7).sin()).collect();
+    let mut av = vec![0.0; n];
+    let mut lam = 0.0;
+    for _ in 0..100 {
+        a.matvec_into(&v, &mut av);
+        let norm = vec_ops::norm2(&av);
+        if norm < 1e-300 {
+            return 0.0;
+        }
+        for (vi, avi) in v.iter_mut().zip(&av) {
+            *vi = avi / norm;
+        }
+        lam = norm;
+    }
+    // One Rayleigh-quotient refinement.
+    a.matvec_into(&v, &mut av);
+    let rq = vec_ops::dot(&v, &av) / vec_ops::dot(&v, &v);
+    if rq.is_finite() {
+        rq
+    } else {
+        lam
+    }
+}
+
+impl LocalLoss for LinRegLoss {
+    fn dim(&self) -> usize {
+        self.x.cols
+    }
+
+    fn num_samples(&self) -> usize {
+        self.x.rows
+    }
+
+    /// `‖Xθ − y‖² = θᵀGθ − 2θᵀXᵀy + ‖y‖²` in O(d²).
+    fn value(&self, theta: &[f64]) -> f64 {
+        let gt = self.gram.matvec(theta);
+        vec_ops::dot(theta, &gt) - 2.0 * vec_ops::dot(theta, &self.xty) + self.yty
+    }
+
+    /// `∇f = 2(Gθ − Xᵀy)` in O(d²).
+    fn grad_into(&self, theta: &[f64], out: &mut [f64]) {
+        self.gram.matvec_into(theta, out);
+        for (o, t) in out.iter_mut().zip(&self.xty) {
+            *o = 2.0 * (*o - t);
+        }
+    }
+
+    fn smoothness(&self) -> f64 {
+        self.smoothness
+    }
+
+    /// Hessian is the constant `2XᵀX`.
+    fn add_hessian(&self, _theta: &[f64], out: &mut Matrix) {
+        debug_assert_eq!((out.rows, out.cols), (self.gram.rows, self.gram.cols));
+        for (o, g) in out.data.iter_mut().zip(&self.gram.data) {
+            *o += 2.0 * g;
+        }
+    }
+
+    /// Closed form: `(2G + cI)θ = 2Xᵀy − q` via the cached Cholesky.
+    fn prox_argmin(&self, q: &[f64], c: f64, _warm: &[f64]) -> Vec<f64> {
+        assert!(c > 0.0, "prox_argmin requires c > 0");
+        let factor = self.factor_for(c);
+        let mut rhs: Vec<f64> = self
+            .xty
+            .iter()
+            .zip(q)
+            .map(|(t, qi)| 2.0 * t - qi)
+            .collect();
+        factor.solve_in_place(&mut rhs);
+        rhs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn sample_loss(m: usize, d: usize, seed: u64) -> LinRegLoss {
+        let ds = crate::data::synthetic::linreg(m, d, &mut Pcg64::seeded(seed));
+        LinRegLoss::new(ds.features, ds.targets)
+    }
+
+    #[test]
+    fn value_matches_residual_form() {
+        let loss = sample_loss(40, 6, 1);
+        let mut rng = Pcg64::seeded(2);
+        for _ in 0..10 {
+            let theta = rng.normal_vec(6);
+            let a = loss.value(&theta);
+            let b = loss.value_via_residual(&theta);
+            assert!((a - b).abs() < 1e-8 * (1.0 + b.abs()), "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn grad_matches_finite_difference() {
+        let loss = sample_loss(30, 5, 3);
+        let mut rng = Pcg64::seeded(4);
+        let theta = rng.normal_vec(5);
+        let g = loss.grad(&theta);
+        let eps = 1e-6;
+        for j in 0..5 {
+            let mut tp = theta.clone();
+            tp[j] += eps;
+            let mut tm = theta.clone();
+            tm[j] -= eps;
+            let fd = (loss.value(&tp) - loss.value(&tm)) / (2.0 * eps);
+            assert!((g[j] - fd).abs() < 1e-3 * (1.0 + fd.abs()), "j={j}: {} vs {fd}", g[j]);
+        }
+    }
+
+    #[test]
+    fn prox_solves_normal_equations() {
+        let loss = sample_loss(25, 4, 5);
+        let mut rng = Pcg64::seeded(6);
+        let q = rng.normal_vec(4);
+        let theta = loss.prox_argmin(&q, 3.0, &vec![0.0; 4]);
+        let r = crate::model::prox_residual(&loss, &theta, &q, 3.0);
+        assert!(r < 1e-9, "residual {r}");
+    }
+
+    #[test]
+    fn factor_cache_reused_and_correct() {
+        let loss = sample_loss(25, 4, 7);
+        let q1 = vec![1.0, -1.0, 0.5, 0.0];
+        let a = loss.prox_argmin(&q1, 2.0, &vec![0.0; 4]);
+        let b = loss.prox_argmin(&q1, 2.0, &vec![9.0; 4]); // warm ignored
+        assert_eq!(a, b);
+        assert_eq!(loss.factors.lock().unwrap().len(), 1);
+        let _ = loss.prox_argmin(&q1, 4.0, &vec![0.0; 4]);
+        assert_eq!(loss.factors.lock().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn lambda_max_known() {
+        // diag(1, 4, 9) has λmax = 9.
+        let mut a = Matrix::zeros(3, 3);
+        a.data[0] = 1.0;
+        a.data[4] = 4.0;
+        a.data[8] = 9.0;
+        assert!((lambda_max(&a) - 9.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn smoothness_bounds_gradient_lipschitz() {
+        let loss = sample_loss(30, 5, 8);
+        let l = loss.smoothness();
+        let mut rng = Pcg64::seeded(9);
+        for _ in 0..20 {
+            let a = rng.normal_vec(5);
+            let b = rng.normal_vec(5);
+            let ga = loss.grad(&a);
+            let gb = loss.grad(&b);
+            let lhs = vec_ops::dist2(&ga, &gb);
+            let rhs = l * vec_ops::dist2(&a, &b);
+            assert!(lhs <= rhs * (1.0 + 1e-6), "{lhs} > {rhs}");
+        }
+    }
+}

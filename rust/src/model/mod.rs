@@ -1,0 +1,102 @@
+//! Per-worker convex losses and the local subproblem interface.
+//!
+//! Both GADMM (eqs. 11–14) and parameter-server ADMM (eq. 5) reduce each
+//! worker's primal update to the same canonical *proximal subproblem*
+//!
+//! ```text
+//!   argmin_θ  f_n(θ) + ⟨q, θ⟩ + (c/2)‖θ‖²
+//! ```
+//!
+//! where `q` collects dual variables and (scaled) neighbour/server models
+//! and `c = ρ · #couplings`. [`LocalLoss::prox_argmin`] is that solve — the
+//! system's compute hot-spot, which the L1 Pallas kernels implement on the
+//! AOT path and [`linreg`]/[`logreg`] implement natively.
+
+pub mod linreg;
+pub mod logreg;
+pub mod problem;
+
+pub use linreg::LinRegLoss;
+pub use logreg::LogRegLoss;
+pub use problem::Problem;
+
+/// A worker-local, closed, proper, convex loss `f_n`.
+pub trait LocalLoss: Send + Sync {
+    /// Parameter dimension `d`.
+    fn dim(&self) -> usize;
+
+    /// Number of local samples.
+    fn num_samples(&self) -> usize;
+
+    /// `f_n(θ)`.
+    fn value(&self, theta: &[f64]) -> f64;
+
+    /// `∇f_n(θ)` written into `out`.
+    fn grad_into(&self, theta: &[f64], out: &mut [f64]);
+
+    /// Convenience allocating gradient.
+    fn grad(&self, theta: &[f64]) -> Vec<f64> {
+        let mut g = vec![0.0; self.dim()];
+        self.grad_into(theta, &mut g);
+        g
+    }
+
+    /// Smoothness constant `L_n` (largest Hessian eigenvalue bound), used by
+    /// gradient baselines for 1/L stepsizes and by LAG-PS's server-side
+    /// trigger.
+    fn smoothness(&self) -> f64;
+
+    /// Accumulate `∇²f_n(θ)` into `out` (d×d). Used by the high-precision
+    /// reference solver; GADMM itself never forms global Hessians.
+    fn add_hessian(&self, theta: &[f64], out: &mut crate::linalg::Matrix);
+
+    /// Solve the canonical subproblem `argmin f(θ) + ⟨q,θ⟩ + (c/2)‖θ‖²`.
+    /// `warm` is the current iterate (used to warm-start iterative solvers).
+    fn prox_argmin(&self, q: &[f64], c: f64, warm: &[f64]) -> Vec<f64>;
+}
+
+/// First-order optimality residual of the canonical subproblem — used by
+/// tests to verify `prox_argmin` implementations: ‖∇f(θ) + q + cθ‖.
+pub fn prox_residual(loss: &dyn LocalLoss, theta: &[f64], q: &[f64], c: f64) -> f64 {
+    let mut g = loss.grad(theta);
+    for i in 0..g.len() {
+        g[i] += q[i] + c * theta[i];
+    }
+    crate::linalg::vector::norm2(&g)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+    use crate::data::partition_even;
+    use crate::util::rng::Pcg64;
+
+    /// Shared check: prox_argmin satisfies first-order optimality for both
+    /// loss families, for edge (c=ρ) and middle (c=2ρ) worker coefficients.
+    #[test]
+    fn prox_argmin_first_order_optimality() {
+        let mut rng = Pcg64::seeded(21);
+        let lin = synthetic::linreg(60, 8, &mut rng);
+        let log = synthetic::logreg(60, 8, &mut rng);
+        let lin_shard = &partition_even(&lin, 3)[1];
+        let log_shard = &partition_even(&log, 3)[1];
+        let losses: Vec<Box<dyn LocalLoss>> = vec![
+            Box::new(LinRegLoss::new(lin_shard.features.clone(), lin_shard.targets.clone())),
+            Box::new(LogRegLoss::new(
+                log_shard.features.clone(),
+                log_shard.targets.clone(),
+                1e-3,
+            )),
+        ];
+        for loss in &losses {
+            for c in [1.0, 2.0, 10.0] {
+                let q = rng.normal_vec(8);
+                let warm = vec![0.0; 8];
+                let theta = loss.prox_argmin(&q, c, &warm);
+                let r = prox_residual(loss.as_ref(), &theta, &q, c);
+                assert!(r < 1e-6, "residual {r} for c={c}");
+            }
+        }
+    }
+}

@@ -1,0 +1,156 @@
+//! A distributed problem instance: N worker losses + the reference optimum.
+
+use super::{LinRegLoss, LocalLoss, LogRegLoss};
+use crate::data::{partition_even, Dataset, Task};
+use crate::linalg::vector as vec_ops;
+
+/// Default ridge coefficient per worker for logistic regression (makes θ*
+/// unique; part of the objective for every algorithm).
+pub const DEFAULT_LOGREG_MU: f64 = 1e-3;
+
+/// A consensus optimization problem `min_Θ Σ_n f_n(Θ)` with precomputed
+/// reference solution θ* and optimal value F* (how the paper measures
+/// objective error).
+pub struct Problem {
+    pub name: String,
+    pub task: Task,
+    pub losses: Vec<Box<dyn LocalLoss>>,
+    pub dim: usize,
+    pub theta_star: Vec<f64>,
+    pub f_star: f64,
+    /// Shared data-term normalization weight (1/m_total) — needed by the
+    /// PJRT runtime, whose artifacts take it as a runtime scalar.
+    pub data_weight: f64,
+    /// Per-worker ridge coefficient for logistic regression.
+    pub logreg_mu: f64,
+}
+
+impl Problem {
+    /// Build from a dataset split evenly over `n_workers`, and solve for the
+    /// reference optimum (closed form for linreg, damped Newton for logreg —
+    /// see [`crate::optim::solver`]).
+    pub fn from_dataset(ds: &Dataset, n_workers: usize) -> Problem {
+        let shards = partition_even(ds, n_workers);
+        // Normalize by the total sample count: the global objective is the
+        // mean loss, keeping local curvature O(1) across dataset sizes so a
+        // single ρ regime (the paper's 1–7) is meaningful everywhere.
+        let w = 1.0 / ds.num_samples() as f64;
+        let losses: Vec<Box<dyn LocalLoss>> = match ds.task {
+            Task::LinearRegression => shards
+                .iter()
+                .map(|s| Box::new(LinRegLoss::from_shard(s, w)) as Box<dyn LocalLoss>)
+                .collect(),
+            Task::LogisticRegression => shards
+                .iter()
+                .map(|s| {
+                    Box::new(LogRegLoss::from_shard(s, DEFAULT_LOGREG_MU / n_workers as f64, w))
+                        as Box<dyn LocalLoss>
+                })
+                .collect(),
+        };
+        let dim = ds.dim();
+        let (theta_star, f_star) = crate::optim::solver::solve_reference(&losses, dim, ds.task);
+        Problem {
+            name: format!("{}-N{}", ds.name, n_workers),
+            task: ds.task,
+            losses,
+            dim,
+            theta_star,
+            f_star,
+            data_weight: w,
+            logreg_mu: DEFAULT_LOGREG_MU / n_workers as f64,
+        }
+    }
+
+    pub fn num_workers(&self) -> usize {
+        self.losses.len()
+    }
+
+    /// Global objective at a single consensus point.
+    pub fn objective(&self, theta: &[f64]) -> f64 {
+        self.losses.iter().map(|l| l.value(theta)).sum()
+    }
+
+    /// Global objective with per-worker iterates (decentralized algorithms):
+    /// `Σ_n f_n(θ_n)` — the paper's metric (i).
+    pub fn objective_per_worker(&self, thetas: &[Vec<f64>]) -> f64 {
+        assert_eq!(thetas.len(), self.losses.len());
+        self.losses
+            .iter()
+            .zip(thetas)
+            .map(|(l, t)| l.value(t))
+            .sum()
+    }
+
+    /// Objective error `|Σ f_n(θ_n) − F*|`.
+    pub fn objective_error(&self, thetas: &[Vec<f64>]) -> f64 {
+        (self.objective_per_worker(thetas) - self.f_star).abs()
+    }
+
+    /// Objective error at a consensus point.
+    pub fn objective_error_consensus(&self, theta: &[f64]) -> f64 {
+        (self.objective(theta) - self.f_star).abs()
+    }
+
+    /// Global gradient Σ ∇f_n(θ) (used by centralized baselines).
+    pub fn global_grad(&self, theta: &[f64], out: &mut [f64]) {
+        out.iter_mut().for_each(|o| *o = 0.0);
+        let mut g = vec![0.0; self.dim];
+        for l in &self.losses {
+            l.grad_into(theta, &mut g);
+            vec_ops::axpy(1.0, &g, out);
+        }
+    }
+
+    /// Smoothness of the *global* objective (≤ Σ L_n), for 1/L stepsizes.
+    pub fn global_smoothness(&self) -> f64 {
+        self.losses.iter().map(|l| l.smoothness()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn linreg_reference_is_stationary() {
+        let ds = synthetic::linreg(120, 10, &mut Pcg64::seeded(1));
+        let p = Problem::from_dataset(&ds, 6);
+        assert_eq!(p.num_workers(), 6);
+        let mut g = vec![0.0; p.dim];
+        p.global_grad(&p.theta_star, &mut g);
+        assert!(vec_ops::norm2(&g) < 1e-6, "‖∇F(θ*)‖ = {}", vec_ops::norm2(&g));
+        // F* is the minimum along random perturbations.
+        let mut rng = Pcg64::seeded(2);
+        for _ in 0..5 {
+            let delta = rng.normal_vec(p.dim);
+            let perturbed: Vec<f64> = p
+                .theta_star
+                .iter()
+                .zip(&delta)
+                .map(|(t, d)| t + 0.01 * d)
+                .collect();
+            assert!(p.objective(&perturbed) >= p.f_star - 1e-9);
+        }
+    }
+
+    #[test]
+    fn logreg_reference_is_stationary() {
+        let ds = synthetic::logreg(120, 8, &mut Pcg64::seeded(3));
+        let p = Problem::from_dataset(&ds, 4);
+        let mut g = vec![0.0; p.dim];
+        p.global_grad(&p.theta_star, &mut g);
+        assert!(vec_ops::norm2(&g) < 1e-7, "‖∇F(θ*)‖ = {}", vec_ops::norm2(&g));
+    }
+
+    #[test]
+    fn per_worker_objective_at_consensus_matches() {
+        let ds = synthetic::linreg(60, 5, &mut Pcg64::seeded(4));
+        let p = Problem::from_dataset(&ds, 3);
+        let theta = vec![0.5; 5];
+        let thetas = vec![theta.clone(); 3];
+        assert!((p.objective(&theta) - p.objective_per_worker(&thetas)).abs() < 1e-12);
+    }
+}

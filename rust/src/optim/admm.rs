@@ -1,0 +1,124 @@
+//! Standard parameter-server ADMM (paper eqs. 5–7) — the centralized
+//! baseline of Fig. 8. Every iteration all N workers solve their local
+//! subproblem, unicast their model uplink, the server averages
+//! `Θ = (1/N) Σ (θ_n + λ_n/ρ)` and broadcasts it back; duals update locally.
+
+use super::Engine;
+use crate::comm::Meter;
+use crate::linalg::vector as vec_ops;
+use crate::model::Problem;
+
+pub struct Admm<'a> {
+    problem: &'a Problem,
+    /// ρ in the paper's (unnormalized-objective) units.
+    pub rho: f64,
+    rho_eff: f64,
+    theta: Vec<Vec<f64>>,
+    lambda: Vec<Vec<f64>>,
+    /// Server consensus variable Θ.
+    pub global: Vec<f64>,
+    q: Vec<f64>,
+}
+
+impl<'a> Admm<'a> {
+    pub fn new(problem: &'a Problem, rho: f64) -> Admm<'a> {
+        assert!(rho > 0.0);
+        let n = problem.num_workers();
+        let d = problem.dim;
+        Admm {
+            problem,
+            rho,
+            rho_eff: rho * problem.data_weight,
+            theta: vec![vec![0.0; d]; n],
+            lambda: vec![vec![0.0; d]; n],
+            global: vec![0.0; d],
+            q: vec![0.0; d],
+        }
+    }
+
+    pub fn thetas(&self) -> &[Vec<f64>] {
+        &self.theta
+    }
+}
+
+impl Engine for Admm<'_> {
+    fn name(&self) -> String {
+        format!("ADMM(rho={})", self.rho)
+    }
+
+    fn step(&mut self, _k: usize, meter: &mut Meter) {
+        let n = self.problem.num_workers();
+        let d = self.problem.dim;
+        // (5): local primal updates — q = λ_n − ρΘ, c = ρ.
+        for w in 0..n {
+            for j in 0..d {
+                self.q[j] = self.lambda[w][j] - self.rho_eff * self.global[j];
+            }
+            self.theta[w] = self.problem.losses[w].prox_argmin(&self.q, self.rho_eff, &self.theta[w]);
+        }
+        // Uplink round: every worker transmits its model.
+        meter.begin_round();
+        for w in 0..n {
+            meter.uplink(w);
+        }
+        // (6): server average Θ = (1/N) Σ (θ_n + λ_n/ρ).
+        self.global.iter_mut().for_each(|x| *x = 0.0);
+        for w in 0..n {
+            for j in 0..d {
+                self.global[j] += self.theta[w][j] + self.lambda[w][j] / self.rho_eff;
+            }
+        }
+        vec_ops::scale(1.0 / n as f64, &mut self.global);
+        // Downlink broadcast round.
+        meter.begin_round();
+        meter.server_broadcast();
+        // (7): local dual updates.
+        for w in 0..n {
+            for j in 0..d {
+                self.lambda[w][j] += self.rho_eff * (self.theta[w][j] - self.global[j]);
+            }
+        }
+    }
+
+    fn objective(&self) -> f64 {
+        self.problem.objective_per_worker(&self.theta)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+    use crate::optim::{run, RunOptions};
+    use crate::topology::UnitCosts;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn converges_on_linreg() {
+        let ds = synthetic::linreg(120, 8, &mut Pcg64::seeded(1));
+        let p = Problem::from_dataset(&ds, 6);
+        let mut e = Admm::new(&p, 1.0);
+        let trace = run(&mut e, &p, &UnitCosts, &RunOptions::with_target(1e-4, 5000));
+        let k = trace.iters_to_target().expect("ADMM should converge");
+        // TC arithmetic: N uplinks + 1 broadcast per iteration.
+        assert_eq!(trace.tc_to_target(), Some((k * 7) as f64));
+    }
+
+    #[test]
+    fn converges_on_logreg() {
+        let ds = synthetic::logreg(120, 6, &mut Pcg64::seeded(2));
+        let p = Problem::from_dataset(&ds, 4);
+        let mut e = Admm::new(&p, 1.0);
+        let trace = run(&mut e, &p, &UnitCosts, &RunOptions::with_target(1e-4, 5000));
+        assert!(trace.iters_to_target().is_some(), "err {}", trace.final_error());
+    }
+
+    #[test]
+    fn global_iterate_approaches_theta_star() {
+        let ds = synthetic::linreg(80, 5, &mut Pcg64::seeded(3));
+        let p = Problem::from_dataset(&ds, 4);
+        let mut e = Admm::new(&p, 2.0);
+        let _ = run(&mut e, &p, &UnitCosts, &RunOptions::with_target(1e-8, 20000));
+        assert!(vec_ops::dist2(&e.global, &p.theta_star) < 1e-3);
+    }
+}

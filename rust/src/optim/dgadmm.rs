@@ -1,0 +1,346 @@
+//! D-GADMM — Algorithm 2: GADMM under a time-varying logical chain.
+//!
+//! Every `tau` iterations the workers rebuild the logical chain with the
+//! Appendix-D heuristic (shared pseudorandom head set + greedy
+//! nearest-neighbour chaining over the current physical link costs). Two
+//! accounting modes mirror the paper:
+//!
+//! * [`RechainMode::Announced`] — physically moving workers (Fig. 7): the
+//!   chain build consumes **2 iterations (4 communication rounds)** — pilot
+//!   broadcast, cost-vector broadcast, and the model exchange with the new
+//!   neighbours — before optimization resumes.
+//! * [`RechainMode::Free`] — static physical topology (Fig. 8): workers
+//!   follow a predefined pseudorandom chain sequence, so re-chaining costs
+//!   nothing and can even happen every iteration, which is how D-GADMM
+//!   closes the iteration-count gap to parameter-server ADMM at ~40× lower
+//!   communication cost.
+
+use super::{Engine, Gadmm};
+use crate::comm::Meter;
+use crate::model::Problem;
+use crate::topology::chain::{self, Chain};
+use crate::topology::LinkCosts;
+use crate::util::rng::Pcg64;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RechainMode {
+    /// Chain build costs 2 iterations / 4 rounds + N model broadcasts.
+    Announced,
+    /// Predefined pseudorandom sequence: re-chaining is free.
+    Free,
+}
+
+/// What happens to the dual variables across a re-chain. The paper only
+/// says workers "refresh indices" (Appendix D); both interpretations are
+/// implemented and benchmarked (see `benches/bench_fig7_fig8.rs` ablation):
+///
+/// * [`DualHandling::Reuse`] — each worker keeps its λ and applies it to
+///   its new right neighbour (a literal reading of eq. 90). Preserves dual
+///   ascent. The default: robust and fastest in the paper's regime (ρ near
+///   the curvature sweet spot, mild worker heterogeneity); under strong
+///   heterogeneity or badly-tuned ρ it can floor at a chain-churn noise
+///   level, where Rebase/Reinit are the safe fallbacks (see the fig7/fig8
+///   ablation bench).
+/// * [`DualHandling::Reinit`] — rebuild duals by a prefix-gradient sweep
+///   along the new chain, restoring exact dual feasibility at the current
+///   primals. More robust when worker gradients at θ* are large and τ is
+///   long, at the price of discarding dual momentum.
+/// * [`DualHandling::Rebase`] — transfer each worker's dual
+///   *deviation* from the feasibility baseline onto the new chain
+///   (`λ' = feas(new) + (λ − feas(old))`). Keeps dual momentum like Reuse
+///   while staying convergent on heterogeneous data like Reinit.
+/// * [`DualHandling::Hybrid`] — Reuse on most re-chains with a Rebase
+///   correction every few re-chains (experimental; unstable at τ=1).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DualHandling {
+    Reuse,
+    Reinit,
+    Rebase,
+    Hybrid,
+    /// λ ← λ + γ(feas(new) − λ) after every re-chain.
+    Damped,
+}
+
+/// Damping factor for [`DualHandling::Damped`].
+const DAMPED_GAMMA: f64 = 0.25;
+
+/// Every how many re-chains Hybrid applies its Rebase correction.
+const HYBRID_REBASE_PERIOD: usize = 8;
+
+/// Work iterations without ACV improvement before re-chaining freezes.
+const STALL_WINDOW: usize = 150;
+
+pub struct Dgadmm<'a> {
+    inner: Gadmm<'a>,
+    /// Re-chain period τ (the paper's "system coherence time" in
+    /// iterations, or the "refresh rate" on static topologies).
+    pub tau: usize,
+    pub mode: RechainMode,
+    pub duals: DualHandling,
+    costs: &'a dyn LinkCosts,
+    rng: Pcg64,
+    /// Pending chain-build iterations to consume (Announced mode).
+    build_pending: usize,
+    /// Number of re-chains performed (Hybrid schedule).
+    rechains: usize,
+    /// Stall detector: re-chaining injects a small dual perturbation per
+    /// chain change; on unlucky placements this can floor the consensus
+    /// violation instead of converging. When the best-seen ACV stops
+    /// improving for `STALL_WINDOW` work iterations, re-chaining freezes
+    /// and plain GADMM finishes from the (well-mixed) warm start.
+    acv_best: f64,
+    last_improve: usize,
+    frozen: bool,
+    /// Iterations actually executed as GADMM steps.
+    work_iters: usize,
+}
+
+impl<'a> Dgadmm<'a> {
+    pub fn new(
+        problem: &'a Problem,
+        rho: f64,
+        tau: usize,
+        mode: RechainMode,
+        costs: &'a dyn LinkCosts,
+        seed: u64,
+    ) -> Dgadmm<'a> {
+        assert!(tau >= 1);
+        let mut rng = Pcg64::new(seed, 0xd6ad);
+        // Initial chain from the same decentralized heuristic.
+        let initial = chain::rechain(problem.num_workers(), costs, &mut rng);
+        Dgadmm {
+            inner: Gadmm::with_chain(problem, rho, initial),
+            tau,
+            mode,
+            duals: DualHandling::Reuse,
+            costs,
+            rng,
+            build_pending: 0,
+            rechains: 0,
+            acv_best: f64::INFINITY,
+            last_improve: 0,
+            frozen: false,
+            work_iters: 0,
+        }
+    }
+
+    /// Whether the stall detector has frozen re-chaining.
+    pub fn is_frozen(&self) -> bool {
+        self.frozen
+    }
+
+    /// Builder-style override of the dual handling across re-chains.
+    pub fn with_dual_handling(mut self, duals: DualHandling) -> Self {
+        self.duals = duals;
+        self
+    }
+
+    pub fn chain(&self) -> &Chain {
+        self.inner.chain()
+    }
+
+    pub fn thetas(&self) -> &[Vec<f64>] {
+        self.inner.thetas()
+    }
+
+    pub fn consensus_mean(&self) -> Vec<f64> {
+        self.inner.consensus_mean()
+    }
+
+    /// Install a new chain with the configured dual transfer.
+    fn install_chain(&mut self, new_chain: Chain) {
+        self.rechains += 1;
+        let effective = match self.duals {
+            DualHandling::Hybrid => {
+                if self.rechains % HYBRID_REBASE_PERIOD == 0 {
+                    DualHandling::Rebase
+                } else {
+                    DualHandling::Reuse
+                }
+            }
+            other => other,
+        };
+        match effective {
+            DualHandling::Damped => {
+                self.inner.set_chain(new_chain);
+                self.inner.damp_duals_toward_feasible(DAMPED_GAMMA);
+            }
+            DualHandling::Reuse | DualHandling::Hybrid => self.inner.set_chain(new_chain),
+            DualHandling::Reinit => {
+                self.inner.set_chain(new_chain);
+                self.inner.reinit_duals_for_chain();
+            }
+            DualHandling::Rebase => {
+                let old_feas = self.inner.feasible_duals();
+                self.inner.set_chain(new_chain);
+                self.inner.rebase_duals(&old_feas);
+            }
+        }
+    }
+
+    fn rechain_now(&mut self, meter: &mut Meter) {
+        let n = self.inner.chain().len();
+        let new_chain = chain::rechain(n, self.costs, &mut self.rng);
+        match self.mode {
+            RechainMode::Free => {
+                // Predefined sequence: everyone already knows the chain and
+                // neighbour models are exchanged within the normal phases.
+                self.install_chain(new_chain);
+            }
+            RechainMode::Announced => {
+                // 4 rounds over 2 consumed iterations:
+                //  r1: heads broadcast pilots; r2: tails broadcast cost
+                //  vectors; r3+r4: every worker broadcasts its model to its
+                //  new neighbours (head phase slot + tail phase slot).
+                meter.begin_round(); // pilots (signal-level, not model-sized)
+                meter.begin_round(); // cost vectors
+                self.install_chain(new_chain);
+                let order = self.inner.chain().order.clone();
+                meter.begin_round();
+                for p in (0..n).step_by(2) {
+                    let (l, r) = self.inner.chain().neighbors(p);
+                    let neigh: Vec<usize> = [l, r].into_iter().flatten().collect();
+                    meter.neighbor_broadcast(order[p], &neigh);
+                }
+                meter.begin_round();
+                for p in (1..n).step_by(2) {
+                    let (l, r) = self.inner.chain().neighbors(p);
+                    let neigh: Vec<usize> = [l, r].into_iter().flatten().collect();
+                    meter.neighbor_broadcast(order[p], &neigh);
+                }
+                self.build_pending = 2;
+            }
+        }
+    }
+}
+
+impl Engine for Dgadmm<'_> {
+    fn name(&self) -> String {
+        format!(
+            "D-GADMM(rho={},tau={},{})",
+            self.inner.rho,
+            self.tau,
+            match self.mode {
+                RechainMode::Announced => "announced",
+                RechainMode::Free => "free",
+            }
+        )
+    }
+
+    fn step(&mut self, k: usize, meter: &mut Meter) {
+        if self.build_pending > 0 {
+            // This iteration is consumed by the in-flight chain build.
+            self.build_pending -= 1;
+            return;
+        }
+        if k > 0 && k % self.tau == 0 && !self.frozen {
+            self.rechain_now(meter);
+            if self.build_pending > 0 {
+                self.build_pending -= 1; // current iteration is the 1st of 2
+                return;
+            }
+        }
+        self.inner.step(self.work_iters, meter);
+        self.work_iters += 1;
+        // Stall detection on the consensus violation.
+        let acv = self.inner.acv();
+        if acv < 0.9 * self.acv_best {
+            self.acv_best = acv;
+            self.last_improve = self.work_iters;
+        } else if !self.frozen && self.work_iters - self.last_improve > STALL_WINDOW {
+            self.frozen = true;
+            // One-time dual re-initialization for the frozen chain: at this
+            // point the primals sit in a small noise ball around θ*, so the
+            // feasibility sweep lands almost exactly on the frozen chain's
+            // λ*, and plain GADMM converges in a handful of iterations.
+            self.inner.reinit_duals_for_chain();
+            log::debug!(
+                "D-GADMM: ACV stalled at {acv:.3e} after {} iterations — freezing re-chaining",
+                self.work_iters
+            );
+        }
+    }
+
+    fn objective(&self) -> f64 {
+        self.inner.objective()
+    }
+
+    fn acv(&self) -> f64 {
+        self.inner.acv()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+    use crate::optim::{run, RunOptions};
+    use crate::topology::{EnergyCostModel, Placement, UnitCosts};
+
+    fn problem(seed: u64, n: usize) -> Problem {
+        let ds = synthetic::linreg(120, 8, &mut Pcg64::seeded(seed));
+        Problem::from_dataset(&ds, n)
+    }
+
+    #[test]
+    fn converges_with_free_rechaining() {
+        let p = problem(1, 6);
+        let costs = UnitCosts;
+        let mut e = Dgadmm::new(&p, 3.0, 1, RechainMode::Free, &costs, 42);
+        let trace = run(&mut e, &p, &costs, &RunOptions::with_target(1e-4, 5000));
+        assert!(trace.iters_to_target().is_some(), "err {}", trace.final_error());
+    }
+
+    #[test]
+    fn converges_with_announced_rechaining() {
+        let p = problem(2, 6);
+        let mut rng = Pcg64::seeded(7);
+        let placement = Placement::random(6, 250.0, &mut rng);
+        let costs = EnergyCostModel::new(&placement, placement.central_worker());
+        let mut e = Dgadmm::new(&p, 3.0, 15, RechainMode::Announced, &costs, 42);
+        let trace = run(&mut e, &p, &costs, &RunOptions::with_target(1e-4, 8000));
+        assert!(trace.iters_to_target().is_some(), "err {}", trace.final_error());
+    }
+
+    #[test]
+    fn announced_rechain_consumes_two_iterations() {
+        let p = problem(3, 4);
+        let costs = UnitCosts;
+        let mut e = Dgadmm::new(&p, 2.0, 5, RechainMode::Announced, &costs, 1);
+        let mut meter = crate::comm::Meter::new(&costs);
+        // Iterations 0..4 are normal; 5 and 6 are consumed by the build.
+        for k in 0..5 {
+            e.step(k, &mut meter);
+        }
+        let obj_before = e.objective();
+        e.step(5, &mut meter); // build part 1
+        assert_eq!(e.objective(), obj_before, "no optimization during build");
+        e.step(6, &mut meter); // build part 2
+        assert_eq!(e.objective(), obj_before);
+        e.step(7, &mut meter); // optimization resumes
+        assert_ne!(e.objective(), obj_before);
+    }
+
+    #[test]
+    fn free_rechain_changes_chain_without_cost() {
+        let p = problem(4, 6);
+        let costs = UnitCosts;
+        let mut e = Dgadmm::new(&p, 2.0, 1, RechainMode::Free, &costs, 5);
+        let mut meter = crate::comm::Meter::new(&costs);
+        let c0 = e.chain().order.clone();
+        e.step(0, &mut meter);
+        let tc_one_iter = meter.tc_unit;
+        assert_eq!(tc_one_iter, 6.0); // exactly N, no rechain overhead
+        e.step(1, &mut meter);
+        assert_eq!(meter.tc_unit, 12.0);
+        // Chain does change over a few rechains.
+        let mut changed = false;
+        for k in 2..10 {
+            e.step(k, &mut meter);
+            if e.chain().order != c0 {
+                changed = true;
+            }
+        }
+        assert!(changed, "chain never changed");
+    }
+}

@@ -1,0 +1,158 @@
+//! Decentralized Gradient Descent (Nedić et al., 2018) over the same chain
+//! topology GADMM uses — the decentralized first-order baseline.
+//!
+//! `θ_n^{k+1} = Σ_m W_nm θ_m^k − α_k ∇f_n(θ_n^k)` with Metropolis–Hastings
+//! mixing weights on the chain and the diminishing stepsize
+//! `α_k = α₀/√(k+1)` required for exact convergence. Every worker
+//! broadcasts its model to its neighbours each iteration: TC = N/iter.
+
+use super::Engine;
+use crate::comm::Meter;
+use crate::model::Problem;
+use crate::topology::chain::Chain;
+
+pub struct Dgd<'a> {
+    problem: &'a Problem,
+    pub alpha0: f64,
+    chain: Chain,
+    theta: Vec<Vec<f64>>,
+    next: Vec<Vec<f64>>,
+    tmp: Vec<f64>,
+    /// Metropolis weight for each chain link (p, p+1).
+    link_w: Vec<f64>,
+}
+
+impl<'a> Dgd<'a> {
+    pub fn new(problem: &'a Problem) -> Dgd<'a> {
+        let alpha0 = 1.0 / problem.losses.iter().map(|l| l.smoothness()).fold(0.0, f64::max);
+        Dgd::with_stepsize(problem, alpha0)
+    }
+
+    pub fn with_stepsize(problem: &'a Problem, alpha0: f64) -> Dgd<'a> {
+        let n = problem.num_workers();
+        let d = problem.dim;
+        let chain = Chain::sequential(n);
+        // Metropolis–Hastings: W_pq = 1/(1 + max(deg_p, deg_q)).
+        let deg = |p: usize| -> f64 { if p == 0 || p == n - 1 { 1.0 } else { 2.0 } };
+        let link_w: Vec<f64> = (0..n - 1)
+            .map(|p| 1.0 / (1.0 + deg(p).max(deg(p + 1))))
+            .collect();
+        Dgd {
+            problem,
+            alpha0,
+            chain,
+            theta: vec![vec![0.0; d]; n],
+            next: vec![vec![0.0; d]; n],
+            tmp: vec![0.0; d],
+            link_w,
+        }
+    }
+
+    pub fn thetas(&self) -> &[Vec<f64>] {
+        &self.theta
+    }
+
+    /// The mixing matrix row for position `p` as (self-weight, left, right).
+    fn weights(&self, p: usize) -> (f64, Option<f64>, Option<f64>) {
+        let n = self.chain.len();
+        let wl = if p > 0 { Some(self.link_w[p - 1]) } else { None };
+        let wr = if p + 1 < n { Some(self.link_w[p]) } else { None };
+        let self_w = 1.0 - wl.unwrap_or(0.0) - wr.unwrap_or(0.0);
+        (self_w, wl, wr)
+    }
+}
+
+impl Engine for Dgd<'_> {
+    fn name(&self) -> String {
+        "DGD".into()
+    }
+
+    fn step(&mut self, k: usize, meter: &mut Meter) {
+        let n = self.chain.len();
+        let d = self.problem.dim;
+        let alpha = self.alpha0 / ((k + 1) as f64).sqrt();
+        for p in 0..n {
+            let w = self.chain.order[p];
+            let (sw, wl, wr) = self.weights(p);
+            for j in 0..d {
+                let mut v = sw * self.theta[w][j];
+                if let Some(lw) = wl {
+                    v += lw * self.theta[self.chain.order[p - 1]][j];
+                }
+                if let Some(rw) = wr {
+                    v += rw * self.theta[self.chain.order[p + 1]][j];
+                }
+                self.next[w][j] = v;
+            }
+            self.problem.losses[w].grad_into(&self.theta[w], &mut self.tmp);
+            for j in 0..d {
+                self.next[w][j] -= alpha * self.tmp[j];
+            }
+        }
+        std::mem::swap(&mut self.theta, &mut self.next);
+        // One round: everyone broadcasts to its neighbours simultaneously.
+        meter.begin_round();
+        for p in 0..n {
+            let w = self.chain.order[p];
+            let (l, r) = self.chain.neighbors(p);
+            let neigh: Vec<usize> = [l, r].into_iter().flatten().collect();
+            meter.neighbor_broadcast(w, &neigh);
+        }
+    }
+
+    fn objective(&self) -> f64 {
+        self.problem.objective_per_worker(&self.theta)
+    }
+
+    fn acv(&self) -> f64 {
+        let n = self.chain.len();
+        let mut total = 0.0;
+        for p in 0..n - 1 {
+            let (a, b) = (self.chain.order[p], self.chain.order[p + 1]);
+            total += crate::linalg::vector::norm1(&crate::linalg::vector::sub(
+                &self.theta[a],
+                &self.theta[b],
+            ));
+        }
+        total / n as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+    use crate::optim::{run, RunOptions};
+    use crate::topology::UnitCosts;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn mixing_weights_are_doubly_stochastic() {
+        let ds = synthetic::linreg(60, 4, &mut Pcg64::seeded(1));
+        let p = Problem::from_dataset(&ds, 6);
+        let dgd = Dgd::new(&p);
+        // Row sums = 1 by construction; column sums = 1 by symmetry of the
+        // Metropolis weights on an undirected chain.
+        for pos in 0..6 {
+            let (sw, wl, wr) = dgd.weights(pos);
+            let sum = sw + wl.unwrap_or(0.0) + wr.unwrap_or(0.0);
+            assert!((sum - 1.0).abs() < 1e-12);
+            assert!(sw >= 0.0);
+        }
+    }
+
+    #[test]
+    fn error_decreases_substantially() {
+        // DGD with diminishing steps is slow (O(1/√k)); assert progress
+        // rather than the 1e-4 target.
+        let ds = synthetic::linreg(60, 4, &mut Pcg64::seeded(2));
+        let p = Problem::from_dataset(&ds, 4);
+        let mut e = Dgd::new(&p);
+        let trace = run(&mut e, &p, &UnitCosts, &RunOptions::with_target(0.0, 4000));
+        let first = trace.records[0].obj_err;
+        let last = trace.final_error();
+        assert!(last < first * 1e-2, "{first} → {last}");
+        // N transmissions per iteration.
+        assert_eq!(trace.records[0].tc_unit, 4.0);
+    }
+}

@@ -1,0 +1,403 @@
+//! GADMM — Algorithm 1 of the paper.
+//!
+//! Workers sit on a logical chain and are split into the head group (even
+//! chain positions) and tail group (odd positions). One iteration:
+//!
+//! 1. **Head phase** — every head solves its local subproblem (eqs. 11–12)
+//!    in parallel against its neighbours' iteration-k models, then
+//!    transmits its new model to its ≤2 tail neighbours (round 1).
+//! 2. **Tail phase** — every tail solves (eqs. 13–14) against the *fresh*
+//!    head models and transmits back (round 2).
+//! 3. **Dual update** — every worker updates its local duals (eq. 15), no
+//!    communication.
+//!
+//! Only N/2 workers occupy the medium per round and only primal vectors are
+//! exchanged — the paper's communication-efficiency claims fall out of this
+//! structure, which the [`crate::comm::Meter`] charges faithfully.
+
+use super::Engine;
+use crate::comm::Meter;
+use crate::linalg::vector as vec_ops;
+use crate::model::Problem;
+use crate::topology::chain::Chain;
+
+pub struct Gadmm<'a> {
+    problem: &'a Problem,
+    /// ρ in the paper's units (penalty on the *unnormalized* objective
+    /// Σ‖X_nθ−y_n‖²). Internally scaled by the problem's 1/m normalization.
+    pub rho: f64,
+    /// Effective ρ applied to the normalized losses: `rho · data_weight`.
+    rho_eff: f64,
+    /// Logical chain: `chain.order[p]` = physical worker at position p.
+    chain: Chain,
+    /// Primal iterate per *physical* worker.
+    theta: Vec<Vec<f64>>,
+    /// Dual per *physical worker* w: λ_w couples worker w to its *current
+    /// right neighbour* (paper eq. 90 — in D-GADMM the dual travels with the
+    /// worker, not the chain position). Worker N−1, the fixed right end,
+    /// never owns a dual. Length N (last entry unused, kept for indexing).
+    lambda: Vec<Vec<f64>>,
+    /// Scratch for the subproblem's linear term.
+    q: Vec<f64>,
+}
+
+impl<'a> Gadmm<'a> {
+    /// GADMM on the identity chain 0–1–…–(N−1) (the paper's static setup).
+    pub fn new(problem: &'a Problem, rho: f64) -> Gadmm<'a> {
+        Gadmm::with_chain(problem, rho, Chain::sequential(problem.num_workers()))
+    }
+
+    /// GADMM on an explicit logical chain.
+    pub fn with_chain(problem: &'a Problem, rho: f64, chain: Chain) -> Gadmm<'a> {
+        let n = problem.num_workers();
+        assert_eq!(chain.len(), n);
+        assert!(n >= 2 && n % 2 == 0, "GADMM requires an even N ≥ 2");
+        assert!(rho > 0.0);
+        let d = problem.dim;
+        Gadmm {
+            problem,
+            rho,
+            rho_eff: rho * problem.data_weight,
+            chain,
+            theta: vec![vec![0.0; d]; n],
+            lambda: vec![vec![0.0; d]; n],
+            q: vec![0.0; d],
+        }
+    }
+
+    pub fn chain(&self) -> &Chain {
+        &self.chain
+    }
+
+    pub fn thetas(&self) -> &[Vec<f64>] {
+        &self.theta
+    }
+
+    /// Duals indexed by physical worker (entry for the last-position worker
+    /// is identically zero).
+    pub fn lambdas(&self) -> &[Vec<f64>] {
+        &self.lambda
+    }
+
+    /// Replace the logical chain (D-GADMM re-chaining). Primal iterates and
+    /// duals both travel with their physical workers: worker w keeps λ_w and
+    /// applies it to whatever its new right neighbour is (Appendix E,
+    /// eq. 90 — convergence holds when iteration-k variables computed under
+    /// the previous neighbour set are reused).
+    pub fn set_chain(&mut self, chain: Chain) {
+        assert_eq!(chain.len(), self.chain.len());
+        self.chain = chain;
+    }
+
+    /// Re-initialize the duals consistently for the *current* chain via a
+    /// left-to-right prefix-sum sweep: `λ_{order[p]} = λ_{order[p−1]} −
+    /// ∇f_{order[p]}(θ_{order[p]})` (dual-feasibility recursion, eq. 17, at
+    /// the current primals). D-GADMM calls this after every re-chain — the
+    /// paper only says workers "refresh indices" (Appendix D); plain reuse
+    /// of stale duals stalls on heterogeneous data because the optimal
+    /// duals are chain-order-dependent prefix gradient sums, while this
+    /// sweep restores exact dual feasibility for every worker and rides the
+    /// chain-build exchange the paper already budgets (2 iterations / 4
+    /// rounds). See DESIGN.md §Substitutions.
+    pub fn reinit_duals_for_chain(&mut self) {
+        let feas = self.feasible_duals();
+        for (w, f) in feas.into_iter().enumerate() {
+            self.lambda[w] = f;
+        }
+    }
+
+    /// The dual-feasibility baseline for the *current* chain at the current
+    /// primals: `λ_{order[p]} = λ_{order[p−1]} − ∇f_{order[p]}(θ_{order[p]})`
+    /// (eq. 17 telescoped), indexed by physical worker. The last-position
+    /// worker's entry is zero.
+    pub fn feasible_duals(&self) -> Vec<Vec<f64>> {
+        let n = self.chain.len();
+        let d = self.problem.dim;
+        let mut out = vec![vec![0.0; d]; n];
+        let mut running = vec![0.0; d];
+        let mut g = vec![0.0; d];
+        for p in 0..n - 1 {
+            let w = self.chain.order[p];
+            self.problem.losses[w].grad_into(&self.theta[w], &mut g);
+            for j in 0..d {
+                running[j] -= g[j];
+            }
+            out[w].copy_from_slice(&running);
+        }
+        out
+    }
+
+    /// Re-baseline the duals onto a new chain while preserving their
+    /// dual-ascent momentum: with `feas(chain)` the feasibility baseline,
+    /// set `λ' = feas(new) + (λ − feas(old))`. Call with the *old* chain's
+    /// baseline captured before `set_chain`. As θ → θ*, feas(chain) → the
+    /// chain's λ*, so the transferred deviation vanishes at the optimum on
+    /// any chain — this is what keeps D-GADMM convergent on heterogeneous
+    /// data without discarding the accumulated dual ascent (see
+    /// DualHandling in dgadmm.rs and DESIGN.md §Substitutions).
+    /// Damped dual correction toward the current chain's feasibility
+    /// baseline: `λ ← λ + γ·(feas − λ)`. γ=1 is a full re-init (discards
+    /// momentum), γ=0 is plain reuse (keeps chain-order bias); intermediate
+    /// γ keeps D-GADMM convergent on heterogeneous data without stalling.
+    pub fn damp_duals_toward_feasible(&mut self, gamma: f64) {
+        let feas = self.feasible_duals();
+        let n = self.chain.len();
+        let last = self.chain.order[n - 1];
+        for w in 0..n {
+            if w == last {
+                self.lambda[w].iter_mut().for_each(|x| *x = 0.0);
+                continue;
+            }
+            for j in 0..self.problem.dim {
+                self.lambda[w][j] += gamma * (feas[w][j] - self.lambda[w][j]);
+            }
+        }
+    }
+
+    pub fn rebase_duals(&mut self, old_feas: &[Vec<f64>]) {
+        let new_feas = self.feasible_duals();
+        let n = self.chain.len();
+        let last = self.chain.order[n - 1];
+        for w in 0..n {
+            if w == last {
+                self.lambda[w].iter_mut().for_each(|x| *x = 0.0);
+                continue;
+            }
+            for j in 0..self.problem.dim {
+                self.lambda[w][j] += new_feas[w][j] - old_feas[w][j];
+            }
+        }
+    }
+
+    /// Consensus average of the worker models (final model export).
+    pub fn consensus_mean(&self) -> Vec<f64> {
+        let d = self.problem.dim;
+        let mut mean = vec![0.0; d];
+        for t in &self.theta {
+            vec_ops::axpy(1.0, t, &mut mean);
+        }
+        vec_ops::scale(1.0 / self.theta.len() as f64, &mut mean);
+        mean
+    }
+
+    /// Solve the subproblem for the worker at chain position `p` using the
+    /// neighbour models currently in `self.theta`. The subproblem's linear
+    /// term is `q = −λ_{p−1} + λ_p − ρ(θ_left + θ_right)`, the quadratic
+    /// coefficient `c = ρ·(#neighbours)`.
+    fn update_position(&mut self, p: usize) {
+        let n = self.chain.len();
+        let w = self.chain.order[p];
+        let d = self.problem.dim;
+        self.q.iter_mut().for_each(|x| *x = 0.0);
+        let mut couplings = 0.0;
+        if p > 0 {
+            let left = self.chain.order[p - 1];
+            for j in 0..d {
+                // λ of the *left neighbour* governs the (left, w) link.
+                self.q[j] += -self.lambda[left][j] - self.rho_eff * self.theta[left][j];
+            }
+            couplings += 1.0;
+        }
+        if p + 1 < n {
+            let right = self.chain.order[p + 1];
+            for j in 0..d {
+                // w's own λ governs the (w, right) link.
+                self.q[j] += self.lambda[w][j] - self.rho_eff * self.theta[right][j];
+            }
+            couplings += 1.0;
+        }
+        let c = self.rho_eff * couplings;
+        self.theta[w] = self.problem.losses[w].prox_argmin(&self.q, c, &self.theta[w]);
+    }
+
+    /// Primal residuals r_{p,p+1} = θ_p − θ_{p+1} along the chain.
+    pub fn primal_residuals(&self) -> Vec<Vec<f64>> {
+        (0..self.chain.len() - 1)
+            .map(|p| {
+                vec_ops::sub(
+                    &self.theta[self.chain.order[p]],
+                    &self.theta[self.chain.order[p + 1]],
+                )
+            })
+            .collect()
+    }
+
+    /// Tail dual-feasibility residual max_n ‖∇f_n(θ_n) − λ_{n−1} + λ_n‖ over
+    /// tail positions — identically 0 in exact arithmetic after every
+    /// iteration (eq. 20); property-tested.
+    pub fn tail_dual_residual(&self) -> f64 {
+        let n = self.chain.len();
+        let mut worst: f64 = 0.0;
+        for p in (1..n).step_by(2) {
+            let w = self.chain.order[p];
+            let left = self.chain.order[p - 1];
+            let mut g = self.problem.losses[w].grad(&self.theta[w]);
+            for j in 0..g.len() {
+                g[j] -= self.lambda[left][j];
+                if p + 1 < n {
+                    g[j] += self.lambda[w][j];
+                }
+            }
+            worst = worst.max(vec_ops::norm2(&g));
+        }
+        worst
+    }
+
+    /// The Lyapunov function of Theorem 2 (eq. 32):
+    /// `V_k = 1/ρ Σ_p‖λ_p − λ*_p‖² + ρ Σ_{heads p>0}‖θ_{p−1} − θ*‖²
+    ///        + ρ Σ_{heads p}‖θ_{p+1} − θ*‖²`.
+    pub fn lyapunov(&self, theta_star: &[f64], lambda_star: &[Vec<f64>]) -> f64 {
+        let n = self.chain.len();
+        let mut v = 0.0;
+        for p in 0..n - 1 {
+            let w = self.chain.order[p];
+            v += vec_ops::dist2(&self.lambda[w], &lambda_star[p]).powi(2) / self.rho_eff;
+        }
+        for p in (0..n).step_by(2) {
+            if p > 0 {
+                let left = self.chain.order[p - 1];
+                v += self.rho_eff * vec_ops::dist2(&self.theta[left], theta_star).powi(2);
+            }
+            if p + 1 < n {
+                let right = self.chain.order[p + 1];
+                v += self.rho_eff * vec_ops::dist2(&self.theta[right], theta_star).powi(2);
+            }
+        }
+        v
+    }
+
+    /// Charge one phase's transmissions: every worker in the group
+    /// broadcasts once to its chain neighbours.
+    fn meter_phase(&self, meter: &mut Meter, head_phase: bool) {
+        meter.begin_round();
+        let n = self.chain.len();
+        let start = if head_phase { 0 } else { 1 };
+        for p in (start..n).step_by(2) {
+            let w = self.chain.order[p];
+            let (l, r) = self.chain.neighbors(p);
+            let neigh: Vec<usize> = [l, r].into_iter().flatten().collect();
+            meter.neighbor_broadcast(w, &neigh);
+        }
+    }
+}
+
+impl Engine for Gadmm<'_> {
+    fn name(&self) -> String {
+        format!("GADMM(rho={})", self.rho)
+    }
+
+    fn step(&mut self, _k: usize, meter: &mut Meter) {
+        let n = self.chain.len();
+        // Head phase (parallel in a real deployment; order-independent here
+        // because heads only read tail models).
+        for p in (0..n).step_by(2) {
+            self.update_position(p);
+        }
+        self.meter_phase(meter, true);
+        // Tail phase — uses the fresh head models.
+        for p in (1..n).step_by(2) {
+            self.update_position(p);
+        }
+        self.meter_phase(meter, false);
+        // Dual updates (eq. 15), local to each worker.
+        for p in 0..n - 1 {
+            let (a, b) = (self.chain.order[p], self.chain.order[p + 1]);
+            for j in 0..self.problem.dim {
+                // eq. 90: worker a's dual couples it to its current right
+                // neighbour b.
+                self.lambda[a][j] += self.rho_eff * (self.theta[a][j] - self.theta[b][j]);
+            }
+        }
+    }
+
+    fn objective(&self) -> f64 {
+        self.problem.objective_per_worker(&self.theta)
+    }
+
+    fn acv(&self) -> f64 {
+        let n = self.chain.len();
+        let mut total = 0.0;
+        for p in 0..n - 1 {
+            let (a, b) = (self.chain.order[p], self.chain.order[p + 1]);
+            total += vec_ops::norm1(&vec_ops::sub(&self.theta[a], &self.theta[b]));
+        }
+        total / n as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+    use crate::optim::{run, RunOptions};
+    use crate::topology::UnitCosts;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn converges_on_linreg() {
+        let ds = synthetic::linreg(120, 8, &mut Pcg64::seeded(1));
+        let p = Problem::from_dataset(&ds, 6);
+        let mut g = Gadmm::new(&p, 5.0);
+        let trace = run(&mut g, &p, &UnitCosts, &RunOptions::with_target(1e-4, 3000));
+        let k = trace.iters_to_target().expect("GADMM should converge");
+        assert!(k < 2000, "took {k} iterations");
+        // TC arithmetic: N transmissions per iteration.
+        assert_eq!(trace.tc_to_target(), Some((k * 6) as f64));
+    }
+
+    #[test]
+    fn converges_on_logreg() {
+        let ds = synthetic::logreg(120, 6, &mut Pcg64::seeded(2));
+        let p = Problem::from_dataset(&ds, 4);
+        // Normalized losses have O(0.1) curvature: ρ below 1 is the right
+        // regime for logistic tasks (cf. the ρ discussion in paper §7).
+        let mut g = Gadmm::new(&p, 0.3);
+        let trace = run(&mut g, &p, &UnitCosts, &RunOptions::with_target(1e-4, 6000));
+        assert!(trace.iters_to_target().is_some(), "final err {}", trace.final_error());
+    }
+
+    #[test]
+    fn tail_dual_feasibility_holds_every_iteration() {
+        let ds = synthetic::linreg(80, 5, &mut Pcg64::seeded(3));
+        let p = Problem::from_dataset(&ds, 6);
+        let mut g = Gadmm::new(&p, 3.0);
+        let costs = UnitCosts;
+        let mut meter = crate::comm::Meter::new(&costs);
+        for k in 0..25 {
+            g.step(k, &mut meter);
+            let r = g.tail_dual_residual();
+            assert!(r < 1e-7, "iteration {k}: tail dual residual {r}");
+        }
+    }
+
+    #[test]
+    fn acv_decreases_to_zero() {
+        let ds = synthetic::linreg(80, 5, &mut Pcg64::seeded(4));
+        let p = Problem::from_dataset(&ds, 4);
+        let mut g = Gadmm::new(&p, 5.0);
+        let trace = run(&mut g, &p, &UnitCosts, &RunOptions::with_target(1e-6, 5000));
+        assert!(trace.iters_to_target().is_some());
+        let early = trace.records[0].acv;
+        let late = trace.records.last().unwrap().acv;
+        assert!(late < early * 1e-2, "ACV {early} → {late}");
+        assert!(late < 1e-3);
+    }
+
+    #[test]
+    fn consensus_mean_near_theta_star_after_convergence() {
+        let ds = synthetic::linreg(80, 5, &mut Pcg64::seeded(5));
+        let p = Problem::from_dataset(&ds, 4);
+        let mut g = Gadmm::new(&p, 5.0);
+        let _ = run(&mut g, &p, &UnitCosts, &RunOptions::with_target(1e-8, 20000));
+        let mean = g.consensus_mean();
+        assert!(vec_ops::dist2(&mean, &p.theta_star) < 1e-3);
+    }
+
+    #[test]
+    #[should_panic(expected = "even N")]
+    fn odd_worker_count_rejected() {
+        let ds = synthetic::linreg(30, 4, &mut Pcg64::seeded(6));
+        let p = Problem::from_dataset(&ds, 5);
+        let _ = Gadmm::new(&p, 1.0);
+    }
+}

@@ -1,0 +1,107 @@
+//! Batch gradient descent with a parameter server — the paper's GD
+//! baseline. Every iteration each worker uplinks its local gradient and the
+//! server broadcasts the updated model: TC = N + 1 per iteration.
+
+use super::Engine;
+use crate::comm::Meter;
+use crate::linalg::vector as vec_ops;
+use crate::model::Problem;
+
+pub struct Gd<'a> {
+    problem: &'a Problem,
+    pub alpha: f64,
+    theta: Vec<f64>,
+    grad: Vec<f64>,
+    tmp: Vec<f64>,
+}
+
+impl<'a> Gd<'a> {
+    /// GD with the standard 1/L stepsize (L = global smoothness bound).
+    pub fn new(problem: &'a Problem) -> Gd<'a> {
+        let alpha = 1.0 / problem.global_smoothness();
+        Gd::with_stepsize(problem, alpha)
+    }
+
+    pub fn with_stepsize(problem: &'a Problem, alpha: f64) -> Gd<'a> {
+        assert!(alpha > 0.0);
+        Gd {
+            problem,
+            alpha,
+            theta: vec![0.0; problem.dim],
+            grad: vec![0.0; problem.dim],
+            tmp: vec![0.0; problem.dim],
+        }
+    }
+
+    pub fn theta(&self) -> &[f64] {
+        &self.theta
+    }
+}
+
+impl Engine for Gd<'_> {
+    fn name(&self) -> String {
+        "GD".into()
+    }
+
+    fn step(&mut self, _k: usize, meter: &mut Meter) {
+        let n = self.problem.num_workers();
+        // Workers compute local gradients at the broadcast model and uplink.
+        self.grad.iter_mut().for_each(|g| *g = 0.0);
+        meter.begin_round();
+        for w in 0..n {
+            self.problem.losses[w].grad_into(&self.theta, &mut self.tmp);
+            vec_ops::axpy(1.0, &self.tmp, &mut self.grad);
+            meter.uplink(w);
+        }
+        // Server update + broadcast.
+        vec_ops::axpy(-self.alpha, &self.grad.clone(), &mut self.theta);
+        meter.begin_round();
+        meter.server_broadcast();
+    }
+
+    fn objective(&self) -> f64 {
+        self.problem.objective(&self.theta)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+    use crate::optim::{run, RunOptions};
+    use crate::topology::UnitCosts;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn converges_monotonically_on_linreg() {
+        let ds = synthetic::linreg(100, 6, &mut Pcg64::seeded(1));
+        let p = Problem::from_dataset(&ds, 4);
+        let mut e = Gd::new(&p);
+        let trace = run(&mut e, &p, &UnitCosts, &RunOptions::with_target(1e-4, 100_000));
+        let k = trace.iters_to_target().expect("GD should converge");
+        assert_eq!(trace.tc_to_target(), Some((k * 5) as f64)); // N+1 per iter
+        // 1/L GD decreases monotonically.
+        for w in trace.records.windows(2) {
+            assert!(w[1].obj_err <= w[0].obj_err * (1.0 + 1e-9));
+        }
+    }
+
+    #[test]
+    fn converges_on_logreg() {
+        let ds = synthetic::logreg(100, 5, &mut Pcg64::seeded(2));
+        let p = Problem::from_dataset(&ds, 4);
+        let mut e = Gd::new(&p);
+        let trace = run(&mut e, &p, &UnitCosts, &RunOptions::with_target(1e-4, 200_000));
+        assert!(trace.iters_to_target().is_some(), "err {}", trace.final_error());
+    }
+
+    #[test]
+    fn oversized_stepsize_diverges_and_driver_aborts() {
+        let ds = synthetic::linreg(100, 6, &mut Pcg64::seeded(3));
+        let p = Problem::from_dataset(&ds, 4);
+        let mut e = Gd::with_stepsize(&p, 10.0 / p.global_smoothness() * 1000.0);
+        let trace = run(&mut e, &p, &UnitCosts, &RunOptions::with_target(1e-4, 100_000));
+        assert!(trace.iters_to_target().is_none());
+        assert!(trace.records.len() < 1000, "driver should abort divergence");
+    }
+}

@@ -1,0 +1,180 @@
+//! Execution backends for the per-worker subproblem solve — the boundary
+//! between the L3 coordinator and the AOT-compiled L2/L1 artifacts.
+//!
+//! * [`NativeSolver`] — pure-rust closed-form/Newton solve (the reference
+//!   backend; bit-for-bit the sequential engines' math).
+//! * [`pjrt`] — loads `artifacts/*.hlo.txt` (lowered from JAX+Pallas by
+//!   `python/compile/aot.py`) through the PJRT C API and executes them.
+//!   Python is never on this path.
+//! * [`service`] — a device-service thread that owns the (non-`Send`) PJRT
+//!   client and serves solve requests from coordinator worker threads over
+//!   channels, the way a shared accelerator would.
+//!
+//! The integration test `pjrt_runtime.rs` asserts the two backends agree.
+
+pub mod pjrt;
+pub mod service;
+
+use crate::model::LocalLoss;
+use crate::util::json::{self, Json};
+use std::path::{Path, PathBuf};
+
+/// A worker-local subproblem solver: `argmin f(θ) + ⟨q,θ⟩ + (c/2)‖θ‖²`.
+///
+/// Deliberately not `Send`-bounded: the PJRT-backed implementation is
+/// thread-bound. The coordinator takes `Box<dyn LocalSolver + Send>`; the
+/// [`service`] module provides `Send` handles in front of PJRT.
+pub trait LocalSolver {
+    fn prox_argmin(&self, q: &[f64], c: f64, warm: &[f64]) -> Vec<f64>;
+}
+
+/// Native backend: delegates to the loss's own solve.
+pub struct NativeSolver<'a> {
+    loss: &'a dyn LocalLoss,
+}
+
+impl<'a> NativeSolver<'a> {
+    pub fn new(loss: &'a dyn LocalLoss) -> NativeSolver<'a> {
+        NativeSolver { loss }
+    }
+}
+
+impl LocalSolver for NativeSolver<'_> {
+    fn prox_argmin(&self, q: &[f64], c: f64, warm: &[f64]) -> Vec<f64> {
+        self.loss.prox_argmin(q, c, warm)
+    }
+}
+
+/// One AOT artifact: an HLO-text module with a known entry point and shapes.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArtifactEntry {
+    /// Entry point name, e.g. `linreg_prox` or `logreg_newton_step`.
+    pub entry: String,
+    /// Samples dimension the module was lowered for.
+    pub m: usize,
+    /// Feature dimension.
+    pub d: usize,
+    /// HLO text file, relative to the manifest.
+    pub file: String,
+}
+
+/// The artifact manifest written by `python/compile/aot.py`.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub dtype: String,
+    pub entries: Vec<ArtifactEntry>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest, String> {
+        let path = dir.join("manifest.json");
+        let text =
+            std::fs::read_to_string(&path).map_err(|e| format!("{}: {e}", path.display()))?;
+        let v = json::parse(&text).map_err(|e| format!("{}: {e}", path.display()))?;
+        Manifest::from_json(dir, &v)
+    }
+
+    pub fn from_json(dir: &Path, v: &Json) -> Result<Manifest, String> {
+        let dtype = v
+            .get("dtype")
+            .and_then(Json::as_str)
+            .ok_or("manifest missing dtype")?
+            .to_string();
+        let mut entries = Vec::new();
+        for e in v
+            .get("entries")
+            .and_then(Json::as_arr)
+            .ok_or("manifest missing entries")?
+        {
+            entries.push(ArtifactEntry {
+                entry: e
+                    .get("entry")
+                    .and_then(Json::as_str)
+                    .ok_or("entry missing name")?
+                    .to_string(),
+                m: e.get("m").and_then(Json::as_usize).ok_or("entry missing m")?,
+                d: e.get("d").and_then(Json::as_usize).ok_or("entry missing d")?,
+                file: e
+                    .get("file")
+                    .and_then(Json::as_str)
+                    .ok_or("entry missing file")?
+                    .to_string(),
+            });
+        }
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            dtype,
+            entries,
+        })
+    }
+
+    /// Find the artifact for an entry point and shard shape.
+    pub fn find(&self, entry: &str, m: usize, d: usize) -> Option<&ArtifactEntry> {
+        self.entries
+            .iter()
+            .find(|e| e.entry == entry && e.m == m && e.d == d)
+    }
+
+    pub fn path_of(&self, e: &ArtifactEntry) -> PathBuf {
+        self.dir.join(&e.file)
+    }
+}
+
+/// Default artifacts directory (repo-root `artifacts/`), overridable via
+/// `GADMM_ARTIFACTS`.
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var("GADMM_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+    use crate::model::Problem;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn native_solver_delegates() {
+        let ds = synthetic::linreg(40, 5, &mut Pcg64::seeded(1));
+        let p = Problem::from_dataset(&ds, 2);
+        let solver = NativeSolver::new(&*p.losses[0]);
+        let q = vec![0.1; 5];
+        let a = solver.prox_argmin(&q, 2.0, &vec![0.0; 5]);
+        let b = p.losses[0].prox_argmin(&q, 2.0, &vec![0.0; 5]);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn manifest_parses() {
+        let doc = r#"{
+            "dtype": "f64",
+            "entries": [
+                {"entry": "linreg_prox", "m": 50, "d": 50, "file": "linreg_prox_m50_d50.hlo.txt"},
+                {"entry": "logreg_newton_step", "m": 30, "d": 34, "file": "logreg_m30_d34.hlo.txt"}
+            ]
+        }"#;
+        let v = json::parse(doc).unwrap();
+        let m = Manifest::from_json(Path::new("/tmp/artifacts"), &v).unwrap();
+        assert_eq!(m.dtype, "f64");
+        assert_eq!(m.entries.len(), 2);
+        let e = m.find("linreg_prox", 50, 50).unwrap();
+        assert_eq!(e.file, "linreg_prox_m50_d50.hlo.txt");
+        assert!(m.find("linreg_prox", 49, 50).is_none());
+        assert_eq!(
+            m.path_of(e),
+            PathBuf::from("/tmp/artifacts/linreg_prox_m50_d50.hlo.txt")
+        );
+    }
+
+    #[test]
+    fn manifest_rejects_malformed() {
+        let v = json::parse(r#"{"entries": []}"#).unwrap();
+        assert!(Manifest::from_json(Path::new("."), &v).is_err());
+        let v = json::parse(r#"{"dtype": "f64", "entries": [{"entry": "x"}]}"#).unwrap();
+        assert!(Manifest::from_json(Path::new("."), &v).is_err());
+    }
+}

@@ -1,0 +1,198 @@
+//! PJRT execution of the AOT artifacts.
+//!
+//! `python/compile/aot.py` lowers the JAX+Pallas subproblem solvers to HLO
+//! *text* (the interchange format that round-trips through xla_extension
+//! 0.5.1 — serialized protos from jax ≥ 0.5 carry 64-bit instruction ids it
+//! rejects). This module loads the text, compiles it on the PJRT CPU
+//! client, pins each worker's shard (X, y) as device buffers once, and
+//! serves `prox_argmin` by executing the compiled module — python is never
+//! on this path.
+//!
+//! Entry-point ABIs (all f64, `return_tuple=True`):
+//!
+//! * `linreg_prox(x[m,d], y[m], q[d], c[], w[]) -> (theta[d],)`
+//! * `logreg_newton_step(x[m,d], y[m], theta[d], q[d], c[], mu[], w[]) ->
+//!   (theta_new[d],)` — one full Newton step; the rust wrapper iterates to
+//!   convergence (warm starts make 2–4 steps typical).
+
+use super::{LocalSolver, Manifest};
+use crate::data::Task;
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+use std::rc::Rc;
+
+/// Wrapper around the PJRT CPU client plus a compiled-executable cache.
+pub struct PjrtContext {
+    client: xla::PjRtClient,
+    /// Cache keyed by artifact file name.
+    executables: HashMap<String, Rc<xla::PjRtLoadedExecutable>>,
+    pub manifest: Manifest,
+}
+
+impl PjrtContext {
+    /// Create a CPU PJRT client and attach the artifact manifest.
+    pub fn new(manifest: Manifest) -> Result<PjrtContext> {
+        if manifest.dtype != "f64" {
+            return Err(anyhow!(
+                "artifacts were lowered with dtype {} (expected f64)",
+                manifest.dtype
+            ));
+        }
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        log::info!(
+            "PJRT client up: platform={} devices={}",
+            client.platform_name(),
+            client.device_count()
+        );
+        Ok(PjrtContext {
+            client,
+            executables: HashMap::new(),
+            manifest,
+        })
+    }
+
+    /// Load + compile (or fetch from cache) the artifact for an entry/shape.
+    pub fn executable(
+        &mut self,
+        entry: &str,
+        m: usize,
+        d: usize,
+    ) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        let art = self
+            .manifest
+            .find(entry, m, d)
+            .ok_or_else(|| anyhow!("no artifact for {entry} with shape m={m} d={d}; re-run `make artifacts`"))?
+            .clone();
+        if let Some(exe) = self.executables.get(&art.file) {
+            return Ok(exe.clone());
+        }
+        let path = self.manifest.path_of(&art);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Rc::new(
+            self.client
+                .compile(&comp)
+                .with_context(|| format!("compiling {}", path.display()))?,
+        );
+        self.executables.insert(art.file.clone(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Build a per-worker solver for a shard. `task` picks the entry point.
+    pub fn solver_for_shard(
+        &mut self,
+        task: Task,
+        x: &crate::linalg::Matrix,
+        y: &[f64],
+        mu: f64,
+        weight: f64,
+    ) -> Result<PjrtShardSolver> {
+        let (m, d) = (x.rows, x.cols);
+        let entry = match task {
+            Task::LinearRegression => "linreg_prox",
+            Task::LogisticRegression => "logreg_newton_step",
+        };
+        let exe = self.executable(entry, m, d)?;
+        let x_lit = xla::Literal::vec1(&x.data)
+            .reshape(&[m as i64, d as i64])
+            .context("reshaping X literal")?;
+        let y_lit = xla::Literal::vec1(y);
+        Ok(PjrtShardSolver {
+            task,
+            exe,
+            x_lit,
+            y_lit,
+            d,
+            mu,
+            weight,
+        })
+    }
+
+    /// Check an artifact entry exists for every shard shape of a problem.
+    pub fn validate_for(&self, task: Task, shapes: &[(usize, usize)]) -> Result<()> {
+        let entry = match task {
+            Task::LinearRegression => "linreg_prox",
+            Task::LogisticRegression => "logreg_newton_step",
+        };
+        for &(m, d) in shapes {
+            if self.manifest.find(entry, m, d).is_none() {
+                return Err(anyhow!("missing artifact {entry} m={m} d={d}"));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Convergence control for the logistic Newton loop.
+const LOGREG_STEP_TOL: f64 = 1e-10;
+const LOGREG_MAX_STEPS: usize = 50;
+
+/// A single worker's PJRT-backed subproblem solver. Not `Send` (PJRT
+/// handles are thread-bound); see [`super::service`] for the multi-thread
+/// front-end.
+pub struct PjrtShardSolver {
+    task: Task,
+    exe: Rc<xla::PjRtLoadedExecutable>,
+    x_lit: xla::Literal,
+    y_lit: xla::Literal,
+    d: usize,
+    mu: f64,
+    weight: f64,
+}
+
+impl PjrtShardSolver {
+    fn run(&self, args: &[&xla::Literal]) -> Result<Vec<f64>> {
+        let result = self.exe.execute::<&xla::Literal>(args).context("PJRT execute")?[0][0]
+            .to_literal_sync()
+            .context("fetching result")?;
+        let out = result.to_tuple1().context("unwrapping result tuple")?;
+        Ok(out.to_vec::<f64>()?)
+    }
+
+    /// Execute the artifact for one prox solve.
+    pub fn prox(&self, q: &[f64], c: f64, warm: &[f64]) -> Result<Vec<f64>> {
+        assert_eq!(q.len(), self.d);
+        let q_lit = xla::Literal::vec1(q);
+        let c_lit = xla::Literal::scalar(c);
+        let w_lit = xla::Literal::scalar(self.weight);
+        match self.task {
+            Task::LinearRegression => {
+                self.run(&[&self.x_lit, &self.y_lit, &q_lit, &c_lit, &w_lit])
+            }
+            Task::LogisticRegression => {
+                let mu_lit = xla::Literal::scalar(self.mu);
+                let mut theta = warm.to_vec();
+                for _ in 0..LOGREG_MAX_STEPS {
+                    let t_lit = xla::Literal::vec1(&theta);
+                    let next = self.run(&[
+                        &self.x_lit,
+                        &self.y_lit,
+                        &t_lit,
+                        &q_lit,
+                        &c_lit,
+                        &mu_lit,
+                        &w_lit,
+                    ])?;
+                    let moved = crate::linalg::vector::dist2(&next, &theta);
+                    theta = next;
+                    if moved < LOGREG_STEP_TOL {
+                        break;
+                    }
+                }
+                Ok(theta)
+            }
+        }
+    }
+}
+
+/// Single-threaded `LocalSolver` adapter (sequential engines, tests). NOT
+/// `Send` — PJRT handles must stay on the thread that created the client;
+/// the coordinator path goes through [`super::service::PjrtService`].
+pub struct PjrtLocalSolver(pub PjrtShardSolver);
+
+impl LocalSolver for PjrtLocalSolver {
+    fn prox_argmin(&self, q: &[f64], c: f64, warm: &[f64]) -> Vec<f64> {
+        self.0.prox(q, c, warm).expect("PJRT solve failed")
+    }
+}

@@ -1,0 +1,148 @@
+//! PJRT device service: a dedicated thread owns the (thread-bound) PJRT
+//! client, compiled executables and pinned shard literals, and serves
+//! subproblem solves to the coordinator's worker threads over channels —
+//! the same shape as a process sharing one accelerator between workers.
+
+use super::pjrt::{PjrtContext, PjrtShardSolver};
+use super::{LocalSolver, Manifest};
+use crate::data::Shard;
+use crate::data::Task;
+use anyhow::Result;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::thread::JoinHandle;
+
+struct SolveRequest {
+    worker: usize,
+    q: Vec<f64>,
+    c: f64,
+    warm: Vec<f64>,
+    reply: Sender<Vec<f64>>,
+}
+
+/// Handle to a running device-service thread.
+pub struct PjrtService {
+    tx: Sender<SolveRequest>,
+    join: Option<JoinHandle<()>>,
+    n_workers: usize,
+}
+
+impl PjrtService {
+    /// Spawn the service: compiles one executable per distinct shard shape
+    /// and pins every worker's (X, y) on the service thread.
+    pub fn spawn(
+        manifest: Manifest,
+        task: Task,
+        shards: Vec<Shard>,
+        mu: f64,
+        weight: f64,
+    ) -> Result<PjrtService> {
+        let n_workers = shards.len();
+        let (tx, rx) = channel::<SolveRequest>();
+        // Fail fast on manifest mismatches before spawning.
+        {
+            let shapes: Vec<(usize, usize)> = shards
+                .iter()
+                .map(|s| (s.features.rows, s.features.cols))
+                .collect();
+            let entry = match task {
+                Task::LinearRegression => "linreg_prox",
+                Task::LogisticRegression => "logreg_newton_step",
+            };
+            for &(m, d) in &shapes {
+                if manifest.find(entry, m, d).is_none() {
+                    anyhow::bail!("missing artifact {entry} m={m} d={d}; run `make artifacts`");
+                }
+            }
+        }
+        let (ready_tx, ready_rx) = channel::<Result<(), String>>();
+        let join = std::thread::spawn(move || {
+            let init = || -> Result<Vec<PjrtShardSolver>> {
+                let mut ctx = PjrtContext::new(manifest)?;
+                let mut solvers = Vec::with_capacity(shards.len());
+                for s in &shards {
+                    solvers.push(ctx.solver_for_shard(task, &s.features, &s.targets, mu, weight)?);
+                }
+                Ok(solvers)
+            };
+            let solvers = match init() {
+                Ok(s) => {
+                    let _ = ready_tx.send(Ok(()));
+                    s
+                }
+                Err(e) => {
+                    let _ = ready_tx.send(Err(format!("{e:#}")));
+                    return;
+                }
+            };
+            // Serve until all request senders are dropped.
+            while let Ok(req) = rx.recv() {
+                let out = solvers[req.worker]
+                    .prox(&req.q, req.c, &req.warm)
+                    .expect("PJRT solve failed");
+                let _ = req.reply.send(out);
+            }
+        });
+        match ready_rx.recv() {
+            Ok(Ok(())) => Ok(PjrtService {
+                tx,
+                join: Some(join),
+                n_workers,
+            }),
+            Ok(Err(msg)) => {
+                let _ = join.join();
+                Err(anyhow::anyhow!(msg))
+            }
+            Err(_) => Err(anyhow::anyhow!("PJRT service thread died during init")),
+        }
+    }
+
+    /// A `Send` solver handle for worker `w`.
+    pub fn solver(&self, worker: usize) -> PjrtServiceSolver {
+        assert!(worker < self.n_workers);
+        PjrtServiceSolver {
+            worker,
+            tx: self.tx.clone(),
+        }
+    }
+
+    /// All worker handles at once (coordinator construction).
+    pub fn solvers(&self) -> Vec<Box<dyn LocalSolver + Send>> {
+        (0..self.n_workers)
+            .map(|w| Box::new(self.solver(w)) as Box<dyn LocalSolver + Send>)
+            .collect()
+    }
+}
+
+impl Drop for PjrtService {
+    fn drop(&mut self) {
+        // Close the request channel; service thread exits its recv loop.
+        let (dummy_tx, _) = channel();
+        let _ = std::mem::replace(&mut self.tx, dummy_tx);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+/// `Send` front-end: forwards solves to the service thread and blocks for
+/// the reply.
+pub struct PjrtServiceSolver {
+    worker: usize,
+    tx: Sender<SolveRequest>,
+}
+
+impl LocalSolver for PjrtServiceSolver {
+    fn prox_argmin(&self, q: &[f64], c: f64, warm: &[f64]) -> Vec<f64> {
+        let (reply_tx, reply_rx): (Sender<Vec<f64>>, Receiver<Vec<f64>>) = channel();
+        self.tx
+            .send(SolveRequest {
+                worker: self.worker,
+                q: q.to_vec(),
+                c,
+                warm: warm.to_vec(),
+                reply: reply_tx,
+            })
+            .expect("PJRT service alive");
+        reply_rx.recv().expect("PJRT service alive")
+    }
+}

@@ -1,0 +1,244 @@
+//! Logical chain construction (paper Appendix D).
+//!
+//! D-GADMM periodically rebuilds the logical chain over the physical
+//! workers: all workers share a pseudorandom code that selects the head
+//! set; heads broadcast pilots; tails report per-head link costs; every
+//! head then runs the same greedy nearest-neighbour strategy and therefore
+//! derives the *same* chain with no further coordination. Worker `0` is
+//! always the first head and worker `N−1` always the last tail, so the
+//! chain's ends are fixed (the paper's dynamic-setting assumption).
+//!
+//! Note: the paper's text says the shared code draws `N/2 − 2` indices and
+//! unions `{1}`, which yields `N/2 − 1` heads yet claims both groups have
+//! size `N/2`; we draw `N/2 − 1` indices so the groups are exactly equal,
+//! which is what Algorithm 1 requires.
+
+use super::LinkCosts;
+use crate::util::rng::Pcg64;
+
+/// A logical chain: `order[p]` is the physical worker at chain position `p`.
+/// Even positions form the head group, odd positions the tail group
+/// (Algorithm 1 line 3 after re-indexing along the chain).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Chain {
+    pub order: Vec<usize>,
+}
+
+impl Chain {
+    /// The identity chain 0–1–2–…–(N−1) (static GADMM default).
+    pub fn sequential(n: usize) -> Chain {
+        Chain {
+            order: (0..n).collect(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.order.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.order.is_empty()
+    }
+
+    /// Inverse map: position of each physical worker.
+    pub fn positions(&self) -> Vec<usize> {
+        let mut pos = vec![0; self.order.len()];
+        for (p, &w) in self.order.iter().enumerate() {
+            pos[w] = p;
+        }
+        pos
+    }
+
+    /// Is the worker at position `p` in the head group?
+    pub fn is_head_position(p: usize) -> bool {
+        p % 2 == 0
+    }
+
+    /// Physical neighbours (left, right) of the worker at position `p`.
+    pub fn neighbors(&self, p: usize) -> (Option<usize>, Option<usize>) {
+        let left = if p > 0 { Some(self.order[p - 1]) } else { None };
+        let right = if p + 1 < self.order.len() {
+            Some(self.order[p + 1])
+        } else {
+            None
+        };
+        (left, right)
+    }
+
+    /// Sum of link costs along the chain (chain quality metric).
+    pub fn total_cost(&self, costs: &dyn LinkCosts) -> f64 {
+        self.order
+            .windows(2)
+            .map(|w| costs.link(w[0], w[1]))
+            .sum()
+    }
+
+    /// Validity: a permutation of 0..N with fixed ends.
+    pub fn is_valid_permutation(&self) -> bool {
+        let n = self.order.len();
+        let mut seen = vec![false; n];
+        for &w in &self.order {
+            if w >= n || seen[w] {
+                return false;
+            }
+            seen[w] = true;
+        }
+        true
+    }
+}
+
+/// Draw the head set with the shared pseudorandom code: worker 0 plus
+/// `N/2 − 1` distinct indices from {1, …, N−2}. Worker N−1 is always a tail.
+pub fn draw_heads(n: usize, rng: &mut Pcg64) -> Vec<usize> {
+    assert!(n >= 2 && n % 2 == 0, "GADMM requires an even worker count");
+    let mut heads = vec![0usize];
+    let middle = rng.sample_indices(n - 2, n / 2 - 1);
+    heads.extend(middle.into_iter().map(|i| i + 1));
+    heads.sort_unstable();
+    heads
+}
+
+/// Greedy chain construction (Appendix D): starting from worker 0, link the
+/// cheapest remaining tail, then from that tail the cheapest remaining head,
+/// alternating until all workers are placed. Worker `N−1` is reserved as the
+/// final tail so the chain's ends stay fixed.
+pub fn greedy_chain(n: usize, heads: &[usize], costs: &dyn LinkCosts) -> Chain {
+    assert!(n % 2 == 0);
+    assert_eq!(heads.len(), n / 2, "need exactly N/2 heads");
+    assert!(heads.contains(&0), "worker 0 must be a head");
+    assert!(!heads.contains(&(n - 1)), "worker N−1 must be a tail");
+
+    let is_head = {
+        let mut v = vec![false; n];
+        for &h in heads {
+            v[h] = true;
+        }
+        v
+    };
+    let mut head_pool: Vec<usize> = heads.iter().copied().filter(|&h| h != 0).collect();
+    let mut tail_pool: Vec<usize> = (0..n).filter(|&w| !is_head[w] && w != n - 1).collect();
+
+    let mut order = Vec::with_capacity(n);
+    order.push(0usize);
+    let mut cur = 0usize;
+    let mut next_is_tail = true;
+    while order.len() < n {
+        let pool = if next_is_tail { &mut tail_pool } else { &mut head_pool };
+        let pick_idx = if pool.is_empty() {
+            // Only the reserved final tail remains.
+            debug_assert!(next_is_tail && order.len() == n - 1);
+            None
+        } else {
+            Some(
+                (0..pool.len())
+                    .min_by(|&a, &b| {
+                        costs
+                            .link(cur, pool[a])
+                            .partial_cmp(&costs.link(cur, pool[b]))
+                            .unwrap()
+                    })
+                    .unwrap(),
+            )
+        };
+        let next = match pick_idx {
+            Some(i) => pool.swap_remove(i),
+            None => n - 1,
+        };
+        order.push(next);
+        cur = next;
+        next_is_tail = !next_is_tail;
+    }
+    let chain = Chain { order };
+    debug_assert!(chain.is_valid_permutation());
+    chain
+}
+
+/// One full Appendix-D re-chain: draw heads with the shared code, then run
+/// the greedy construction against the physical link costs.
+pub fn rechain(n: usize, costs: &dyn LinkCosts, rng: &mut Pcg64) -> Chain {
+    let heads = draw_heads(n, rng);
+    greedy_chain(n, &heads, costs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::{EnergyCostModel, Placement, UnitCosts};
+
+    #[test]
+    fn sequential_chain() {
+        let c = Chain::sequential(6);
+        assert_eq!(c.order, vec![0, 1, 2, 3, 4, 5]);
+        assert_eq!(c.neighbors(0), (None, Some(1)));
+        assert_eq!(c.neighbors(5), (Some(4), None));
+        assert_eq!(c.neighbors(3), (Some(2), Some(4)));
+        assert!(Chain::is_head_position(0));
+        assert!(!Chain::is_head_position(1));
+    }
+
+    #[test]
+    fn draw_heads_properties() {
+        let mut rng = Pcg64::seeded(5);
+        for n in [4usize, 14, 24, 50] {
+            let heads = draw_heads(n, &mut rng);
+            assert_eq!(heads.len(), n / 2);
+            assert!(heads.contains(&0));
+            assert!(!heads.contains(&(n - 1)));
+            let mut h = heads.clone();
+            h.dedup();
+            assert_eq!(h.len(), n / 2, "duplicate heads");
+        }
+    }
+
+    #[test]
+    fn greedy_chain_is_valid_and_alternating() {
+        let mut rng = Pcg64::seeded(7);
+        let placement = Placement::random(24, 10.0, &mut rng);
+        let costs = EnergyCostModel::new(&placement, placement.central_worker());
+        let heads = draw_heads(24, &mut rng);
+        let chain = greedy_chain(24, &heads, &costs);
+        assert!(chain.is_valid_permutation());
+        assert_eq!(chain.order[0], 0);
+        assert_eq!(*chain.order.last().unwrap(), 23);
+        // Even positions are heads, odd positions tails.
+        for (p, &w) in chain.order.iter().enumerate() {
+            let in_heads = heads.contains(&w);
+            assert_eq!(in_heads, p % 2 == 0, "position {p} worker {w}");
+        }
+    }
+
+    #[test]
+    fn greedy_beats_identity_on_energy() {
+        // The greedy construction should usually pick cheaper chains than
+        // the arbitrary identity order on a random placement.
+        let mut wins = 0;
+        for seed in 0..20u64 {
+            let mut rng = Pcg64::seeded(seed);
+            let placement = Placement::random(16, 10.0, &mut rng);
+            let costs = EnergyCostModel::new(&placement, placement.central_worker());
+            let chain = rechain(16, &costs, &mut rng);
+            if chain.total_cost(&costs) <= Chain::sequential(16).total_cost(&costs) {
+                wins += 1;
+            }
+        }
+        assert!(wins >= 15, "greedy won only {wins}/20");
+    }
+
+    #[test]
+    fn unit_cost_chain_total() {
+        let c = Chain::sequential(10);
+        assert_eq!(c.total_cost(&UnitCosts), 9.0);
+    }
+
+    #[test]
+    fn positions_inverse() {
+        let mut rng = Pcg64::seeded(11);
+        let placement = Placement::random(8, 10.0, &mut rng);
+        let costs = EnergyCostModel::new(&placement, 0);
+        let chain = rechain(8, &costs, &mut rng);
+        let pos = chain.positions();
+        for w in 0..8 {
+            assert_eq!(chain.order[pos[w]], w);
+        }
+    }
+}

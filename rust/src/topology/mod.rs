@@ -1,0 +1,270 @@
+//! Physical and logical topologies.
+//!
+//! * [`Placement`] — workers dropped uniformly at random in a square area
+//!   (paper: 10×10 m² for Fig. 6, 250×250 m² for Figs. 7–8).
+//! * [`EnergyCostModel`] — the paper's Shannon-formula free-space link cost:
+//!   the energy a transmitter spends to sustain `R = 10 Mbps` over a link of
+//!   distance `d` with bandwidth `B = 2 MHz` and noise density `N₀ = 1e−6`:
+//!   `P = d² · N₀ · B · (2^(R/B) − 1)`.
+//! * [`chain`] — the Appendix-D decentralized logical-chain construction
+//!   (pseudorandom head set + greedy nearest-neighbour chaining), used by
+//!   GADMM at startup and by D-GADMM at every re-chain.
+//! * [`LinkCosts`] — the cost oracle the communication meter consults;
+//!   unit-cost and energy-model implementations.
+
+pub mod chain;
+
+use crate::util::rng::Pcg64;
+
+/// Physical positions of N workers in a square area.
+#[derive(Clone, Debug)]
+pub struct Placement {
+    pub side: f64,
+    pub positions: Vec<(f64, f64)>,
+}
+
+impl Placement {
+    /// Uniform random placement of `n` workers in a `side × side` square.
+    pub fn random(n: usize, side: f64, rng: &mut Pcg64) -> Placement {
+        let positions = (0..n)
+            .map(|_| (rng.uniform(0.0, side), rng.uniform(0.0, side)))
+            .collect();
+        Placement { side, positions }
+    }
+
+    pub fn len(&self) -> usize {
+        self.positions.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.positions.is_empty()
+    }
+
+    pub fn distance(&self, a: usize, b: usize) -> f64 {
+        let (xa, ya) = self.positions[a];
+        let (xb, yb) = self.positions[b];
+        ((xa - xb).powi(2) + (ya - yb).powi(2)).sqrt()
+    }
+
+    /// The worker closest to the area's center — the paper's choice of
+    /// central controller for centralized baselines.
+    pub fn central_worker(&self) -> usize {
+        let c = self.side / 2.0;
+        (0..self.len())
+            .min_by(|&a, &b| {
+                let da = (self.positions[a].0 - c).powi(2) + (self.positions[a].1 - c).powi(2);
+                let db = (self.positions[b].0 - c).powi(2) + (self.positions[b].1 - c).powi(2);
+                da.partial_cmp(&db).unwrap()
+            })
+            .expect("non-empty placement")
+    }
+}
+
+/// Link-cost oracle consulted by the communication meter.
+pub trait LinkCosts: Send + Sync {
+    /// Cost for worker `from` to transmit to worker `to`.
+    fn link(&self, from: usize, to: usize) -> f64;
+    /// Cost for worker `n` to unicast to the central controller.
+    fn uplink(&self, n: usize) -> f64;
+    /// Cost for the central controller to broadcast to all workers (the
+    /// weakest-channel worker is the bottleneck — paper §3).
+    fn server_broadcast(&self) -> f64;
+}
+
+/// Unit costs: every transmission costs 1 (Table 1, Figs. 2–5 setting
+/// `L_{n,t}^m = L_{n,t}^c = L_{BC,t}^c = 1`).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct UnitCosts;
+
+impl LinkCosts for UnitCosts {
+    fn link(&self, _from: usize, _to: usize) -> f64 {
+        1.0
+    }
+    fn uplink(&self, _n: usize) -> f64 {
+        1.0
+    }
+    fn server_broadcast(&self) -> f64 {
+        1.0
+    }
+}
+
+/// The paper's free-space energy model (Fig. 6): energy to sustain the
+/// target rate over each link.
+#[derive(Clone, Debug)]
+pub struct EnergyCostModel {
+    /// Pairwise worker→worker energies.
+    link_energy: Vec<f64>,
+    /// Worker→server energies.
+    uplink_energy: Vec<f64>,
+    /// Server broadcast energy (max over downlinks).
+    broadcast_energy: f64,
+    n: usize,
+}
+
+/// Paper constants: rate 10 Mbps, bandwidth 2 MHz, noise density 1e−6.
+pub const RATE_BPS: f64 = 10e6;
+pub const BANDWIDTH_HZ: f64 = 2e6;
+pub const NOISE_DENSITY: f64 = 1e-6;
+
+/// Transmit power (≡ energy per unit slot) needed for `RATE_BPS` over
+/// distance `d`, from `R = B log₂(P / (d² N₀ B))`:
+/// `P = d² · N₀ · B · 2^(R/B)`.
+pub fn tx_energy(distance: f64) -> f64 {
+    let snr = 2f64.powf(RATE_BPS / BANDWIDTH_HZ);
+    // Clamp tiny distances: two workers at the same point still spend the
+    // receiver-noise-floor energy.
+    let d2 = distance.max(1e-3).powi(2);
+    d2 * NOISE_DENSITY * BANDWIDTH_HZ * snr
+}
+
+impl EnergyCostModel {
+    pub fn new(placement: &Placement, server: usize) -> EnergyCostModel {
+        let n = placement.len();
+        let mut link_energy = vec![0.0; n * n];
+        for a in 0..n {
+            for b in 0..n {
+                if a != b {
+                    link_energy[a * n + b] = tx_energy(placement.distance(a, b));
+                }
+            }
+        }
+        let uplink_energy: Vec<f64> = (0..n)
+            .map(|w| {
+                if w == server {
+                    0.0
+                } else {
+                    tx_energy(placement.distance(w, server))
+                }
+            })
+            .collect();
+        let broadcast_energy = uplink_energy.iter().cloned().fold(0.0, f64::max);
+        EnergyCostModel {
+            link_energy,
+            uplink_energy,
+            broadcast_energy,
+            n,
+        }
+    }
+}
+
+impl LinkCosts for EnergyCostModel {
+    fn link(&self, from: usize, to: usize) -> f64 {
+        self.link_energy[from * self.n + to]
+    }
+    fn uplink(&self, n: usize) -> f64 {
+        self.uplink_energy[n]
+    }
+    fn server_broadcast(&self) -> f64 {
+        self.broadcast_energy
+    }
+}
+
+/// Time-varying link costs for the paper's dynamic-network experiments
+/// (Fig. 7): the experiment driver swaps the inner energy model whenever
+/// the workers move (every "system coherence time"), while engines hold a
+/// stable `&dyn LinkCosts`.
+pub struct DynamicCosts {
+    inner: std::sync::Mutex<EnergyCostModel>,
+}
+
+impl DynamicCosts {
+    pub fn new(model: EnergyCostModel) -> DynamicCosts {
+        DynamicCosts {
+            inner: std::sync::Mutex::new(model),
+        }
+    }
+
+    /// Replace the physical topology (workers moved).
+    pub fn swap(&self, model: EnergyCostModel) {
+        *self.inner.lock().unwrap() = model;
+    }
+}
+
+impl LinkCosts for DynamicCosts {
+    fn link(&self, from: usize, to: usize) -> f64 {
+        self.inner.lock().unwrap().link(from, to)
+    }
+    fn uplink(&self, n: usize) -> f64 {
+        self.inner.lock().unwrap().uplink(n)
+    }
+    fn server_broadcast(&self) -> f64 {
+        self.inner.lock().unwrap().server_broadcast()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dynamic_costs_swap_visible() {
+        let mut rng = Pcg64::seeded(4);
+        let p1 = Placement::random(4, 10.0, &mut rng);
+        let p2 = Placement::random(4, 200.0, &mut rng);
+        let dyn_costs = DynamicCosts::new(EnergyCostModel::new(&p1, 0));
+        let before = dyn_costs.link(1, 2);
+        dyn_costs.swap(EnergyCostModel::new(&p2, 0));
+        let after = dyn_costs.link(1, 2);
+        assert_ne!(before, after);
+    }
+
+    #[test]
+    fn placement_in_bounds_and_deterministic() {
+        let mut rng = Pcg64::seeded(1);
+        let p = Placement::random(24, 10.0, &mut rng);
+        assert_eq!(p.len(), 24);
+        for &(x, y) in &p.positions {
+            assert!((0.0..10.0).contains(&x) && (0.0..10.0).contains(&y));
+        }
+        let p2 = Placement::random(24, 10.0, &mut Pcg64::seeded(1));
+        assert_eq!(p.positions, p2.positions);
+    }
+
+    #[test]
+    fn distance_symmetric() {
+        let p = Placement::random(10, 5.0, &mut Pcg64::seeded(2));
+        for a in 0..10 {
+            for b in 0..10 {
+                assert!((p.distance(a, b) - p.distance(b, a)).abs() < 1e-12);
+            }
+        }
+        assert_eq!(p.distance(3, 3), 0.0);
+    }
+
+    #[test]
+    fn central_worker_is_closest_to_center() {
+        let p = Placement {
+            side: 10.0,
+            positions: vec![(0.0, 0.0), (5.1, 5.2), (9.0, 9.0)],
+        };
+        assert_eq!(p.central_worker(), 1);
+    }
+
+    #[test]
+    fn energy_grows_with_distance() {
+        assert!(tx_energy(2.0) > tx_energy(1.0));
+        assert!((tx_energy(2.0) / tx_energy(1.0) - 4.0).abs() < 1e-9); // d² law
+    }
+
+    #[test]
+    fn energy_model_consistency() {
+        let p = Placement::random(8, 10.0, &mut Pcg64::seeded(3));
+        let server = p.central_worker();
+        let m = EnergyCostModel::new(&p, server);
+        // Symmetric free-space links.
+        assert!((m.link(1, 2) - m.link(2, 1)).abs() < 1e-12);
+        // Broadcast is the max uplink (weakest channel bottleneck).
+        let max_up = (0..8).map(|w| m.uplink(w)).fold(0.0, f64::max);
+        assert_eq!(m.server_broadcast(), max_up);
+        // Server's own uplink is free.
+        assert_eq!(m.uplink(server), 0.0);
+    }
+
+    #[test]
+    fn unit_costs_are_one() {
+        let u = UnitCosts;
+        assert_eq!(u.link(0, 5), 1.0);
+        assert_eq!(u.uplink(3), 1.0);
+        assert_eq!(u.server_broadcast(), 1.0);
+    }
+}

@@ -1,0 +1,124 @@
+//! Micro/macro bench harness (criterion is unavailable offline).
+//!
+//! All `cargo bench` targets (`rust/benches/*.rs`, `harness = false`) use
+//! this: warmup, fixed-count timed runs, and a mean/p50/p95 report. For the
+//! paper reproduction the benches additionally print the paper-style tables
+//! via `util::table`.
+
+use std::time::{Duration, Instant};
+
+/// Result of timing a closure repeatedly.
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub name: String,
+    pub samples: Vec<Duration>,
+}
+
+impl BenchStats {
+    pub fn mean(&self) -> Duration {
+        let total: Duration = self.samples.iter().sum();
+        total / self.samples.len() as u32
+    }
+
+    fn sorted_ns(&self) -> Vec<u128> {
+        let mut v: Vec<u128> = self.samples.iter().map(|d| d.as_nanos()).collect();
+        v.sort_unstable();
+        v
+    }
+
+    pub fn percentile(&self, p: f64) -> Duration {
+        let v = self.sorted_ns();
+        let idx = ((v.len() as f64 - 1.0) * p / 100.0).round() as usize;
+        Duration::from_nanos(v[idx] as u64)
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} mean {:>12} p50 {:>12} p95 {:>12} ({} samples)",
+            self.name,
+            fmt_dur(self.mean()),
+            fmt_dur(self.percentile(50.0)),
+            fmt_dur(self.percentile(95.0)),
+            self.samples.len()
+        )
+    }
+}
+
+/// Human-readable duration.
+pub fn fmt_dur(d: Duration) -> String {
+    let ns = d.as_nanos();
+    if ns < 1_000 {
+        format!("{ns} ns")
+    } else if ns < 1_000_000 {
+        format!("{:.2} µs", ns as f64 / 1e3)
+    } else if ns < 1_000_000_000 {
+        format!("{:.2} ms", ns as f64 / 1e6)
+    } else {
+        format!("{:.3} s", ns as f64 / 1e9)
+    }
+}
+
+/// Time `f` with `warmup` untimed runs followed by `samples` timed runs.
+/// The closure's return value is black-boxed to keep the work alive.
+pub fn bench<T>(name: &str, warmup: usize, samples: usize, mut f: impl FnMut() -> T) -> BenchStats {
+    for _ in 0..warmup {
+        black_box(f());
+    }
+    let mut out = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t0 = Instant::now();
+        black_box(f());
+        out.push(t0.elapsed());
+    }
+    BenchStats {
+        name: name.to_string(),
+        samples: out,
+    }
+}
+
+/// Adaptive variant: keeps sampling until `min_time` has elapsed (at least
+/// 3 samples), for closures whose cost is unknown upfront.
+pub fn bench_for<T>(name: &str, min_time: Duration, mut f: impl FnMut() -> T) -> BenchStats {
+    black_box(f()); // warmup
+    let start = Instant::now();
+    let mut samples = Vec::new();
+    while samples.len() < 3 || start.elapsed() < min_time {
+        let t0 = Instant::now();
+        black_box(f());
+        samples.push(t0.elapsed());
+        if samples.len() > 100_000 {
+            break;
+        }
+    }
+    BenchStats {
+        name: name.to_string(),
+        samples,
+    }
+}
+
+/// Prevent the optimizer from discarding a value (std::hint::black_box).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_collects_samples() {
+        let stats = bench("noop-sum", 2, 10, || (0..100u64).sum::<u64>());
+        assert_eq!(stats.samples.len(), 10);
+        assert!(stats.mean() > Duration::ZERO);
+        assert!(stats.percentile(95.0) >= stats.percentile(50.0));
+        assert!(stats.report().contains("noop-sum"));
+    }
+
+    #[test]
+    fn duration_formatting() {
+        assert_eq!(fmt_dur(Duration::from_nanos(500)), "500 ns");
+        assert!(fmt_dur(Duration::from_micros(1500)).contains("ms"));
+        assert!(fmt_dur(Duration::from_secs(2)).contains("s"));
+    }
+}

@@ -1,0 +1,152 @@
+//! Tiny declarative CLI argument parser (clap is unavailable offline).
+//!
+//! Supports `prog <subcommand> [--flag] [--key value] [--key=value]
+//! [positional...]` which is all the `gadmm` binary, examples, and bench
+//! harnesses need.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: subcommand, key/value options, boolean flags, and
+/// positional arguments.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an explicit token list (first token must NOT be argv[0]).
+    pub fn parse_tokens<I: IntoIterator<Item = String>>(tokens: I, known_flags: &[&str]) -> Result<Args, String> {
+        let mut args = Args::default();
+        let mut iter = tokens.into_iter().peekable();
+        while let Some(tok) = iter.next() {
+            if let Some(body) = tok.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    args.opts.insert(k.to_string(), v.to_string());
+                } else if known_flags.contains(&body) {
+                    args.flags.push(body.to_string());
+                } else {
+                    let v = iter
+                        .next()
+                        .ok_or_else(|| format!("option --{body} expects a value"))?;
+                    args.opts.insert(body.to_string(), v);
+                }
+            } else if args.subcommand.is_none() && args.positional.is_empty() {
+                args.subcommand = Some(tok);
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        Ok(args)
+    }
+
+    /// Parse from the process environment.
+    pub fn from_env(known_flags: &[&str]) -> Result<Args, String> {
+        Args::parse_tokens(std::env::args().skip(1), known_flags)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_string(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("--{name} expects an integer, got '{v}'")),
+        }
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> Result<u64, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("--{name} expects an integer, got '{v}'")),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("--{name} expects a number, got '{v}'")),
+        }
+    }
+
+    /// Comma-separated list of floats, e.g. `--rho 3,5,7`.
+    pub fn get_f64_list(&self, name: &str, default: &[f64]) -> Result<Vec<f64>, String> {
+        match self.get(name) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|s| {
+                    s.trim()
+                        .parse()
+                        .map_err(|_| format!("--{name} expects comma-separated numbers, got '{s}'"))
+                })
+                .collect(),
+        }
+    }
+
+    /// Comma-separated list of integers, e.g. `--workers 14,20,24,26`.
+    pub fn get_usize_list(&self, name: &str, default: &[usize]) -> Result<Vec<usize>, String> {
+        match self.get(name) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|s| {
+                    s.trim()
+                        .parse()
+                        .map_err(|_| format!("--{name} expects comma-separated integers, got '{s}'"))
+                })
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toks(s: &str) -> Vec<String> {
+        s.split_whitespace().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = Args::parse_tokens(toks("fig2 --rho 3,5,7 --workers=24 --verbose out.csv"), &["verbose"]).unwrap();
+        assert_eq!(a.subcommand.as_deref(), Some("fig2"));
+        assert_eq!(a.get_f64_list("rho", &[]).unwrap(), vec![3.0, 5.0, 7.0]);
+        assert_eq!(a.get_usize("workers", 0).unwrap(), 24);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["out.csv"]);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = Args::parse_tokens(toks("table1"), &[]).unwrap();
+        assert_eq!(a.get_usize("iters", 500).unwrap(), 500);
+        assert_eq!(a.get_f64("rho", 1.0).unwrap(), 1.0);
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(Args::parse_tokens(toks("run --rho"), &[]).is_err());
+        let a = Args::parse_tokens(toks("run --rho x"), &[]).unwrap();
+        assert!(a.get_f64("rho", 1.0).is_err());
+    }
+}

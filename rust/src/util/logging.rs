@@ -1,0 +1,69 @@
+//! Minimal leveled logger backing the `log` facade.
+//!
+//! `GADMM_LOG={error,warn,info,debug,trace}` controls verbosity (default
+//! `info`). Output goes to stderr with elapsed-time stamps so training logs
+//! read like a real launcher's.
+
+use log::{Level, LevelFilter, Metadata, Record};
+use std::sync::OnceLock;
+use std::time::Instant;
+
+struct StderrLogger {
+    start: Instant,
+}
+
+impl log::Log for StderrLogger {
+    fn enabled(&self, metadata: &Metadata) -> bool {
+        metadata.level() <= log::max_level()
+    }
+
+    fn log(&self, record: &Record) {
+        if !self.enabled(record.metadata()) {
+            return;
+        }
+        let t = self.start.elapsed();
+        let lvl = match record.level() {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        };
+        eprintln!(
+            "[{:>8.3}s {} {}] {}",
+            t.as_secs_f64(),
+            lvl,
+            record.target(),
+            record.args()
+        );
+    }
+
+    fn flush(&self) {}
+}
+
+static LOGGER: OnceLock<StderrLogger> = OnceLock::new();
+
+/// Install the logger (idempotent).
+pub fn init() {
+    let logger = LOGGER.get_or_init(|| StderrLogger { start: Instant::now() });
+    if log::set_logger(logger).is_ok() {
+        let level = match std::env::var("GADMM_LOG").as_deref() {
+            Ok("error") => LevelFilter::Error,
+            Ok("warn") => LevelFilter::Warn,
+            Ok("debug") => LevelFilter::Debug,
+            Ok("trace") => LevelFilter::Trace,
+            _ => LevelFilter::Info,
+        };
+        log::set_max_level(level);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn init_is_idempotent() {
+        super::init();
+        super::init();
+        log::info!("logger smoke test");
+    }
+}

@@ -1,0 +1,11 @@
+//! Substrate utilities built from scratch for the offline environment:
+//! PRNG, JSON, CLI parsing, tables, a bench harness, a property-test
+//! harness, and logging. See DESIGN.md §Substitutions.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod logging;
+pub mod prop;
+pub mod rng;
+pub mod table;

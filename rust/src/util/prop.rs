@@ -1,0 +1,89 @@
+//! Mini property-testing harness (proptest is unavailable offline).
+//!
+//! `check` draws `cases` random inputs from a generator and asserts a
+//! property on each; the first failing case is reported with its case index
+//! and the RNG seed so it can be replayed deterministically. Used by
+//! `rust/tests/properties.rs` for coordinator/optimizer invariants.
+
+use super::rng::Pcg64;
+
+/// Outcome of a property over one input. `Err` carries a human-readable
+/// description of the violation.
+pub type PropResult = Result<(), String>;
+
+/// Run `prop` over `cases` inputs drawn by `gen`. Panics (test failure) with
+/// a replayable report on the first violation.
+pub fn check<T: std::fmt::Debug>(
+    name: &str,
+    seed: u64,
+    cases: usize,
+    mut gen: impl FnMut(&mut Pcg64) -> T,
+    mut prop: impl FnMut(&T) -> PropResult,
+) {
+    let mut rng = Pcg64::seeded(seed);
+    for case in 0..cases {
+        // Fork per-case so a failing case is reproducible from (seed, case)
+        // without replaying earlier draws.
+        let mut case_rng = Pcg64::new(seed.wrapping_add(case as u64), 0x70726f70);
+        let _ = rng.next_u64();
+        let input = gen(&mut case_rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property '{name}' violated at case {case}/{cases} (seed {seed}):\n  {msg}\n  input: {input:?}"
+            );
+        }
+    }
+}
+
+/// Assert helper producing `PropResult`.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)+) => {
+        if !($cond) {
+            return Err(format!($($fmt)+));
+        }
+    };
+}
+
+/// Approximate float equality helper for properties.
+pub fn close(a: f64, b: f64, tol: f64) -> PropResult {
+    if (a - b).abs() <= tol * (1.0 + a.abs().max(b.abs())) {
+        Ok(())
+    } else {
+        Err(format!("{a} != {b} (tol {tol})"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property() {
+        check(
+            "square-nonneg",
+            42,
+            200,
+            |rng| rng.normal(),
+            |x| {
+                if x * x >= 0.0 {
+                    Ok(())
+                } else {
+                    Err("negative square".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails' violated")]
+    fn failing_property_panics() {
+        check("always-fails", 1, 10, |rng| rng.next_u64(), |_| Err("boom".into()));
+    }
+
+    #[test]
+    fn close_tolerance() {
+        assert!(close(1.0, 1.0 + 1e-12, 1e-9).is_ok());
+        assert!(close(1.0, 1.1, 1e-9).is_err());
+    }
+}

@@ -1,0 +1,189 @@
+//! Cross-module integration: every algorithm on shared problems, TC
+//! accounting arithmetic, experiment drivers, and config plumbing.
+
+use gadmm::config::{DatasetKind, RunConfig};
+use gadmm::data::synthetic;
+use gadmm::model::Problem;
+use gadmm::optim::{
+    run, Admm, Dgadmm, Dgd, DualAvg, Gadmm, Gd, Iag, IagOrder, Lag, LagVariant, RechainMode,
+    RunOptions,
+};
+use gadmm::topology::{EnergyCostModel, Placement, UnitCosts};
+use gadmm::util::rng::Pcg64;
+
+fn linreg_problem(n: usize) -> Problem {
+    let ds = synthetic::linreg(240, 10, &mut Pcg64::seeded(11));
+    Problem::from_dataset(&ds, n)
+}
+
+fn logreg_problem(n: usize) -> Problem {
+    let ds = synthetic::logreg(240, 8, &mut Pcg64::seeded(12));
+    Problem::from_dataset(&ds, n)
+}
+
+#[test]
+fn every_algorithm_converges_on_linreg() {
+    let p = linreg_problem(6);
+    let costs = UnitCosts;
+    let opts = RunOptions::with_target(1e-4, 300_000);
+    let n = p.num_workers() as f64;
+
+    let gadmm = run(&mut Gadmm::new(&p, 3.0), &p, &costs, &opts);
+    let admm = run(&mut Admm::new(&p, 3.0), &p, &costs, &opts);
+    let gd = run(&mut Gd::new(&p), &p, &costs, &opts);
+    let lag_wk = run(&mut Lag::new(&p, LagVariant::Wk), &p, &costs, &opts);
+    let lag_ps = run(&mut Lag::new(&p, LagVariant::Ps), &p, &costs, &opts);
+    let iag = run(&mut Iag::new(&p, IagOrder::Cyclic, 1), &p, &costs, &opts);
+    let riag = run(&mut Iag::new(&p, IagOrder::RandomWeighted, 1), &p, &costs, &opts);
+
+    for t in [&gadmm, &admm, &gd, &lag_wk, &lag_ps, &iag, &riag] {
+        assert!(
+            t.iters_to_target().is_some(),
+            "{} did not converge (final {:.3e})",
+            t.algorithm,
+            t.final_error()
+        );
+    }
+    // TC structure: GADMM pays N per iteration, GD pays N+1, IAG pays 2.
+    let k = gadmm.iters_to_target().unwrap() as f64;
+    assert_eq!(gadmm.tc_to_target(), Some(k * n));
+    let kg = gd.iters_to_target().unwrap() as f64;
+    assert_eq!(gd.tc_to_target(), Some(kg * (n + 1.0)));
+    let ki = iag.iters_to_target().unwrap() as f64;
+    assert_eq!(iag.tc_to_target(), Some(ki * 2.0));
+    // LAG-WK undercuts GD's TC even on this small instance.
+    assert!(lag_wk.tc_to_target().unwrap() < gd.tc_to_target().unwrap());
+}
+
+#[test]
+fn gadmm_beats_gd_by_orders_of_magnitude_at_paper_conditioning() {
+    // The paper's headline (Fig. 2 / Table 1) needs the ill-conditioned
+    // design; on a mid-size instance with κ = 3000 GADMM's ADMM-type rate
+    // (~√κ) crushes GD's κ-limited rate.
+    let ds = synthetic::linreg_cond(480, 24, 3000.0, &mut Pcg64::seeded(21));
+    let p = Problem::from_dataset(&ds, 12);
+    let costs = UnitCosts;
+    let opts = RunOptions::with_target(1e-4, 300_000);
+    let gadmm = run(&mut Gadmm::new(&p, 3.0), &p, &costs, &opts);
+    let gd = run(&mut Gd::new(&p), &p, &costs, &opts);
+    let k = gadmm.iters_to_target().expect("GADMM converges") as f64;
+    let kg = gd.iters_to_target().expect("GD converges") as f64;
+    assert!(k * 5.0 < kg, "GADMM {k} not ≪ GD {kg}");
+    assert!(
+        gadmm.tc_to_target().unwrap() < gd.tc_to_target().unwrap(),
+        "GADMM TC not below GD TC"
+    );
+}
+
+#[test]
+fn every_algorithm_converges_or_progresses_on_logreg() {
+    let p = logreg_problem(4);
+    let costs = UnitCosts;
+    let opts = RunOptions::with_target(1e-4, 300_000);
+    for (name, trace) in [
+        ("gadmm", run(&mut Gadmm::new(&p, 0.3), &p, &costs, &opts)),
+        ("admm", run(&mut Admm::new(&p, 0.3), &p, &costs, &opts)),
+        ("gd", run(&mut Gd::new(&p), &p, &costs, &opts)),
+        ("lag-wk", run(&mut Lag::new(&p, LagVariant::Wk), &p, &costs, &opts)),
+    ] {
+        assert!(
+            trace.iters_to_target().is_some(),
+            "{name} did not converge (final {:.3e})",
+            trace.final_error()
+        );
+    }
+    // The diminishing-step decentralized baselines only need to make
+    // substantial progress within the budget (they are O(1/√k)).
+    let dgd = run(&mut Dgd::new(&p), &p, &costs, &RunOptions::with_target(1e-4, 20_000));
+    let da = run(&mut DualAvg::new(&p), &p, &costs, &RunOptions::with_target(1e-4, 20_000));
+    for (name, t) in [("dgd", dgd), ("dualavg", da)] {
+        let drop = t.records.first().unwrap().obj_err / t.final_error().max(1e-300);
+        assert!(
+            t.iters_to_target().is_some() || drop > 10.0,
+            "{name} made no progress ({:.3e} → {:.3e})",
+            t.records.first().unwrap().obj_err,
+            t.final_error()
+        );
+    }
+}
+
+#[test]
+fn dgadmm_tracks_gadmm_on_both_tasks() {
+    let costs = UnitCosts;
+    for (p, rho) in [(linreg_problem(6), 3.0), (logreg_problem(4), 0.3)] {
+        let opts = RunOptions::with_target(1e-4, 300_000);
+        let static_t = run(&mut Gadmm::new(&p, rho), &p, &costs, &opts);
+        let mut dyn_e = Dgadmm::new(&p, rho, 15, RechainMode::Free, &costs, 5);
+        let dyn_t = run(&mut dyn_e, &p, &costs, &opts);
+        let (sk, dk) = (
+            static_t.iters_to_target().expect("static converges"),
+            dyn_t.iters_to_target().expect("dynamic converges"),
+        );
+        // D-GADMM must stay within a small factor of static GADMM.
+        assert!(dk <= sk * 4, "D-GADMM {dk} ≥ 4× GADMM {sk} ({})", p.name);
+    }
+}
+
+#[test]
+fn energy_accounting_consistent_between_runs() {
+    // Running the same engine under unit costs and energy costs must give
+    // identical iterate paths (costs are observational only).
+    let p = linreg_problem(6);
+    let opts = RunOptions::with_target(1e-4, 100_000);
+    let unit_trace = run(&mut Gadmm::new(&p, 3.0), &p, &UnitCosts, &opts);
+    let mut rng = Pcg64::seeded(3);
+    let placement = Placement::random(6, 10.0, &mut rng);
+    let energy = EnergyCostModel::new(&placement, placement.central_worker());
+    let energy_trace = run(&mut Gadmm::new(&p, 3.0), &p, &energy, &opts);
+    assert_eq!(unit_trace.iters_to_target(), energy_trace.iters_to_target());
+    for (a, b) in unit_trace.records.iter().zip(&energy_trace.records) {
+        assert_eq!(a.obj_err, b.obj_err);
+        assert_eq!(a.tc_unit, b.tc_unit);
+    }
+    assert!(energy_trace.energy_to_target().unwrap() > 0.0);
+}
+
+#[test]
+fn config_round_trip_drives_dataset_construction() {
+    let cfg = RunConfig {
+        dataset: DatasetKind::Bodyfat,
+        workers: 4,
+        rho: 0.1,
+        target: 1e-3,
+        max_iters: 30_000,
+        seed: 2,
+        area_side: 10.0,
+        tau: 5,
+    };
+    let ds = cfg.dataset.build(cfg.seed);
+    let p = Problem::from_dataset(&ds, cfg.workers);
+    let t = run(
+        &mut Gadmm::new(&p, cfg.rho),
+        &p,
+        &UnitCosts,
+        &RunOptions::with_target(cfg.target, cfg.max_iters),
+    );
+    assert!(t.iters_to_target().is_some(), "final {:.3e}", t.final_error());
+}
+
+#[test]
+fn rho_sensitivity_depends_on_data_correlation() {
+    // The paper's §7 point: the optimal ρ is data-dependent, driven by how
+    // close local optima sit to the global one. On our correlated real
+    // surrogate (local ≈ global optimum) strong coupling converges in a
+    // handful of iterations while weak coupling crawls; on the synthetic
+    // independent/ill-conditioned data the optimum is interior (ρ* ≈ 3) —
+    // see EXPERIMENTS.md for the measured landscape and the direction
+    // difference vs the paper's presentation.
+    let ds = gadmm::data::real::bodyfat(1);
+    let p = Problem::from_dataset(&ds, 10);
+    let opts = RunOptions::with_target(1e-4, 200_000);
+    let weak = run(&mut Gadmm::new(&p, 0.1), &p, &UnitCosts, &opts);
+    let strong = run(&mut Gadmm::new(&p, 7.0), &p, &UnitCosts, &opts);
+    let kw = weak.iters_to_target().expect("weak rho converges");
+    let ks = strong.iters_to_target().expect("strong rho converges");
+    assert!(
+        ks * 10 < kw,
+        "correlated data should favour strong coupling: rho=7 took {ks}, rho=0.1 took {kw}"
+    );
+}

@@ -1,0 +1,121 @@
+//! Integration: the AOT-compiled JAX+Pallas artifacts, executed from rust
+//! via PJRT, must agree with the native backend — and drive the full
+//! distributed coordinator to convergence.
+//!
+//! Skips (with a loud notice) when `artifacts/` hasn't been built; run
+//! `make artifacts` first.
+
+use gadmm::coordinator;
+use gadmm::data::{partition_even, synthetic, Task};
+use gadmm::linalg::vector as vec_ops;
+use gadmm::model::Problem;
+use gadmm::optim::RunOptions;
+use gadmm::runtime::pjrt::PjrtContext;
+use gadmm::runtime::service::PjrtService;
+use gadmm::runtime::{artifacts_dir, Manifest};
+use gadmm::topology::chain::Chain;
+use gadmm::topology::UnitCosts;
+use gadmm::util::rng::Pcg64;
+
+fn manifest_or_skip() -> Option<Manifest> {
+    match Manifest::load(&artifacts_dir()) {
+        Ok(m) => Some(m),
+        Err(e) => {
+            eprintln!("SKIP pjrt tests: {e}; run `make artifacts`");
+            None
+        }
+    }
+}
+
+#[test]
+fn linreg_artifact_matches_native_solver() {
+    let Some(manifest) = manifest_or_skip() else { return };
+    let ds = synthetic::linreg(120, 8, &mut Pcg64::seeded(1));
+    let p = Problem::from_dataset(&ds, 6);
+    let shards = partition_even(&ds, 6);
+    let mut ctx = PjrtContext::new(manifest).expect("pjrt context");
+    let mut rng = Pcg64::seeded(2);
+    for w in [0usize, 3, 5] {
+        let solver = ctx
+            .solver_for_shard(
+                Task::LinearRegression,
+                &shards[w].features,
+                &shards[w].targets,
+                0.0,
+                p.data_weight,
+            )
+            .expect("solver");
+        for c in [1.0, 2.0, 6.0] {
+            let q = rng.normal_vec(8);
+            let got = solver.prox(&q, c, &vec![0.0; 8]).expect("pjrt prox");
+            let want = p.losses[w].prox_argmin(&q, c, &vec![0.0; 8]);
+            let err = vec_ops::dist2(&got, &want);
+            assert!(err < 1e-6, "worker {w} c={c}: PJRT vs native dist {err}");
+        }
+    }
+}
+
+#[test]
+fn logreg_artifact_matches_native_solver() {
+    let Some(manifest) = manifest_or_skip() else { return };
+    let ds = synthetic::logreg(120, 5, &mut Pcg64::seeded(3));
+    let p = Problem::from_dataset(&ds, 4);
+    let shards = partition_even(&ds, 4);
+    let mut ctx = PjrtContext::new(manifest).expect("pjrt context");
+    let mut rng = Pcg64::seeded(4);
+    for w in [0usize, 2] {
+        let solver = ctx
+            .solver_for_shard(
+                Task::LogisticRegression,
+                &shards[w].features,
+                &shards[w].targets,
+                p.logreg_mu,
+                p.data_weight,
+            )
+            .expect("solver");
+        for c in [0.3, 1.0] {
+            let q: Vec<f64> = rng.normal_vec(5).iter().map(|x| 0.2 * x).collect();
+            let got = solver.prox(&q, c, &vec![0.0; 5]).expect("pjrt prox");
+            let want = p.losses[w].prox_argmin(&q, c, &vec![0.0; 5]);
+            let err = vec_ops::dist2(&got, &want);
+            assert!(err < 1e-6, "worker {w} c={c}: PJRT vs native dist {err}");
+        }
+    }
+}
+
+#[test]
+fn coordinator_converges_on_pjrt_backend() {
+    let Some(manifest) = manifest_or_skip() else { return };
+    let ds = synthetic::linreg(120, 8, &mut Pcg64::seeded(1));
+    let p = Problem::from_dataset(&ds, 6);
+    let shards = partition_even(&ds, 6);
+    let service = PjrtService::spawn(
+        manifest,
+        Task::LinearRegression,
+        shards,
+        0.0,
+        p.data_weight,
+    )
+    .expect("service");
+    let opts = RunOptions::with_target(1e-4, 3000);
+    let costs = UnitCosts;
+    let result =
+        coordinator::train(&p, service.solvers(), 3.0, Chain::sequential(6), &costs, &opts);
+    assert!(
+        result.trace.iters_to_target().is_some(),
+        "PJRT-backed coordinator failed to converge: err {}",
+        result.trace.final_error()
+    );
+    assert!(vec_ops::dist2(&result.consensus, &p.theta_star) < 1e-2);
+}
+
+#[test]
+fn missing_shape_is_reported() {
+    let Some(manifest) = manifest_or_skip() else { return };
+    let mut ctx = PjrtContext::new(manifest).expect("pjrt context");
+    let err = match ctx.executable("linreg_prox", 999, 999) {
+        Ok(_) => panic!("expected missing-artifact error"),
+        Err(e) => e,
+    };
+    assert!(format!("{err}").contains("no artifact"), "{err}");
+}

@@ -1,0 +1,259 @@
+//! Property tests (randomized, via util::prop) for the paper's invariants:
+//! chain validity, Lyapunov monotonicity (Theorem 2), tail dual
+//! feasibility (eq. 20), primal-residual decay, and TC accounting.
+
+use gadmm::comm::Meter;
+use gadmm::data::synthetic;
+use gadmm::linalg::vector as vec_ops;
+use gadmm::model::Problem;
+use gadmm::optim::{solver, Engine, Gadmm};
+use gadmm::prop_assert;
+use gadmm::topology::chain::{self, Chain};
+use gadmm::topology::{EnergyCostModel, Placement, UnitCosts};
+use gadmm::util::prop::check;
+use gadmm::util::rng::Pcg64;
+
+/// Random even worker count in [4, 20].
+fn rand_even_n(rng: &mut Pcg64) -> usize {
+    2 * rng.range(2, 11)
+}
+
+#[test]
+fn prop_appendix_d_chain_is_valid_alternating_hamiltonian() {
+    check(
+        "appendix-d-chain",
+        101,
+        60,
+        |rng| {
+            let n = rand_even_n(rng);
+            let placement = Placement::random(n, 10.0, rng);
+            let costs = EnergyCostModel::new(&placement, placement.central_worker());
+            let heads = chain::draw_heads(n, rng);
+            (n, heads.clone(), chain::greedy_chain(n, &heads, &costs))
+        },
+        |(n, heads, c)| {
+            prop_assert!(c.is_valid_permutation(), "not a permutation: {c:?}");
+            prop_assert!(c.order[0] == 0, "first position must be worker 0");
+            prop_assert!(c.order[*n - 1] == n - 1, "last position must be worker N-1");
+            for (p, w) in c.order.iter().enumerate() {
+                let is_head = heads.contains(w);
+                prop_assert!(
+                    is_head == Chain::is_head_position(p),
+                    "worker {w} at position {p} violates head/tail alternation"
+                );
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_gadmm_lyapunov_monotone_nonincreasing() {
+    // Theorem 2: V_k (eq. 32) decreases monotonically. Uses the exact λ*
+    // from the dual-feasibility telescede at θ* (optim::solver).
+    check(
+        "lyapunov-monotone",
+        202,
+        12,
+        |rng| {
+            let n = 2 * rng.range(2, 5);
+            let m = 40 * n;
+            let ds = synthetic::linreg(m, 6, rng);
+            let rho = rng.uniform(0.5, 6.0);
+            (ds, n, rho)
+        },
+        |(ds, n, rho)| {
+            let p = Problem::from_dataset(ds, *n);
+            let mut g = Gadmm::new(&p, *rho);
+            let order: Vec<usize> = (0..*n).collect();
+            let lambda_star = solver::optimal_duals(&p.losses, &order, &p.theta_star);
+            let costs = UnitCosts;
+            let mut meter = Meter::new(&costs);
+            let mut v_prev = g.lyapunov(&p.theta_star, &lambda_star);
+            for k in 0..60 {
+                g.step(k, &mut meter);
+                let v = g.lyapunov(&p.theta_star, &lambda_star);
+                prop_assert!(
+                    v <= v_prev * (1.0 + 1e-9),
+                    "V increased at iteration {k}: {v_prev} → {v} (rho={rho})"
+                );
+                v_prev = v;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_tail_dual_feasibility_exact() {
+    // Eq. 20: after every iteration the tail workers' dual feasibility
+    // holds exactly (up to float error), on arbitrary chains.
+    check(
+        "tail-dual-feasibility",
+        303,
+        15,
+        |rng| {
+            let n = rand_even_n(rng);
+            let ds = synthetic::linreg(30 * n, 5, rng);
+            // Random valid chain with fixed ends.
+            let mut middle: Vec<usize> = (1..n - 1).collect();
+            rng.shuffle(&mut middle);
+            let mut order = vec![0];
+            order.extend(middle);
+            order.push(n - 1);
+            (ds, n, order, rng.uniform(0.5, 5.0))
+        },
+        |(ds, n, order, rho)| {
+            let p = Problem::from_dataset(ds, *n);
+            let mut g = Gadmm::with_chain(&p, *rho, Chain { order: order.clone() });
+            let costs = UnitCosts;
+            let mut meter = Meter::new(&costs);
+            for k in 0..10 {
+                g.step(k, &mut meter);
+                let r = g.tail_dual_residual();
+                prop_assert!(r < 1e-6, "tail dual residual {r} at iteration {k}");
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_primal_residuals_decay() {
+    check(
+        "primal-residual-decay",
+        404,
+        10,
+        |rng| {
+            let n = 2 * rng.range(2, 5);
+            (synthetic::linreg(40 * n, 6, rng), n)
+        },
+        |(ds, n)| {
+            let p = Problem::from_dataset(ds, *n);
+            let mut g = Gadmm::new(&p, 3.0);
+            let costs = UnitCosts;
+            let mut meter = Meter::new(&costs);
+            let early: f64 = {
+                for k in 0..5 {
+                    g.step(k, &mut meter);
+                }
+                g.primal_residuals().iter().map(|r| vec_ops::norm2(r)).sum()
+            };
+            for k in 5..300 {
+                g.step(k, &mut meter);
+            }
+            let late: f64 = g.primal_residuals().iter().map(|r| vec_ops::norm2(r)).sum();
+            prop_assert!(
+                late < early * 0.1 || late < 1e-8,
+                "primal residuals did not decay: {early} → {late}"
+            );
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_tc_accounting_closed_form() {
+    // For GADMM under unit costs, TC after k iterations is exactly k·N and
+    // rounds are exactly 2k, for any chain.
+    check(
+        "tc-closed-form",
+        505,
+        20,
+        |rng| {
+            let n = rand_even_n(rng);
+            (synthetic::linreg(20 * n, 4, rng), n, rng.range(1, 30))
+        },
+        |(ds, n, iters)| {
+            let p = Problem::from_dataset(ds, *n);
+            let mut g = Gadmm::new(&p, 2.0);
+            let costs = UnitCosts;
+            let mut meter = Meter::new(&costs);
+            for k in 0..*iters {
+                g.step(k, &mut meter);
+            }
+            prop_assert!(
+                meter.tc_unit == (*iters * *n) as f64,
+                "TC {} ≠ k·N = {}",
+                meter.tc_unit,
+                iters * n
+            );
+            prop_assert!(meter.rounds == 2 * iters, "rounds {} ≠ 2k", meter.rounds);
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_energy_tc_scales_with_area() {
+    // Free-space d² law: scaling the placement area by s scales every
+    // energy cost by s².
+    check(
+        "energy-area-scaling",
+        606,
+        30,
+        |rng| {
+            let n = rand_even_n(rng);
+            let base = Placement::random(n, 10.0, rng);
+            let scale = rng.uniform(2.0, 10.0);
+            (base, scale)
+        },
+        |(base, scale)| {
+            let scaled = Placement {
+                side: base.side * scale,
+                positions: base
+                    .positions
+                    .iter()
+                    .map(|&(x, y)| (x * scale, y * scale))
+                    .collect(),
+            };
+            let c1 = EnergyCostModel::new(base, 0);
+            let c2 = EnergyCostModel::new(&scaled, 0);
+            use gadmm::topology::LinkCosts;
+            for a in 0..base.len() {
+                for b in 0..base.len() {
+                    if a == b || base.distance(a, b) < 1e-3 {
+                        continue;
+                    }
+                    let ratio = c2.link(a, b) / c1.link(a, b);
+                    prop_assert!(
+                        (ratio - scale * scale).abs() < 1e-6 * scale * scale,
+                        "link ({a},{b}) ratio {ratio} ≠ s² = {}",
+                        scale * scale
+                    );
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_objective_error_never_negative_and_f_star_optimal() {
+    check(
+        "f-star-is-minimum",
+        707,
+        20,
+        |rng| {
+            let n = 2 * rng.range(1, 4);
+            let is_logreg = rng.coin(0.5);
+            let ds = if is_logreg {
+                synthetic::logreg(30 * n, 5, rng)
+            } else {
+                synthetic::linreg(30 * n, 5, rng)
+            };
+            let probe = rng.normal_vec(5);
+            (ds, n, probe)
+        },
+        |(ds, n, probe)| {
+            let p = Problem::from_dataset(ds, *n);
+            let at_probe = p.objective(probe);
+            prop_assert!(
+                at_probe >= p.f_star - 1e-9 * (1.0 + p.f_star.abs()),
+                "objective at probe {at_probe} below F* {}",
+                p.f_star
+            );
+            Ok(())
+        },
+    );
+}
