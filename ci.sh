@@ -1,0 +1,40 @@
+#!/usr/bin/env bash
+# CI gate: formatting, lints, and the tier-1 verification command.
+# Usage: ./ci.sh [--no-clippy]   (clippy/rustfmt may be absent on minimal
+# toolchains; the tier-1 build+test gate always runs and is authoritative.)
+set -euo pipefail
+cd "$(dirname "$0")"
+
+run_fmt=1
+run_clippy=1
+for arg in "$@"; do
+  case "$arg" in
+    --no-fmt) run_fmt=0 ;;
+    --no-clippy) run_clippy=0 ;;
+    *) echo "unknown flag: $arg" >&2; exit 2 ;;
+  esac
+done
+
+if [ "$run_fmt" = 1 ]; then
+  if cargo fmt --version >/dev/null 2>&1; then
+    echo "==> cargo fmt --check"
+    cargo fmt --all -- --check
+  else
+    echo "==> rustfmt not installed; skipping format check" >&2
+  fi
+fi
+
+if [ "$run_clippy" = 1 ]; then
+  if cargo clippy --version >/dev/null 2>&1; then
+    echo "==> cargo clippy -D warnings"
+    cargo clippy --workspace --all-targets -- -D warnings
+  else
+    echo "==> clippy not installed; skipping lint" >&2
+  fi
+fi
+
+echo "==> tier-1: cargo build --release && cargo test -q"
+cargo build --release
+cargo test -q
+
+echo "CI OK"

@@ -1,0 +1,23 @@
+//! Regenerates the **Q-GADMM comparison**: total transmitted bits to reach
+//! objective error 1e−4, GADMM vs Q-GADMM at b ∈ {2, 4, 8}, paper-scale
+//! synthetic linear regression (N=24, 1200×50) plus the logistic task.
+//! `GADMM_BENCH_FAST=1` shrinks the sweep for smoke runs.
+
+use gadmm::config::DatasetKind;
+use gadmm::experiments::qgadmm;
+
+fn main() {
+    gadmm::util::logging::init();
+    let fast = std::env::var("GADMM_BENCH_FAST").is_ok();
+    let bits: &[u32] = if fast { &[8] } else { &[2, 4, 8] };
+    let max_iters = if fast { 50_000 } else { 300_000 };
+    let t0 = std::time::Instant::now();
+    for (kind, rho) in [
+        (DatasetKind::SyntheticLinreg, 5.0),
+        (DatasetKind::SyntheticLogreg, 3.0),
+    ] {
+        let out = qgadmm::run(kind, 24, rho, bits, 1e-4, max_iters, 1);
+        println!("{}", out.rendered);
+    }
+    println!("[bench_qgadmm completed in {:.2?}]", t0.elapsed());
+}

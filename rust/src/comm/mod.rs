@@ -1,4 +1,4 @@
-//! Communication accounting.
+//! Communication accounting and the compression seam.
 //!
 //! The paper's TC metric charges one unit (or one link-energy) per
 //! *transmission slot*: a worker that broadcasts its model to its (≤2)
@@ -8,17 +8,37 @@
 //! server downlink is a single broadcast slot bottlenecked by the weakest
 //! channel. This reproduces Table 1's arithmetic exactly: GADMM pays `N`
 //! per iteration, GD/ADMM pay `N + 1`, LAG pays `1 + #uploads`.
+//!
+//! On top of slot counting the meter tracks **payload bits**, the metric
+//! the Q-GADMM follow-up optimizes. Every slot carries a payload: callers
+//! either rely on the meter's default payload (a dense `d`-vector of f64,
+//! set once per run by the driver) or pass the exact size through the
+//! `*_bits` variants (the quantized engines do). See [`quantize`] for the
+//! compressors that shrink those payloads.
+
+pub mod quantize;
+
+pub use quantize::{
+    Compressor, Decoder, DenseCompressor, Msg, QuantizedMsg, StochasticQuantizer, FP64_BITS,
+    RANGE_OVERHEAD_BITS,
+};
 
 use crate::topology::LinkCosts;
 
 /// Accumulating cost meter. Unit TC counts transmission slots; energy TC
-/// weighs each slot by the provided [`LinkCosts`] model.
+/// weighs each slot by the provided [`LinkCosts`] model; `bits` sums the
+/// exact payload sizes on the wire.
 pub struct Meter<'a> {
     costs: &'a dyn LinkCosts,
+    /// Bits charged per slot when the caller doesn't pass an explicit
+    /// payload size (dense model: `64·d`). Zero until the driver sets it.
+    payload_bits: f64,
     /// Cumulative transmission slots (unit-cost TC).
     pub tc_unit: f64,
     /// Cumulative energy-model TC.
     pub tc_energy: f64,
+    /// Cumulative payload bits on the wire.
+    pub bits: f64,
     /// Cumulative communication rounds.
     pub rounds: usize,
     /// Total transmission slots (diagnostics).
@@ -34,13 +54,27 @@ impl<'a> Meter<'a> {
     pub fn new(costs: &'a dyn LinkCosts) -> Meter<'a> {
         Meter {
             costs,
+            payload_bits: 0.0,
             tc_unit: 0.0,
             tc_energy: 0.0,
+            bits: 0.0,
             rounds: 0,
             transmissions: 0,
             uplink_counts: Vec::new(),
             server_broadcasts: 0,
         }
+    }
+
+    /// Set the default payload size per slot (the drivers use the dense
+    /// model size `64·d`, making every algorithm's bit accounting exact
+    /// without per-engine plumbing).
+    pub fn set_payload_bits(&mut self, bits: f64) {
+        self.payload_bits = bits;
+    }
+
+    /// The configured default payload size per slot.
+    pub fn payload_bits(&self) -> f64 {
+        self.payload_bits
     }
 
     /// Begin a communication round (head phase, tail phase, uplink slot,
@@ -52,11 +86,17 @@ impl<'a> Meter<'a> {
     /// Worker `from` broadcasts its model to its chain neighbours in one
     /// slot; energy is the max receiving-link cost.
     pub fn neighbor_broadcast(&mut self, from: usize, neighbors: &[usize]) {
+        self.neighbor_broadcast_bits(from, neighbors, self.payload_bits);
+    }
+
+    /// [`Meter::neighbor_broadcast`] with an explicit payload size.
+    pub fn neighbor_broadcast_bits(&mut self, from: usize, neighbors: &[usize], bits: f64) {
         if neighbors.is_empty() {
             return;
         }
         self.transmissions += 1;
         self.tc_unit += 1.0;
+        self.bits += bits;
         self.tc_energy += neighbors
             .iter()
             .map(|&to| self.costs.link(from, to))
@@ -65,15 +105,27 @@ impl<'a> Meter<'a> {
 
     /// Worker `from` unicasts to worker `to` (one slot).
     pub fn unicast(&mut self, from: usize, to: usize) {
+        self.unicast_bits(from, to, self.payload_bits);
+    }
+
+    /// [`Meter::unicast`] with an explicit payload size.
+    pub fn unicast_bits(&mut self, from: usize, to: usize, bits: f64) {
         self.transmissions += 1;
         self.tc_unit += 1.0;
+        self.bits += bits;
         self.tc_energy += self.costs.link(from, to);
     }
 
     /// Worker `n` unicasts to the central controller.
     pub fn uplink(&mut self, n: usize) {
+        self.uplink_bits(n, self.payload_bits);
+    }
+
+    /// [`Meter::uplink`] with an explicit payload size.
+    pub fn uplink_bits(&mut self, n: usize, bits: f64) {
         self.transmissions += 1;
         self.tc_unit += 1.0;
+        self.bits += bits;
         self.tc_energy += self.costs.uplink(n);
         if self.uplink_counts.len() <= n {
             self.uplink_counts.resize(n + 1, 0);
@@ -84,8 +136,14 @@ impl<'a> Meter<'a> {
     /// Central controller broadcasts to all workers (one slot, weakest
     /// channel is the bottleneck).
     pub fn server_broadcast(&mut self) {
+        self.server_broadcast_bits(self.payload_bits);
+    }
+
+    /// [`Meter::server_broadcast`] with an explicit payload size.
+    pub fn server_broadcast_bits(&mut self, bits: f64) {
         self.transmissions += 1;
         self.tc_unit += 1.0;
+        self.bits += bits;
         self.tc_energy += self.costs.server_broadcast();
         self.server_broadcasts += 1;
     }
@@ -153,6 +211,27 @@ mod tests {
         m.neighbor_broadcast(0, &[]);
         assert_eq!(m.tc_unit, 0.0);
         assert_eq!(m.transmissions, 0);
+    }
+
+    #[test]
+    fn payload_bits_accounting() {
+        let costs = UnitCosts;
+        let mut m = Meter::new(&costs);
+        // Default payload is zero until a driver sets it.
+        m.neighbor_broadcast(0, &[1]);
+        assert_eq!(m.bits, 0.0);
+        m.set_payload_bits(64.0 * 8.0);
+        m.neighbor_broadcast(1, &[0, 2]);
+        m.uplink(3);
+        m.server_broadcast();
+        assert_eq!(m.bits, 3.0 * 512.0);
+        // Explicit payloads override the default per slot.
+        m.unicast_bits(0, 1, 100.0);
+        assert_eq!(m.bits, 3.0 * 512.0 + 100.0);
+        // An empty neighbour list is free in bits too.
+        m.neighbor_broadcast_bits(0, &[], 999.0);
+        assert_eq!(m.bits, 3.0 * 512.0 + 100.0);
+        assert_eq!(m.payload_bits(), 512.0);
     }
 
     #[test]

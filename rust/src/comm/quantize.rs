@@ -1,0 +1,378 @@
+//! Pluggable model compression for the communication path.
+//!
+//! The paper's follow-ups (Q-GADMM, CQ-GGADMM) win their communication
+//! budget not by sending fewer *messages* but by sending fewer *bits per
+//! message*. This module provides the seam: a [`Compressor`] turns a model
+//! vector into a wire [`Msg`] with an exact bit size, and a [`Decoder`]
+//! reconstructs the receivers' view. Everything on the wire is accounted
+//! bit-exactly by [`crate::comm::Meter`].
+//!
+//! Two compressors ship today:
+//!
+//! * [`DenseCompressor`] — the identity: `d` f64 coordinates, `64·d` bits.
+//! * [`StochasticQuantizer`] — the Q-GADMM scheme (Elgabli et al., 2019):
+//!   stochastic uniform quantization of the **difference** from the
+//!   previously transmitted model. With `b` bits per coordinate, the `2^b`
+//!   levels span `[prev_i − R, prev_i + R]` where the scalar range
+//!   `R = max_i |θ_i − prev_i|` is transmitted alongside the levels. As the
+//!   iterates converge the successive differences — and therefore `R` —
+//!   contract toward zero, so a *fixed* `b` buys ever finer absolute
+//!   precision and the algorithm converges to the exact optimum. Stochastic
+//!   rounding keeps the reconstruction unbiased:
+//!   `E[decode(encode(x))] = x`.
+//!
+//! Senders and receivers both reconstruct the transmitted model with the
+//! same f64 arithmetic from `(prev, R, levels)`, so the "public" view of a
+//! worker's model is bit-identical everywhere — the property the Q-GADMM
+//! dual updates rely on. Censoring or sparsification schemes drop in as
+//! further [`Compressor`] implementations plus [`Msg`] variants (see
+//! docs/adr/001-compressor-trait.md).
+
+use crate::util::rng::Pcg64;
+
+/// Bits of one dense f64 coordinate.
+pub const FP64_BITS: f64 = 64.0;
+
+/// Per-message overhead of a quantized payload: the f64 range scalar.
+pub const RANGE_OVERHEAD_BITS: f64 = 64.0;
+
+/// RNG stream tag for per-worker quantizer generators (keeps sequential
+/// engines and coordinator workers bit-identical for the same seed).
+const QUANT_STREAM: u64 = 0x71_6741; // "qgA"
+
+/// One quantized broadcast: the shared range and `b`-bit level indices.
+#[derive(Clone, Debug, PartialEq)]
+pub struct QuantizedMsg {
+    /// Half-width of the quantization interval around the previous model.
+    pub range: f64,
+    /// Bits per coordinate (levels are in `[0, 2^b − 1]`).
+    pub bits_per_coord: u32,
+    /// Level index per coordinate.
+    pub levels: Vec<u32>,
+}
+
+impl QuantizedMsg {
+    /// Exact wire size: `d·b` level bits plus the range scalar.
+    pub fn payload_bits(&self) -> f64 {
+        self.levels.len() as f64 * self.bits_per_coord as f64 + RANGE_OVERHEAD_BITS
+    }
+
+    /// Reconstruct the transmitted model given the receiver's mirror of the
+    /// previously transmitted model. Pure function of the message and
+    /// `prev`, so sender and receivers agree bit-for-bit.
+    pub fn decode(&self, prev: &[f64]) -> Vec<f64> {
+        assert_eq!(prev.len(), self.levels.len());
+        if self.range == 0.0 {
+            return prev.to_vec();
+        }
+        let max_level = ((1u64 << self.bits_per_coord) - 1) as f64;
+        let step = 2.0 * self.range / max_level;
+        prev.iter()
+            .zip(&self.levels)
+            .map(|(&p, &idx)| (p - self.range) + idx as f64 * step)
+            .collect()
+    }
+}
+
+/// A wire message on the model-exchange path.
+#[derive(Clone, Debug)]
+pub enum Msg {
+    /// Uncompressed model (64 bits per coordinate).
+    Dense(Vec<f64>),
+    /// Q-GADMM quantized difference from the previously transmitted model.
+    Quantized(QuantizedMsg),
+}
+
+impl Msg {
+    /// Exact payload size on the wire, in bits.
+    pub fn payload_bits(&self) -> f64 {
+        match self {
+            Msg::Dense(v) => v.len() as f64 * FP64_BITS,
+            Msg::Quantized(q) => q.payload_bits(),
+        }
+    }
+}
+
+/// Sender-side compression state for one worker's broadcasts.
+///
+/// Implementations may carry state across calls (the quantizer tracks the
+/// previously transmitted model); [`Compressor::compress`] advances that
+/// state as if the message were delivered, and [`Compressor::public_view`]
+/// is the model every receiver currently holds for this sender.
+pub trait Compressor: Send {
+    /// Short label for engine names, e.g. `"dense"` or `"q8"`.
+    fn describe(&self) -> String;
+
+    /// Exact wire size of the next message this compressor will emit.
+    /// Both shipped compressors are constant-size; the structural billing
+    /// in the coordinator's leader relies on that.
+    fn message_bits(&self) -> f64;
+
+    /// Encode `model` for one broadcast and advance the sender state.
+    fn compress(&mut self, model: &[f64]) -> Msg;
+
+    /// The receivers' current view of this sender's model (what the last
+    /// [`Compressor::compress`] reconstructed to).
+    fn public_view(&self) -> &[f64];
+}
+
+/// Identity compression: full-precision broadcast, `64·d` bits.
+pub struct DenseCompressor {
+    last: Vec<f64>,
+}
+
+impl DenseCompressor {
+    pub fn new(dim: usize) -> DenseCompressor {
+        DenseCompressor {
+            last: vec![0.0; dim],
+        }
+    }
+}
+
+impl Compressor for DenseCompressor {
+    fn describe(&self) -> String {
+        "dense".to_string()
+    }
+
+    fn message_bits(&self) -> f64 {
+        self.last.len() as f64 * FP64_BITS
+    }
+
+    fn compress(&mut self, model: &[f64]) -> Msg {
+        self.last.copy_from_slice(model);
+        Msg::Dense(model.to_vec())
+    }
+
+    fn public_view(&self) -> &[f64] {
+        &self.last
+    }
+}
+
+/// The Q-GADMM stochastic uniform quantizer (sender side).
+pub struct StochasticQuantizer {
+    /// Previously transmitted (reconstructed) model — the quantization
+    /// anchor shared with every receiver.
+    prev: Vec<f64>,
+    bits: u32,
+    rng: Pcg64,
+}
+
+impl StochasticQuantizer {
+    /// `bits` per coordinate in `[1, 32]`; `seed` makes the stochastic
+    /// rounding reproducible.
+    pub fn new(dim: usize, bits: u32, seed: u64) -> StochasticQuantizer {
+        assert!((1..=32).contains(&bits), "quantizer bits must be in 1..=32");
+        StochasticQuantizer {
+            prev: vec![0.0; dim],
+            bits,
+            rng: Pcg64::new(seed, QUANT_STREAM),
+        }
+    }
+
+    /// The per-worker constructor used by both the sequential engine and
+    /// the distributed coordinator — same (seed, worker) ⇒ same rounding
+    /// sequence, which keeps the two execution paths bit-identical.
+    pub fn for_worker(dim: usize, bits: u32, seed: u64, worker: usize) -> StochasticQuantizer {
+        let tag = ((worker as u64) << 32) | worker as u64;
+        StochasticQuantizer::new(dim, bits, seed.wrapping_add(tag))
+    }
+
+    pub fn bits(&self) -> u32 {
+        self.bits
+    }
+
+    /// Quantize `model` against the previously transmitted model and
+    /// advance the anchor to the reconstruction.
+    pub fn encode(&mut self, model: &[f64]) -> QuantizedMsg {
+        assert_eq!(model.len(), self.prev.len());
+        let range = model
+            .iter()
+            .zip(&self.prev)
+            .map(|(&x, &p)| (x - p).abs())
+            .fold(0.0f64, f64::max);
+        // `f64::max` ignores NaN deltas, so check finiteness explicitly:
+        // a diverged (NaN/inf) iterate must freeze the anchor rather than
+        // decode to a fabricated finite value.
+        let finite = model.iter().all(|v| v.is_finite());
+        if range == 0.0 || !range.is_finite() || !finite {
+            // Nothing moved (or the iterate diverged to non-finite values):
+            // transmit the degenerate range; receivers keep `prev`.
+            return QuantizedMsg {
+                range: 0.0,
+                bits_per_coord: self.bits,
+                levels: vec![0; model.len()],
+            };
+        }
+        let max_level = ((1u64 << self.bits) - 1) as f64;
+        let step = 2.0 * range / max_level;
+        let levels: Vec<u32> = model
+            .iter()
+            .zip(&self.prev)
+            .map(|(&x, &p)| {
+                let pos = (x - (p - range)) / step;
+                let lo = pos.floor();
+                let frac = pos - lo;
+                // Stochastic rounding: up with probability `frac`, so the
+                // reconstruction is unbiased.
+                let idx = lo + if self.rng.next_f64() < frac { 1.0 } else { 0.0 };
+                idx.clamp(0.0, max_level) as u32
+            })
+            .collect();
+        let msg = QuantizedMsg {
+            range,
+            bits_per_coord: self.bits,
+            levels,
+        };
+        self.prev = msg.decode(&self.prev);
+        msg
+    }
+}
+
+impl Compressor for StochasticQuantizer {
+    fn describe(&self) -> String {
+        format!("q{}", self.bits)
+    }
+
+    /// Wire size of every message this quantizer emits (`d·b + 64`).
+    fn message_bits(&self) -> f64 {
+        self.prev.len() as f64 * self.bits as f64 + RANGE_OVERHEAD_BITS
+    }
+
+    fn compress(&mut self, model: &[f64]) -> Msg {
+        Msg::Quantized(self.encode(model))
+    }
+
+    fn public_view(&self) -> &[f64] {
+        &self.prev
+    }
+}
+
+/// Receiver-side state: mirrors one sender's previously transmitted model
+/// and applies incoming messages to it.
+pub struct Decoder {
+    prev: Vec<f64>,
+}
+
+impl Decoder {
+    pub fn new(dim: usize) -> Decoder {
+        Decoder {
+            prev: vec![0.0; dim],
+        }
+    }
+
+    /// Apply one message and return the sender's current public model.
+    pub fn apply(&mut self, msg: &Msg) -> &[f64] {
+        match msg {
+            Msg::Dense(v) => {
+                self.prev.copy_from_slice(v);
+            }
+            Msg::Quantized(q) => {
+                self.prev = q.decode(&self.prev);
+            }
+        }
+        &self.prev
+    }
+
+    /// The current view without applying anything.
+    pub fn view(&self) -> &[f64] {
+        &self.prev
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dense_roundtrip_is_exact() {
+        let mut c = DenseCompressor::new(3);
+        let x = vec![1.0, -2.5, 0.25];
+        let msg = c.compress(&x);
+        assert_eq!(msg.payload_bits(), 3.0 * FP64_BITS);
+        assert_eq!(c.message_bits(), 3.0 * FP64_BITS);
+        let mut d = Decoder::new(3);
+        assert_eq!(d.apply(&msg), x.as_slice());
+        assert_eq!(c.public_view(), x.as_slice());
+        assert_eq!(c.describe(), "dense");
+    }
+
+    #[test]
+    fn non_finite_model_freezes_anchor() {
+        let mut q = StochasticQuantizer::new(3, 8, 1);
+        let _ = q.encode(&[1.0, 2.0, 3.0]);
+        let anchor = q.public_view().to_vec();
+        let msg = q.encode(&[f64::NAN, 2.0, 3.0]);
+        assert_eq!(msg.range, 0.0, "NaN coordinate must freeze the anchor");
+        assert_eq!(q.public_view(), anchor.as_slice());
+        let msg = q.encode(&[f64::INFINITY, 0.0, 0.0]);
+        assert_eq!(msg.range, 0.0, "inf coordinate must freeze the anchor");
+        assert_eq!(q.public_view(), anchor.as_slice());
+    }
+
+    #[test]
+    fn quantized_roundtrip_error_bounded_by_step() {
+        let mut rng = Pcg64::seeded(5);
+        for bits in [2u32, 4, 8, 12] {
+            let mut q = StochasticQuantizer::new(16, bits, 9);
+            let x = rng.normal_vec(16);
+            let msg = q.encode(&x);
+            let rec = q.public_view();
+            let step = 2.0 * msg.range / ((1u64 << bits) - 1) as f64;
+            for (xi, ri) in x.iter().zip(rec) {
+                assert!(
+                    (xi - ri).abs() <= step + 1e-12,
+                    "b={bits}: |{xi} − {ri}| > step {step}"
+                );
+            }
+            assert_eq!(msg.payload_bits(), 16.0 * bits as f64 + RANGE_OVERHEAD_BITS);
+        }
+    }
+
+    #[test]
+    fn sender_and_receiver_views_agree_bitwise() {
+        let mut q = StochasticQuantizer::for_worker(8, 6, 3, 2);
+        let mut d = Decoder::new(8);
+        let mut rng = Pcg64::seeded(11);
+        for _ in 0..20 {
+            let x = rng.normal_vec(8);
+            let msg = q.compress(&x);
+            let seen = d.apply(&msg).to_vec();
+            assert_eq!(seen, q.public_view(), "sender/receiver divergence");
+        }
+    }
+
+    #[test]
+    fn zero_delta_sends_degenerate_range() {
+        let mut q = StochasticQuantizer::new(4, 8, 1);
+        let x = vec![0.5, -0.5, 1.0, 0.0];
+        let _ = q.encode(&x);
+        let anchored = q.public_view().to_vec();
+        let msg = q.encode(&anchored);
+        assert_eq!(msg.range, 0.0);
+        assert_eq!(q.public_view(), anchored.as_slice());
+        let mut d = Decoder::new(4);
+        // Receiver replays both messages and lands on the same anchor.
+        d.apply(&Msg::Quantized(QuantizedMsg {
+            range: 0.0,
+            bits_per_coord: 8,
+            levels: vec![0; 4],
+        }));
+        assert_eq!(d.view(), vec![0.0; 4].as_slice());
+    }
+
+    #[test]
+    fn fixed_seed_is_reproducible() {
+        let mut a = StochasticQuantizer::new(10, 4, 77);
+        let mut b = StochasticQuantizer::new(10, 4, 77);
+        let mut rng = Pcg64::seeded(1);
+        for _ in 0..5 {
+            let x = rng.normal_vec(10);
+            assert_eq!(a.encode(&x), b.encode(&x));
+        }
+    }
+
+    #[test]
+    fn describe_labels_bits() {
+        assert_eq!(StochasticQuantizer::new(2, 8, 0).describe(), "q8");
+    }
+}

@@ -69,6 +69,12 @@ pub struct RunConfig {
     pub area_side: f64,
     /// D-GADMM re-chain period τ.
     pub tau: usize,
+    /// Wire quantization (Q-GADMM): bits per coordinate; `None` runs dense
+    /// full-precision GADMM traffic.
+    pub quant_bits: Option<u32>,
+    /// Seed of the stochastic-rounding generators (only meaningful with
+    /// `quant_bits`; defaults to the run seed when absent).
+    pub quant_seed: Option<u64>,
 }
 
 impl Default for RunConfig {
@@ -82,6 +88,8 @@ impl Default for RunConfig {
             seed: 1,
             area_side: 10.0,
             tau: 15,
+            quant_bits: None,
+            quant_seed: None,
         }
     }
 }
@@ -108,6 +116,27 @@ impl RunConfig {
                 "seed" => cfg.seed = val.as_f64().ok_or("seed must be a number")? as u64,
                 "area_side" => cfg.area_side = val.as_f64().ok_or("area_side must be a number")?,
                 "tau" => cfg.tau = val.as_usize().ok_or("tau must be a number")?,
+                "quant_bits" => {
+                    cfg.quant_bits = match val {
+                        Json::Null => None,
+                        _ => {
+                            let b = val.as_usize().ok_or("quant_bits must be a number")?;
+                            // Range-check before narrowing: `as u32` would
+                            // silently truncate huge values into the valid
+                            // range that validate() then accepts.
+                            Some(
+                                u32::try_from(b)
+                                    .map_err(|_| "quant_bits must be in 1..=32")?,
+                            )
+                        }
+                    }
+                }
+                "quant_seed" => {
+                    cfg.quant_seed = match val {
+                        Json::Null => None,
+                        _ => Some(val.as_f64().ok_or("quant_seed must be a number")? as u64),
+                    }
+                }
                 other => return Err(format!("unknown config key '{other}'")),
             }
         }
@@ -138,7 +167,17 @@ impl RunConfig {
         if self.tau == 0 {
             return Err("tau must be ≥ 1".into());
         }
+        if let Some(b) = self.quant_bits {
+            if !(1..=32).contains(&b) {
+                return Err("quant_bits must be in 1..=32".into());
+            }
+        }
         Ok(())
+    }
+
+    /// The effective stochastic-rounding seed (falls back to the run seed).
+    pub fn quant_seed_or_default(&self) -> u64 {
+        self.quant_seed.unwrap_or(self.seed)
     }
 
     pub fn to_json(&self) -> Json {
@@ -151,6 +190,14 @@ impl RunConfig {
             .set("seed", self.seed)
             .set("area_side", self.area_side)
             .set("tau", self.tau)
+            .set(
+                "quant_bits",
+                self.quant_bits.map(|b| Json::Num(b as f64)).unwrap_or(Json::Null),
+            )
+            .set(
+                "quant_seed",
+                self.quant_seed.map(|s| Json::Num(s as f64)).unwrap_or(Json::Null),
+            )
     }
 }
 
@@ -174,12 +221,17 @@ mod tests {
             seed: 9,
             area_side: 250.0,
             tau: 1,
+            quant_bits: Some(8),
+            quant_seed: None,
         };
         let back = RunConfig::from_json(&cfg.to_json()).unwrap();
         assert_eq!(back.dataset, DatasetKind::Derm);
         assert_eq!(back.workers, 10);
         assert_eq!(back.rho, 0.5);
         assert_eq!(back.tau, 1);
+        assert_eq!(back.quant_bits, Some(8));
+        assert_eq!(back.quant_seed, None);
+        assert_eq!(back.quant_seed_or_default(), 9);
     }
 
     #[test]
@@ -188,6 +240,14 @@ mod tests {
         assert!(RunConfig::from_json(&json::parse(r#"{"rho": -1}"#).unwrap()).is_err());
         assert!(RunConfig::from_json(&json::parse(r#"{"typo_key": 1}"#).unwrap()).is_err());
         assert!(RunConfig::from_json(&json::parse(r#"{"dataset": "mnist"}"#).unwrap()).is_err());
+        assert!(RunConfig::from_json(&json::parse(r#"{"quant_bits": 0}"#).unwrap()).is_err());
+        assert!(RunConfig::from_json(&json::parse(r#"{"quant_bits": 64}"#).unwrap()).is_err());
+        // u32 overflow must be rejected, not truncated into the valid range.
+        assert!(
+            RunConfig::from_json(&json::parse(r#"{"quant_bits": 4294967297}"#).unwrap()).is_err()
+        );
+        let ok = RunConfig::from_json(&json::parse(r#"{"quant_bits": 4}"#).unwrap()).unwrap();
+        assert_eq!(ok.quant_bits, Some(4));
     }
 
     #[test]

@@ -8,6 +8,9 @@
 //! * **Workers** own their shard solver, primal θ_w, dual λ_w, and cached
 //!   neighbour models. Within an iteration they synchronize *only* through
 //!   neighbour model messages (head phase → tail phase), exactly Algorithm 1.
+//!   The messages themselves go through the pluggable [`crate::comm`]
+//!   compression seam — dense f64 payloads for GADMM, stochastically
+//!   quantized differences for Q-GADMM ([`QuantSpec`]).
 //! * **The leader** owns no model state. It releases iterations (barrier),
 //!   collects per-worker loss reports for the convergence monitor, charges
 //!   the communication meter, and decides termination — the jobs a launcher
@@ -19,7 +22,7 @@
 
 pub mod worker;
 
-use crate::comm::Meter;
+use crate::comm::{Compressor, DenseCompressor, Meter, StochasticQuantizer};
 use crate::metrics::{IterRecord, Trace};
 use crate::model::Problem;
 use crate::optim::RunOptions;
@@ -39,7 +42,19 @@ pub struct TrainResult {
     pub consensus: Vec<f64>,
 }
 
-/// Run GADMM distributed over `problem.num_workers()` worker threads.
+/// Quantization settings for a distributed run (Q-GADMM traffic). The
+/// same `(bits, seed)` pair drives [`crate::optim::Qgadmm`], and the two
+/// execution paths produce bit-identical traces.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct QuantSpec {
+    /// Bits per coordinate on the wire.
+    pub bits: u32,
+    /// Seed of the per-worker stochastic-rounding generators.
+    pub seed: u64,
+}
+
+/// Run GADMM distributed over `problem.num_workers()` worker threads with
+/// dense (full-precision) model exchange.
 ///
 /// `solvers[w]` is worker w's subproblem solver (native or PJRT-backed);
 /// `chain` is the logical topology. Communication is charged to a meter
@@ -53,13 +68,41 @@ pub fn train<'p>(
     costs: &dyn LinkCosts,
     opts: &RunOptions,
 ) -> TrainResult {
+    train_with(problem, solvers, rho, chain, costs, opts, None)
+}
+
+/// [`train`] with an optional quantized communication path: when `quant`
+/// is set, every worker broadcast goes through a per-worker
+/// [`StochasticQuantizer`] (Q-GADMM) and the meter charges `d·b + 64` bits
+/// per slot instead of `64·d`.
+pub fn train_with<'p>(
+    problem: &'p Problem,
+    solvers: Vec<Box<dyn LocalSolver + Send + 'p>>,
+    rho: f64,
+    chain: Chain,
+    costs: &dyn LinkCosts,
+    opts: &RunOptions,
+    quant: Option<QuantSpec>,
+) -> TrainResult {
     let n = problem.num_workers();
     assert_eq!(solvers.len(), n);
     assert_eq!(chain.len(), n);
-    assert!(n % 2 == 0, "GADMM requires an even N");
+    assert!(n >= 2 && n % 2 == 0, "GADMM requires an even N ≥ 2");
     let d = problem.dim;
     // ρ arrives in the paper's unnormalized-objective units.
     let rho_eff = rho * problem.data_weight;
+    // One compressor per worker (the wire seam). The leader bills each
+    // slot with the payload size the worker reports having actually sent,
+    // so the wire-size truth lives with the messages themselves
+    // (comm::quantize) and variable-size compressors stay accounted.
+    let compressors: Vec<Box<dyn Compressor>> = (0..n)
+        .map(|w| match quant {
+            Some(qs) => Box::new(StochasticQuantizer::for_worker(d, qs.bits, qs.seed, w))
+                as Box<dyn Compressor>,
+            None => Box::new(DenseCompressor::new(d)) as Box<dyn Compressor>,
+        })
+        .collect();
+    let slot_bits = compressors[0].message_bits();
 
     // Worker inboxes for neighbour model messages.
     let (model_txs, model_rxs): (Vec<_>, Vec<_>) =
@@ -69,15 +112,20 @@ pub fn train<'p>(
         (0..n).map(|_| mpsc::channel::<LeaderMsg>()).unzip();
     let (report_tx, report_rx) = mpsc::channel::<Report>();
 
-    let mut trace = Trace::new(&format!("GADMM-dist(rho={rho})"), &problem.name, opts.target);
+    let name = match quant {
+        Some(q) => format!("Q-GADMM-dist(rho={rho},b={})", q.bits),
+        None => format!("GADMM-dist(rho={rho})"),
+    };
+    let mut trace = Trace::new(&name, &problem.name, opts.target);
     let mut thetas: Vec<Vec<f64>> = vec![vec![0.0; d]; n];
 
     std::thread::scope(|scope| {
         // Spawn workers.
         let mut model_txs_shared: Vec<mpsc::Sender<WorkerMsg>> = model_txs.clone();
         let _ = &mut model_txs_shared;
-        for (w, (solver, (cmd_rx, model_rx))) in solvers
+        for (w, ((solver, compressor), (cmd_rx, model_rx))) in solvers
             .into_iter()
+            .zip(compressors)
             .zip(cmd_rxs.into_iter().zip(model_rxs.into_iter()))
             .enumerate()
         {
@@ -92,6 +140,7 @@ pub fn train<'p>(
                 dim: d,
                 solver,
                 loss: &*problem.losses[w],
+                compressor,
                 inbox: model_rx,
                 neighbors_tx: [
                     left.map(|l| model_txs[l].clone()),
@@ -104,8 +153,10 @@ pub fn train<'p>(
         }
         drop(report_tx);
 
-        // Leader loop.
+        // Leader loop. The default payload matches the actual wire size so
+        // any default-variant charge stays consistent with `slot_bits`.
         let mut meter = Meter::new(costs);
+        meter.set_payload_bits(slot_bits);
         let t0 = Instant::now();
         for k in 0..opts.max_iters {
             for tx in &cmd_txs {
@@ -113,20 +164,24 @@ pub fn train<'p>(
             }
             // Collect N reports for this iteration.
             let mut obj = 0.0;
+            let mut bits_by_worker = vec![0.0f64; n];
             for _ in 0..n {
                 let rep = report_rx.recv().expect("worker alive");
                 obj += rep.loss_value;
+                bits_by_worker[rep.id] = rep.bits_sent;
                 thetas[rep.id] = rep.theta;
             }
             // Charge communication structurally: every worker broadcast once
-            // to its neighbours, over two rounds (heads then tails).
+            // to its neighbours, over two rounds (heads then tails), each
+            // slot billed with the payload size the worker actually sent
+            // (constant for the shipped compressors, but correct for any).
             for phase in 0..2 {
                 meter.begin_round();
                 for p in (phase..n).step_by(2) {
                     let wid = chain.order[p];
                     let (l, r) = chain.neighbors(p);
                     let neigh: Vec<usize> = [l, r].into_iter().flatten().collect();
-                    meter.neighbor_broadcast(wid, &neigh);
+                    meter.neighbor_broadcast_bits(wid, &neigh, bits_by_worker[wid]);
                 }
             }
             let obj_err = (obj - problem.f_star).abs();
@@ -136,6 +191,7 @@ pub fn train<'p>(
                 obj_err,
                 tc_unit: meter.tc_unit,
                 tc_energy: meter.tc_energy,
+                bits: meter.bits,
                 rounds: meter.rounds,
                 elapsed: t0.elapsed(),
                 acv,
@@ -237,6 +293,33 @@ mod tests {
             result.trace.final_error()
         );
         assert!(crate::linalg::vector::dist2(&result.consensus, &p.theta_star) < 0.5);
+    }
+
+    #[test]
+    fn quantized_distributed_converges_with_exact_bits() {
+        let ds = synthetic::linreg(120, 6, &mut Pcg64::seeded(4));
+        let p = Problem::from_dataset(&ds, 6);
+        let opts = RunOptions::with_target(1e-4, 4000);
+        let costs = UnitCosts;
+        let result = train_with(
+            &p,
+            native_solvers(&p),
+            3.0,
+            Chain::sequential(6),
+            &costs,
+            &opts,
+            Some(QuantSpec { bits: 8, seed: 42 }),
+        );
+        assert!(
+            result.trace.iters_to_target().is_some(),
+            "err {}",
+            result.trace.final_error()
+        );
+        // Bit accounting closed form: N slots of d·b + 64 per iteration.
+        let iters = result.trace.records.len() as f64;
+        let per_msg = 6.0 * 8.0 + 64.0;
+        assert_eq!(result.trace.records.last().unwrap().bits, iters * 6.0 * per_msg);
+        assert!(result.trace.algorithm.starts_with("Q-GADMM-dist"));
     }
 
     #[test]

@@ -1,7 +1,10 @@
 //! Worker actor: owns its shard state and exchanges models with its chain
 //! neighbours over channels. The body of `run_worker` is Algorithm 1 from
-//! the worker's point of view.
+//! the worker's point of view — with the model exchange going through the
+//! pluggable [`Compressor`] seam, so the same actor runs dense GADMM and
+//! quantized Q-GADMM traffic.
 
+use crate::comm::{Compressor, Decoder, Msg};
 use crate::model::LocalLoss;
 use crate::runtime::LocalSolver;
 use std::sync::mpsc::{Receiver, Sender};
@@ -14,10 +17,11 @@ pub enum LeaderMsg {
     Shutdown,
 }
 
-/// Worker → worker neighbour messages.
+/// Worker → worker neighbour messages: one wire payload (dense or
+/// quantized; see [`crate::comm::quantize`]).
 pub struct WorkerMsg {
     pub from: usize,
-    pub theta: Vec<f64>,
+    pub payload: Msg,
 }
 
 /// Worker → leader monitoring report (instrumentation, not algorithm
@@ -26,6 +30,9 @@ pub struct Report {
     pub id: usize,
     pub loss_value: f64,
     pub theta: Vec<f64>,
+    /// Exact payload bits of this iteration's broadcast (the leader bills
+    /// the slot with this, so variable-size compressors stay accounted).
+    pub bits_sent: f64,
 }
 
 /// Everything a worker thread owns.
@@ -41,6 +48,10 @@ pub struct WorkerCtx<'a> {
     pub solver: Box<dyn LocalSolver + Send + 'a>,
     /// Loss used for monitoring reports (and dual bookkeeping checks).
     pub loss: &'a dyn LocalLoss,
+    /// Outbound model compression (identity for plain GADMM, stochastic
+    /// quantizer for Q-GADMM). Its public view is the model every
+    /// neighbour currently holds for this worker.
+    pub compressor: Box<dyn Compressor + 'a>,
     pub inbox: Receiver<WorkerMsg>,
     /// Senders to [left, right] neighbours.
     pub neighbors_tx: [Option<Sender<WorkerMsg>>; 2],
@@ -49,17 +60,18 @@ pub struct WorkerCtx<'a> {
 }
 
 /// Worker main loop.
-pub fn run_worker(ctx: WorkerCtx<'_>) {
+pub fn run_worker(mut ctx: WorkerCtx<'_>) {
     let d = ctx.dim;
     let mut theta = vec![0.0; d];
     // λ owned by this worker (couples it to its right neighbour); the left
     // neighbour's λ is tracked from its dual update rule, which this worker
-    // can mirror locally because it sees both endpoints' models.
+    // can mirror locally because it sees both endpoints' public models.
     let mut lambda_own = vec![0.0; d];
     let mut lambda_left = vec![0.0; d];
-    // Cached neighbour models (zero-initialized like everything else).
-    let mut theta_left = vec![0.0; d];
-    let mut theta_right = vec![0.0; d];
+    // Receiver-side decoder state per neighbour: each mirrors that sender's
+    // transmission anchor and *is* the cached public neighbour model.
+    let mut dec_left = Decoder::new(d);
+    let mut dec_right = Decoder::new(d);
     let mut q = vec![0.0; d];
 
     let expected_neighbors = ctx.left.is_some() as usize + ctx.right.is_some() as usize;
@@ -70,35 +82,41 @@ pub fn run_worker(ctx: WorkerCtx<'_>) {
             Ok(LeaderMsg::Iterate) => {}
         }
 
+        let bits_sent;
         if ctx.is_head {
             // Head phase: solve against cached (iteration-k) tail models,
             // then broadcast; finally receive the fresh tail models.
             theta = solve_local(
-                &ctx, &mut q, &theta, &theta_left, &theta_right, &lambda_left, &lambda_own,
+                &ctx, &mut q, &theta, dec_left.view(), dec_right.view(), &lambda_left, &lambda_own,
             );
-            send_model(&ctx, &theta);
-            recv_models(&ctx, expected_neighbors, &mut theta_left, &mut theta_right);
+            bits_sent = send_model(&mut ctx, &theta);
+            recv_models(&ctx, expected_neighbors, &mut dec_left, &mut dec_right);
         } else {
             // Tail phase: wait for fresh head models first (eq. 13 uses
             // θ^{k+1} of both head neighbours), then solve and send back.
-            recv_models(&ctx, expected_neighbors, &mut theta_left, &mut theta_right);
+            recv_models(&ctx, expected_neighbors, &mut dec_left, &mut dec_right);
             theta = solve_local(
-                &ctx, &mut q, &theta, &theta_left, &theta_right, &lambda_left, &lambda_own,
+                &ctx, &mut q, &theta, dec_left.view(), dec_right.view(), &lambda_left, &lambda_own,
             );
-            send_model(&ctx, &theta);
+            bits_sent = send_model(&mut ctx, &theta);
         }
 
-        // Dual updates (eq. 15), purely local: this worker's own λ couples
-        // (θ_w, θ_right); it also mirrors its left neighbour's λ because the
-        // update only involves (θ_left, θ_w), both known here.
+        // Dual updates (eq. 15) on the *public* models, purely local: every
+        // endpoint of a link holds bit-identical public values for both
+        // sides, so the mirrored duals stay consistent fleet-wide even
+        // under quantization. With the dense compressor the public view is
+        // exactly the model just sent, so this is plain GADMM.
+        let hat_own = ctx.compressor.public_view();
         if ctx.right.is_some() {
+            let theta_right = dec_right.view();
             for j in 0..d {
-                lambda_own[j] += ctx.rho * (theta[j] - theta_right[j]);
+                lambda_own[j] += ctx.rho * (hat_own[j] - theta_right[j]);
             }
         }
         if ctx.left.is_some() {
+            let theta_left = dec_left.view();
             for j in 0..d {
-                lambda_left[j] += ctx.rho * (theta_left[j] - theta[j]);
+                lambda_left[j] += ctx.rho * (theta_left[j] - hat_own[j]);
             }
         }
 
@@ -107,6 +125,7 @@ pub fn run_worker(ctx: WorkerCtx<'_>) {
                 id: ctx.id,
                 loss_value: ctx.loss.value(&theta),
                 theta: theta.clone(),
+                bits_sent,
             })
             .expect("leader alive");
     }
@@ -141,29 +160,29 @@ fn solve_local(
     ctx.solver.prox_argmin(q, c, theta_cur)
 }
 
-fn send_model(ctx: &WorkerCtx<'_>, theta: &[f64]) {
+/// Compress + broadcast once; returns the exact payload bits on the wire.
+fn send_model(ctx: &mut WorkerCtx<'_>, theta: &[f64]) -> f64 {
+    // One compression per iteration, shared by both receivers — a real
+    // radio broadcasts a single payload; channel fan-out models the two
+    // receivers of that single transmission.
+    let msg = ctx.compressor.compress(theta);
+    let bits = msg.payload_bits();
     for tx in ctx.neighbors_tx.iter().flatten() {
-        // A real radio would broadcast once; channel fan-out models the two
-        // receivers of that single transmission.
         let _ = tx.send(WorkerMsg {
             from: ctx.id,
-            theta: theta.to_vec(),
+            payload: msg.clone(),
         });
     }
+    bits
 }
 
-fn recv_models(
-    ctx: &WorkerCtx<'_>,
-    expected: usize,
-    theta_left: &mut Vec<f64>,
-    theta_right: &mut Vec<f64>,
-) {
+fn recv_models(ctx: &WorkerCtx<'_>, expected: usize, dec_left: &mut Decoder, dec_right: &mut Decoder) {
     for _ in 0..expected {
         let msg = ctx.inbox.recv().expect("neighbor alive");
         if Some(msg.from) == ctx.left {
-            *theta_left = msg.theta;
+            dec_left.apply(&msg.payload);
         } else if Some(msg.from) == ctx.right {
-            *theta_right = msg.theta;
+            dec_right.apply(&msg.payload);
         } else {
             panic!("worker {} received model from non-neighbor {}", ctx.id, msg.from);
         }
@@ -178,10 +197,10 @@ mod tests {
     fn worker_msg_carries_model() {
         let msg = WorkerMsg {
             from: 3,
-            theta: vec![1.0, 2.0],
+            payload: Msg::Dense(vec![1.0, 2.0]),
         };
         assert_eq!(msg.from, 3);
-        assert_eq!(msg.theta.len(), 2);
+        assert_eq!(msg.payload.payload_bits(), 128.0);
     }
 
     #[test]
@@ -196,5 +215,12 @@ mod tests {
         }
         assert_eq!(lam, vec![1.0, 1.0, 1.0]);
         assert_eq!(crate::linalg::vector::sub(&a, &b), vec![0.5, 0.5, 0.5]);
+    }
+
+    #[test]
+    fn decoder_pair_tracks_dense_stream() {
+        let mut dec = Decoder::new(2);
+        let v = dec.apply(&Msg::Dense(vec![0.25, -1.0])).to_vec();
+        assert_eq!(v, vec![0.25, -1.0]);
     }
 }

@@ -35,6 +35,7 @@ fn run_dynamic<E: Engine>(
     topo_rng: &mut Pcg64,
 ) -> Trace {
     let mut meter = Meter::new(costs);
+    meter.set_payload_bits(crate::comm::FP64_BITS * problem.dim as f64);
     let mut trace = Trace::new(&engine.name(), &problem.name, opts.target);
     let t0 = Instant::now();
     for k in 0..opts.max_iters {
@@ -50,6 +51,7 @@ fn run_dynamic<E: Engine>(
             obj_err,
             tc_unit: meter.tc_unit,
             tc_energy: meter.tc_energy,
+            bits: meter.bits,
             rounds: meter.rounds,
             elapsed: t0.elapsed(),
             acv: engine.acv(),

@@ -10,11 +10,14 @@
 //! * [`fig6::run`]     — Fig 6a/6b (energy-TC CDFs) + 6c (ACV curve)
 //! * [`fig7::run`]     — Fig 7 (D-GADMM under time-varying topology)
 //! * [`fig8::run`]     — Fig 8 (D-GADMM vs GADMM vs standard ADMM)
+//! * [`qgadmm::run`]   — GADMM vs Q-GADMM: transmitted bits to target
+//!   accuracy (the Q-GADMM follow-up's evaluation)
 
 pub mod curves;
 pub mod fig6;
 pub mod fig7;
 pub mod fig8;
+pub mod qgadmm;
 pub mod table1;
 
 use crate::metrics::Trace;
@@ -33,10 +36,11 @@ pub fn run_engine<E: Engine>(
 ) -> Trace {
     let t = optim::run(engine, problem, costs, opts);
     log::info!(
-        "{:<22} iters_to_target={:<8} tc={:<12} final_err={:.3e}",
+        "{:<22} iters_to_target={:<8} tc={:<12} bits={:<12} final_err={:.3e}",
         t.algorithm,
         t.iters_to_target().map(|k| k.to_string()).unwrap_or_else(|| "—".into()),
         t.tc_to_target().map(|c| format!("{c:.0}")).unwrap_or_else(|| "—".into()),
+        t.bits_to_target().map(|b| format!("{b:.3e}")).unwrap_or_else(|| "—".into()),
         t.final_error()
     );
     t

@@ -1,0 +1,131 @@
+//! Q-GADMM evaluation: GADMM vs quantized GADMM, total transmitted bits to
+//! the target accuracy — the Q-GADMM paper's headline comparison.
+//!
+//! Both algorithms pay the same `N` transmission slots per iteration; the
+//! entire gap is payload size. A dense GADMM broadcast carries `64·d` bits,
+//! a Q-GADMM broadcast `d·b + 64` (levels + range scalar), so at equal
+//! iteration counts b-bit quantization wins ≈`64/b`× on bits-on-the-wire.
+//! The driver sweeps `b`, verifies each run against the same objective
+//! threshold, and reports iterations, slot TC, exact bits, and the
+//! reduction factor relative to dense GADMM.
+
+use super::{run_engine, traces_to_json};
+use crate::comm::FP64_BITS;
+use crate::config::DatasetKind;
+use crate::metrics::Trace;
+use crate::model::Problem;
+use crate::optim::{Gadmm, Qgadmm, RunOptions};
+use crate::topology::UnitCosts;
+use crate::util::json::Json;
+use crate::util::table::{fmt_count, Table};
+
+/// Default bit-width sweep (the Q-GADMM paper evaluates low-bit regimes;
+/// 8 bits is the "safe" setting that tracks dense GADMM's iteration count).
+pub const DEFAULT_BITS: &[u32] = &[4, 8];
+
+pub struct QgadmmOutput {
+    /// Dense GADMM trace followed by one Q-GADMM trace per bit-width.
+    pub traces: Vec<Trace>,
+    pub rendered: String,
+    pub report: Json,
+}
+
+/// Run the comparison on one dataset. `bits` is the quantizer sweep;
+/// `rho` applies to every engine so the comparison isolates quantization.
+pub fn run(
+    kind: DatasetKind,
+    workers: usize,
+    rho: f64,
+    bits: &[u32],
+    target: f64,
+    max_iters: usize,
+    seed: u64,
+) -> QgadmmOutput {
+    let ds = kind.build(seed);
+    let problem = Problem::from_dataset(&ds, workers);
+    let costs = UnitCosts;
+    let opts = RunOptions::with_target(target, max_iters);
+
+    let mut traces = Vec::new();
+    traces.push(run_engine(&mut Gadmm::new(&problem, rho), &problem, &costs, &opts));
+    for &b in bits {
+        traces.push(run_engine(
+            &mut Qgadmm::new(&problem, rho, b, seed),
+            &problem,
+            &costs,
+            &opts,
+        ));
+    }
+
+    let dense_bits = traces[0].bits_to_target();
+    let mut table = Table::new(vec![
+        "Algorithm",
+        "iters→target",
+        "TC→target",
+        "bits→target",
+        "vs dense",
+    ]);
+    for t in &traces {
+        let ratio = match (dense_bits, t.bits_to_target()) {
+            (Some(d), Some(b)) if b > 0.0 => format!("{:.2}x", d / b),
+            _ => "—".into(),
+        };
+        table.row(vec![
+            t.algorithm.clone(),
+            t.iters_to_target().map(fmt_count).unwrap_or_else(|| "—".into()),
+            t.tc_to_target()
+                .map(|c| fmt_count(c as usize))
+                .unwrap_or_else(|| "—".into()),
+            t.bits_to_target()
+                .map(|b| format!("{b:.3e}"))
+                .unwrap_or_else(|| "—".into()),
+            ratio,
+        ]);
+    }
+    let rendered = format!(
+        "\nqgadmm — {} (N={workers}, rho={rho}), target {target:.0e}\n\
+         dense payload {:.0} bits/slot\n{}",
+        kind.name(),
+        FP64_BITS * problem.dim as f64,
+        table.render()
+    );
+    let report = Json::obj()
+        .set("experiment", "qgadmm")
+        .set("dataset", kind.name())
+        .set("workers", workers)
+        .set("rho", rho)
+        .set("target", target)
+        .set(
+            "bits_sweep",
+            Json::Arr(bits.iter().map(|&b| Json::Num(b as f64)).collect()),
+        )
+        .set("traces", traces_to_json(&traces, 200));
+    QgadmmOutput {
+        traces,
+        rendered,
+        report,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quantized_needs_fewer_bits_at_same_threshold() {
+        // Scaled-down instance; the paper-scale comparison runs in
+        // benches/bench_qgadmm.rs and the `gadmm qgadmm` CLI.
+        let out = run(DatasetKind::SyntheticLinreg, 6, 5.0, &[8], 1e-3, 20_000, 1);
+        assert_eq!(out.traces.len(), 2);
+        let dense = &out.traces[0];
+        let quant = &out.traces[1];
+        let db = dense.bits_to_target().expect("GADMM converges");
+        let qb = quant.bits_to_target().expect("Q-GADMM b=8 converges");
+        assert!(
+            qb * 2.0 < db,
+            "Q-GADMM bits {qb:.3e} not well below dense {db:.3e}"
+        );
+        assert!(out.rendered.contains("Q-GADMM"));
+        assert!(out.report.path("experiment").is_some());
+    }
+}

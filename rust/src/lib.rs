@@ -6,8 +6,10 @@
 //!
 //! * **L3 (this crate)** — the decentralized coordinator: chain topology,
 //!   head/tail group scheduling, neighbour-only messaging, dynamic
-//!   re-chaining (D-GADMM), communication-cost accounting, all baseline
-//!   algorithms, experiment drivers for every table/figure in the paper.
+//!   re-chaining (D-GADMM), quantized model exchange (Q-GADMM) behind the
+//!   pluggable [`comm::Compressor`] seam, bit-exact communication-cost
+//!   accounting, all baseline algorithms, experiment drivers for every
+//!   table/figure in the paper.
 //! * **L2/L1 (python/, build-time only)** — the per-worker subproblem solves
 //!   authored in JAX + Pallas, AOT-lowered to HLO text under `artifacts/`.
 //! * **runtime** — loads those artifacts through the PJRT C API (`xla`

@@ -3,19 +3,20 @@
 //! ```text
 //! gadmm train  [--dataset D] [--workers N] [--rho R] [--target T]
 //!              [--backend native|pjrt] [--chain sequential|greedy]
-//!              [--config FILE] [--out results/]
+//!              [--quant-bits B] [--config FILE] [--out results/]
 //! gadmm table1 [--workers 14,20,24,26] [--target 1e-4]
 //! gadmm fig2|fig3|fig4|fig5 [--target 1e-4]
 //! gadmm fig6  [--draws 1000]       gadmm fig6c
 //! gadmm fig7  [--workers 50] [--tau 15]
 //! gadmm fig8  [--workers 24]
+//! gadmm qgadmm [--workers 24] [--rho 5] [--bits 4,8] [--target 1e-4]
 //! gadmm all   — every table and figure, reports under results/
 //! ```
 
 use gadmm::config::{DatasetKind, RunConfig};
-use gadmm::coordinator;
+use gadmm::coordinator::{self, QuantSpec};
 use gadmm::data::partition_even;
-use gadmm::experiments::{curves, fig6, fig7, fig8, table1, write_report, write_trace_csv};
+use gadmm::experiments::{curves, fig6, fig7, fig8, qgadmm, table1, write_report, write_trace_csv};
 use gadmm::model::Problem;
 use gadmm::optim::RunOptions;
 use gadmm::runtime::{artifacts_dir, service::PjrtService, Manifest, NativeSolver};
@@ -161,8 +162,37 @@ fn dispatch(sub: &str, args: &Args) -> Result<(), String> {
             write_report(&out_dir(args), "fig8", &out.report).map_err(|e| e.to_string())?;
             Ok(())
         }
+        "qgadmm" => {
+            let workers = args.get_usize("workers", 24)?;
+            let rho = args.get_f64("rho", 5.0)?;
+            let bits: Vec<u32> = args
+                .get_usize_list("bits", &[4, 8])?
+                .into_iter()
+                .map(|b| match b {
+                    1..=32 => Ok(b as u32),
+                    other => Err(format!("--bits values must be in 1..=32, got {other}")),
+                })
+                .collect::<Result<_, _>>()?;
+            let target = args.get_f64("target", 1e-4)?;
+            let max_iters = args.get_usize("max-iters", 300_000)?;
+            let dataset = DatasetKind::parse(&args.get_string("dataset", "synthetic-linreg"))?;
+            let out = qgadmm::run(
+                dataset,
+                workers,
+                rho,
+                &bits,
+                target,
+                max_iters,
+                args.get_u64("seed", 1)?,
+            );
+            println!("{}", out.rendered);
+            let path =
+                write_report(&out_dir(args), "qgadmm", &out.report).map_err(|e| e.to_string())?;
+            println!("report: {}", path.display());
+            Ok(())
+        }
         "all" => {
-            for s in ["table1", "fig2", "fig3", "fig4", "fig5", "fig6", "fig7", "fig8"] {
+            for s in ["table1", "fig2", "fig3", "fig4", "fig5", "fig6", "fig7", "fig8", "qgadmm"] {
                 println!("=== {s} ===");
                 dispatch(s, args)?;
             }
@@ -191,10 +221,20 @@ fn cmd_train(args: &Args) -> Result<(), String> {
     cfg.target = args.get_f64("target", cfg.target)?;
     cfg.max_iters = args.get_usize("max-iters", cfg.max_iters)?;
     cfg.seed = args.get_u64("seed", cfg.seed)?;
+    if let Some(v) = args.get("quant-bits") {
+        cfg.quant_bits = Some(
+            v.parse()
+                .map_err(|_| format!("--quant-bits expects an integer, got '{v}'"))?,
+        );
+    }
     cfg.validate()?;
 
     let backend = args.get_string("backend", "native");
     let chain_kind = args.get_string("chain", "sequential");
+    let quant = cfg.quant_bits.map(|bits| QuantSpec {
+        bits,
+        seed: cfg.quant_seed_or_default(),
+    });
 
     let ds = cfg.dataset.build(cfg.seed);
     let problem = Problem::from_dataset(&ds, cfg.workers);
@@ -224,7 +264,7 @@ fn cmd_train(args: &Args) -> Result<(), String> {
                         as Box<dyn gadmm::runtime::LocalSolver + Send + '_>
                 })
                 .collect();
-            coordinator::train(&problem, solvers, cfg.rho, logical, &costs, &opts)
+            coordinator::train_with(&problem, solvers, cfg.rho, logical, &costs, &opts, quant)
         }
         "pjrt" => {
             let manifest = Manifest::load(&artifacts_dir())?;
@@ -237,16 +277,25 @@ fn cmd_train(args: &Args) -> Result<(), String> {
                 problem.data_weight,
             )
             .map_err(|e| format!("{e:#}"))?;
-            coordinator::train(&problem, service.solvers(), cfg.rho, logical, &costs, &opts)
+            coordinator::train_with(
+                &problem,
+                service.solvers(),
+                cfg.rho,
+                logical,
+                &costs,
+                &opts,
+                quant,
+            )
         }
         other => return Err(format!("unknown backend '{other}'")),
     };
 
     match result.trace.iters_to_target() {
         Some(k) => println!(
-            "converged: {} iterations, TC {}, final err {:.3e}",
+            "converged: {} iterations, TC {}, {:.3e} payload bits, final err {:.3e}",
             k,
             result.trace.tc_to_target().unwrap_or(f64::NAN),
+            result.trace.bits_to_target().unwrap_or(f64::NAN),
             result.trace.final_error()
         ),
         None => println!(
@@ -277,12 +326,15 @@ subcommands:
            --dataset synthetic-linreg|synthetic-logreg|bodyfat|derm
            --workers N --rho R --target T --max-iters K --seed S
            --backend native|pjrt   --chain sequential|greedy
+           --quant-bits B (Q-GADMM wire quantization, omit for dense)
            --config FILE (JSON, see configs/)
   table1   Table 1 grid (iterations + TC, real datasets)
   fig2..5  objective-error / TC / time curves per figure
   fig6     energy-TC CDFs over random topologies (+ fig6c ACV)
   fig7     D-GADMM vs GADMM, time-varying topology
   fig8     D-GADMM vs GADMM vs standard ADMM
+  qgadmm   GADMM vs Q-GADMM: transmitted bits to target accuracy
+           --workers N --rho R --bits 4,8 --target T
   all      everything above; JSON reports under results/
 
 common options: --out DIR (default results/), --csv, --seed S";

@@ -16,6 +16,9 @@ pub struct IterRecord {
     pub tc_unit: f64,
     /// Cumulative TC under the energy model (paper Fig 6–8).
     pub tc_energy: f64,
+    /// Cumulative payload bits on the wire (Q-GADMM's headline metric:
+    /// `d·b` + range overhead per quantized slot, `64·d` per dense slot).
+    pub bits: f64,
     /// Cumulative communication rounds.
     pub rounds: usize,
     /// Cumulative wall-clock compute time.
@@ -69,6 +72,11 @@ impl Trace {
         self.at_convergence().map(|r| r.tc_energy)
     }
 
+    /// Payload bits transmitted up to convergence (the Q-GADMM metric).
+    pub fn bits_to_target(&self) -> Option<f64> {
+        self.at_convergence().map(|r| r.bits)
+    }
+
     /// Wall time up to convergence.
     pub fn time_to_target(&self) -> Option<Duration> {
         self.at_convergence().map(|r| r.elapsed)
@@ -99,17 +107,18 @@ impl Trace {
         out
     }
 
-    /// CSV export: `iter,obj_err,tc_unit,tc_energy,rounds,seconds,acv`.
+    /// CSV export: `iter,obj_err,tc_unit,tc_energy,bits,rounds,seconds,acv`.
     pub fn write_csv<W: Write>(&self, w: &mut W) -> std::io::Result<()> {
-        writeln!(w, "iter,obj_err,tc_unit,tc_energy,rounds,seconds,acv")?;
+        writeln!(w, "iter,obj_err,tc_unit,tc_energy,bits,rounds,seconds,acv")?;
         for r in &self.records {
             writeln!(
                 w,
-                "{},{:.6e},{},{:.6e},{},{:.6e},{:.6e}",
+                "{},{:.6e},{},{:.6e},{},{},{:.6e},{:.6e}",
                 r.iter,
                 r.obj_err,
                 r.tc_unit,
                 r.tc_energy,
+                r.bits,
                 r.rounds,
                 r.elapsed.as_secs_f64(),
                 r.acv
@@ -129,6 +138,7 @@ impl Trace {
                     .set("obj_err", r.obj_err)
                     .set("tc_unit", r.tc_unit)
                     .set("tc_energy", r.tc_energy)
+                    .set("bits", r.bits)
                     .set("seconds", r.elapsed.as_secs_f64())
                     .set("acv", r.acv)
             })
@@ -144,6 +154,10 @@ impl Trace {
             .set(
                 "tc_to_target",
                 self.tc_to_target().map(Json::Num).unwrap_or(Json::Null),
+            )
+            .set(
+                "bits_to_target",
+                self.bits_to_target().map(Json::Num).unwrap_or(Json::Null),
             )
             .set("final_error", self.final_error())
             .set("curve", Json::Arr(curve))
@@ -205,6 +219,7 @@ mod tests {
             obj_err: err,
             tc_unit: (iter * 10) as f64,
             tc_energy: iter as f64 * 0.5,
+            bits: (iter * 640) as f64,
             rounds: iter * 2,
             elapsed: Duration::from_millis(iter as u64),
             acv: err / 10.0,
@@ -219,6 +234,7 @@ mod tests {
         }
         assert_eq!(t.iters_to_target(), Some(3));
         assert_eq!(t.tc_to_target(), Some(30.0));
+        assert_eq!(t.bits_to_target(), Some(1920.0));
         assert!((t.final_error() - 1e-6).abs() < 1e-18);
     }
 

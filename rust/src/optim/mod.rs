@@ -1,7 +1,7 @@
-//! Optimization engines: GADMM, D-GADMM, and every baseline the paper
-//! evaluates against (standard ADMM, GD, DGD, LAG-PS/WK, Cycle-IAG, R-IAG,
-//! decentralized dual averaging), plus the shared run driver and the
-//! high-precision reference solver.
+//! Optimization engines: GADMM, D-GADMM, Q-GADMM (quantized communication),
+//! and every baseline the paper evaluates against (standard ADMM, GD, DGD,
+//! LAG-PS/WK, Cycle-IAG, R-IAG, decentralized dual averaging), plus the
+//! shared run driver and the high-precision reference solver.
 //!
 //! Every engine implements [`Engine`]: `step(k, meter)` advances one
 //! iteration and charges its communication pattern to the [`Meter`], and
@@ -16,6 +16,7 @@ pub mod gadmm;
 pub mod gd;
 pub mod iag;
 pub mod lag;
+pub mod qgadmm;
 pub mod solver;
 
 pub use admm::Admm;
@@ -26,6 +27,7 @@ pub use gadmm::Gadmm;
 pub use gd::Gd;
 pub use iag::{Iag, IagOrder};
 pub use lag::{Lag, LagVariant};
+pub use qgadmm::Qgadmm;
 
 use crate::comm::Meter;
 use crate::metrics::{IterRecord, Trace};
@@ -93,6 +95,9 @@ pub fn run<E: Engine>(
     opts: &RunOptions,
 ) -> Trace {
     let mut meter = Meter::new(costs);
+    // Default slot payload: one dense f64 model. Engines that compress
+    // charge their exact payload through the meter's `*_bits` variants.
+    meter.set_payload_bits(crate::comm::FP64_BITS * problem.dim as f64);
     let mut trace = Trace::new(&engine.name(), &problem.name, opts.target);
     let mut compute_time = Duration::ZERO;
     for k in 0..opts.max_iters {
@@ -105,6 +110,7 @@ pub fn run<E: Engine>(
             obj_err,
             tc_unit: meter.tc_unit,
             tc_energy: meter.tc_energy,
+            bits: meter.bits,
             rounds: meter.rounds,
             elapsed: compute_time,
             acv: engine.acv(),

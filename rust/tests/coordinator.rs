@@ -2,11 +2,11 @@
 //! exactly equivalent to the sequential engine, across chains, tasks and
 //! worker counts, and must shut down cleanly.
 
-use gadmm::coordinator::{self};
+use gadmm::coordinator::{self, QuantSpec};
 use gadmm::data::synthetic;
 use gadmm::linalg::vector as vec_ops;
 use gadmm::model::Problem;
-use gadmm::optim::{run, Gadmm, RunOptions};
+use gadmm::optim::{run, Gadmm, Qgadmm, RunOptions};
 use gadmm::runtime::{LocalSolver, NativeSolver};
 use gadmm::topology::chain::Chain;
 use gadmm::topology::UnitCosts;
@@ -57,6 +57,82 @@ fn equivalence_on_permuted_chain_logreg() {
         assert!((a.obj_err - b.obj_err).abs() <= 1e-9 * (1.0 + b.obj_err));
         assert_eq!(a.acv, b.acv);
     }
+}
+
+#[test]
+fn quantized_distributed_matches_sequential_qgadmm() {
+    // The distributed Q-GADMM path (per-worker quantizers on the wire,
+    // mirrored duals over decoded public models) must be *bit-identical*
+    // to the sequential engine: same per-worker rounding seeds, same f64
+    // arithmetic, same trace.
+    let ds = synthetic::linreg(120, 6, &mut Pcg64::seeded(9));
+    let p = Problem::from_dataset(&ds, 6);
+    let opts = RunOptions::with_target(1e-5, 4_000);
+    let costs = UnitCosts;
+    let quant = QuantSpec { bits: 8, seed: 17 };
+
+    let dist = coordinator::train_with(
+        &p,
+        native_solvers(&p),
+        3.0,
+        Chain::sequential(6),
+        &costs,
+        &opts,
+        Some(quant),
+    );
+    let mut seq = Qgadmm::new(&p, 3.0, quant.bits, quant.seed);
+    let seq_trace = run(&mut seq, &p, &costs, &opts);
+
+    assert_eq!(
+        dist.trace.iters_to_target(),
+        seq_trace.iters_to_target(),
+        "distributed and sequential Q-GADMM must converge identically"
+    );
+    for (a, b) in dist.trace.records.iter().zip(&seq_trace.records) {
+        // The leader sums worker loss reports in arrival order, so the
+        // monitoring objective may differ by float-summation noise; the
+        // models and the accounting must agree exactly.
+        assert!(
+            (a.obj_err - b.obj_err).abs() <= 1e-9 * (1.0 + b.obj_err),
+            "iter {}: {} vs {}",
+            a.iter,
+            a.obj_err,
+            b.obj_err
+        );
+        assert_eq!(a.tc_unit, b.tc_unit);
+        assert_eq!(a.bits, b.bits, "iter {}: bit accounting mismatch", a.iter);
+    }
+    for (a, b) in dist.thetas.iter().zip(seq.thetas()) {
+        assert_eq!(a, b, "final model mismatch");
+    }
+}
+
+#[test]
+fn quantized_distributed_on_permuted_chain_converges() {
+    let ds = synthetic::linreg(80, 5, &mut Pcg64::seeded(10));
+    let p = Problem::from_dataset(&ds, 6);
+    let chain = Chain {
+        order: vec![0, 3, 2, 4, 1, 5],
+    };
+    let opts = RunOptions::with_target(1e-4, 6_000);
+    let costs = UnitCosts;
+    let dist = coordinator::train_with(
+        &p,
+        native_solvers(&p),
+        2.0,
+        chain.clone(),
+        &costs,
+        &opts,
+        Some(QuantSpec { bits: 6, seed: 4 }),
+    );
+    assert!(
+        dist.trace.iters_to_target().is_some(),
+        "err {}",
+        dist.trace.final_error()
+    );
+    let mut seq = Qgadmm::with_chain(&p, 2.0, 6, 4, chain);
+    let seq_trace = run(&mut seq, &p, &costs, &opts);
+    assert_eq!(dist.trace.iters_to_target(), seq_trace.iters_to_target());
 }
 
 #[test]

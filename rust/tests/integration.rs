@@ -154,6 +154,8 @@ fn config_round_trip_drives_dataset_construction() {
         seed: 2,
         area_side: 10.0,
         tau: 5,
+        quant_bits: None,
+        quant_seed: None,
     };
     let ds = cfg.dataset.build(cfg.seed);
     let p = Problem::from_dataset(&ds, cfg.workers);

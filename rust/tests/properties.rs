@@ -1,12 +1,14 @@
 //! Property tests (randomized, via util::prop) for the paper's invariants:
 //! chain validity, Lyapunov monotonicity (Theorem 2), tail dual
-//! feasibility (eq. 20), primal-residual decay, and TC accounting.
+//! feasibility (eq. 20), primal-residual decay, TC accounting, and the
+//! Q-GADMM quantizer (roundtrip error bound, stochastic-rounding
+//! unbiasedness, range shrinkage, bit-exact accounting).
 
-use gadmm::comm::Meter;
+use gadmm::comm::{Meter, QuantizedMsg, StochasticQuantizer, RANGE_OVERHEAD_BITS};
 use gadmm::data::synthetic;
 use gadmm::linalg::vector as vec_ops;
 use gadmm::model::Problem;
-use gadmm::optim::{solver, Engine, Gadmm};
+use gadmm::optim::{solver, Engine, Gadmm, Qgadmm};
 use gadmm::prop_assert;
 use gadmm::topology::chain::{self, Chain};
 use gadmm::topology::{EnergyCostModel, Placement, UnitCosts};
@@ -223,6 +225,188 @@ fn prop_energy_tc_scales_with_area() {
                     );
                 }
             }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_quantizer_roundtrip_error_bounded() {
+    // Stochastic uniform quantization with 2^b levels over [−R, R] around
+    // the anchor moves each coordinate by at most one level step,
+    // 2R/(2^b − 1) ≈ (full range)/2^b.
+    check(
+        "quantizer-roundtrip-bound",
+        808,
+        80,
+        |rng| {
+            let d = rng.range(1, 40);
+            let bits = rng.range(2, 13) as u32;
+            let scale = rng.uniform(0.05, 20.0);
+            let x: Vec<f64> = rng.normal_vec(d).iter().map(|v| v * scale).collect();
+            (d, bits, x, rng.next_u64())
+        },
+        |(d, bits, x, seed)| {
+            let mut q = StochasticQuantizer::new(*d, *bits, *seed);
+            let msg = q.encode(x);
+            let rec = q.public_view();
+            let step = 2.0 * msg.range / ((1u64 << *bits) - 1) as f64;
+            for (j, (xi, ri)) in x.iter().zip(rec).enumerate() {
+                prop_assert!(
+                    (xi - ri).abs() <= step + 1e-12,
+                    "coord {j}: |{xi} − {ri}| exceeds step {step} (b={bits})"
+                );
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_quantizer_stochastic_rounding_unbiased() {
+    // E[decode(encode(x))] = x: averaging reconstructions over many
+    // independent rounding seeds (fixed per case, so the test is
+    // deterministic) must concentrate around x at the Monte-Carlo rate.
+    check(
+        "quantizer-unbiased",
+        909,
+        6,
+        |rng| {
+            let d = rng.range(2, 10);
+            let bits = rng.range(2, 6) as u32;
+            (d, bits, rng.normal_vec(d), rng.next_u64())
+        },
+        |(d, bits, x, seed_base)| {
+            let trials = 4000usize;
+            let mut mean = vec![0.0; *d];
+            let mut range = 0.0;
+            for t in 0..trials {
+                let mut q = StochasticQuantizer::new(*d, *bits, seed_base.wrapping_add(t as u64));
+                let msg = q.encode(x);
+                range = msg.range;
+                for (m, r) in mean.iter_mut().zip(q.public_view()) {
+                    *m += r / trials as f64;
+                }
+            }
+            // Per-coordinate rounding variance is ≤ step²/4; allow 6 sigma.
+            let step = 2.0 * range / ((1u64 << *bits) - 1) as f64;
+            let tol = 6.0 * step / (2.0 * (trials as f64).sqrt());
+            for (j, (mi, xi)) in mean.iter().zip(x).enumerate() {
+                prop_assert!(
+                    (mi - xi).abs() <= tol,
+                    "coord {j}: bias {:.3e} exceeds {tol:.3e} (b={bits})",
+                    (mi - xi).abs()
+                );
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_quantizer_range_shrinks_on_contracting_iterates() {
+    // The Q-GADMM premise: when successive models contract geometrically
+    // (rate ≤ 1/2) and b ≥ 5, the transmitted range is monotonically
+    // non-increasing: with per-step quantization noise ≤ 2R/(2^b−1), the
+    // worst-case recursion R_{k+1} ≤ (contraction)·R_k·… stays below R_k
+    // exactly when 2/(2^b−1) ≤ 1/8, i.e. b ≥ 5.
+    check(
+        "quantizer-range-shrinkage",
+        1010,
+        40,
+        |rng| {
+            let d = rng.range(2, 16);
+            let bits = 5 + rng.range(0, 4) as u32;
+            (d, bits, rng.normal_vec(d), rng.next_u64())
+        },
+        |(d, bits, v, seed)| {
+            let mut q = StochasticQuantizer::new(*d, *bits, *seed);
+            let mut prev_range = f64::INFINITY;
+            for k in 0..40 {
+                let x: Vec<f64> = v.iter().map(|&vi| vi * 0.5f64.powi(k)).collect();
+                let msg = q.encode(&x);
+                prop_assert!(
+                    msg.range <= prev_range * (1.0 + 1e-12),
+                    "range grew at step {k}: {prev_range} → {} (b={bits})",
+                    msg.range
+                );
+                prev_range = msg.range;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_quantized_decode_is_receiver_consistent() {
+    // decode(prev, msg) is a pure function: replaying a message stream
+    // from the same anchor always lands on the sender's public view.
+    check(
+        "quantizer-decode-consistent",
+        1111,
+        40,
+        |rng| {
+            let d = rng.range(1, 12);
+            let bits = rng.range(1, 9) as u32;
+            let stream: Vec<Vec<f64>> = (0..8).map(|_| rng.normal_vec(d)).collect();
+            (d, bits, stream, rng.next_u64())
+        },
+        |(d, bits, stream, seed)| {
+            let mut q = StochasticQuantizer::new(*d, *bits, *seed);
+            let mut mirror = vec![0.0; *d];
+            for x in stream {
+                let msg: QuantizedMsg = q.encode(x);
+                mirror = msg.decode(&mirror);
+                prop_assert!(
+                    mirror == q.public_view(),
+                    "receiver mirror diverged from sender anchor"
+                );
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_qgadmm_bit_accounting_closed_form() {
+    // Q-GADMM charges exactly N slots of d·b + 64 bits per iteration;
+    // dense GADMM charges N slots of 64·d. Both for any chain length.
+    check(
+        "qgadmm-bits-closed-form",
+        1212,
+        12,
+        |rng| {
+            let n = 2 * rng.range(2, 6);
+            let d = rng.range(3, 8);
+            let bits = rng.range(2, 11) as u32;
+            (synthetic::linreg(20 * n, d, rng), n, d, bits, rng.range(1, 12))
+        },
+        |(ds, n, d, bits, iters)| {
+            let p = Problem::from_dataset(ds, *n);
+            let costs = UnitCosts;
+
+            let mut qe = Qgadmm::new(&p, 2.0, *bits, 3);
+            let mut meter = Meter::new(&costs);
+            for k in 0..*iters {
+                qe.step(k, &mut meter);
+            }
+            let per_msg = *d as f64 * *bits as f64 + RANGE_OVERHEAD_BITS;
+            let want = (*iters * *n) as f64 * per_msg;
+            prop_assert!(meter.bits == want, "Q-GADMM bits {} ≠ {want}", meter.bits);
+
+            let mut ge = Gadmm::new(&p, 2.0);
+            let mut gmeter = Meter::new(&costs);
+            gmeter.set_payload_bits(64.0 * *d as f64);
+            for k in 0..*iters {
+                ge.step(k, &mut gmeter);
+            }
+            let dense_want = (*iters * *n * *d * 64) as f64;
+            prop_assert!(
+                gmeter.bits == dense_want,
+                "GADMM bits {} ≠ {dense_want}",
+                gmeter.bits
+            );
+            prop_assert!(want < dense_want, "quantized payload not smaller");
             Ok(())
         },
     );
