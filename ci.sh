@@ -37,4 +37,7 @@ echo "==> tier-1: cargo build --release && cargo test -q"
 cargo build --release
 cargo test -q
 
+echo "==> smoke: gadmm sweep --quick (parallel grid runner + CLI)"
+./target/release/gadmm sweep --quick --out target/ci-sweep
+
 echo "CI OK"

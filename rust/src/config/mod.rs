@@ -6,6 +6,17 @@ use crate::data::Task;
 use crate::util::json::{self, Json};
 use std::path::Path;
 
+/// Single source of truth for the Q-GADMM wire-quantization range: every
+/// entry point (CLI flags, JSON configs, algorithm specs) funnels through
+/// this check, widening to `u64` first so oversized values are rejected
+/// rather than silently truncated into range.
+pub fn validate_quant_bits(bits: u64) -> Result<u32, String> {
+    match u32::try_from(bits) {
+        Ok(b) if (1..=32).contains(&b) => Ok(b),
+        _ => Err(format!("quantization bits must be in 1..=32, got {bits}")),
+    }
+}
+
 /// Which dataset a run uses.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum DatasetKind {
@@ -121,13 +132,7 @@ impl RunConfig {
                         Json::Null => None,
                         _ => {
                             let b = val.as_usize().ok_or("quant_bits must be a number")?;
-                            // Range-check before narrowing: `as u32` would
-                            // silently truncate huge values into the valid
-                            // range that validate() then accepts.
-                            Some(
-                                u32::try_from(b)
-                                    .map_err(|_| "quant_bits must be in 1..=32")?,
-                            )
+                            Some(validate_quant_bits(b as u64)?)
                         }
                     }
                 }
@@ -168,9 +173,7 @@ impl RunConfig {
             return Err("tau must be ≥ 1".into());
         }
         if let Some(b) = self.quant_bits {
-            if !(1..=32).contains(&b) {
-                return Err("quant_bits must be in 1..=32".into());
-            }
+            validate_quant_bits(b as u64)?;
         }
         Ok(())
     }
@@ -248,6 +251,18 @@ mod tests {
         );
         let ok = RunConfig::from_json(&json::parse(r#"{"quant_bits": 4}"#).unwrap()).unwrap();
         assert_eq!(ok.quant_bits, Some(4));
+    }
+
+    #[test]
+    fn quant_bits_error_message_is_single_sourced() {
+        for bad in [0u64, 33, 4_294_967_297] {
+            assert_eq!(
+                validate_quant_bits(bad).unwrap_err(),
+                format!("quantization bits must be in 1..=32, got {bad}")
+            );
+        }
+        assert_eq!(validate_quant_bits(1).unwrap(), 1);
+        assert_eq!(validate_quant_bits(32).unwrap(), 32);
     }
 
     #[test]

@@ -27,6 +27,7 @@ use crate::metrics::{IterRecord, Trace};
 use crate::model::Problem;
 use crate::optim::RunOptions;
 use crate::runtime::LocalSolver;
+use crate::session::AlgoSpec;
 use crate::topology::chain::Chain;
 use crate::topology::LinkCosts;
 use std::sync::mpsc;
@@ -69,6 +70,41 @@ pub fn train<'p>(
     opts: &RunOptions,
 ) -> TrainResult {
     train_with(problem, solvers, rho, chain, costs, opts, None)
+}
+
+/// [`train`] driven by a declarative [`AlgoSpec`]: GADMM runs the dense
+/// wire path, Q-GADMM the quantized one (`seed` feeds the per-worker
+/// stochastic-rounding generators, matching
+/// [`crate::config::RunConfig::quant_seed_or_default`]). The coordinator
+/// executes chain GADMM variants only — centralized baselines have no
+/// head/tail dataflow to distribute — so other specs are rejected rather
+/// than silently approximated.
+pub fn train_spec<'p>(
+    problem: &'p Problem,
+    solvers: Vec<Box<dyn LocalSolver + Send + 'p>>,
+    spec: &AlgoSpec,
+    seed: u64,
+    chain: Chain,
+    costs: &dyn LinkCosts,
+    opts: &RunOptions,
+) -> Result<TrainResult, String> {
+    match *spec {
+        AlgoSpec::Gadmm { rho } => Ok(train_with(problem, solvers, rho, chain, costs, opts, None)),
+        AlgoSpec::Qgadmm { rho, bits } => Ok(train_with(
+            problem,
+            solvers,
+            rho,
+            chain,
+            costs,
+            opts,
+            Some(QuantSpec { bits, seed }),
+        )),
+        ref other => Err(format!(
+            "the distributed coordinator implements static-chain GADMM/Q-GADMM only \
+             (no re-chaining, no centralized baselines), got '{}'",
+            other.spec_string()
+        )),
+    }
 }
 
 /// [`train`] with an optional quantized communication path: when `quant`
@@ -185,18 +221,22 @@ pub fn train_with<'p>(
                 }
             }
             let obj_err = (obj - problem.f_star).abs();
-            let acv = acv_along_chain(&chain, &thetas);
-            trace.push(IterRecord {
-                iter: k + 1,
-                obj_err,
-                tc_unit: meter.tc_unit,
-                tc_energy: meter.tc_energy,
-                bits: meter.bits,
-                rounds: meter.rounds,
-                elapsed: t0.elapsed(),
-                acv,
-            });
-            if obj_err <= opts.target || !obj_err.is_finite() || obj_err > opts.divergence {
+            // Same stride-thinning contract as optim::run: the final
+            // iteration is always flushed so convergence metrics stay exact.
+            let done = opts.is_final(k + 1, obj_err);
+            if done || opts.record_this(k + 1) {
+                trace.push(IterRecord {
+                    iter: k + 1,
+                    obj_err,
+                    tc_unit: meter.tc_unit,
+                    tc_energy: meter.tc_energy,
+                    bits: meter.bits,
+                    rounds: meter.rounds,
+                    elapsed: t0.elapsed(),
+                    acv: acv_along_chain(&chain, &thetas),
+                });
+            }
+            if done {
                 break;
             }
         }

@@ -6,11 +6,12 @@
 //! * Fig 4 — logistic regression, synthetic (N=24)
 //! * Fig 5 — logistic regression, Derm surrogate (N=10)
 
-use super::{run_engine, traces_to_json};
+use super::{run_roster, traces_to_json};
 use crate::config::DatasetKind;
 use crate::metrics::Trace;
 use crate::model::Problem;
-use crate::optim::{Dgd, DualAvg, Gadmm, Gd, Iag, IagOrder, Lag, LagVariant, RunOptions};
+use crate::optim::{IagOrder, LagVariant, RunOptions};
+use crate::session::AlgoSpec;
 use crate::topology::UnitCosts;
 use crate::util::json::Json;
 use crate::util::table::{fmt_count, Table};
@@ -70,6 +71,24 @@ impl Figure {
             Figure::Fig5 => "fig5",
         }
     }
+
+    /// The figure's full algorithm roster, as data: the GADMM ρ sweep
+    /// followed by every baseline the paper plots.
+    pub fn roster(&self) -> Vec<AlgoSpec> {
+        let xi = self.lag_xi();
+        let mut roster: Vec<AlgoSpec> =
+            self.rhos().into_iter().map(|rho| AlgoSpec::Gadmm { rho }).collect();
+        roster.extend([
+            AlgoSpec::Gd,
+            AlgoSpec::Lag { variant: LagVariant::Wk, xi },
+            AlgoSpec::Lag { variant: LagVariant::Ps, xi },
+            AlgoSpec::Iag { order: IagOrder::Cyclic },
+            AlgoSpec::Iag { order: IagOrder::RandomWeighted },
+            AlgoSpec::Dgd,
+            AlgoSpec::DualAvg,
+        ]);
+        roster
+    }
 }
 
 pub struct CurvesOutput {
@@ -86,25 +105,7 @@ pub fn run(fig: Figure, target: f64, max_iters: usize, seed: u64) -> CurvesOutpu
     let costs = UnitCosts;
     let opts = RunOptions::with_target(target, max_iters);
 
-    let mut traces = Vec::new();
-    for rho in fig.rhos() {
-        traces.push(run_engine(&mut Gadmm::new(&problem, rho), &problem, &costs, &opts));
-    }
-    traces.push(run_engine(&mut Gd::new(&problem), &problem, &costs, &opts));
-    for variant in [LagVariant::Wk, LagVariant::Ps] {
-        let mut lag = Lag::new(&problem, variant);
-        lag.xi = fig.lag_xi();
-        traces.push(run_engine(&mut lag, &problem, &costs, &opts));
-    }
-    traces.push(run_engine(&mut Iag::new(&problem, IagOrder::Cyclic, seed), &problem, &costs, &opts));
-    traces.push(run_engine(
-        &mut Iag::new(&problem, IagOrder::RandomWeighted, seed),
-        &problem,
-        &costs,
-        &opts,
-    ));
-    traces.push(run_engine(&mut Dgd::new(&problem), &problem, &costs, &opts));
-    traces.push(run_engine(&mut DualAvg::new(&problem), &problem, &costs, &opts));
+    let traces = run_roster(&fig.roster(), &problem, &costs, &opts, seed);
 
     let mut table = Table::new(vec![
         "Algorithm",
@@ -158,6 +159,20 @@ mod tests {
         assert_eq!(Figure::Fig2.rhos(), vec![3.0, 5.0, 7.0]);
         assert_eq!(Figure::Fig4.dataset(), DatasetKind::SyntheticLogreg);
         assert_eq!(Figure::Fig5.dataset(), DatasetKind::Derm);
+    }
+
+    #[test]
+    fn roster_declares_full_benchmark_suite() {
+        let roster = Figure::Fig2.roster();
+        // 3 GADMM ρ points + 7 baselines, in plot order.
+        assert_eq!(roster.len(), 10);
+        assert_eq!(roster[0], AlgoSpec::Gadmm { rho: 3.0 });
+        assert_eq!(roster[3], AlgoSpec::Gd);
+        assert_eq!(
+            roster[4],
+            AlgoSpec::Lag { variant: LagVariant::Wk, xi: Figure::Fig2.lag_xi() }
+        );
+        assert_eq!(roster[9], AlgoSpec::DualAvg);
     }
 
     #[test]

@@ -20,7 +20,8 @@ use crate::comm::Meter;
 use crate::config::DatasetKind;
 use crate::metrics::{Cdf, Trace};
 use crate::model::Problem;
-use crate::optim::{self, Engine, Gadmm, Gd, Iag, IagOrder, Lag, LagVariant, RunOptions};
+use crate::optim::{self, Engine, IagOrder, LagVariant, RunOptions};
+use crate::session::{AlgoSpec, BuildCtx};
 use crate::topology::{chain, EnergyCostModel, LinkCosts, Placement, UnitCosts};
 use crate::util::json::Json;
 use crate::util::rng::Pcg64;
@@ -33,7 +34,7 @@ struct CentralTally {
     converged: bool,
 }
 
-fn tally<E: Engine>(engine: &mut E, problem: &Problem, opts: &RunOptions) -> CentralTally {
+fn tally(engine: &mut dyn Engine, problem: &Problem, opts: &RunOptions) -> CentralTally {
     let unit = UnitCosts;
     let mut meter = Meter::new(&unit);
     let name = engine.name();
@@ -84,16 +85,16 @@ pub fn run_panel(
     };
 
     // Topology-independent baselines, tallied once.
-    let mut lag_wk = Lag::new(&problem, LagVariant::Wk);
-    lag_wk.xi = lag_xi;
-    let mut lag_ps = Lag::new(&problem, LagVariant::Ps);
-    lag_ps.xi = lag_xi;
-    let tallies = vec![
-        tally(&mut Gd::new(&problem), &problem, &opts),
-        tally(&mut lag_wk, &problem, &opts),
-        tally(&mut lag_ps, &problem, &opts),
-        tally(&mut Iag::new(&problem, IagOrder::Cyclic, seed), &problem, &opts),
+    let baselines = [
+        AlgoSpec::Gd,
+        AlgoSpec::Lag { variant: LagVariant::Wk, xi: lag_xi },
+        AlgoSpec::Lag { variant: LagVariant::Ps, xi: lag_xi },
+        AlgoSpec::Iag { order: IagOrder::Cyclic },
     ];
+    let tallies: Vec<CentralTally> = baselines
+        .iter()
+        .map(|spec| tally(&mut *spec.build(&problem, seed), &problem, &opts))
+        .collect();
 
     let mut rng = Pcg64::new(seed, 0xf16a);
     let mut samples: Vec<Vec<f64>> = vec![Vec::new(); tallies.len() + 1];
@@ -114,8 +115,13 @@ pub fn run_panel(
         }
         // GADMM: build the Appendix-D chain for this placement and run.
         let logical = chain::rechain(workers, &costs, &mut rng);
-        let mut g = Gadmm::with_chain(&problem, rho, logical);
-        let trace = optim::run(&mut g, &problem, &costs, &opts);
+        let mut g = AlgoSpec::Gadmm { rho }.build_in(&BuildCtx {
+            problem: &problem,
+            costs: &costs,
+            seed,
+            chain: Some(logical),
+        });
+        let trace = optim::run(&mut *g, &problem, &costs, &opts);
         if let Some(e) = trace.energy_to_target() {
             samples[tallies.len()].push(e);
         }
@@ -173,7 +179,12 @@ pub fn run_acv(target: f64, max_iters: usize, seed: u64) -> (Trace, Json) {
     let ds = DatasetKind::SyntheticLogreg.build(seed);
     let problem = Problem::from_dataset(&ds, 4);
     let opts = RunOptions::with_target(target, max_iters);
-    let trace = run_engine(&mut Gadmm::new(&problem, 1.0), &problem, &UnitCosts, &opts);
+    let trace = run_engine(
+        &mut *AlgoSpec::Gadmm { rho: 1.0 }.build(&problem, seed),
+        &problem,
+        &UnitCosts,
+        &opts,
+    );
     let final_acv = trace.records.last().map(|r| r.acv).unwrap_or(f64::NAN);
     let report = Json::obj()
         .set("panel", "fig6c")

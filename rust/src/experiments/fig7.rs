@@ -10,7 +10,8 @@ use crate::comm::Meter;
 use crate::config::DatasetKind;
 use crate::metrics::{IterRecord, Trace};
 use crate::model::Problem;
-use crate::optim::{Dgadmm, Engine, Gadmm, RechainMode, RunOptions};
+use crate::optim::{Engine, RechainMode, RunOptions};
+use crate::session::{AlgoSpec, BuildCtx};
 use crate::topology::{chain, DynamicCosts, EnergyCostModel, Placement};
 use crate::util::json::Json;
 use crate::util::rng::Pcg64;
@@ -24,7 +25,7 @@ pub struct Fig7Output {
 
 /// Drive an engine with the topology re-randomized every `coherence`
 /// iterations.
-fn run_dynamic<E: Engine>(
+fn run_dynamic<E: Engine + ?Sized>(
     engine: &mut E,
     problem: &Problem,
     costs: &DynamicCosts,
@@ -46,17 +47,20 @@ fn run_dynamic<E: Engine>(
         }
         engine.step(k, &mut meter);
         let obj_err = (engine.objective() - problem.f_star).abs();
-        trace.push(IterRecord {
-            iter: k + 1,
-            obj_err,
-            tc_unit: meter.tc_unit,
-            tc_energy: meter.tc_energy,
-            bits: meter.bits,
-            rounds: meter.rounds,
-            elapsed: t0.elapsed(),
-            acv: engine.acv(),
-        });
-        if obj_err <= opts.target || !obj_err.is_finite() || obj_err > opts.divergence {
+        let done = opts.is_final(k + 1, obj_err);
+        if done || opts.record_this(k + 1) {
+            trace.push(IterRecord {
+                iter: k + 1,
+                obj_err,
+                tc_unit: meter.tc_unit,
+                tc_energy: meter.tc_energy,
+                bits: meter.bits,
+                rounds: meter.rounds,
+                elapsed: t0.elapsed(),
+                acv: engine.acv(),
+            });
+        }
+        if done {
             break;
         }
     }
@@ -86,10 +90,15 @@ pub fn run(
         let costs = DynamicCosts::new(initial_model.clone());
         let mut chain_rng = Pcg64::new(seed, 0xc4a1);
         let logical = chain::rechain(workers, &costs, &mut chain_rng);
-        let mut engine = Gadmm::with_chain(&problem, rho, logical);
+        let mut engine = AlgoSpec::Gadmm { rho }.build_in(&BuildCtx {
+            problem: &problem,
+            costs: &costs,
+            seed,
+            chain: Some(logical),
+        });
         let mut topo_rng = Pcg64::new(seed, 0x70b0);
         run_dynamic(
-            &mut engine,
+            &mut *engine,
             &problem,
             &costs,
             workers,
@@ -103,10 +112,16 @@ pub fn run(
     // D-GADMM: re-chains every coherence interval (announced overhead).
     let dgadmm = {
         let costs = DynamicCosts::new(initial_model);
-        let mut engine = Dgadmm::new(&problem, rho, coherence, RechainMode::Announced, &costs, seed);
+        let spec = AlgoSpec::Dgadmm { rho, tau: coherence, mode: RechainMode::Announced };
+        let mut engine = spec.build_in(&BuildCtx {
+            problem: &problem,
+            costs: &costs,
+            seed,
+            chain: None,
+        });
         let mut topo_rng = Pcg64::new(seed, 0x70b0); // same topology evolution
         run_dynamic(
-            &mut engine,
+            &mut *engine,
             &problem,
             &costs,
             workers,

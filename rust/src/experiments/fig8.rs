@@ -12,8 +12,9 @@ use super::run_engine;
 use crate::config::DatasetKind;
 use crate::metrics::Trace;
 use crate::model::Problem;
-use crate::optim::{Admm, Dgadmm, Gadmm, RechainMode, RunOptions};
-use crate::topology::{chain, EnergyCostModel, Placement};
+use crate::optim::{RechainMode, RunOptions};
+use crate::session::{AlgoSpec, BuildCtx};
+use crate::topology::{chain, chain::Chain, EnergyCostModel, Placement};
 use crate::util::json::Json;
 use crate::util::rng::Pcg64;
 use crate::util::table::{fmt_count, Table};
@@ -32,23 +33,22 @@ pub fn run(workers: usize, rho: f64, target: f64, max_iters: usize, seed: u64) -
     let placement = Placement::random(workers, 250.0, &mut rng);
     let costs = EnergyCostModel::new(&placement, placement.central_worker());
 
-    let mut traces = Vec::new();
-    // Static GADMM on the Appendix-D chain of this placement.
-    {
-        let logical = chain::rechain(workers, &costs, &mut rng);
-        let mut e = Gadmm::with_chain(&problem, rho, logical);
-        traces.push(run_engine(&mut e, &problem, &costs, &opts));
-    }
-    // D-GADMM, free re-chaining every iteration (predefined sequence).
-    {
-        let mut e = Dgadmm::new(&problem, rho, 1, RechainMode::Free, &costs, seed);
-        traces.push(run_engine(&mut e, &problem, &costs, &opts));
-    }
-    // Standard parameter-server ADMM (star topology to the central worker).
-    {
-        let mut e = Admm::new(&problem, rho);
-        traces.push(run_engine(&mut e, &problem, &costs, &opts));
-    }
+    // The figure's roster: static GADMM on the Appendix-D chain of this
+    // placement, D-GADMM with free per-iteration re-chaining (predefined
+    // sequence), and standard parameter-server ADMM (star topology).
+    let logical = chain::rechain(workers, &costs, &mut rng);
+    let roster: [(AlgoSpec, Option<Chain>); 3] = [
+        (AlgoSpec::Gadmm { rho }, Some(logical)),
+        (AlgoSpec::Dgadmm { rho, tau: 1, mode: RechainMode::Free }, None),
+        (AlgoSpec::Admm { rho }, None),
+    ];
+    let traces: Vec<Trace> = roster
+        .into_iter()
+        .map(|(spec, chain)| {
+            let mut e = spec.build_in(&BuildCtx { problem: &problem, costs: &costs, seed, chain });
+            run_engine(&mut *e, &problem, &costs, &opts)
+        })
+        .collect();
 
     let mut table = Table::new(vec!["Algorithm", "iters→target", "energy TC→target", "final err"]);
     for t in &traces {

@@ -23,12 +23,13 @@ pub mod table1;
 use crate::metrics::Trace;
 use crate::model::Problem;
 use crate::optim::{self, Engine, RunOptions};
+use crate::session::AlgoSpec;
 use crate::topology::LinkCosts;
 use crate::util::json::Json;
 use std::path::Path;
 
 /// Run one engine and return its trace (shared helper).
-pub fn run_engine<E: Engine>(
+pub fn run_engine<E: Engine + ?Sized>(
     engine: &mut E,
     problem: &Problem,
     costs: &dyn LinkCosts,
@@ -44,6 +45,21 @@ pub fn run_engine<E: Engine>(
         t.final_error()
     );
     t
+}
+
+/// Run a declarative algorithm roster on one problem, in roster order —
+/// the figure drivers declare `Vec<AlgoSpec>` and delegate here.
+pub fn run_roster(
+    roster: &[AlgoSpec],
+    problem: &Problem,
+    costs: &dyn LinkCosts,
+    opts: &RunOptions,
+    seed: u64,
+) -> Vec<Trace> {
+    roster
+        .iter()
+        .map(|spec| run_engine(&mut *spec.build(problem, seed), problem, costs, opts))
+        .collect()
 }
 
 /// Write an experiment's JSON report under `results/`.

@@ -9,12 +9,13 @@
 //! threshold, and reports iterations, slot TC, exact bits, and the
 //! reduction factor relative to dense GADMM.
 
-use super::{run_engine, traces_to_json};
+use super::{run_roster, traces_to_json};
 use crate::comm::FP64_BITS;
 use crate::config::DatasetKind;
 use crate::metrics::Trace;
 use crate::model::Problem;
-use crate::optim::{Gadmm, Qgadmm, RunOptions};
+use crate::optim::RunOptions;
+use crate::session::AlgoSpec;
 use crate::topology::UnitCosts;
 use crate::util::json::Json;
 use crate::util::table::{fmt_count, Table};
@@ -46,16 +47,11 @@ pub fn run(
     let costs = UnitCosts;
     let opts = RunOptions::with_target(target, max_iters);
 
-    let mut traces = Vec::new();
-    traces.push(run_engine(&mut Gadmm::new(&problem, rho), &problem, &costs, &opts));
-    for &b in bits {
-        traces.push(run_engine(
-            &mut Qgadmm::new(&problem, rho, b, seed),
-            &problem,
-            &costs,
-            &opts,
-        ));
-    }
+    // Dense GADMM followed by one Q-GADMM per bit-width, at the same ρ so
+    // the comparison isolates quantization.
+    let mut roster = vec![AlgoSpec::Gadmm { rho }];
+    roster.extend(bits.iter().map(|&b| AlgoSpec::Qgadmm { rho, bits: b }));
+    let traces = run_roster(&roster, &problem, &costs, &opts, seed);
 
     let dense_bits = traces[0].bits_to_target();
     let mut table = Table::new(vec![

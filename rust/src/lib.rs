@@ -15,8 +15,10 @@
 //! * **runtime** — loads those artifacts through the PJRT C API (`xla`
 //!   crate) so Python is never on the training path.
 //!
-//! Start with [`optim`] for the algorithms, [`coordinator`] for the
-//! distributed execution, and [`experiments`] for the paper's evaluation.
+//! Start with [`optim`] for the algorithms, [`session`] for declarative
+//! run orchestration (`AlgoSpec` registry, parallel sweeps, trace sinks),
+//! [`coordinator`] for the distributed execution, and [`experiments`] for
+//! the paper's evaluation.
 
 pub mod comm;
 pub mod config;
@@ -28,5 +30,6 @@ pub mod metrics;
 pub mod model;
 pub mod optim;
 pub mod runtime;
+pub mod session;
 pub mod topology;
 pub mod util;

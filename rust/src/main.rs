@@ -4,6 +4,9 @@
 //! gadmm train  [--dataset D] [--workers N] [--rho R] [--target T]
 //!              [--backend native|pjrt] [--chain sequential|greedy]
 //!              [--quant-bits B] [--config FILE] [--out results/]
+//! gadmm sweep  [--algos 'gadmm:rho=5;qgadmm:rho=5,bits=8;gd']
+//!              [--datasets synthetic-linreg,bodyfat] [--workers 10,24]
+//!              [--seeds 1,2] [--threads K] [--stride 1] [--quick]
 //! gadmm table1 [--workers 14,20,24,26] [--target 1e-4]
 //! gadmm fig2|fig3|fig4|fig5 [--target 1e-4]
 //! gadmm fig6  [--draws 1000]       gadmm fig6c
@@ -13,20 +16,21 @@
 //! gadmm all   — every table and figure, reports under results/
 //! ```
 
-use gadmm::config::{DatasetKind, RunConfig};
-use gadmm::coordinator::{self, QuantSpec};
+use gadmm::config::{validate_quant_bits, DatasetKind, RunConfig};
+use gadmm::coordinator;
 use gadmm::data::partition_even;
 use gadmm::experiments::{curves, fig6, fig7, fig8, qgadmm, table1, write_report, write_trace_csv};
 use gadmm::model::Problem;
 use gadmm::optim::RunOptions;
 use gadmm::runtime::{artifacts_dir, service::PjrtService, Manifest, NativeSolver};
+use gadmm::session::{AlgoSpec, SweepRunner, SweepSpec};
 use gadmm::topology::{chain, EnergyCostModel, Placement, UnitCosts};
 use gadmm::util::cli::Args;
 use gadmm::util::rng::Pcg64;
 use std::path::PathBuf;
 use std::process::ExitCode;
 
-const FLAGS: &[&str] = &["quiet", "csv"];
+const FLAGS: &[&str] = &["quiet", "csv", "quick"];
 
 fn main() -> ExitCode {
     gadmm::util::logging::init();
@@ -54,6 +58,7 @@ fn out_dir(args: &Args) -> PathBuf {
 fn dispatch(sub: &str, args: &Args) -> Result<(), String> {
     match sub {
         "train" => cmd_train(args),
+        "sweep" => cmd_sweep(args),
         "table1" => {
             let workers = args.get_usize_list("workers", &[14, 20, 24, 26])?;
             let target = args.get_f64("target", 1e-4)?;
@@ -168,10 +173,7 @@ fn dispatch(sub: &str, args: &Args) -> Result<(), String> {
             let bits: Vec<u32> = args
                 .get_usize_list("bits", &[4, 8])?
                 .into_iter()
-                .map(|b| match b {
-                    1..=32 => Ok(b as u32),
-                    other => Err(format!("--bits values must be in 1..=32, got {other}")),
-                })
+                .map(|b| validate_quant_bits(b as u64).map_err(|e| format!("--bits: {e}")))
                 .collect::<Result<_, _>>()?;
             let target = args.get_f64("target", 1e-4)?;
             let max_iters = args.get_usize("max-iters", 300_000)?;
@@ -222,19 +224,21 @@ fn cmd_train(args: &Args) -> Result<(), String> {
     cfg.max_iters = args.get_usize("max-iters", cfg.max_iters)?;
     cfg.seed = args.get_u64("seed", cfg.seed)?;
     if let Some(v) = args.get("quant-bits") {
-        cfg.quant_bits = Some(
-            v.parse()
-                .map_err(|_| format!("--quant-bits expects an integer, got '{v}'"))?,
-        );
+        let raw: u64 = v
+            .parse()
+            .map_err(|_| format!("--quant-bits expects an integer, got '{v}'"))?;
+        cfg.quant_bits = Some(validate_quant_bits(raw)?);
     }
     cfg.validate()?;
 
     let backend = args.get_string("backend", "native");
     let chain_kind = args.get_string("chain", "sequential");
-    let quant = cfg.quant_bits.map(|bits| QuantSpec {
-        bits,
-        seed: cfg.quant_seed_or_default(),
-    });
+    // The coordinator consumes a declarative spec; dense vs quantized wire
+    // traffic is the spec's concern, not per-call-site plumbing.
+    let spec = match cfg.quant_bits {
+        Some(bits) => AlgoSpec::Qgadmm { rho: cfg.rho, bits },
+        None => AlgoSpec::Gadmm { rho: cfg.rho },
+    };
 
     let ds = cfg.dataset.build(cfg.seed);
     let problem = Problem::from_dataset(&ds, cfg.workers);
@@ -256,6 +260,7 @@ fn cmd_train(args: &Args) -> Result<(), String> {
     let opts = RunOptions::with_target(cfg.target, cfg.max_iters);
     let costs = UnitCosts;
 
+    let quant_seed = cfg.quant_seed_or_default();
     let result = match backend.as_str() {
         "native" => {
             let solvers = (0..cfg.workers)
@@ -264,7 +269,7 @@ fn cmd_train(args: &Args) -> Result<(), String> {
                         as Box<dyn gadmm::runtime::LocalSolver + Send + '_>
                 })
                 .collect();
-            coordinator::train_with(&problem, solvers, cfg.rho, logical, &costs, &opts, quant)
+            coordinator::train_spec(&problem, solvers, &spec, quant_seed, logical, &costs, &opts)?
         }
         "pjrt" => {
             let manifest = Manifest::load(&artifacts_dir())?;
@@ -277,15 +282,15 @@ fn cmd_train(args: &Args) -> Result<(), String> {
                 problem.data_weight,
             )
             .map_err(|e| format!("{e:#}"))?;
-            coordinator::train_with(
+            coordinator::train_spec(
                 &problem,
                 service.solvers(),
-                cfg.rho,
+                &spec,
+                quant_seed,
                 logical,
                 &costs,
                 &opts,
-                quant,
-            )
+            )?
         }
         other => return Err(format!("unknown backend '{other}'")),
     };
@@ -313,10 +318,83 @@ fn cmd_train(args: &Args) -> Result<(), String> {
         &gadmm::util::json::Json::obj()
             .set("config", cfg.to_json())
             .set("backend", backend.as_str())
+            .set("algo", spec.to_json())
             .set("trace", result.trace.to_json(200)),
     )
     .map_err(|e| e.to_string())?;
     Ok(())
+}
+
+/// `gadmm sweep`: run a declarative grid (algorithms × datasets × worker
+/// counts × seeds) across a thread pool and report cell-keyed traces.
+fn cmd_sweep(args: &Args) -> Result<(), String> {
+    let quick = args.flag("quick");
+    if quick {
+        // The fixed CI grid would silently discard explicit grid flags.
+        for flag in ["algos", "datasets", "workers", "seeds", "target", "max-iters", "stride"] {
+            if args.get(flag).is_some() {
+                return Err(format!(
+                    "--quick runs a fixed CI grid; drop --{flag} or drop --quick"
+                ));
+            }
+        }
+    }
+    let spec = if quick {
+        // CI smoke grid: 2 algorithms × 1 dataset × 2 worker counts,
+        // loose target so the whole grid finishes in seconds.
+        SweepSpec {
+            algos: vec![AlgoSpec::Gadmm { rho: 5.0 }, AlgoSpec::Gd],
+            datasets: vec![DatasetKind::SyntheticLinreg],
+            workers: vec![4, 6],
+            seeds: vec![1],
+            target: 1e-2,
+            max_iters: 5_000,
+            record_stride: 10,
+        }
+    } else {
+        SweepSpec {
+            algos: parse_algo_list(&args.get_string("algos", "gadmm:rho=5;gd"))?,
+            datasets: args
+                .get_string("datasets", "synthetic-linreg")
+                .split(',')
+                .map(|s| DatasetKind::parse(s.trim()))
+                .collect::<Result<_, _>>()?,
+            workers: args.get_usize_list("workers", &[24])?,
+            seeds: args
+                .get_usize_list("seeds", &[1])?
+                .into_iter()
+                .map(|s| s as u64)
+                .collect(),
+            target: args.get_f64("target", 1e-4)?,
+            max_iters: args.get_usize("max-iters", 300_000)?,
+            record_stride: args.get_usize("stride", 1)?,
+        }
+    };
+    let default_threads = if quick { 2 } else { SweepRunner::default_threads() };
+    let runner = SweepRunner::new(args.get_usize("threads", default_threads)?);
+    let out = runner.run(&spec)?;
+    println!("{}", out.rendered());
+    let path =
+        write_report(&out_dir(args), "sweep", &out.report(&spec)).map_err(|e| e.to_string())?;
+    println!("report: {}", path.display());
+    Ok(())
+}
+
+/// Parse `--algos`: spec strings separated by `;`, each in the
+/// `kind:key=value,…` form, e.g. `gadmm:rho=5;qgadmm:rho=5,bits=8`.
+/// (`;` only — whitespace may legitimately appear inside one spec's
+/// parameter list, and `AlgoSpec::parse` trims it.)
+fn parse_algo_list(s: &str) -> Result<Vec<AlgoSpec>, String> {
+    let specs: Vec<AlgoSpec> = s
+        .split(';')
+        .map(str::trim)
+        .filter(|p| !p.is_empty())
+        .map(AlgoSpec::parse)
+        .collect::<Result<_, _>>()?;
+    if specs.is_empty() {
+        return Err("--algos lists no algorithms".into());
+    }
+    Ok(specs)
 }
 
 const HELP: &str = "gadmm — decentralized GADMM training framework (paper reproduction)
@@ -328,6 +406,11 @@ subcommands:
            --backend native|pjrt   --chain sequential|greedy
            --quant-bits B (Q-GADMM wire quantization, omit for dense)
            --config FILE (JSON, see configs/)
+  sweep    parallel grid sweep: algorithms x datasets x workers x seeds
+           --algos 'gadmm:rho=5;qgadmm:rho=5,bits=8;lag:variant=wk;gd'
+           --datasets D1,D2  --workers 10,24  --seeds 1,2
+           --threads K (default: all cores)  --stride k (trace thinning)
+           --quick (tiny CI grid on 2 threads)
   table1   Table 1 grid (iterations + TC, real datasets)
   fig2..5  objective-error / TC / time curves per figure
   fig6     energy-TC CDFs over random topologies (+ fig6c ACV)

@@ -6,6 +6,10 @@ use crate::util::json::Json;
 use std::io::Write;
 use std::time::Duration;
 
+/// Column header shared by [`Trace::write_csv`] and the streaming CSV sink
+/// (`session::CsvSink`), so both emit byte-identical files.
+pub const CSV_HEADER: &str = "iter,obj_err,tc_unit,tc_energy,bits,rounds,seconds,acv";
+
 /// One iteration's measurements.
 #[derive(Clone, Debug)]
 pub struct IterRecord {
@@ -26,6 +30,37 @@ pub struct IterRecord {
     /// Average consensus violation Σ‖θ_n − θ_{n+1}‖₁ / N (0 for
     /// centralized algorithms, which hold one consensus iterate).
     pub acv: f64,
+}
+
+impl IterRecord {
+    /// One CSV row in the [`CSV_HEADER`] column order.
+    pub fn write_csv_row<W: Write>(&self, w: &mut W) -> std::io::Result<()> {
+        writeln!(
+            w,
+            "{},{:.6e},{},{:.6e},{},{},{:.6e},{:.6e}",
+            self.iter,
+            self.obj_err,
+            self.tc_unit,
+            self.tc_energy,
+            self.bits,
+            self.rounds,
+            self.elapsed.as_secs_f64(),
+            self.acv
+        )
+    }
+
+    /// Equality on everything deterministic (wall-clock `elapsed` excluded).
+    /// Floats compare bitwise so a diverged run's NaN record still equals
+    /// its identical re-run — `==` would call two NaN traces different.
+    pub fn same_measurements(&self, other: &IterRecord) -> bool {
+        self.iter == other.iter
+            && self.obj_err.to_bits() == other.obj_err.to_bits()
+            && self.tc_unit.to_bits() == other.tc_unit.to_bits()
+            && self.tc_energy.to_bits() == other.tc_energy.to_bits()
+            && self.bits.to_bits() == other.bits.to_bits()
+            && self.rounds == other.rounds
+            && self.acv.to_bits() == other.acv.to_bits()
+    }
 }
 
 /// A complete run of one algorithm on one problem.
@@ -109,22 +144,27 @@ impl Trace {
 
     /// CSV export: `iter,obj_err,tc_unit,tc_energy,bits,rounds,seconds,acv`.
     pub fn write_csv<W: Write>(&self, w: &mut W) -> std::io::Result<()> {
-        writeln!(w, "iter,obj_err,tc_unit,tc_energy,bits,rounds,seconds,acv")?;
+        writeln!(w, "{CSV_HEADER}")?;
         for r in &self.records {
-            writeln!(
-                w,
-                "{},{:.6e},{},{:.6e},{},{},{:.6e},{:.6e}",
-                r.iter,
-                r.obj_err,
-                r.tc_unit,
-                r.tc_energy,
-                r.bits,
-                r.rounds,
-                r.elapsed.as_secs_f64(),
-                r.acv
-            )?;
+            r.write_csv_row(w)?;
         }
         Ok(())
+    }
+
+    /// Whether two traces took the same deterministic path: same algorithm,
+    /// convergence point, and per-record measurements (wall-clock timing is
+    /// the one field allowed to differ). This is the invariant the parallel
+    /// sweep runner pins: thread count must not change any trace.
+    pub fn same_path(&self, other: &Trace) -> bool {
+        self.algorithm == other.algorithm
+            && self.problem == other.problem
+            && self.converged_at == other.converged_at
+            && self.records.len() == other.records.len()
+            && self
+                .records
+                .iter()
+                .zip(&other.records)
+                .all(|(a, b)| a.same_measurements(b))
     }
 
     /// JSON summary (downsampled curve + convergence stats).

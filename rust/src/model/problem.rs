@@ -49,7 +49,7 @@ impl Problem {
                 .collect(),
         };
         let dim = ds.dim();
-        let (theta_star, f_star) = crate::optim::solver::solve_reference(&losses, dim, ds.task);
+        let (theta_star, f_star) = crate::optim::solver::solve_reference(&losses, dim);
         Problem {
             name: format!("{}-N{}", ds.name, n_workers),
             task: ds.task,

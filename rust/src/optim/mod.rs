@@ -32,6 +32,7 @@ pub use qgadmm::Qgadmm;
 use crate::comm::Meter;
 use crate::metrics::{IterRecord, Trace};
 use crate::model::Problem;
+use crate::session::TraceSink;
 use crate::topology::LinkCosts;
 use std::time::{Duration, Instant};
 
@@ -53,6 +54,11 @@ pub trait Engine {
     }
 }
 
+/// Dense recording prefix: the first `DENSE_RECORD_PREFIX` iterations are
+/// always recorded regardless of `record_stride`, so the early convergence
+/// curve (where the figures' action happens) keeps full resolution.
+pub const DENSE_RECORD_PREFIX: usize = 1_000;
+
 /// Options for a driver run.
 #[derive(Clone, Debug)]
 pub struct RunOptions {
@@ -62,6 +68,14 @@ pub struct RunOptions {
     pub max_iters: usize,
     /// Abort threshold: treat the run as diverged past this error.
     pub divergence: f64,
+    /// Record every `record_stride`-th iteration after the first
+    /// `dense_prefix` (default [`DENSE_RECORD_PREFIX`]), so 300k-iteration
+    /// traces stop holding ~300k records in memory. The final iteration —
+    /// convergence, divergence, or cap — is always recorded, which keeps
+    /// `iters_to_target`/`bits_to_target` exact. 1 records everything.
+    pub record_stride: usize,
+    /// How many leading iterations are always recorded (dense curve head).
+    pub dense_prefix: usize,
 }
 
 impl Default for RunOptions {
@@ -70,6 +84,8 @@ impl Default for RunOptions {
             target: 1e-4,
             max_iters: 200_000,
             divergence: 1e12,
+            record_stride: 1,
+            dense_prefix: DENSE_RECORD_PREFIX,
         }
     }
 }
@@ -82,45 +98,106 @@ impl RunOptions {
             ..Default::default()
         }
     }
+
+    /// Builder-style trace thinning override.
+    pub fn with_stride(mut self, record_stride: usize) -> RunOptions {
+        assert!(record_stride >= 1, "record_stride must be ≥ 1");
+        self.record_stride = record_stride;
+        self
+    }
+
+    /// Whether iteration `iter` (1-based) is recorded under the stride
+    /// schedule. The driver additionally records the final iteration of a
+    /// run unconditionally.
+    pub fn record_this(&self, iter: usize) -> bool {
+        self.record_stride <= 1 || iter <= self.dense_prefix || iter % self.record_stride == 0
+    }
+
+    /// Whether iteration `iter` (1-based) ends the run: target reached,
+    /// divergence, or the iteration cap. Every driver (sequential,
+    /// coordinator, fig7's dynamic loop) gates its final-record flush on
+    /// this one predicate so the stride contract can't drift between them.
+    pub fn is_final(&self, iter: usize, obj_err: f64) -> bool {
+        obj_err <= self.target
+            || !obj_err.is_finite()
+            || obj_err > self.divergence
+            || iter == self.max_iters
+    }
 }
 
 /// Drive an engine until the target accuracy or the iteration cap, recording
 /// objective error, cumulative TC (unit + energy), rounds, compute time, and
 /// ACV per iteration. Only `step` time is attributed to the run (objective
 /// evaluation is measurement instrumentation, as in the paper's simulation).
-pub fn run<E: Engine>(
+pub fn run<E: Engine + ?Sized>(
     engine: &mut E,
     problem: &Problem,
     costs: &dyn LinkCosts,
     opts: &RunOptions,
 ) -> Trace {
+    run_with_sinks(engine, problem, costs, opts, &mut [])
+}
+
+/// [`run`] with streaming record consumers: every record the trace keeps is
+/// also pushed, in order, into each attached [`TraceSink`] as it is
+/// produced. Sink I/O failures are logged and do not abort the run.
+pub fn run_with_sinks<E: Engine + ?Sized>(
+    engine: &mut E,
+    problem: &Problem,
+    costs: &dyn LinkCosts,
+    opts: &RunOptions,
+    sinks: &mut [&mut dyn TraceSink],
+) -> Trace {
     let mut meter = Meter::new(costs);
     // Default slot payload: one dense f64 model. Engines that compress
     // charge their exact payload through the meter's `*_bits` variants.
     meter.set_payload_bits(crate::comm::FP64_BITS * problem.dim as f64);
-    let mut trace = Trace::new(&engine.name(), &problem.name, opts.target);
+    let name = engine.name();
+    let mut trace = Trace::new(&name, &problem.name, opts.target);
+    for sink in sinks.iter_mut() {
+        if let Err(e) = sink.begin(&name, &problem.name) {
+            log::warn!("trace sink failed to start: {e}");
+        }
+    }
     let mut compute_time = Duration::ZERO;
     for k in 0..opts.max_iters {
         let t0 = Instant::now();
         engine.step(k, &mut meter);
         compute_time += t0.elapsed();
         let obj_err = (engine.objective() - problem.f_star).abs();
-        trace.push(IterRecord {
-            iter: k + 1,
-            obj_err,
-            tc_unit: meter.tc_unit,
-            tc_energy: meter.tc_energy,
-            bits: meter.bits,
-            rounds: meter.rounds,
-            elapsed: compute_time,
-            acv: engine.acv(),
-        });
+        let diverged = !obj_err.is_finite() || obj_err > opts.divergence;
+        // The run's last iteration is always flushed to the trace so the
+        // convergence-point metrics stay exact under stride thinning.
+        let done = opts.is_final(k + 1, obj_err);
+        if done || opts.record_this(k + 1) {
+            let rec = IterRecord {
+                iter: k + 1,
+                obj_err,
+                tc_unit: meter.tc_unit,
+                tc_energy: meter.tc_energy,
+                bits: meter.bits,
+                rounds: meter.rounds,
+                elapsed: compute_time,
+                acv: engine.acv(),
+            };
+            for sink in sinks.iter_mut() {
+                if let Err(e) = sink.record(&rec) {
+                    log::warn!("trace sink write failed at iteration {}: {e}", k + 1);
+                }
+            }
+            trace.push(rec);
+        }
         if obj_err <= opts.target {
             break;
         }
-        if !obj_err.is_finite() || obj_err > opts.divergence {
-            log::warn!("{} diverged at iteration {k} (err {obj_err:.3e})", engine.name());
+        if diverged {
+            log::warn!("{name} diverged at iteration {k} (err {obj_err:.3e})");
             break;
+        }
+    }
+    for sink in sinks.iter_mut() {
+        if let Err(e) = sink.finish(&trace) {
+            log::warn!("trace sink failed to finish: {e}");
         }
     }
     trace
@@ -166,6 +243,31 @@ mod tests {
         assert_eq!(k, 10); // 2^-10 < 1e-3
         assert_eq!(trace.tc_to_target(), Some(10.0));
         assert_eq!(trace.records.len(), 10);
+    }
+
+    #[test]
+    fn stride_thins_but_keeps_convergence_exact() {
+        let ds = synthetic::linreg(40, 4, &mut Pcg64::seeded(3));
+        let problem = crate::model::Problem::from_dataset(&ds, 2);
+        let run_with = |stride: usize| {
+            let mut engine = Halver {
+                err: 1.0,
+                offset: problem.f_star,
+            };
+            let mut opts = RunOptions::with_target(1e-9, 100).with_stride(stride);
+            opts.dense_prefix = 0;
+            run(&mut engine, &problem, &UnitCosts, &opts)
+        };
+        let dense = run_with(1);
+        let thin = run_with(7);
+        // 2^-30 < 1e-9: both schedules report the exact convergence point.
+        assert_eq!(dense.iters_to_target(), Some(30));
+        assert_eq!(thin.iters_to_target(), Some(30));
+        assert_eq!(thin.tc_to_target(), dense.tc_to_target());
+        assert_eq!(thin.bits_to_target(), dense.bits_to_target());
+        // Thin trace keeps 7, 14, 21, 28 and the final-record flush at 30.
+        assert_eq!(thin.records.len(), 5);
+        assert_eq!(dense.records.len(), 30);
     }
 
     #[test]

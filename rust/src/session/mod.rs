@@ -1,0 +1,25 @@
+//! The session layer: declarative run orchestration.
+//!
+//! Experiments describe *what* to run as data and this layer turns it into
+//! executed, recorded runs:
+//!
+//! * [`AlgoSpec`] — a serializable algorithm description with a registry
+//!   factory ([`AlgoSpec::build`]) reaching every [`crate::optim`] engine,
+//!   JSON round-trips, and a CLI parse path (`gadmm:rho=5`).
+//! * [`SweepSpec`] / [`SweepRunner`] — grid sweeps (algorithms × datasets ×
+//!   worker counts × seeds) fanned out over a scoped thread pool with
+//!   deterministic per-cell seeding.
+//! * [`TraceSink`] — streaming per-iteration record consumers (CSV, JSON
+//!   report, in-memory) threaded through [`crate::optim::run_with_sinks`].
+//!
+//! The figure drivers under [`crate::experiments`] are thin clients of this
+//! layer: each declares its roster as a `Vec<AlgoSpec>` and lets the
+//! session machinery build, run, and record.
+
+pub mod sink;
+pub mod spec;
+pub mod sweep;
+
+pub use sink::{CsvSink, JsonReportSink, MemorySink, TraceSink};
+pub use spec::{AlgoSpec, BuildCtx};
+pub use sweep::{CellKey, SweepCell, SweepOutput, SweepRunner, SweepSpec};

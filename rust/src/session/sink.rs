@@ -1,0 +1,181 @@
+//! Streaming trace sinks.
+//!
+//! The run driver ([`crate::optim::run_with_sinks`]) pushes every recorded
+//! [`IterRecord`] into the attached sinks as it is produced, so long runs
+//! stream to disk instead of being re-serialized ad hoc by each experiment
+//! after the fact. Sinks receive exactly the records the trace keeps
+//! (i.e. after `record_stride` thinning), in order.
+
+use crate::metrics::{IterRecord, Trace, CSV_HEADER};
+use crate::util::json::Json;
+use std::io::{self, Write};
+
+/// A consumer of per-iteration records from a run.
+pub trait TraceSink {
+    /// Called once before the first record of a run.
+    fn begin(&mut self, _algorithm: &str, _problem: &str) -> io::Result<()> {
+        Ok(())
+    }
+
+    /// Called for every recorded iteration, in iteration order.
+    fn record(&mut self, rec: &IterRecord) -> io::Result<()>;
+
+    /// Called once after the run with the completed trace.
+    fn finish(&mut self, _trace: &Trace) -> io::Result<()> {
+        Ok(())
+    }
+}
+
+/// Streams records as CSV rows — byte-identical to [`Trace::write_csv`].
+pub struct CsvSink<W: Write> {
+    w: W,
+}
+
+impl<W: Write> CsvSink<W> {
+    pub fn new(w: W) -> CsvSink<W> {
+        CsvSink { w }
+    }
+
+    /// Recover the underlying writer (e.g. an in-memory buffer).
+    pub fn into_inner(self) -> W {
+        self.w
+    }
+}
+
+impl<W: Write> TraceSink for CsvSink<W> {
+    fn begin(&mut self, _algorithm: &str, _problem: &str) -> io::Result<()> {
+        writeln!(self.w, "{CSV_HEADER}")
+    }
+
+    fn record(&mut self, rec: &IterRecord) -> io::Result<()> {
+        rec.write_csv_row(&mut self.w)
+    }
+
+    fn finish(&mut self, _trace: &Trace) -> io::Result<()> {
+        self.w.flush()
+    }
+}
+
+/// Writes the run's JSON report (downsampled curve + convergence stats)
+/// when the run finishes.
+pub struct JsonReportSink<W: Write> {
+    w: W,
+    curve_points: usize,
+}
+
+impl<W: Write> JsonReportSink<W> {
+    pub fn new(w: W, curve_points: usize) -> JsonReportSink<W> {
+        JsonReportSink { w, curve_points }
+    }
+
+    pub fn into_inner(self) -> W {
+        self.w
+    }
+}
+
+impl<W: Write> TraceSink for JsonReportSink<W> {
+    fn record(&mut self, _rec: &IterRecord) -> io::Result<()> {
+        Ok(())
+    }
+
+    fn finish(&mut self, trace: &Trace) -> io::Result<()> {
+        self.w
+            .write_all(trace.to_json(self.curve_points).to_string_pretty().as_bytes())?;
+        self.w.flush()
+    }
+}
+
+/// Collects records in memory (tests, downstream analysis).
+#[derive(Default)]
+pub struct MemorySink {
+    pub algorithm: String,
+    pub problem: String,
+    pub records: Vec<IterRecord>,
+    /// The completed trace's JSON summary, set at `finish`.
+    pub summary: Option<Json>,
+}
+
+impl MemorySink {
+    pub fn new() -> MemorySink {
+        MemorySink::default()
+    }
+}
+
+impl TraceSink for MemorySink {
+    fn begin(&mut self, algorithm: &str, problem: &str) -> io::Result<()> {
+        self.algorithm = algorithm.to_string();
+        self.problem = problem.to_string();
+        Ok(())
+    }
+
+    fn record(&mut self, rec: &IterRecord) -> io::Result<()> {
+        self.records.push(rec.clone());
+        Ok(())
+    }
+
+    fn finish(&mut self, trace: &Trace) -> io::Result<()> {
+        self.summary = Some(trace.to_json(usize::MAX));
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    fn rec(iter: usize) -> IterRecord {
+        IterRecord {
+            iter,
+            obj_err: 1.0 / iter as f64,
+            tc_unit: iter as f64,
+            tc_energy: iter as f64 * 0.5,
+            bits: iter as f64 * 640.0,
+            rounds: iter * 2,
+            elapsed: Duration::from_millis(iter as u64),
+            acv: 0.0,
+        }
+    }
+
+    #[test]
+    fn csv_sink_matches_trace_writer() {
+        let mut trace = Trace::new("alg", "prob", 1e-9);
+        let mut sink = CsvSink::new(Vec::new());
+        sink.begin("alg", "prob").unwrap();
+        for k in 1..=3 {
+            let r = rec(k);
+            sink.record(&r).unwrap();
+            trace.push(r);
+        }
+        sink.finish(&trace).unwrap();
+        let mut direct = Vec::new();
+        trace.write_csv(&mut direct).unwrap();
+        assert_eq!(sink.into_inner(), direct);
+    }
+
+    #[test]
+    fn memory_sink_collects() {
+        let mut trace = Trace::new("alg", "prob", 1e-9);
+        let mut sink = MemorySink::new();
+        sink.begin("alg", "prob").unwrap();
+        let r = rec(1);
+        sink.record(&r).unwrap();
+        trace.push(r);
+        sink.finish(&trace).unwrap();
+        assert_eq!(sink.records.len(), 1);
+        assert_eq!(sink.algorithm, "alg");
+        assert!(sink.summary.is_some());
+    }
+
+    #[test]
+    fn json_sink_emits_report() {
+        let mut trace = Trace::new("alg", "prob", 1e-9);
+        trace.push(rec(1));
+        let mut sink = JsonReportSink::new(Vec::new(), 10);
+        sink.record(&trace.records[0]).unwrap();
+        sink.finish(&trace).unwrap();
+        let text = String::from_utf8(sink.into_inner()).unwrap();
+        let parsed = crate::util::json::parse(&text).unwrap();
+        assert_eq!(parsed.path("algorithm").unwrap().as_str(), Some("alg"));
+    }
+}

@@ -1,0 +1,449 @@
+//! Declarative algorithm specifications.
+//!
+//! Every optimizer in [`crate::optim`] is reachable from an [`AlgoSpec`]
+//! value, so experiment rosters are *data* — a `Vec<AlgoSpec>` — rather
+//! than imperative constructor calls at five different call sites. Specs
+//! round-trip through JSON (`to_json`/`from_json`) and through compact CLI
+//! strings (`parse`/`spec_string`) like `gadmm:rho=5` or
+//! `lag:variant=wk,xi=0.05`, and build running engines via the
+//! [`AlgoSpec::build`] registry (see `docs/adr/002-algospec-registry.md`).
+
+use crate::config::validate_quant_bits;
+use crate::model::Problem;
+use crate::optim::{
+    Admm, Dgadmm, Dgd, DualAvg, Engine, Gadmm, Gd, Iag, IagOrder, Lag, LagVariant, Qgadmm,
+    RechainMode,
+};
+use crate::topology::chain::Chain;
+use crate::topology::{LinkCosts, UnitCosts};
+use crate::util::json::Json;
+
+/// Default engine costs for the context-free [`AlgoSpec::build`] path.
+static UNIT_COSTS: UnitCosts = UnitCosts;
+
+/// A serializable description of one algorithm configuration.
+///
+/// Parameters carried here are exactly the ones the paper sweeps; seeds,
+/// problems, and topology arrive at build time so the same spec can run on
+/// every grid cell of a sweep.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum AlgoSpec {
+    /// Chain GADMM (Algorithm 1) with penalty ρ.
+    Gadmm { rho: f64 },
+    /// Q-GADMM: GADMM with stochastically quantized model exchange.
+    Qgadmm { rho: f64, bits: u32 },
+    /// D-GADMM: GADMM re-chaining every `tau` iterations.
+    Dgadmm { rho: f64, tau: usize, mode: RechainMode },
+    /// LAG-WK / LAG-PS with trigger scale ξ.
+    Lag { variant: LagVariant, xi: f64 },
+    /// Cycle-IAG / R-IAG.
+    Iag { order: IagOrder },
+    /// Batch gradient descent.
+    Gd,
+    /// Decentralized gradient descent.
+    Dgd,
+    /// Decentralized dual averaging.
+    DualAvg,
+    /// Standard parameter-server ADMM.
+    Admm { rho: f64 },
+}
+
+/// Everything an engine may need at construction time beyond its spec.
+pub struct BuildCtx<'a> {
+    pub problem: &'a Problem,
+    /// Link costs (D-GADMM's re-chaining heuristic reads these).
+    pub costs: &'a dyn LinkCosts,
+    /// Seed for stochastic engines (IAG sampling, Q-GADMM rounding,
+    /// D-GADMM's shared pseudorandom chain code).
+    pub seed: u64,
+    /// Logical chain override for the static chain engines (GADMM,
+    /// Q-GADMM); `None` means the identity chain 0–1–…–(N−1). D-GADMM
+    /// derives its own initial chain from `costs` + `seed` (the shared
+    /// pseudorandom code) and re-chains as it runs, so it ignores this.
+    pub chain: Option<Chain>,
+}
+
+impl AlgoSpec {
+    /// The spec's kind tag (the CLI-string prefix and JSON `algo` field).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            AlgoSpec::Gadmm { .. } => "gadmm",
+            AlgoSpec::Qgadmm { .. } => "qgadmm",
+            AlgoSpec::Dgadmm { .. } => "dgadmm",
+            AlgoSpec::Lag { .. } => "lag",
+            AlgoSpec::Iag { .. } => "iag",
+            AlgoSpec::Gd => "gd",
+            AlgoSpec::Dgd => "dgd",
+            AlgoSpec::DualAvg => "dualavg",
+            AlgoSpec::Admm { .. } => "admm",
+        }
+    }
+
+    /// Short display label (paper table row names).
+    pub fn label(&self) -> &'static str {
+        match self {
+            AlgoSpec::Gadmm { .. } => "GADMM",
+            AlgoSpec::Qgadmm { .. } => "Q-GADMM",
+            AlgoSpec::Dgadmm { .. } => "D-GADMM",
+            AlgoSpec::Lag { variant: LagVariant::Wk, .. } => "LAG-WK",
+            AlgoSpec::Lag { variant: LagVariant::Ps, .. } => "LAG-PS",
+            AlgoSpec::Iag { order: IagOrder::Cyclic } => "Cycle-IAG",
+            AlgoSpec::Iag { order: IagOrder::RandomWeighted } => "R-IAG",
+            AlgoSpec::Gd => "GD",
+            AlgoSpec::Dgd => "DGD",
+            AlgoSpec::DualAvg => "DualAvg",
+            AlgoSpec::Admm { .. } => "ADMM",
+        }
+    }
+
+    /// Whether the engine runs on a logical chain and therefore requires an
+    /// even worker count (Algorithm 1's head/tail split).
+    pub fn needs_even_workers(&self) -> bool {
+        matches!(
+            self,
+            AlgoSpec::Gadmm { .. } | AlgoSpec::Qgadmm { .. } | AlgoSpec::Dgadmm { .. }
+        )
+    }
+
+    /// Canonical CLI string; `parse` inverts this exactly.
+    pub fn spec_string(&self) -> String {
+        match *self {
+            AlgoSpec::Gadmm { rho } => format!("gadmm:rho={rho}"),
+            AlgoSpec::Qgadmm { rho, bits } => format!("qgadmm:rho={rho},bits={bits}"),
+            AlgoSpec::Dgadmm { rho, tau, mode } => {
+                format!("dgadmm:rho={rho},tau={tau},mode={}", mode_str(mode))
+            }
+            AlgoSpec::Lag { variant, xi } => {
+                format!("lag:variant={},xi={xi}", variant_str(variant))
+            }
+            AlgoSpec::Iag { order } => format!("iag:order={}", order_str(order)),
+            AlgoSpec::Gd => "gd".into(),
+            AlgoSpec::Dgd => "dgd".into(),
+            AlgoSpec::DualAvg => "dualavg".into(),
+            AlgoSpec::Admm { rho } => format!("admm:rho={rho}"),
+        }
+    }
+
+    /// Parse a CLI string: `kind[:key=value,key=value,…]`. Omitted keys take
+    /// the registry defaults; unknown keys and out-of-range values error.
+    pub fn parse(s: &str) -> Result<AlgoSpec, String> {
+        let s = s.trim();
+        let (kind, rest) = match s.split_once(':') {
+            Some((k, r)) => (k, r),
+            None => (s, ""),
+        };
+        let mut params = Params::parse(kind, rest)?;
+        let spec = match kind {
+            "gadmm" => AlgoSpec::Gadmm { rho: params.take_rho(5.0)? },
+            "qgadmm" => AlgoSpec::Qgadmm {
+                rho: params.take_rho(5.0)?,
+                bits: validate_quant_bits(params.take_u64("bits", 8)?)?,
+            },
+            "dgadmm" => AlgoSpec::Dgadmm {
+                rho: params.take_rho(1.0)?,
+                tau: match params.take_u64("tau", 15)? {
+                    0 => return Err("dgadmm tau must be ≥ 1".into()),
+                    t => t as usize,
+                },
+                mode: match params.take_str("mode", "free")?.as_str() {
+                    "free" => RechainMode::Free,
+                    "announced" => RechainMode::Announced,
+                    other => return Err(format!("unknown dgadmm mode '{other}' (free|announced)")),
+                },
+            },
+            "lag" => AlgoSpec::Lag {
+                variant: match params.take_str("variant", "wk")?.as_str() {
+                    "wk" => LagVariant::Wk,
+                    "ps" => LagVariant::Ps,
+                    other => return Err(format!("unknown lag variant '{other}' (wk|ps)")),
+                },
+                xi: params.take_positive("xi", 0.05)?,
+            },
+            "iag" => AlgoSpec::Iag {
+                order: match params.take_str("order", "cyclic")?.as_str() {
+                    "cyclic" => IagOrder::Cyclic,
+                    "random" => IagOrder::RandomWeighted,
+                    other => return Err(format!("unknown iag order '{other}' (cyclic|random)")),
+                },
+            },
+            "gd" => AlgoSpec::Gd,
+            "dgd" => AlgoSpec::Dgd,
+            "dualavg" => AlgoSpec::DualAvg,
+            "admm" => AlgoSpec::Admm { rho: params.take_rho(5.0)? },
+            other => {
+                return Err(format!(
+                    "unknown algorithm '{other}' (expected one of gadmm, qgadmm, dgadmm, lag, \
+                     iag, gd, dgd, dualavg, admm)"
+                ))
+            }
+        };
+        params.finish()?;
+        Ok(spec)
+    }
+
+    /// JSON form: a flat object tagged by `algo`; inverse of `from_json`.
+    pub fn to_json(&self) -> Json {
+        let j = Json::obj().set("algo", self.kind());
+        match *self {
+            AlgoSpec::Gadmm { rho } => j.set("rho", rho),
+            AlgoSpec::Qgadmm { rho, bits } => j.set("rho", rho).set("bits", bits as usize),
+            AlgoSpec::Dgadmm { rho, tau, mode } => {
+                j.set("rho", rho).set("tau", tau).set("mode", mode_str(mode))
+            }
+            AlgoSpec::Lag { variant, xi } => {
+                j.set("variant", variant_str(variant)).set("xi", xi)
+            }
+            AlgoSpec::Iag { order } => j.set("order", order_str(order)),
+            AlgoSpec::Gd | AlgoSpec::Dgd | AlgoSpec::DualAvg => j,
+            AlgoSpec::Admm { rho } => j.set("rho", rho),
+        }
+    }
+
+    pub fn from_json(v: &Json) -> Result<AlgoSpec, String> {
+        let Json::Obj(pairs) = v else {
+            return Err("algorithm spec must be a JSON object".into());
+        };
+        let kind = v
+            .get("algo")
+            .and_then(|a| a.as_str())
+            .ok_or("algorithm spec needs a string 'algo' field")?;
+        // Re-encode the remaining fields as the CLI form so both syntaxes
+        // share one validation path.
+        let mut parts = Vec::new();
+        for (k, val) in pairs {
+            if k == "algo" {
+                continue;
+            }
+            let rendered = match val {
+                Json::Num(x) => format!("{x}"),
+                Json::Str(s) => s.clone(),
+                other => return Err(format!("spec field '{k}' has unsupported value {other:?}")),
+            };
+            parts.push(format!("{k}={rendered}"));
+        }
+        if parts.is_empty() {
+            AlgoSpec::parse(kind)
+        } else {
+            AlgoSpec::parse(&format!("{kind}:{}", parts.join(",")))
+        }
+    }
+
+    /// Build a running engine on `problem` with unit link costs and the
+    /// identity chain — the common sweep/figure path.
+    pub fn build<'a>(&self, problem: &'a Problem, seed: u64) -> Box<dyn Engine + 'a> {
+        self.build_in(&BuildCtx {
+            problem,
+            costs: &UNIT_COSTS,
+            seed,
+            chain: None,
+        })
+    }
+
+    /// Build with explicit costs/chain (figures 6–8 drive chain-sensitive
+    /// engines over energy-model topologies).
+    pub fn build_in<'a>(&self, ctx: &BuildCtx<'a>) -> Box<dyn Engine + 'a> {
+        let p = ctx.problem;
+        let chain = || {
+            ctx.chain
+                .clone()
+                .unwrap_or_else(|| Chain::sequential(p.num_workers()))
+        };
+        match *self {
+            AlgoSpec::Gadmm { rho } => Box::new(Gadmm::with_chain(p, rho, chain())),
+            AlgoSpec::Qgadmm { rho, bits } => {
+                Box::new(Qgadmm::with_chain(p, rho, bits, ctx.seed, chain()))
+            }
+            AlgoSpec::Dgadmm { rho, tau, mode } => {
+                Box::new(Dgadmm::new(p, rho, tau, mode, ctx.costs, ctx.seed))
+            }
+            AlgoSpec::Lag { variant, xi } => {
+                let mut lag = Lag::new(p, variant);
+                lag.xi = xi;
+                Box::new(lag)
+            }
+            AlgoSpec::Iag { order } => Box::new(Iag::new(p, order, ctx.seed)),
+            AlgoSpec::Gd => Box::new(Gd::new(p)),
+            AlgoSpec::Dgd => Box::new(Dgd::new(p)),
+            AlgoSpec::DualAvg => Box::new(DualAvg::new(p)),
+            AlgoSpec::Admm { rho } => Box::new(Admm::new(p, rho)),
+        }
+    }
+
+    /// One exemplar spec per engine the registry can build — the source of
+    /// truth for "every `optim` engine is reachable from a spec".
+    pub fn registry() -> Vec<AlgoSpec> {
+        vec![
+            AlgoSpec::Gadmm { rho: 5.0 },
+            AlgoSpec::Qgadmm { rho: 5.0, bits: 8 },
+            AlgoSpec::Dgadmm { rho: 1.0, tau: 15, mode: RechainMode::Free },
+            AlgoSpec::Lag { variant: LagVariant::Wk, xi: 0.05 },
+            AlgoSpec::Lag { variant: LagVariant::Ps, xi: 0.05 },
+            AlgoSpec::Iag { order: IagOrder::Cyclic },
+            AlgoSpec::Iag { order: IagOrder::RandomWeighted },
+            AlgoSpec::Gd,
+            AlgoSpec::Dgd,
+            AlgoSpec::DualAvg,
+            AlgoSpec::Admm { rho: 5.0 },
+        ]
+    }
+}
+
+impl std::fmt::Display for AlgoSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.spec_string())
+    }
+}
+
+impl std::str::FromStr for AlgoSpec {
+    type Err = String;
+    fn from_str(s: &str) -> Result<AlgoSpec, String> {
+        AlgoSpec::parse(s)
+    }
+}
+
+fn mode_str(mode: RechainMode) -> &'static str {
+    match mode {
+        RechainMode::Free => "free",
+        RechainMode::Announced => "announced",
+    }
+}
+
+fn variant_str(variant: LagVariant) -> &'static str {
+    match variant {
+        LagVariant::Wk => "wk",
+        LagVariant::Ps => "ps",
+    }
+}
+
+fn order_str(order: IagOrder) -> &'static str {
+    match order {
+        IagOrder::Cyclic => "cyclic",
+        IagOrder::RandomWeighted => "random",
+    }
+}
+
+/// `key=value` parameter bag with typo detection (leftover keys error).
+struct Params<'s> {
+    kind: &'s str,
+    pairs: Vec<(String, String)>,
+}
+
+impl<'s> Params<'s> {
+    fn parse(kind: &'s str, rest: &str) -> Result<Params<'s>, String> {
+        let mut pairs = Vec::new();
+        for part in rest.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+            let (k, v) = part
+                .split_once('=')
+                .ok_or_else(|| format!("malformed parameter '{part}' in '{kind}' (want key=value)"))?;
+            pairs.push((k.trim().to_string(), v.trim().to_string()));
+        }
+        Ok(Params { kind, pairs })
+    }
+
+    fn take(&mut self, key: &str) -> Option<String> {
+        let idx = self.pairs.iter().position(|(k, _)| k == key)?;
+        Some(self.pairs.remove(idx).1)
+    }
+
+    fn take_str(&mut self, key: &str, default: &str) -> Result<String, String> {
+        Ok(self.take(key).unwrap_or_else(|| default.to_string()))
+    }
+
+    fn take_u64(&mut self, key: &str, default: u64) -> Result<u64, String> {
+        match self.take(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("{} {key} expects an integer, got '{v}'", self.kind)),
+        }
+    }
+
+    fn take_positive(&mut self, key: &str, default: f64) -> Result<f64, String> {
+        let x = match self.take(key) {
+            None => default,
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("{} {key} expects a number, got '{v}'", self.kind))?,
+        };
+        if x > 0.0 && x.is_finite() {
+            Ok(x)
+        } else {
+            Err(format!("{} {key} must be positive, got {x}", self.kind))
+        }
+    }
+
+    fn take_rho(&mut self, default: f64) -> Result<f64, String> {
+        self.take_positive("rho", default)
+    }
+
+    fn finish(mut self) -> Result<(), String> {
+        match self.pairs.pop() {
+            None => Ok(()),
+            Some((k, _)) => Err(format!("unknown parameter '{k}' for algorithm '{}'", self.kind)),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn registry_strings_round_trip() {
+        for spec in AlgoSpec::registry() {
+            let s = spec.spec_string();
+            assert_eq!(AlgoSpec::parse(&s).unwrap(), spec, "{s}");
+        }
+    }
+
+    #[test]
+    fn registry_json_round_trips() {
+        for spec in AlgoSpec::registry() {
+            let j = spec.to_json();
+            let text = j.to_string_compact();
+            let back = AlgoSpec::from_json(&crate::util::json::parse(&text).unwrap()).unwrap();
+            assert_eq!(back, spec, "{text}");
+        }
+    }
+
+    #[test]
+    fn parse_defaults_and_errors() {
+        assert_eq!(AlgoSpec::parse("gadmm").unwrap(), AlgoSpec::Gadmm { rho: 5.0 });
+        assert_eq!(
+            AlgoSpec::parse("qgadmm:rho=3,bits=4").unwrap(),
+            AlgoSpec::Qgadmm { rho: 3.0, bits: 4 }
+        );
+        assert_eq!(
+            AlgoSpec::parse(" lag:variant=ps ").unwrap(),
+            AlgoSpec::Lag { variant: LagVariant::Ps, xi: 0.05 }
+        );
+        assert!(AlgoSpec::parse("sgd").is_err());
+        assert!(AlgoSpec::parse("gadmm:rho=-1").is_err());
+        assert!(AlgoSpec::parse("gadmm:rh0=5").is_err());
+        assert!(AlgoSpec::parse("dgadmm:tau=0").is_err());
+        let e = AlgoSpec::parse("qgadmm:bits=64").unwrap_err();
+        assert!(e.contains("1..=32"), "{e}");
+    }
+
+    #[test]
+    fn builds_every_registry_entry() {
+        let ds = synthetic::linreg(40, 4, &mut Pcg64::seeded(1));
+        let problem = Problem::from_dataset(&ds, 4);
+        let mut names = Vec::new();
+        for spec in AlgoSpec::registry() {
+            let engine = spec.build(&problem, 7);
+            names.push(engine.name());
+        }
+        for expected in [
+            "GADMM(", "Q-GADMM(", "D-GADMM(", "LAG-WK", "LAG-PS", "Cycle-IAG", "R-IAG", "GD",
+            "DGD", "DualAvg", "ADMM(",
+        ] {
+            assert!(
+                names.iter().any(|n| n.starts_with(expected)),
+                "no engine named {expected}* among {names:?}"
+            );
+        }
+    }
+}

@@ -1,0 +1,425 @@
+//! Parallel grid sweeps: algorithms × datasets × worker counts × seeds.
+//!
+//! A [`SweepSpec`] declares the grid; the [`SweepRunner`] fans the cells
+//! out across a scoped `std::thread` pool and returns cell-keyed traces.
+//! Every cell is self-contained — it builds its own dataset, problem, and
+//! engine from the cell key alone — so results are deterministic in the
+//! spec regardless of thread count or scheduling order (pinned by
+//! `Trace::same_path` in the test suite).
+
+use crate::config::DatasetKind;
+use crate::metrics::Trace;
+use crate::model::Problem;
+use crate::optim::{self, RunOptions};
+use crate::session::AlgoSpec;
+use crate::topology::UnitCosts;
+use crate::util::json::Json;
+use crate::util::table::{fmt_count, Table};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// A declarative sweep grid.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SweepSpec {
+    pub algos: Vec<AlgoSpec>,
+    pub datasets: Vec<DatasetKind>,
+    pub workers: Vec<usize>,
+    pub seeds: Vec<u64>,
+    /// Objective-error target shared by every cell.
+    pub target: f64,
+    pub max_iters: usize,
+    /// Trace thinning (see `RunOptions::record_stride`); 1 keeps everything.
+    pub record_stride: usize,
+}
+
+impl Default for SweepSpec {
+    fn default() -> Self {
+        SweepSpec {
+            algos: vec![AlgoSpec::Gadmm { rho: 5.0 }, AlgoSpec::Gd],
+            datasets: vec![DatasetKind::SyntheticLinreg],
+            workers: vec![24],
+            seeds: vec![1],
+            target: 1e-4,
+            max_iters: 300_000,
+            record_stride: 1,
+        }
+    }
+}
+
+impl SweepSpec {
+    pub fn validate(&self) -> Result<(), String> {
+        if self.algos.is_empty()
+            || self.datasets.is_empty()
+            || self.workers.is_empty()
+            || self.seeds.is_empty()
+        {
+            return Err("sweep grid has an empty dimension".into());
+        }
+        if self.target <= 0.0 {
+            return Err("target must be positive".into());
+        }
+        if self.max_iters == 0 {
+            return Err("max_iters must be ≥ 1".into());
+        }
+        if self.record_stride == 0 {
+            return Err("record_stride must be ≥ 1".into());
+        }
+        // Reports serialize seeds as JSON numbers (f64); reject seeds the
+        // round-trip would silently round, so a recorded spec always
+        // replays the exact grid it claims to describe.
+        for &s in &self.seeds {
+            if s > (1u64 << 53) {
+                return Err(format!("seed {s} exceeds 2^53 and would not survive the JSON report"));
+            }
+        }
+        for &n in &self.workers {
+            if n < 2 {
+                return Err(format!("worker counts must be ≥ 2, got {n}"));
+            }
+            if n % 2 != 0 && self.algos.iter().any(|a| a.needs_even_workers()) {
+                return Err(format!(
+                    "worker count {n} is odd but the grid includes a chain GADMM variant \
+                     (which requires an even N)"
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    /// The grid, flattened in deterministic order:
+    /// dataset-major, then workers, then seed, then algorithm.
+    pub fn cells(&self) -> Vec<CellKey> {
+        let mut cells = Vec::with_capacity(
+            self.algos.len() * self.datasets.len() * self.workers.len() * self.seeds.len(),
+        );
+        for &dataset in &self.datasets {
+            for &workers in &self.workers {
+                for &seed in &self.seeds {
+                    for &algo in &self.algos {
+                        cells.push(CellKey { algo, dataset, workers, seed });
+                    }
+                }
+            }
+        }
+        cells
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set(
+                "algos",
+                Json::Arr(self.algos.iter().map(|a| Json::Str(a.spec_string())).collect()),
+            )
+            .set(
+                "datasets",
+                Json::Arr(self.datasets.iter().map(|d| Json::Str(d.name().into())).collect()),
+            )
+            .set(
+                "workers",
+                Json::Arr(self.workers.iter().map(|&n| Json::Num(n as f64)).collect()),
+            )
+            .set(
+                "seeds",
+                Json::Arr(self.seeds.iter().map(|&s| Json::Num(s as f64)).collect()),
+            )
+            .set("target", self.target)
+            .set("max_iters", self.max_iters)
+            .set("record_stride", self.record_stride)
+    }
+
+    pub fn from_json(v: &Json) -> Result<SweepSpec, String> {
+        let Json::Obj(pairs) = v else {
+            return Err("sweep spec must be a JSON object".into());
+        };
+        let mut spec = SweepSpec::default();
+        for (k, val) in pairs {
+            match k.as_str() {
+                "algos" => {
+                    spec.algos = val
+                        .as_arr()
+                        .ok_or("algos must be an array")?
+                        .iter()
+                        .map(|a| match a {
+                            Json::Str(s) => AlgoSpec::parse(s),
+                            other => AlgoSpec::from_json(other),
+                        })
+                        .collect::<Result<_, _>>()?
+                }
+                "datasets" => {
+                    spec.datasets = val
+                        .as_arr()
+                        .ok_or("datasets must be an array")?
+                        .iter()
+                        .map(|d| DatasetKind::parse(d.as_str().ok_or("dataset must be a string")?))
+                        .collect::<Result<_, _>>()?
+                }
+                "workers" => {
+                    spec.workers = val
+                        .as_arr()
+                        .ok_or("workers must be an array")?
+                        .iter()
+                        .map(|n| n.as_usize().ok_or_else(|| "workers must be numbers".into()))
+                        .collect::<Result<_, String>>()?
+                }
+                "seeds" => {
+                    spec.seeds = val
+                        .as_arr()
+                        .ok_or("seeds must be an array")?
+                        .iter()
+                        .map(|s| {
+                            s.as_f64()
+                                .map(|x| x as u64)
+                                .ok_or_else(|| "seeds must be numbers".into())
+                        })
+                        .collect::<Result<_, String>>()?
+                }
+                "target" => spec.target = val.as_f64().ok_or("target must be a number")?,
+                "max_iters" => {
+                    spec.max_iters = val.as_usize().ok_or("max_iters must be a number")?
+                }
+                "record_stride" => {
+                    spec.record_stride = val.as_usize().ok_or("record_stride must be a number")?
+                }
+                other => return Err(format!("unknown sweep key '{other}'")),
+            }
+        }
+        spec.validate()?;
+        Ok(spec)
+    }
+}
+
+/// One grid cell's coordinates.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CellKey {
+    pub algo: AlgoSpec,
+    pub dataset: DatasetKind,
+    pub workers: usize,
+    pub seed: u64,
+}
+
+impl CellKey {
+    /// Stable human-readable id, also the input of per-cell seed derivation.
+    pub fn id(&self) -> String {
+        format!(
+            "{}|{}|N={}|seed={}",
+            self.algo.spec_string(),
+            self.dataset.name(),
+            self.workers,
+            self.seed
+        )
+    }
+
+    /// Deterministic engine seed for this cell: FNV-1a over the cell id,
+    /// mixed with the grid seed. Distinct cells get distinct stochastic
+    /// streams; the value depends on the key alone, never on scheduling.
+    pub fn engine_seed(&self) -> u64 {
+        let mut h: u64 = 0xcbf29ce484222325;
+        for b in self.id().bytes() {
+            h = (h ^ b as u64).wrapping_mul(0x100000001b3);
+        }
+        h ^ self.seed
+    }
+}
+
+/// One finished cell.
+pub struct SweepCell {
+    pub key: CellKey,
+    pub trace: Trace,
+}
+
+/// All cells of a sweep, in grid order.
+pub struct SweepOutput {
+    pub cells: Vec<SweepCell>,
+    pub threads: usize,
+    pub wall: Duration,
+}
+
+impl SweepOutput {
+    /// Paper-style summary table.
+    pub fn rendered(&self) -> String {
+        let mut table = Table::new(vec![
+            "Cell",
+            "iters→target",
+            "TC→target",
+            "bits→target",
+            "final err",
+        ]);
+        for cell in &self.cells {
+            let t = &cell.trace;
+            table.row(vec![
+                cell.key.id(),
+                t.iters_to_target().map(fmt_count).unwrap_or_else(|| "—".into()),
+                t.tc_to_target()
+                    .map(|c| fmt_count(c as usize))
+                    .unwrap_or_else(|| "—".into()),
+                t.bits_to_target()
+                    .map(|b| format!("{b:.3e}"))
+                    .unwrap_or_else(|| "—".into()),
+                format!("{:.2e}", t.final_error()),
+            ]);
+        }
+        format!(
+            "sweep — {} cells on {} threads in {:.2}s\n{}",
+            self.cells.len(),
+            self.threads,
+            self.wall.as_secs_f64(),
+            table.render()
+        )
+    }
+
+    pub fn report(&self, spec: &SweepSpec) -> Json {
+        Json::obj()
+            .set("spec", spec.to_json())
+            .set("threads", self.threads)
+            .set("wall_seconds", self.wall.as_secs_f64())
+            .set(
+                "cells",
+                Json::Arr(
+                    self.cells
+                        .iter()
+                        .map(|c| {
+                            Json::obj()
+                                .set("algo", c.key.algo.to_json())
+                                .set("dataset", c.key.dataset.name())
+                                .set("workers", c.key.workers)
+                                .set("seed", c.key.seed)
+                                .set("trace", c.trace.to_json(200))
+                        })
+                        .collect(),
+                ),
+            )
+    }
+}
+
+/// Fans sweep cells out over a scoped thread pool.
+pub struct SweepRunner {
+    threads: usize,
+}
+
+impl SweepRunner {
+    pub fn new(threads: usize) -> SweepRunner {
+        SweepRunner { threads: threads.max(1) }
+    }
+
+    /// One thread per available core (the `gadmm sweep` default).
+    pub fn default_threads() -> usize {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Run the full grid. Cells are claimed from a shared counter, so the
+    /// pool load-balances; each result lands in its grid slot, so output
+    /// order (and content — see `CellKey::engine_seed`) is deterministic.
+    pub fn run(&self, spec: &SweepSpec) -> Result<SweepOutput, String> {
+        spec.validate()?;
+        let cells = spec.cells();
+        let threads = self.threads.min(cells.len());
+        let next = AtomicUsize::new(0);
+        let slots: Vec<Mutex<Option<Trace>>> = cells.iter().map(|_| Mutex::new(None)).collect();
+        let t0 = Instant::now();
+        std::thread::scope(|scope| {
+            for _ in 0..threads {
+                scope.spawn(|| loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= cells.len() {
+                        break;
+                    }
+                    let trace = run_cell(&cells[i], spec);
+                    *slots[i].lock().expect("sweep slot poisoned") = Some(trace);
+                });
+            }
+        });
+        let wall = t0.elapsed();
+        let traces: Vec<Trace> = slots
+            .into_iter()
+            .map(|slot| slot.into_inner().expect("sweep slot poisoned").expect("cell completed"))
+            .collect();
+        Ok(SweepOutput {
+            cells: cells.into_iter().zip(traces).map(|(key, trace)| SweepCell { key, trace }).collect(),
+            threads,
+            wall,
+        })
+    }
+}
+
+/// Execute one cell: dataset and problem from the grid seed, engine from
+/// the cell-derived seed, unit link costs (the sweep currency is slots).
+fn run_cell(key: &CellKey, spec: &SweepSpec) -> Trace {
+    let ds = key.dataset.build(key.seed);
+    let problem = Problem::from_dataset(&ds, key.workers);
+    let opts =
+        RunOptions::with_target(spec.target, spec.max_iters).with_stride(spec.record_stride);
+    let mut engine = key.algo.build(&problem, key.engine_seed());
+    optim::run(&mut *engine, &problem, &UnitCosts, &opts)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_spec() -> SweepSpec {
+        SweepSpec {
+            algos: vec![AlgoSpec::Gadmm { rho: 3.0 }, AlgoSpec::Gd],
+            datasets: vec![DatasetKind::SyntheticLinreg],
+            workers: vec![4],
+            seeds: vec![1, 2],
+            target: 1e-2,
+            max_iters: 3_000,
+            record_stride: 1,
+        }
+    }
+
+    #[test]
+    fn grid_enumeration_is_full_and_ordered() {
+        let spec = small_spec();
+        let cells = spec.cells();
+        assert_eq!(cells.len(), 4);
+        assert_eq!(cells[0].algo, AlgoSpec::Gadmm { rho: 3.0 });
+        assert_eq!(cells[1].algo, AlgoSpec::Gd);
+        assert_eq!(cells[0].seed, 1);
+        assert_eq!(cells[2].seed, 2);
+        // Distinct cells draw distinct engine seeds.
+        assert_ne!(cells[0].engine_seed(), cells[2].engine_seed());
+    }
+
+    #[test]
+    fn validation_rejects_bad_grids() {
+        let mut spec = small_spec();
+        spec.workers = vec![5];
+        assert!(spec.run_err().contains("odd"));
+        spec.workers = vec![];
+        assert!(spec.run_err().contains("empty"));
+        spec = small_spec();
+        spec.record_stride = 0;
+        assert!(spec.run_err().contains("record_stride"));
+    }
+
+    impl SweepSpec {
+        fn run_err(&self) -> String {
+            SweepRunner::new(1).run(self).err().expect("expected validation error")
+        }
+    }
+
+    #[test]
+    fn spec_json_round_trips() {
+        let spec = small_spec();
+        let back = SweepSpec::from_json(&spec.to_json()).unwrap();
+        assert_eq!(back, spec);
+    }
+
+    #[test]
+    fn runner_fills_every_cell() {
+        let out = SweepRunner::new(2).run(&small_spec()).unwrap();
+        assert_eq!(out.cells.len(), 4);
+        for cell in &out.cells {
+            assert!(!cell.trace.records.is_empty(), "{}", cell.key.id());
+        }
+        // GADMM converges on this easy target; the rendered table shows it.
+        assert!(out.cells[0].trace.iters_to_target().is_some());
+        assert!(out.rendered().contains("gadmm:rho=3"));
+    }
+}

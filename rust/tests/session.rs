@@ -1,0 +1,185 @@
+//! Session-layer integration tests: spec round-trips, registry
+//! completeness against the engine roster, spec-built engines matching
+//! direct construction (the golden-equivalence guarantee behind the
+//! figure rewrites), sweep determinism across thread counts, and the
+//! spec-driven coordinator entry point.
+
+use gadmm::config::DatasetKind;
+use gadmm::coordinator;
+use gadmm::data::synthetic;
+use gadmm::model::Problem;
+use gadmm::optim::{
+    self, Gadmm, Iag, IagOrder, Lag, LagVariant, Qgadmm, RunOptions,
+};
+use gadmm::runtime::{LocalSolver, NativeSolver};
+use gadmm::session::{AlgoSpec, CsvSink, MemorySink, SweepRunner, SweepSpec, TraceSink};
+use gadmm::topology::chain::Chain;
+use gadmm::topology::UnitCosts;
+use gadmm::util::rng::Pcg64;
+
+fn small_problem(workers: usize, seed: u64) -> Problem {
+    let ds = synthetic::linreg(80, 5, &mut Pcg64::seeded(seed));
+    Problem::from_dataset(&ds, workers)
+}
+
+#[test]
+fn every_registry_spec_round_trips_and_builds() {
+    let problem = small_problem(4, 1);
+    for spec in AlgoSpec::registry() {
+        // CLI-string round trip.
+        assert_eq!(AlgoSpec::parse(&spec.spec_string()).unwrap(), spec);
+        // JSON round trip, through the actual serializer and parser.
+        let text = spec.to_json().to_string_pretty();
+        let parsed = gadmm::util::json::parse(&text).unwrap();
+        assert_eq!(AlgoSpec::from_json(&parsed).unwrap(), spec);
+        // The registry factory builds a runnable engine.
+        let mut engine = spec.build(&problem, 3);
+        let trace = optim::run(
+            &mut *engine,
+            &problem,
+            &UnitCosts,
+            &RunOptions::with_target(1e-1, 50),
+        );
+        assert!(!trace.records.is_empty(), "{spec}");
+    }
+}
+
+#[test]
+fn spec_builds_match_direct_construction() {
+    // The figure rewrites lean on this: an engine built from a spec takes
+    // exactly the same deterministic path as one built by hand.
+    let problem = small_problem(6, 2);
+    let opts = RunOptions::with_target(1e-5, 2_000);
+    let costs = UnitCosts;
+    let seed = 11;
+
+    let via_spec = |spec: AlgoSpec| optim::run(&mut *spec.build(&problem, seed), &problem, &costs, &opts);
+
+    let direct_gadmm = optim::run(&mut Gadmm::new(&problem, 3.0), &problem, &costs, &opts);
+    assert!(via_spec(AlgoSpec::Gadmm { rho: 3.0 }).same_path(&direct_gadmm));
+
+    let direct_qgadmm =
+        optim::run(&mut Qgadmm::new(&problem, 3.0, 8, seed), &problem, &costs, &opts);
+    assert!(via_spec(AlgoSpec::Qgadmm { rho: 3.0, bits: 8 }).same_path(&direct_qgadmm));
+
+    let mut lag = Lag::new(&problem, LagVariant::Wk);
+    lag.xi = 0.02;
+    let direct_lag = optim::run(&mut lag, &problem, &costs, &opts);
+    assert!(via_spec(AlgoSpec::Lag { variant: LagVariant::Wk, xi: 0.02 }).same_path(&direct_lag));
+
+    let direct_iag = optim::run(
+        &mut Iag::new(&problem, IagOrder::RandomWeighted, seed),
+        &problem,
+        &costs,
+        &opts,
+    );
+    assert!(via_spec(AlgoSpec::Iag { order: IagOrder::RandomWeighted }).same_path(&direct_iag));
+}
+
+#[test]
+fn sweep_is_deterministic_across_thread_counts() {
+    let spec = SweepSpec {
+        algos: vec![AlgoSpec::Gadmm { rho: 3.0 }, AlgoSpec::Gd],
+        datasets: vec![DatasetKind::SyntheticLinreg],
+        workers: vec![4, 6],
+        seeds: vec![1],
+        target: 1e-2,
+        max_iters: 3_000,
+        record_stride: 1,
+    };
+    let serial = SweepRunner::new(1).run(&spec).unwrap();
+    let parallel = SweepRunner::new(3).run(&spec).unwrap();
+    assert_eq!(serial.cells.len(), 4);
+    assert_eq!(parallel.cells.len(), 4);
+    for (a, b) in serial.cells.iter().zip(&parallel.cells) {
+        assert_eq!(a.key, b.key);
+        assert!(
+            a.trace.same_path(&b.trace),
+            "cell {} differs between 1 and 3 threads",
+            a.key.id()
+        );
+    }
+}
+
+#[test]
+fn sweep_report_carries_the_grid() {
+    let spec = SweepSpec {
+        algos: vec![AlgoSpec::Gadmm { rho: 5.0 }],
+        datasets: vec![DatasetKind::SyntheticLinreg],
+        workers: vec![4],
+        seeds: vec![1],
+        target: 1e-2,
+        max_iters: 2_000,
+        record_stride: 5,
+    };
+    let out = SweepRunner::new(2).run(&spec).unwrap();
+    let report = out.report(&spec);
+    assert_eq!(
+        report.path("spec.algos").unwrap().as_arr().unwrap()[0].as_str(),
+        Some("gadmm:rho=5")
+    );
+    assert_eq!(report.path("cells").unwrap().as_arr().unwrap().len(), 1);
+}
+
+#[test]
+fn sinks_stream_exactly_the_recorded_trace() {
+    let problem = small_problem(4, 3);
+    let opts = RunOptions::with_target(1e-4, 2_000);
+    let mut csv = CsvSink::new(Vec::new());
+    let mut mem = MemorySink::new();
+    let trace = {
+        let mut engine = AlgoSpec::Gadmm { rho: 3.0 }.build(&problem, 1);
+        let mut sinks: Vec<&mut dyn TraceSink> = vec![&mut csv, &mut mem];
+        optim::run_with_sinks(&mut *engine, &problem, &UnitCosts, &opts, &mut sinks)
+    };
+    assert_eq!(mem.records.len(), trace.records.len());
+    assert_eq!(mem.algorithm, trace.algorithm);
+    let mut direct = Vec::new();
+    trace.write_csv(&mut direct).unwrap();
+    assert_eq!(csv.into_inner(), direct, "streamed CSV must match post-hoc CSV byte-for-byte");
+}
+
+#[test]
+fn coordinator_accepts_gadmm_specs_and_rejects_others() {
+    let problem = small_problem(4, 4);
+    let opts = RunOptions::with_target(1e-4, 3_000);
+    fn solvers(p: &Problem) -> Vec<Box<dyn LocalSolver + Send + '_>> {
+        (0..p.num_workers())
+            .map(|w| Box::new(NativeSolver::new(&*p.losses[w])) as Box<dyn LocalSolver + Send + '_>)
+            .collect()
+    }
+
+    // Spec-driven distributed GADMM matches the sequential spec-built engine.
+    let result = coordinator::train_spec(
+        &problem,
+        solvers(&problem),
+        &AlgoSpec::Gadmm { rho: 2.0 },
+        1,
+        Chain::sequential(4),
+        &UnitCosts,
+        &opts,
+    )
+    .unwrap();
+    let seq = optim::run(
+        &mut *AlgoSpec::Gadmm { rho: 2.0 }.build(&problem, 1),
+        &problem,
+        &UnitCosts,
+        &opts,
+    );
+    assert_eq!(result.trace.iters_to_target(), seq.iters_to_target());
+
+    // Centralized baselines have no head/tail dataflow to distribute.
+    let err = match coordinator::train_spec(
+        &problem,
+        solvers(&problem),
+        &AlgoSpec::Gd,
+        1,
+        Chain::sequential(4),
+        &UnitCosts,
+        &opts,
+    ) {
+        Ok(_) => panic!("non-chain specs must be rejected"),
+        Err(e) => e,
+    };
+    assert!(err.contains("GADMM/Q-GADMM"), "{err}");
+}
