@@ -37,7 +37,11 @@ echo "==> tier-1: cargo build --release && cargo test -q"
 cargo build --release
 cargo test -q
 
-echo "==> smoke: gadmm sweep --quick (parallel grid runner + CLI)"
+echo "==> smoke: gadmm sweep --quick (parallel grid runner + CLI, incl. cgadmm/cqgadmm cells)"
 ./target/release/gadmm sweep --quick --out target/ci-sweep
+
+echo "==> smoke: gadmm bench --quick (comm perf harness -> BENCH_comm.json)"
+./target/release/gadmm bench --quick --out target/ci-bench
+test -f target/ci-bench/BENCH_comm.json
 
 echo "CI OK"

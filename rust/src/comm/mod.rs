@@ -14,16 +14,55 @@
 //! either rely on the meter's default payload (a dense `d`-vector of f64,
 //! set once per run by the driver) or pass the exact size through the
 //! `*_bits` variants (the quantized engines do). See [`quantize`] for the
-//! compressors that shrink those payloads.
+//! compressors that shrink those payloads, and [`policy`] for the
+//! [`LinkPolicy`] seam that additionally decides *whether* a slot is
+//! occupied at all (censored slots charge nothing and are tallied in
+//! [`Meter::censored`]).
 
+pub mod policy;
 pub mod quantize;
 
+pub use policy::{
+    censored_dense_links, censored_quant_links, dense_links, quant_links, validate_censor_params,
+    CensorSchedule, Censored, EverySlot, LinkPolicy,
+};
 pub use quantize::{
     Compressor, Decoder, DenseCompressor, Msg, QuantizedMsg, StochasticQuantizer, FP64_BITS,
     RANGE_OVERHEAD_BITS,
 };
 
+use crate::topology::chain::Chain;
 use crate::topology::LinkCosts;
+
+/// Charge one head/tail phase of a chain schedule: every worker in the
+/// group whose slot was transmitted (`sent[w] = Some(bits)`) occupies one
+/// broadcast slot billed at its exact payload; censored workers
+/// (`sent[w] = None`) tick [`Meter::censored`] and cost nothing. This is
+/// the *single* structural-billing implementation shared by the sequential
+/// [`crate::optim::GroupAdmmCore`] and the distributed coordinator's
+/// leader, so the two paths cannot drift apart — part of the
+/// distributed-equivalence invariant (docs/adr/003-link-policy.md).
+pub fn charge_chain_phase(
+    meter: &mut Meter<'_>,
+    chain: &Chain,
+    head_phase: bool,
+    sent: &[Option<f64>],
+) {
+    meter.begin_round();
+    let n = chain.len();
+    let start = usize::from(!head_phase);
+    for p in (start..n).step_by(2) {
+        let w = chain.order[p];
+        match sent[w] {
+            Some(bits) => {
+                let (l, r) = chain.neighbors(p);
+                let neigh: Vec<usize> = [l, r].into_iter().flatten().collect();
+                meter.neighbor_broadcast_bits(w, &neigh, bits);
+            }
+            None => meter.censored_slot(),
+        }
+    }
+}
 
 /// Accumulating cost meter. Unit TC counts transmission slots; energy TC
 /// weighs each slot by the provided [`LinkCosts`] model; `bits` sums the
@@ -43,6 +82,11 @@ pub struct Meter<'a> {
     pub rounds: usize,
     /// Total transmission slots (diagnostics).
     pub transmissions: usize,
+    /// Censored (skipped) slots: a worker whose turn came but whose link
+    /// policy chose not to transmit. Charges no TC, no energy, no bits —
+    /// the whole point of censoring — but is tallied so drivers can report
+    /// how much of the schedule went unused.
+    pub censored: usize,
     /// Per-worker uplink-slot counts (Fig. 6 re-weights these under many
     /// topology draws without re-running the algorithm).
     pub uplink_counts: Vec<usize>,
@@ -60,9 +104,16 @@ impl<'a> Meter<'a> {
             bits: 0.0,
             rounds: 0,
             transmissions: 0,
+            censored: 0,
             uplink_counts: Vec::new(),
             server_broadcasts: 0,
         }
+    }
+
+    /// A worker's slot came up but its link policy censored the
+    /// transmission: nothing occupies the medium, nothing is charged.
+    pub fn censored_slot(&mut self) {
+        self.censored += 1;
     }
 
     /// Set the default payload size per slot (the drivers use the dense
@@ -232,6 +283,53 @@ mod tests {
         m.neighbor_broadcast_bits(0, &[], 999.0);
         assert_eq!(m.bits, 3.0 * 512.0 + 100.0);
         assert_eq!(m.payload_bits(), 512.0);
+    }
+
+    #[test]
+    fn censored_slot_charges_nothing() {
+        let costs = UnitCosts;
+        let mut m = Meter::new(&costs);
+        m.set_payload_bits(512.0);
+        m.neighbor_broadcast(0, &[1]);
+        m.censored_slot();
+        m.censored_slot();
+        assert_eq!(m.censored, 2);
+        assert_eq!(m.tc_unit, 1.0, "censored slots must not count as TC");
+        assert_eq!(m.tc_energy, 1.0);
+        assert_eq!(m.bits, 512.0, "censored slots must charge 0 bits");
+        assert_eq!(m.transmissions, 1);
+    }
+
+    #[test]
+    fn mixed_dense_quantized_skipped_accounting_closed_form() {
+        // Interleaved dense / quantized / censored slots sum exactly.
+        let costs = UnitCosts;
+        let mut m = Meter::new(&costs);
+        let d = 7usize;
+        let b = 5u32;
+        let dense = 64.0 * d as f64;
+        let quant = d as f64 * b as f64 + 64.0;
+        let (mut nd, mut nq, mut ns) = (0usize, 0usize, 0usize);
+        for i in 0..30 {
+            match i % 3 {
+                0 => {
+                    m.neighbor_broadcast_bits(0, &[1], dense);
+                    nd += 1;
+                }
+                1 => {
+                    m.neighbor_broadcast_bits(1, &[0, 2], quant);
+                    nq += 1;
+                }
+                _ => {
+                    m.censored_slot();
+                    ns += 1;
+                }
+            }
+        }
+        assert_eq!(m.bits, nd as f64 * dense + nq as f64 * quant);
+        assert_eq!(m.tc_unit, (nd + nq) as f64);
+        assert_eq!(m.transmissions, nd + nq);
+        assert_eq!(m.censored, ns);
     }
 
     #[test]

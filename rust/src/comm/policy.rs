@@ -1,0 +1,332 @@
+//! Per-link transmission policies: *whether* to occupy a slot and *how* to
+//! encode it.
+//!
+//! The [`Compressor`] seam (see [`super::quantize`]) answers "how many bits
+//! does a transmitted model cost"; it cannot express "send nothing this
+//! slot". The censored group-ADMM follow-ups (C-GADMM / CQ-GADMM, Ben
+//! Issaid et al., 2020) need exactly that: a worker whose model moved less
+//! than a decaying threshold `τ·μ^k` since its last *transmitted* model
+//! skips the slot entirely, and every receiver keeps its cached view. A
+//! [`LinkPolicy`] composes the two decisions:
+//!
+//! * [`EverySlot`] — transmit every slot through an inner [`Compressor`]
+//!   (dense GADMM, Q-GADMM).
+//! * [`Censored`] — compare the candidate model against the inner
+//!   compressor's public view; under the threshold, emit [`Msg::Skip`]
+//!   (zero payload bits, no transmission slot, the inner compressor's
+//!   anchor and RNG untouched); otherwise delegate to the compressor.
+//!
+//! One policy instance is the *sender-side* state of one worker's broadcast
+//! link. The sequential engines ([`crate::optim::GroupAdmmCore`]) and the
+//! distributed coordinator construct their policies through the same
+//! factory functions below, so both execution paths hold bit-identical
+//! wire state for the same `(seed, worker)` — the invariant the
+//! distributed-equivalence tests pin. See docs/adr/003-link-policy.md.
+
+use super::quantize::{Compressor, DenseCompressor, Msg, StochasticQuantizer};
+use crate::linalg::vector as vec_ops;
+
+/// Shared validation for the censoring knobs: every entry point (spec
+/// strings, JSON, engine constructors) funnels through this so the error
+/// message — and the accepted domain — cannot drift between parsers.
+/// `tau = 0` is legal and means "never censor" (the degeneracy the tests
+/// pin: CQ-GADMM with `τ = 0` is trace-identical to Q-GADMM).
+pub fn validate_censor_params(tau: f64, mu: f64) -> Result<(), String> {
+    if !tau.is_finite() || tau < 0.0 {
+        return Err(format!("censor tau must be finite and ≥ 0, got {tau}"));
+    }
+    if !(mu > 0.0 && mu < 1.0) {
+        return Err(format!("censor mu must be in (0, 1), got {mu}"));
+    }
+    Ok(())
+}
+
+/// The decaying censoring threshold `τ·μ^k`.
+///
+/// Computed *incrementally* (`thr_{k+1} = thr_k · μ`) rather than via
+/// `powi`, which makes the sequence monotone non-increasing by IEEE-754
+/// construction — rounding a product below 1× its left factor can never
+/// round back above it — a property the test suite pins. Iterations are
+/// consumed in order, so the incremental form is O(1) per call.
+pub struct CensorSchedule {
+    tau: f64,
+    mu: f64,
+    k: usize,
+    thr: f64,
+}
+
+impl CensorSchedule {
+    /// Panics on an invalid parameter pair; parse-time entry points call
+    /// [`validate_censor_params`] first and surface the same message as an
+    /// error instead.
+    pub fn new(tau: f64, mu: f64) -> CensorSchedule {
+        if let Err(e) = validate_censor_params(tau, mu) {
+            panic!("{e}");
+        }
+        CensorSchedule { tau, mu, k: 0, thr: tau }
+    }
+
+    pub fn tau(&self) -> f64 {
+        self.tau
+    }
+
+    pub fn mu(&self) -> f64 {
+        self.mu
+    }
+
+    /// Threshold `τ·μ^k`. `k` must be non-decreasing across calls (the
+    /// engines consume iterations in order).
+    pub fn threshold(&mut self, k: usize) -> f64 {
+        assert!(
+            k >= self.k,
+            "censor schedule cannot rewind: asked for k={k} after k={}",
+            self.k
+        );
+        while self.k < k {
+            self.thr *= self.mu;
+            self.k += 1;
+        }
+        self.thr
+    }
+}
+
+/// Sender-side state of one worker's broadcast link: decides per slot
+/// whether to transmit and how to encode.
+pub trait LinkPolicy: Send {
+    /// Short label for diagnostics, e.g. `"dense"`, `"q8"`,
+    /// `"censor(q8,tau=1,mu=0.93)"`.
+    fn describe(&self) -> String;
+
+    /// Exact wire size of a *transmitted* message from this link. Censored
+    /// slots cost 0 bits and are not billed a slot at all; the meter's
+    /// structural billing reads the per-slot truth off each [`Msg`].
+    fn message_bits(&self) -> f64;
+
+    /// Decide-and-encode for iteration `k`: returns the wire [`Msg`]
+    /// (possibly [`Msg::Skip`]) and advances the sender state only when
+    /// the slot is actually transmitted.
+    fn transmit(&mut self, k: usize, model: &[f64]) -> Msg;
+
+    /// The receivers' current view of this sender's model — unchanged
+    /// across censored slots.
+    fn public_view(&self) -> &[f64];
+}
+
+/// Transmit every slot through the inner compressor (GADMM, Q-GADMM).
+pub struct EverySlot {
+    inner: Box<dyn Compressor>,
+}
+
+impl EverySlot {
+    pub fn new(inner: Box<dyn Compressor>) -> EverySlot {
+        EverySlot { inner }
+    }
+}
+
+impl LinkPolicy for EverySlot {
+    fn describe(&self) -> String {
+        self.inner.describe()
+    }
+
+    fn message_bits(&self) -> f64 {
+        self.inner.message_bits()
+    }
+
+    fn transmit(&mut self, _k: usize, model: &[f64]) -> Msg {
+        self.inner.compress(model)
+    }
+
+    fn public_view(&self) -> &[f64] {
+        self.inner.public_view()
+    }
+}
+
+/// Censor slots whose model change falls under `τ·μ^k` (C-GADMM /
+/// CQ-GADMM): skip when `‖θ − view‖₂ < τ·μ^k`, where `view` is the model
+/// the receivers currently hold for this sender. On a skip the inner
+/// compressor is *not* invoked, so a quantizer's anchor and rounding RNG
+/// advance only on real transmissions — which is what keeps CQ-GADMM with
+/// `τ = 0` bit-identical to Q-GADMM.
+pub struct Censored {
+    schedule: CensorSchedule,
+    inner: Box<dyn Compressor>,
+}
+
+impl Censored {
+    pub fn new(inner: Box<dyn Compressor>, tau: f64, mu: f64) -> Censored {
+        Censored {
+            schedule: CensorSchedule::new(tau, mu),
+            inner,
+        }
+    }
+}
+
+impl LinkPolicy for Censored {
+    fn describe(&self) -> String {
+        format!(
+            "censor({},tau={},mu={})",
+            self.inner.describe(),
+            self.schedule.tau(),
+            self.schedule.mu()
+        )
+    }
+
+    fn message_bits(&self) -> f64 {
+        self.inner.message_bits()
+    }
+
+    fn transmit(&mut self, k: usize, model: &[f64]) -> Msg {
+        let thr = self.schedule.threshold(k);
+        // A NaN diff compares false and therefore transmits, deferring to
+        // the compressor's own non-finite handling. Skip counts are not
+        // tracked here: [`super::Meter::censored`] (and the closed form
+        // `k·N − TC`) is the single authoritative tally.
+        if vec_ops::dist2(model, self.inner.public_view()) < thr {
+            return Msg::Skip;
+        }
+        self.inner.compress(model)
+    }
+
+    fn public_view(&self) -> &[f64] {
+        self.inner.public_view()
+    }
+}
+
+/// Dense full-precision links for all `n` workers (GADMM).
+pub fn dense_links(dim: usize, n: usize) -> Vec<Box<dyn LinkPolicy>> {
+    (0..n)
+        .map(|_| Box::new(EverySlot::new(Box::new(DenseCompressor::new(dim)))) as Box<dyn LinkPolicy>)
+        .collect()
+}
+
+/// Stochastically quantized links (Q-GADMM): same `(seed, worker)` ⇒ same
+/// rounding stream on the sequential and distributed paths.
+pub fn quant_links(dim: usize, n: usize, bits: u32, seed: u64) -> Vec<Box<dyn LinkPolicy>> {
+    (0..n)
+        .map(|w| {
+            Box::new(EverySlot::new(Box::new(StochasticQuantizer::for_worker(
+                dim, bits, seed, w,
+            )))) as Box<dyn LinkPolicy>
+        })
+        .collect()
+}
+
+/// Censored dense links (C-GADMM).
+pub fn censored_dense_links(dim: usize, n: usize, tau: f64, mu: f64) -> Vec<Box<dyn LinkPolicy>> {
+    (0..n)
+        .map(|_| {
+            Box::new(Censored::new(Box::new(DenseCompressor::new(dim)), tau, mu))
+                as Box<dyn LinkPolicy>
+        })
+        .collect()
+}
+
+/// Censored quantized links (CQ-GADMM).
+pub fn censored_quant_links(
+    dim: usize,
+    n: usize,
+    bits: u32,
+    tau: f64,
+    mu: f64,
+    seed: u64,
+) -> Vec<Box<dyn LinkPolicy>> {
+    (0..n)
+        .map(|w| {
+            Box::new(Censored::new(
+                Box::new(StochasticQuantizer::for_worker(dim, bits, seed, w)),
+                tau,
+                mu,
+            )) as Box<dyn LinkPolicy>
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::FP64_BITS;
+
+    #[test]
+    fn schedule_decays_and_validates() {
+        let mut s = CensorSchedule::new(2.0, 0.5);
+        assert_eq!(s.threshold(0), 2.0);
+        assert_eq!(s.threshold(1), 1.0);
+        assert_eq!(s.threshold(3), 0.25);
+        assert_eq!(s.threshold(3), 0.25, "same k twice is fine");
+        assert!(validate_censor_params(-1.0, 0.5).is_err());
+        assert!(validate_censor_params(1.0, 0.0).is_err());
+        assert!(validate_censor_params(1.0, 1.0).is_err());
+        assert!(validate_censor_params(f64::NAN, 0.5).is_err());
+        assert!(validate_censor_params(0.0, 0.93).is_ok(), "tau=0 disables censoring");
+    }
+
+    #[test]
+    #[should_panic(expected = "cannot rewind")]
+    fn schedule_rejects_rewind() {
+        let mut s = CensorSchedule::new(1.0, 0.5);
+        let _ = s.threshold(5);
+        let _ = s.threshold(4);
+    }
+
+    #[test]
+    fn every_slot_is_the_plain_compressor() {
+        let mut link = EverySlot::new(Box::new(DenseCompressor::new(2)));
+        let msg = link.transmit(0, &[1.0, -2.0]);
+        assert_eq!(msg.payload_bits(), 2.0 * FP64_BITS);
+        assert_eq!(link.public_view(), &[1.0, -2.0]);
+        assert_eq!(link.describe(), "dense");
+    }
+
+    #[test]
+    fn censored_link_skips_small_moves_and_freezes_view() {
+        // tau=1, mu=0.5: thresholds 1.0, 0.5, 0.25, ...
+        let mut link = Censored::new(Box::new(DenseCompressor::new(2)), 1.0, 0.5);
+        // k=0: ‖(0.3,0.4)‖ = 0.5 < 1.0 → skip, view frozen at the origin.
+        let msg = link.transmit(0, &[0.3, 0.4]);
+        assert!(msg.is_skip());
+        assert_eq!(msg.payload_bits(), 0.0);
+        assert_eq!(link.public_view(), &[0.0, 0.0]);
+        // k=1: ‖(0.3,0.4)‖ = 0.5 ≥ 0.5 → transmit, view catches up.
+        let msg = link.transmit(1, &[0.3, 0.4]);
+        assert!(!msg.is_skip());
+        assert_eq!(link.public_view(), &[0.3, 0.4]);
+        assert!(link.describe().starts_with("censor(dense"));
+    }
+
+    #[test]
+    fn tau_zero_never_censors() {
+        let mut link = Censored::new(Box::new(DenseCompressor::new(1)), 0.0, 0.93);
+        for k in 0..10 {
+            assert!(!link.transmit(k, &[0.0]).is_skip(), "slot {k}");
+        }
+    }
+
+    #[test]
+    fn censored_quantizer_rng_untouched_on_skip() {
+        // Two quantized links with the same seed: one censors its first
+        // slot, then both transmit the same model — the rounding streams
+        // must still agree because a skip consumes no RNG.
+        let mk = || Box::new(StochasticQuantizer::for_worker(4, 4, 9, 0));
+        // k=0 threshold 0.3 > ‖(0.1,0.2,−0.1,0)‖ ≈ 0.245 ⇒ censored.
+        let mut a = Censored::new(mk(), 0.3, 0.5);
+        let mut b = EverySlot::new(mk());
+        assert!(a.transmit(0, &[0.1, 0.2, -0.1, 0.0]).is_skip());
+        let x = [1.5, -2.5, 0.5, 3.0];
+        // k=1 threshold is 0.15; ‖x‖ ≈ 4.2 ⇒ transmit.
+        let ma = a.transmit(1, &x);
+        let mb = b.transmit(1, &x);
+        assert!(!ma.is_skip());
+        assert_eq!(a.public_view(), b.public_view(), "rounding streams diverged");
+        assert_eq!(ma.payload_bits(), mb.payload_bits());
+    }
+
+    #[test]
+    fn factories_build_one_link_per_worker() {
+        assert_eq!(dense_links(3, 4).len(), 4);
+        assert_eq!(quant_links(3, 6, 8, 1).len(), 6);
+        assert_eq!(censored_dense_links(3, 4, 1.0, 0.93).len(), 4);
+        let links = censored_quant_links(3, 4, 8, 1.0, 0.93, 7);
+        assert_eq!(links.len(), 4);
+        assert_eq!(links[0].message_bits(), 3.0 * 8.0 + 64.0);
+    }
+}

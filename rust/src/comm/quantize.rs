@@ -24,9 +24,10 @@
 //! Senders and receivers both reconstruct the transmitted model with the
 //! same f64 arithmetic from `(prev, R, levels)`, so the "public" view of a
 //! worker's model is bit-identical everywhere — the property the Q-GADMM
-//! dual updates rely on. Censoring or sparsification schemes drop in as
-//! further [`Compressor`] implementations plus [`Msg`] variants (see
-//! docs/adr/001-compressor-trait.md).
+//! dual updates rely on. *Whether* to occupy a slot at all is one level up:
+//! a [`crate::comm::LinkPolicy`] decides per slot (censoring emits
+//! [`Msg::Skip`] with zero payload bits) and delegates the encoding to a
+//! [`Compressor`] (see docs/adr/003-link-policy.md).
 
 use crate::util::rng::Pcg64;
 
@@ -81,6 +82,12 @@ pub enum Msg {
     Dense(Vec<f64>),
     /// Q-GADMM quantized difference from the previously transmitted model.
     Quantized(QuantizedMsg),
+    /// Censored slot: the sender's model change fell under its censoring
+    /// threshold, so nothing occupies the medium. Receivers keep their
+    /// cached view of the sender (C-GADMM / CQ-GADMM semantics). In the
+    /// threaded coordinator a `Skip` still travels the channel — it models
+    /// the receiver's *timeout*, not a transmission — and costs 0 bits.
+    Skip,
 }
 
 impl Msg {
@@ -89,7 +96,13 @@ impl Msg {
         match self {
             Msg::Dense(v) => v.len() as f64 * FP64_BITS,
             Msg::Quantized(q) => q.payload_bits(),
+            Msg::Skip => 0.0,
         }
+    }
+
+    /// Whether this message is a censored (skipped) slot.
+    pub fn is_skip(&self) -> bool {
+        matches!(self, Msg::Skip)
     }
 }
 
@@ -261,6 +274,8 @@ impl Decoder {
     }
 
     /// Apply one message and return the sender's current public model.
+    /// A censored slot ([`Msg::Skip`]) leaves the cached view untouched —
+    /// exactly what a receiver that heard nothing would do.
     pub fn apply(&mut self, msg: &Msg) -> &[f64] {
         match msg {
             Msg::Dense(v) => {
@@ -269,6 +284,7 @@ impl Decoder {
             Msg::Quantized(q) => {
                 self.prev = q.decode(&self.prev);
             }
+            Msg::Skip => {}
         }
         &self.prev
     }

@@ -9,12 +9,15 @@
 //!   neighbour models. Within an iteration they synchronize *only* through
 //!   neighbour model messages (head phase → tail phase), exactly Algorithm 1.
 //!   The messages themselves go through the pluggable [`crate::comm`]
-//!   compression seam — dense f64 payloads for GADMM, stochastically
-//!   quantized differences for Q-GADMM ([`QuantSpec`]).
+//!   link-policy seam — dense f64 payloads for GADMM, stochastically
+//!   quantized differences for Q-GADMM ([`QuantSpec`]), censor gates in
+//!   front of either for C-GADMM / CQ-GADMM (censored slots travel as
+//!   [`crate::comm::Msg::Skip`] markers and cost nothing).
 //! * **The leader** owns no model state. It releases iterations (barrier),
 //!   collects per-worker loss reports for the convergence monitor, charges
-//!   the communication meter, and decides termination — the jobs a launcher
-//!   has in a real deployment.
+//!   the communication meter (transmitted slots at their exact payload,
+//!   censored slots on the censored counter), and decides termination —
+//!   the jobs a launcher has in a real deployment.
 //!
 //! The per-worker subproblem solve is behind [`crate::runtime::LocalSolver`],
 //! so the same coordinator runs the pure-rust native path and the
@@ -22,7 +25,7 @@
 
 pub mod worker;
 
-use crate::comm::{Compressor, DenseCompressor, Meter, StochasticQuantizer};
+use crate::comm::{LinkPolicy, Meter};
 use crate::metrics::{IterRecord, Trace};
 use crate::model::Problem;
 use crate::optim::RunOptions;
@@ -72,13 +75,14 @@ pub fn train<'p>(
     train_with(problem, solvers, rho, chain, costs, opts, None)
 }
 
-/// [`train`] driven by a declarative [`AlgoSpec`]: GADMM runs the dense
-/// wire path, Q-GADMM the quantized one (`seed` feeds the per-worker
-/// stochastic-rounding generators, matching
-/// [`crate::config::RunConfig::quant_seed_or_default`]). The coordinator
-/// executes chain GADMM variants only — centralized baselines have no
-/// head/tail dataflow to distribute — so other specs are rejected rather
-/// than silently approximated.
+/// [`train`] driven by a declarative [`AlgoSpec`]: any static-chain
+/// group-ADMM spec (GADMM, Q-GADMM, C-GADMM, CQ-GADMM) maps to per-worker
+/// link policies through [`AlgoSpec::chain_wire`] — the same factory the
+/// sequential engines use, which is what keeps the two execution paths
+/// bit-identical for the same `seed`. The coordinator executes chain
+/// GADMM variants only — centralized baselines have no head/tail dataflow
+/// to distribute and D-GADMM re-chains — so other specs are rejected
+/// rather than silently approximated.
 pub fn train_spec<'p>(
     problem: &'p Problem,
     solvers: Vec<Box<dyn LocalSolver + Send + 'p>>,
@@ -88,29 +92,22 @@ pub fn train_spec<'p>(
     costs: &dyn LinkCosts,
     opts: &RunOptions,
 ) -> Result<TrainResult, String> {
-    match *spec {
-        AlgoSpec::Gadmm { rho } => Ok(train_with(problem, solvers, rho, chain, costs, opts, None)),
-        AlgoSpec::Qgadmm { rho, bits } => Ok(train_with(
-            problem,
-            solvers,
-            rho,
-            chain,
-            costs,
-            opts,
-            Some(QuantSpec { bits, seed }),
+    match spec.chain_wire(problem.dim, problem.num_workers(), seed) {
+        Some(wire) => Ok(train_links(
+            problem, solvers, wire.rho, chain, costs, opts, wire.links, wire.name,
         )),
-        ref other => Err(format!(
-            "the distributed coordinator implements static-chain GADMM/Q-GADMM only \
-             (no re-chaining, no centralized baselines), got '{}'",
-            other.spec_string()
+        None => Err(format!(
+            "the distributed coordinator implements static-chain GADMM/Q-GADMM/C-GADMM/CQ-GADMM \
+             only (no re-chaining, no centralized baselines), got '{}'",
+            spec.spec_string()
         )),
     }
 }
 
 /// [`train`] with an optional quantized communication path: when `quant`
 /// is set, every worker broadcast goes through a per-worker
-/// [`StochasticQuantizer`] (Q-GADMM) and the meter charges `d·b + 64` bits
-/// per slot instead of `64·d`.
+/// [`crate::comm::StochasticQuantizer`] (Q-GADMM) and the meter charges
+/// `d·b + 64` bits per slot instead of `64·d`.
 pub fn train_with<'p>(
     problem: &'p Problem,
     solvers: Vec<Box<dyn LocalSolver + Send + 'p>>,
@@ -120,25 +117,44 @@ pub fn train_with<'p>(
     opts: &RunOptions,
     quant: Option<QuantSpec>,
 ) -> TrainResult {
+    // Delegate to the single wire factory (AlgoSpec::chain_wire) so this
+    // legacy entry point can never drift from the spec-driven path.
+    let (spec, seed) = match quant {
+        Some(q) => (AlgoSpec::Qgadmm { rho, bits: q.bits }, q.seed),
+        None => (AlgoSpec::Gadmm { rho }, 0),
+    };
+    let wire = spec
+        .chain_wire(problem.dim, problem.num_workers(), seed)
+        .expect("GADMM/Q-GADMM are static-chain specs");
+    train_links(problem, solvers, wire.rho, chain, costs, opts, wire.links, wire.name)
+}
+
+/// The policy-generic distributed trainer: one worker thread per shard,
+/// one [`LinkPolicy`] per worker on the wire.
+#[allow(clippy::too_many_arguments)]
+fn train_links<'p>(
+    problem: &'p Problem,
+    solvers: Vec<Box<dyn LocalSolver + Send + 'p>>,
+    rho: f64,
+    chain: Chain,
+    costs: &dyn LinkCosts,
+    opts: &RunOptions,
+    links: Vec<Box<dyn LinkPolicy>>,
+    name: String,
+) -> TrainResult {
     let n = problem.num_workers();
     assert_eq!(solvers.len(), n);
     assert_eq!(chain.len(), n);
+    assert_eq!(links.len(), n, "need one link policy per worker");
     assert!(n >= 2 && n % 2 == 0, "GADMM requires an even N ≥ 2");
     let d = problem.dim;
     // ρ arrives in the paper's unnormalized-objective units.
     let rho_eff = rho * problem.data_weight;
-    // One compressor per worker (the wire seam). The leader bills each
-    // slot with the payload size the worker reports having actually sent,
-    // so the wire-size truth lives with the messages themselves
-    // (comm::quantize) and variable-size compressors stay accounted.
-    let compressors: Vec<Box<dyn Compressor>> = (0..n)
-        .map(|w| match quant {
-            Some(qs) => Box::new(StochasticQuantizer::for_worker(d, qs.bits, qs.seed, w))
-                as Box<dyn Compressor>,
-            None => Box::new(DenseCompressor::new(d)) as Box<dyn Compressor>,
-        })
-        .collect();
-    let slot_bits = compressors[0].message_bits();
+    // The leader bills each slot with the payload size the worker reports
+    // having actually sent, so the wire-size truth lives with the messages
+    // themselves (comm::quantize) and variable-size policies stay
+    // accounted; censored slots report `None` and charge nothing.
+    let slot_bits = links[0].message_bits();
 
     // Worker inboxes for neighbour model messages.
     let (model_txs, model_rxs): (Vec<_>, Vec<_>) =
@@ -148,10 +164,6 @@ pub fn train_with<'p>(
         (0..n).map(|_| mpsc::channel::<LeaderMsg>()).unzip();
     let (report_tx, report_rx) = mpsc::channel::<Report>();
 
-    let name = match quant {
-        Some(q) => format!("Q-GADMM-dist(rho={rho},b={})", q.bits),
-        None => format!("GADMM-dist(rho={rho})"),
-    };
     let mut trace = Trace::new(&name, &problem.name, opts.target);
     let mut thetas: Vec<Vec<f64>> = vec![vec![0.0; d]; n];
 
@@ -159,9 +171,9 @@ pub fn train_with<'p>(
         // Spawn workers.
         let mut model_txs_shared: Vec<mpsc::Sender<WorkerMsg>> = model_txs.clone();
         let _ = &mut model_txs_shared;
-        for (w, ((solver, compressor), (cmd_rx, model_rx))) in solvers
+        for (w, ((solver, policy), (cmd_rx, model_rx))) in solvers
             .into_iter()
-            .zip(compressors)
+            .zip(links)
             .zip(cmd_rxs.into_iter().zip(model_rxs.into_iter()))
             .enumerate()
         {
@@ -176,7 +188,7 @@ pub fn train_with<'p>(
                 dim: d,
                 solver,
                 loss: &*problem.losses[w],
-                compressor,
+                policy,
                 inbox: model_rx,
                 neighbors_tx: [
                     left.map(|l| model_txs[l].clone()),
@@ -200,26 +212,20 @@ pub fn train_with<'p>(
             }
             // Collect N reports for this iteration.
             let mut obj = 0.0;
-            let mut bits_by_worker = vec![0.0f64; n];
+            let mut sent_by_worker: Vec<Option<f64>> = vec![None; n];
             for _ in 0..n {
                 let rep = report_rx.recv().expect("worker alive");
                 obj += rep.loss_value;
-                bits_by_worker[rep.id] = rep.bits_sent;
+                sent_by_worker[rep.id] = rep.sent;
                 thetas[rep.id] = rep.theta;
             }
-            // Charge communication structurally: every worker broadcast once
-            // to its neighbours, over two rounds (heads then tails), each
-            // slot billed with the payload size the worker actually sent
-            // (constant for the shipped compressors, but correct for any).
-            for phase in 0..2 {
-                meter.begin_round();
-                for p in (phase..n).step_by(2) {
-                    let wid = chain.order[p];
-                    let (l, r) = chain.neighbors(p);
-                    let neigh: Vec<usize> = [l, r].into_iter().flatten().collect();
-                    meter.neighbor_broadcast_bits(wid, &neigh, bits_by_worker[wid]);
-                }
-            }
+            // Charge communication structurally: every worker's slot comes
+            // up once, over two rounds (heads then tails), through the
+            // same shared billing the sequential core uses. Transmitted
+            // slots are billed with the payload the worker actually sent;
+            // censored slots tick the censored counter and cost nothing.
+            crate::comm::charge_chain_phase(&mut meter, &chain, true, &sent_by_worker);
+            crate::comm::charge_chain_phase(&mut meter, &chain, false, &sent_by_worker);
             let obj_err = (obj - problem.f_star).abs();
             // Same stride-thinning contract as optim::run: the final
             // iteration is always flushed so convergence metrics stay exact.

@@ -1,10 +1,15 @@
 //! Worker actor: owns its shard state and exchanges models with its chain
 //! neighbours over channels. The body of `run_worker` is Algorithm 1 from
 //! the worker's point of view — with the model exchange going through the
-//! pluggable [`Compressor`] seam, so the same actor runs dense GADMM and
-//! quantized Q-GADMM traffic.
+//! pluggable [`LinkPolicy`] seam, so the same actor runs dense GADMM,
+//! quantized Q-GADMM, and censored C-GADMM / CQ-GADMM traffic.
+//!
+//! A censored slot still sends a [`Msg::Skip`] through the channel — it
+//! models the receiver's *timeout* (the receiver learns nothing and keeps
+//! its cached view), not a transmission; the leader bills it as a censored
+//! slot with zero payload bits.
 
-use crate::comm::{Compressor, Decoder, Msg};
+use crate::comm::{Decoder, LinkPolicy, Msg};
 use crate::model::LocalLoss;
 use crate::runtime::LocalSolver;
 use std::sync::mpsc::{Receiver, Sender};
@@ -17,8 +22,8 @@ pub enum LeaderMsg {
     Shutdown,
 }
 
-/// Worker → worker neighbour messages: one wire payload (dense or
-/// quantized; see [`crate::comm::quantize`]).
+/// Worker → worker neighbour messages: one wire payload (dense, quantized,
+/// or a censored-slot marker; see [`crate::comm::quantize`]).
 pub struct WorkerMsg {
     pub from: usize,
     pub payload: Msg,
@@ -30,9 +35,11 @@ pub struct Report {
     pub id: usize,
     pub loss_value: f64,
     pub theta: Vec<f64>,
-    /// Exact payload bits of this iteration's broadcast (the leader bills
-    /// the slot with this, so variable-size compressors stay accounted).
-    pub bits_sent: f64,
+    /// Exact payload bits of this iteration's broadcast, or `None` when
+    /// the link policy censored the slot (the leader bills transmitted
+    /// slots with this, so variable-size compressors stay accounted, and
+    /// censored slots charge nothing).
+    pub sent: Option<f64>,
 }
 
 /// Everything a worker thread owns.
@@ -48,10 +55,11 @@ pub struct WorkerCtx<'a> {
     pub solver: Box<dyn LocalSolver + Send + 'a>,
     /// Loss used for monitoring reports (and dual bookkeeping checks).
     pub loss: &'a dyn LocalLoss,
-    /// Outbound model compression (identity for plain GADMM, stochastic
-    /// quantizer for Q-GADMM). Its public view is the model every
-    /// neighbour currently holds for this worker.
-    pub compressor: Box<dyn Compressor + 'a>,
+    /// Outbound link policy (always-transmit dense for plain GADMM,
+    /// stochastic quantizer for Q-GADMM, censor gates for C/CQ-GADMM).
+    /// Its public view is the model every neighbour currently holds for
+    /// this worker.
+    pub policy: Box<dyn LinkPolicy + 'a>,
     pub inbox: Receiver<WorkerMsg>,
     /// Senders to [left, right] neighbours.
     pub neighbors_tx: [Option<Sender<WorkerMsg>>; 2],
@@ -73,6 +81,9 @@ pub fn run_worker(mut ctx: WorkerCtx<'_>) {
     let mut dec_left = Decoder::new(d);
     let mut dec_right = Decoder::new(d);
     let mut q = vec![0.0; d];
+    // Iteration counter: drives the censoring threshold τ·μ^k in lockstep
+    // with the sequential core's `step(k, …)`.
+    let mut k = 0usize;
 
     let expected_neighbors = ctx.left.is_some() as usize + ctx.right.is_some() as usize;
 
@@ -82,14 +93,14 @@ pub fn run_worker(mut ctx: WorkerCtx<'_>) {
             Ok(LeaderMsg::Iterate) => {}
         }
 
-        let bits_sent;
+        let sent;
         if ctx.is_head {
             // Head phase: solve against cached (iteration-k) tail models,
             // then broadcast; finally receive the fresh tail models.
             theta = solve_local(
                 &ctx, &mut q, &theta, dec_left.view(), dec_right.view(), &lambda_left, &lambda_own,
             );
-            bits_sent = send_model(&mut ctx, &theta);
+            sent = send_model(&mut ctx, k, &theta);
             recv_models(&ctx, expected_neighbors, &mut dec_left, &mut dec_right);
         } else {
             // Tail phase: wait for fresh head models first (eq. 13 uses
@@ -98,15 +109,17 @@ pub fn run_worker(mut ctx: WorkerCtx<'_>) {
             theta = solve_local(
                 &ctx, &mut q, &theta, dec_left.view(), dec_right.view(), &lambda_left, &lambda_own,
             );
-            bits_sent = send_model(&mut ctx, &theta);
+            sent = send_model(&mut ctx, k, &theta);
         }
 
         // Dual updates (eq. 15) on the *public* models, purely local: every
         // endpoint of a link holds bit-identical public values for both
         // sides, so the mirrored duals stay consistent fleet-wide even
-        // under quantization. With the dense compressor the public view is
-        // exactly the model just sent, so this is plain GADMM.
-        let hat_own = ctx.compressor.public_view();
+        // under quantization and censoring (a censored sender's public view
+        // is simply its last transmitted model, on both endpoints). With
+        // the dense compressor the public view is exactly the model just
+        // sent, so this is plain GADMM.
+        let hat_own = ctx.policy.public_view();
         if ctx.right.is_some() {
             let theta_right = dec_right.view();
             for j in 0..d {
@@ -120,12 +133,13 @@ pub fn run_worker(mut ctx: WorkerCtx<'_>) {
             }
         }
 
+        k += 1;
         ctx.report
             .send(Report {
                 id: ctx.id,
                 loss_value: ctx.loss.value(&theta),
                 theta: theta.clone(),
-                bits_sent,
+                sent,
             })
             .expect("leader alive");
     }
@@ -160,20 +174,25 @@ fn solve_local(
     ctx.solver.prox_argmin(q, c, theta_cur)
 }
 
-/// Compress + broadcast once; returns the exact payload bits on the wire.
-fn send_model(ctx: &mut WorkerCtx<'_>, theta: &[f64]) -> f64 {
-    // One compression per iteration, shared by both receivers — a real
+/// Run the link policy once and broadcast its message (possibly a
+/// [`Msg::Skip`]); returns the exact payload bits on the wire, or `None`
+/// for a censored slot.
+fn send_model(ctx: &mut WorkerCtx<'_>, k: usize, theta: &[f64]) -> Option<f64> {
+    // One policy decision per iteration, shared by both receivers — a real
     // radio broadcasts a single payload; channel fan-out models the two
     // receivers of that single transmission.
-    let msg = ctx.compressor.compress(theta);
-    let bits = msg.payload_bits();
+    let msg = ctx.policy.transmit(k, theta);
+    let sent = match &msg {
+        Msg::Skip => None,
+        m => Some(m.payload_bits()),
+    };
     for tx in ctx.neighbors_tx.iter().flatten() {
         let _ = tx.send(WorkerMsg {
             from: ctx.id,
             payload: msg.clone(),
         });
     }
-    bits
+    sent
 }
 
 fn recv_models(ctx: &WorkerCtx<'_>, expected: usize, dec_left: &mut Decoder, dec_right: &mut Decoder) {
@@ -201,6 +220,15 @@ mod tests {
         };
         assert_eq!(msg.from, 3);
         assert_eq!(msg.payload.payload_bits(), 128.0);
+    }
+
+    #[test]
+    fn skip_message_is_free_and_keeps_receiver_view() {
+        let mut dec = Decoder::new(2);
+        dec.apply(&Msg::Dense(vec![0.5, -1.5]));
+        let msg = WorkerMsg { from: 1, payload: Msg::Skip };
+        assert_eq!(msg.payload.payload_bits(), 0.0);
+        assert_eq!(dec.apply(&msg.payload), &[0.5, -1.5]);
     }
 
     #[test]

@@ -1,0 +1,230 @@
+//! `gadmm bench` — the repo's communication/performance trajectory.
+//!
+//! Runs the paper-scale comparison grid (GADMM / Q-GADMM / C-GADMM /
+//! CQ-GADMM on the synthetic linreg setup) and reports, per algorithm:
+//! wall time, pure compute time, iterations / occupied slots / censored
+//! slots / payload bits to the target accuracy. The CLI writes the result
+//! as `BENCH_comm.json` so successive commits leave a machine-readable
+//! perf trail; `--quick` shrinks the grid to a CI-sized smoke (wired into
+//! `ci.sh`).
+
+use super::censor::{censored_to_target, comparison_roster};
+use super::run_engine;
+use crate::config::DatasetKind;
+use crate::metrics::Trace;
+use crate::model::Problem;
+use crate::optim::RunOptions;
+use crate::session::{AlgoSpec, DEFAULT_CENSOR_MU, DEFAULT_CENSOR_TAU};
+use crate::topology::UnitCosts;
+use crate::util::json::Json;
+use crate::util::table::{fmt_count, Table};
+use std::time::Instant;
+
+/// One benchmarked cell.
+pub struct BenchRow {
+    pub spec: AlgoSpec,
+    pub trace: Trace,
+    /// End-to-end wall time of the run (setup + stepping + measurement).
+    pub wall_seconds: f64,
+}
+
+pub struct BenchOutput {
+    pub rows: Vec<BenchRow>,
+    pub rendered: String,
+    pub report: Json,
+}
+
+/// Grid parameters; [`grid`] picks the paper-scale or CI-quick instance.
+pub struct BenchSpec {
+    pub dataset: DatasetKind,
+    pub workers: usize,
+    pub rho: f64,
+    pub bits: u32,
+    pub tau: f64,
+    pub mu: f64,
+    pub target: f64,
+    pub max_iters: usize,
+    /// Trace thinning (`RunOptions::record_stride`): keeps the paper-scale
+    /// grid from holding hundreds of thousands of records per trace while
+    /// leaving every `*_to_target` metric exact.
+    pub record_stride: usize,
+}
+
+/// The benchmark grid: paper scale by default, a seconds-long smoke with
+/// `quick` (same algorithms, small N, loose target — exercises every code
+/// path without the convergence tail).
+pub fn grid(quick: bool) -> BenchSpec {
+    if quick {
+        BenchSpec {
+            dataset: DatasetKind::SyntheticLinreg,
+            workers: 6,
+            rho: 5.0,
+            bits: 8,
+            tau: DEFAULT_CENSOR_TAU,
+            mu: DEFAULT_CENSOR_MU,
+            target: 1e-3,
+            max_iters: 20_000,
+            record_stride: 1,
+        }
+    } else {
+        BenchSpec {
+            dataset: DatasetKind::SyntheticLinreg,
+            workers: 24,
+            rho: 5.0,
+            bits: 8,
+            tau: DEFAULT_CENSOR_TAU,
+            mu: DEFAULT_CENSOR_MU,
+            target: 1e-4,
+            max_iters: 300_000,
+            record_stride: 10,
+        }
+    }
+}
+
+pub fn run(quick: bool, seed: u64) -> BenchOutput {
+    let spec = grid(quick);
+    let ds = spec.dataset.build(seed);
+    let problem = Problem::from_dataset(&ds, spec.workers);
+    let costs = UnitCosts;
+    let opts =
+        RunOptions::with_target(spec.target, spec.max_iters).with_stride(spec.record_stride);
+    let roster = comparison_roster(spec.rho, spec.bits, spec.tau, spec.mu);
+
+    let mut rows = Vec::with_capacity(roster.len());
+    for algo in roster {
+        let t0 = Instant::now();
+        let trace = run_engine(&mut *algo.build(&problem, seed), &problem, &costs, &opts);
+        rows.push(BenchRow {
+            spec: algo,
+            trace,
+            wall_seconds: t0.elapsed().as_secs_f64(),
+        });
+    }
+
+    let mut table = Table::new(vec![
+        "Algorithm",
+        "iters→target",
+        "TC→target",
+        "censored",
+        "bits→target",
+        "compute s",
+        "wall s",
+    ]);
+    for row in &rows {
+        let t = &row.trace;
+        table.row(vec![
+            t.algorithm.clone(),
+            t.iters_to_target().map(fmt_count).unwrap_or_else(|| "—".into()),
+            t.tc_to_target()
+                .map(|c| fmt_count(c as usize))
+                .unwrap_or_else(|| "—".into()),
+            censored_to_target(t, spec.workers)
+                .map(|c| fmt_count(c as usize))
+                .unwrap_or_else(|| "—".into()),
+            t.bits_to_target()
+                .map(|b| format!("{b:.3e}"))
+                .unwrap_or_else(|| "—".into()),
+            t.time_to_target()
+                .map(|d| format!("{:.3}", d.as_secs_f64()))
+                .unwrap_or_else(|| "—".into()),
+            format!("{:.3}", row.wall_seconds),
+        ]);
+    }
+    let rendered = format!(
+        "\nbench — {} (N={}, rho={}, b={}, tau={}, mu={}), target {:.0e}{}\n{}",
+        spec.dataset.name(),
+        spec.workers,
+        spec.rho,
+        spec.bits,
+        spec.tau,
+        spec.mu,
+        spec.target,
+        if quick { " [quick]" } else { "" },
+        table.render()
+    );
+    let report = Json::obj()
+        .set("experiment", "bench_comm")
+        .set("quick", quick)
+        .set("dataset", spec.dataset.name())
+        .set("workers", spec.workers)
+        .set("rho", spec.rho)
+        .set("bits", spec.bits as usize)
+        .set("tau", spec.tau)
+        .set("mu", spec.mu)
+        .set("target", spec.target)
+        .set("seed", seed as usize)
+        .set(
+            "rows",
+            Json::Arr(
+                rows.iter()
+                    .map(|row| {
+                        let t = &row.trace;
+                        Json::obj()
+                            .set("spec", row.spec.spec_string())
+                            .set("algorithm", t.algorithm.as_str())
+                            .set(
+                                "iters_to_target",
+                                t.iters_to_target()
+                                    .map(|k| Json::Num(k as f64))
+                                    .unwrap_or(Json::Null),
+                            )
+                            .set(
+                                "tc_to_target",
+                                t.tc_to_target().map(Json::Num).unwrap_or(Json::Null),
+                            )
+                            .set(
+                                "censored_to_target",
+                                censored_to_target(t, spec.workers)
+                                    .map(Json::Num)
+                                    .unwrap_or(Json::Null),
+                            )
+                            .set(
+                                "bits_to_target",
+                                t.bits_to_target().map(Json::Num).unwrap_or(Json::Null),
+                            )
+                            .set(
+                                "compute_seconds",
+                                t.time_to_target()
+                                    .map(|d| Json::Num(d.as_secs_f64()))
+                                    .unwrap_or(Json::Null),
+                            )
+                            .set("wall_seconds", row.wall_seconds)
+                            .set("final_error", t.final_error())
+                    })
+                    .collect(),
+            ),
+        )
+        .set(
+            "traces",
+            Json::Arr(rows.iter().map(|r| r.trace.to_json(50)).collect()),
+        );
+    BenchOutput {
+        rows,
+        rendered,
+        report,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_grid_runs_all_four_engines() {
+        let out = run(true, 1);
+        assert_eq!(out.rows.len(), 4);
+        for row in &out.rows {
+            assert!(
+                row.trace.iters_to_target().is_some(),
+                "{} did not converge on the quick grid",
+                row.trace.algorithm
+            );
+            assert!(row.wall_seconds >= 0.0);
+        }
+        assert!(out.rendered.contains("bench —"));
+        let rows = out.report.path("rows").unwrap().as_arr().unwrap();
+        assert_eq!(rows.len(), 4);
+        assert!(rows[0].path("wall_seconds").is_some());
+        assert_eq!(out.report.path("experiment").unwrap().as_str(), Some("bench_comm"));
+    }
+}

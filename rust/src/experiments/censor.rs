@@ -1,0 +1,205 @@
+//! Censoring evaluation: GADMM vs Q-GADMM vs C-GADMM vs CQ-GADMM,
+//! bits-to-target at paper scale — the CQ-GADMM follow-up's headline
+//! comparison.
+//!
+//! Quantization shrinks every transmitted slot (`d·b + 64` bits instead of
+//! `64·d`); censoring removes whole slots (a worker whose model moved less
+//! than `τ·μ^k` stays silent and its slot costs nothing). The two compose:
+//! CQ-GADMM pays the quantized payload only on the slots it actually
+//! occupies. The driver runs all four engines at the same ρ against the
+//! same objective threshold and reports iterations, occupied slots (TC),
+//! censored slots, exact bits, and the reduction factor relative to dense
+//! GADMM.
+
+use super::{run_roster, traces_to_json};
+use crate::comm::FP64_BITS;
+use crate::config::DatasetKind;
+use crate::data::Task;
+use crate::metrics::Trace;
+use crate::model::{LinRegLoss, Problem};
+use crate::optim::RunOptions;
+use crate::session::AlgoSpec;
+use crate::topology::UnitCosts;
+use crate::util::json::Json;
+use crate::util::table::{fmt_count, Table};
+
+pub struct CensorOutput {
+    /// GADMM, Q-GADMM, C-GADMM, CQ-GADMM traces, in that order.
+    pub traces: Vec<Trace>,
+    pub rendered: String,
+    pub report: Json,
+}
+
+/// Censored slots up to convergence: every iteration schedules `N` slots;
+/// TC counts the occupied ones.
+pub fn censored_to_target(trace: &Trace, workers: usize) -> Option<f64> {
+    match (trace.iters_to_target(), trace.tc_to_target()) {
+        (Some(k), Some(tc)) => Some((k * workers) as f64 - tc),
+        _ => None,
+    }
+}
+
+/// The four-way comparison roster — dense GADMM, Q-GADMM, C-GADMM,
+/// CQ-GADMM at one ρ — shared with the bench driver so the censor table
+/// and `BENCH_comm.json` always measure the same grid.
+pub fn comparison_roster(rho: f64, bits: u32, tau: f64, mu: f64) -> Vec<AlgoSpec> {
+    vec![
+        AlgoSpec::Gadmm { rho },
+        AlgoSpec::Qgadmm { rho, bits },
+        AlgoSpec::Cgadmm { rho, tau, mu },
+        AlgoSpec::Cqgadmm { rho, bits, tau, mu },
+    ]
+}
+
+/// Run the four-way comparison on one dataset. `rho` applies to every
+/// engine so the comparison isolates the link policies; `bits` feeds the
+/// quantized pair, `(tau, mu)` the censored pair.
+#[allow(clippy::too_many_arguments)]
+pub fn run(
+    kind: DatasetKind,
+    workers: usize,
+    rho: f64,
+    bits: u32,
+    tau: f64,
+    mu: f64,
+    target: f64,
+    max_iters: usize,
+    seed: u64,
+) -> CensorOutput {
+    let ds = kind.build(seed);
+    let problem = Problem::from_dataset(&ds, workers);
+    let costs = UnitCosts;
+    let opts = RunOptions::with_target(target, max_iters);
+
+    let roster = comparison_roster(rho, bits, tau, mu);
+    let traces = run_roster(&roster, &problem, &costs, &opts, seed);
+
+    // Scale anchor for the censoring threshold: the irreducible RMS data
+    // misfit at the reference optimum (a censoring threshold far above
+    // this scale would freeze the whole schedule; far below, censor
+    // nothing). Only the regression tasks have a residual to report.
+    let residual_at_opt = match kind.task() {
+        Task::LinearRegression => {
+            let full = LinRegLoss::weighted(
+                ds.features.clone(),
+                ds.targets.clone(),
+                1.0 / ds.num_samples() as f64,
+            );
+            Some(full.residual_norm(&problem.theta_star))
+        }
+        Task::LogisticRegression => None,
+    };
+
+    let dense_bits = traces[0].bits_to_target();
+    let mut table = Table::new(vec![
+        "Algorithm",
+        "iters→target",
+        "TC→target",
+        "censored",
+        "bits→target",
+        "vs dense",
+    ]);
+    for t in &traces {
+        let ratio = match (dense_bits, t.bits_to_target()) {
+            (Some(d), Some(b)) if b > 0.0 => format!("{:.2}x", d / b),
+            _ => "—".into(),
+        };
+        table.row(vec![
+            t.algorithm.clone(),
+            t.iters_to_target().map(fmt_count).unwrap_or_else(|| "—".into()),
+            t.tc_to_target()
+                .map(|c| fmt_count(c as usize))
+                .unwrap_or_else(|| "—".into()),
+            censored_to_target(t, workers)
+                .map(|c| fmt_count(c as usize))
+                .unwrap_or_else(|| "—".into()),
+            t.bits_to_target()
+                .map(|b| format!("{b:.3e}"))
+                .unwrap_or_else(|| "—".into()),
+            ratio,
+        ]);
+    }
+    let residual_line = residual_at_opt
+        .map(|r| format!("irreducible RMS residual at θ*: {r:.3e}\n"))
+        .unwrap_or_default();
+    let rendered = format!(
+        "\ncensor — {} (N={workers}, rho={rho}, b={bits}, tau={tau}, mu={mu}), target {target:.0e}\n\
+         dense payload {:.0} bits/slot\n{}{}",
+        kind.name(),
+        FP64_BITS * problem.dim as f64,
+        residual_line,
+        table.render()
+    );
+    let mut report = Json::obj()
+        .set("experiment", "censor")
+        .set("dataset", kind.name())
+        .set("workers", workers)
+        .set("rho", rho)
+        .set("bits", bits as usize)
+        .set("tau", tau)
+        .set("mu", mu)
+        .set("target", target)
+        .set(
+            "censored_to_target",
+            Json::Arr(
+                traces
+                    .iter()
+                    .map(|t| {
+                        censored_to_target(t, workers).map(Json::Num).unwrap_or(Json::Null)
+                    })
+                    .collect(),
+            ),
+        )
+        .set("traces", traces_to_json(&traces, 200));
+    if let Some(r) = residual_at_opt {
+        report = report.set("residual_norm_at_opt", r);
+    }
+    CensorOutput {
+        traces,
+        rendered,
+        report,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::session::{DEFAULT_CENSOR_MU, DEFAULT_CENSOR_TAU};
+
+    #[test]
+    fn censoring_strictly_reduces_bits_at_same_threshold() {
+        // Scaled-down instance of the acceptance scenario (N=6 on the
+        // paper dataset); the paper-scale run is `gadmm censor` / the
+        // bench harness. Pre-validated against the python mirror: the
+        // censored pair converges a few iterations later but pays
+        // substantially fewer total payload bits.
+        let out = run(
+            DatasetKind::SyntheticLinreg,
+            6,
+            5.0,
+            8,
+            DEFAULT_CENSOR_TAU,
+            DEFAULT_CENSOR_MU,
+            1e-3,
+            20_000,
+            1,
+        );
+        assert_eq!(out.traces.len(), 4);
+        let dense = out.traces[0].bits_to_target().expect("GADMM converges");
+        let quant = out.traces[1].bits_to_target().expect("Q-GADMM converges");
+        let cens = out.traces[2].bits_to_target().expect("C-GADMM converges");
+        let cq = out.traces[3].bits_to_target().expect("CQ-GADMM converges");
+        assert!(cens < dense, "C-GADMM bits {cens:.3e} not below dense {dense:.3e}");
+        assert!(cq < quant, "CQ-GADMM bits {cq:.3e} not below Q-GADMM {quant:.3e}");
+        // Slots were actually censored.
+        let c_cens = censored_to_target(&out.traces[2], 6).unwrap();
+        let cq_cens = censored_to_target(&out.traces[3], 6).unwrap();
+        assert!(c_cens > 0.0 && cq_cens > 0.0, "no censored slots ({c_cens}, {cq_cens})");
+        // Uncensored engines never skip.
+        assert_eq!(censored_to_target(&out.traces[0], 6), Some(0.0));
+        assert_eq!(censored_to_target(&out.traces[1], 6), Some(0.0));
+        assert!(out.rendered.contains("CQ-GADMM"));
+        assert!(out.rendered.contains("irreducible RMS residual"));
+        assert!(out.report.path("residual_norm_at_opt").is_some());
+    }
+}

@@ -12,7 +12,13 @@
 //! * [`fig8::run`]     — Fig 8 (D-GADMM vs GADMM vs standard ADMM)
 //! * [`qgadmm::run`]   — GADMM vs Q-GADMM: transmitted bits to target
 //!   accuracy (the Q-GADMM follow-up's evaluation)
+//! * [`censor::run`]   — GADMM vs Q vs C vs CQ: censoring × quantization
+//!   bits-to-target (the CQ-GADMM follow-up's evaluation)
+//! * [`bench::run`]    — the perf-trajectory grid behind `gadmm bench`
+//!   (`BENCH_comm.json`)
 
+pub mod bench;
+pub mod censor;
 pub mod curves;
 pub mod fig6;
 pub mod fig7;

@@ -13,13 +13,17 @@
 //! gadmm fig7  [--workers 50] [--tau 15]
 //! gadmm fig8  [--workers 24]
 //! gadmm qgadmm [--workers 24] [--rho 5] [--bits 4,8] [--target 1e-4]
+//! gadmm censor [--workers 24] [--rho 5] [--bits 8] [--tau 1] [--mu 0.93]
+//! gadmm bench  [--quick] [--out results/]   — writes BENCH_comm.json
 //! gadmm all   — every table and figure, reports under results/
 //! ```
 
 use gadmm::config::{validate_quant_bits, DatasetKind, RunConfig};
 use gadmm::coordinator;
 use gadmm::data::partition_even;
-use gadmm::experiments::{curves, fig6, fig7, fig8, qgadmm, table1, write_report, write_trace_csv};
+use gadmm::experiments::{
+    bench, censor, curves, fig6, fig7, fig8, qgadmm, table1, write_report, write_trace_csv,
+};
 use gadmm::model::Problem;
 use gadmm::optim::RunOptions;
 use gadmm::runtime::{artifacts_dir, service::PjrtService, Manifest, NativeSolver};
@@ -193,8 +197,46 @@ fn dispatch(sub: &str, args: &Args) -> Result<(), String> {
             println!("report: {}", path.display());
             Ok(())
         }
+        "censor" => {
+            let workers = args.get_usize("workers", 24)?;
+            let rho = args.get_f64("rho", 5.0)?;
+            let bits = validate_quant_bits(args.get_u64("bits", 8)?).map_err(|e| format!("--bits: {e}"))?;
+            let tau = args.get_f64("tau", gadmm::session::DEFAULT_CENSOR_TAU)?;
+            let mu = args.get_f64("mu", gadmm::session::DEFAULT_CENSOR_MU)?;
+            gadmm::comm::validate_censor_params(tau, mu)?;
+            let target = args.get_f64("target", 1e-4)?;
+            let max_iters = args.get_usize("max-iters", 300_000)?;
+            let dataset = DatasetKind::parse(&args.get_string("dataset", "synthetic-linreg"))?;
+            let out = censor::run(
+                dataset,
+                workers,
+                rho,
+                bits,
+                tau,
+                mu,
+                target,
+                max_iters,
+                args.get_u64("seed", 1)?,
+            );
+            println!("{}", out.rendered);
+            let path =
+                write_report(&out_dir(args), "censor", &out.report).map_err(|e| e.to_string())?;
+            println!("report: {}", path.display());
+            Ok(())
+        }
+        "bench" => {
+            let out = bench::run(args.flag("quick"), args.get_u64("seed", 1)?);
+            println!("{}", out.rendered);
+            let path = write_report(&out_dir(args), "BENCH_comm", &out.report)
+                .map_err(|e| e.to_string())?;
+            println!("report: {}", path.display());
+            Ok(())
+        }
         "all" => {
-            for s in ["table1", "fig2", "fig3", "fig4", "fig5", "fig6", "fig7", "fig8", "qgadmm"] {
+            for s in [
+                "table1", "fig2", "fig3", "fig4", "fig5", "fig6", "fig7", "fig8", "qgadmm",
+                "censor",
+            ] {
                 println!("=== {s} ===");
                 dispatch(s, args)?;
             }
@@ -233,11 +275,47 @@ fn cmd_train(args: &Args) -> Result<(), String> {
 
     let backend = args.get_string("backend", "native");
     let chain_kind = args.get_string("chain", "sequential");
-    // The coordinator consumes a declarative spec; dense vs quantized wire
-    // traffic is the spec's concern, not per-call-site plumbing.
-    let spec = match cfg.quant_bits {
-        Some(bits) => AlgoSpec::Qgadmm { rho: cfg.rho, bits },
-        None => AlgoSpec::Gadmm { rho: cfg.rho },
+    // The coordinator consumes a declarative spec; dense vs quantized vs
+    // censored wire traffic is the spec's concern, not per-call-site
+    // plumbing. `--algo` takes any static-chain spec string verbatim
+    // (e.g. `cqgadmm:rho=5,bits=8,tau=1,mu=0.93`); otherwise the legacy
+    // `--rho`/`--quant-bits` knobs pick dense GADMM or Q-GADMM.
+    let spec = match args.get("algo") {
+        Some(s) => {
+            // The spec string carries its own hyperparameters; legacy
+            // knobs alongside it — CLI flags or a config file's
+            // quant_bits — would be silently ignored, so reject the
+            // combination outright. (A config file always carries *some*
+            // rho, so only the explicit CLI flag can be detected for it.)
+            for flag in ["rho", "quant-bits"] {
+                if args.get(flag).is_some() {
+                    return Err(format!(
+                        "--{flag} conflicts with --algo (put it in the spec string, e.g. \
+                         '{}:rho=…')",
+                        s.split(':').next().unwrap_or(s)
+                    ));
+                }
+            }
+            if cfg.quant_bits.is_some() {
+                return Err(
+                    "config key 'quant_bits' conflicts with --algo (use a qgadmm/cqgadmm spec \
+                     string instead)"
+                        .into(),
+                );
+            }
+            let parsed = AlgoSpec::parse(s)?;
+            if !parsed.is_static_chain() {
+                return Err(format!(
+                    "--algo must name a static-chain engine (gadmm, qgadmm, cgadmm, cqgadmm), \
+                     got '{s}'"
+                ));
+            }
+            parsed
+        }
+        None => match cfg.quant_bits {
+            Some(bits) => AlgoSpec::Qgadmm { rho: cfg.rho, bits },
+            None => AlgoSpec::Gadmm { rho: cfg.rho },
+        },
     };
 
     let ds = cfg.dataset.build(cfg.seed);
@@ -340,10 +418,26 @@ fn cmd_sweep(args: &Args) -> Result<(), String> {
         }
     }
     let spec = if quick {
-        // CI smoke grid: 2 algorithms × 1 dataset × 2 worker counts,
-        // loose target so the whole grid finishes in seconds.
+        // CI smoke grid: 4 algorithms × 1 dataset × 2 worker counts,
+        // loose target so the whole grid finishes in seconds. One cgadmm
+        // and one cqgadmm cell keep the censored specs exercised
+        // end-to-end (parse → build → run → report) on every CI run.
         SweepSpec {
-            algos: vec![AlgoSpec::Gadmm { rho: 5.0 }, AlgoSpec::Gd],
+            algos: vec![
+                AlgoSpec::Gadmm { rho: 5.0 },
+                AlgoSpec::Gd,
+                AlgoSpec::Cgadmm {
+                    rho: 5.0,
+                    tau: gadmm::session::DEFAULT_CENSOR_TAU,
+                    mu: gadmm::session::DEFAULT_CENSOR_MU,
+                },
+                AlgoSpec::Cqgadmm {
+                    rho: 5.0,
+                    bits: 8,
+                    tau: gadmm::session::DEFAULT_CENSOR_TAU,
+                    mu: gadmm::session::DEFAULT_CENSOR_MU,
+                },
+            ],
             datasets: vec![DatasetKind::SyntheticLinreg],
             workers: vec![4, 6],
             seeds: vec![1],
@@ -405,12 +499,14 @@ subcommands:
            --workers N --rho R --target T --max-iters K --seed S
            --backend native|pjrt   --chain sequential|greedy
            --quant-bits B (Q-GADMM wire quantization, omit for dense)
+           --algo SPEC (any static-chain spec string, e.g.
+                        'cqgadmm:rho=5,bits=8,tau=1,mu=0.93')
            --config FILE (JSON, see configs/)
   sweep    parallel grid sweep: algorithms x datasets x workers x seeds
-           --algos 'gadmm:rho=5;qgadmm:rho=5,bits=8;lag:variant=wk;gd'
+           --algos 'gadmm:rho=5;qgadmm:rho=5,bits=8;cgadmm:tau=1,mu=0.93;gd'
            --datasets D1,D2  --workers 10,24  --seeds 1,2
            --threads K (default: all cores)  --stride k (trace thinning)
-           --quick (tiny CI grid on 2 threads)
+           --quick (tiny CI grid on 2 threads, incl. cgadmm/cqgadmm cells)
   table1   Table 1 grid (iterations + TC, real datasets)
   fig2..5  objective-error / TC / time curves per figure
   fig6     energy-TC CDFs over random topologies (+ fig6c ACV)
@@ -418,6 +514,10 @@ subcommands:
   fig8     D-GADMM vs GADMM vs standard ADMM
   qgadmm   GADMM vs Q-GADMM: transmitted bits to target accuracy
            --workers N --rho R --bits 4,8 --target T
-  all      everything above; JSON reports under results/
+  censor   GADMM vs Q vs C vs CQ-GADMM: censoring x quantization
+           --workers N --rho R --bits B --tau T --mu M --target T
+  bench    paper-scale perf grid -> BENCH_comm.json (--quick for CI)
+  all      every table/figure above (train/sweep/bench excluded);
+           JSON reports under results/
 
 common options: --out DIR (default results/), --csv, --seed S";

@@ -17,7 +17,6 @@ use std::sync::Mutex;
 
 pub struct LinRegLoss {
     x: Matrix,
-    #[cfg_attr(not(test), allow(dead_code))]
     y: Vec<f64>,
     /// Gram matrix XᵀX (d×d), precomputed.
     gram: Matrix,
@@ -30,7 +29,6 @@ pub struct LinRegLoss {
     /// Cached smoothness constant 2·w·λmax(XᵀX).
     smoothness: f64,
     /// Normalization weight w.
-    #[cfg_attr(not(test), allow(dead_code))]
     weight: f64,
 }
 
@@ -80,11 +78,15 @@ impl LinRegLoss {
             .clone()
     }
 
-    /// Residual-based objective (used in tests to validate the O(d²) path).
-    #[cfg(test)]
-    fn value_via_residual(&self, theta: &[f64]) -> f64 {
+    /// Weighted data-misfit residual norm `√(w)·‖Xθ − y‖₂` — with the
+    /// library's `w = 1/m` normalization this is the RMS residual of the
+    /// model on this loss's samples. `residual_norm(θ)² == value(θ)`, so
+    /// it also serves as an O(m·d) cross-check of the cached-Gram
+    /// objective path; the censor experiment driver reports it at θ* as
+    /// the irreducible-misfit scale anchor for the censoring thresholds.
+    pub fn residual_norm(&self, theta: &[f64]) -> f64 {
         let r = vec_ops::sub(&self.x.matvec(theta), &self.y);
-        self.weight * vec_ops::norm2_sq(&r)
+        (self.weight * vec_ops::norm2_sq(&r)).sqrt()
     }
 }
 
@@ -182,14 +184,32 @@ mod tests {
 
     #[test]
     fn value_matches_residual_form() {
+        // residual_norm(θ)² is the residual-based objective — an O(m·d)
+        // validation of the cached-Gram O(d²) value path.
         let loss = sample_loss(40, 6, 1);
         let mut rng = Pcg64::seeded(2);
         for _ in 0..10 {
             let theta = rng.normal_vec(6);
             let a = loss.value(&theta);
-            let b = loss.value_via_residual(&theta);
+            let b = loss.residual_norm(&theta).powi(2);
             assert!((a - b).abs() < 1e-8 * (1.0 + b.abs()), "{a} vs {b}");
         }
+    }
+
+    #[test]
+    fn residual_norm_respects_weight() {
+        let ds = crate::data::synthetic::linreg(30, 4, &mut Pcg64::seeded(11));
+        let unweighted = LinRegLoss::new(ds.features.clone(), ds.targets.clone());
+        let weighted = LinRegLoss::weighted(ds.features.clone(), ds.targets.clone(), 0.25);
+        let theta = vec![0.1, -0.2, 0.3, 0.0];
+        let a = unweighted.residual_norm(&theta);
+        let b = weighted.residual_norm(&theta);
+        assert!((b - 0.5 * a).abs() < 1e-12 * (1.0 + a), "√w scaling: {a} vs {b}");
+        // At an exact interpolation (y = Xθ) the residual vanishes.
+        let x = ds.features.clone();
+        let y_fit = x.matvec(&theta);
+        let fit = LinRegLoss::new(x, y_fit);
+        assert!(fit.residual_norm(&theta) < 1e-12);
     }
 
     #[test]

@@ -1,0 +1,454 @@
+//! The unified group-ADMM core: head phase → tail phase → dual update over
+//! a [`Chain`] schedule, parameterized by per-worker
+//! [`LinkPolicy`](crate::comm::LinkPolicy)s that decide, each slot,
+//! *whether* to transmit (censoring) and *how* to encode (dense /
+//! stochastically quantized).
+//!
+//! Every chain engine — [`super::Gadmm`], [`super::Qgadmm`],
+//! [`super::Dgadmm`] (via its inner `Gadmm`), [`super::Cgadmm`],
+//! [`super::Cqgadmm`] — is a thin configuration of this core; the
+//! head/tail/dual iteration logic exists exactly once. One iteration:
+//!
+//! 1. **Head phase** — every even chain position solves its local
+//!    subproblem (eqs. 11–12) against the *public* neighbour models `θ̂`,
+//!    then offers its new model to its link policy; the policy transmits
+//!    (updating the public view) or censors (leaving it stale).
+//! 2. **Tail phase** — odd positions, against the fresh head publics
+//!    (eqs. 13–14).
+//! 3. **Dual update** — eq. 15 on the public models: both endpoints of a
+//!    link hold bit-identical `θ̂` values, so their mirrored duals stay
+//!    consistent without communication, under quantization *and* under
+//!    censoring.
+//!
+//! With dense always-transmit links the public view equals the private
+//! iterate bit-for-bit, so this core reproduces the original GADMM
+//! arithmetic exactly — the refactor-equivalence contract pinned by
+//! `rust/tests/refactor_pin.rs` against frozen copies of the
+//! pre-refactor engines.
+//!
+//! Metering: each phase charges one slot per *transmitting* worker, billed
+//! with the exact payload bits the policy put on the wire; censored slots
+//! charge nothing and tick [`Meter::censored`].
+
+use crate::comm::{LinkPolicy, Meter, Msg};
+use crate::linalg::vector as vec_ops;
+use crate::model::Problem;
+use crate::topology::chain::Chain;
+
+pub struct GroupAdmmCore<'a> {
+    problem: &'a Problem,
+    /// ρ in the paper's units (penalty on the *unnormalized* objective
+    /// Σ‖X_nθ−y_n‖²). Internally scaled by the problem's 1/m normalization.
+    pub rho: f64,
+    /// Effective ρ applied to the normalized losses: `rho · data_weight`.
+    rho_eff: f64,
+    /// Logical chain: `chain.order[p]` = physical worker at position p.
+    chain: Chain,
+    /// Private full-precision primal iterate per *physical* worker.
+    theta: Vec<Vec<f64>>,
+    /// Public model per physical worker — what every neighbour (and the
+    /// dual update) sees: the link policy's current receiver view.
+    hat: Vec<Vec<f64>>,
+    /// Dual per *physical worker* w: λ_w couples worker w to its *current
+    /// right neighbour* (paper eq. 90 — in D-GADMM the dual travels with
+    /// the worker, not the chain position). Worker at the last position
+    /// never owns a dual. Length N (last entry unused, kept for indexing).
+    lambda: Vec<Vec<f64>>,
+    /// Per-worker sender-side link policy (travels with the physical
+    /// worker across D-GADMM re-chains, like the dual).
+    links: Vec<Box<dyn LinkPolicy>>,
+    /// Payload bits of this iteration's broadcast per worker; `None` =
+    /// censored. Written in the update phases, billed in `meter_phase`.
+    sent: Vec<Option<f64>>,
+    /// Scratch for the subproblem's linear term.
+    q: Vec<f64>,
+}
+
+impl<'a> GroupAdmmCore<'a> {
+    /// Core on an explicit logical chain with one link policy per worker.
+    pub fn new(
+        problem: &'a Problem,
+        rho: f64,
+        chain: Chain,
+        links: Vec<Box<dyn LinkPolicy>>,
+    ) -> GroupAdmmCore<'a> {
+        let n = problem.num_workers();
+        assert_eq!(chain.len(), n);
+        assert!(n >= 2 && n % 2 == 0, "GADMM requires an even N ≥ 2");
+        assert!(rho > 0.0);
+        assert_eq!(links.len(), n, "need one link policy per worker");
+        let d = problem.dim;
+        GroupAdmmCore {
+            problem,
+            rho,
+            rho_eff: rho * problem.data_weight,
+            chain,
+            theta: vec![vec![0.0; d]; n],
+            hat: vec![vec![0.0; d]; n],
+            lambda: vec![vec![0.0; d]; n],
+            links,
+            sent: vec![None; n],
+            q: vec![0.0; d],
+        }
+    }
+
+    pub fn chain(&self) -> &Chain {
+        &self.chain
+    }
+
+    /// Private full-precision iterates.
+    pub fn thetas(&self) -> &[Vec<f64>] {
+        &self.theta
+    }
+
+    /// Public models (the network-wide view; equals `thetas` bit-for-bit
+    /// under dense always-transmit links).
+    pub fn hats(&self) -> &[Vec<f64>] {
+        &self.hat
+    }
+
+    /// Duals indexed by physical worker (entry for the last-position worker
+    /// is identically zero).
+    pub fn lambdas(&self) -> &[Vec<f64>] {
+        &self.lambda
+    }
+
+    /// Exact wire size of one transmitted broadcast (the shipped policies
+    /// are homogeneous across workers and constant-size).
+    pub fn message_bits(&self) -> f64 {
+        self.links[0].message_bits()
+    }
+
+    /// One full iteration `k`: head phase, tail phase, dual update.
+    pub fn step(&mut self, k: usize, meter: &mut Meter) {
+        let n = self.chain.len();
+        // Head phase (parallel in a real deployment; order-independent here
+        // because heads only read tail publics).
+        for p in (0..n).step_by(2) {
+            self.update_position(p, k);
+        }
+        self.meter_phase(meter, true);
+        // Tail phase — uses the fresh head publics.
+        for p in (1..n).step_by(2) {
+            self.update_position(p, k);
+        }
+        self.meter_phase(meter, false);
+        // Dual updates (eq. 15) on the *public* models, local to each
+        // worker: both endpoints of every link hold the same θ̂ values, so
+        // their mirrored duals stay identical without extra communication.
+        for p in 0..n - 1 {
+            let (a, b) = (self.chain.order[p], self.chain.order[p + 1]);
+            for j in 0..self.problem.dim {
+                // eq. 90: worker a's dual couples it to its current right
+                // neighbour b.
+                self.lambda[a][j] += self.rho_eff * (self.hat[a][j] - self.hat[b][j]);
+            }
+        }
+    }
+
+    /// Solve the subproblem for the worker at chain position `p` against
+    /// the public neighbour models, then offer the new model to the
+    /// worker's link policy. The subproblem's linear term is
+    /// `q = −λ_{p−1} + λ_p − ρ(θ̂_left + θ̂_right)`, the quadratic
+    /// coefficient `c = ρ·(#neighbours)`.
+    fn update_position(&mut self, p: usize, k: usize) {
+        let n = self.chain.len();
+        let w = self.chain.order[p];
+        let d = self.problem.dim;
+        self.q.iter_mut().for_each(|x| *x = 0.0);
+        let mut couplings = 0.0;
+        if p > 0 {
+            let left = self.chain.order[p - 1];
+            for j in 0..d {
+                // λ of the *left neighbour* governs the (left, w) link.
+                self.q[j] += -self.lambda[left][j] - self.rho_eff * self.hat[left][j];
+            }
+            couplings += 1.0;
+        }
+        if p + 1 < n {
+            let right = self.chain.order[p + 1];
+            for j in 0..d {
+                // w's own λ governs the (w, right) link.
+                self.q[j] += self.lambda[w][j] - self.rho_eff * self.hat[right][j];
+            }
+            couplings += 1.0;
+        }
+        let c = self.rho_eff * couplings;
+        self.theta[w] = self.problem.losses[w].prox_argmin(&self.q, c, &self.theta[w]);
+        let msg = self.links[w].transmit(k, &self.theta[w]);
+        self.sent[w] = match &msg {
+            Msg::Skip => None,
+            m => Some(m.payload_bits()),
+        };
+        self.hat[w].copy_from_slice(self.links[w].public_view());
+    }
+
+    /// Charge one phase's transmissions through the shared structural
+    /// billing ([`crate::comm::charge_chain_phase`]): transmitted slots at
+    /// their exact payload, censored slots on the censored counter.
+    fn meter_phase(&self, meter: &mut Meter, head_phase: bool) {
+        crate::comm::charge_chain_phase(meter, &self.chain, head_phase, &self.sent);
+    }
+
+    /// The paper's objective `Σ_n f_n(θ_n^k)` at the private iterates.
+    pub fn objective(&self) -> f64 {
+        self.problem.objective_per_worker(&self.theta)
+    }
+
+    /// Average consensus violation `Σ‖θ_p − θ_{p+1}‖₁ / N` along the chain
+    /// (on the private iterates, as the paper measures it).
+    pub fn acv(&self) -> f64 {
+        let n = self.chain.len();
+        let mut total = 0.0;
+        for p in 0..n - 1 {
+            let (a, b) = (self.chain.order[p], self.chain.order[p + 1]);
+            total += vec_ops::norm1(&vec_ops::sub(&self.theta[a], &self.theta[b]));
+        }
+        total / n as f64
+    }
+
+    /// Replace the logical chain (D-GADMM re-chaining). Primal iterates,
+    /// duals, and link policies all travel with their physical workers:
+    /// worker w keeps λ_w and applies it to whatever its new right
+    /// neighbour is (Appendix E, eq. 90 — convergence holds when
+    /// iteration-k variables computed under the previous neighbour set are
+    /// reused).
+    pub fn set_chain(&mut self, chain: Chain) {
+        assert_eq!(chain.len(), self.chain.len());
+        self.chain = chain;
+    }
+
+    /// Re-initialize the duals consistently for the *current* chain via a
+    /// left-to-right prefix-sum sweep: `λ_{order[p]} = λ_{order[p−1]} −
+    /// ∇f_{order[p]}(θ_{order[p]})` (dual-feasibility recursion, eq. 17, at
+    /// the current primals). D-GADMM calls this after every re-chain — the
+    /// paper only says workers "refresh indices" (Appendix D); plain reuse
+    /// of stale duals stalls on heterogeneous data because the optimal
+    /// duals are chain-order-dependent prefix gradient sums, while this
+    /// sweep restores exact dual feasibility for every worker and rides the
+    /// chain-build exchange the paper already budgets (2 iterations / 4
+    /// rounds). See DESIGN.md §Substitutions.
+    pub fn reinit_duals_for_chain(&mut self) {
+        let feas = self.feasible_duals();
+        for (w, f) in feas.into_iter().enumerate() {
+            self.lambda[w] = f;
+        }
+    }
+
+    /// The dual-feasibility baseline for the *current* chain at the current
+    /// primals: `λ_{order[p]} = λ_{order[p−1]} − ∇f_{order[p]}(θ_{order[p]})`
+    /// (eq. 17 telescoped), indexed by physical worker. The last-position
+    /// worker's entry is zero.
+    pub fn feasible_duals(&self) -> Vec<Vec<f64>> {
+        let n = self.chain.len();
+        let d = self.problem.dim;
+        let mut out = vec![vec![0.0; d]; n];
+        let mut running = vec![0.0; d];
+        let mut g = vec![0.0; d];
+        for p in 0..n - 1 {
+            let w = self.chain.order[p];
+            self.problem.losses[w].grad_into(&self.theta[w], &mut g);
+            for j in 0..d {
+                running[j] -= g[j];
+            }
+            out[w].copy_from_slice(&running);
+        }
+        out
+    }
+
+    /// Damped dual correction toward the current chain's feasibility
+    /// baseline: `λ ← λ + γ·(feas − λ)`. γ=1 is a full re-init (discards
+    /// momentum), γ=0 is plain reuse (keeps chain-order bias); intermediate
+    /// γ keeps D-GADMM convergent on heterogeneous data without stalling.
+    pub fn damp_duals_toward_feasible(&mut self, gamma: f64) {
+        let feas = self.feasible_duals();
+        let n = self.chain.len();
+        let last = self.chain.order[n - 1];
+        for w in 0..n {
+            if w == last {
+                self.lambda[w].iter_mut().for_each(|x| *x = 0.0);
+                continue;
+            }
+            for j in 0..self.problem.dim {
+                self.lambda[w][j] += gamma * (feas[w][j] - self.lambda[w][j]);
+            }
+        }
+    }
+
+    /// Re-baseline the duals onto a new chain while preserving their
+    /// dual-ascent momentum: with `feas(chain)` the feasibility baseline,
+    /// set `λ' = feas(new) + (λ − feas(old))`. Call with the *old* chain's
+    /// baseline captured before `set_chain`. As θ → θ*, feas(chain) → the
+    /// chain's λ*, so the transferred deviation vanishes at the optimum on
+    /// any chain — this is what keeps D-GADMM convergent on heterogeneous
+    /// data without discarding the accumulated dual ascent (see
+    /// DualHandling in dgadmm.rs and DESIGN.md §Substitutions).
+    pub fn rebase_duals(&mut self, old_feas: &[Vec<f64>]) {
+        let new_feas = self.feasible_duals();
+        let n = self.chain.len();
+        let last = self.chain.order[n - 1];
+        for w in 0..n {
+            if w == last {
+                self.lambda[w].iter_mut().for_each(|x| *x = 0.0);
+                continue;
+            }
+            for j in 0..self.problem.dim {
+                self.lambda[w][j] += new_feas[w][j] - old_feas[w][j];
+            }
+        }
+    }
+
+    /// Consensus average of the worker models (final model export).
+    pub fn consensus_mean(&self) -> Vec<f64> {
+        let d = self.problem.dim;
+        let mut mean = vec![0.0; d];
+        for t in &self.theta {
+            vec_ops::axpy(1.0, t, &mut mean);
+        }
+        vec_ops::scale(1.0 / self.theta.len() as f64, &mut mean);
+        mean
+    }
+
+    /// Primal residuals r_{p,p+1} = θ_p − θ_{p+1} along the chain.
+    pub fn primal_residuals(&self) -> Vec<Vec<f64>> {
+        (0..self.chain.len() - 1)
+            .map(|p| {
+                vec_ops::sub(
+                    &self.theta[self.chain.order[p]],
+                    &self.theta[self.chain.order[p + 1]],
+                )
+            })
+            .collect()
+    }
+
+    /// Tail dual-feasibility residual max_n ‖∇f_n(θ_n) − λ_{n−1} + λ_n‖
+    /// over tail positions — identically 0 in exact arithmetic after every
+    /// iteration of the dense always-transmit configuration (eq. 20);
+    /// property-tested.
+    pub fn tail_dual_residual(&self) -> f64 {
+        let n = self.chain.len();
+        let mut worst: f64 = 0.0;
+        for p in (1..n).step_by(2) {
+            let w = self.chain.order[p];
+            let left = self.chain.order[p - 1];
+            let mut g = self.problem.losses[w].grad(&self.theta[w]);
+            for j in 0..g.len() {
+                g[j] -= self.lambda[left][j];
+                if p + 1 < n {
+                    g[j] += self.lambda[w][j];
+                }
+            }
+            worst = worst.max(vec_ops::norm2(&g));
+        }
+        worst
+    }
+
+    /// The Lyapunov function of Theorem 2 (eq. 32):
+    /// `V_k = 1/ρ Σ_p‖λ_p − λ*_p‖² + ρ Σ_{heads p>0}‖θ_{p−1} − θ*‖²
+    ///        + ρ Σ_{heads p}‖θ_{p+1} − θ*‖²`.
+    pub fn lyapunov(&self, theta_star: &[f64], lambda_star: &[Vec<f64>]) -> f64 {
+        let n = self.chain.len();
+        let mut v = 0.0;
+        for p in 0..n - 1 {
+            let w = self.chain.order[p];
+            v += vec_ops::dist2(&self.lambda[w], &lambda_star[p]).powi(2) / self.rho_eff;
+        }
+        for p in (0..n).step_by(2) {
+            if p > 0 {
+                let left = self.chain.order[p - 1];
+                v += self.rho_eff * vec_ops::dist2(&self.theta[left], theta_star).powi(2);
+            }
+            if p + 1 < n {
+                let right = self.chain.order[p + 1];
+                v += self.rho_eff * vec_ops::dist2(&self.theta[right], theta_star).powi(2);
+            }
+        }
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::{censored_dense_links, dense_links, quant_links};
+    use crate::data::synthetic;
+    use crate::topology::UnitCosts;
+    use crate::util::rng::Pcg64;
+
+    fn problem(seed: u64, n: usize) -> Problem {
+        let ds = synthetic::linreg(120, 8, &mut Pcg64::seeded(seed));
+        Problem::from_dataset(&ds, n)
+    }
+
+    #[test]
+    fn dense_public_view_equals_private_iterate_bitwise() {
+        // The refactor-equivalence keystone: with always-transmit dense
+        // links, hat == theta bit-for-bit after every phase.
+        let p = problem(1, 6);
+        let mut core = GroupAdmmCore::new(
+            &p,
+            3.0,
+            Chain::sequential(6),
+            dense_links(p.dim, 6),
+        );
+        let costs = UnitCosts;
+        let mut meter = Meter::new(&costs);
+        for k in 0..20 {
+            core.step(k, &mut meter);
+            for (t, h) in core.thetas().iter().zip(core.hats()) {
+                assert_eq!(t, h, "iteration {k}: public/private divergence");
+            }
+        }
+        assert_eq!(meter.censored, 0);
+        assert_eq!(meter.tc_unit, 20.0 * 6.0);
+    }
+
+    #[test]
+    fn censored_links_skip_slots_and_meter_them() {
+        let p = problem(2, 4);
+        // Huge tau: early slots all censor.
+        let mut core = GroupAdmmCore::new(
+            &p,
+            3.0,
+            Chain::sequential(4),
+            censored_dense_links(p.dim, 4, 1e6, 0.5),
+        );
+        let costs = UnitCosts;
+        let mut meter = Meter::new(&costs);
+        core.step(0, &mut meter);
+        assert_eq!(meter.censored, 4, "every slot censored under a huge threshold");
+        assert_eq!(meter.tc_unit, 0.0);
+        assert_eq!(meter.bits, 0.0);
+        assert_eq!(meter.rounds, 2, "rounds still elapse");
+        // Public views frozen at zero while private iterates moved.
+        assert!(core.hats().iter().all(|h| h.iter().all(|&x| x == 0.0)));
+        assert!(core.thetas().iter().any(|t| t.iter().any(|&x| x != 0.0)));
+    }
+
+    #[test]
+    fn quant_links_charge_exact_payload() {
+        let p = problem(3, 4);
+        let bits = 6u32;
+        let mut core = GroupAdmmCore::new(
+            &p,
+            2.0,
+            Chain::sequential(4),
+            quant_links(p.dim, 4, bits, 7),
+        );
+        let costs = UnitCosts;
+        let mut meter = Meter::new(&costs);
+        for k in 0..5 {
+            core.step(k, &mut meter);
+        }
+        let per_msg = p.dim as f64 * bits as f64 + 64.0;
+        assert_eq!(meter.bits, 5.0 * 4.0 * per_msg);
+        assert_eq!(core.message_bits(), per_msg);
+    }
+
+    #[test]
+    #[should_panic(expected = "one link policy per worker")]
+    fn mismatched_link_count_rejected() {
+        let p = problem(4, 4);
+        let _ = GroupAdmmCore::new(&p, 1.0, Chain::sequential(4), dense_links(p.dim, 3));
+    }
+}

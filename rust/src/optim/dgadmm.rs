@@ -218,7 +218,7 @@ impl Engine for Dgadmm<'_> {
     fn name(&self) -> String {
         format!(
             "D-GADMM(rho={},tau={},{})",
-            self.inner.rho,
+            self.inner.rho(),
             self.tau,
             match self.mode {
                 RechainMode::Announced => "announced",

@@ -1,4 +1,5 @@
-//! GADMM — Algorithm 1 of the paper.
+//! GADMM — Algorithm 1 of the paper: the dense always-transmit
+//! configuration of [`GroupAdmmCore`].
 //!
 //! Workers sit on a logical chain and are split into the head group (even
 //! chain positions) and tail group (odd positions). One iteration:
@@ -13,32 +14,18 @@
 //!
 //! Only N/2 workers occupy the medium per round and only primal vectors are
 //! exchanged — the paper's communication-efficiency claims fall out of this
-//! structure, which the [`crate::comm::Meter`] charges faithfully.
+//! structure, which the [`crate::comm::Meter`] charges faithfully. The
+//! phase logic itself lives in [`GroupAdmmCore`]; this type just installs
+//! dense links and re-exports the dual-handling surface D-GADMM drives.
 
+use super::core::GroupAdmmCore;
 use super::Engine;
-use crate::comm::Meter;
-use crate::linalg::vector as vec_ops;
+use crate::comm::{dense_links, Meter};
 use crate::model::Problem;
 use crate::topology::chain::Chain;
 
 pub struct Gadmm<'a> {
-    problem: &'a Problem,
-    /// ρ in the paper's units (penalty on the *unnormalized* objective
-    /// Σ‖X_nθ−y_n‖²). Internally scaled by the problem's 1/m normalization.
-    pub rho: f64,
-    /// Effective ρ applied to the normalized losses: `rho · data_weight`.
-    rho_eff: f64,
-    /// Logical chain: `chain.order[p]` = physical worker at position p.
-    chain: Chain,
-    /// Primal iterate per *physical* worker.
-    theta: Vec<Vec<f64>>,
-    /// Dual per *physical worker* w: λ_w couples worker w to its *current
-    /// right neighbour* (paper eq. 90 — in D-GADMM the dual travels with the
-    /// worker, not the chain position). Worker N−1, the fixed right end,
-    /// never owns a dual. Length N (last entry unused, kept for indexing).
-    lambda: Vec<Vec<f64>>,
-    /// Scratch for the subproblem's linear term.
-    q: Vec<f64>,
+    core: GroupAdmmCore<'a>,
 }
 
 impl<'a> Gadmm<'a> {
@@ -49,279 +36,92 @@ impl<'a> Gadmm<'a> {
 
     /// GADMM on an explicit logical chain.
     pub fn with_chain(problem: &'a Problem, rho: f64, chain: Chain) -> Gadmm<'a> {
-        let n = problem.num_workers();
-        assert_eq!(chain.len(), n);
-        assert!(n >= 2 && n % 2 == 0, "GADMM requires an even N ≥ 2");
-        assert!(rho > 0.0);
-        let d = problem.dim;
+        let links = dense_links(problem.dim, problem.num_workers());
         Gadmm {
-            problem,
-            rho,
-            rho_eff: rho * problem.data_weight,
-            chain,
-            theta: vec![vec![0.0; d]; n],
-            lambda: vec![vec![0.0; d]; n],
-            q: vec![0.0; d],
+            core: GroupAdmmCore::new(problem, rho, chain, links),
         }
     }
 
+    /// ρ in the paper's units (see [`GroupAdmmCore::rho`]).
+    pub fn rho(&self) -> f64 {
+        self.core.rho
+    }
+
     pub fn chain(&self) -> &Chain {
-        &self.chain
+        self.core.chain()
     }
 
     pub fn thetas(&self) -> &[Vec<f64>] {
-        &self.theta
+        self.core.thetas()
     }
 
     /// Duals indexed by physical worker (entry for the last-position worker
     /// is identically zero).
     pub fn lambdas(&self) -> &[Vec<f64>] {
-        &self.lambda
+        self.core.lambdas()
     }
 
-    /// Replace the logical chain (D-GADMM re-chaining). Primal iterates and
-    /// duals both travel with their physical workers: worker w keeps λ_w and
-    /// applies it to whatever its new right neighbour is (Appendix E,
-    /// eq. 90 — convergence holds when iteration-k variables computed under
-    /// the previous neighbour set are reused).
+    /// See [`GroupAdmmCore::set_chain`].
     pub fn set_chain(&mut self, chain: Chain) {
-        assert_eq!(chain.len(), self.chain.len());
-        self.chain = chain;
+        self.core.set_chain(chain);
     }
 
-    /// Re-initialize the duals consistently for the *current* chain via a
-    /// left-to-right prefix-sum sweep: `λ_{order[p]} = λ_{order[p−1]} −
-    /// ∇f_{order[p]}(θ_{order[p]})` (dual-feasibility recursion, eq. 17, at
-    /// the current primals). D-GADMM calls this after every re-chain — the
-    /// paper only says workers "refresh indices" (Appendix D); plain reuse
-    /// of stale duals stalls on heterogeneous data because the optimal
-    /// duals are chain-order-dependent prefix gradient sums, while this
-    /// sweep restores exact dual feasibility for every worker and rides the
-    /// chain-build exchange the paper already budgets (2 iterations / 4
-    /// rounds). See DESIGN.md §Substitutions.
+    /// See [`GroupAdmmCore::reinit_duals_for_chain`].
     pub fn reinit_duals_for_chain(&mut self) {
-        let feas = self.feasible_duals();
-        for (w, f) in feas.into_iter().enumerate() {
-            self.lambda[w] = f;
-        }
+        self.core.reinit_duals_for_chain();
     }
 
-    /// The dual-feasibility baseline for the *current* chain at the current
-    /// primals: `λ_{order[p]} = λ_{order[p−1]} − ∇f_{order[p]}(θ_{order[p]})`
-    /// (eq. 17 telescoped), indexed by physical worker. The last-position
-    /// worker's entry is zero.
+    /// See [`GroupAdmmCore::feasible_duals`].
     pub fn feasible_duals(&self) -> Vec<Vec<f64>> {
-        let n = self.chain.len();
-        let d = self.problem.dim;
-        let mut out = vec![vec![0.0; d]; n];
-        let mut running = vec![0.0; d];
-        let mut g = vec![0.0; d];
-        for p in 0..n - 1 {
-            let w = self.chain.order[p];
-            self.problem.losses[w].grad_into(&self.theta[w], &mut g);
-            for j in 0..d {
-                running[j] -= g[j];
-            }
-            out[w].copy_from_slice(&running);
-        }
-        out
+        self.core.feasible_duals()
     }
 
-    /// Re-baseline the duals onto a new chain while preserving their
-    /// dual-ascent momentum: with `feas(chain)` the feasibility baseline,
-    /// set `λ' = feas(new) + (λ − feas(old))`. Call with the *old* chain's
-    /// baseline captured before `set_chain`. As θ → θ*, feas(chain) → the
-    /// chain's λ*, so the transferred deviation vanishes at the optimum on
-    /// any chain — this is what keeps D-GADMM convergent on heterogeneous
-    /// data without discarding the accumulated dual ascent (see
-    /// DualHandling in dgadmm.rs and DESIGN.md §Substitutions).
-    /// Damped dual correction toward the current chain's feasibility
-    /// baseline: `λ ← λ + γ·(feas − λ)`. γ=1 is a full re-init (discards
-    /// momentum), γ=0 is plain reuse (keeps chain-order bias); intermediate
-    /// γ keeps D-GADMM convergent on heterogeneous data without stalling.
+    /// See [`GroupAdmmCore::damp_duals_toward_feasible`].
     pub fn damp_duals_toward_feasible(&mut self, gamma: f64) {
-        let feas = self.feasible_duals();
-        let n = self.chain.len();
-        let last = self.chain.order[n - 1];
-        for w in 0..n {
-            if w == last {
-                self.lambda[w].iter_mut().for_each(|x| *x = 0.0);
-                continue;
-            }
-            for j in 0..self.problem.dim {
-                self.lambda[w][j] += gamma * (feas[w][j] - self.lambda[w][j]);
-            }
-        }
+        self.core.damp_duals_toward_feasible(gamma);
     }
 
+    /// See [`GroupAdmmCore::rebase_duals`].
     pub fn rebase_duals(&mut self, old_feas: &[Vec<f64>]) {
-        let new_feas = self.feasible_duals();
-        let n = self.chain.len();
-        let last = self.chain.order[n - 1];
-        for w in 0..n {
-            if w == last {
-                self.lambda[w].iter_mut().for_each(|x| *x = 0.0);
-                continue;
-            }
-            for j in 0..self.problem.dim {
-                self.lambda[w][j] += new_feas[w][j] - old_feas[w][j];
-            }
-        }
+        self.core.rebase_duals(old_feas);
     }
 
     /// Consensus average of the worker models (final model export).
     pub fn consensus_mean(&self) -> Vec<f64> {
-        let d = self.problem.dim;
-        let mut mean = vec![0.0; d];
-        for t in &self.theta {
-            vec_ops::axpy(1.0, t, &mut mean);
-        }
-        vec_ops::scale(1.0 / self.theta.len() as f64, &mut mean);
-        mean
-    }
-
-    /// Solve the subproblem for the worker at chain position `p` using the
-    /// neighbour models currently in `self.theta`. The subproblem's linear
-    /// term is `q = −λ_{p−1} + λ_p − ρ(θ_left + θ_right)`, the quadratic
-    /// coefficient `c = ρ·(#neighbours)`.
-    fn update_position(&mut self, p: usize) {
-        let n = self.chain.len();
-        let w = self.chain.order[p];
-        let d = self.problem.dim;
-        self.q.iter_mut().for_each(|x| *x = 0.0);
-        let mut couplings = 0.0;
-        if p > 0 {
-            let left = self.chain.order[p - 1];
-            for j in 0..d {
-                // λ of the *left neighbour* governs the (left, w) link.
-                self.q[j] += -self.lambda[left][j] - self.rho_eff * self.theta[left][j];
-            }
-            couplings += 1.0;
-        }
-        if p + 1 < n {
-            let right = self.chain.order[p + 1];
-            for j in 0..d {
-                // w's own λ governs the (w, right) link.
-                self.q[j] += self.lambda[w][j] - self.rho_eff * self.theta[right][j];
-            }
-            couplings += 1.0;
-        }
-        let c = self.rho_eff * couplings;
-        self.theta[w] = self.problem.losses[w].prox_argmin(&self.q, c, &self.theta[w]);
+        self.core.consensus_mean()
     }
 
     /// Primal residuals r_{p,p+1} = θ_p − θ_{p+1} along the chain.
     pub fn primal_residuals(&self) -> Vec<Vec<f64>> {
-        (0..self.chain.len() - 1)
-            .map(|p| {
-                vec_ops::sub(
-                    &self.theta[self.chain.order[p]],
-                    &self.theta[self.chain.order[p + 1]],
-                )
-            })
-            .collect()
+        self.core.primal_residuals()
     }
 
-    /// Tail dual-feasibility residual max_n ‖∇f_n(θ_n) − λ_{n−1} + λ_n‖ over
-    /// tail positions — identically 0 in exact arithmetic after every
-    /// iteration (eq. 20); property-tested.
+    /// See [`GroupAdmmCore::tail_dual_residual`].
     pub fn tail_dual_residual(&self) -> f64 {
-        let n = self.chain.len();
-        let mut worst: f64 = 0.0;
-        for p in (1..n).step_by(2) {
-            let w = self.chain.order[p];
-            let left = self.chain.order[p - 1];
-            let mut g = self.problem.losses[w].grad(&self.theta[w]);
-            for j in 0..g.len() {
-                g[j] -= self.lambda[left][j];
-                if p + 1 < n {
-                    g[j] += self.lambda[w][j];
-                }
-            }
-            worst = worst.max(vec_ops::norm2(&g));
-        }
-        worst
+        self.core.tail_dual_residual()
     }
 
-    /// The Lyapunov function of Theorem 2 (eq. 32):
-    /// `V_k = 1/ρ Σ_p‖λ_p − λ*_p‖² + ρ Σ_{heads p>0}‖θ_{p−1} − θ*‖²
-    ///        + ρ Σ_{heads p}‖θ_{p+1} − θ*‖²`.
+    /// See [`GroupAdmmCore::lyapunov`].
     pub fn lyapunov(&self, theta_star: &[f64], lambda_star: &[Vec<f64>]) -> f64 {
-        let n = self.chain.len();
-        let mut v = 0.0;
-        for p in 0..n - 1 {
-            let w = self.chain.order[p];
-            v += vec_ops::dist2(&self.lambda[w], &lambda_star[p]).powi(2) / self.rho_eff;
-        }
-        for p in (0..n).step_by(2) {
-            if p > 0 {
-                let left = self.chain.order[p - 1];
-                v += self.rho_eff * vec_ops::dist2(&self.theta[left], theta_star).powi(2);
-            }
-            if p + 1 < n {
-                let right = self.chain.order[p + 1];
-                v += self.rho_eff * vec_ops::dist2(&self.theta[right], theta_star).powi(2);
-            }
-        }
-        v
-    }
-
-    /// Charge one phase's transmissions: every worker in the group
-    /// broadcasts once to its chain neighbours.
-    fn meter_phase(&self, meter: &mut Meter, head_phase: bool) {
-        meter.begin_round();
-        let n = self.chain.len();
-        let start = if head_phase { 0 } else { 1 };
-        for p in (start..n).step_by(2) {
-            let w = self.chain.order[p];
-            let (l, r) = self.chain.neighbors(p);
-            let neigh: Vec<usize> = [l, r].into_iter().flatten().collect();
-            meter.neighbor_broadcast(w, &neigh);
-        }
+        self.core.lyapunov(theta_star, lambda_star)
     }
 }
 
 impl Engine for Gadmm<'_> {
     fn name(&self) -> String {
-        format!("GADMM(rho={})", self.rho)
+        format!("GADMM(rho={})", self.core.rho)
     }
 
-    fn step(&mut self, _k: usize, meter: &mut Meter) {
-        let n = self.chain.len();
-        // Head phase (parallel in a real deployment; order-independent here
-        // because heads only read tail models).
-        for p in (0..n).step_by(2) {
-            self.update_position(p);
-        }
-        self.meter_phase(meter, true);
-        // Tail phase — uses the fresh head models.
-        for p in (1..n).step_by(2) {
-            self.update_position(p);
-        }
-        self.meter_phase(meter, false);
-        // Dual updates (eq. 15), local to each worker.
-        for p in 0..n - 1 {
-            let (a, b) = (self.chain.order[p], self.chain.order[p + 1]);
-            for j in 0..self.problem.dim {
-                // eq. 90: worker a's dual couples it to its current right
-                // neighbour b.
-                self.lambda[a][j] += self.rho_eff * (self.theta[a][j] - self.theta[b][j]);
-            }
-        }
+    fn step(&mut self, k: usize, meter: &mut Meter) {
+        self.core.step(k, meter);
     }
 
     fn objective(&self) -> f64 {
-        self.problem.objective_per_worker(&self.theta)
+        self.core.objective()
     }
 
     fn acv(&self) -> f64 {
-        let n = self.chain.len();
-        let mut total = 0.0;
-        for p in 0..n - 1 {
-            let (a, b) = (self.chain.order[p], self.chain.order[p + 1]);
-            total += vec_ops::norm1(&vec_ops::sub(&self.theta[a], &self.theta[b]));
-        }
-        total / n as f64
+        self.core.acv()
     }
 }
 
@@ -329,6 +129,7 @@ impl Engine for Gadmm<'_> {
 mod tests {
     use super::*;
     use crate::data::synthetic;
+    use crate::linalg::vector as vec_ops;
     use crate::optim::{run, RunOptions};
     use crate::topology::UnitCosts;
     use crate::util::rng::Pcg64;

@@ -1,7 +1,9 @@
-//! Optimization engines: GADMM, D-GADMM, Q-GADMM (quantized communication),
-//! and every baseline the paper evaluates against (standard ADMM, GD, DGD,
-//! LAG-PS/WK, Cycle-IAG, R-IAG, decentralized dual averaging), plus the
-//! shared run driver and the high-precision reference solver.
+//! Optimization engines: the group-ADMM family — GADMM, D-GADMM, Q-GADMM,
+//! C-GADMM, CQ-GADMM, all thin configurations of the policy-parameterized
+//! [`GroupAdmmCore`] — and every baseline the paper evaluates against
+//! (standard ADMM, GD, DGD, LAG-PS/WK, Cycle-IAG, R-IAG, decentralized
+//! dual averaging), plus the shared run driver and the high-precision
+//! reference solver.
 //!
 //! Every engine implements [`Engine`]: `step(k, meter)` advances one
 //! iteration and charges its communication pattern to the [`Meter`], and
@@ -9,6 +11,8 @@
 //! [`Trace`].
 
 pub mod admm;
+pub mod censor;
+pub mod core;
 pub mod dgadmm;
 pub mod dgd;
 pub mod dualavg;
@@ -19,7 +23,9 @@ pub mod lag;
 pub mod qgadmm;
 pub mod solver;
 
+pub use self::core::GroupAdmmCore;
 pub use admm::Admm;
+pub use censor::{Cgadmm, Cqgadmm};
 pub use dgadmm::{Dgadmm, DualHandling, RechainMode};
 pub use dgd::Dgd;
 pub use dualavg::DualAvg;

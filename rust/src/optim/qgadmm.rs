@@ -1,5 +1,6 @@
 //! Q-GADMM — GADMM with stochastically quantized model exchange
-//! (*Q-GADMM: Quantized Group ADMM*, Elgabli et al., 2019).
+//! (*Q-GADMM: Quantized Group ADMM*, Elgabli et al., 2019): the
+//! quantized always-transmit configuration of [`GroupAdmmCore`].
 //!
 //! Identical head/tail group scheduling to [`super::Gadmm`], but every
 //! broadcast carries `b` bits per coordinate instead of a dense f64 vector:
@@ -12,7 +13,8 @@
 //!    neighbour terms of the subproblems and the dual ascent — uses the
 //!    *quantized* models `θ̂`, which sender and receivers reconstruct
 //!    bit-identically. Worker-local state (the warm start, the objective's
-//!    own iterate) stays full precision.
+//!    own iterate) stays full precision. This is exactly the core's
+//!    public/private split.
 //! 2. **Shrinking range.** The quantization range is the max-abs difference
 //!    from the previous transmission, so it contracts as the iterates
 //!    converge: a fixed bit-width buys geometrically finer absolute
@@ -24,30 +26,15 @@
 //! GADMM, but `d·b + 64` payload bits per slot instead of `64·d` — an
 //! `≈ 64/b` reduction, which the bit-exact meter records per iteration.
 
+use super::core::GroupAdmmCore;
 use super::Engine;
-use crate::comm::{Compressor, Meter, StochasticQuantizer};
-use crate::linalg::vector as vec_ops;
+use crate::comm::{quant_links, Meter};
 use crate::model::Problem;
 use crate::topology::chain::Chain;
 
 pub struct Qgadmm<'a> {
-    problem: &'a Problem,
-    /// ρ in the paper's units (see [`super::Gadmm`]).
-    pub rho: f64,
-    rho_eff: f64,
-    chain: Chain,
-    /// Full-precision primal iterate per physical worker (private).
-    theta: Vec<Vec<f64>>,
-    /// Quantized public model per physical worker — what every neighbour
-    /// (and the dual update) sees.
-    hat: Vec<Vec<f64>>,
-    /// Dual per physical worker, coupling it to its right neighbour.
-    lambda: Vec<Vec<f64>>,
-    /// Per-worker quantizer (sender state: anchor + rounding RNG).
-    quantizers: Vec<StochasticQuantizer>,
+    core: GroupAdmmCore<'a>,
     bits: u32,
-    /// Scratch for the subproblem's linear term.
-    q: Vec<f64>,
 }
 
 impl<'a> Qgadmm<'a> {
@@ -64,130 +51,53 @@ impl<'a> Qgadmm<'a> {
         seed: u64,
         chain: Chain,
     ) -> Qgadmm<'a> {
-        let n = problem.num_workers();
-        assert_eq!(chain.len(), n);
-        assert!(n >= 2 && n % 2 == 0, "GADMM requires an even N ≥ 2");
-        assert!(rho > 0.0);
-        let d = problem.dim;
-        let quantizers = (0..n)
-            .map(|w| StochasticQuantizer::for_worker(d, bits, seed, w))
-            .collect();
+        let links = quant_links(problem.dim, problem.num_workers(), bits, seed);
         Qgadmm {
-            problem,
-            rho,
-            rho_eff: rho * problem.data_weight,
-            chain,
-            theta: vec![vec![0.0; d]; n],
-            hat: vec![vec![0.0; d]; n],
-            lambda: vec![vec![0.0; d]; n],
-            quantizers,
+            core: GroupAdmmCore::new(problem, rho, chain, links),
             bits,
-            q: vec![0.0; d],
         }
     }
 
+    /// ρ in the paper's units (see [`super::Gadmm`]).
+    pub fn rho(&self) -> f64 {
+        self.core.rho
+    }
+
     pub fn chain(&self) -> &Chain {
-        &self.chain
+        self.core.chain()
     }
 
     /// Private full-precision iterates.
     pub fn thetas(&self) -> &[Vec<f64>] {
-        &self.theta
+        self.core.thetas()
     }
 
     /// Public quantized models (the network-wide view).
     pub fn hats(&self) -> &[Vec<f64>] {
-        &self.hat
+        self.core.hats()
     }
 
     /// Exact payload bits of one model broadcast (`d·b` + range overhead).
     pub fn message_bits(&self) -> f64 {
-        self.quantizers[0].message_bits()
-    }
-
-    /// Solve the subproblem at chain position `p` against the *quantized*
-    /// neighbour models, then publish the new quantized model.
-    fn update_position(&mut self, p: usize) {
-        let n = self.chain.len();
-        let w = self.chain.order[p];
-        let d = self.problem.dim;
-        self.q.iter_mut().for_each(|x| *x = 0.0);
-        let mut couplings = 0.0;
-        if p > 0 {
-            let left = self.chain.order[p - 1];
-            for j in 0..d {
-                self.q[j] += -self.lambda[left][j] - self.rho_eff * self.hat[left][j];
-            }
-            couplings += 1.0;
-        }
-        if p + 1 < n {
-            let right = self.chain.order[p + 1];
-            for j in 0..d {
-                self.q[j] += self.lambda[w][j] - self.rho_eff * self.hat[right][j];
-            }
-            couplings += 1.0;
-        }
-        let c = self.rho_eff * couplings;
-        self.theta[w] = self.problem.losses[w].prox_argmin(&self.q, c, &self.theta[w]);
-        let _msg = self.quantizers[w].encode(&self.theta[w]);
-        self.hat[w].copy_from_slice(self.quantizers[w].public_view());
-    }
-
-    /// Charge one phase's transmissions with the quantized payload size.
-    fn meter_phase(&self, meter: &mut Meter, head_phase: bool) {
-        meter.begin_round();
-        let n = self.chain.len();
-        let bits = self.message_bits();
-        let start = usize::from(!head_phase);
-        for p in (start..n).step_by(2) {
-            let w = self.chain.order[p];
-            let (l, r) = self.chain.neighbors(p);
-            let neigh: Vec<usize> = [l, r].into_iter().flatten().collect();
-            meter.neighbor_broadcast_bits(w, &neigh, bits);
-        }
+        self.core.message_bits()
     }
 }
 
 impl Engine for Qgadmm<'_> {
     fn name(&self) -> String {
-        format!("Q-GADMM(rho={},b={})", self.rho, self.bits)
+        format!("Q-GADMM(rho={},b={})", self.core.rho, self.bits)
     }
 
-    fn step(&mut self, _k: usize, meter: &mut Meter) {
-        let n = self.chain.len();
-        // Head phase: heads read the tails' iteration-k quantized models.
-        for p in (0..n).step_by(2) {
-            self.update_position(p);
-        }
-        self.meter_phase(meter, true);
-        // Tail phase: tails read the fresh quantized head models.
-        for p in (1..n).step_by(2) {
-            self.update_position(p);
-        }
-        self.meter_phase(meter, false);
-        // Dual updates on the *public* models: both endpoints of every link
-        // hold the same θ̂ values, so their mirrored duals stay identical
-        // without extra communication (the Q-GADMM eq. 11 form).
-        for p in 0..n - 1 {
-            let (a, b) = (self.chain.order[p], self.chain.order[p + 1]);
-            for j in 0..self.problem.dim {
-                self.lambda[a][j] += self.rho_eff * (self.hat[a][j] - self.hat[b][j]);
-            }
-        }
+    fn step(&mut self, k: usize, meter: &mut Meter) {
+        self.core.step(k, meter);
     }
 
     fn objective(&self) -> f64 {
-        self.problem.objective_per_worker(&self.theta)
+        self.core.objective()
     }
 
     fn acv(&self) -> f64 {
-        let n = self.chain.len();
-        let mut total = 0.0;
-        for p in 0..n - 1 {
-            let (a, b) = (self.chain.order[p], self.chain.order[p + 1]);
-            total += vec_ops::norm1(&vec_ops::sub(&self.theta[a], &self.theta[b]));
-        }
-        total / n as f64
+        self.core.acv()
     }
 }
 
@@ -196,6 +106,7 @@ mod tests {
     use super::*;
     use crate::comm::{FP64_BITS, RANGE_OVERHEAD_BITS};
     use crate::data::synthetic;
+    use crate::linalg::vector as vec_ops;
     use crate::optim::{run, Gadmm, RunOptions};
     use crate::topology::UnitCosts;
     use crate::util::rng::Pcg64;

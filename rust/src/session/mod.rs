@@ -21,5 +21,5 @@ pub mod spec;
 pub mod sweep;
 
 pub use sink::{CsvSink, JsonReportSink, MemorySink, TraceSink};
-pub use spec::{AlgoSpec, BuildCtx};
+pub use spec::{AlgoSpec, BuildCtx, ChainWire, DEFAULT_CENSOR_MU, DEFAULT_CENSOR_TAU};
 pub use sweep::{CellKey, SweepCell, SweepOutput, SweepRunner, SweepSpec};

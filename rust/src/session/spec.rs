@@ -8,15 +8,25 @@
 //! `lag:variant=wk,xi=0.05`, and build running engines via the
 //! [`AlgoSpec::build`] registry (see `docs/adr/002-algospec-registry.md`).
 
+use crate::comm::{
+    censored_dense_links, censored_quant_links, dense_links, quant_links, validate_censor_params,
+    LinkPolicy,
+};
 use crate::config::validate_quant_bits;
 use crate::model::Problem;
 use crate::optim::{
-    Admm, Dgadmm, Dgd, DualAvg, Engine, Gadmm, Gd, Iag, IagOrder, Lag, LagVariant, Qgadmm,
-    RechainMode,
+    Admm, Cgadmm, Cqgadmm, Dgadmm, Dgd, DualAvg, Engine, Gadmm, Gd, Iag, IagOrder, Lag,
+    LagVariant, Qgadmm, RechainMode,
 };
 use crate::topology::chain::Chain;
 use crate::topology::{LinkCosts, UnitCosts};
 use crate::util::json::Json;
+
+/// Registry defaults for the censoring knobs (see `optim::censor`): the
+/// threshold `τ·μ^k` with `μ = 0.93` tracks the paper-scale contraction
+/// rate, saving payload bits without stalling convergence.
+pub const DEFAULT_CENSOR_TAU: f64 = 1.0;
+pub const DEFAULT_CENSOR_MU: f64 = 0.93;
 
 /// Default engine costs for the context-free [`AlgoSpec::build`] path.
 static UNIT_COSTS: UnitCosts = UnitCosts;
@@ -32,6 +42,10 @@ pub enum AlgoSpec {
     Gadmm { rho: f64 },
     /// Q-GADMM: GADMM with stochastically quantized model exchange.
     Qgadmm { rho: f64, bits: u32 },
+    /// C-GADMM: GADMM with slots censored under the threshold `τ·μ^k`.
+    Cgadmm { rho: f64, tau: f64, mu: f64 },
+    /// CQ-GADMM: censoring composed with stochastic quantization.
+    Cqgadmm { rho: f64, bits: u32, tau: f64, mu: f64 },
     /// D-GADMM: GADMM re-chaining every `tau` iterations.
     Dgadmm { rho: f64, tau: usize, mode: RechainMode },
     /// LAG-WK / LAG-PS with trigger scale ξ.
@@ -69,6 +83,8 @@ impl AlgoSpec {
         match self {
             AlgoSpec::Gadmm { .. } => "gadmm",
             AlgoSpec::Qgadmm { .. } => "qgadmm",
+            AlgoSpec::Cgadmm { .. } => "cgadmm",
+            AlgoSpec::Cqgadmm { .. } => "cqgadmm",
             AlgoSpec::Dgadmm { .. } => "dgadmm",
             AlgoSpec::Lag { .. } => "lag",
             AlgoSpec::Iag { .. } => "iag",
@@ -84,6 +100,8 @@ impl AlgoSpec {
         match self {
             AlgoSpec::Gadmm { .. } => "GADMM",
             AlgoSpec::Qgadmm { .. } => "Q-GADMM",
+            AlgoSpec::Cgadmm { .. } => "C-GADMM",
+            AlgoSpec::Cqgadmm { .. } => "CQ-GADMM",
             AlgoSpec::Dgadmm { .. } => "D-GADMM",
             AlgoSpec::Lag { variant: LagVariant::Wk, .. } => "LAG-WK",
             AlgoSpec::Lag { variant: LagVariant::Ps, .. } => "LAG-PS",
@@ -101,7 +119,23 @@ impl AlgoSpec {
     pub fn needs_even_workers(&self) -> bool {
         matches!(
             self,
-            AlgoSpec::Gadmm { .. } | AlgoSpec::Qgadmm { .. } | AlgoSpec::Dgadmm { .. }
+            AlgoSpec::Gadmm { .. }
+                | AlgoSpec::Qgadmm { .. }
+                | AlgoSpec::Cgadmm { .. }
+                | AlgoSpec::Cqgadmm { .. }
+                | AlgoSpec::Dgadmm { .. }
+        )
+    }
+
+    /// Whether this spec runs on a *static* logical chain — the family the
+    /// distributed coordinator can execute (see [`AlgoSpec::chain_wire`]).
+    pub fn is_static_chain(&self) -> bool {
+        matches!(
+            self,
+            AlgoSpec::Gadmm { .. }
+                | AlgoSpec::Qgadmm { .. }
+                | AlgoSpec::Cgadmm { .. }
+                | AlgoSpec::Cqgadmm { .. }
         )
     }
 
@@ -110,6 +144,10 @@ impl AlgoSpec {
         match *self {
             AlgoSpec::Gadmm { rho } => format!("gadmm:rho={rho}"),
             AlgoSpec::Qgadmm { rho, bits } => format!("qgadmm:rho={rho},bits={bits}"),
+            AlgoSpec::Cgadmm { rho, tau, mu } => format!("cgadmm:rho={rho},tau={tau},mu={mu}"),
+            AlgoSpec::Cqgadmm { rho, bits, tau, mu } => {
+                format!("cqgadmm:rho={rho},bits={bits},tau={tau},mu={mu}")
+            }
             AlgoSpec::Dgadmm { rho, tau, mode } => {
                 format!("dgadmm:rho={rho},tau={tau},mode={}", mode_str(mode))
             }
@@ -139,6 +177,19 @@ impl AlgoSpec {
                 rho: params.take_rho(5.0)?,
                 bits: validate_quant_bits(params.take_u64("bits", 8)?)?,
             },
+            "cgadmm" => {
+                let (tau, mu) = params.take_censor()?;
+                AlgoSpec::Cgadmm { rho: params.take_rho(5.0)?, tau, mu }
+            }
+            "cqgadmm" => {
+                let (tau, mu) = params.take_censor()?;
+                AlgoSpec::Cqgadmm {
+                    rho: params.take_rho(5.0)?,
+                    bits: validate_quant_bits(params.take_u64("bits", 8)?)?,
+                    tau,
+                    mu,
+                }
+            }
             "dgadmm" => AlgoSpec::Dgadmm {
                 rho: params.take_rho(1.0)?,
                 tau: match params.take_u64("tau", 15)? {
@@ -172,8 +223,8 @@ impl AlgoSpec {
             "admm" => AlgoSpec::Admm { rho: params.take_rho(5.0)? },
             other => {
                 return Err(format!(
-                    "unknown algorithm '{other}' (expected one of gadmm, qgadmm, dgadmm, lag, \
-                     iag, gd, dgd, dualavg, admm)"
+                    "unknown algorithm '{other}' (expected one of gadmm, qgadmm, cgadmm, \
+                     cqgadmm, dgadmm, lag, iag, gd, dgd, dualavg, admm)"
                 ))
             }
         };
@@ -187,6 +238,10 @@ impl AlgoSpec {
         match *self {
             AlgoSpec::Gadmm { rho } => j.set("rho", rho),
             AlgoSpec::Qgadmm { rho, bits } => j.set("rho", rho).set("bits", bits as usize),
+            AlgoSpec::Cgadmm { rho, tau, mu } => j.set("rho", rho).set("tau", tau).set("mu", mu),
+            AlgoSpec::Cqgadmm { rho, bits, tau, mu } => {
+                j.set("rho", rho).set("bits", bits as usize).set("tau", tau).set("mu", mu)
+            }
             AlgoSpec::Dgadmm { rho, tau, mode } => {
                 j.set("rho", rho).set("tau", tau).set("mode", mode_str(mode))
             }
@@ -253,6 +308,12 @@ impl AlgoSpec {
             AlgoSpec::Qgadmm { rho, bits } => {
                 Box::new(Qgadmm::with_chain(p, rho, bits, ctx.seed, chain()))
             }
+            AlgoSpec::Cgadmm { rho, tau, mu } => {
+                Box::new(Cgadmm::with_chain(p, rho, tau, mu, chain()))
+            }
+            AlgoSpec::Cqgadmm { rho, bits, tau, mu } => {
+                Box::new(Cqgadmm::with_chain(p, rho, bits, tau, mu, ctx.seed, chain()))
+            }
             AlgoSpec::Dgadmm { rho, tau, mode } => {
                 Box::new(Dgadmm::new(p, rho, tau, mode, ctx.costs, ctx.seed))
             }
@@ -269,12 +330,54 @@ impl AlgoSpec {
         }
     }
 
+    /// The wire configuration of a *static-chain* spec: ρ plus one
+    /// [`LinkPolicy`] per worker, and the distributed display name. This is
+    /// the single factory both execution paths share — the sequential
+    /// engines install exactly these policies, and the coordinator's
+    /// workers exchange messages through them — so for the same `seed` the
+    /// two paths hold bit-identical wire state (the
+    /// distributed-equivalence invariant). Returns `None` for specs the
+    /// coordinator cannot execute (re-chaining D-GADMM, centralized
+    /// baselines).
+    pub fn chain_wire(&self, dim: usize, n: usize, seed: u64) -> Option<ChainWire> {
+        match *self {
+            AlgoSpec::Gadmm { rho } => Some(ChainWire {
+                rho,
+                links: dense_links(dim, n),
+                name: format!("GADMM-dist(rho={rho})"),
+            }),
+            AlgoSpec::Qgadmm { rho, bits } => Some(ChainWire {
+                rho,
+                links: quant_links(dim, n, bits, seed),
+                name: format!("Q-GADMM-dist(rho={rho},b={bits})"),
+            }),
+            AlgoSpec::Cgadmm { rho, tau, mu } => Some(ChainWire {
+                rho,
+                links: censored_dense_links(dim, n, tau, mu),
+                name: format!("C-GADMM-dist(rho={rho},tau={tau},mu={mu})"),
+            }),
+            AlgoSpec::Cqgadmm { rho, bits, tau, mu } => Some(ChainWire {
+                rho,
+                links: censored_quant_links(dim, n, bits, tau, mu, seed),
+                name: format!("CQ-GADMM-dist(rho={rho},b={bits},tau={tau},mu={mu})"),
+            }),
+            _ => None,
+        }
+    }
+
     /// One exemplar spec per engine the registry can build — the source of
     /// truth for "every `optim` engine is reachable from a spec".
     pub fn registry() -> Vec<AlgoSpec> {
         vec![
             AlgoSpec::Gadmm { rho: 5.0 },
             AlgoSpec::Qgadmm { rho: 5.0, bits: 8 },
+            AlgoSpec::Cgadmm { rho: 5.0, tau: DEFAULT_CENSOR_TAU, mu: DEFAULT_CENSOR_MU },
+            AlgoSpec::Cqgadmm {
+                rho: 5.0,
+                bits: 8,
+                tau: DEFAULT_CENSOR_TAU,
+                mu: DEFAULT_CENSOR_MU,
+            },
             AlgoSpec::Dgadmm { rho: 1.0, tau: 15, mode: RechainMode::Free },
             AlgoSpec::Lag { variant: LagVariant::Wk, xi: 0.05 },
             AlgoSpec::Lag { variant: LagVariant::Ps, xi: 0.05 },
@@ -286,6 +389,16 @@ impl AlgoSpec {
             AlgoSpec::Admm { rho: 5.0 },
         ]
     }
+}
+
+/// A static-chain spec resolved to its wire configuration (see
+/// [`AlgoSpec::chain_wire`]).
+pub struct ChainWire {
+    pub rho: f64,
+    /// One sender-side link policy per physical worker.
+    pub links: Vec<Box<dyn LinkPolicy>>,
+    /// Distributed display name, e.g. `"GADMM-dist(rho=5)"`.
+    pub name: String,
 }
 
 impl std::fmt::Display for AlgoSpec {
@@ -376,6 +489,25 @@ impl<'s> Params<'s> {
         self.take_positive("rho", default)
     }
 
+    fn take_f64(&mut self, key: &str, default: f64) -> Result<f64, String> {
+        match self.take(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("{} {key} expects a number, got '{v}'", self.kind)),
+        }
+    }
+
+    /// The censoring knobs, validated through the single shared check
+    /// (`comm::validate_censor_params`) so CLI and JSON agree on the
+    /// domain and the message.
+    fn take_censor(&mut self) -> Result<(f64, f64), String> {
+        let tau = self.take_f64("tau", DEFAULT_CENSOR_TAU)?;
+        let mu = self.take_f64("mu", DEFAULT_CENSOR_MU)?;
+        validate_censor_params(tau, mu).map_err(|e| format!("{}: {e}", self.kind))?;
+        Ok((tau, mu))
+    }
+
     fn finish(mut self) -> Result<(), String> {
         match self.pairs.pop() {
             None => Ok(()),
@@ -428,6 +560,43 @@ mod tests {
     }
 
     #[test]
+    fn censor_specs_parse_with_defaults_and_validate() {
+        assert_eq!(
+            AlgoSpec::parse("cgadmm").unwrap(),
+            AlgoSpec::Cgadmm { rho: 5.0, tau: DEFAULT_CENSOR_TAU, mu: DEFAULT_CENSOR_MU }
+        );
+        assert_eq!(
+            AlgoSpec::parse("cqgadmm:rho=3,bits=4,tau=0.5,mu=0.9").unwrap(),
+            AlgoSpec::Cqgadmm { rho: 3.0, bits: 4, tau: 0.5, mu: 0.9 }
+        );
+        // tau=0 is the legal "never censor" degeneracy.
+        assert_eq!(
+            AlgoSpec::parse("cgadmm:tau=0").unwrap(),
+            AlgoSpec::Cgadmm { rho: 5.0, tau: 0.0, mu: DEFAULT_CENSOR_MU }
+        );
+        let e = AlgoSpec::parse("cgadmm:mu=1").unwrap_err();
+        assert!(e.contains("mu must be in (0, 1)"), "{e}");
+        let e = AlgoSpec::parse("cqgadmm:tau=-2").unwrap_err();
+        assert!(e.contains("tau must be finite and ≥ 0"), "{e}");
+        assert!(AlgoSpec::parse("cqgadmm:bits=0").is_err());
+        // JSON path funnels through the same validation.
+        let bad = crate::util::json::parse(r#"{"algo":"cqgadmm","mu":1.5}"#).unwrap();
+        assert!(AlgoSpec::from_json(&bad).unwrap_err().contains("mu must be in (0, 1)"));
+    }
+
+    #[test]
+    fn chain_wire_covers_exactly_the_static_chain_specs() {
+        for spec in AlgoSpec::registry() {
+            let wire = spec.chain_wire(4, 6, 1);
+            assert_eq!(wire.is_some(), spec.is_static_chain(), "{spec}");
+            if let Some(w) = wire {
+                assert_eq!(w.links.len(), 6);
+                assert!(w.name.contains("-dist("), "{}", w.name);
+            }
+        }
+    }
+
+    #[test]
     fn builds_every_registry_entry() {
         let ds = synthetic::linreg(40, 4, &mut Pcg64::seeded(1));
         let problem = Problem::from_dataset(&ds, 4);
@@ -437,8 +606,8 @@ mod tests {
             names.push(engine.name());
         }
         for expected in [
-            "GADMM(", "Q-GADMM(", "D-GADMM(", "LAG-WK", "LAG-PS", "Cycle-IAG", "R-IAG", "GD",
-            "DGD", "DualAvg", "ADMM(",
+            "GADMM(", "Q-GADMM(", "C-GADMM(", "CQ-GADMM(", "D-GADMM(", "LAG-WK", "LAG-PS",
+            "Cycle-IAG", "R-IAG", "GD", "DGD", "DualAvg", "ADMM(",
         ] {
             assert!(
                 names.iter().any(|n| n.starts_with(expected)),

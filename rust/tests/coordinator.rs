@@ -6,8 +6,9 @@ use gadmm::coordinator::{self, QuantSpec};
 use gadmm::data::synthetic;
 use gadmm::linalg::vector as vec_ops;
 use gadmm::model::Problem;
-use gadmm::optim::{run, Gadmm, Qgadmm, RunOptions};
+use gadmm::optim::{self, run, Gadmm, Qgadmm, RunOptions};
 use gadmm::runtime::{LocalSolver, NativeSolver};
+use gadmm::session::AlgoSpec;
 use gadmm::topology::chain::Chain;
 use gadmm::topology::UnitCosts;
 use gadmm::util::rng::Pcg64;
@@ -133,6 +134,147 @@ fn quantized_distributed_on_permuted_chain_converges() {
     let mut seq = Qgadmm::with_chain(&p, 2.0, 6, 4, chain);
     let seq_trace = run(&mut seq, &p, &costs, &opts);
     assert_eq!(dist.trace.iters_to_target(), seq_trace.iters_to_target());
+}
+
+/// Distributed run of a static-chain spec must be bit-identical to the
+/// sequential core built from the same spec: identical slot/bit
+/// accounting at every recorded iteration and bitwise-equal final models
+/// (the monitoring objective alone may differ by float-summation order).
+fn assert_dist_matches_seq(p: &Problem, spec: AlgoSpec, seed: u64, opts: &RunOptions) {
+    let costs = UnitCosts;
+    let n = p.num_workers();
+    let dist = coordinator::train_spec(
+        p,
+        native_solvers(p),
+        &spec,
+        seed,
+        Chain::sequential(n),
+        &costs,
+        opts,
+    )
+    .unwrap();
+    let mut seq = spec.build(p, seed);
+    let seq_trace = run(&mut *seq, p, &costs, opts);
+    assert_eq!(
+        dist.trace.iters_to_target(),
+        seq_trace.iters_to_target(),
+        "{spec}: convergence point differs"
+    );
+    assert_eq!(dist.trace.records.len(), seq_trace.records.len(), "{spec}");
+    for (a, b) in dist.trace.records.iter().zip(&seq_trace.records) {
+        assert!(
+            (a.obj_err - b.obj_err).abs() <= 1e-9 * (1.0 + b.obj_err),
+            "{spec} iter {}: {} vs {}",
+            a.iter,
+            a.obj_err,
+            b.obj_err
+        );
+        assert_eq!(a.tc_unit, b.tc_unit, "{spec} iter {}: TC mismatch", a.iter);
+        assert_eq!(a.bits, b.bits, "{spec} iter {}: bit accounting mismatch", a.iter);
+        assert_eq!(a.acv, b.acv, "{spec} iter {}: ACV mismatch", a.iter);
+    }
+}
+
+#[test]
+fn censored_distributed_matches_sequential_cgadmm() {
+    // Skips must happen on both paths at the same slots: the censor check
+    // runs inside the same shared LinkPolicy on either side.
+    let ds = synthetic::linreg(120, 8, &mut Pcg64::seeded(11));
+    let p = Problem::from_dataset(&ds, 6);
+    let opts = RunOptions::with_target(1e-5, 4_000);
+    let spec = AlgoSpec::Cgadmm { rho: 5.0, tau: 1.0, mu: 0.93 };
+    assert_dist_matches_seq(&p, spec, 3, &opts);
+    // The run censored something (otherwise this test is vacuous): TC at
+    // convergence below k·N.
+    let seq = run(&mut *spec.build(&p, 3), &p, &UnitCosts, &opts);
+    let k = seq.iters_to_target().expect("C-GADMM converges") as f64;
+    assert!(seq.tc_to_target().unwrap() < k * 6.0, "no slot censored");
+}
+
+#[test]
+fn censored_quantized_distributed_matches_sequential_cqgadmm() {
+    let ds = synthetic::linreg(120, 8, &mut Pcg64::seeded(12));
+    let p = Problem::from_dataset(&ds, 6);
+    let opts = RunOptions::with_target(1e-5, 5_000);
+    assert_dist_matches_seq(
+        &p,
+        AlgoSpec::Cqgadmm { rho: 5.0, bits: 8, tau: 1.0, mu: 0.93 },
+        17,
+        &opts,
+    );
+}
+
+#[test]
+fn all_static_chain_specs_distribute_bit_identically() {
+    // The acceptance sweep: every engine the coordinator implements stays
+    // bit-identical to its sequential core.
+    let ds = synthetic::linreg(120, 6, &mut Pcg64::seeded(13));
+    let p = Problem::from_dataset(&ds, 4);
+    let opts = RunOptions::with_target(1e-4, 3_000);
+    for spec in [
+        AlgoSpec::Gadmm { rho: 3.0 },
+        AlgoSpec::Qgadmm { rho: 3.0, bits: 6 },
+        AlgoSpec::Cgadmm { rho: 3.0, tau: 0.5, mu: 0.9 },
+        AlgoSpec::Cqgadmm { rho: 3.0, bits: 6, tau: 0.5, mu: 0.9 },
+    ] {
+        assert_dist_matches_seq(&p, spec, 9, &opts);
+    }
+}
+
+#[test]
+fn tau_zero_distributed_cqgadmm_equals_distributed_qgadmm() {
+    // Degeneracy holds across the wire too: τ=0 censoring is Q-GADMM.
+    let ds = synthetic::linreg(80, 5, &mut Pcg64::seeded(14));
+    let p = Problem::from_dataset(&ds, 4);
+    let opts = RunOptions::with_target(1e-5, 3_000);
+    let costs = UnitCosts;
+    let cq = coordinator::train_spec(
+        &p,
+        native_solvers(&p),
+        &AlgoSpec::Cqgadmm { rho: 3.0, bits: 8, tau: 0.0, mu: 0.93 },
+        21,
+        Chain::sequential(4),
+        &costs,
+        &opts,
+    )
+    .unwrap();
+    let q = coordinator::train_spec(
+        &p,
+        native_solvers(&p),
+        &AlgoSpec::Qgadmm { rho: 3.0, bits: 8 },
+        21,
+        Chain::sequential(4),
+        &costs,
+        &opts,
+    )
+    .unwrap();
+    assert_eq!(cq.trace.records.len(), q.trace.records.len());
+    for (a, b) in cq.trace.records.iter().zip(&q.trace.records) {
+        assert_eq!(a.bits, b.bits);
+        assert_eq!(a.tc_unit, b.tc_unit);
+    }
+    for (a, b) in cq.thetas.iter().zip(&q.thetas) {
+        assert_eq!(a, b, "τ=0 final models differ");
+    }
+}
+
+#[test]
+fn dgadmm_spec_still_rejected_by_coordinator() {
+    let ds = synthetic::linreg(80, 5, &mut Pcg64::seeded(15));
+    let p = Problem::from_dataset(&ds, 4);
+    let opts = RunOptions::with_target(1e-4, 100);
+    let err = coordinator::train_spec(
+        &p,
+        native_solvers(&p),
+        &AlgoSpec::Dgadmm { rho: 1.0, tau: 15, mode: optim::RechainMode::Free },
+        1,
+        Chain::sequential(4),
+        &UnitCosts,
+        &opts,
+    )
+    .err()
+    .expect("re-chaining specs must be rejected");
+    assert!(err.contains("C-GADMM/CQ-GADMM"), "{err}");
 }
 
 #[test]

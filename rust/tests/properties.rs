@@ -4,11 +4,13 @@
 //! Q-GADMM quantizer (roundtrip error bound, stochastic-rounding
 //! unbiasedness, range shrinkage, bit-exact accounting).
 
-use gadmm::comm::{Meter, QuantizedMsg, StochasticQuantizer, RANGE_OVERHEAD_BITS};
+use gadmm::comm::{
+    CensorSchedule, Meter, QuantizedMsg, StochasticQuantizer, RANGE_OVERHEAD_BITS,
+};
 use gadmm::data::synthetic;
 use gadmm::linalg::vector as vec_ops;
 use gadmm::model::Problem;
-use gadmm::optim::{solver, Engine, Gadmm, Qgadmm};
+use gadmm::optim::{solver, Cqgadmm, Engine, Gadmm, Qgadmm};
 use gadmm::prop_assert;
 use gadmm::topology::chain::{self, Chain};
 use gadmm::topology::{EnergyCostModel, Placement, UnitCosts};
@@ -407,6 +409,143 @@ fn prop_qgadmm_bit_accounting_closed_form() {
                 gmeter.bits
             );
             prop_assert!(want < dense_want, "quantized payload not smaller");
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_censor_threshold_monotone_decreasing() {
+    // The censoring threshold τ·μ^k must decay monotonically for any
+    // μ ∈ (0,1): strictly while the value stays in the normal f64 range,
+    // non-strictly once it underflows toward zero. The incremental
+    // construction (thr ← thr·μ) guarantees this by IEEE-754 rounding
+    // monotonicity.
+    check(
+        "censor-threshold-monotone",
+        1313,
+        60,
+        |rng| {
+            let tau = rng.uniform(1e-6, 50.0);
+            let mu = rng.uniform(0.5, 0.999);
+            let steps = rng.range(2, 2000);
+            (tau, mu, steps)
+        },
+        |(tau, mu, steps)| {
+            let mut s = CensorSchedule::new(*tau, *mu);
+            let mut prev = s.threshold(0);
+            prop_assert!(prev == *tau, "threshold(0) = {prev} ≠ tau {tau}");
+            for k in 1..*steps {
+                let thr = s.threshold(k);
+                if prev > 1e-290 {
+                    prop_assert!(
+                        thr < prev,
+                        "threshold failed to strictly decrease at k={k}: {prev} → {thr} \
+                         (tau={tau}, mu={mu})"
+                    );
+                } else {
+                    prop_assert!(thr <= prev, "threshold grew at k={k}: {prev} → {thr}");
+                }
+                prop_assert!(thr >= 0.0, "negative threshold {thr}");
+                prev = thr;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_meter_mixed_slot_accounting_closed_form() {
+    // Interleaved dense, quantized, and censored slots: bits, unit TC, and
+    // transmissions must each equal their closed-form sums, and censored
+    // slots must contribute to none of them.
+    check(
+        "meter-mixed-accounting",
+        1414,
+        60,
+        |rng| {
+            let d = rng.range(1, 60);
+            let bits = rng.range(1, 13) as u32;
+            // Random slot sequence: 0 = dense, 1 = quantized, 2 = censored.
+            let slots: Vec<usize> = (0..rng.range(1, 120)).map(|_| rng.range(0, 3)).collect();
+            (d, bits, slots)
+        },
+        |(d, bits, slots)| {
+            let costs = UnitCosts;
+            let mut m = Meter::new(&costs);
+            let dense = 64.0 * *d as f64;
+            let quant = *d as f64 * *bits as f64 + 64.0;
+            let (mut nd, mut nq, mut ns) = (0usize, 0usize, 0usize);
+            for (i, kind) in slots.iter().enumerate() {
+                match *kind {
+                    0 => {
+                        m.neighbor_broadcast_bits(i % 4, &[(i + 1) % 4], dense);
+                        nd += 1;
+                    }
+                    1 => {
+                        m.neighbor_broadcast_bits(i % 4, &[(i + 1) % 4, (i + 2) % 4], quant);
+                        nq += 1;
+                    }
+                    _ => {
+                        m.censored_slot();
+                        ns += 1;
+                    }
+                }
+            }
+            let want_bits = nd as f64 * dense + nq as f64 * quant;
+            prop_assert!(m.bits == want_bits, "bits {} ≠ {want_bits}", m.bits);
+            prop_assert!(
+                m.tc_unit == (nd + nq) as f64,
+                "tc_unit {} ≠ {}",
+                m.tc_unit,
+                nd + nq
+            );
+            prop_assert!(
+                m.transmissions == nd + nq,
+                "transmissions {} ≠ {}",
+                m.transmissions,
+                nd + nq
+            );
+            prop_assert!(m.censored == ns, "censored {} ≠ {ns}", m.censored);
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_cqgadmm_tau_zero_degenerates_to_qgadmm() {
+    // With τ=0 the censor gate can never fire (‖δ‖ < 0 is impossible), so
+    // CQ-GADMM must follow Q-GADMM's exact deterministic path: same
+    // private iterates bitwise, same metered bits, for any (bits, seed).
+    check(
+        "cqgadmm-tau0-degeneracy",
+        1515,
+        8,
+        |rng| {
+            let n = 2 * rng.range(2, 4);
+            let bits = rng.range(2, 11) as u32;
+            (synthetic::linreg(30 * n, 5, rng), n, bits, rng.next_u64(), rng.range(3, 12))
+        },
+        |(ds, n, bits, seed, iters)| {
+            let p = Problem::from_dataset(ds, *n);
+            let costs = UnitCosts;
+            let mut cq = Cqgadmm::new(&p, 2.0, *bits, 0.0, 0.9, *seed);
+            let mut q = Qgadmm::new(&p, 2.0, *bits, *seed);
+            let mut m_cq = Meter::new(&costs);
+            let mut m_q = Meter::new(&costs);
+            for k in 0..*iters {
+                cq.step(k, &mut m_cq);
+                q.step(k, &mut m_q);
+            }
+            prop_assert!(m_cq.bits == m_q.bits, "bits {} ≠ {}", m_cq.bits, m_q.bits);
+            prop_assert!(m_cq.tc_unit == m_q.tc_unit, "TC differs");
+            prop_assert!(m_cq.censored == 0, "τ=0 censored {} slots", m_cq.censored);
+            for (a, b) in cq.thetas().iter().zip(q.thetas()) {
+                prop_assert!(a == b, "private iterates diverged");
+            }
+            for (a, b) in cq.hats().iter().zip(q.hats()) {
+                prop_assert!(a == b, "public views diverged");
+            }
             Ok(())
         },
     );

@@ -1,0 +1,510 @@
+//! Refactor-equivalence pin for the `GroupAdmmCore` unification.
+//!
+//! The `legacy` module below is a *frozen, verbatim copy* of the
+//! pre-refactor engines' iteration logic (`optim/gadmm.rs`,
+//! `optim/qgadmm.rs`, `optim/dgadmm.rs` at commit d17f99f, trimmed to the
+//! code paths their default configurations execute). Every test runs a
+//! legacy engine and its post-refactor counterpart on the same problem and
+//! asserts `Trace::same_path` — bitwise-identical measurements at every
+//! recorded iteration, identical convergence points, identical TC/bits
+//! accounting. This is the contract that lets `Gadmm`, `Qgadmm`, and
+//! `Dgadmm` become thin configurations of the policy-parameterized core
+//! without any behavioural drift.
+
+use gadmm::comm::{Compressor, Meter, StochasticQuantizer};
+use gadmm::config::DatasetKind;
+use gadmm::data::synthetic;
+use gadmm::linalg::vector as vec_ops;
+use gadmm::model::Problem;
+use gadmm::optim::{run, Dgadmm, Engine, Gadmm, Qgadmm, RechainMode, RunOptions};
+use gadmm::topology::chain::{self, Chain};
+use gadmm::topology::{EnergyCostModel, LinkCosts, Placement, UnitCosts};
+use gadmm::util::rng::Pcg64;
+
+/// Frozen pre-refactor engines (commit d17f99f). Do not "improve" this
+/// code — its whole value is that it does not change.
+mod legacy {
+    use super::*;
+
+    pub struct LegacyGadmm<'a> {
+        problem: &'a Problem,
+        pub rho: f64,
+        rho_eff: f64,
+        chain: Chain,
+        theta: Vec<Vec<f64>>,
+        lambda: Vec<Vec<f64>>,
+        q: Vec<f64>,
+    }
+
+    impl<'a> LegacyGadmm<'a> {
+        pub fn new(problem: &'a Problem, rho: f64) -> LegacyGadmm<'a> {
+            LegacyGadmm::with_chain(problem, rho, Chain::sequential(problem.num_workers()))
+        }
+
+        pub fn with_chain(problem: &'a Problem, rho: f64, chain: Chain) -> LegacyGadmm<'a> {
+            let n = problem.num_workers();
+            assert_eq!(chain.len(), n);
+            assert!(n >= 2 && n % 2 == 0, "GADMM requires an even N ≥ 2");
+            assert!(rho > 0.0);
+            let d = problem.dim;
+            LegacyGadmm {
+                problem,
+                rho,
+                rho_eff: rho * problem.data_weight,
+                chain,
+                theta: vec![vec![0.0; d]; n],
+                lambda: vec![vec![0.0; d]; n],
+                q: vec![0.0; d],
+            }
+        }
+
+        pub fn chain(&self) -> &Chain {
+            &self.chain
+        }
+
+        pub fn set_chain(&mut self, chain: Chain) {
+            assert_eq!(chain.len(), self.chain.len());
+            self.chain = chain;
+        }
+
+        pub fn reinit_duals_for_chain(&mut self) {
+            let feas = self.feasible_duals();
+            for (w, f) in feas.into_iter().enumerate() {
+                self.lambda[w] = f;
+            }
+        }
+
+        pub fn feasible_duals(&self) -> Vec<Vec<f64>> {
+            let n = self.chain.len();
+            let d = self.problem.dim;
+            let mut out = vec![vec![0.0; d]; n];
+            let mut running = vec![0.0; d];
+            let mut g = vec![0.0; d];
+            for p in 0..n - 1 {
+                let w = self.chain.order[p];
+                self.problem.losses[w].grad_into(&self.theta[w], &mut g);
+                for j in 0..d {
+                    running[j] -= g[j];
+                }
+                out[w].copy_from_slice(&running);
+            }
+            out
+        }
+
+        fn update_position(&mut self, p: usize) {
+            let n = self.chain.len();
+            let w = self.chain.order[p];
+            let d = self.problem.dim;
+            self.q.iter_mut().for_each(|x| *x = 0.0);
+            let mut couplings = 0.0;
+            if p > 0 {
+                let left = self.chain.order[p - 1];
+                for j in 0..d {
+                    self.q[j] += -self.lambda[left][j] - self.rho_eff * self.theta[left][j];
+                }
+                couplings += 1.0;
+            }
+            if p + 1 < n {
+                let right = self.chain.order[p + 1];
+                for j in 0..d {
+                    self.q[j] += self.lambda[w][j] - self.rho_eff * self.theta[right][j];
+                }
+                couplings += 1.0;
+            }
+            let c = self.rho_eff * couplings;
+            self.theta[w] = self.problem.losses[w].prox_argmin(&self.q, c, &self.theta[w]);
+        }
+
+        fn meter_phase(&self, meter: &mut Meter, head_phase: bool) {
+            meter.begin_round();
+            let n = self.chain.len();
+            let start = if head_phase { 0 } else { 1 };
+            for p in (start..n).step_by(2) {
+                let w = self.chain.order[p];
+                let (l, r) = self.chain.neighbors(p);
+                let neigh: Vec<usize> = [l, r].into_iter().flatten().collect();
+                meter.neighbor_broadcast(w, &neigh);
+            }
+        }
+    }
+
+    impl Engine for LegacyGadmm<'_> {
+        fn name(&self) -> String {
+            format!("GADMM(rho={})", self.rho)
+        }
+
+        fn step(&mut self, _k: usize, meter: &mut Meter) {
+            let n = self.chain.len();
+            for p in (0..n).step_by(2) {
+                self.update_position(p);
+            }
+            self.meter_phase(meter, true);
+            for p in (1..n).step_by(2) {
+                self.update_position(p);
+            }
+            self.meter_phase(meter, false);
+            for p in 0..n - 1 {
+                let (a, b) = (self.chain.order[p], self.chain.order[p + 1]);
+                for j in 0..self.problem.dim {
+                    self.lambda[a][j] += self.rho_eff * (self.theta[a][j] - self.theta[b][j]);
+                }
+            }
+        }
+
+        fn objective(&self) -> f64 {
+            self.problem.objective_per_worker(&self.theta)
+        }
+
+        fn acv(&self) -> f64 {
+            let n = self.chain.len();
+            let mut total = 0.0;
+            for p in 0..n - 1 {
+                let (a, b) = (self.chain.order[p], self.chain.order[p + 1]);
+                total += vec_ops::norm1(&vec_ops::sub(&self.theta[a], &self.theta[b]));
+            }
+            total / n as f64
+        }
+    }
+
+    pub struct LegacyQgadmm<'a> {
+        problem: &'a Problem,
+        pub rho: f64,
+        rho_eff: f64,
+        chain: Chain,
+        theta: Vec<Vec<f64>>,
+        hat: Vec<Vec<f64>>,
+        lambda: Vec<Vec<f64>>,
+        quantizers: Vec<StochasticQuantizer>,
+        bits: u32,
+        q: Vec<f64>,
+    }
+
+    impl<'a> LegacyQgadmm<'a> {
+        pub fn new(problem: &'a Problem, rho: f64, bits: u32, seed: u64) -> LegacyQgadmm<'a> {
+            let n = problem.num_workers();
+            let chain = Chain::sequential(n);
+            assert!(n >= 2 && n % 2 == 0, "GADMM requires an even N ≥ 2");
+            assert!(rho > 0.0);
+            let d = problem.dim;
+            let quantizers = (0..n)
+                .map(|w| StochasticQuantizer::for_worker(d, bits, seed, w))
+                .collect();
+            LegacyQgadmm {
+                problem,
+                rho,
+                rho_eff: rho * problem.data_weight,
+                chain,
+                theta: vec![vec![0.0; d]; n],
+                hat: vec![vec![0.0; d]; n],
+                lambda: vec![vec![0.0; d]; n],
+                quantizers,
+                bits,
+                q: vec![0.0; d],
+            }
+        }
+
+        pub fn message_bits(&self) -> f64 {
+            self.quantizers[0].message_bits()
+        }
+
+        fn update_position(&mut self, p: usize) {
+            let n = self.chain.len();
+            let w = self.chain.order[p];
+            let d = self.problem.dim;
+            self.q.iter_mut().for_each(|x| *x = 0.0);
+            let mut couplings = 0.0;
+            if p > 0 {
+                let left = self.chain.order[p - 1];
+                for j in 0..d {
+                    self.q[j] += -self.lambda[left][j] - self.rho_eff * self.hat[left][j];
+                }
+                couplings += 1.0;
+            }
+            if p + 1 < n {
+                let right = self.chain.order[p + 1];
+                for j in 0..d {
+                    self.q[j] += self.lambda[w][j] - self.rho_eff * self.hat[right][j];
+                }
+                couplings += 1.0;
+            }
+            let c = self.rho_eff * couplings;
+            self.theta[w] = self.problem.losses[w].prox_argmin(&self.q, c, &self.theta[w]);
+            let _msg = self.quantizers[w].encode(&self.theta[w]);
+            self.hat[w].copy_from_slice(self.quantizers[w].public_view());
+        }
+
+        fn meter_phase(&self, meter: &mut Meter, head_phase: bool) {
+            meter.begin_round();
+            let n = self.chain.len();
+            let bits = self.message_bits();
+            let start = usize::from(!head_phase);
+            for p in (start..n).step_by(2) {
+                let w = self.chain.order[p];
+                let (l, r) = self.chain.neighbors(p);
+                let neigh: Vec<usize> = [l, r].into_iter().flatten().collect();
+                meter.neighbor_broadcast_bits(w, &neigh, bits);
+            }
+        }
+    }
+
+    impl Engine for LegacyQgadmm<'_> {
+        fn name(&self) -> String {
+            format!("Q-GADMM(rho={},b={})", self.rho, self.bits)
+        }
+
+        fn step(&mut self, _k: usize, meter: &mut Meter) {
+            let n = self.chain.len();
+            for p in (0..n).step_by(2) {
+                self.update_position(p);
+            }
+            self.meter_phase(meter, true);
+            for p in (1..n).step_by(2) {
+                self.update_position(p);
+            }
+            self.meter_phase(meter, false);
+            for p in 0..n - 1 {
+                let (a, b) = (self.chain.order[p], self.chain.order[p + 1]);
+                for j in 0..self.problem.dim {
+                    self.lambda[a][j] += self.rho_eff * (self.hat[a][j] - self.hat[b][j]);
+                }
+            }
+        }
+
+        fn objective(&self) -> f64 {
+            self.problem.objective_per_worker(&self.theta)
+        }
+
+        fn acv(&self) -> f64 {
+            let n = self.chain.len();
+            let mut total = 0.0;
+            for p in 0..n - 1 {
+                let (a, b) = (self.chain.order[p], self.chain.order[p + 1]);
+                total += vec_ops::norm1(&vec_ops::sub(&self.theta[a], &self.theta[b]));
+            }
+            total / n as f64
+        }
+    }
+
+    const STALL_WINDOW: usize = 150;
+
+    /// Legacy D-GADMM, default `DualHandling::Reuse` paths only (the
+    /// configuration the spec registry builds).
+    pub struct LegacyDgadmm<'a> {
+        inner: LegacyGadmm<'a>,
+        pub tau: usize,
+        pub mode: RechainMode,
+        costs: &'a dyn LinkCosts,
+        rng: Pcg64,
+        build_pending: usize,
+        acv_best: f64,
+        last_improve: usize,
+        frozen: bool,
+        work_iters: usize,
+    }
+
+    impl<'a> LegacyDgadmm<'a> {
+        pub fn new(
+            problem: &'a Problem,
+            rho: f64,
+            tau: usize,
+            mode: RechainMode,
+            costs: &'a dyn LinkCosts,
+            seed: u64,
+        ) -> LegacyDgadmm<'a> {
+            assert!(tau >= 1);
+            let mut rng = Pcg64::new(seed, 0xd6ad);
+            let initial = chain::rechain(problem.num_workers(), costs, &mut rng);
+            LegacyDgadmm {
+                inner: LegacyGadmm::with_chain(problem, rho, initial),
+                tau,
+                mode,
+                costs,
+                rng,
+                build_pending: 0,
+                acv_best: f64::INFINITY,
+                last_improve: 0,
+                frozen: false,
+                work_iters: 0,
+            }
+        }
+
+        fn rechain_now(&mut self, meter: &mut Meter) {
+            let n = self.inner.chain().len();
+            let new_chain = chain::rechain(n, self.costs, &mut self.rng);
+            match self.mode {
+                RechainMode::Free => {
+                    self.inner.set_chain(new_chain);
+                }
+                RechainMode::Announced => {
+                    meter.begin_round();
+                    meter.begin_round();
+                    self.inner.set_chain(new_chain);
+                    let order = self.inner.chain().order.clone();
+                    meter.begin_round();
+                    for p in (0..n).step_by(2) {
+                        let (l, r) = self.inner.chain().neighbors(p);
+                        let neigh: Vec<usize> = [l, r].into_iter().flatten().collect();
+                        meter.neighbor_broadcast(order[p], &neigh);
+                    }
+                    meter.begin_round();
+                    for p in (1..n).step_by(2) {
+                        let (l, r) = self.inner.chain().neighbors(p);
+                        let neigh: Vec<usize> = [l, r].into_iter().flatten().collect();
+                        meter.neighbor_broadcast(order[p], &neigh);
+                    }
+                    self.build_pending = 2;
+                }
+            }
+        }
+    }
+
+    impl Engine for LegacyDgadmm<'_> {
+        fn name(&self) -> String {
+            format!(
+                "D-GADMM(rho={},tau={},{})",
+                self.inner.rho,
+                self.tau,
+                match self.mode {
+                    RechainMode::Announced => "announced",
+                    RechainMode::Free => "free",
+                }
+            )
+        }
+
+        fn step(&mut self, k: usize, meter: &mut Meter) {
+            if self.build_pending > 0 {
+                self.build_pending -= 1;
+                return;
+            }
+            if k > 0 && k % self.tau == 0 && !self.frozen {
+                self.rechain_now(meter);
+                if self.build_pending > 0 {
+                    self.build_pending -= 1;
+                    return;
+                }
+            }
+            self.inner.step(self.work_iters, meter);
+            self.work_iters += 1;
+            let acv = self.inner.acv();
+            if acv < 0.9 * self.acv_best {
+                self.acv_best = acv;
+                self.last_improve = self.work_iters;
+            } else if !self.frozen && self.work_iters - self.last_improve > STALL_WINDOW {
+                self.frozen = true;
+                self.inner.reinit_duals_for_chain();
+            }
+        }
+
+        fn objective(&self) -> f64 {
+            self.inner.objective()
+        }
+
+        fn acv(&self) -> f64 {
+            self.inner.acv()
+        }
+    }
+}
+
+#[test]
+fn gadmm_paper_linreg_trace_is_bit_identical_to_legacy() {
+    // The paper's synthetic linreg config (1200×50) at N=6.
+    let ds = DatasetKind::SyntheticLinreg.build(1);
+    let p = Problem::from_dataset(&ds, 6);
+    let opts = RunOptions::with_target(1e-3, 20_000);
+    let costs = UnitCosts;
+    let new = run(&mut Gadmm::new(&p, 5.0), &p, &costs, &opts);
+    let old = run(&mut legacy::LegacyGadmm::new(&p, 5.0), &p, &costs, &opts);
+    assert!(new.same_path(&old), "post-refactor GADMM diverged from the frozen engine");
+    assert!(new.iters_to_target().is_some());
+}
+
+#[test]
+fn gadmm_small_linreg_and_permuted_chain_match_legacy() {
+    let ds = synthetic::linreg(120, 8, &mut Pcg64::seeded(1));
+    let p = Problem::from_dataset(&ds, 6);
+    let opts = RunOptions::with_target(1e-8, 20_000);
+    let costs = UnitCosts;
+    let new = run(&mut Gadmm::new(&p, 5.0), &p, &costs, &opts);
+    let old = run(&mut legacy::LegacyGadmm::new(&p, 5.0), &p, &costs, &opts);
+    assert!(new.same_path(&old));
+
+    let chain = Chain { order: vec![0, 3, 2, 4, 1, 5] };
+    let new = run(&mut Gadmm::with_chain(&p, 2.0, chain.clone()), &p, &costs, &opts);
+    let old = run(&mut legacy::LegacyGadmm::with_chain(&p, 2.0, chain), &p, &costs, &opts);
+    assert!(new.same_path(&old), "permuted-chain GADMM diverged");
+}
+
+#[test]
+fn gadmm_paper_logreg_trace_is_bit_identical_to_legacy() {
+    let ds = synthetic::logreg(120, 6, &mut Pcg64::seeded(2));
+    let p = Problem::from_dataset(&ds, 4);
+    let opts = RunOptions::with_target(1e-4, 6_000);
+    let costs = UnitCosts;
+    let new = run(&mut Gadmm::new(&p, 0.3), &p, &costs, &opts);
+    let old = run(&mut legacy::LegacyGadmm::new(&p, 0.3), &p, &costs, &opts);
+    assert!(new.same_path(&old), "logreg GADMM diverged from the frozen engine");
+    assert!(new.iters_to_target().is_some());
+}
+
+#[test]
+fn qgadmm_paper_linreg_trace_is_bit_identical_to_legacy() {
+    let ds = DatasetKind::SyntheticLinreg.build(1);
+    let p = Problem::from_dataset(&ds, 6);
+    let opts = RunOptions::with_target(1e-3, 20_000);
+    let costs = UnitCosts;
+    let new = run(&mut Qgadmm::new(&p, 5.0, 8, 1), &p, &costs, &opts);
+    let old = run(&mut legacy::LegacyQgadmm::new(&p, 5.0, 8, 1), &p, &costs, &opts);
+    assert!(new.same_path(&old), "post-refactor Q-GADMM diverged from the frozen engine");
+    assert!(new.iters_to_target().is_some());
+}
+
+#[test]
+fn qgadmm_logreg_trace_is_bit_identical_to_legacy() {
+    let ds = synthetic::logreg(120, 6, &mut Pcg64::seeded(2));
+    let p = Problem::from_dataset(&ds, 4);
+    let opts = RunOptions::with_target(1e-4, 8_000);
+    let costs = UnitCosts;
+    let new = run(&mut Qgadmm::new(&p, 0.3, 8, 7), &p, &costs, &opts);
+    let old = run(&mut legacy::LegacyQgadmm::new(&p, 0.3, 8, 7), &p, &costs, &opts);
+    assert!(new.same_path(&old), "logreg Q-GADMM diverged from the frozen engine");
+}
+
+#[test]
+fn dgadmm_free_rechain_trace_is_bit_identical_to_legacy() {
+    let ds = synthetic::linreg(120, 8, &mut Pcg64::seeded(1));
+    let p = Problem::from_dataset(&ds, 6);
+    let opts = RunOptions::with_target(1e-4, 5_000);
+    let costs = UnitCosts;
+    let new = run(&mut Dgadmm::new(&p, 3.0, 1, RechainMode::Free, &costs, 42), &p, &costs, &opts);
+    let old = run(
+        &mut legacy::LegacyDgadmm::new(&p, 3.0, 1, RechainMode::Free, &costs, 42),
+        &p,
+        &costs,
+        &opts,
+    );
+    assert!(new.same_path(&old), "free-mode D-GADMM diverged from the frozen engine");
+    assert!(new.iters_to_target().is_some());
+}
+
+#[test]
+fn dgadmm_announced_rechain_trace_is_bit_identical_to_legacy() {
+    let ds = synthetic::linreg(120, 8, &mut Pcg64::seeded(2));
+    let p = Problem::from_dataset(&ds, 6);
+    let mut rng = Pcg64::seeded(7);
+    let placement = Placement::random(6, 250.0, &mut rng);
+    let energy = EnergyCostModel::new(&placement, placement.central_worker());
+    let opts = RunOptions::with_target(1e-4, 8_000);
+    let new = run(
+        &mut Dgadmm::new(&p, 3.0, 15, RechainMode::Announced, &energy, 42),
+        &p,
+        &energy,
+        &opts,
+    );
+    let old = run(
+        &mut legacy::LegacyDgadmm::new(&p, 3.0, 15, RechainMode::Announced, &energy, 42),
+        &p,
+        &energy,
+        &opts,
+    );
+    assert!(new.same_path(&old), "announced-mode D-GADMM diverged from the frozen engine");
+}
