@@ -33,12 +33,19 @@ if [ "$run_clippy" = 1 ]; then
   fi
 fi
 
+echo "==> cargo doc --no-deps (rustdoc warnings are errors)"
+RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
+
 echo "==> tier-1: cargo build --release && cargo test -q"
 cargo build --release
 cargo test -q
 
 echo "==> smoke: gadmm sweep --quick (parallel grid runner + CLI, incl. cgadmm/cqgadmm cells)"
 ./target/release/gadmm sweep --quick --out target/ci-sweep
+
+echo "==> smoke: gadmm graph --quick (GGADMM bipartite-graph topology sweep)"
+./target/release/gadmm graph --quick --out target/ci-graph
+test -f target/ci-graph/graph.json
 
 echo "==> smoke: gadmm bench --quick (comm perf harness -> BENCH_comm.json)"
 ./target/release/gadmm bench --quick --out target/ci-bench

@@ -1,10 +1,11 @@
 //! Communication accounting and the compression seam.
 //!
 //! The paper's TC metric charges one unit (or one link-energy) per
-//! *transmission slot*: a worker that broadcasts its model to its (≤2)
-//! chain neighbours occupies one slot and pays the cost of its most
-//! expensive receiving link (it transmits once at the power needed to reach
-//! the farther neighbour); a centralized uplink is a unicast slot; the
+//! *transmission slot*: a worker that broadcasts its model to its
+//! neighbour set (≤2 workers on a chain, arbitrarily many on a GGADMM
+//! graph) occupies one slot and pays the cost of its most expensive
+//! receiving link (it transmits once at the power needed to reach the
+//! farthest neighbour); a centralized uplink is a unicast slot; the
 //! server downlink is a single broadcast slot bottlenecked by the weakest
 //! channel. This reproduces Table 1's arithmetic exactly: GADMM pays `N`
 //! per iteration, GD/ADMM pay `N + 1`, LAG pays `1 + #uploads`.
@@ -31,34 +32,35 @@ pub use quantize::{
     RANGE_OVERHEAD_BITS,
 };
 
-use crate::topology::chain::Chain;
+use crate::topology::graph::BipartiteGraph;
 use crate::topology::LinkCosts;
 
-/// Charge one head/tail phase of a chain schedule: every worker in the
-/// group whose slot was transmitted (`sent[w] = Some(bits)`) occupies one
-/// broadcast slot billed at its exact payload; censored workers
+/// Charge one head/tail phase of a bipartite-graph schedule: every worker
+/// in the group whose slot was transmitted (`sent[w] = Some(bits)`)
+/// occupies one broadcast slot billed at its exact payload, with energy
+/// cost the worst link of its neighbour set; censored workers
 /// (`sent[w] = None`) tick [`Meter::censored`] and cost nothing. This is
 /// the *single* structural-billing implementation shared by the sequential
 /// [`crate::optim::GroupAdmmCore`] and the distributed coordinator's
 /// leader, so the two paths cannot drift apart — part of the
-/// distributed-equivalence invariant (docs/adr/003-link-policy.md).
-pub fn charge_chain_phase(
+/// distributed-equivalence invariant (docs/adr/003-link-policy.md; the
+/// chain schedule is the degree-≤2 special case, see
+/// docs/adr/004-bipartite-graph-topology.md).
+pub fn charge_graph_phase(
     meter: &mut Meter<'_>,
-    chain: &Chain,
+    graph: &BipartiteGraph,
     head_phase: bool,
     sent: &[Option<f64>],
 ) {
     meter.begin_round();
-    let n = chain.len();
-    let start = usize::from(!head_phase);
-    for p in (start..n).step_by(2) {
-        let w = chain.order[p];
+    let group = if head_phase { graph.heads() } else { graph.tails() };
+    for &w in group {
         match sent[w] {
-            Some(bits) => {
-                let (l, r) = chain.neighbors(p);
-                let neigh: Vec<usize> = [l, r].into_iter().flatten().collect();
-                meter.neighbor_broadcast_bits(w, &neigh, bits);
-            }
+            Some(bits) => meter.neighbor_broadcast_bits_iter(
+                w,
+                graph.adjacency(w).iter().map(|er| er.neighbor),
+                bits,
+            ),
             None => meter.censored_slot(),
         }
     }
@@ -142,16 +144,32 @@ impl<'a> Meter<'a> {
 
     /// [`Meter::neighbor_broadcast`] with an explicit payload size.
     pub fn neighbor_broadcast_bits(&mut self, from: usize, neighbors: &[usize], bits: f64) {
-        if neighbors.is_empty() {
+        self.neighbor_broadcast_bits_iter(from, neighbors.iter().copied(), bits);
+    }
+
+    /// [`Meter::neighbor_broadcast_bits`] over any neighbour iterator —
+    /// the graph billing path ([`charge_graph_phase`]) streams adjacency
+    /// lists through this instead of materializing a `Vec` per slot. An
+    /// empty neighbour set is free.
+    pub fn neighbor_broadcast_bits_iter(
+        &mut self,
+        from: usize,
+        neighbors: impl Iterator<Item = usize>,
+        bits: f64,
+    ) {
+        let mut any = false;
+        let mut worst = 0.0f64;
+        for to in neighbors {
+            any = true;
+            worst = worst.max(self.costs.link(from, to));
+        }
+        if !any {
             return;
         }
         self.transmissions += 1;
         self.tc_unit += 1.0;
         self.bits += bits;
-        self.tc_energy += neighbors
-            .iter()
-            .map(|&to| self.costs.link(from, to))
-            .fold(0.0, f64::max);
+        self.tc_energy += worst;
     }
 
     /// Worker `from` unicasts to worker `to` (one slot).

@@ -157,10 +157,19 @@ impl RunConfig {
     }
 
     pub fn validate(&self) -> Result<(), String> {
+        self.validate_for(true)
+    }
+
+    /// [`RunConfig::validate`] with the even-worker requirement made
+    /// spec-dependent: the chain engines need Algorithm 1's head/tail split
+    /// (`needs_even_workers = true`, also the plain `validate` behaviour),
+    /// while GGADMM on a non-chain bipartite graph accepts any N ≥ 2
+    /// (`AlgoSpec::needs_even_workers` tells the caller which one it has).
+    pub fn validate_for(&self, needs_even_workers: bool) -> Result<(), String> {
         if self.workers < 2 {
             return Err("workers must be ≥ 2".into());
         }
-        if self.workers % 2 != 0 {
+        if needs_even_workers && self.workers % 2 != 0 {
             return Err("GADMM requires an even number of workers".into());
         }
         if self.rho <= 0.0 {

@@ -1,18 +1,20 @@
-//! Distributed GADMM execution: the L3 runtime that actually runs the
+//! Distributed group-ADMM execution: the L3 runtime that actually runs the
 //! algorithm as a *system* — one OS thread per worker, message passing over
 //! channels, worker-local state only — rather than a sequential simulator
 //! loop.
 //!
 //! Topology of responsibilities:
 //!
-//! * **Workers** own their shard solver, primal θ_w, dual λ_w, and cached
-//!   neighbour models. Within an iteration they synchronize *only* through
-//!   neighbour model messages (head phase → tail phase), exactly Algorithm 1.
-//!   The messages themselves go through the pluggable [`crate::comm`]
-//!   link-policy seam — dense f64 payloads for GADMM, stochastically
-//!   quantized differences for Q-GADMM ([`QuantSpec`]), censor gates in
-//!   front of either for C-GADMM / CQ-GADMM (censored slots travel as
-//!   [`crate::comm::Msg::Skip`] markers and cost nothing).
+//! * **Workers** own their shard solver, primal θ_w, one mirrored dual per
+//!   incident edge, and cached neighbour models. Within an iteration they
+//!   synchronize *only* through neighbour model messages (head phase →
+//!   tail phase) — exactly Algorithm 1 on a chain, GGADMM on any other
+//!   bipartite graph. The messages themselves go through the pluggable
+//!   [`crate::comm`] link-policy seam — dense f64 payloads for
+//!   GADMM/GGADMM, stochastically quantized differences for Q-GADMM
+//!   ([`QuantSpec`]), censor gates in front of either for C-GADMM /
+//!   CQ-GADMM (censored slots travel as [`crate::comm::Msg::Skip`] markers
+//!   and cost nothing).
 //! * **The leader** owns no model state. It releases iterations (barrier),
 //!   collects per-worker loss reports for the convergence monitor, charges
 //!   the communication meter (transmitted slots at their exact payload,
@@ -25,20 +27,22 @@
 
 pub mod worker;
 
-use crate::comm::{LinkPolicy, Meter};
+use crate::comm::{dense_links, LinkPolicy, Meter};
 use crate::metrics::{IterRecord, Trace};
 use crate::model::Problem;
 use crate::optim::RunOptions;
 use crate::runtime::LocalSolver;
 use crate::session::AlgoSpec;
 use crate::topology::chain::Chain;
+use crate::topology::graph::BipartiteGraph;
 use crate::topology::LinkCosts;
 use std::sync::mpsc;
 use std::time::Instant;
-use worker::{LeaderMsg, Report, WorkerCtx, WorkerMsg};
+use worker::{LeaderMsg, NeighborLink, Report, WorkerCtx, WorkerMsg};
 
 /// Outcome of a distributed training run.
 pub struct TrainResult {
+    /// Per-iteration trace (same record schema as the sequential driver).
     pub trace: Trace,
     /// Final per-worker models (indexed by physical worker).
     pub thetas: Vec<Vec<f64>>,
@@ -79,10 +83,9 @@ pub fn train<'p>(
 /// group-ADMM spec (GADMM, Q-GADMM, C-GADMM, CQ-GADMM) maps to per-worker
 /// link policies through [`AlgoSpec::chain_wire`] — the same factory the
 /// sequential engines use, which is what keeps the two execution paths
-/// bit-identical for the same `seed`. The coordinator executes chain
-/// GADMM variants only — centralized baselines have no head/tail dataflow
-/// to distribute and D-GADMM re-chains — so other specs are rejected
-/// rather than silently approximated.
+/// bit-identical for the same `seed`. Graph-topology GGADMM runs through
+/// [`train_graph_spec`]; other specs (re-chaining D-GADMM, centralized
+/// baselines) are rejected rather than silently approximated.
 pub fn train_spec<'p>(
     problem: &'p Problem,
     solvers: Vec<Box<dyn LocalSolver + Send + 'p>>,
@@ -92,16 +95,71 @@ pub fn train_spec<'p>(
     costs: &dyn LinkCosts,
     opts: &RunOptions,
 ) -> Result<TrainResult, String> {
+    assert!(
+        chain.len() >= 2 && chain.len() % 2 == 0,
+        "GADMM requires an even N ≥ 2"
+    );
     match spec.chain_wire(problem.dim, problem.num_workers(), seed) {
         Some(wire) => Ok(train_links(
-            problem, solvers, wire.rho, chain, costs, opts, wire.links, wire.name,
+            problem,
+            solvers,
+            wire.rho,
+            BipartiteGraph::from_chain(&chain),
+            costs,
+            opts,
+            wire.links,
+            wire.name,
         )),
         None => Err(format!(
-            "the distributed coordinator implements static-chain GADMM/Q-GADMM/C-GADMM/CQ-GADMM \
-             only (no re-chaining, no centralized baselines), got '{}'",
+            "the distributed coordinator implements static-topology GADMM/Q-GADMM/C-GADMM/\
+             CQ-GADMM (on a chain) and GGADMM (via train_graph_spec) only — no re-chaining, \
+             no centralized baselines — got '{}'",
             spec.spec_string()
         )),
     }
+}
+
+/// Run a group-ADMM spec distributed over an explicit bipartite `graph`:
+/// GGADMM with dense links, or any static-chain wire (GADMM/Q/C/CQ link
+/// policies are per-worker *broadcast* policies, so they generalize to any
+/// neighbour set unchanged — quantized or censored GGADMM falls out of the
+/// same factory). The spec's own `graph` knob, if any, is not re-built
+/// here: the caller provides the topology (and with it the physical
+/// placement choice).
+pub fn train_graph_spec<'p>(
+    problem: &'p Problem,
+    solvers: Vec<Box<dyn LocalSolver + Send + 'p>>,
+    spec: &AlgoSpec,
+    seed: u64,
+    graph: BipartiteGraph,
+    costs: &dyn LinkCosts,
+    opts: &RunOptions,
+) -> Result<TrainResult, String> {
+    let n = problem.num_workers();
+    if graph.len() != n {
+        return Err(format!(
+            "graph has {} workers but the problem shards {n}",
+            graph.len()
+        ));
+    }
+    let (rho, links, name) = match *spec {
+        AlgoSpec::Ggadmm { rho, graph: kind } => (
+            rho,
+            dense_links(problem.dim, n),
+            format!("GGADMM-dist(rho={rho},graph={kind})"),
+        ),
+        _ => match spec.chain_wire(problem.dim, n, seed) {
+            Some(wire) => (wire.rho, wire.links, wire.name),
+            None => {
+                return Err(format!(
+                    "'{}' has no static per-worker wire configuration — the graph coordinator \
+                     runs GGADMM and the static chain-wire specs only",
+                    spec.spec_string()
+                ))
+            }
+        },
+    };
+    Ok(train_links(problem, solvers, rho, graph, costs, opts, links, name))
 }
 
 /// [`train`] with an optional quantized communication path: when `quant`
@@ -123,20 +181,19 @@ pub fn train_with<'p>(
         Some(q) => (AlgoSpec::Qgadmm { rho, bits: q.bits }, q.seed),
         None => (AlgoSpec::Gadmm { rho }, 0),
     };
-    let wire = spec
-        .chain_wire(problem.dim, problem.num_workers(), seed)
-        .expect("GADMM/Q-GADMM are static-chain specs");
-    train_links(problem, solvers, wire.rho, chain, costs, opts, wire.links, wire.name)
+    train_spec(problem, solvers, &spec, seed, chain, costs, opts)
+        .expect("GADMM/Q-GADMM are static-chain specs")
 }
 
-/// The policy-generic distributed trainer: one worker thread per shard,
-/// one [`LinkPolicy`] per worker on the wire.
+/// The policy- and topology-generic distributed trainer: one worker thread
+/// per shard, one [`LinkPolicy`] per worker on the wire, one mirrored dual
+/// per graph edge.
 #[allow(clippy::too_many_arguments)]
 fn train_links<'p>(
     problem: &'p Problem,
     solvers: Vec<Box<dyn LocalSolver + Send + 'p>>,
     rho: f64,
-    chain: Chain,
+    graph: BipartiteGraph,
     costs: &dyn LinkCosts,
     opts: &RunOptions,
     links: Vec<Box<dyn LinkPolicy>>,
@@ -144,9 +201,8 @@ fn train_links<'p>(
 ) -> TrainResult {
     let n = problem.num_workers();
     assert_eq!(solvers.len(), n);
-    assert_eq!(chain.len(), n);
+    assert_eq!(graph.len(), n);
     assert_eq!(links.len(), n, "need one link policy per worker");
-    assert!(n >= 2 && n % 2 == 0, "GADMM requires an even N ≥ 2");
     let d = problem.dim;
     // ρ arrives in the paper's unnormalized-objective units.
     let rho_eff = rho * problem.data_weight;
@@ -169,37 +225,38 @@ fn train_links<'p>(
 
     std::thread::scope(|scope| {
         // Spawn workers.
-        let mut model_txs_shared: Vec<mpsc::Sender<WorkerMsg>> = model_txs.clone();
-        let _ = &mut model_txs_shared;
         for (w, ((solver, policy), (cmd_rx, model_rx))) in solvers
             .into_iter()
             .zip(links)
             .zip(cmd_rxs.into_iter().zip(model_rxs.into_iter()))
             .enumerate()
         {
-            let pos = chain.positions()[w];
-            let (left, right) = chain.neighbors(pos);
+            let neighbors = graph
+                .adjacency(w)
+                .iter()
+                .map(|er| NeighborLink {
+                    id: er.neighbor,
+                    origin: er.origin,
+                    tx: model_txs[er.neighbor].clone(),
+                })
+                .collect();
             let ctx = WorkerCtx {
                 id: w,
-                is_head: Chain::is_head_position(pos),
-                left,
-                right,
+                is_head: graph.is_head(w),
+                neighbors,
                 rho: rho_eff,
                 dim: d,
                 solver,
                 loss: &*problem.losses[w],
                 policy,
                 inbox: model_rx,
-                neighbors_tx: [
-                    left.map(|l| model_txs[l].clone()),
-                    right.map(|r| model_txs[r].clone()),
-                ],
                 commands: cmd_rx,
                 report: report_tx.clone(),
             };
             scope.spawn(move || worker::run_worker(ctx));
         }
         drop(report_tx);
+        drop(model_txs);
 
         // Leader loop. The default payload matches the actual wire size so
         // any default-variant charge stays consistent with `slot_bits`.
@@ -224,8 +281,8 @@ fn train_links<'p>(
             // same shared billing the sequential core uses. Transmitted
             // slots are billed with the payload the worker actually sent;
             // censored slots tick the censored counter and cost nothing.
-            crate::comm::charge_chain_phase(&mut meter, &chain, true, &sent_by_worker);
-            crate::comm::charge_chain_phase(&mut meter, &chain, false, &sent_by_worker);
+            crate::comm::charge_graph_phase(&mut meter, &graph, true, &sent_by_worker);
+            crate::comm::charge_graph_phase(&mut meter, &graph, false, &sent_by_worker);
             let obj_err = (obj - problem.f_star).abs();
             // Same stride-thinning contract as optim::run: the final
             // iteration is always flushed so convergence metrics stay exact.
@@ -239,7 +296,7 @@ fn train_links<'p>(
                     bits: meter.bits,
                     rounds: meter.rounds,
                     elapsed: t0.elapsed(),
-                    acv: acv_along_chain(&chain, &thetas),
+                    acv: graph.acv(&thetas),
                 });
             }
             if done {
@@ -266,22 +323,13 @@ fn train_links<'p>(
     }
 }
 
-fn acv_along_chain(chain: &Chain, thetas: &[Vec<f64>]) -> f64 {
-    let n = chain.len();
-    let mut total = 0.0;
-    for p in 0..n - 1 {
-        let (a, b) = (chain.order[p], chain.order[p + 1]);
-        total += crate::linalg::vector::norm1(&crate::linalg::vector::sub(&thetas[a], &thetas[b]));
-    }
-    total / n as f64
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::data::synthetic;
-    use crate::optim::{run, Gadmm};
+    use crate::optim::{run, Gadmm, Ggadmm};
     use crate::runtime::NativeSolver;
+    use crate::topology::graph::GraphKind;
     use crate::topology::UnitCosts;
     use crate::util::rng::Pcg64;
 
@@ -379,5 +427,52 @@ mod tests {
         };
         let result = train(&p, native_solvers(&p), 2.0, chain, &costs, &opts);
         assert!(result.trace.iters_to_target().is_some());
+    }
+
+    #[test]
+    fn distributed_ggadmm_matches_sequential_on_a_star() {
+        // The graph coordinator vs the sequential graph core, on a topology
+        // a chain cannot express (odd N, hub of degree 4).
+        let ds = synthetic::linreg(100, 6, &mut Pcg64::seeded(5));
+        let p = Problem::from_dataset(&ds, 5);
+        let opts = RunOptions::with_target(1e-5, 4000);
+        let costs = UnitCosts;
+        let spec = AlgoSpec::Ggadmm { rho: 3.0, graph: GraphKind::Star };
+        let graph = GraphKind::Star.build(5, &crate::topology::Placement::random(
+            5, 10.0, &mut Pcg64::seeded(9),
+        )).unwrap();
+        let result =
+            train_graph_spec(&p, native_solvers(&p), &spec, 1, graph, &costs, &opts).unwrap();
+        let mut seq = Ggadmm::new(&p, 3.0, GraphKind::Star, 1);
+        let seq_trace = run(&mut seq, &p, &costs, &opts);
+        assert_eq!(result.trace.iters_to_target(), seq_trace.iters_to_target());
+        for (a, b) in result.trace.records.iter().zip(&seq_trace.records) {
+            assert!(
+                (a.obj_err - b.obj_err).abs() <= 1e-9 * (1.0 + b.obj_err),
+                "iter {}: {} vs {}",
+                a.iter,
+                a.obj_err,
+                b.obj_err
+            );
+            assert_eq!(a.tc_unit, b.tc_unit);
+            assert_eq!(a.bits, b.bits);
+        }
+        for (a, b) in result.thetas.iter().zip(seq.thetas()) {
+            assert!(crate::linalg::vector::dist2(a, b) < 1e-9);
+        }
+        assert!(result.trace.algorithm.starts_with("GGADMM-dist"));
+    }
+
+    #[test]
+    fn graph_spec_rejects_mismatched_graph() {
+        let ds = synthetic::linreg(60, 4, &mut Pcg64::seeded(6));
+        let p = Problem::from_dataset(&ds, 4);
+        let opts = RunOptions::with_target(1e-4, 100);
+        let costs = UnitCosts;
+        let graph = BipartiteGraph::star(6).unwrap();
+        let spec = AlgoSpec::Ggadmm { rho: 1.0, graph: GraphKind::Star };
+        let err = train_graph_spec(&p, native_solvers(&p), &spec, 1, graph, &costs, &opts)
+            .unwrap_err();
+        assert!(err.contains("graph has 6 workers"), "{err}");
     }
 }

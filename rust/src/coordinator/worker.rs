@@ -1,8 +1,16 @@
-//! Worker actor: owns its shard state and exchanges models with its chain
-//! neighbours over channels. The body of `run_worker` is Algorithm 1 from
-//! the worker's point of view — with the model exchange going through the
-//! pluggable [`LinkPolicy`] seam, so the same actor runs dense GADMM,
-//! quantized Q-GADMM, and censored C-GADMM / CQ-GADMM traffic.
+//! Worker actor: owns its shard state and exchanges models with its
+//! neighbour set over channels. The body of `run_worker` is the group-ADMM
+//! iteration from the worker's point of view — Algorithm 1 when the graph
+//! is a chain, GGADMM on any other bipartite topology — with the model
+//! exchange going through the pluggable [`LinkPolicy`] seam, so the same
+//! actor runs dense GADMM/GGADMM, quantized Q-GADMM, and censored
+//! C-GADMM / CQ-GADMM traffic.
+//!
+//! Per incident edge the worker holds a mirrored copy of the edge's dual
+//! λ_e and a receiver-side [`Decoder`] tracking that neighbour's public
+//! model. Both endpoints of an edge update λ_e from the same two public
+//! models, so the mirrored copies stay bit-identical fleet-wide without
+//! ever sending a dual.
 //!
 //! A censored slot still sends a [`Msg::Skip`] through the channel — it
 //! models the receiver's *timeout* (the receiver learns nothing and keeps
@@ -16,24 +24,30 @@ use std::sync::mpsc::{Receiver, Sender};
 
 /// Leader → worker control messages.
 pub enum LeaderMsg {
-    /// Run one full GADMM iteration (head phase, tail phase, dual update)
-    /// and report.
+    /// Run one full group-ADMM iteration (head phase, tail phase, dual
+    /// update) and report.
     Iterate,
+    /// Terminate the worker loop.
     Shutdown,
 }
 
 /// Worker → worker neighbour messages: one wire payload (dense, quantized,
 /// or a censored-slot marker; see [`crate::comm::quantize`]).
 pub struct WorkerMsg {
+    /// Physical id of the sending worker.
     pub from: usize,
+    /// The wire payload.
     pub payload: Msg,
 }
 
 /// Worker → leader monitoring report (instrumentation, not algorithm
 /// state — the leader never feeds models back).
 pub struct Report {
+    /// Physical id of the reporting worker.
     pub id: usize,
+    /// Local loss at the new iterate (convergence monitor input).
     pub loss_value: f64,
+    /// The new private iterate (final-model export).
     pub theta: Vec<f64>,
     /// Exact payload bits of this iteration's broadcast, or `None` when
     /// the link policy censored the slot (the leader bills transmitted
@@ -42,14 +56,33 @@ pub struct Report {
     pub sent: Option<f64>,
 }
 
+/// One edge of the worker's neighbour set, as the worker sees it.
+pub struct NeighborLink {
+    /// Physical id of the neighbour.
+    pub id: usize,
+    /// Whether this worker is the *origin* endpoint of the shared edge —
+    /// fixes the dual's orientation: the origin sees `+λ_e` in its
+    /// subproblem and ascends `λ_e += ρ(θ̂_own − θ̂_nb)`; the destination
+    /// sees `−λ_e` and ascends `λ_e += ρ(θ̂_nb − θ̂_own)` (the same value,
+    /// computed from the same public models).
+    pub origin: bool,
+    /// Channel to the neighbour's inbox.
+    pub tx: Sender<WorkerMsg>,
+}
+
 /// Everything a worker thread owns.
 pub struct WorkerCtx<'a> {
+    /// Physical worker id.
     pub id: usize,
+    /// Whether this worker is in the head group (updates in round 1).
     pub is_head: bool,
-    /// Physical ids of the chain neighbours.
-    pub left: Option<usize>,
-    pub right: Option<usize>,
+    /// Incident edges in the graph's deterministic adjacency order — the
+    /// order the subproblem accumulates coupling terms (left-then-right on
+    /// a chain).
+    pub neighbors: Vec<NeighborLink>,
+    /// Effective ρ (paper units scaled by the problem normalization).
     pub rho: f64,
+    /// Model dimension.
     pub dim: usize,
     /// Subproblem solver (native or PJRT-backed).
     pub solver: Box<dyn LocalSolver + Send + 'a>,
@@ -60,32 +93,30 @@ pub struct WorkerCtx<'a> {
     /// Its public view is the model every neighbour currently holds for
     /// this worker.
     pub policy: Box<dyn LinkPolicy + 'a>,
+    /// Inbox for neighbour model messages.
     pub inbox: Receiver<WorkerMsg>,
-    /// Senders to [left, right] neighbours.
-    pub neighbors_tx: [Option<Sender<WorkerMsg>>; 2],
+    /// Leader command channel.
     pub commands: Receiver<LeaderMsg>,
+    /// Report channel back to the leader.
     pub report: Sender<Report>,
 }
 
 /// Worker main loop.
 pub fn run_worker(mut ctx: WorkerCtx<'_>) {
     let d = ctx.dim;
+    let deg = ctx.neighbors.len();
     let mut theta = vec![0.0; d];
-    // λ owned by this worker (couples it to its right neighbour); the left
-    // neighbour's λ is tracked from its dual update rule, which this worker
-    // can mirror locally because it sees both endpoints' public models.
-    let mut lambda_own = vec![0.0; d];
-    let mut lambda_left = vec![0.0; d];
+    // Mirrored per-edge duals, aligned with ctx.neighbors. Each edge's dual
+    // is tracked by both endpoints from its update rule, which every
+    // endpoint can evaluate locally because it sees both public models.
+    let mut lambda: Vec<Vec<f64>> = vec![vec![0.0; d]; deg];
     // Receiver-side decoder state per neighbour: each mirrors that sender's
     // transmission anchor and *is* the cached public neighbour model.
-    let mut dec_left = Decoder::new(d);
-    let mut dec_right = Decoder::new(d);
+    let mut decoders: Vec<Decoder> = (0..deg).map(|_| Decoder::new(d)).collect();
     let mut q = vec![0.0; d];
     // Iteration counter: drives the censoring threshold τ·μ^k in lockstep
     // with the sequential core's `step(k, …)`.
     let mut k = 0usize;
-
-    let expected_neighbors = ctx.left.is_some() as usize + ctx.right.is_some() as usize;
 
     loop {
         match ctx.commands.recv() {
@@ -97,39 +128,35 @@ pub fn run_worker(mut ctx: WorkerCtx<'_>) {
         if ctx.is_head {
             // Head phase: solve against cached (iteration-k) tail models,
             // then broadcast; finally receive the fresh tail models.
-            theta = solve_local(
-                &ctx, &mut q, &theta, dec_left.view(), dec_right.view(), &lambda_left, &lambda_own,
-            );
+            theta = solve_local(&ctx, &mut q, &theta, &decoders, &lambda);
             sent = send_model(&mut ctx, k, &theta);
-            recv_models(&ctx, expected_neighbors, &mut dec_left, &mut dec_right);
+            recv_models(&ctx, &mut decoders);
         } else {
             // Tail phase: wait for fresh head models first (eq. 13 uses
-            // θ^{k+1} of both head neighbours), then solve and send back.
-            recv_models(&ctx, expected_neighbors, &mut dec_left, &mut dec_right);
-            theta = solve_local(
-                &ctx, &mut q, &theta, dec_left.view(), dec_right.view(), &lambda_left, &lambda_own,
-            );
+            // θ^{k+1} of every head neighbour), then solve and send back.
+            recv_models(&ctx, &mut decoders);
+            theta = solve_local(&ctx, &mut q, &theta, &decoders, &lambda);
             sent = send_model(&mut ctx, k, &theta);
         }
 
-        // Dual updates (eq. 15) on the *public* models, purely local: every
-        // endpoint of a link holds bit-identical public values for both
-        // sides, so the mirrored duals stay consistent fleet-wide even
-        // under quantization and censoring (a censored sender's public view
-        // is simply its last transmitted model, on both endpoints). With
-        // the dense compressor the public view is exactly the model just
-        // sent, so this is plain GADMM.
+        // Dual updates (eq. 15, per edge) on the *public* models, purely
+        // local: every endpoint of a link holds bit-identical public values
+        // for both sides, so the mirrored duals stay consistent fleet-wide
+        // even under quantization and censoring (a censored sender's public
+        // view is simply its last transmitted model, on both endpoints).
+        // With the dense compressor the public view is exactly the model
+        // just sent, so this is plain G(G)ADMM.
         let hat_own = ctx.policy.public_view();
-        if ctx.right.is_some() {
-            let theta_right = dec_right.view();
-            for j in 0..d {
-                lambda_own[j] += ctx.rho * (hat_own[j] - theta_right[j]);
-            }
-        }
-        if ctx.left.is_some() {
-            let theta_left = dec_left.view();
-            for j in 0..d {
-                lambda_left[j] += ctx.rho * (theta_left[j] - hat_own[j]);
+        for (i, nb) in ctx.neighbors.iter().enumerate() {
+            let view = decoders[i].view();
+            if nb.origin {
+                for j in 0..d {
+                    lambda[i][j] += ctx.rho * (hat_own[j] - view[j]);
+                }
+            } else {
+                for j in 0..d {
+                    lambda[i][j] += ctx.rho * (view[j] - hat_own[j]);
+                }
             }
         }
 
@@ -145,28 +172,31 @@ pub fn run_worker(mut ctx: WorkerCtx<'_>) {
     }
 }
 
-#[allow(clippy::too_many_arguments)]
+/// Solve the local subproblem against the cached neighbour views: the
+/// linear term accumulates `±λ_e − ρ·θ̂_nb` per incident edge in adjacency
+/// order, the quadratic coefficient is `ρ·deg` — exactly the sequential
+/// core's arithmetic.
 fn solve_local(
     ctx: &WorkerCtx<'_>,
     q: &mut [f64],
     theta_cur: &[f64],
-    theta_left: &[f64],
-    theta_right: &[f64],
-    lambda_left: &[f64],
-    lambda_own: &[f64],
+    decoders: &[Decoder],
+    lambda: &[Vec<f64>],
 ) -> Vec<f64> {
     let d = ctx.dim;
     q.iter_mut().for_each(|x| *x = 0.0);
     let mut couplings = 0.0;
-    if ctx.left.is_some() {
-        for j in 0..d {
-            q[j] += -lambda_left[j] - ctx.rho * theta_left[j];
-        }
-        couplings += 1.0;
-    }
-    if ctx.right.is_some() {
-        for j in 0..d {
-            q[j] += lambda_own[j] - ctx.rho * theta_right[j];
+    for (i, nb) in ctx.neighbors.iter().enumerate() {
+        let view = decoders[i].view();
+        let lam = &lambda[i];
+        if nb.origin {
+            for j in 0..d {
+                q[j] += lam[j] - ctx.rho * view[j];
+            }
+        } else {
+            for j in 0..d {
+                q[j] += -lam[j] - ctx.rho * view[j];
+            }
         }
         couplings += 1.0;
     }
@@ -178,16 +208,16 @@ fn solve_local(
 /// [`Msg::Skip`]); returns the exact payload bits on the wire, or `None`
 /// for a censored slot.
 fn send_model(ctx: &mut WorkerCtx<'_>, k: usize, theta: &[f64]) -> Option<f64> {
-    // One policy decision per iteration, shared by both receivers — a real
-    // radio broadcasts a single payload; channel fan-out models the two
-    // receivers of that single transmission.
+    // One policy decision per iteration, shared by all receivers — a real
+    // radio broadcasts a single payload; channel fan-out models the
+    // neighbour set receiving that single transmission.
     let msg = ctx.policy.transmit(k, theta);
     let sent = match &msg {
         Msg::Skip => None,
         m => Some(m.payload_bits()),
     };
-    for tx in ctx.neighbors_tx.iter().flatten() {
-        let _ = tx.send(WorkerMsg {
+    for nb in &ctx.neighbors {
+        let _ = nb.tx.send(WorkerMsg {
             from: ctx.id,
             payload: msg.clone(),
         });
@@ -195,16 +225,19 @@ fn send_model(ctx: &mut WorkerCtx<'_>, k: usize, theta: &[f64]) -> Option<f64> {
     sent
 }
 
-fn recv_models(ctx: &WorkerCtx<'_>, expected: usize, dec_left: &mut Decoder, dec_right: &mut Decoder) {
-    for _ in 0..expected {
+/// Receive one message from every neighbour (in arrival order) and apply
+/// each to that neighbour's decoder.
+fn recv_models(ctx: &WorkerCtx<'_>, decoders: &mut [Decoder]) {
+    for _ in 0..ctx.neighbors.len() {
         let msg = ctx.inbox.recv().expect("neighbor alive");
-        if Some(msg.from) == ctx.left {
-            dec_left.apply(&msg.payload);
-        } else if Some(msg.from) == ctx.right {
-            dec_right.apply(&msg.payload);
-        } else {
-            panic!("worker {} received model from non-neighbor {}", ctx.id, msg.from);
-        }
+        let i = ctx
+            .neighbors
+            .iter()
+            .position(|nb| nb.id == msg.from)
+            .unwrap_or_else(|| {
+                panic!("worker {} received model from non-neighbor {}", ctx.id, msg.from)
+            });
+        decoders[i].apply(&msg.payload);
     }
 }
 

@@ -120,6 +120,7 @@ pub fn run_panel(
             costs: &costs,
             seed,
             chain: Some(logical),
+            placement: None,
         });
         let trace = optim::run(&mut *g, &problem, &costs, &opts);
         if let Some(e) = trace.energy_to_target() {

@@ -95,6 +95,7 @@ pub fn run(
             costs: &costs,
             seed,
             chain: Some(logical),
+            placement: None,
         });
         let mut topo_rng = Pcg64::new(seed, 0x70b0);
         run_dynamic(
@@ -118,6 +119,7 @@ pub fn run(
             costs: &costs,
             seed,
             chain: None,
+            placement: None,
         });
         let mut topo_rng = Pcg64::new(seed, 0x70b0); // same topology evolution
         run_dynamic(

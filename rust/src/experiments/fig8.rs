@@ -45,7 +45,7 @@ pub fn run(workers: usize, rho: f64, target: f64, max_iters: usize, seed: u64) -
     let traces: Vec<Trace> = roster
         .into_iter()
         .map(|(spec, chain)| {
-            let mut e = spec.build_in(&BuildCtx { problem: &problem, costs: &costs, seed, chain });
+            let mut e = spec.build_in(&BuildCtx { problem: &problem, costs: &costs, seed, chain, placement: None });
             run_engine(&mut *e, &problem, &costs, &opts)
         })
         .collect();

@@ -1,0 +1,158 @@
+//! GGADMM topology evaluation (`gadmm graph`): bits and TC to the target
+//! accuracy as a function of the bipartite graph's *average degree*, on the
+//! paper's synthetic linear-regression setup.
+//!
+//! The chain (avg degree `2 − 2/N`) is GADMM itself; random geometric
+//! graphs at growing radii interpolate toward complete bipartite coupling
+//! (avg degree `~N/2`); the star is the opposite extreme (hub-and-spoke,
+//! avg degree `2 − 2/N` again but maximally unbalanced). Every topology
+//! pays the same `N` broadcast slots per iteration — the trade is
+//! iterations (denser coupling mixes consensus faster) against per-slot
+//! *energy* (a broadcast must reach its farthest neighbour) — so the table
+//! reports unit TC, energy TC, and payload bits side by side.
+//!
+//! All engines run on one shared physical [`Placement`] so the degree axis
+//! is the only thing varying; GADMM on the identity chain anchors the
+//! comparison.
+
+use super::{run_engine, traces_to_json};
+use crate::metrics::Trace;
+use crate::model::Problem;
+use crate::optim::{Gadmm, Ggadmm, RunOptions};
+use crate::topology::graph::GraphKind;
+use crate::topology::{EnergyCostModel, Placement};
+use crate::util::json::Json;
+use crate::util::rng::Pcg64;
+use crate::util::table::{fmt_count, Table};
+
+/// Default RGG radius sweep (on the paper's 10×10 m² area).
+pub const DEFAULT_RADII: &[f64] = &[2.5, 3.5, 5.0];
+
+/// Everything `gadmm graph` produces.
+pub struct GraphOutput {
+    /// One trace per roster row (chain anchor, then star, RGG sweep,
+    /// complete bipartite), in table order.
+    pub traces: Vec<Trace>,
+    /// Average degree per roster row, aligned with `traces`.
+    pub avg_degrees: Vec<f64>,
+    /// Paper-style table.
+    pub rendered: String,
+    /// JSON report (written under `results/graph.json` by the CLI).
+    pub report: Json,
+}
+
+/// Run the topology comparison. `radii` is the RGG sweep; `rho` applies to
+/// every engine so the topology is the only variable. The physical
+/// placement (side 10, the paper's Fig. 6 area) is drawn once from `seed`
+/// and shared by every row, and also prices the energy column.
+pub fn run(
+    workers: usize,
+    rho: f64,
+    radii: &[f64],
+    target: f64,
+    max_iters: usize,
+    seed: u64,
+) -> Result<GraphOutput, String> {
+    if workers < 2 || workers % 2 != 0 {
+        return Err(format!(
+            "gadmm graph needs an even N ≥ 2 (the chain anchor requires it), got {workers}"
+        ));
+    }
+    let ds = crate::config::DatasetKind::SyntheticLinreg.build(seed);
+    let problem = Problem::from_dataset(&ds, workers);
+    let mut place_rng = Pcg64::new(seed, 0x6772);
+    let placement = Placement::random(workers, 10.0, &mut place_rng);
+    let costs = EnergyCostModel::new(&placement, placement.central_worker());
+    let opts = RunOptions::with_target(target, max_iters);
+
+    let mut kinds: Vec<GraphKind> = vec![GraphKind::Chain, GraphKind::Star];
+    kinds.extend(radii.iter().map(|&radius| GraphKind::Rgg { radius }));
+    kinds.push(GraphKind::Complete);
+
+    let mut traces = Vec::new();
+    let mut avg_degrees = Vec::new();
+    // Chain anchor: plain GADMM on the identity chain — trace-identical to
+    // ggadmm:graph=chain by the degeneracy pin, shown under its own name.
+    {
+        let mut anchor = Gadmm::new(&problem, rho);
+        traces.push(run_engine(&mut anchor, &problem, &costs, &opts));
+        avg_degrees.push(2.0 - 2.0 / workers as f64);
+    }
+    for kind in &kinds[1..] {
+        let mut engine = Ggadmm::with_placement(&problem, rho, *kind, &placement)?;
+        avg_degrees.push(engine.graph().avg_degree());
+        traces.push(run_engine(&mut engine, &problem, &costs, &opts));
+    }
+
+    let mut table = Table::new(vec![
+        "Algorithm",
+        "avg degree",
+        "iters→target",
+        "TC→target",
+        "energy→target",
+        "bits→target",
+    ]);
+    for (t, deg) in traces.iter().zip(&avg_degrees) {
+        table.row(vec![
+            t.algorithm.clone(),
+            format!("{deg:.2}"),
+            t.iters_to_target().map(fmt_count).unwrap_or_else(|| "—".into()),
+            t.tc_to_target()
+                .map(|c| fmt_count(c as usize))
+                .unwrap_or_else(|| "—".into()),
+            t.energy_to_target()
+                .map(|e| format!("{e:.3e}"))
+                .unwrap_or_else(|| "—".into()),
+            t.bits_to_target()
+                .map(|b| format!("{b:.3e}"))
+                .unwrap_or_else(|| "—".into()),
+        ]);
+    }
+    let rendered = format!(
+        "\ngraph — GGADMM topology sweep (synthetic linreg, N={workers}, d={}, rho={rho}), \
+         target {target:.0e}\nplacement 10×10 m² (seed {seed}); every row pays N slots/iteration\n{}",
+        problem.dim,
+        table.render()
+    );
+    let report = Json::obj()
+        .set("experiment", "graph")
+        .set("workers", workers)
+        .set("rho", rho)
+        .set("target", target)
+        .set(
+            "radii",
+            Json::Arr(radii.iter().map(|&r| Json::Num(r)).collect()),
+        )
+        .set(
+            "avg_degrees",
+            Json::Arr(avg_degrees.iter().map(|&x| Json::Num(x)).collect()),
+        )
+        .set("traces", traces_to_json(&traces, 200));
+    Ok(GraphOutput {
+        traces,
+        avg_degrees,
+        rendered,
+        report,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_topology_converges_and_degrees_order() {
+        // Scaled-down instance; the acceptance-scale run (N=24, 1e-4) is
+        // exercised by the `gadmm graph` CLI and rust/tests/integration.rs.
+        let out = run(8, 5.0, &[4.0], 1e-3, 60_000, 1).unwrap();
+        assert_eq!(out.traces.len(), 4); // chain, star, rgg(4.0), complete
+        for t in &out.traces {
+            assert!(t.iters_to_target().is_some(), "{} err {}", t.algorithm, t.final_error());
+        }
+        // Complete coupling dominates every sparser topology in degree.
+        let complete = *out.avg_degrees.last().unwrap();
+        assert!(out.avg_degrees.iter().all(|&d| d <= complete));
+        assert!(out.rendered.contains("GGADMM"));
+        assert!(out.report.path("experiment").is_some());
+    }
+}

@@ -14,6 +14,8 @@
 //!   accuracy (the Q-GADMM follow-up's evaluation)
 //! * [`censor::run`]   — GADMM vs Q vs C vs CQ: censoring × quantization
 //!   bits-to-target (the CQ-GADMM follow-up's evaluation)
+//! * [`graph::run`]    — GGADMM topology sweep: bits/TC/energy to target
+//!   vs. average degree (chain, star, RGG radii, complete bipartite)
 //! * [`bench::run`]    — the perf-trajectory grid behind `gadmm bench`
 //!   (`BENCH_comm.json`)
 
@@ -23,6 +25,7 @@ pub mod curves;
 pub mod fig6;
 pub mod fig7;
 pub mod fig8;
+pub mod graph;
 pub mod qgadmm;
 pub mod table1;
 

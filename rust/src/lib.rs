@@ -4,21 +4,24 @@
 //! Efficient Framework for Distributed Machine Learning"* (Elgabli et al.,
 //! 2019) as a three-layer rust + JAX + Pallas stack:
 //!
-//! * **L3 (this crate)** — the decentralized coordinator: chain topology,
-//!   head/tail group scheduling, neighbour-only messaging, dynamic
-//!   re-chaining (D-GADMM), quantized model exchange (Q-GADMM) behind the
-//!   pluggable [`comm::Compressor`] seam, bit-exact communication-cost
-//!   accounting, all baseline algorithms, experiment drivers for every
-//!   table/figure in the paper.
+//! * **L3 (this crate)** — the decentralized coordinator: chain and
+//!   arbitrary bipartite-graph topologies ([`topology::graph`], the GGADMM
+//!   generalization), head/tail group scheduling, neighbour-set-only
+//!   messaging, dynamic re-chaining (D-GADMM), quantized model exchange
+//!   (Q-GADMM) behind the pluggable [`comm::Compressor`] seam, per-slot
+//!   censoring (C/CQ-GADMM) behind the [`comm::LinkPolicy`] seam,
+//!   bit-exact communication-cost accounting, all baseline algorithms,
+//!   experiment drivers for every table/figure in the paper.
 //! * **L2/L1 (python/, build-time only)** — the per-worker subproblem solves
 //!   authored in JAX + Pallas, AOT-lowered to HLO text under `artifacts/`.
 //! * **runtime** — loads those artifacts through the PJRT C API (`xla`
 //!   crate) so Python is never on the training path.
 //!
-//! Start with [`optim`] for the algorithms, [`session`] for declarative
-//! run orchestration (`AlgoSpec` registry, parallel sweeps, trace sinks),
-//! [`coordinator`] for the distributed execution, and [`experiments`] for
-//! the paper's evaluation.
+//! Start with [`optim`] for the algorithms, [`topology`] for chains and
+//! bipartite graphs, [`session`] for declarative run orchestration
+//! (`AlgoSpec` registry, parallel sweeps, trace sinks), [`coordinator`]
+//! for the distributed execution, and [`experiments`] for the paper's
+//! evaluation.
 
 pub mod comm;
 pub mod config;

@@ -14,6 +14,7 @@
 //! gadmm fig8  [--workers 24]
 //! gadmm qgadmm [--workers 24] [--rho 5] [--bits 4,8] [--target 1e-4]
 //! gadmm censor [--workers 24] [--rho 5] [--bits 8] [--tau 1] [--mu 0.93]
+//! gadmm graph  [--workers 24] [--rho 5] [--radius 2.5,3.5,5] [--quick]
 //! gadmm bench  [--quick] [--out results/]   — writes BENCH_comm.json
 //! gadmm all   — every table and figure, reports under results/
 //! ```
@@ -22,7 +23,7 @@ use gadmm::config::{validate_quant_bits, DatasetKind, RunConfig};
 use gadmm::coordinator;
 use gadmm::data::partition_even;
 use gadmm::experiments::{
-    bench, censor, curves, fig6, fig7, fig8, qgadmm, table1, write_report, write_trace_csv,
+    bench, censor, curves, fig6, fig7, fig8, graph, qgadmm, table1, write_report, write_trace_csv,
 };
 use gadmm::model::Problem;
 use gadmm::optim::RunOptions;
@@ -224,6 +225,35 @@ fn dispatch(sub: &str, args: &Args) -> Result<(), String> {
             println!("report: {}", path.display());
             Ok(())
         }
+        "graph" => {
+            // --quick: the CI smoke cell — small N, loose target, one RGG
+            // radius — wired into ci.sh next to the sweep/bench smokes.
+            let quick = args.flag("quick");
+            if quick {
+                for flag in ["workers", "rho", "radius", "target", "max-iters"] {
+                    if args.get(flag).is_some() {
+                        return Err(format!(
+                            "--quick runs a fixed CI cell; drop --{flag} or drop --quick"
+                        ));
+                    }
+                }
+            }
+            let workers = if quick { 8 } else { args.get_usize("workers", 24)? };
+            let rho = args.get_f64("rho", 5.0)?;
+            let radii: Vec<f64> = if quick {
+                vec![4.0]
+            } else {
+                args.get_f64_list("radius", graph::DEFAULT_RADII)?
+            };
+            let target = if quick { 1e-2 } else { args.get_f64("target", 1e-4)? };
+            let max_iters = args.get_usize("max-iters", if quick { 20_000 } else { 300_000 })?;
+            let out = graph::run(workers, rho, &radii, target, max_iters, args.get_u64("seed", 1)?)?;
+            println!("{}", out.rendered);
+            let path =
+                write_report(&out_dir(args), "graph", &out.report).map_err(|e| e.to_string())?;
+            println!("report: {}", path.display());
+            Ok(())
+        }
         "bench" => {
             let out = bench::run(args.flag("quick"), args.get_u64("seed", 1)?);
             println!("{}", out.rendered);
@@ -235,7 +265,7 @@ fn dispatch(sub: &str, args: &Args) -> Result<(), String> {
         "all" => {
             for s in [
                 "table1", "fig2", "fig3", "fig4", "fig5", "fig6", "fig7", "fig8", "qgadmm",
-                "censor",
+                "censor", "graph",
             ] {
                 println!("=== {s} ===");
                 dispatch(s, args)?;
@@ -271,7 +301,6 @@ fn cmd_train(args: &Args) -> Result<(), String> {
             .map_err(|_| format!("--quant-bits expects an integer, got '{v}'"))?;
         cfg.quant_bits = Some(validate_quant_bits(raw)?);
     }
-    cfg.validate()?;
 
     let backend = args.get_string("backend", "native");
     let chain_kind = args.get_string("chain", "sequential");
@@ -304,10 +333,10 @@ fn cmd_train(args: &Args) -> Result<(), String> {
                 );
             }
             let parsed = AlgoSpec::parse(s)?;
-            if !parsed.is_static_chain() {
+            if !parsed.is_static_chain() && !matches!(parsed, AlgoSpec::Ggadmm { .. }) {
                 return Err(format!(
-                    "--algo must name a static-chain engine (gadmm, qgadmm, cgadmm, cqgadmm), \
-                     got '{s}'"
+                    "--algo must name a static-topology engine (gadmm, qgadmm, cgadmm, \
+                     cqgadmm, ggadmm), got '{s}'"
                 ));
             }
             parsed
@@ -317,6 +346,9 @@ fn cmd_train(args: &Args) -> Result<(), String> {
             None => AlgoSpec::Gadmm { rho: cfg.rho },
         },
     };
+    // Even-N is a chain requirement; GGADMM on a non-chain graph accepts
+    // any N ≥ 2, so the check follows the spec.
+    cfg.validate_for(spec.needs_even_workers())?;
 
     let ds = cfg.dataset.build(cfg.seed);
     let problem = Problem::from_dataset(&ds, cfg.workers);
@@ -330,14 +362,26 @@ fn cmd_train(args: &Args) -> Result<(), String> {
     let mut rng = Pcg64::new(cfg.seed, 0x7a41);
     let placement = Placement::random(cfg.workers, cfg.area_side, &mut rng);
     let energy = EnergyCostModel::new(&placement, placement.central_worker());
+    // GGADMM specs carry their topology as a knob: build the bipartite
+    // graph over the run's physical placement and route through the graph
+    // coordinator; chain specs keep the logical-chain path (whose greedy
+    // Appendix-D build is chain-only and skipped on the graph path).
+    let graph_topology = match spec {
+        AlgoSpec::Ggadmm { graph: kind, .. } => Some(kind.build(cfg.workers, &placement)?),
+        _ => None,
+    };
     let logical = match chain_kind.as_str() {
         "sequential" => chain::Chain::sequential(cfg.workers),
+        "greedy" if graph_topology.is_some() => {
+            return Err("--chain greedy applies to chain engines; ggadmm takes its topology \
+                        from the spec's graph= knob"
+                .into())
+        }
         "greedy" => chain::rechain(cfg.workers, &energy, &mut rng),
         other => return Err(format!("unknown chain '{other}'")),
     };
     let opts = RunOptions::with_target(cfg.target, cfg.max_iters);
     let costs = UnitCosts;
-
     let quant_seed = cfg.quant_seed_or_default();
     let result = match backend.as_str() {
         "native" => {
@@ -347,7 +391,14 @@ fn cmd_train(args: &Args) -> Result<(), String> {
                         as Box<dyn gadmm::runtime::LocalSolver + Send + '_>
                 })
                 .collect();
-            coordinator::train_spec(&problem, solvers, &spec, quant_seed, logical, &costs, &opts)?
+            match graph_topology {
+                Some(g) => coordinator::train_graph_spec(
+                    &problem, solvers, &spec, quant_seed, g, &costs, &opts,
+                )?,
+                None => coordinator::train_spec(
+                    &problem, solvers, &spec, quant_seed, logical, &costs, &opts,
+                )?,
+            }
         }
         "pjrt" => {
             let manifest = Manifest::load(&artifacts_dir())?;
@@ -360,15 +411,26 @@ fn cmd_train(args: &Args) -> Result<(), String> {
                 problem.data_weight,
             )
             .map_err(|e| format!("{e:#}"))?;
-            coordinator::train_spec(
-                &problem,
-                service.solvers(),
-                &spec,
-                quant_seed,
-                logical,
-                &costs,
-                &opts,
-            )?
+            match graph_topology {
+                Some(g) => coordinator::train_graph_spec(
+                    &problem,
+                    service.solvers(),
+                    &spec,
+                    quant_seed,
+                    g,
+                    &costs,
+                    &opts,
+                )?,
+                None => coordinator::train_spec(
+                    &problem,
+                    service.solvers(),
+                    &spec,
+                    quant_seed,
+                    logical,
+                    &costs,
+                    &opts,
+                )?,
+            }
         }
         other => return Err(format!("unknown backend '{other}'")),
     };
@@ -499,8 +561,9 @@ subcommands:
            --workers N --rho R --target T --max-iters K --seed S
            --backend native|pjrt   --chain sequential|greedy
            --quant-bits B (Q-GADMM wire quantization, omit for dense)
-           --algo SPEC (any static-chain spec string, e.g.
-                        'cqgadmm:rho=5,bits=8,tau=1,mu=0.93')
+           --algo SPEC (any static-topology spec string, e.g.
+                        'cqgadmm:rho=5,bits=8,tau=1,mu=0.93' or
+                        'ggadmm:rho=5,graph=rgg:radius=3.5')
            --config FILE (JSON, see configs/)
   sweep    parallel grid sweep: algorithms x datasets x workers x seeds
            --algos 'gadmm:rho=5;qgadmm:rho=5,bits=8;cgadmm:tau=1,mu=0.93;gd'
@@ -516,6 +579,9 @@ subcommands:
            --workers N --rho R --bits 4,8 --target T
   censor   GADMM vs Q vs C vs CQ-GADMM: censoring x quantization
            --workers N --rho R --bits B --tau T --mu M --target T
+  graph    GGADMM topology sweep: bits/TC/energy to target vs avg degree
+           (chain, star, rgg radii, complete bipartite)
+           --workers N --rho R --radius R1,R2 --target T (--quick for CI)
   bench    paper-scale perf grid -> BENCH_comm.json (--quick for CI)
   all      every table/figure above (train/sweep/bench excluded);
            JSON reports under results/

@@ -1,39 +1,56 @@
-//! The unified group-ADMM core: head phase → tail phase → dual update over
-//! a [`Chain`] schedule, parameterized by per-worker
+//! The unified group-ADMM core: head phase → tail phase → dual ascent over
+//! an arbitrary connected [`BipartiteGraph`], parameterized by per-worker
 //! [`LinkPolicy`](crate::comm::LinkPolicy)s that decide, each slot,
 //! *whether* to transmit (censoring) and *how* to encode (dense /
 //! stochastically quantized).
 //!
-//! Every chain engine — [`super::Gadmm`], [`super::Qgadmm`],
+//! Every group engine — [`super::Gadmm`], [`super::Qgadmm`],
 //! [`super::Dgadmm`] (via its inner `Gadmm`), [`super::Cgadmm`],
-//! [`super::Cqgadmm`] — is a thin configuration of this core; the
-//! head/tail/dual iteration logic exists exactly once. One iteration:
+//! [`super::Cqgadmm`], and the generalized [`super::Ggadmm`] — is a thin
+//! configuration of this core; the head/tail/dual iteration logic exists
+//! exactly once. One iteration:
 //!
-//! 1. **Head phase** — every even chain position solves its local
-//!    subproblem (eqs. 11–12) against the *public* neighbour models `θ̂`,
-//!    then offers its new model to its link policy; the policy transmits
-//!    (updating the public view) or censors (leaving it stale).
-//! 2. **Tail phase** — odd positions, against the fresh head publics
+//! 1. **Head phase** — every head solves its local subproblem (eqs. 11–12,
+//!    generalized to its full *neighbour set*) against the *public*
+//!    neighbour models `θ̂`, then offers its new model to its link policy;
+//!    the policy transmits (updating the public view) or censors (leaving
+//!    it stale). Heads never neighbour heads, so the whole group updates
+//!    in parallel.
+//! 2. **Tail phase** — every tail, against the fresh head publics
 //!    (eqs. 13–14).
-//! 3. **Dual update** — eq. 15 on the public models: both endpoints of a
-//!    link hold bit-identical `θ̂` values, so their mirrored duals stay
+//! 3. **Dual ascent** — one dual λ_e per *edge* `(u, v)`:
+//!    `λ_e ← λ_e + ρ(θ̂_u − θ̂_v)` (eq. 15 per link). Both endpoints hold
+//!    bit-identical `θ̂` values, so their mirrored copies of λ_e stay
 //!    consistent without communication, under quantization *and* under
 //!    censoring.
 //!
-//! With dense always-transmit links the public view equals the private
-//! iterate bit-for-bit, so this core reproduces the original GADMM
-//! arithmetic exactly — the refactor-equivalence contract pinned by
-//! `rust/tests/refactor_pin.rs` against frozen copies of the
-//! pre-refactor engines.
+//! A worker's subproblem couples it to every incident edge: the linear
+//! term accumulates `±λ_e − ρ·θ̂_nb` over its adjacency list (`+` for the
+//! edge's origin endpoint, `−` for the destination), and the quadratic
+//! coefficient is `ρ·deg(w)` — the paper's left/right terms are exactly
+//! the degree-≤2 case.
 //!
-//! Metering: each phase charges one slot per *transmitting* worker, billed
-//! with the exact payload bits the policy put on the wire; censored slots
-//! charge nothing and tick [`Meter::censored`].
+//! **Chain degeneracy.** On a chain graph
+//! ([`BipartiteGraph::from_chain`]) the neighbour set is `{left, right}`,
+//! edges are oriented left→right and the edge→dual-slot map stores each
+//! λ at its left endpoint's physical worker index — the exact layout of
+//! the pre-generalization core, so duals still *travel with their worker*
+//! across D-GADMM re-chains and the chain path reproduces the original
+//! GADMM arithmetic bit-for-bit. Pinned by `rust/tests/refactor_pin.rs`
+//! against frozen copies of the pre-refactor engines, and by the
+//! GGADMM-on-a-chain ≡ GADMM pin (see
+//! `docs/adr/004-bipartite-graph-topology.md`).
+//!
+//! Metering: each phase charges one broadcast slot per *transmitting*
+//! worker, billed with the exact payload bits the policy put on the wire
+//! (energy: the worst link of its neighbour set); censored slots charge
+//! nothing and tick [`Meter::censored`].
 
 use crate::comm::{LinkPolicy, Meter, Msg};
 use crate::linalg::vector as vec_ops;
 use crate::model::Problem;
 use crate::topology::chain::Chain;
+use crate::topology::graph::BipartiteGraph;
 
 pub struct GroupAdmmCore<'a> {
     problem: &'a Problem,
@@ -42,18 +59,30 @@ pub struct GroupAdmmCore<'a> {
     pub rho: f64,
     /// Effective ρ applied to the normalized losses: `rho · data_weight`.
     rho_eff: f64,
-    /// Logical chain: `chain.order[p]` = physical worker at position p.
-    chain: Chain,
+    /// The communication topology: which links exist, who is a head, and
+    /// each worker's neighbour set.
+    graph: BipartiteGraph,
+    /// The logical chain when the topology is one (every engine except
+    /// GGADMM on a non-chain graph). Chain-specific dual handling
+    /// (D-GADMM re-chaining, the feasibility sweeps) requires it.
+    chain: Option<Chain>,
     /// Private full-precision primal iterate per *physical* worker.
     theta: Vec<Vec<f64>>,
     /// Public model per physical worker — what every neighbour (and the
-    /// dual update) sees: the link policy's current receiver view.
+    /// dual ascent) sees: the link policy's current receiver view. A
+    /// broadcast link has one public view shared by all incident edges, so
+    /// the per-edge receiver slots coincide and are stored once.
     hat: Vec<Vec<f64>>,
-    /// Dual per *physical worker* w: λ_w couples worker w to its *current
-    /// right neighbour* (paper eq. 90 — in D-GADMM the dual travels with
-    /// the worker, not the chain position). Worker at the last position
-    /// never owns a dual. Length N (last entry unused, kept for indexing).
+    /// Dual variables, one per graph edge, indexed through `lambda_slot`.
+    /// On a chain, edge `(order[p], order[p+1])` stores its dual at slot
+    /// `order[p]` — the *physical worker* at the edge's left endpoint —
+    /// so λ travels with the worker across D-GADMM re-chains (paper
+    /// eq. 90) exactly as before the graph generalization; the slot of the
+    /// last-position worker is unused (kept zero). On a general graph the
+    /// slot is simply the edge index.
     lambda: Vec<Vec<f64>>,
+    /// Edge index → `lambda` slot.
+    lambda_slot: Vec<usize>,
     /// Per-worker sender-side link policy (travels with the physical
     /// worker across D-GADMM re-chains, like the dual).
     links: Vec<Box<dyn LinkPolicy>>,
@@ -65,7 +94,9 @@ pub struct GroupAdmmCore<'a> {
 }
 
 impl<'a> GroupAdmmCore<'a> {
-    /// Core on an explicit logical chain with one link policy per worker.
+    /// Core on an explicit logical chain with one link policy per worker
+    /// (the paper's Algorithm 1 topology; chain-mode dual handling stays
+    /// available for D-GADMM).
     pub fn new(
         problem: &'a Problem,
         rho: f64,
@@ -75,6 +106,39 @@ impl<'a> GroupAdmmCore<'a> {
         let n = problem.num_workers();
         assert_eq!(chain.len(), n);
         assert!(n >= 2 && n % 2 == 0, "GADMM requires an even N ≥ 2");
+        let graph = BipartiteGraph::from_chain(&chain);
+        let lambda_slot = chain.order[..n - 1].to_vec();
+        let mut core = GroupAdmmCore::build(problem, rho, graph, links, n, lambda_slot);
+        core.chain = Some(chain);
+        core
+    }
+
+    /// Core on an arbitrary connected bipartite graph (GGADMM). Any worker
+    /// count the graph accepts is legal — the even-N requirement is a
+    /// chain artifact. Chain-specific dual handling ([`Self::set_chain`]
+    /// and the feasibility sweeps) is unavailable in this mode.
+    pub fn on_graph(
+        problem: &'a Problem,
+        rho: f64,
+        graph: BipartiteGraph,
+        links: Vec<Box<dyn LinkPolicy>>,
+    ) -> GroupAdmmCore<'a> {
+        let n = problem.num_workers();
+        assert_eq!(graph.len(), n, "graph and problem disagree on the worker count");
+        let num_edges = graph.num_edges();
+        let slots = (0..num_edges).collect();
+        GroupAdmmCore::build(problem, rho, graph, links, num_edges, slots)
+    }
+
+    fn build(
+        problem: &'a Problem,
+        rho: f64,
+        graph: BipartiteGraph,
+        links: Vec<Box<dyn LinkPolicy>>,
+        lambda_len: usize,
+        lambda_slot: Vec<usize>,
+    ) -> GroupAdmmCore<'a> {
+        let n = problem.num_workers();
         assert!(rho > 0.0);
         assert_eq!(links.len(), n, "need one link policy per worker");
         let d = problem.dim;
@@ -82,18 +146,27 @@ impl<'a> GroupAdmmCore<'a> {
             problem,
             rho,
             rho_eff: rho * problem.data_weight,
-            chain,
+            graph,
+            chain: None,
             theta: vec![vec![0.0; d]; n],
             hat: vec![vec![0.0; d]; n],
-            lambda: vec![vec![0.0; d]; n],
+            lambda: vec![vec![0.0; d]; lambda_len],
+            lambda_slot,
             links,
             sent: vec![None; n],
             q: vec![0.0; d],
         }
     }
 
+    /// The logical chain. Panics on a general-graph core — use
+    /// [`Self::graph`] there.
     pub fn chain(&self) -> &Chain {
-        &self.chain
+        self.chain.as_ref().expect("this core runs on a general graph, not a chain")
+    }
+
+    /// The communication topology.
+    pub fn graph(&self) -> &BipartiteGraph {
+        &self.graph
     }
 
     /// Private full-precision iterates.
@@ -107,8 +180,10 @@ impl<'a> GroupAdmmCore<'a> {
         &self.hat
     }
 
-    /// Duals indexed by physical worker (entry for the last-position worker
-    /// is identically zero).
+    /// Dual variables. On a chain, indexed by physical worker — entry `w`
+    /// is the dual of the link from `w` to its current right neighbour
+    /// (the last-position worker's entry is identically zero). On a
+    /// general graph, indexed by edge.
     pub fn lambdas(&self) -> &[Vec<f64>] {
         &self.lambda
     }
@@ -119,61 +194,63 @@ impl<'a> GroupAdmmCore<'a> {
         self.links[0].message_bits()
     }
 
-    /// One full iteration `k`: head phase, tail phase, dual update.
+    /// One full iteration `k`: head phase, tail phase, dual ascent.
     pub fn step(&mut self, k: usize, meter: &mut Meter) {
-        let n = self.chain.len();
         // Head phase (parallel in a real deployment; order-independent here
-        // because heads only read tail publics).
-        for p in (0..n).step_by(2) {
-            self.update_position(p, k);
+        // because heads only read tail publics — the bipartition guarantees
+        // no head neighbours a head).
+        for i in 0..self.graph.heads().len() {
+            let w = self.graph.heads()[i];
+            self.update_worker(w, k);
         }
         self.meter_phase(meter, true);
         // Tail phase — uses the fresh head publics.
-        for p in (1..n).step_by(2) {
-            self.update_position(p, k);
+        for i in 0..self.graph.tails().len() {
+            let w = self.graph.tails()[i];
+            self.update_worker(w, k);
         }
         self.meter_phase(meter, false);
-        // Dual updates (eq. 15) on the *public* models, local to each
-        // worker: both endpoints of every link hold the same θ̂ values, so
-        // their mirrored duals stay identical without extra communication.
-        for p in 0..n - 1 {
-            let (a, b) = (self.chain.order[p], self.chain.order[p + 1]);
-            for j in 0..self.problem.dim {
-                // eq. 90: worker a's dual couples it to its current right
-                // neighbour b.
-                self.lambda[a][j] += self.rho_eff * (self.hat[a][j] - self.hat[b][j]);
+        // Dual ascent (eq. 15 per edge) on the *public* models, local to
+        // each endpoint: both ends of every link hold the same θ̂ values,
+        // so their mirrored duals stay identical without communication.
+        let d = self.problem.dim;
+        for e in 0..self.graph.num_edges() {
+            let (u, v) = self.graph.edges()[e];
+            let s = self.lambda_slot[e];
+            for j in 0..d {
+                self.lambda[s][j] += self.rho_eff * (self.hat[u][j] - self.hat[v][j]);
             }
         }
     }
 
-    /// Solve the subproblem for the worker at chain position `p` against
-    /// the public neighbour models, then offer the new model to the
-    /// worker's link policy. The subproblem's linear term is
-    /// `q = −λ_{p−1} + λ_p − ρ(θ̂_left + θ̂_right)`, the quadratic
-    /// coefficient `c = ρ·(#neighbours)`.
-    fn update_position(&mut self, p: usize, k: usize) {
-        let n = self.chain.len();
-        let w = self.chain.order[p];
+    /// Solve worker `w`'s subproblem against the public models of its
+    /// neighbour set, then offer the new model to the worker's link
+    /// policy. The subproblem's linear term accumulates, per incident
+    /// edge, `±λ_e − ρ·θ̂_nb` (`+λ` for the edge's origin endpoint, `−λ`
+    /// for the destination) in adjacency order; the quadratic coefficient
+    /// is `c = ρ·deg(w)`. On a chain this is exactly the paper's
+    /// `q = −λ_{p−1} + λ_p − ρ(θ̂_left + θ̂_right)`.
+    fn update_worker(&mut self, w: usize, k: usize) {
+        let rho_eff = self.rho_eff;
         let d = self.problem.dim;
-        self.q.iter_mut().for_each(|x| *x = 0.0);
+        let GroupAdmmCore { graph, lambda, lambda_slot, hat, q, .. } = self;
+        q.iter_mut().for_each(|x| *x = 0.0);
         let mut couplings = 0.0;
-        if p > 0 {
-            let left = self.chain.order[p - 1];
-            for j in 0..d {
-                // λ of the *left neighbour* governs the (left, w) link.
-                self.q[j] += -self.lambda[left][j] - self.rho_eff * self.hat[left][j];
+        for er in graph.adjacency(w) {
+            let lam = &lambda[lambda_slot[er.edge]];
+            let nb = &hat[er.neighbor];
+            if er.origin {
+                for j in 0..d {
+                    q[j] += lam[j] - rho_eff * nb[j];
+                }
+            } else {
+                for j in 0..d {
+                    q[j] += -lam[j] - rho_eff * nb[j];
+                }
             }
             couplings += 1.0;
         }
-        if p + 1 < n {
-            let right = self.chain.order[p + 1];
-            for j in 0..d {
-                // w's own λ governs the (w, right) link.
-                self.q[j] += self.lambda[w][j] - self.rho_eff * self.hat[right][j];
-            }
-            couplings += 1.0;
-        }
-        let c = self.rho_eff * couplings;
+        let c = rho_eff * couplings;
         self.theta[w] = self.problem.losses[w].prox_argmin(&self.q, c, &self.theta[w]);
         let msg = self.links[w].transmit(k, &self.theta[w]);
         self.sent[w] = match &msg {
@@ -184,10 +261,10 @@ impl<'a> GroupAdmmCore<'a> {
     }
 
     /// Charge one phase's transmissions through the shared structural
-    /// billing ([`crate::comm::charge_chain_phase`]): transmitted slots at
+    /// billing ([`crate::comm::charge_graph_phase`]): transmitted slots at
     /// their exact payload, censored slots on the censored counter.
     fn meter_phase(&self, meter: &mut Meter, head_phase: bool) {
-        crate::comm::charge_chain_phase(meter, &self.chain, head_phase, &self.sent);
+        crate::comm::charge_graph_phase(meter, &self.graph, head_phase, &self.sent);
     }
 
     /// The paper's objective `Σ_n f_n(θ_n^k)` at the private iterates.
@@ -195,27 +272,26 @@ impl<'a> GroupAdmmCore<'a> {
         self.problem.objective_per_worker(&self.theta)
     }
 
-    /// Average consensus violation `Σ‖θ_p − θ_{p+1}‖₁ / N` along the chain
-    /// (on the private iterates, as the paper measures it).
+    /// Average consensus violation over the graph's edges, on the private
+    /// iterates ([`BipartiteGraph::acv`] — along a chain this is exactly
+    /// the paper's ACV).
     pub fn acv(&self) -> f64 {
-        let n = self.chain.len();
-        let mut total = 0.0;
-        for p in 0..n - 1 {
-            let (a, b) = (self.chain.order[p], self.chain.order[p + 1]);
-            total += vec_ops::norm1(&vec_ops::sub(&self.theta[a], &self.theta[b]));
-        }
-        total / n as f64
+        self.graph.acv(&self.theta)
     }
 
-    /// Replace the logical chain (D-GADMM re-chaining). Primal iterates,
-    /// duals, and link policies all travel with their physical workers:
-    /// worker w keeps λ_w and applies it to whatever its new right
-    /// neighbour is (Appendix E, eq. 90 — convergence holds when
+    /// Replace the logical chain (D-GADMM re-chaining; chain mode only).
+    /// Primal iterates, duals, and link policies all travel with their
+    /// physical workers: worker w keeps λ_w and applies it to whatever its
+    /// new right neighbour is (Appendix E, eq. 90 — convergence holds when
     /// iteration-k variables computed under the previous neighbour set are
-    /// reused).
+    /// reused). The dual storage is keyed by physical worker, so the slot
+    /// re-map is the only thing that changes.
     pub fn set_chain(&mut self, chain: Chain) {
-        assert_eq!(chain.len(), self.chain.len());
-        self.chain = chain;
+        let n = self.chain().len();
+        assert_eq!(chain.len(), n);
+        self.graph = BipartiteGraph::from_chain(&chain);
+        self.lambda_slot = chain.order[..n - 1].to_vec();
+        self.chain = Some(chain);
     }
 
     /// Re-initialize the duals consistently for the *current* chain via a
@@ -238,15 +314,16 @@ impl<'a> GroupAdmmCore<'a> {
     /// The dual-feasibility baseline for the *current* chain at the current
     /// primals: `λ_{order[p]} = λ_{order[p−1]} − ∇f_{order[p]}(θ_{order[p]})`
     /// (eq. 17 telescoped), indexed by physical worker. The last-position
-    /// worker's entry is zero.
+    /// worker's entry is zero. Chain mode only.
     pub fn feasible_duals(&self) -> Vec<Vec<f64>> {
-        let n = self.chain.len();
+        let chain = self.chain();
+        let n = chain.len();
         let d = self.problem.dim;
         let mut out = vec![vec![0.0; d]; n];
         let mut running = vec![0.0; d];
         let mut g = vec![0.0; d];
         for p in 0..n - 1 {
-            let w = self.chain.order[p];
+            let w = chain.order[p];
             self.problem.losses[w].grad_into(&self.theta[w], &mut g);
             for j in 0..d {
                 running[j] -= g[j];
@@ -262,8 +339,9 @@ impl<'a> GroupAdmmCore<'a> {
     /// γ keeps D-GADMM convergent on heterogeneous data without stalling.
     pub fn damp_duals_toward_feasible(&mut self, gamma: f64) {
         let feas = self.feasible_duals();
-        let n = self.chain.len();
-        let last = self.chain.order[n - 1];
+        let chain = self.chain.as_ref().expect("chain mode");
+        let n = chain.len();
+        let last = chain.order[n - 1];
         for w in 0..n {
             if w == last {
                 self.lambda[w].iter_mut().for_each(|x| *x = 0.0);
@@ -285,8 +363,9 @@ impl<'a> GroupAdmmCore<'a> {
     /// DualHandling in dgadmm.rs and DESIGN.md §Substitutions).
     pub fn rebase_duals(&mut self, old_feas: &[Vec<f64>]) {
         let new_feas = self.feasible_duals();
-        let n = self.chain.len();
-        let last = self.chain.order[n - 1];
+        let chain = self.chain.as_ref().expect("chain mode");
+        let n = chain.len();
+        let last = chain.order[n - 1];
         for w in 0..n {
             if w == last {
                 self.lambda[w].iter_mut().for_each(|x| *x = 0.0);
@@ -309,33 +388,35 @@ impl<'a> GroupAdmmCore<'a> {
         mean
     }
 
-    /// Primal residuals r_{p,p+1} = θ_p − θ_{p+1} along the chain.
+    /// Primal residuals `r_e = θ_u − θ_v` per edge, in edge order (along a
+    /// chain: `r_{p,p+1} = θ_p − θ_{p+1}`).
     pub fn primal_residuals(&self) -> Vec<Vec<f64>> {
-        (0..self.chain.len() - 1)
-            .map(|p| {
-                vec_ops::sub(
-                    &self.theta[self.chain.order[p]],
-                    &self.theta[self.chain.order[p + 1]],
-                )
-            })
+        self.graph
+            .edges()
+            .iter()
+            .map(|&(u, v)| vec_ops::sub(&self.theta[u], &self.theta[v]))
             .collect()
     }
 
-    /// Tail dual-feasibility residual max_n ‖∇f_n(θ_n) − λ_{n−1} + λ_n‖
-    /// over tail positions — identically 0 in exact arithmetic after every
-    /// iteration of the dense always-transmit configuration (eq. 20);
-    /// property-tested.
+    /// Tail dual-feasibility residual `max_t ‖∇f_t(θ_t) + Σ_{e∋t} ±λ_e‖`
+    /// over tail workers (`+` where the tail is the edge's origin, `−` at
+    /// the destination) — identically 0 in exact arithmetic after every
+    /// iteration of the dense always-transmit configuration (eq. 20, which
+    /// generalizes edge-wise); property-tested.
     pub fn tail_dual_residual(&self) -> f64 {
-        let n = self.chain.len();
         let mut worst: f64 = 0.0;
-        for p in (1..n).step_by(2) {
-            let w = self.chain.order[p];
-            let left = self.chain.order[p - 1];
+        for &w in self.graph.tails() {
             let mut g = self.problem.losses[w].grad(&self.theta[w]);
-            for j in 0..g.len() {
-                g[j] -= self.lambda[left][j];
-                if p + 1 < n {
-                    g[j] += self.lambda[w][j];
+            for er in self.graph.adjacency(w) {
+                let lam = &self.lambda[self.lambda_slot[er.edge]];
+                if er.origin {
+                    for j in 0..g.len() {
+                        g[j] += lam[j];
+                    }
+                } else {
+                    for j in 0..g.len() {
+                        g[j] -= lam[j];
+                    }
                 }
             }
             worst = worst.max(vec_ops::norm2(&g));
@@ -343,23 +424,24 @@ impl<'a> GroupAdmmCore<'a> {
         worst
     }
 
-    /// The Lyapunov function of Theorem 2 (eq. 32):
+    /// The Lyapunov function of Theorem 2 (eq. 32), chain mode only:
     /// `V_k = 1/ρ Σ_p‖λ_p − λ*_p‖² + ρ Σ_{heads p>0}‖θ_{p−1} − θ*‖²
     ///        + ρ Σ_{heads p}‖θ_{p+1} − θ*‖²`.
     pub fn lyapunov(&self, theta_star: &[f64], lambda_star: &[Vec<f64>]) -> f64 {
-        let n = self.chain.len();
+        let chain = self.chain();
+        let n = chain.len();
         let mut v = 0.0;
         for p in 0..n - 1 {
-            let w = self.chain.order[p];
+            let w = chain.order[p];
             v += vec_ops::dist2(&self.lambda[w], &lambda_star[p]).powi(2) / self.rho_eff;
         }
         for p in (0..n).step_by(2) {
             if p > 0 {
-                let left = self.chain.order[p - 1];
+                let left = chain.order[p - 1];
                 v += self.rho_eff * vec_ops::dist2(&self.theta[left], theta_star).powi(2);
             }
             if p + 1 < n {
-                let right = self.chain.order[p + 1];
+                let right = chain.order[p + 1];
                 v += self.rho_eff * vec_ops::dist2(&self.theta[right], theta_star).powi(2);
             }
         }
@@ -446,9 +528,64 @@ mod tests {
     }
 
     #[test]
+    fn graph_core_runs_on_odd_worker_counts() {
+        // A star over 5 workers — impossible as a chain (odd N), fine as a
+        // graph. One iteration: N broadcast slots over two rounds.
+        let p = problem(7, 5);
+        let g = BipartiteGraph::star(5).unwrap();
+        let mut core = GroupAdmmCore::on_graph(&p, 3.0, g, dense_links(p.dim, 5));
+        let costs = UnitCosts;
+        let mut meter = Meter::new(&costs);
+        for k in 0..50 {
+            core.step(k, &mut meter);
+        }
+        assert_eq!(meter.tc_unit, 50.0 * 5.0);
+        assert_eq!(meter.rounds, 100);
+        // The hub's dual couplings drive consensus: iterates agree loosely
+        // after 50 iterations.
+        assert!(core.acv() < 1.0);
+    }
+
+    #[test]
+    fn graph_core_chain_equals_chain_core_bitwise() {
+        // GGADMM degeneracy: the same core built through `on_graph` with a
+        // chain graph takes the exact same path as the chain constructor.
+        let p = problem(4, 6);
+        let chain = Chain { order: vec![0, 3, 2, 4, 1, 5] };
+        let mut a = GroupAdmmCore::new(&p, 3.0, chain.clone(), dense_links(p.dim, 6));
+        let mut b = GroupAdmmCore::on_graph(
+            &p,
+            3.0,
+            BipartiteGraph::from_chain(&chain),
+            dense_links(p.dim, 6),
+        );
+        let costs = UnitCosts;
+        let (mut ma, mut mb) = (Meter::new(&costs), Meter::new(&costs));
+        for k in 0..40 {
+            a.step(k, &mut ma);
+            b.step(k, &mut mb);
+            assert_eq!(a.thetas(), b.thetas(), "iteration {k}");
+            assert_eq!(a.objective(), b.objective());
+            assert_eq!(a.acv(), b.acv());
+        }
+        assert_eq!(ma.tc_unit, mb.tc_unit);
+        assert_eq!(ma.bits, mb.bits);
+        assert_eq!(ma.tc_energy, mb.tc_energy);
+    }
+
+    #[test]
     #[should_panic(expected = "one link policy per worker")]
     fn mismatched_link_count_rejected() {
         let p = problem(4, 4);
         let _ = GroupAdmmCore::new(&p, 1.0, Chain::sequential(4), dense_links(p.dim, 3));
+    }
+
+    #[test]
+    #[should_panic(expected = "general graph")]
+    fn chain_accessor_panics_on_graph_core() {
+        let p = problem(5, 5);
+        let g = BipartiteGraph::star(5).unwrap();
+        let core = GroupAdmmCore::on_graph(&p, 1.0, g, dense_links(p.dim, 5));
+        let _ = core.chain();
     }
 }

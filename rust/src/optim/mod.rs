@@ -1,5 +1,6 @@
 //! Optimization engines: the group-ADMM family — GADMM, D-GADMM, Q-GADMM,
-//! C-GADMM, CQ-GADMM, all thin configurations of the policy-parameterized
+//! C-GADMM, CQ-GADMM, and the bipartite-graph-generalized GGADMM, all thin
+//! configurations of the policy- and topology-parameterized
 //! [`GroupAdmmCore`] — and every baseline the paper evaluates against
 //! (standard ADMM, GD, DGD, LAG-PS/WK, Cycle-IAG, R-IAG, decentralized
 //! dual averaging), plus the shared run driver and the high-precision
@@ -18,6 +19,7 @@ pub mod dgd;
 pub mod dualavg;
 pub mod gadmm;
 pub mod gd;
+pub mod ggadmm;
 pub mod iag;
 pub mod lag;
 pub mod qgadmm;
@@ -31,6 +33,7 @@ pub use dgd::Dgd;
 pub use dualavg::DualAvg;
 pub use gadmm::Gadmm;
 pub use gd::Gd;
+pub use ggadmm::Ggadmm;
 pub use iag::{Iag, IagOrder};
 pub use lag::{Lag, LagVariant};
 pub use qgadmm::Qgadmm;

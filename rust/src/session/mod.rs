@@ -5,7 +5,8 @@
 //!
 //! * [`AlgoSpec`] — a serializable algorithm description with a registry
 //!   factory ([`AlgoSpec::build`]) reaching every [`crate::optim`] engine,
-//!   JSON round-trips, and a CLI parse path (`gadmm:rho=5`).
+//!   JSON round-trips, and a CLI parse path (`gadmm:rho=5`,
+//!   `ggadmm:rho=5,graph=rgg:radius=3.5`).
 //! * [`SweepSpec`] / [`SweepRunner`] — grid sweeps (algorithms × datasets ×
 //!   worker counts × seeds) fanned out over a scoped thread pool with
 //!   deterministic per-cell seeding.

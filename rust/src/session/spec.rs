@@ -15,11 +15,12 @@ use crate::comm::{
 use crate::config::validate_quant_bits;
 use crate::model::Problem;
 use crate::optim::{
-    Admm, Cgadmm, Cqgadmm, Dgadmm, Dgd, DualAvg, Engine, Gadmm, Gd, Iag, IagOrder, Lag,
+    Admm, Cgadmm, Cqgadmm, Dgadmm, Dgd, DualAvg, Engine, Gadmm, Gd, Ggadmm, Iag, IagOrder, Lag,
     LagVariant, Qgadmm, RechainMode,
 };
 use crate::topology::chain::Chain;
-use crate::topology::{LinkCosts, UnitCosts};
+use crate::topology::graph::GraphKind;
+use crate::topology::{LinkCosts, Placement, UnitCosts};
 use crate::util::json::Json;
 
 /// Registry defaults for the censoring knobs (see `optim::censor`): the
@@ -46,6 +47,9 @@ pub enum AlgoSpec {
     Cgadmm { rho: f64, tau: f64, mu: f64 },
     /// CQ-GADMM: censoring composed with stochastic quantization.
     Cqgadmm { rho: f64, bits: u32, tau: f64, mu: f64 },
+    /// GGADMM: group ADMM generalized to an arbitrary bipartite graph
+    /// (`graph = chain | complete | star | rgg:radius=R`).
+    Ggadmm { rho: f64, graph: GraphKind },
     /// D-GADMM: GADMM re-chaining every `tau` iterations.
     Dgadmm { rho: f64, tau: usize, mode: RechainMode },
     /// LAG-WK / LAG-PS with trigger scale ξ.
@@ -75,6 +79,10 @@ pub struct BuildCtx<'a> {
     /// derives its own initial chain from `costs` + `seed` (the shared
     /// pseudorandom code) and re-chains as it runs, so it ignores this.
     pub chain: Option<Chain>,
+    /// Physical placement for topology-building engines (GGADMM's `rgg`
+    /// graphs); `None` lets the engine derive one deterministically from
+    /// `seed`. The chain engines ignore it.
+    pub placement: Option<&'a Placement>,
 }
 
 impl AlgoSpec {
@@ -85,6 +93,7 @@ impl AlgoSpec {
             AlgoSpec::Qgadmm { .. } => "qgadmm",
             AlgoSpec::Cgadmm { .. } => "cgadmm",
             AlgoSpec::Cqgadmm { .. } => "cqgadmm",
+            AlgoSpec::Ggadmm { .. } => "ggadmm",
             AlgoSpec::Dgadmm { .. } => "dgadmm",
             AlgoSpec::Lag { .. } => "lag",
             AlgoSpec::Iag { .. } => "iag",
@@ -102,6 +111,7 @@ impl AlgoSpec {
             AlgoSpec::Qgadmm { .. } => "Q-GADMM",
             AlgoSpec::Cgadmm { .. } => "C-GADMM",
             AlgoSpec::Cqgadmm { .. } => "CQ-GADMM",
+            AlgoSpec::Ggadmm { .. } => "GGADMM",
             AlgoSpec::Dgadmm { .. } => "D-GADMM",
             AlgoSpec::Lag { variant: LagVariant::Wk, .. } => "LAG-WK",
             AlgoSpec::Lag { variant: LagVariant::Ps, .. } => "LAG-PS",
@@ -115,7 +125,9 @@ impl AlgoSpec {
     }
 
     /// Whether the engine runs on a logical chain and therefore requires an
-    /// even worker count (Algorithm 1's head/tail split).
+    /// even worker count (Algorithm 1's head/tail split). GGADMM only
+    /// inherits the requirement on its chain-degenerate topology — any
+    /// other bipartite graph accepts odd worker counts.
     pub fn needs_even_workers(&self) -> bool {
         matches!(
             self,
@@ -124,6 +136,7 @@ impl AlgoSpec {
                 | AlgoSpec::Cgadmm { .. }
                 | AlgoSpec::Cqgadmm { .. }
                 | AlgoSpec::Dgadmm { .. }
+                | AlgoSpec::Ggadmm { graph: GraphKind::Chain, .. }
         )
     }
 
@@ -148,6 +161,7 @@ impl AlgoSpec {
             AlgoSpec::Cqgadmm { rho, bits, tau, mu } => {
                 format!("cqgadmm:rho={rho},bits={bits},tau={tau},mu={mu}")
             }
+            AlgoSpec::Ggadmm { rho, graph } => format!("ggadmm:rho={rho},graph={graph}"),
             AlgoSpec::Dgadmm { rho, tau, mode } => {
                 format!("dgadmm:rho={rho},tau={tau},mode={}", mode_str(mode))
             }
@@ -164,6 +178,23 @@ impl AlgoSpec {
 
     /// Parse a CLI string: `kind[:key=value,key=value,…]`. Omitted keys take
     /// the registry defaults; unknown keys and out-of-range values error.
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use gadmm::session::AlgoSpec;
+    ///
+    /// let spec = AlgoSpec::parse("qgadmm:rho=3,bits=4").unwrap();
+    /// assert_eq!(spec, AlgoSpec::Qgadmm { rho: 3.0, bits: 4 });
+    /// assert_eq!(spec.spec_string(), "qgadmm:rho=3,bits=4");
+    ///
+    /// // The generalized-graph engine takes its topology as a knob:
+    /// let g = AlgoSpec::parse("ggadmm:rho=5,graph=rgg:radius=2.5").unwrap();
+    /// assert_eq!(g.label(), "GGADMM");
+    ///
+    /// assert!(AlgoSpec::parse("gadmm:rho=-1").is_err());
+    /// assert!(AlgoSpec::parse("ggadmm:graph=ring").is_err());
+    /// ```
     pub fn parse(s: &str) -> Result<AlgoSpec, String> {
         let s = s.trim();
         let (kind, rest) = match s.split_once(':') {
@@ -190,6 +221,11 @@ impl AlgoSpec {
                     mu,
                 }
             }
+            "ggadmm" => AlgoSpec::Ggadmm {
+                rho: params.take_rho(5.0)?,
+                graph: GraphKind::parse(&params.take_str("graph", "chain")?)
+                    .map_err(|e| format!("ggadmm: {e}"))?,
+            },
             "dgadmm" => AlgoSpec::Dgadmm {
                 rho: params.take_rho(1.0)?,
                 tau: match params.take_u64("tau", 15)? {
@@ -224,7 +260,7 @@ impl AlgoSpec {
             other => {
                 return Err(format!(
                     "unknown algorithm '{other}' (expected one of gadmm, qgadmm, cgadmm, \
-                     cqgadmm, dgadmm, lag, iag, gd, dgd, dualavg, admm)"
+                     cqgadmm, ggadmm, dgadmm, lag, iag, gd, dgd, dualavg, admm)"
                 ))
             }
         };
@@ -241,6 +277,9 @@ impl AlgoSpec {
             AlgoSpec::Cgadmm { rho, tau, mu } => j.set("rho", rho).set("tau", tau).set("mu", mu),
             AlgoSpec::Cqgadmm { rho, bits, tau, mu } => {
                 j.set("rho", rho).set("bits", bits as usize).set("tau", tau).set("mu", mu)
+            }
+            AlgoSpec::Ggadmm { rho, graph } => {
+                j.set("rho", rho).set("graph", graph.to_string().as_str())
             }
             AlgoSpec::Dgadmm { rho, tau, mode } => {
                 j.set("rho", rho).set("tau", tau).set("mode", mode_str(mode))
@@ -291,6 +330,7 @@ impl AlgoSpec {
             costs: &UNIT_COSTS,
             seed,
             chain: None,
+            placement: None,
         })
     }
 
@@ -314,6 +354,13 @@ impl AlgoSpec {
             AlgoSpec::Cqgadmm { rho, bits, tau, mu } => {
                 Box::new(Cqgadmm::with_chain(p, rho, bits, tau, mu, ctx.seed, chain()))
             }
+            AlgoSpec::Ggadmm { rho, graph } => match ctx.placement {
+                Some(pl) => match Ggadmm::with_placement(p, rho, graph, pl) {
+                    Ok(e) => Box::new(e),
+                    Err(e) => panic!("{e}"),
+                },
+                None => Box::new(Ggadmm::new(p, rho, graph, ctx.seed)),
+            },
             AlgoSpec::Dgadmm { rho, tau, mode } => {
                 Box::new(Dgadmm::new(p, rho, tau, mode, ctx.costs, ctx.seed))
             }
@@ -378,6 +425,8 @@ impl AlgoSpec {
                 tau: DEFAULT_CENSOR_TAU,
                 mu: DEFAULT_CENSOR_MU,
             },
+            AlgoSpec::Ggadmm { rho: 5.0, graph: GraphKind::Chain },
+            AlgoSpec::Ggadmm { rho: 5.0, graph: GraphKind::Rgg { radius: 3.5 } },
             AlgoSpec::Dgadmm { rho: 1.0, tau: 15, mode: RechainMode::Free },
             AlgoSpec::Lag { variant: LagVariant::Wk, xi: 0.05 },
             AlgoSpec::Lag { variant: LagVariant::Ps, xi: 0.05 },
@@ -606,8 +655,8 @@ mod tests {
             names.push(engine.name());
         }
         for expected in [
-            "GADMM(", "Q-GADMM(", "C-GADMM(", "CQ-GADMM(", "D-GADMM(", "LAG-WK", "LAG-PS",
-            "Cycle-IAG", "R-IAG", "GD", "DGD", "DualAvg", "ADMM(",
+            "GADMM(", "Q-GADMM(", "C-GADMM(", "CQ-GADMM(", "GGADMM(", "D-GADMM(", "LAG-WK",
+            "LAG-PS", "Cycle-IAG", "R-IAG", "GD", "DGD", "DualAvg", "ADMM(",
         ] {
             assert!(
                 names.iter().any(|n| n.starts_with(expected)),

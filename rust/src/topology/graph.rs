@@ -1,0 +1,619 @@
+//! Arbitrary bipartite communication graphs (GGADMM).
+//!
+//! The paper's chain is the simplest bipartite decomposition: heads at even
+//! positions, tails at odd positions, each worker coupled to ≤2 neighbours.
+//! The *Generalized* Group ADMM of the follow-up (Ben Issaid et al., 2020)
+//! keeps the two-phase head/tail alternation but runs it on **any**
+//! connected graph whose workers split into two independent sets — every
+//! edge couples one head to one tail, so each group still updates in
+//! parallel against frozen neighbour models. [`BipartiteGraph`] is that
+//! topology: explicit head/tail sets, oriented edges (one dual per edge),
+//! and per-worker adjacency lists in a deterministic order.
+//!
+//! Generators:
+//!
+//! * [`BipartiteGraph::from_chain`] — the paper's chain as a graph; the
+//!   degenerate case the refactor-equivalence tests pin bit-identically.
+//! * [`BipartiteGraph::random_geometric`] — workers within `radius` of each
+//!   other (on a [`Placement`]) are linked; a BFS 2-coloring extracts a
+//!   bipartition, same-color links are dropped, and disconnected components
+//!   are stitched through their nearest cross-color pair, so the result is
+//!   always a valid connected bipartite graph.
+//! * [`BipartiteGraph::complete_bipartite`] — every head linked to every
+//!   tail (densest coupling, most expensive per iteration).
+//! * [`BipartiteGraph::star`] — worker 0 as the single head (the
+//!   parameter-server shape expressed as a GGADMM topology).
+//!
+//! [`GraphKind`] is the serializable selector the `ggadmm` algorithm spec
+//! and the `gadmm graph` experiment driver share.
+
+use super::{LinkCosts, Placement};
+
+/// One entry of a worker's adjacency list: the neighbour on the other side
+/// of the edge, the edge's index (the dual λ_e lives per edge), and whether
+/// this worker is the edge's *origin* endpoint.
+///
+/// Every edge `(u, v)` is oriented: its dual ascends along
+/// `λ_e ← λ_e + ρ(θ̂_u − θ̂_v)`, the origin `u` sees `+λ_e` in its
+/// subproblem and the destination `v` sees `−λ_e`. The orientation is an
+/// internal bookkeeping choice (flipping it negates the dual and changes
+/// nothing observable); generators pick it deterministically.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct EdgeRef {
+    /// Physical id of the worker on the other end of the edge.
+    pub neighbor: usize,
+    /// Index of the edge in [`BipartiteGraph::edges`].
+    pub edge: usize,
+    /// Whether this worker is the edge's origin endpoint `u`.
+    pub origin: bool,
+}
+
+/// A connected bipartite communication topology over `n` physical workers.
+///
+/// Invariants (enforced by [`BipartiteGraph::new`]):
+///
+/// * `heads` and `tails` are disjoint, together cover `0..n`, and are both
+///   non-empty;
+/// * every edge joins a head to a tail (no intra-group coupling — this is
+///   what lets each group solve its subproblems in parallel);
+/// * there are no self-loops or duplicate edges;
+/// * the graph is connected (otherwise consensus cannot propagate and the
+///   components would optimize to different models).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct BipartiteGraph {
+    heads: Vec<usize>,
+    tails: Vec<usize>,
+    edges: Vec<(usize, usize)>,
+    adj: Vec<Vec<EdgeRef>>,
+}
+
+impl BipartiteGraph {
+    /// Build and validate a bipartite graph from explicit head/tail sets
+    /// and oriented edges. `heads`/`tails` also fix the deterministic order
+    /// in which the two phases visit their workers, and `edges` fixes both
+    /// the dual indexing and the order of each worker's adjacency list
+    /// (edges are appended in input order).
+    pub fn new(
+        heads: Vec<usize>,
+        tails: Vec<usize>,
+        edges: Vec<(usize, usize)>,
+    ) -> Result<BipartiteGraph, String> {
+        let n = heads.len() + tails.len();
+        if heads.is_empty() || tails.is_empty() {
+            return Err("bipartite graph needs at least one head and one tail".into());
+        }
+        // Side map + disjointness + coverage.
+        let mut side = vec![None::<bool>; n];
+        for &h in &heads {
+            if h >= n {
+                return Err(format!("head id {h} out of range for {n} workers"));
+            }
+            if side[h].is_some() {
+                return Err(format!("worker {h} listed twice in the head set"));
+            }
+            side[h] = Some(true);
+        }
+        for &t in &tails {
+            if t >= n {
+                return Err(format!("tail id {t} out of range for {n} workers"));
+            }
+            if side[t].is_some() {
+                return Err(format!("worker {t} appears in both groups (or twice)"));
+            }
+            side[t] = Some(false);
+        }
+        // Edges: head↔tail only, deduplicated, in range.
+        let mut seen = std::collections::HashSet::new();
+        let mut adj: Vec<Vec<EdgeRef>> = vec![Vec::new(); n];
+        for (e, &(u, v)) in edges.iter().enumerate() {
+            if u >= n || v >= n {
+                return Err(format!("edge ({u}, {v}) out of range for {n} workers"));
+            }
+            if u == v {
+                return Err(format!("self-loop on worker {u}"));
+            }
+            if side[u] == side[v] {
+                return Err(format!(
+                    "edge ({u}, {v}) joins two workers of the same group — \
+                     GGADMM requires head↔tail coupling only"
+                ));
+            }
+            if !seen.insert((u.min(v), u.max(v))) {
+                return Err(format!("duplicate edge ({u}, {v})"));
+            }
+            adj[u].push(EdgeRef { neighbor: v, edge: e, origin: true });
+            adj[v].push(EdgeRef { neighbor: u, edge: e, origin: false });
+        }
+        if let Some(w) = adj.iter().position(|a| a.is_empty()) {
+            return Err(format!("worker {w} has no incident edge"));
+        }
+        let g = BipartiteGraph { heads, tails, edges, adj };
+        if !g.is_connected() {
+            return Err("bipartite graph is disconnected — consensus cannot propagate".into());
+        }
+        Ok(g)
+    }
+
+    /// Number of workers.
+    pub fn len(&self) -> usize {
+        self.adj.len()
+    }
+
+    /// Whether the graph has no workers (never true for a validated graph).
+    pub fn is_empty(&self) -> bool {
+        self.adj.is_empty()
+    }
+
+    /// Number of edges (= number of dual variables).
+    pub fn num_edges(&self) -> usize {
+        self.edges.len()
+    }
+
+    /// Head workers in head-phase iteration order.
+    pub fn heads(&self) -> &[usize] {
+        &self.heads
+    }
+
+    /// Tail workers in tail-phase iteration order.
+    pub fn tails(&self) -> &[usize] {
+        &self.tails
+    }
+
+    /// Oriented edges `(u, v)`; index = dual index.
+    pub fn edges(&self) -> &[(usize, usize)] {
+        &self.edges
+    }
+
+    /// Worker `w`'s incident edges, in deterministic (edge-insertion)
+    /// order — the order its subproblem accumulates coupling terms.
+    pub fn adjacency(&self, w: usize) -> &[EdgeRef] {
+        &self.adj[w]
+    }
+
+    /// Physical ids of worker `w`'s neighbours, in adjacency order.
+    pub fn neighbors(&self, w: usize) -> Vec<usize> {
+        self.adj[w].iter().map(|e| e.neighbor).collect()
+    }
+
+    /// Degree of worker `w`.
+    pub fn degree(&self, w: usize) -> usize {
+        self.adj[w].len()
+    }
+
+    /// Whether worker `w` is in the head group.
+    pub fn is_head(&self, w: usize) -> bool {
+        self.heads.contains(&w)
+    }
+
+    /// Mean degree `2·E / N` — the x-axis of the `gadmm graph` experiment.
+    pub fn avg_degree(&self) -> f64 {
+        2.0 * self.num_edges() as f64 / self.len() as f64
+    }
+
+    /// Maximum worker degree.
+    pub fn max_degree(&self) -> usize {
+        self.adj.iter().map(Vec::len).max().unwrap_or(0)
+    }
+
+    /// Sum of link costs over all edges (graph quality metric, the analogue
+    /// of [`super::chain::Chain::total_cost`]).
+    pub fn total_cost(&self, costs: &dyn LinkCosts) -> f64 {
+        self.edges.iter().map(|&(u, v)| costs.link(u, v)).sum()
+    }
+
+    /// Average consensus violation `Σ_{(u,v)∈E} ‖θ_u − θ_v‖₁ / N` of a set
+    /// of per-worker models over this graph's edges (along a chain this is
+    /// exactly the paper's ACV). The *single* implementation both the
+    /// sequential core and the distributed coordinator report, so the two
+    /// execution paths cannot drift on the metric.
+    pub fn acv(&self, thetas: &[Vec<f64>]) -> f64 {
+        let mut total = 0.0;
+        for &(u, v) in &self.edges {
+            total += crate::linalg::vector::norm1(&crate::linalg::vector::sub(
+                &thetas[u], &thetas[v],
+            ));
+        }
+        total / self.len() as f64
+    }
+
+    fn is_connected(&self) -> bool {
+        let n = self.len();
+        let mut seen = vec![false; n];
+        let mut stack = vec![0usize];
+        seen[0] = true;
+        let mut count = 1;
+        while let Some(w) = stack.pop() {
+            for e in &self.adj[w] {
+                if !seen[e.neighbor] {
+                    seen[e.neighbor] = true;
+                    count += 1;
+                    stack.push(e.neighbor);
+                }
+            }
+        }
+        count == n
+    }
+
+    /// The paper's chain as a bipartite graph: heads at even positions,
+    /// tails at odd positions, edges oriented along the chain
+    /// (`order[p] → order[p+1]`) and indexed by position. This is the
+    /// degeneracy the refactor pins: GGADMM on `from_chain(c)` is
+    /// bit-identical to GADMM on `c`.
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use gadmm::topology::chain::Chain;
+    /// use gadmm::topology::graph::BipartiteGraph;
+    ///
+    /// let g = BipartiteGraph::from_chain(&Chain::sequential(6));
+    /// assert_eq!(g.heads(), &[0, 2, 4]);
+    /// assert_eq!(g.tails(), &[1, 3, 5]);
+    /// assert_eq!(g.num_edges(), 5);
+    /// assert_eq!(g.neighbors(2), vec![1, 3]);
+    /// ```
+    pub fn from_chain(chain: &super::chain::Chain) -> BipartiteGraph {
+        let n = chain.len();
+        assert!(n >= 2 && n % 2 == 0, "a GADMM chain has an even N ≥ 2");
+        let heads = chain.order.iter().step_by(2).copied().collect();
+        let tails = chain.order.iter().skip(1).step_by(2).copied().collect();
+        let edges = chain.order.windows(2).map(|w| (w[0], w[1])).collect();
+        BipartiteGraph::new(heads, tails, edges).expect("a valid chain is a valid graph")
+    }
+
+    /// Complete bipartite graph `K_{⌈n/2⌉,⌊n/2⌋}`: even worker ids form the
+    /// head group and every head is linked to every tail. The densest
+    /// coupling — one GGADMM iteration still costs only `N` broadcast
+    /// slots, but each broadcast must reach `~n/2` receivers, so its energy
+    /// cost is the worst link of a large neighbour set.
+    pub fn complete_bipartite(n: usize) -> Result<BipartiteGraph, String> {
+        if n < 2 {
+            return Err(format!("complete bipartite graph needs ≥ 2 workers, got {n}"));
+        }
+        let heads: Vec<usize> = (0..n).step_by(2).collect();
+        let tails: Vec<usize> = (1..n).step_by(2).collect();
+        let edges = heads
+            .iter()
+            .flat_map(|&h| tails.iter().map(move |&t| (h, t)))
+            .collect();
+        BipartiteGraph::new(heads, tails, edges)
+    }
+
+    /// Star graph: worker 0 is the single head, every other worker a tail
+    /// linked only to it — the parameter-server shape expressed as a GGADMM
+    /// topology (the hub pays one broadcast slot per iteration, each spoke
+    /// one slot back).
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use gadmm::topology::graph::BipartiteGraph;
+    ///
+    /// let g = BipartiteGraph::star(5).unwrap();
+    /// assert_eq!(g.degree(0), 4);
+    /// assert!(g.tails().iter().all(|&t| g.degree(t) == 1));
+    /// ```
+    pub fn star(n: usize) -> Result<BipartiteGraph, String> {
+        if n < 2 {
+            return Err(format!("star graph needs ≥ 2 workers, got {n}"));
+        }
+        BipartiteGraph::new(vec![0], (1..n).collect(), (1..n).map(|t| (0, t)).collect())
+    }
+
+    /// Random geometric graph over a physical [`Placement`]: workers within
+    /// `radius` of each other are linked, a BFS 2-coloring (from the lowest
+    /// worker id of each component, in id order) assigns head/tail roles,
+    /// and links joining two workers of the same color are dropped. BFS
+    /// tree links always cross colors, so each component stays connected;
+    /// disconnected components are then stitched together through their
+    /// nearest cross pair (flipping the joining component's colors when
+    /// needed), so the result is always a valid connected bipartite graph.
+    /// Deterministic in the placement — no RNG is consumed.
+    pub fn random_geometric(placement: &Placement, radius: f64) -> Result<BipartiteGraph, String> {
+        let n = placement.len();
+        if n < 2 {
+            return Err(format!("random geometric graph needs ≥ 2 workers, got {n}"));
+        }
+        if !(radius.is_finite() && radius > 0.0) {
+            return Err(format!("rgg radius must be positive and finite, got {radius}"));
+        }
+        // Proximity adjacency (symmetric, id-ordered).
+        let near: Vec<Vec<usize>> = (0..n)
+            .map(|a| (0..n).filter(|&b| b != a && placement.distance(a, b) <= radius).collect())
+            .collect();
+        // BFS 2-coloring per component; component membership in visit order.
+        let mut color = vec![None::<bool>; n];
+        let mut components: Vec<Vec<usize>> = Vec::new();
+        for root in 0..n {
+            if color[root].is_some() {
+                continue;
+            }
+            let mut comp = vec![root];
+            color[root] = Some(true);
+            let mut queue = std::collections::VecDeque::from([root]);
+            while let Some(w) = queue.pop_front() {
+                for &nb in &near[w] {
+                    if color[nb].is_none() {
+                        color[nb] = Some(!color[w].unwrap());
+                        comp.push(nb);
+                        queue.push_back(nb);
+                    }
+                }
+            }
+            components.push(comp);
+        }
+        // Stitch components: join each later component to the already-merged
+        // set through the globally nearest pair, flipping its colors so the
+        // stitch edge crosses the bipartition.
+        let mut merged: Vec<usize> = components[0].clone();
+        let mut stitches: Vec<(usize, usize)> = Vec::new();
+        for comp in &components[1..] {
+            let (&a, &b) = merged
+                .iter()
+                .flat_map(|a| comp.iter().map(move |b| (a, b)))
+                .min_by(|(a1, b1), (a2, b2)| {
+                    placement
+                        .distance(**a1, **b1)
+                        .partial_cmp(&placement.distance(**a2, **b2))
+                        .unwrap()
+                })
+                .expect("components are non-empty");
+            if color[a] == color[b] {
+                for &w in comp {
+                    color[w] = color[w].map(|c| !c);
+                }
+            }
+            stitches.push((a.min(b), a.max(b)));
+            merged.extend_from_slice(comp);
+        }
+        // Cross-color proximity edges (a < b), then the stitch edges.
+        let mut edges: Vec<(usize, usize)> = Vec::new();
+        for a in 0..n {
+            for &b in near[a].iter().filter(|&&b| b > a) {
+                if color[a] != color[b] {
+                    edges.push((a, b));
+                }
+            }
+        }
+        edges.extend(stitches);
+        let heads = (0..n).filter(|&w| color[w] == Some(true)).collect();
+        let tails = (0..n).filter(|&w| color[w] == Some(false)).collect();
+        BipartiteGraph::new(heads, tails, edges)
+    }
+}
+
+/// Serializable topology selector shared by the `ggadmm` algorithm spec and
+/// the `gadmm graph` experiment driver. Round-trips through the compact
+/// form `chain | complete | star | rgg:radius=R` (CLI strings and JSON).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum GraphKind {
+    /// The paper's chain (requires an even worker count); GGADMM on it is
+    /// bit-identical to GADMM.
+    Chain,
+    /// Complete bipartite coupling over even/odd worker ids.
+    Complete,
+    /// Worker 0 as the single head, all others spokes.
+    Star,
+    /// Random geometric graph over the physical placement, 2-colored.
+    Rgg {
+        /// Link radius in placement units (paper's Fig. 6 area is 10×10 m).
+        radius: f64,
+    },
+}
+
+/// Default RGG link radius, tuned for the paper's 10×10 m² placement: large
+/// enough that N ≥ 8 draws are connected before stitching kicks in, small
+/// enough that the average degree stays well below complete coupling.
+pub const DEFAULT_RGG_RADIUS: f64 = 3.5;
+
+impl GraphKind {
+    /// Parse the compact form: `chain`, `complete`, `star`, `rgg` (default
+    /// radius), or `rgg:radius=R`.
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use gadmm::topology::graph::GraphKind;
+    ///
+    /// assert_eq!(GraphKind::parse("star").unwrap(), GraphKind::Star);
+    /// assert_eq!(
+    ///     GraphKind::parse("rgg:radius=2.5").unwrap(),
+    ///     GraphKind::Rgg { radius: 2.5 }
+    /// );
+    /// assert!(GraphKind::parse("ring").is_err());
+    /// ```
+    pub fn parse(s: &str) -> Result<GraphKind, String> {
+        let s = s.trim();
+        match s {
+            "chain" => return Ok(GraphKind::Chain),
+            "complete" => return Ok(GraphKind::Complete),
+            "star" => return Ok(GraphKind::Star),
+            "rgg" => return Ok(GraphKind::Rgg { radius: DEFAULT_RGG_RADIUS }),
+            _ => {}
+        }
+        if let Some(rest) = s.strip_prefix("rgg:") {
+            let radius = rest
+                .strip_prefix("radius=")
+                .ok_or_else(|| format!("malformed rgg parameter '{rest}' (want radius=R)"))?
+                .parse::<f64>()
+                .map_err(|_| format!("rgg radius expects a number, got '{rest}'"))?;
+            if !(radius.is_finite() && radius > 0.0) {
+                return Err(format!("rgg radius must be positive and finite, got {radius}"));
+            }
+            return Ok(GraphKind::Rgg { radius });
+        }
+        Err(format!("unknown graph kind '{s}' (chain | complete | star | rgg[:radius=R])"))
+    }
+
+    /// Build the topology over `n` workers. `Rgg` reads the physical
+    /// `placement` (and requires `placement.len() == n`); the synthetic
+    /// kinds ignore it.
+    pub fn build(&self, n: usize, placement: &Placement) -> Result<BipartiteGraph, String> {
+        match *self {
+            GraphKind::Chain => {
+                if n < 2 || n % 2 != 0 {
+                    return Err(format!("graph=chain requires an even N ≥ 2, got {n}"));
+                }
+                Ok(BipartiteGraph::from_chain(&super::chain::Chain::sequential(n)))
+            }
+            GraphKind::Complete => BipartiteGraph::complete_bipartite(n),
+            GraphKind::Star => BipartiteGraph::star(n),
+            GraphKind::Rgg { radius } => {
+                if placement.len() != n {
+                    return Err(format!(
+                        "graph=rgg needs a placement of all {n} workers, got {}",
+                        placement.len()
+                    ));
+                }
+                BipartiteGraph::random_geometric(placement, radius)
+            }
+        }
+    }
+}
+
+impl std::fmt::Display for GraphKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match *self {
+            GraphKind::Chain => f.write_str("chain"),
+            GraphKind::Complete => f.write_str("complete"),
+            GraphKind::Star => f.write_str("star"),
+            GraphKind::Rgg { radius } => write!(f, "rgg:radius={radius}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::chain::Chain;
+    use crate::util::rng::Pcg64;
+
+    fn assert_valid(g: &BipartiteGraph) {
+        // Re-validating through the constructor checks every invariant.
+        let rebuilt = BipartiteGraph::new(
+            g.heads().to_vec(),
+            g.tails().to_vec(),
+            g.edges().to_vec(),
+        );
+        assert!(rebuilt.is_ok(), "{:?}", rebuilt.err());
+    }
+
+    #[test]
+    fn chain_graph_matches_chain_structure() {
+        let chain = Chain { order: vec![0, 3, 2, 4, 1, 5] };
+        let g = BipartiteGraph::from_chain(&chain);
+        assert_eq!(g.heads(), &[0, 2, 1]);
+        assert_eq!(g.tails(), &[3, 4, 5]);
+        assert_eq!(g.num_edges(), 5);
+        assert_eq!(g.avg_degree(), 10.0 / 6.0);
+        // Adjacency order is left-then-right along the chain.
+        assert_eq!(g.neighbors(2), vec![3, 4]);
+        assert_eq!(g.edges()[1], (3, 2));
+        // Interior worker: destination of its left edge, origin of its right.
+        let adj = g.adjacency(2);
+        assert!(!adj[0].origin && adj[1].origin);
+        assert_valid(&g);
+    }
+
+    #[test]
+    fn complete_and_star_shapes() {
+        let k = BipartiteGraph::complete_bipartite(7).unwrap();
+        assert_eq!(k.heads().len(), 4);
+        assert_eq!(k.tails().len(), 3);
+        assert_eq!(k.num_edges(), 12);
+        assert_eq!(k.max_degree(), 4);
+        assert_valid(&k);
+
+        let s = BipartiteGraph::star(6).unwrap();
+        assert_eq!(s.heads(), &[0]);
+        assert_eq!(s.num_edges(), 5);
+        assert_eq!(s.degree(0), 5);
+        assert_eq!(s.avg_degree(), 10.0 / 6.0);
+        assert_valid(&s);
+        assert!(BipartiteGraph::star(1).is_err());
+    }
+
+    #[test]
+    fn validator_rejects_malformed_graphs() {
+        // Intra-group edge.
+        let e = BipartiteGraph::new(vec![0, 1], vec![2], vec![(0, 1), (0, 2)]);
+        assert!(e.unwrap_err().contains("same group"));
+        // Duplicate edge (either orientation).
+        let e = BipartiteGraph::new(vec![0], vec![1], vec![(0, 1), (1, 0)]);
+        assert!(e.unwrap_err().contains("duplicate"));
+        // Disconnected.
+        let e = BipartiteGraph::new(vec![0, 2], vec![1, 3], vec![(0, 1), (2, 3)]);
+        assert!(e.unwrap_err().contains("disconnected"));
+        // Isolated worker.
+        let e = BipartiteGraph::new(vec![0, 2], vec![1], vec![(0, 1)]);
+        assert!(e.unwrap_err().contains("no incident edge"));
+        // Overlapping groups.
+        let e = BipartiteGraph::new(vec![0, 1], vec![1], vec![(0, 1)]);
+        assert!(e.unwrap_err().contains("both groups"));
+        // Empty side.
+        let e = BipartiteGraph::new(vec![0, 1], vec![], vec![]);
+        assert!(e.unwrap_err().contains("at least one head and one tail"));
+    }
+
+    #[test]
+    fn rgg_is_always_valid_and_connected() {
+        for seed in 0..10u64 {
+            let mut rng = Pcg64::seeded(seed);
+            let p = Placement::random(24, 10.0, &mut rng);
+            // Small radius exercises the stitching path, large the dense path.
+            for radius in [0.5, 2.0, 3.5, 8.0] {
+                let g = BipartiteGraph::random_geometric(&p, radius).unwrap();
+                assert_eq!(g.len(), 24);
+                assert_valid(&g);
+            }
+        }
+    }
+
+    #[test]
+    fn rgg_is_deterministic_in_the_placement() {
+        let mut rng = Pcg64::seeded(3);
+        let p = Placement::random(16, 10.0, &mut rng);
+        let a = BipartiteGraph::random_geometric(&p, 3.0).unwrap();
+        let b = BipartiteGraph::random_geometric(&p, 3.0).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn rgg_degree_grows_with_radius() {
+        let mut rng = Pcg64::seeded(5);
+        let p = Placement::random(24, 10.0, &mut rng);
+        let sparse = BipartiteGraph::random_geometric(&p, 2.0).unwrap();
+        let dense = BipartiteGraph::random_geometric(&p, 6.0).unwrap();
+        assert!(dense.avg_degree() > sparse.avg_degree());
+    }
+
+    #[test]
+    fn graph_kind_round_trips_and_builds() {
+        let mut rng = Pcg64::seeded(1);
+        let p = Placement::random(8, 10.0, &mut rng);
+        for kind in [
+            GraphKind::Chain,
+            GraphKind::Complete,
+            GraphKind::Star,
+            GraphKind::Rgg { radius: 2.5 },
+        ] {
+            let s = kind.to_string();
+            assert_eq!(GraphKind::parse(&s).unwrap(), kind, "{s}");
+            let g = kind.build(8, &p).unwrap();
+            assert_eq!(g.len(), 8);
+        }
+        assert_eq!(
+            GraphKind::parse("rgg").unwrap(),
+            GraphKind::Rgg { radius: DEFAULT_RGG_RADIUS }
+        );
+        assert!(GraphKind::parse("rgg:radius=-1").is_err());
+        assert!(GraphKind::parse("rgg:r=2").is_err());
+        assert!(GraphKind::parse("mesh").is_err());
+        // chain needs an even N; the others do not.
+        assert!(GraphKind::Chain.build(5, &p).is_err());
+        let mut rng5 = Pcg64::seeded(2);
+        let p5 = Placement::random(5, 10.0, &mut rng5);
+        assert!(GraphKind::Star.build(5, &p5).is_ok());
+        assert!(GraphKind::Complete.build(5, &p5).is_ok());
+    }
+}

@@ -9,10 +9,15 @@
 //! * [`chain`] — the Appendix-D decentralized logical-chain construction
 //!   (pseudorandom head set + greedy nearest-neighbour chaining), used by
 //!   GADMM at startup and by D-GADMM at every re-chain.
+//! * [`graph`] — arbitrary bipartite communication graphs (the GGADMM
+//!   generalization): explicit head/tail sets, per-edge duals, validated
+//!   connectivity, and generators (chain-as-graph, 2-colored random
+//!   geometric graphs over a [`Placement`], complete bipartite, star).
 //! * [`LinkCosts`] — the cost oracle the communication meter consults;
 //!   unit-cost and energy-model implementations.
 
 pub mod chain;
+pub mod graph;
 
 use crate::util::rng::Pcg64;
 

@@ -189,3 +189,26 @@ fn rho_sensitivity_depends_on_data_correlation() {
         "correlated data should favour strong coupling: rho=7 took {ks}, rho=0.1 took {kw}"
     );
 }
+
+#[test]
+fn ggadmm_converges_on_a_24_worker_random_geometric_graph() {
+    // The acceptance-scale GGADMM run: N=24 workers on a 2-colored random
+    // geometric graph over the paper's 10×10 m² area, to the paper's 1e-4
+    // objective-error target (the `gadmm graph` driver's RGG row).
+    use gadmm::optim::Ggadmm;
+    use gadmm::topology::graph::GraphKind;
+
+    let ds = synthetic::linreg(480, 12, &mut Pcg64::seeded(21));
+    let p = Problem::from_dataset(&ds, 24);
+    let placement = Placement::random(24, 10.0, &mut Pcg64::seeded(5));
+    let mut e = Ggadmm::with_placement(&p, 5.0, GraphKind::Rgg { radius: 3.5 }, &placement)
+        .expect("stitched RGG is always valid");
+    assert!(e.graph().len() == 24 && e.graph().num_edges() >= 23);
+    let costs = EnergyCostModel::new(&placement, placement.central_worker());
+    let trace = run(&mut e, &p, &costs, &RunOptions::with_target(1e-4, 100_000));
+    let k = trace.iters_to_target().unwrap_or_else(|| {
+        panic!("GGADMM on the N=24 RGG missed 1e-4 (final err {:.3e})", trace.final_error())
+    });
+    // N broadcast slots per iteration, on any topology.
+    assert_eq!(trace.tc_to_target(), Some((k * 24) as f64));
+}

@@ -1,8 +1,10 @@
 //! Property tests (randomized, via util::prop) for the paper's invariants:
 //! chain validity, Lyapunov monotonicity (Theorem 2), tail dual
-//! feasibility (eq. 20), primal-residual decay, TC accounting, and the
+//! feasibility (eq. 20), primal-residual decay, TC accounting, the
 //! Q-GADMM quantizer (roundtrip error bound, stochastic-rounding
-//! unbiasedness, range shrinkage, bit-exact accounting).
+//! unbiasedness, range shrinkage, bit-exact accounting), and the
+//! bipartite-graph generalization (RGG 2-coloring validity, GGADMM's
+//! chain degeneracy, star-graph metering closed form).
 
 use gadmm::comm::{
     CensorSchedule, Meter, QuantizedMsg, StochasticQuantizer, RANGE_OVERHEAD_BITS,
@@ -10,9 +12,10 @@ use gadmm::comm::{
 use gadmm::data::synthetic;
 use gadmm::linalg::vector as vec_ops;
 use gadmm::model::Problem;
-use gadmm::optim::{solver, Cqgadmm, Engine, Gadmm, Qgadmm};
+use gadmm::optim::{run, solver, Cqgadmm, Engine, Gadmm, Ggadmm, Qgadmm, RunOptions};
 use gadmm::prop_assert;
 use gadmm::topology::chain::{self, Chain};
+use gadmm::topology::graph::BipartiteGraph;
 use gadmm::topology::{EnergyCostModel, Placement, UnitCosts};
 use gadmm::util::prop::check;
 use gadmm::util::rng::Pcg64;
@@ -575,6 +578,142 @@ fn prop_objective_error_never_negative_and_f_star_optimal() {
                 at_probe >= p.f_star - 1e-9 * (1.0 + p.f_star.abs()),
                 "objective at probe {at_probe} below F* {}",
                 p.f_star
+            );
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_rgg_two_coloring_is_valid_bipartition() {
+    // Whatever the placement and radius — dense, sparse, or fully
+    // disconnected before stitching — the random-geometric generator must
+    // deliver a valid connected bipartite graph over all N workers.
+    check(
+        "rgg-bipartition",
+        811,
+        60,
+        |rng| {
+            let n = rng.range(2, 33);
+            let placement = Placement::random(n, 10.0, rng);
+            let radius = rng.uniform(0.3, 12.0);
+            (placement, radius)
+        },
+        |(placement, radius)| {
+            let g = BipartiteGraph::random_geometric(placement, *radius)
+                .map_err(|e| format!("generator failed: {e}"))?;
+            prop_assert!(g.len() == placement.len(), "worker count mismatch");
+            prop_assert!(
+                g.heads().len() + g.tails().len() == g.len(),
+                "bipartition does not cover all workers"
+            );
+            // Re-validating through the constructor re-checks every
+            // invariant: head↔tail-only edges, no duplicates, coverage,
+            // degree ≥ 1, connectivity.
+            let rebuilt = BipartiteGraph::new(
+                g.heads().to_vec(),
+                g.tails().to_vec(),
+                g.edges().to_vec(),
+            );
+            prop_assert!(rebuilt.is_ok(), "invalid graph: {:?}", rebuilt.err());
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_ggadmm_on_chain_graph_is_trace_identical_to_gadmm() {
+    // The chain-degeneracy contract of the graph generalization, on
+    // *randomized* chain orders and problems: GGADMM on `from_chain(c)`
+    // must take GADMM-on-`c`'s exact path (bitwise measurements, identical
+    // convergence point). Engine names differ by design and are normalized
+    // before the comparison.
+    check(
+        "ggadmm-chain-degeneracy",
+        823,
+        10,
+        |rng| {
+            let n = 2 * rng.range(2, 6);
+            let data_seed = rng.next_u64();
+            // Random chain: a random permutation of the physical workers.
+            let order = rng.sample_indices(n, n);
+            let rho = rng.uniform(1.0, 6.0);
+            (n, data_seed, order, rho)
+        },
+        |(n, data_seed, order, rho)| {
+            let ds = synthetic::linreg(20 * n, 6, &mut Pcg64::seeded(*data_seed));
+            let p = Problem::from_dataset(&ds, *n);
+            let chain = Chain { order: order.clone() };
+            prop_assert!(chain.is_valid_permutation(), "generator produced a bad chain");
+            let opts = RunOptions::with_target(1e-6, 4_000);
+            let costs = UnitCosts;
+            let mut g = run(&mut Gadmm::with_chain(&p, *rho, chain.clone()), &p, &costs, &opts);
+            let mut gg = run(
+                &mut Ggadmm::on_graph(&p, *rho, BipartiteGraph::from_chain(&chain), "chain".into()),
+                &p,
+                &costs,
+                &opts,
+            );
+            g.algorithm = "group-admm".into();
+            gg.algorithm = "group-admm".into();
+            prop_assert!(
+                gg.same_path(&g),
+                "GGADMM on the chain graph diverged from GADMM (N={n}, rho={rho})"
+            );
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_star_graph_meter_matches_closed_form() {
+    // Per-edge metering on a star: every iteration bills exactly N
+    // broadcast slots of 64·d bits over 2 rounds, and the energy is the
+    // hub's worst spoke link plus every spoke's link back to the hub.
+    check(
+        "star-meter-closed-form",
+        829,
+        20,
+        |rng| (rng.range(3, 13), rng.next_u64()),
+        |(n, seed)| {
+            let mut rng = Pcg64::seeded(*seed);
+            let placement = Placement::random(*n, 10.0, &mut rng);
+            let costs = EnergyCostModel::new(&placement, 0);
+            let ds = synthetic::linreg(20 * n, 4, &mut rng);
+            let p = Problem::from_dataset(&ds, *n);
+            let mut e = Ggadmm::on_graph(
+                &p,
+                2.0,
+                BipartiteGraph::star(*n).map_err(|e| e.to_string())?,
+                "star".into(),
+            );
+            let mut meter = Meter::new(&costs);
+            let iters = 7usize;
+            for k in 0..iters {
+                e.step(k, &mut meter);
+            }
+            prop_assert!(
+                meter.tc_unit == (iters * n) as f64,
+                "unit TC {} != N slots per iteration {}",
+                meter.tc_unit,
+                iters * n
+            );
+            prop_assert!(meter.rounds == 2 * iters, "rounds {} != 2k", meter.rounds);
+            prop_assert!(meter.censored == 0, "dense links must never censor");
+            let expect_bits = (iters * n) as f64 * 64.0 * p.dim as f64;
+            prop_assert!(
+                meter.bits == expect_bits,
+                "bits {} != closed form {expect_bits}",
+                meter.bits
+            );
+            use gadmm::topology::LinkCosts;
+            let hub = (1..*n).map(|t| costs.link(0, t)).fold(0.0, f64::max);
+            let spokes: f64 = (1..*n).map(|t| costs.link(t, 0)).sum();
+            let expect_energy = iters as f64 * (hub + spokes);
+            prop_assert!(
+                (meter.tc_energy - expect_energy).abs() <= 1e-9 * (1.0 + expect_energy),
+                "energy {} != closed form {expect_energy}",
+                meter.tc_energy
             );
             Ok(())
         },

@@ -508,3 +508,35 @@ fn dgadmm_announced_rechain_trace_is_bit_identical_to_legacy() {
     );
     assert!(new.same_path(&old), "announced-mode D-GADMM diverged from the frozen engine");
 }
+
+/// Chain-degeneracy pin of the bipartite-graph generalization: the
+/// `ggadmm:graph=chain` spec must take GADMM's exact path — bitwise
+/// measurements, identical convergence point — on the paper's linreg and
+/// logreg configs. Engine names differ by design ("GGADMM(rho=…,
+/// graph=chain)" vs "GADMM(rho=…)"), so they are normalized before the
+/// `Trace::same_path` comparison; every measured field must agree exactly.
+fn assert_ggadmm_chain_matches_gadmm(p: &Problem, rho: f64, opts: &RunOptions) {
+    let costs = UnitCosts;
+    let mut g = run(&mut Gadmm::new(p, rho), p, &costs, opts);
+    let spec = gadmm::session::AlgoSpec::parse(&format!("ggadmm:rho={rho},graph=chain"))
+        .expect("valid ggadmm spec");
+    let mut gg = run(&mut *spec.build(p, 1), p, &costs, opts);
+    g.algorithm = "group-admm".into();
+    gg.algorithm = "group-admm".into();
+    assert!(gg.same_path(&g), "GGADMM(graph=chain) diverged from GADMM");
+    assert!(gg.iters_to_target().is_some());
+}
+
+#[test]
+fn ggadmm_chain_paper_linreg_trace_is_bit_identical_to_gadmm() {
+    let ds = DatasetKind::SyntheticLinreg.build(1);
+    let p = Problem::from_dataset(&ds, 6);
+    assert_ggadmm_chain_matches_gadmm(&p, 5.0, &RunOptions::with_target(1e-3, 20_000));
+}
+
+#[test]
+fn ggadmm_chain_paper_logreg_trace_is_bit_identical_to_gadmm() {
+    let ds = synthetic::logreg(120, 6, &mut Pcg64::seeded(2));
+    let p = Problem::from_dataset(&ds, 4);
+    assert_ggadmm_chain_matches_gadmm(&p, 0.3, &RunOptions::with_target(1e-4, 6_000));
+}
