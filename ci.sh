@@ -47,8 +47,59 @@ echo "==> smoke: gadmm graph --quick (GGADMM bipartite-graph topology sweep)"
 ./target/release/gadmm graph --quick --out target/ci-graph
 test -f target/ci-graph/graph.json
 
-echo "==> smoke: gadmm bench --quick (comm perf harness -> BENCH_comm.json)"
-./target/release/gadmm bench --quick --out target/ci-bench
-test -f target/ci-bench/BENCH_comm.json
+echo "==> smoke: gadmm bench --quick --threads 2 (perf harness -> BENCH_comm.json + BENCH_par.json)"
+# Gate: BENCH_par.json must record bit-identical pooled execution (hard,
+# deterministic — exit 3, never retried: a flaky identity failure is a
+# data race, the exact bug class this gate exists to catch) and a pool
+# speedup >= 1.0x on >= 2-core machines (wall clock — exit 1, which a
+# noisy runner can flake, so that half alone gets one re-run).
+bench_gate() {
+  ./target/release/gadmm bench --quick --threads 2 --out target/ci-bench || return 3
+  test -f target/ci-bench/BENCH_comm.json || return 3
+  test -f target/ci-bench/BENCH_par.json || return 3
+  python3 - <<'EOF'
+import json, os, sys
+
+def hard(cond, msg):  # deterministic failure: never retried
+    if not cond:
+        print("bench-par gate (deterministic): %s" % msg)
+        sys.exit(3)
+
+with open("target/ci-bench/BENCH_par.json") as f:
+    report = json.load(f)
+
+hard(report["experiment"] == "bench_par", "wrong experiment %r" % report["experiment"])
+hard(len(report["rows"]) == 6, "expected all six group engines, got %d" % len(report["rows"]))
+
+# Hard invariant on any machine: the pool must be bit-identical to serial.
+bad = [r["spec"] for r in report["rows"] if not r["identical"]]
+hard(not bad, "pooled execution diverged from serial for: %s" % bad)
+
+# Speed gate: with >= 2 cores the quick cell (logreg Newton subproblems)
+# must realize a pool win on at least one engine. On a single-core runner
+# a pool cannot win by construction, so only the identity gate applies.
+try:
+    cores = len(os.sched_getaffinity(0))  # respects CPU pinning
+except AttributeError:
+    cores = os.cpu_count() or 1
+speedup = report["speedup_max"]
+if cores >= 2:
+    if speedup < 1.0:
+        print("bench-par gate (wall-clock): speedup %.3f < 1.0 on a %d-core machine" % (speedup, cores))
+        sys.exit(1)
+    print("bench-par gate OK: speedup_max %.2fx on %d cores, all rows bit-identical" % (speedup, cores))
+else:
+    print("bench-par gate OK (single core: identity checked, speedup %.2fx informational)" % speedup)
+EOF
+}
+rc=0
+bench_gate || rc=$?
+if [ "$rc" -eq 1 ]; then
+  echo "==> bench-par wall-clock gate failed once (timing is noisy); re-running"
+  bench_gate
+elif [ "$rc" -ne 0 ]; then
+  echo "==> bench-par deterministic gate failed — not retrying"
+  exit "$rc"
+fi
 
 echo "CI OK"

@@ -66,6 +66,32 @@ pub fn charge_graph_phase(
     }
 }
 
+/// Per-phase compute-seconds accumulator: how much solve time one run
+/// spent in the head phase, the tail phase, and the dual ascent.
+///
+/// Filled by [`crate::optim::GroupAdmmCore::step`] (other engines leave it
+/// zero) and surfaced on [`crate::metrics::Trace::phase`], this is the
+/// attribution behind `gadmm bench`'s `BENCH_par.json` columns — it shows
+/// *where* a pooled execution backend buys its wall-clock speedup. Pure
+/// measurement: excluded from `Trace::same_path`, which compares only
+/// deterministic quantities.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct PhaseClock {
+    /// Seconds spent solving head-group subproblems (paper eqs. 11–12).
+    pub head_seconds: f64,
+    /// Seconds spent solving tail-group subproblems (eqs. 13–14).
+    pub tail_seconds: f64,
+    /// Seconds spent on the per-edge dual ascent (eq. 15).
+    pub dual_seconds: f64,
+}
+
+impl PhaseClock {
+    /// Total attributed compute seconds across the three phases.
+    pub fn total_seconds(&self) -> f64 {
+        self.head_seconds + self.tail_seconds + self.dual_seconds
+    }
+}
+
 /// Accumulating cost meter. Unit TC counts transmission slots; energy TC
 /// weighs each slot by the provided [`LinkCosts`] model; `bits` sums the
 /// exact payload sizes on the wire.
@@ -94,6 +120,10 @@ pub struct Meter<'a> {
     pub uplink_counts: Vec<usize>,
     /// Count of server broadcast slots.
     pub server_broadcasts: usize,
+    /// Compute-seconds attribution per group-ADMM phase (zero for engines
+    /// without the head/tail/dual structure). Wall-clock measurement only —
+    /// never part of the deterministic trace comparison.
+    pub phase: PhaseClock,
 }
 
 impl<'a> Meter<'a> {
@@ -109,6 +139,7 @@ impl<'a> Meter<'a> {
             censored: 0,
             uplink_counts: Vec::new(),
             server_broadcasts: 0,
+            phase: PhaseClock::default(),
         }
     }
 

@@ -143,7 +143,7 @@ pub fn train_graph_spec<'p>(
         ));
     }
     let (rho, links, name) = match *spec {
-        AlgoSpec::Ggadmm { rho, graph: kind } => (
+        AlgoSpec::Ggadmm { rho, graph: kind, .. } => (
             rho,
             dense_links(problem.dim, n),
             format!("GGADMM-dist(rho={rho},graph={kind})"),
@@ -178,8 +178,8 @@ pub fn train_with<'p>(
     // Delegate to the single wire factory (AlgoSpec::chain_wire) so this
     // legacy entry point can never drift from the spec-driven path.
     let (spec, seed) = match quant {
-        Some(q) => (AlgoSpec::Qgadmm { rho, bits: q.bits }, q.seed),
-        None => (AlgoSpec::Gadmm { rho }, 0),
+        Some(q) => (AlgoSpec::Qgadmm { rho, bits: q.bits, threads: 1 }, q.seed),
+        None => (AlgoSpec::Gadmm { rho, threads: 1 }, 0),
     };
     train_spec(problem, solvers, &spec, seed, chain, costs, opts)
         .expect("GADMM/Q-GADMM are static-chain specs")
@@ -437,7 +437,7 @@ mod tests {
         let p = Problem::from_dataset(&ds, 5);
         let opts = RunOptions::with_target(1e-5, 4000);
         let costs = UnitCosts;
-        let spec = AlgoSpec::Ggadmm { rho: 3.0, graph: GraphKind::Star };
+        let spec = AlgoSpec::Ggadmm { rho: 3.0, graph: GraphKind::Star, threads: 1 };
         let graph = GraphKind::Star.build(5, &crate::topology::Placement::random(
             5, 10.0, &mut Pcg64::seeded(9),
         )).unwrap();
@@ -470,7 +470,7 @@ mod tests {
         let opts = RunOptions::with_target(1e-4, 100);
         let costs = UnitCosts;
         let graph = BipartiteGraph::star(6).unwrap();
-        let spec = AlgoSpec::Ggadmm { rho: 1.0, graph: GraphKind::Star };
+        let spec = AlgoSpec::Ggadmm { rho: 1.0, graph: GraphKind::Star, threads: 1 };
         let err = train_graph_spec(&p, native_solvers(&p), &spec, 1, graph, &costs, &opts)
             .unwrap_err();
         assert!(err.contains("graph has 6 workers"), "{err}");

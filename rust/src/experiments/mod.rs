@@ -16,8 +16,11 @@
 //!   bits-to-target (the CQ-GADMM follow-up's evaluation)
 //! * [`graph::run`]    — GGADMM topology sweep: bits/TC/energy to target
 //!   vs. average degree (chain, star, RGG radii, complete bipartite)
-//! * [`bench::run`]    — the perf-trajectory grid behind `gadmm bench`
-//!   (`BENCH_comm.json`)
+//! * [`bench::run`]    — the comm perf-trajectory grid behind
+//!   `gadmm bench` (`BENCH_comm.json`)
+//! * [`bench::run_par`] — the serial-vs-pool execution-backend grid
+//!   (`BENCH_par.json`: wall clocks, speedup, per-phase compute seconds,
+//!   bit-identity check; see `docs/PERFORMANCE.md`)
 
 pub mod bench;
 pub mod censor;

@@ -15,7 +15,8 @@
 //! gadmm qgadmm [--workers 24] [--rho 5] [--bits 4,8] [--target 1e-4]
 //! gadmm censor [--workers 24] [--rho 5] [--bits 8] [--tau 1] [--mu 0.93]
 //! gadmm graph  [--workers 24] [--rho 5] [--radius 2.5,3.5,5] [--quick]
-//! gadmm bench  [--quick] [--out results/]   — writes BENCH_comm.json
+//! gadmm bench  [--quick] [--threads K] [--out results/]
+//!              — writes BENCH_comm.json + BENCH_par.json (serial vs pool)
 //! gadmm all   — every table and figure, reports under results/
 //! ```
 
@@ -255,9 +256,27 @@ fn dispatch(sub: &str, args: &Args) -> Result<(), String> {
             Ok(())
         }
         "bench" => {
-            let out = bench::run(args.flag("quick"), args.get_u64("seed", 1)?);
+            let quick = args.flag("quick");
+            let seed = args.get_u64("seed", 1)?;
+            // Pool width for the serial-vs-pool grid (default: half the
+            // cores, at least 2 — leaves the serial column an unloaded
+            // core to run on). Validated up front: a bad value must not
+            // discard the comm grid's minutes of work below.
+            let default_threads = (SweepRunner::default_threads() / 2).clamp(2, 4);
+            let threads =
+                gadmm::session::validate_exec_threads(args.get_u64("threads", default_threads as u64)?)
+                    .map_err(|e| format!("--threads: {e}"))?;
+            if threads < 2 {
+                return Err("--threads must be ≥ 2 (the grid already has a serial column)".into());
+            }
+            let out = bench::run(quick, seed);
             println!("{}", out.rendered);
             let path = write_report(&out_dir(args), "BENCH_comm", &out.report)
+                .map_err(|e| e.to_string())?;
+            println!("report: {}", path.display());
+            let par = bench::run_par(quick, seed, threads);
+            println!("{}", par.rendered);
+            let path = write_report(&out_dir(args), "BENCH_par", &par.report)
                 .map_err(|e| e.to_string())?;
             println!("report: {}", path.display());
             Ok(())
@@ -342,10 +361,20 @@ fn cmd_train(args: &Args) -> Result<(), String> {
             parsed
         }
         None => match cfg.quant_bits {
-            Some(bits) => AlgoSpec::Qgadmm { rho: cfg.rho, bits },
-            None => AlgoSpec::Gadmm { rho: cfg.rho },
+            Some(bits) => AlgoSpec::Qgadmm { rho: cfg.rho, bits, threads: 1 },
+            None => AlgoSpec::Gadmm { rho: cfg.rho, threads: 1 },
         },
     };
+    if spec.threads() > 1 {
+        // The width knob drives the *sequential* engines' pool (sweeps,
+        // figures, bench); the coordinator below is already one thread per
+        // worker, so the knob is accepted but has nothing left to speed up.
+        log::info!(
+            "spec requests threads={} but `train` runs the distributed coordinator, \
+             which is already one-thread-per-worker; the knob is ignored here",
+            spec.threads()
+        );
+    }
     // Even-N is a chain requirement; GGADMM on a non-chain graph accepts
     // any N ≥ 2, so the check follows the spec.
     cfg.validate_for(spec.needs_even_workers())?;
@@ -486,18 +515,20 @@ fn cmd_sweep(args: &Args) -> Result<(), String> {
         // end-to-end (parse → build → run → report) on every CI run.
         SweepSpec {
             algos: vec![
-                AlgoSpec::Gadmm { rho: 5.0 },
+                AlgoSpec::Gadmm { rho: 5.0, threads: 1 },
                 AlgoSpec::Gd,
                 AlgoSpec::Cgadmm {
                     rho: 5.0,
                     tau: gadmm::session::DEFAULT_CENSOR_TAU,
                     mu: gadmm::session::DEFAULT_CENSOR_MU,
+                    threads: 1,
                 },
                 AlgoSpec::Cqgadmm {
                     rho: 5.0,
                     bits: 8,
                     tau: gadmm::session::DEFAULT_CENSOR_TAU,
                     mu: gadmm::session::DEFAULT_CENSOR_MU,
+                    threads: 1,
                 },
             ],
             datasets: vec![DatasetKind::SyntheticLinreg],
@@ -582,7 +613,10 @@ subcommands:
   graph    GGADMM topology sweep: bits/TC/energy to target vs avg degree
            (chain, star, rgg radii, complete bipartite)
            --workers N --rho R --radius R1,R2 --target T (--quick for CI)
-  bench    paper-scale perf grid -> BENCH_comm.json (--quick for CI)
+  bench    paper-scale perf grids -> BENCH_comm.json + BENCH_par.json
+           (--threads K sets the pooled column's width; --quick for CI;
+            every group engine accepts 'threads=K' in its spec string,
+            e.g. --algos 'gadmm:rho=5,threads=4' — bit-identical, faster)
   all      every table/figure above (train/sweep/bench excluded);
            JSON reports under results/
 

@@ -2,6 +2,7 @@
 //! communication cost (TC), total running time, and average consensus
 //! violation (ACV). Includes CSV/JSONL writers and empirical CDFs (Fig. 6).
 
+use crate::comm::PhaseClock;
 use crate::util::json::Json;
 use std::io::Write;
 use std::time::Duration;
@@ -72,6 +73,11 @@ pub struct Trace {
     /// First iteration index at which `obj_err <= target` (if reached).
     pub converged_at: Option<usize>,
     pub target: f64,
+    /// Compute-seconds attribution per group-ADMM phase over the whole run
+    /// (zero for engines without the head/tail/dual structure). Wall-clock
+    /// measurement only — excluded from [`Trace::same_path`], like
+    /// [`IterRecord::elapsed`].
+    pub phase: PhaseClock,
 }
 
 impl Trace {
@@ -82,6 +88,7 @@ impl Trace {
             records: Vec::new(),
             converged_at: None,
             target,
+            phase: PhaseClock::default(),
         }
     }
 
@@ -200,6 +207,13 @@ impl Trace {
                 self.bits_to_target().map(Json::Num).unwrap_or(Json::Null),
             )
             .set("final_error", self.final_error())
+            .set(
+                "phase_seconds",
+                Json::obj()
+                    .set("head", self.phase.head_seconds)
+                    .set("tail", self.phase.tail_seconds)
+                    .set("dual", self.phase.dual_seconds),
+            )
             .set("curve", Json::Arr(curve))
     }
 }

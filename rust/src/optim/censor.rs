@@ -67,6 +67,11 @@ impl<'a> Cgadmm<'a> {
         self.core.rho
     }
 
+    /// See [`GroupAdmmCore::set_threads`] — bit-identical at any width.
+    pub fn set_threads(&mut self, threads: usize) {
+        self.core.set_threads(threads);
+    }
+
     pub fn chain(&self) -> &Chain {
         self.core.chain()
     }
@@ -149,6 +154,11 @@ impl<'a> Cqgadmm<'a> {
 
     pub fn rho(&self) -> f64 {
         self.core.rho
+    }
+
+    /// See [`GroupAdmmCore::set_threads`] — bit-identical at any width.
+    pub fn set_threads(&mut self, threads: usize) {
+        self.core.set_threads(threads);
     }
 
     pub fn chain(&self) -> &Chain {

@@ -44,13 +44,26 @@
 //! Metering: each phase charges one broadcast slot per *transmitting*
 //! worker, billed with the exact payload bits the policy put on the wire
 //! (energy: the worst link of its neighbour set); censored slots charge
-//! nothing and tick [`Meter::censored`].
+//! nothing and tick [`Meter::censored`]. Each phase's compute time is
+//! accumulated on [`Meter::phase`] so benchmarks can attribute seconds to
+//! the head solves, tail solves, and dual ascent separately.
+//!
+//! **Execution backend.** The phases really are parallel — the bipartition
+//! guarantees no same-phase coupling — and the core realizes that through
+//! its [`Exec`] backend ([`GroupAdmmCore::set_threads`]): each phase fans
+//! its workers (and the dual ascent its edges) out across a persistent
+//! thread pool, with every task writing only its own `theta`/`hat`/link/
+//! dual slots. Parallel execution is therefore bit-identical to serial by
+//! construction (pinned for every engine in `rust/tests/exec_par.rs`; see
+//! `docs/adr/005-exec-backend.md`).
 
+use super::exec::{Exec, SlotSlice, SlotWriter};
 use crate::comm::{LinkPolicy, Meter, Msg};
 use crate::linalg::vector as vec_ops;
 use crate::model::Problem;
 use crate::topology::chain::Chain;
 use crate::topology::graph::BipartiteGraph;
+use std::time::Instant;
 
 pub struct GroupAdmmCore<'a> {
     problem: &'a Problem,
@@ -89,8 +102,14 @@ pub struct GroupAdmmCore<'a> {
     /// Payload bits of this iteration's broadcast per worker; `None` =
     /// censored. Written in the update phases, billed in `meter_phase`.
     sent: Vec<Option<f64>>,
-    /// Scratch for the subproblem's linear term.
-    q: Vec<f64>,
+    /// Execution backend for the head/tail/dual phases (serial by
+    /// default); see [`GroupAdmmCore::set_threads`].
+    exec: Exec,
+    /// Serial-path scratch for the subproblem's linear term (zeroed per
+    /// worker inside the phase task). Pool lanes allocate their own
+    /// scratch per dispatch instead — the serial default stays at zero
+    /// per-iteration allocations, as before the backend seam.
+    scratch: Vec<f64>,
 }
 
 impl<'a> GroupAdmmCore<'a> {
@@ -154,8 +173,25 @@ impl<'a> GroupAdmmCore<'a> {
             lambda_slot,
             links,
             sent: vec![None; n],
-            q: vec![0.0; d],
+            exec: Exec::Serial,
+            scratch: vec![0.0; d],
         }
+    }
+
+    /// Fan the head phase, tail phase, and per-edge dual ascent out across
+    /// `threads` persistent pool workers (1 restores serial execution).
+    /// Every task writes only its own worker/dual slots, so any width
+    /// takes the exact same arithmetic path — traces, meters, and pins are
+    /// unchanged (see `rust/tests/exec_par.rs`).
+    pub fn set_threads(&mut self, threads: usize) {
+        if threads != self.exec.threads() {
+            self.exec = Exec::new(threads);
+        }
+    }
+
+    /// Current execution width (1 = serial).
+    pub fn threads(&self) -> usize {
+        self.exec.threads()
     }
 
     /// The logical chain. Panics on a general-graph core — use
@@ -194,70 +230,148 @@ impl<'a> GroupAdmmCore<'a> {
         self.links[0].message_bits()
     }
 
-    /// One full iteration `k`: head phase, tail phase, dual ascent.
+    /// One full iteration `k`: head phase, tail phase, dual ascent. Each
+    /// stage runs on the configured [`Exec`] backend and accumulates its
+    /// compute seconds on [`Meter::phase`].
     pub fn step(&mut self, k: usize, meter: &mut Meter) {
-        // Head phase (parallel in a real deployment; order-independent here
-        // because heads only read tail publics — the bipartition guarantees
-        // no head neighbours a head).
-        for i in 0..self.graph.heads().len() {
-            let w = self.graph.heads()[i];
-            self.update_worker(w, k);
-        }
+        // Head phase (genuinely parallel: heads only read tail publics —
+        // the bipartition guarantees no head neighbours a head — and each
+        // head writes only its own slots).
+        let t0 = Instant::now();
+        self.run_phase(true, k);
+        meter.phase.head_seconds += t0.elapsed().as_secs_f64();
         self.meter_phase(meter, true);
         // Tail phase — uses the fresh head publics.
-        for i in 0..self.graph.tails().len() {
-            let w = self.graph.tails()[i];
-            self.update_worker(w, k);
-        }
+        let t1 = Instant::now();
+        self.run_phase(false, k);
+        meter.phase.tail_seconds += t1.elapsed().as_secs_f64();
         self.meter_phase(meter, false);
         // Dual ascent (eq. 15 per edge) on the *public* models, local to
         // each endpoint: both ends of every link hold the same θ̂ values,
         // so their mirrored duals stay identical without communication.
-        let d = self.problem.dim;
-        for e in 0..self.graph.num_edges() {
-            let (u, v) = self.graph.edges()[e];
-            let s = self.lambda_slot[e];
-            for j in 0..d {
-                self.lambda[s][j] += self.rho_eff * (self.hat[u][j] - self.hat[v][j]);
-            }
+        // Parallel over edges: every edge owns a distinct dual slot and
+        // only reads the (now frozen) public models.
+        let t2 = Instant::now();
+        {
+            let GroupAdmmCore {
+                problem, rho_eff, graph, lambda, lambda_slot, hat, exec, ..
+            } = self;
+            let d = problem.dim;
+            let rho_eff = *rho_eff;
+            let graph: &BipartiteGraph = graph;
+            let lambda_slot: &[usize] = lambda_slot;
+            let hat: &[Vec<f64>] = hat;
+            let duals = SlotWriter::new(lambda);
+            exec.for_each_indexed(graph.num_edges(), || (), |_, e| {
+                let (u, v) = graph.edges()[e];
+                // SAFETY: dual slots are distinct per edge (edge index on a
+                // general graph; distinct left-endpoint workers on a
+                // chain), so each task writes a unique slot and nothing
+                // else aliases `lambda` during this region.
+                let lam = unsafe { duals.slot_mut(lambda_slot[e]) };
+                for j in 0..d {
+                    lam[j] += rho_eff * (hat[u][j] - hat[v][j]);
+                }
+            });
         }
+        meter.phase.dual_seconds += t2.elapsed().as_secs_f64();
     }
 
-    /// Solve worker `w`'s subproblem against the public models of its
-    /// neighbour set, then offer the new model to the worker's link
-    /// policy. The subproblem's linear term accumulates, per incident
-    /// edge, `±λ_e − ρ·θ̂_nb` (`+λ` for the edge's origin endpoint, `−λ`
-    /// for the destination) in adjacency order; the quadratic coefficient
-    /// is `c = ρ·deg(w)`. On a chain this is exactly the paper's
-    /// `q = −λ_{p−1} + λ_p − ρ(θ̂_left + θ̂_right)`.
-    fn update_worker(&mut self, w: usize, k: usize) {
-        let rho_eff = self.rho_eff;
-        let d = self.problem.dim;
-        let GroupAdmmCore { graph, lambda, lambda_slot, hat, q, .. } = self;
-        q.iter_mut().for_each(|x| *x = 0.0);
-        let mut couplings = 0.0;
-        for er in graph.adjacency(w) {
-            let lam = &lambda[lambda_slot[er.edge]];
-            let nb = &hat[er.neighbor];
-            if er.origin {
-                for j in 0..d {
-                    q[j] += lam[j] - rho_eff * nb[j];
+    /// Solve one group's subproblems against the public models of their
+    /// neighbour sets, then offer each new model to its worker's link
+    /// policy. Per worker, the subproblem's linear term accumulates, per
+    /// incident edge, `±λ_e − ρ·θ̂_nb` (`+λ` for the edge's origin
+    /// endpoint, `−λ` for the destination) in adjacency order; the
+    /// quadratic coefficient is `c = ρ·deg(w)`. On a chain this is exactly
+    /// the paper's `q = −λ_{p−1} + λ_p − ρ(θ̂_left + θ̂_right)`.
+    ///
+    /// Runs on the configured [`Exec`] backend. Tasks are independent by
+    /// the bipartite invariant — a phase's workers are pairwise
+    /// non-adjacent and listed at most once, so every `theta`/`hat`/link/
+    /// `sent` slot has exactly one writer and every `hat` read targets the
+    /// *other* group — which makes any execution width take the same
+    /// arithmetic path as the serial loop.
+    fn run_phase(&mut self, head_phase: bool, k: usize) {
+        let GroupAdmmCore {
+            problem,
+            rho_eff,
+            graph,
+            lambda,
+            lambda_slot,
+            theta,
+            hat,
+            links,
+            sent,
+            exec,
+            scratch,
+            ..
+        } = self;
+        let d = problem.dim;
+        let rho_eff = *rho_eff;
+        let problem: &Problem = *problem;
+        let graph: &BipartiteGraph = graph;
+        let lambda: &[Vec<f64>] = lambda;
+        let lambda_slot: &[usize] = lambda_slot;
+        let group: &[usize] = if head_phase { graph.heads() } else { graph.tails() };
+        // `hat` is the one array read *and* written within a phase (own
+        // slot written, other group's slots read), so it rides the
+        // read+write SlotSlice; everything else is write-only per task —
+        // SlotWriter, which is what lets the `Send`-but-not-`Sync` link
+        // policies cross threads.
+        let theta = SlotWriter::new(theta);
+        let hat = SlotSlice::new(hat);
+        let links = SlotWriter::new(links);
+        let sent = SlotWriter::new(sent);
+        let task = |q: &mut Vec<f64>, i: usize| {
+            let w = group[i];
+            // SAFETY: `group` lists each worker exactly once
+            // (BipartiteGraph validates the head/tail partition), so
+            // slot `w` of theta/hat/links/sent is written by this task
+            // alone; every neighbour is in the *other* group (edges
+            // only join head↔tail), so the `hat` reads below never
+            // alias a slot written in this phase.
+            unsafe {
+                let theta_w = theta.slot_mut(w);
+                let hat_w = hat.slot_mut(w);
+                let link_w = links.slot_mut(w);
+                let sent_w = sent.slot_mut(w);
+                q.iter_mut().for_each(|x| *x = 0.0);
+                let mut couplings = 0.0;
+                for er in graph.adjacency(w) {
+                    let lam = &lambda[lambda_slot[er.edge]];
+                    let nb: &Vec<f64> = hat.slot(er.neighbor);
+                    if er.origin {
+                        for j in 0..d {
+                            q[j] += lam[j] - rho_eff * nb[j];
+                        }
+                    } else {
+                        for j in 0..d {
+                            q[j] += -lam[j] - rho_eff * nb[j];
+                        }
+                    }
+                    couplings += 1.0;
                 }
-            } else {
-                for j in 0..d {
-                    q[j] += -lam[j] - rho_eff * nb[j];
-                }
+                let c = rho_eff * couplings;
+                *theta_w = problem.losses[w].prox_argmin(q, c, theta_w);
+                let msg = link_w.transmit(k, theta_w);
+                *sent_w = match &msg {
+                    Msg::Skip => None,
+                    m => Some(m.payload_bits()),
+                };
+                hat_w.copy_from_slice(link_w.public_view());
             }
-            couplings += 1.0;
-        }
-        let c = rho_eff * couplings;
-        self.theta[w] = self.problem.losses[w].prox_argmin(&self.q, c, &self.theta[w]);
-        let msg = self.links[w].transmit(k, &self.theta[w]);
-        self.sent[w] = match &msg {
-            Msg::Skip => None,
-            m => Some(m.payload_bits()),
         };
-        self.hat[w].copy_from_slice(self.links[w].public_view());
+        if matches!(&*exec, Exec::Serial) {
+            // Serial fast path: reuse the engine-owned scratch, so the
+            // default backend performs zero per-phase allocations exactly
+            // like the pre-seam loop. The task zeroes the scratch per
+            // worker, so this is bit-identical to a fresh buffer.
+            for i in 0..group.len() {
+                task(&mut *scratch, i);
+            }
+        } else {
+            exec.for_each_indexed(group.len(), || vec![0.0; d], &task);
+        }
     }
 
     /// Charge one phase's transmissions through the shared structural

@@ -129,6 +129,13 @@ impl<'a> Dgadmm<'a> {
         self.frozen
     }
 
+    /// See [`crate::optim::GroupAdmmCore::set_threads`] — forwarded to the
+    /// inner chain core; bit-identical at any width (re-chaining is chain
+    /// bookkeeping and untouched by the execution backend).
+    pub fn set_threads(&mut self, threads: usize) {
+        self.inner.set_threads(threads);
+    }
+
     /// Builder-style override of the dual handling across re-chains.
     pub fn with_dual_handling(mut self, duals: DualHandling) -> Self {
         self.duals = duals;

@@ -1,0 +1,568 @@
+//! Execution backends for the group-ADMM core: serial, or fanned out
+//! across a persistent worker pool.
+//!
+//! GADMM's central structural claim (paper §3, eqs. 10–12) is that all
+//! workers inside the head group — and then all workers inside the tail
+//! group — solve their local subproblems *simultaneously*: the bipartition
+//! guarantees that no two same-phase workers are coupled, so each phase is
+//! embarrassingly parallel. [`Exec`] is the seam that realizes this on
+//! real hardware. [`crate::optim::GroupAdmmCore`] hands each phase to its
+//! `Exec` as an indexed task set in which **every task writes only its own
+//! worker/dual slots** (through [`SlotSlice`] / [`SlotWriter`]) and reads
+//! only state no same-phase task writes. Under that discipline the result is
+//! *bit-identical* at any thread count — parallelism changes wall-clock
+//! and nothing else, which is exactly the invariant the sweep runner
+//! already pins for cell-level parallelism (`session/sweep.rs`) and
+//! `rust/tests/exec_par.rs` pins for this intra-group backend.
+//!
+//! [`Exec::Pool`] keeps its `std::thread` workers alive across calls
+//! (jobs travel over a channel) instead of spawning a fresh
+//! `thread::scope` per phase: a phase runs three dispatches per iteration
+//! and tens of thousands of iterations per run, so per-phase thread spawn
+//! (~tens of µs each) would dwarf the subproblem work it tries to
+//! parallelize. See `docs/adr/005-exec-backend.md` for the full
+//! determinism argument and the nested-parallelism rule under
+//! [`crate::session::SweepRunner`].
+//!
+//! # Examples
+//!
+//! ```
+//! use gadmm::optim::exec::{Exec, SlotSlice};
+//!
+//! let exec = Exec::new(4); // 1 ⇒ Exec::Serial, >1 ⇒ pooled
+//! let mut out = vec![0u64; 16];
+//! let slots = SlotSlice::new(&mut out);
+//! exec.for_each_indexed(16, || (), |_, i| {
+//!     // SAFETY: each index is visited exactly once, so every slot has a
+//!     // single writer and no concurrent reader.
+//!     unsafe { *slots.slot_mut(i) = (i * i) as u64 };
+//! });
+//! assert_eq!(out[5], 25);
+//! assert_eq!(exec.threads(), 4);
+//! ```
+
+use std::any::Any;
+use std::marker::PhantomData;
+use std::ops::Range;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// A type-erased job the pool's worker threads execute.
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// How [`crate::optim::GroupAdmmCore`] executes the workers of one phase.
+///
+/// `Serial` is the reference implementation: ascending index order on the
+/// calling thread. `Pool` splits the index range into one contiguous chunk
+/// per pool thread. Because the core's tasks have disjoint write sets the
+/// two backends produce bit-identical state, so `Serial` doubles as the
+/// oracle the equivalence tests compare against.
+pub enum Exec {
+    /// Run tasks inline, in ascending index order.
+    Serial,
+    /// Fan tasks out across a persistent [`ThreadPool`].
+    Pool(ThreadPool),
+}
+
+impl Exec {
+    /// `threads <= 1` builds [`Exec::Serial`]; anything larger builds a
+    /// persistent pool of exactly `threads` workers.
+    pub fn new(threads: usize) -> Exec {
+        if threads <= 1 {
+            Exec::Serial
+        } else {
+            Exec::Pool(ThreadPool::new(threads))
+        }
+    }
+
+    /// Execution width: 1 for serial, the worker count for a pool.
+    pub fn threads(&self) -> usize {
+        match self {
+            Exec::Serial => 1,
+            Exec::Pool(pool) => pool.threads(),
+        }
+    }
+
+    /// Run `f(&mut scratch, i)` for every `i` in `0..count`. `init` builds
+    /// one scratch value per executing lane (serial: one; pool: one per
+    /// occupied chunk), so per-task allocations can be hoisted without
+    /// sharing mutable state across lanes.
+    ///
+    /// The caller must guarantee the tasks are order-independent — in the
+    /// core's use every task writes only its own slots — and then the
+    /// result is identical at any thread count by construction.
+    pub fn for_each_indexed<S, I, F>(&self, count: usize, init: I, f: F)
+    where
+        I: Fn() -> S + Sync,
+        F: Fn(&mut S, usize) + Sync,
+    {
+        let serial = |init: &I, f: &F| {
+            let mut scratch = init();
+            for i in 0..count {
+                f(&mut scratch, i);
+            }
+        };
+        match self {
+            Exec::Serial => serial(&init, &f),
+            Exec::Pool(pool) => {
+                let lanes = pool.threads().min(count);
+                if lanes <= 1 {
+                    // One task (or none): the pool would only add dispatch
+                    // latency, and the answer is identical either way.
+                    serial(&init, &f);
+                    return;
+                }
+                let init_ref = &init;
+                let f_ref = &f;
+                let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = chunk_ranges(count, lanes)
+                    .into_iter()
+                    .map(|range| {
+                        Box::new(move || {
+                            let mut scratch = init_ref();
+                            for i in range {
+                                f_ref(&mut scratch, i);
+                            }
+                        }) as Box<dyn FnOnce() + Send + '_>
+                    })
+                    .collect();
+                pool.run_scoped(tasks);
+            }
+        }
+    }
+}
+
+impl std::fmt::Debug for Exec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Exec::Serial => f.write_str("Exec::Serial"),
+            Exec::Pool(pool) => write!(f, "Exec::Pool({})", pool.threads()),
+        }
+    }
+}
+
+/// Split `0..count` into `lanes` contiguous, near-equal, non-empty ranges
+/// (the first `count % lanes` chunks carry one extra index).
+fn chunk_ranges(count: usize, lanes: usize) -> Vec<Range<usize>> {
+    let base = count / lanes;
+    let extra = count % lanes;
+    let mut out = Vec::with_capacity(lanes);
+    let mut start = 0;
+    for lane in 0..lanes {
+        let len = base + usize::from(lane < extra);
+        if len == 0 {
+            continue;
+        }
+        out.push(start..start + len);
+        start += len;
+    }
+    out
+}
+
+/// A persistent pool of `std::thread` workers executing borrowed task
+/// batches to completion.
+///
+/// Workers are spawned once and live until the pool is dropped; each
+/// [`ThreadPool::run_scoped`] call sends its tasks over a shared channel
+/// and blocks on a completion latch, so tasks may borrow from the caller's
+/// stack even though the worker threads outlive the call (the borrow
+/// provably outlives every execution). A task that panics is caught on the
+/// worker, the batch still drains, and the panic is re-raised on the
+/// caller — the pool itself never wedges.
+pub struct ThreadPool {
+    sender: Option<Sender<Job>>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl ThreadPool {
+    /// Spawn `threads` (≥ 1) persistent workers.
+    pub fn new(threads: usize) -> ThreadPool {
+        assert!(threads >= 1, "a thread pool needs at least one worker");
+        let (sender, receiver) = channel::<Job>();
+        let receiver = Arc::new(Mutex::new(receiver));
+        let workers = (0..threads)
+            .map(|_| {
+                let rx: Arc<Mutex<Receiver<Job>>> = Arc::clone(&receiver);
+                std::thread::spawn(move || loop {
+                    // Hold the queue lock only for the pop, not the run.
+                    let job = match rx.lock().expect("pool queue poisoned").recv() {
+                        Ok(job) => job,
+                        Err(_) => break, // pool dropped: drain and exit
+                    };
+                    job();
+                })
+            })
+            .collect();
+        ThreadPool {
+            sender: Some(sender),
+            workers,
+        }
+    }
+
+    /// Number of worker threads.
+    pub fn threads(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Execute every task and block until all of them finish. Tasks may
+    /// borrow caller state (`'env`): the latch guarantees none of them is
+    /// still running — or queued — when this returns. If any task
+    /// panicked, the batch still drains and the *first* panic's original
+    /// payload is re-raised here, so the caller sees the real diagnostic
+    /// (a subproblem assertion message, not a generic pool error).
+    pub fn run_scoped<'env>(&self, tasks: Vec<Box<dyn FnOnce() + Send + 'env>>) {
+        if tasks.is_empty() {
+            return;
+        }
+        let latch = Arc::new(Latch::new(tasks.len()));
+        let sender = self.sender.as_ref().expect("pool is shut down");
+        for task in tasks {
+            let task_latch = Arc::clone(&latch);
+            let guarded: Box<dyn FnOnce() + Send + 'env> = Box::new(move || {
+                // Contain a panicking task so the worker thread survives
+                // and the latch always reaches zero — otherwise one bad
+                // subproblem would deadlock the dispatcher forever. The
+                // payload is kept for the dispatcher to re-raise.
+                if let Err(payload) = catch_unwind(AssertUnwindSafe(task)) {
+                    let mut slot =
+                        task_latch.panic_payload.lock().expect("latch poisoned");
+                    slot.get_or_insert(payload);
+                }
+                task_latch.done();
+            });
+            // SAFETY: `Job` only erases the `'env` lifetime. `run_scoped`
+            // blocks on `latch.wait()` until every submitted job has
+            // finished executing (panic included, via the catch above), and
+            // workers drop each job immediately after running it, so no
+            // borrow inside `task` is ever used after this function
+            // returns.
+            let job: Job = unsafe {
+                std::mem::transmute::<Box<dyn FnOnce() + Send + 'env>, Job>(guarded)
+            };
+            sender.send(job).expect("pool workers exited prematurely");
+        }
+        latch.wait();
+        let payload = latch.panic_payload.lock().expect("latch poisoned").take();
+        if let Some(payload) = payload {
+            resume_unwind(payload);
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        // Closing the channel lets every worker drain and exit its loop.
+        self.sender.take();
+        for worker in self.workers.drain(..) {
+            let _ = worker.join();
+        }
+    }
+}
+
+/// Countdown latch: `done()` from the workers, `wait()` on the caller,
+/// plus the first panicking task's payload for the caller to re-raise.
+struct Latch {
+    remaining: Mutex<usize>,
+    all_done: Condvar,
+    panic_payload: Mutex<Option<Box<dyn Any + Send>>>,
+}
+
+impl Latch {
+    fn new(count: usize) -> Latch {
+        Latch {
+            remaining: Mutex::new(count),
+            all_done: Condvar::new(),
+            panic_payload: Mutex::new(None),
+        }
+    }
+
+    fn done(&self) {
+        let mut remaining = self.remaining.lock().expect("latch poisoned");
+        *remaining -= 1;
+        if *remaining == 0 {
+            self.all_done.notify_all();
+        }
+    }
+
+    fn wait(&self) {
+        let mut remaining = self.remaining.lock().expect("latch poisoned");
+        while *remaining > 0 {
+            remaining = self.all_done.wait(remaining).expect("latch poisoned");
+        }
+    }
+}
+
+/// A slice view that hands out *disjoint* `&mut` slots — plus shared
+/// reads of the untouched slots — to concurrent tasks: the "each worker
+/// owns its slot" primitive behind the core's parallel phases.
+///
+/// Rust's borrow checker cannot see that the head phase writes only head
+/// slots while reading only tail slots (the index sets come from a
+/// runtime-validated [`crate::topology::graph::BipartiteGraph`]), so the
+/// disjointness is asserted by the caller through the two `unsafe`
+/// accessors instead. Both accessor contracts are per parallel region: a
+/// slot is either written by exactly one task or only read.
+///
+/// Sharing this view across threads requires `T: Send + Sync` — `slot`
+/// grants shared cross-thread reads. For write-only state (the core's
+/// link policies are `Send` but not `Sync`) use [`SlotWriter`], which
+/// needs only `T: Send`.
+pub struct SlotSlice<'a, T> {
+    ptr: *mut T,
+    len: usize,
+    _borrow: PhantomData<&'a mut [T]>,
+}
+
+// SAFETY: SlotSlice hands out &mut T to exactly one task per slot (needs
+// T: Send to move exclusive access across threads) and — under the
+// callers' disjointness contract — &T to any number of tasks, which is
+// shared access from multiple threads and therefore additionally needs
+// T: Sync (a `Cell`-like Send + !Sync payload would otherwise race
+// through `slot`).
+unsafe impl<T: Send> Send for SlotSlice<'_, T> {}
+unsafe impl<T: Send + Sync> Sync for SlotSlice<'_, T> {}
+
+impl<'a, T> SlotSlice<'a, T> {
+    /// Take exclusive ownership of `slice` for the view's lifetime.
+    pub fn new(slice: &'a mut [T]) -> SlotSlice<'a, T> {
+        SlotSlice {
+            ptr: slice.as_mut_ptr(),
+            len: slice.len(),
+            _borrow: PhantomData,
+        }
+    }
+
+    /// Number of slots.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// Whether the view is empty.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Exclusive access to slot `i`.
+    ///
+    /// # Safety
+    ///
+    /// For the duration of the current parallel region, slot `i` must be
+    /// accessed by *this call's task only* — no other task may read or
+    /// write it through any accessor.
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn slot_mut(&self, i: usize) -> &mut T {
+        assert!(i < self.len, "slot {i} out of bounds for {} slots", self.len);
+        &mut *self.ptr.add(i)
+    }
+
+    /// Shared access to slot `i`.
+    ///
+    /// # Safety
+    ///
+    /// No task may concurrently hold `slot_mut(i)` during the current
+    /// parallel region.
+    pub unsafe fn slot(&self, i: usize) -> &T {
+        assert!(i < self.len, "slot {i} out of bounds for {} slots", self.len);
+        &*self.ptr.add(i)
+    }
+}
+
+/// Write-only counterpart of [`SlotSlice`]: hands out *only* exclusive
+/// slot access, so sharing it across threads needs just `T: Send` — no
+/// cross-thread shared reads are possible through it. Morally this is an
+/// `&mut [T]` pre-split across tasks (the same reason `&mut [T]` itself
+/// is `Send` for `T: Send`), which is what lets the core distribute its
+/// `Box<dyn LinkPolicy>` slots (`Send` but not `Sync`).
+pub struct SlotWriter<'a, T> {
+    ptr: *mut T,
+    len: usize,
+    _borrow: PhantomData<&'a mut [T]>,
+}
+
+// SAFETY: the only accessor is `slot_mut`, and its contract gives every
+// slot at most one accessing task per parallel region — exclusive access
+// handed across threads, which `T: Send` is exactly the license for.
+unsafe impl<T: Send> Send for SlotWriter<'_, T> {}
+unsafe impl<T: Send> Sync for SlotWriter<'_, T> {}
+
+impl<'a, T> SlotWriter<'a, T> {
+    /// Take exclusive ownership of `slice` for the view's lifetime.
+    pub fn new(slice: &'a mut [T]) -> SlotWriter<'a, T> {
+        SlotWriter {
+            ptr: slice.as_mut_ptr(),
+            len: slice.len(),
+            _borrow: PhantomData,
+        }
+    }
+
+    /// Number of slots.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// Whether the view is empty.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Exclusive access to slot `i`.
+    ///
+    /// # Safety
+    ///
+    /// For the duration of the current parallel region, slot `i` must be
+    /// accessed by *this call's task only*.
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn slot_mut(&self, i: usize) -> &mut T {
+        assert!(i < self.len, "slot {i} out of bounds for {} slots", self.len);
+        &mut *self.ptr.add(i)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn chunks_partition_exactly() {
+        for count in [0usize, 1, 2, 5, 7, 16, 33] {
+            for lanes in [1usize, 2, 3, 4, 8] {
+                let ranges = chunk_ranges(count, lanes);
+                let mut covered = Vec::new();
+                for r in &ranges {
+                    assert!(!r.is_empty());
+                    covered.extend(r.clone());
+                }
+                let expect: Vec<usize> = (0..count).collect();
+                assert_eq!(covered, expect, "count={count} lanes={lanes}");
+                assert!(ranges.len() <= lanes);
+                // Balanced: sizes differ by at most one.
+                if let (Some(max), Some(min)) = (
+                    ranges.iter().map(|r| r.len()).max(),
+                    ranges.iter().map(|r| r.len()).min(),
+                ) {
+                    assert!(max - min <= 1);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn serial_and_pool_fill_identically() {
+        for threads in [1usize, 2, 3, 8] {
+            let exec = Exec::new(threads);
+            assert_eq!(exec.threads(), threads.max(1));
+            let mut out = vec![0usize; 37];
+            let slots = SlotSlice::new(&mut out);
+            exec.for_each_indexed(37, || (), |_, i| unsafe {
+                *slots.slot_mut(i) = i * 3 + 1;
+            });
+            let expect: Vec<usize> = (0..37).map(|i| i * 3 + 1).collect();
+            assert_eq!(out, expect, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn scratch_is_per_lane_and_reused_within_a_lane() {
+        // Each lane gets exactly one scratch; tasks in a chunk share it.
+        let inits = AtomicUsize::new(0);
+        let exec = Exec::new(4);
+        let mut out = vec![0usize; 16];
+        let slots = SlotSlice::new(&mut out);
+        exec.for_each_indexed(
+            16,
+            || {
+                inits.fetch_add(1, Ordering::Relaxed);
+                0usize
+            },
+            |scratch, i| {
+                *scratch += 1;
+                unsafe { *slots.slot_mut(i) = *scratch };
+            },
+        );
+        assert!(inits.load(Ordering::Relaxed) <= 4);
+        // 16 indices over 4 lanes of 4: within each chunk the scratch
+        // counts 1..=4.
+        for chunk in out.chunks(4) {
+            assert_eq!(chunk, &[1, 2, 3, 4]);
+        }
+    }
+
+    #[test]
+    fn pool_survives_reuse_across_many_batches() {
+        let exec = Exec::new(3);
+        let total = AtomicUsize::new(0);
+        for _ in 0..100 {
+            exec.for_each_indexed(10, || (), |_, _| {
+                total.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        assert_eq!(total.load(Ordering::Relaxed), 1000);
+    }
+
+    #[test]
+    fn empty_and_tiny_batches_are_fine() {
+        let exec = Exec::new(4);
+        exec.for_each_indexed(0, || (), |_, _| panic!("no tasks to run"));
+        let hits = AtomicUsize::new(0);
+        exec.for_each_indexed(1, || (), |_, i| {
+            assert_eq!(i, 0);
+            hits.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn task_panic_propagates_and_pool_stays_usable() {
+        let pool = ThreadPool::new(2);
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            pool.run_scoped(vec![
+                Box::new(|| panic!("boom")) as Box<dyn FnOnce() + Send>,
+                Box::new(|| ()) as Box<dyn FnOnce() + Send>,
+            ]);
+        }));
+        // The original payload reaches the caller, not a generic wrapper.
+        let payload = result.expect_err("panic must propagate to the caller");
+        assert_eq!(payload.downcast_ref::<&str>(), Some(&"boom"));
+        // The batch drained; the pool still runs new work.
+        let ok = AtomicUsize::new(0);
+        pool.run_scoped(vec![Box::new(|| {
+            ok.fetch_add(1, Ordering::Relaxed);
+        }) as Box<dyn FnOnce() + Send + '_>]);
+        assert_eq!(ok.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn slot_writer_distributes_exclusive_slots() {
+        // SlotWriter carries Send-but-not-Sync payloads across the pool
+        // (the core's Box<dyn LinkPolicy> case, modeled here with Cell —
+        // Send + !Sync — which SlotSlice's bounds rightly reject).
+        use std::cell::Cell;
+        let exec = Exec::new(3);
+        let mut out: Vec<Cell<usize>> = (0..12).map(|_| Cell::new(0)).collect();
+        let slots = SlotWriter::new(&mut out);
+        assert_eq!(slots.len(), 12);
+        assert!(!slots.is_empty());
+        exec.for_each_indexed(12, || (), |_, i| unsafe {
+            slot_set(&slots, i);
+        });
+        let got: Vec<usize> = out.iter().map(Cell::get).collect();
+        let expect: Vec<usize> = (0..12).map(|i| i + 7).collect();
+        assert_eq!(got, expect);
+    }
+
+    /// Helper keeping the unsafe slot write in one audited place.
+    unsafe fn slot_set(slots: &SlotWriter<'_, std::cell::Cell<usize>>, i: usize) {
+        slots.slot_mut(i).set(i + 7);
+    }
+
+    #[test]
+    fn exec_new_one_is_serial() {
+        assert!(matches!(Exec::new(0), Exec::Serial));
+        assert!(matches!(Exec::new(1), Exec::Serial));
+        assert!(matches!(Exec::new(2), Exec::Pool(_)));
+        assert_eq!(format!("{:?}", Exec::new(2)), "Exec::Pool(2)");
+        assert_eq!(format!("{:?}", Exec::Serial), "Exec::Serial");
+    }
+}

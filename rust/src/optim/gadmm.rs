@@ -47,6 +47,13 @@ impl<'a> Gadmm<'a> {
         self.core.rho
     }
 
+    /// Fan the head/tail/dual phases out across `threads` pool workers
+    /// (see [`GroupAdmmCore::set_threads`]); 1 restores serial execution.
+    /// Any width is bit-identical — the `threads=K` spec knob routes here.
+    pub fn set_threads(&mut self, threads: usize) {
+        self.core.set_threads(threads);
+    }
+
     pub fn chain(&self) -> &Chain {
         self.core.chain()
     }

@@ -94,6 +94,11 @@ impl<'a> Ggadmm<'a> {
         self.core.rho
     }
 
+    /// See [`GroupAdmmCore::set_threads`] — bit-identical at any width.
+    pub fn set_threads(&mut self, threads: usize) {
+        self.core.set_threads(threads);
+    }
+
     /// The communication topology.
     pub fn graph(&self) -> &BipartiteGraph {
         self.core.graph()

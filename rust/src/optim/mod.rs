@@ -17,6 +17,7 @@ pub mod core;
 pub mod dgadmm;
 pub mod dgd;
 pub mod dualavg;
+pub mod exec;
 pub mod gadmm;
 pub mod gd;
 pub mod ggadmm;
@@ -26,6 +27,7 @@ pub mod qgadmm;
 pub mod solver;
 
 pub use self::core::GroupAdmmCore;
+pub use exec::Exec;
 pub use admm::Admm;
 pub use censor::{Cgadmm, Cqgadmm};
 pub use dgadmm::{Dgadmm, DualHandling, RechainMode};
@@ -204,6 +206,10 @@ pub fn run_with_sinks<E: Engine + ?Sized>(
             break;
         }
     }
+    // Surface the meter's per-phase compute attribution (zero for engines
+    // without the group-ADMM phase structure) before the sinks see the
+    // finished trace.
+    trace.phase = meter.phase;
     for sink in sinks.iter_mut() {
         if let Err(e) = sink.finish(&trace) {
             log::warn!("trace sink failed to finish: {e}");

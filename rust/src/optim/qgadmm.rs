@@ -63,6 +63,11 @@ impl<'a> Qgadmm<'a> {
         self.core.rho
     }
 
+    /// See [`GroupAdmmCore::set_threads`] — bit-identical at any width.
+    pub fn set_threads(&mut self, threads: usize) {
+        self.core.set_threads(threads);
+    }
+
     pub fn chain(&self) -> &Chain {
         self.core.chain()
     }

@@ -6,7 +6,8 @@
 //! * [`AlgoSpec`] — a serializable algorithm description with a registry
 //!   factory ([`AlgoSpec::build`]) reaching every [`crate::optim`] engine,
 //!   JSON round-trips, and a CLI parse path (`gadmm:rho=5`,
-//!   `ggadmm:rho=5,graph=rgg:radius=3.5`).
+//!   `ggadmm:rho=5,graph=rgg:radius=3.5`; every group engine also takes
+//!   the wall-clock-only execution width `threads=K`).
 //! * [`SweepSpec`] / [`SweepRunner`] — grid sweeps (algorithms × datasets ×
 //!   worker counts × seeds) fanned out over a scoped thread pool with
 //!   deterministic per-cell seeding.
@@ -22,5 +23,7 @@ pub mod spec;
 pub mod sweep;
 
 pub use sink::{CsvSink, JsonReportSink, MemorySink, TraceSink};
-pub use spec::{AlgoSpec, BuildCtx, ChainWire, DEFAULT_CENSOR_MU, DEFAULT_CENSOR_TAU};
+pub use spec::{
+    validate_exec_threads, AlgoSpec, BuildCtx, ChainWire, DEFAULT_CENSOR_MU, DEFAULT_CENSOR_TAU,
+};
 pub use sweep::{CellKey, SweepCell, SweepOutput, SweepRunner, SweepSpec};

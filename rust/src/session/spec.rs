@@ -29,6 +29,20 @@ use crate::util::json::Json;
 pub const DEFAULT_CENSOR_TAU: f64 = 1.0;
 pub const DEFAULT_CENSOR_MU: f64 = 0.93;
 
+/// Single source of truth for the execution-width domain (`threads=K`
+/// spec key, `gadmm bench --threads`): 1 means serial, and the cap only
+/// guards against typo'd widths spawning absurd pools — any accepted
+/// value is result-identical (`rust/tests/exec_par.rs`). Widening to
+/// `u64` first so oversized values are rejected rather than truncated,
+/// mirroring `config::validate_quant_bits`.
+pub fn validate_exec_threads(threads: u64) -> Result<usize, String> {
+    match threads {
+        0 => Err("threads must be ≥ 1 (1 = serial)".into()),
+        t if t > 1024 => Err(format!("threads must be ≤ 1024, got {t}")),
+        t => Ok(t as usize),
+    }
+}
+
 /// Default engine costs for the context-free [`AlgoSpec::build`] path.
 static UNIT_COSTS: UnitCosts = UnitCosts;
 
@@ -39,19 +53,23 @@ static UNIT_COSTS: UnitCosts = UnitCosts;
 /// every grid cell of a sweep.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum AlgoSpec {
-    /// Chain GADMM (Algorithm 1) with penalty ρ.
-    Gadmm { rho: f64 },
+    /// Chain GADMM (Algorithm 1) with penalty ρ. `threads` is the
+    /// intra-group execution width (the paper's "heads update in
+    /// parallel", realized on a pool — results are bit-identical at any
+    /// width, see `docs/adr/005-exec-backend.md`); every group engine
+    /// carries it and 1 means serial.
+    Gadmm { rho: f64, threads: usize },
     /// Q-GADMM: GADMM with stochastically quantized model exchange.
-    Qgadmm { rho: f64, bits: u32 },
+    Qgadmm { rho: f64, bits: u32, threads: usize },
     /// C-GADMM: GADMM with slots censored under the threshold `τ·μ^k`.
-    Cgadmm { rho: f64, tau: f64, mu: f64 },
+    Cgadmm { rho: f64, tau: f64, mu: f64, threads: usize },
     /// CQ-GADMM: censoring composed with stochastic quantization.
-    Cqgadmm { rho: f64, bits: u32, tau: f64, mu: f64 },
+    Cqgadmm { rho: f64, bits: u32, tau: f64, mu: f64, threads: usize },
     /// GGADMM: group ADMM generalized to an arbitrary bipartite graph
     /// (`graph = chain | complete | star | rgg:radius=R`).
-    Ggadmm { rho: f64, graph: GraphKind },
+    Ggadmm { rho: f64, graph: GraphKind, threads: usize },
     /// D-GADMM: GADMM re-chaining every `tau` iterations.
-    Dgadmm { rho: f64, tau: usize, mode: RechainMode },
+    Dgadmm { rho: f64, tau: usize, mode: RechainMode, threads: usize },
     /// LAG-WK / LAG-PS with trigger scale ξ.
     Lag { variant: LagVariant, xi: f64 },
     /// Cycle-IAG / R-IAG.
@@ -152,18 +170,35 @@ impl AlgoSpec {
         )
     }
 
-    /// Canonical CLI string; `parse` inverts this exactly.
+    /// Canonical CLI string; `parse` inverts this exactly. The execution
+    /// width is serialized as a trailing `,threads=K` only when K > 1, so
+    /// serial specs keep their historical canonical strings.
     pub fn spec_string(&self) -> String {
         match *self {
-            AlgoSpec::Gadmm { rho } => format!("gadmm:rho={rho}"),
-            AlgoSpec::Qgadmm { rho, bits } => format!("qgadmm:rho={rho},bits={bits}"),
-            AlgoSpec::Cgadmm { rho, tau, mu } => format!("cgadmm:rho={rho},tau={tau},mu={mu}"),
-            AlgoSpec::Cqgadmm { rho, bits, tau, mu } => {
-                format!("cqgadmm:rho={rho},bits={bits},tau={tau},mu={mu}")
+            AlgoSpec::Gadmm { rho, threads } => {
+                format!("gadmm:rho={rho}{}", threads_suffix(threads))
             }
-            AlgoSpec::Ggadmm { rho, graph } => format!("ggadmm:rho={rho},graph={graph}"),
-            AlgoSpec::Dgadmm { rho, tau, mode } => {
-                format!("dgadmm:rho={rho},tau={tau},mode={}", mode_str(mode))
+            AlgoSpec::Qgadmm { rho, bits, threads } => {
+                format!("qgadmm:rho={rho},bits={bits}{}", threads_suffix(threads))
+            }
+            AlgoSpec::Cgadmm { rho, tau, mu, threads } => {
+                format!("cgadmm:rho={rho},tau={tau},mu={mu}{}", threads_suffix(threads))
+            }
+            AlgoSpec::Cqgadmm { rho, bits, tau, mu, threads } => {
+                format!(
+                    "cqgadmm:rho={rho},bits={bits},tau={tau},mu={mu}{}",
+                    threads_suffix(threads)
+                )
+            }
+            AlgoSpec::Ggadmm { rho, graph, threads } => {
+                format!("ggadmm:rho={rho},graph={graph}{}", threads_suffix(threads))
+            }
+            AlgoSpec::Dgadmm { rho, tau, mode, threads } => {
+                format!(
+                    "dgadmm:rho={rho},tau={tau},mode={}{}",
+                    mode_str(mode),
+                    threads_suffix(threads)
+                )
             }
             AlgoSpec::Lag { variant, xi } => {
                 format!("lag:variant={},xi={xi}", variant_str(variant))
@@ -185,14 +220,21 @@ impl AlgoSpec {
     /// use gadmm::session::AlgoSpec;
     ///
     /// let spec = AlgoSpec::parse("qgadmm:rho=3,bits=4").unwrap();
-    /// assert_eq!(spec, AlgoSpec::Qgadmm { rho: 3.0, bits: 4 });
+    /// assert_eq!(spec, AlgoSpec::Qgadmm { rho: 3.0, bits: 4, threads: 1 });
     /// assert_eq!(spec.spec_string(), "qgadmm:rho=3,bits=4");
     ///
     /// // The generalized-graph engine takes its topology as a knob:
     /// let g = AlgoSpec::parse("ggadmm:rho=5,graph=rgg:radius=2.5").unwrap();
     /// assert_eq!(g.label(), "GGADMM");
     ///
+    /// // Every group engine accepts an execution width (1 = serial);
+    /// // width never changes results, only wall-clock.
+    /// let par = AlgoSpec::parse("gadmm:rho=5,threads=4").unwrap();
+    /// assert_eq!(par.threads(), 4);
+    /// assert_eq!(par.spec_string(), "gadmm:rho=5,threads=4");
+    ///
     /// assert!(AlgoSpec::parse("gadmm:rho=-1").is_err());
+    /// assert!(AlgoSpec::parse("gadmm:threads=0").is_err());
     /// assert!(AlgoSpec::parse("ggadmm:graph=ring").is_err());
     /// ```
     pub fn parse(s: &str) -> Result<AlgoSpec, String> {
@@ -203,14 +245,23 @@ impl AlgoSpec {
         };
         let mut params = Params::parse(kind, rest)?;
         let spec = match kind {
-            "gadmm" => AlgoSpec::Gadmm { rho: params.take_rho(5.0)? },
+            "gadmm" => AlgoSpec::Gadmm {
+                rho: params.take_rho(5.0)?,
+                threads: params.take_threads()?,
+            },
             "qgadmm" => AlgoSpec::Qgadmm {
                 rho: params.take_rho(5.0)?,
                 bits: validate_quant_bits(params.take_u64("bits", 8)?)?,
+                threads: params.take_threads()?,
             },
             "cgadmm" => {
                 let (tau, mu) = params.take_censor()?;
-                AlgoSpec::Cgadmm { rho: params.take_rho(5.0)?, tau, mu }
+                AlgoSpec::Cgadmm {
+                    rho: params.take_rho(5.0)?,
+                    tau,
+                    mu,
+                    threads: params.take_threads()?,
+                }
             }
             "cqgadmm" => {
                 let (tau, mu) = params.take_censor()?;
@@ -219,12 +270,14 @@ impl AlgoSpec {
                     bits: validate_quant_bits(params.take_u64("bits", 8)?)?,
                     tau,
                     mu,
+                    threads: params.take_threads()?,
                 }
             }
             "ggadmm" => AlgoSpec::Ggadmm {
                 rho: params.take_rho(5.0)?,
                 graph: GraphKind::parse(&params.take_str("graph", "chain")?)
                     .map_err(|e| format!("ggadmm: {e}"))?,
+                threads: params.take_threads()?,
             },
             "dgadmm" => AlgoSpec::Dgadmm {
                 rho: params.take_rho(1.0)?,
@@ -237,6 +290,7 @@ impl AlgoSpec {
                     "announced" => RechainMode::Announced,
                     other => return Err(format!("unknown dgadmm mode '{other}' (free|announced)")),
                 },
+                threads: params.take_threads()?,
             },
             "lag" => AlgoSpec::Lag {
                 variant: match params.take_str("variant", "wk")?.as_str() {
@@ -269,21 +323,30 @@ impl AlgoSpec {
     }
 
     /// JSON form: a flat object tagged by `algo`; inverse of `from_json`.
+    /// Like [`AlgoSpec::spec_string`], the `threads` key is emitted only
+    /// when the execution width is > 1.
     pub fn to_json(&self) -> Json {
         let j = Json::obj().set("algo", self.kind());
         match *self {
-            AlgoSpec::Gadmm { rho } => j.set("rho", rho),
-            AlgoSpec::Qgadmm { rho, bits } => j.set("rho", rho).set("bits", bits as usize),
-            AlgoSpec::Cgadmm { rho, tau, mu } => j.set("rho", rho).set("tau", tau).set("mu", mu),
-            AlgoSpec::Cqgadmm { rho, bits, tau, mu } => {
-                j.set("rho", rho).set("bits", bits as usize).set("tau", tau).set("mu", mu)
+            AlgoSpec::Gadmm { rho, threads } => threads_json(j.set("rho", rho), threads),
+            AlgoSpec::Qgadmm { rho, bits, threads } => {
+                threads_json(j.set("rho", rho).set("bits", bits as usize), threads)
             }
-            AlgoSpec::Ggadmm { rho, graph } => {
-                j.set("rho", rho).set("graph", graph.to_string().as_str())
+            AlgoSpec::Cgadmm { rho, tau, mu, threads } => {
+                threads_json(j.set("rho", rho).set("tau", tau).set("mu", mu), threads)
             }
-            AlgoSpec::Dgadmm { rho, tau, mode } => {
-                j.set("rho", rho).set("tau", tau).set("mode", mode_str(mode))
-            }
+            AlgoSpec::Cqgadmm { rho, bits, tau, mu, threads } => threads_json(
+                j.set("rho", rho).set("bits", bits as usize).set("tau", tau).set("mu", mu),
+                threads,
+            ),
+            AlgoSpec::Ggadmm { rho, graph, threads } => threads_json(
+                j.set("rho", rho).set("graph", graph.to_string().as_str()),
+                threads,
+            ),
+            AlgoSpec::Dgadmm { rho, tau, mode, threads } => threads_json(
+                j.set("rho", rho).set("tau", tau).set("mode", mode_str(mode)),
+                threads,
+            ),
             AlgoSpec::Lag { variant, xi } => {
                 j.set("variant", variant_str(variant)).set("xi", xi)
             }
@@ -344,25 +407,41 @@ impl AlgoSpec {
                 .unwrap_or_else(|| Chain::sequential(p.num_workers()))
         };
         match *self {
-            AlgoSpec::Gadmm { rho } => Box::new(Gadmm::with_chain(p, rho, chain())),
-            AlgoSpec::Qgadmm { rho, bits } => {
-                Box::new(Qgadmm::with_chain(p, rho, bits, ctx.seed, chain()))
+            AlgoSpec::Gadmm { rho, threads } => {
+                let mut e = Gadmm::with_chain(p, rho, chain());
+                e.set_threads(threads);
+                Box::new(e)
             }
-            AlgoSpec::Cgadmm { rho, tau, mu } => {
-                Box::new(Cgadmm::with_chain(p, rho, tau, mu, chain()))
+            AlgoSpec::Qgadmm { rho, bits, threads } => {
+                let mut e = Qgadmm::with_chain(p, rho, bits, ctx.seed, chain());
+                e.set_threads(threads);
+                Box::new(e)
             }
-            AlgoSpec::Cqgadmm { rho, bits, tau, mu } => {
-                Box::new(Cqgadmm::with_chain(p, rho, bits, tau, mu, ctx.seed, chain()))
+            AlgoSpec::Cgadmm { rho, tau, mu, threads } => {
+                let mut e = Cgadmm::with_chain(p, rho, tau, mu, chain());
+                e.set_threads(threads);
+                Box::new(e)
             }
-            AlgoSpec::Ggadmm { rho, graph } => match ctx.placement {
-                Some(pl) => match Ggadmm::with_placement(p, rho, graph, pl) {
-                    Ok(e) => Box::new(e),
-                    Err(e) => panic!("{e}"),
-                },
-                None => Box::new(Ggadmm::new(p, rho, graph, ctx.seed)),
-            },
-            AlgoSpec::Dgadmm { rho, tau, mode } => {
-                Box::new(Dgadmm::new(p, rho, tau, mode, ctx.costs, ctx.seed))
+            AlgoSpec::Cqgadmm { rho, bits, tau, mu, threads } => {
+                let mut e = Cqgadmm::with_chain(p, rho, bits, tau, mu, ctx.seed, chain());
+                e.set_threads(threads);
+                Box::new(e)
+            }
+            AlgoSpec::Ggadmm { rho, graph, threads } => {
+                let mut e = match ctx.placement {
+                    Some(pl) => match Ggadmm::with_placement(p, rho, graph, pl) {
+                        Ok(e) => e,
+                        Err(e) => panic!("{e}"),
+                    },
+                    None => Ggadmm::new(p, rho, graph, ctx.seed),
+                };
+                e.set_threads(threads);
+                Box::new(e)
+            }
+            AlgoSpec::Dgadmm { rho, tau, mode, threads } => {
+                let mut e = Dgadmm::new(p, rho, tau, mode, ctx.costs, ctx.seed);
+                e.set_threads(threads);
+                Box::new(e)
             }
             AlgoSpec::Lag { variant, xi } => {
                 let mut lag = Lag::new(p, variant);
@@ -387,23 +466,26 @@ impl AlgoSpec {
     /// coordinator cannot execute (re-chaining D-GADMM, centralized
     /// baselines).
     pub fn chain_wire(&self, dim: usize, n: usize, seed: u64) -> Option<ChainWire> {
+        // The `threads` knob is a *sequential-engine* execution width; the
+        // coordinator is already one-thread-per-worker, so the wire
+        // configuration deliberately ignores it.
         match *self {
-            AlgoSpec::Gadmm { rho } => Some(ChainWire {
+            AlgoSpec::Gadmm { rho, .. } => Some(ChainWire {
                 rho,
                 links: dense_links(dim, n),
                 name: format!("GADMM-dist(rho={rho})"),
             }),
-            AlgoSpec::Qgadmm { rho, bits } => Some(ChainWire {
+            AlgoSpec::Qgadmm { rho, bits, .. } => Some(ChainWire {
                 rho,
                 links: quant_links(dim, n, bits, seed),
                 name: format!("Q-GADMM-dist(rho={rho},b={bits})"),
             }),
-            AlgoSpec::Cgadmm { rho, tau, mu } => Some(ChainWire {
+            AlgoSpec::Cgadmm { rho, tau, mu, .. } => Some(ChainWire {
                 rho,
                 links: censored_dense_links(dim, n, tau, mu),
                 name: format!("C-GADMM-dist(rho={rho},tau={tau},mu={mu})"),
             }),
-            AlgoSpec::Cqgadmm { rho, bits, tau, mu } => Some(ChainWire {
+            AlgoSpec::Cqgadmm { rho, bits, tau, mu, .. } => Some(ChainWire {
                 rho,
                 links: censored_quant_links(dim, n, bits, tau, mu, seed),
                 name: format!("CQ-GADMM-dist(rho={rho},b={bits},tau={tau},mu={mu})"),
@@ -412,22 +494,64 @@ impl AlgoSpec {
         }
     }
 
+    /// The intra-group execution width (`threads=K` knob) — how many pool
+    /// threads the engine's head/tail/dual phases fan out across. 1 means
+    /// serial; baselines without the group phase structure always report 1.
+    pub fn threads(&self) -> usize {
+        match *self {
+            AlgoSpec::Gadmm { threads, .. }
+            | AlgoSpec::Qgadmm { threads, .. }
+            | AlgoSpec::Cgadmm { threads, .. }
+            | AlgoSpec::Cqgadmm { threads, .. }
+            | AlgoSpec::Ggadmm { threads, .. }
+            | AlgoSpec::Dgadmm { threads, .. } => threads,
+            _ => 1,
+        }
+    }
+
+    /// Copy of this spec with its execution width replaced (clamped to
+    /// ≥ 1; identity for the baselines, which have no intra-group
+    /// parallelism). The width never changes results — pinned by
+    /// `rust/tests/exec_par.rs` — so callers with their own thread budget
+    /// (the sweep runner's nested-parallelism rule) clamp it freely.
+    pub fn with_threads(mut self, width: usize) -> AlgoSpec {
+        let width = width.max(1);
+        match &mut self {
+            AlgoSpec::Gadmm { threads, .. }
+            | AlgoSpec::Qgadmm { threads, .. }
+            | AlgoSpec::Cgadmm { threads, .. }
+            | AlgoSpec::Cqgadmm { threads, .. }
+            | AlgoSpec::Ggadmm { threads, .. }
+            | AlgoSpec::Dgadmm { threads, .. } => *threads = width,
+            _ => {}
+        }
+        self
+    }
+
     /// One exemplar spec per engine the registry can build — the source of
     /// truth for "every `optim` engine is reachable from a spec".
     pub fn registry() -> Vec<AlgoSpec> {
         vec![
-            AlgoSpec::Gadmm { rho: 5.0 },
-            AlgoSpec::Qgadmm { rho: 5.0, bits: 8 },
-            AlgoSpec::Cgadmm { rho: 5.0, tau: DEFAULT_CENSOR_TAU, mu: DEFAULT_CENSOR_MU },
+            AlgoSpec::Gadmm { rho: 5.0, threads: 1 },
+            // The pooled execution backend, reachable as a spec knob.
+            AlgoSpec::Gadmm { rho: 5.0, threads: 2 },
+            AlgoSpec::Qgadmm { rho: 5.0, bits: 8, threads: 1 },
+            AlgoSpec::Cgadmm {
+                rho: 5.0,
+                tau: DEFAULT_CENSOR_TAU,
+                mu: DEFAULT_CENSOR_MU,
+                threads: 1,
+            },
             AlgoSpec::Cqgadmm {
                 rho: 5.0,
                 bits: 8,
                 tau: DEFAULT_CENSOR_TAU,
                 mu: DEFAULT_CENSOR_MU,
+                threads: 1,
             },
-            AlgoSpec::Ggadmm { rho: 5.0, graph: GraphKind::Chain },
-            AlgoSpec::Ggadmm { rho: 5.0, graph: GraphKind::Rgg { radius: 3.5 } },
-            AlgoSpec::Dgadmm { rho: 1.0, tau: 15, mode: RechainMode::Free },
+            AlgoSpec::Ggadmm { rho: 5.0, graph: GraphKind::Chain, threads: 1 },
+            AlgoSpec::Ggadmm { rho: 5.0, graph: GraphKind::Rgg { radius: 3.5 }, threads: 1 },
+            AlgoSpec::Dgadmm { rho: 1.0, tau: 15, mode: RechainMode::Free, threads: 1 },
             AlgoSpec::Lag { variant: LagVariant::Wk, xi: 0.05 },
             AlgoSpec::Lag { variant: LagVariant::Ps, xi: 0.05 },
             AlgoSpec::Iag { order: IagOrder::Cyclic },
@@ -460,6 +584,25 @@ impl std::str::FromStr for AlgoSpec {
     type Err = String;
     fn from_str(s: &str) -> Result<AlgoSpec, String> {
         AlgoSpec::parse(s)
+    }
+}
+
+/// `,threads=K` canonical-string suffix — empty at the serial default.
+fn threads_suffix(threads: usize) -> String {
+    if threads > 1 {
+        format!(",threads={threads}")
+    } else {
+        String::new()
+    }
+}
+
+/// Attach the `threads` JSON key — omitted at the serial default, so
+/// serial specs keep their historical JSON form.
+fn threads_json(j: Json, threads: usize) -> Json {
+    if threads > 1 {
+        j.set("threads", threads)
+    } else {
+        j
     }
 }
 
@@ -538,6 +681,15 @@ impl<'s> Params<'s> {
         self.take_positive("rho", default)
     }
 
+    /// The intra-group execution width `threads=K` (default 1 = serial),
+    /// validated through the single shared check
+    /// ([`validate_exec_threads`]) so CLI flags and spec strings agree on
+    /// the domain and the message.
+    fn take_threads(&mut self) -> Result<usize, String> {
+        validate_exec_threads(self.take_u64("threads", 1)?)
+            .map_err(|e| format!("{}: {e}", self.kind))
+    }
+
     fn take_f64(&mut self, key: &str, default: f64) -> Result<f64, String> {
         match self.take(key) {
             None => Ok(default),
@@ -591,10 +743,10 @@ mod tests {
 
     #[test]
     fn parse_defaults_and_errors() {
-        assert_eq!(AlgoSpec::parse("gadmm").unwrap(), AlgoSpec::Gadmm { rho: 5.0 });
+        assert_eq!(AlgoSpec::parse("gadmm").unwrap(), AlgoSpec::Gadmm { rho: 5.0, threads: 1 });
         assert_eq!(
             AlgoSpec::parse("qgadmm:rho=3,bits=4").unwrap(),
-            AlgoSpec::Qgadmm { rho: 3.0, bits: 4 }
+            AlgoSpec::Qgadmm { rho: 3.0, bits: 4, threads: 1 }
         );
         assert_eq!(
             AlgoSpec::parse(" lag:variant=ps ").unwrap(),
@@ -609,19 +761,56 @@ mod tests {
     }
 
     #[test]
+    fn threads_knob_parses_round_trips_and_validates() {
+        // Every group engine accepts the execution width; serial is the
+        // default and stays out of the canonical forms.
+        for kind in ["gadmm", "qgadmm", "cgadmm", "cqgadmm", "ggadmm", "dgadmm"] {
+            let par = AlgoSpec::parse(&format!("{kind}:threads=4")).unwrap();
+            assert_eq!(par.threads(), 4, "{kind}");
+            assert_eq!(AlgoSpec::parse(&par.spec_string()).unwrap(), par, "{kind}");
+            let serial = AlgoSpec::parse(kind).unwrap();
+            assert_eq!(serial.threads(), 1, "{kind}");
+            assert!(!serial.spec_string().contains("threads"), "{kind}");
+            assert_eq!(serial.with_threads(4), par, "{kind}");
+            assert_eq!(par.with_threads(1), serial, "{kind}");
+        }
+        // JSON funnels through the same path and omits the serial default.
+        let par = AlgoSpec::parse("gadmm:rho=3,threads=2").unwrap();
+        let j = par.to_json();
+        assert_eq!(j.path("threads").unwrap().as_usize(), Some(2));
+        assert_eq!(AlgoSpec::from_json(&j).unwrap(), par);
+        assert!(AlgoSpec::Gadmm { rho: 3.0, threads: 1 }.to_json().path("threads").is_none());
+        // Domain errors funnel through the single shared validator.
+        assert_eq!(validate_exec_threads(1).unwrap(), 1);
+        assert_eq!(validate_exec_threads(1024).unwrap(), 1024);
+        assert!(validate_exec_threads(0).is_err());
+        assert!(validate_exec_threads(1025).is_err());
+        assert!(AlgoSpec::parse("gadmm:threads=0").is_err());
+        assert!(AlgoSpec::parse("gadmm:threads=2048").is_err());
+        assert!(AlgoSpec::parse("gd:threads=4").is_err(), "baselines reject the knob");
+        assert_eq!(AlgoSpec::Gd.threads(), 1);
+        assert_eq!(AlgoSpec::Gd.with_threads(8), AlgoSpec::Gd);
+    }
+
+    #[test]
     fn censor_specs_parse_with_defaults_and_validate() {
         assert_eq!(
             AlgoSpec::parse("cgadmm").unwrap(),
-            AlgoSpec::Cgadmm { rho: 5.0, tau: DEFAULT_CENSOR_TAU, mu: DEFAULT_CENSOR_MU }
+            AlgoSpec::Cgadmm {
+                rho: 5.0,
+                tau: DEFAULT_CENSOR_TAU,
+                mu: DEFAULT_CENSOR_MU,
+                threads: 1
+            }
         );
         assert_eq!(
             AlgoSpec::parse("cqgadmm:rho=3,bits=4,tau=0.5,mu=0.9").unwrap(),
-            AlgoSpec::Cqgadmm { rho: 3.0, bits: 4, tau: 0.5, mu: 0.9 }
+            AlgoSpec::Cqgadmm { rho: 3.0, bits: 4, tau: 0.5, mu: 0.9, threads: 1 }
         );
         // tau=0 is the legal "never censor" degeneracy.
         assert_eq!(
             AlgoSpec::parse("cgadmm:tau=0").unwrap(),
-            AlgoSpec::Cgadmm { rho: 5.0, tau: 0.0, mu: DEFAULT_CENSOR_MU }
+            AlgoSpec::Cgadmm { rho: 5.0, tau: 0.0, mu: DEFAULT_CENSOR_MU, threads: 1 }
         );
         let e = AlgoSpec::parse("cgadmm:mu=1").unwrap_err();
         assert!(e.contains("mu must be in (0, 1)"), "{e}");

@@ -36,7 +36,7 @@ pub struct SweepSpec {
 impl Default for SweepSpec {
     fn default() -> Self {
         SweepSpec {
-            algos: vec![AlgoSpec::Gadmm { rho: 5.0 }, AlgoSpec::Gd],
+            algos: vec![AlgoSpec::Gadmm { rho: 5.0, threads: 1 }, AlgoSpec::Gd],
             datasets: vec![DatasetKind::SyntheticLinreg],
             workers: vec![24],
             seeds: vec![1],
@@ -213,9 +213,17 @@ impl CellKey {
     /// Deterministic engine seed for this cell: FNV-1a over the cell id,
     /// mixed with the grid seed. Distinct cells get distinct stochastic
     /// streams; the value depends on the key alone, never on scheduling.
+    ///
+    /// The id is hashed with its execution width normalized away
+    /// (`threads=K` stripped): width is wall-clock-only, so two cells
+    /// differing only in width must draw the same stochastic stream — and
+    /// therefore produce bit-identical traces (pinned in
+    /// `rust/tests/exec_par.rs`).
     pub fn engine_seed(&self) -> u64 {
+        let mut normalized = self.clone();
+        normalized.algo = normalized.algo.with_threads(1);
         let mut h: u64 = 0xcbf29ce484222325;
-        for b in self.id().bytes() {
+        for b in normalized.id().bytes() {
             h = (h ^ b as u64).wrapping_mul(0x100000001b3);
         }
         h ^ self.seed
@@ -314,10 +322,22 @@ impl SweepRunner {
     /// Run the full grid. Cells are claimed from a shared counter, so the
     /// pool load-balances; each result lands in its grid slot, so output
     /// order (and content — see `CellKey::engine_seed`) is deterministic.
+    ///
+    /// **Nested parallelism.** A cell's spec may itself carry an
+    /// intra-group execution width (`threads=K`, see
+    /// [`AlgoSpec::threads`]). Cell-level and intra-group parallelism
+    /// multiply, so the runner clamps each cell's width to
+    /// `max(1, available_cores / sweep_threads)` — a sweep saturating the
+    /// machine runs its engines serially, a single-threaded sweep lets the
+    /// engine pool have the cores. The clamp is invisible in the output:
+    /// execution width never changes a trace (`rust/tests/exec_par.rs`),
+    /// so results stay deterministic in the spec on any machine.
     pub fn run(&self, spec: &SweepSpec) -> Result<SweepOutput, String> {
         spec.validate()?;
         let cells = spec.cells();
         let threads = self.threads.min(cells.len());
+        let exec_budget =
+            (SweepRunner::default_threads() / threads.max(1)).max(1);
         let next = AtomicUsize::new(0);
         let slots: Vec<Mutex<Option<Trace>>> = cells.iter().map(|_| Mutex::new(None)).collect();
         let t0 = Instant::now();
@@ -328,7 +348,7 @@ impl SweepRunner {
                     if i >= cells.len() {
                         break;
                     }
-                    let trace = run_cell(&cells[i], spec);
+                    let trace = run_cell(&cells[i], spec, exec_budget);
                     *slots[i].lock().expect("sweep slot poisoned") = Some(trace);
                 });
             }
@@ -348,12 +368,17 @@ impl SweepRunner {
 
 /// Execute one cell: dataset and problem from the grid seed, engine from
 /// the cell-derived seed, unit link costs (the sweep currency is slots).
-fn run_cell(key: &CellKey, spec: &SweepSpec) -> Trace {
+/// The engine's intra-group width is clamped to `exec_budget` (the
+/// nested-parallelism rule); the cell key — and therefore the engine
+/// seed — always uses the spec's declared width, so clamping never
+/// changes identity or results.
+fn run_cell(key: &CellKey, spec: &SweepSpec, exec_budget: usize) -> Trace {
     let ds = key.dataset.build(key.seed);
     let problem = Problem::from_dataset(&ds, key.workers);
     let opts =
         RunOptions::with_target(spec.target, spec.max_iters).with_stride(spec.record_stride);
-    let mut engine = key.algo.build(&problem, key.engine_seed());
+    let algo = key.algo.with_threads(key.algo.threads().min(exec_budget));
+    let mut engine = algo.build(&problem, key.engine_seed());
     optim::run(&mut *engine, &problem, &UnitCosts, &opts)
 }
 
@@ -363,7 +388,7 @@ mod tests {
 
     fn small_spec() -> SweepSpec {
         SweepSpec {
-            algos: vec![AlgoSpec::Gadmm { rho: 3.0 }, AlgoSpec::Gd],
+            algos: vec![AlgoSpec::Gadmm { rho: 3.0, threads: 1 }, AlgoSpec::Gd],
             datasets: vec![DatasetKind::SyntheticLinreg],
             workers: vec![4],
             seeds: vec![1, 2],
@@ -378,7 +403,7 @@ mod tests {
         let spec = small_spec();
         let cells = spec.cells();
         assert_eq!(cells.len(), 4);
-        assert_eq!(cells[0].algo, AlgoSpec::Gadmm { rho: 3.0 });
+        assert_eq!(cells[0].algo, AlgoSpec::Gadmm { rho: 3.0, threads: 1 });
         assert_eq!(cells[1].algo, AlgoSpec::Gd);
         assert_eq!(cells[0].seed, 1);
         assert_eq!(cells[2].seed, 2);
@@ -409,6 +434,32 @@ mod tests {
         let spec = small_spec();
         let back = SweepSpec::from_json(&spec.to_json()).unwrap();
         assert_eq!(back, spec);
+    }
+
+    #[test]
+    fn cell_exec_width_is_invisible_in_results() {
+        // The nested-parallelism rule: a grid whose specs carry threads=K
+        // yields bit-identical traces to the serial grid, whatever the
+        // sweep's own thread count or the machine's clamp budget.
+        let mut serial = small_spec();
+        serial.algos = vec![
+            AlgoSpec::Gadmm { rho: 3.0, threads: 1 },
+            AlgoSpec::Qgadmm { rho: 3.0, bits: 8, threads: 1 },
+        ];
+        let mut wide = small_spec();
+        wide.algos = vec![
+            AlgoSpec::Gadmm { rho: 3.0, threads: 4 },
+            AlgoSpec::Qgadmm { rho: 3.0, bits: 8, threads: 4 },
+        ];
+        let a = SweepRunner::new(1).run(&serial).unwrap();
+        let b = SweepRunner::new(2).run(&wide).unwrap();
+        assert_eq!(a.cells.len(), b.cells.len());
+        for (sa, sb) in a.cells.iter().zip(&b.cells) {
+            // Same stochastic stream despite the differing width...
+            assert_eq!(sa.key.engine_seed(), sb.key.engine_seed());
+            // ...and the exact same deterministic path.
+            assert!(sa.trace.same_path(&sb.trace), "{} vs {}", sa.key.id(), sb.key.id());
+        }
     }
 
     #[test]

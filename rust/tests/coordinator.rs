@@ -182,7 +182,7 @@ fn censored_distributed_matches_sequential_cgadmm() {
     let ds = synthetic::linreg(120, 8, &mut Pcg64::seeded(11));
     let p = Problem::from_dataset(&ds, 6);
     let opts = RunOptions::with_target(1e-5, 4_000);
-    let spec = AlgoSpec::Cgadmm { rho: 5.0, tau: 1.0, mu: 0.93 };
+    let spec = AlgoSpec::Cgadmm { rho: 5.0, tau: 1.0, mu: 0.93, threads: 1 };
     assert_dist_matches_seq(&p, spec, 3, &opts);
     // The run censored something (otherwise this test is vacuous): TC at
     // convergence below k·N.
@@ -198,7 +198,7 @@ fn censored_quantized_distributed_matches_sequential_cqgadmm() {
     let opts = RunOptions::with_target(1e-5, 5_000);
     assert_dist_matches_seq(
         &p,
-        AlgoSpec::Cqgadmm { rho: 5.0, bits: 8, tau: 1.0, mu: 0.93 },
+        AlgoSpec::Cqgadmm { rho: 5.0, bits: 8, tau: 1.0, mu: 0.93, threads: 1 },
         17,
         &opts,
     );
@@ -212,10 +212,10 @@ fn all_static_chain_specs_distribute_bit_identically() {
     let p = Problem::from_dataset(&ds, 4);
     let opts = RunOptions::with_target(1e-4, 3_000);
     for spec in [
-        AlgoSpec::Gadmm { rho: 3.0 },
-        AlgoSpec::Qgadmm { rho: 3.0, bits: 6 },
-        AlgoSpec::Cgadmm { rho: 3.0, tau: 0.5, mu: 0.9 },
-        AlgoSpec::Cqgadmm { rho: 3.0, bits: 6, tau: 0.5, mu: 0.9 },
+        AlgoSpec::Gadmm { rho: 3.0, threads: 1 },
+        AlgoSpec::Qgadmm { rho: 3.0, bits: 6, threads: 1 },
+        AlgoSpec::Cgadmm { rho: 3.0, tau: 0.5, mu: 0.9, threads: 1 },
+        AlgoSpec::Cqgadmm { rho: 3.0, bits: 6, tau: 0.5, mu: 0.9, threads: 1 },
     ] {
         assert_dist_matches_seq(&p, spec, 9, &opts);
     }
@@ -231,7 +231,7 @@ fn tau_zero_distributed_cqgadmm_equals_distributed_qgadmm() {
     let cq = coordinator::train_spec(
         &p,
         native_solvers(&p),
-        &AlgoSpec::Cqgadmm { rho: 3.0, bits: 8, tau: 0.0, mu: 0.93 },
+        &AlgoSpec::Cqgadmm { rho: 3.0, bits: 8, tau: 0.0, mu: 0.93, threads: 1 },
         21,
         Chain::sequential(4),
         &costs,
@@ -241,7 +241,7 @@ fn tau_zero_distributed_cqgadmm_equals_distributed_qgadmm() {
     let q = coordinator::train_spec(
         &p,
         native_solvers(&p),
-        &AlgoSpec::Qgadmm { rho: 3.0, bits: 8 },
+        &AlgoSpec::Qgadmm { rho: 3.0, bits: 8, threads: 1 },
         21,
         Chain::sequential(4),
         &costs,
@@ -266,7 +266,7 @@ fn dgadmm_spec_still_rejected_by_coordinator() {
     let err = coordinator::train_spec(
         &p,
         native_solvers(&p),
-        &AlgoSpec::Dgadmm { rho: 1.0, tau: 15, mode: optim::RechainMode::Free },
+        &AlgoSpec::Dgadmm { rho: 1.0, tau: 15, mode: optim::RechainMode::Free, threads: 1 },
         1,
         Chain::sequential(4),
         &UnitCosts,
