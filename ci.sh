@@ -102,4 +102,63 @@ elif [ "$rc" -ne 0 ]; then
   exit "$rc"
 fi
 
+echo "==> smoke: gadmm chaos --quick (fault-injection grid -> BENCH_chaos.json)"
+# Gate (all deterministic — exit 3, never retried): the report must exist,
+# every seeded chaos cell must replay bit-identically, and the fault-rate-0
+# rows must reproduce BENCH_comm.json's iteration counts exactly (the chaos
+# grid reuses the bench grid + seed, so a mismatch means the fault layer
+# perturbed a clean run). Runs after bench_gate: the cross-check reads the
+# BENCH_comm.json that bench_gate just wrote.
+chaos_gate() {
+  ./target/release/gadmm chaos --quick --out target/ci-chaos || return 3
+  test -f target/ci-chaos/BENCH_chaos.json || return 3
+  python3 - <<'EOF'
+import json, sys
+
+def hard(cond, msg):  # deterministic failure: never retried
+    if not cond:
+        print("chaos gate (deterministic): %s" % msg)
+        sys.exit(3)
+
+with open("target/ci-chaos/BENCH_chaos.json") as f:
+    report = json.load(f)
+
+hard(report["experiment"] == "bench_chaos", "wrong experiment %r" % report["experiment"])
+rates = report["fault_rates"]
+hard(len(rates) >= 3 and len(set(rates)) == len(rates), "need >= 3 distinct fault rates, got %r" % rates)
+rows = report["rows"]
+hard(len(rows) == 6 * len(rates), "expected 6 engines x %d rates, got %d rows" % (len(rates), len(rows)))
+
+# Reproducibility: every seeded chaos run replays bit-identically.
+diverged = [r["spec"] for r in rows if not r["identical"]]
+hard(not diverged, "chaos replay diverged for: %s" % diverged)
+hard(report["all_identical"], "all_identical flag disagrees with the rows")
+
+# Degeneracy: fault=0 rows must match the clean bench grid (same problem,
+# target, and seed) iteration for iteration.
+with open("target/ci-bench/BENCH_comm.json") as f:
+    bench = {r["spec"]: r["iters_to_target"] for r in json.load(f)["rows"]}
+matched = 0
+for r in rows:
+    if r["fault_rate"] == 0 and r["spec"] in bench:
+        hard(r["iters_to_target"] == bench[r["spec"]],
+             "fault=0 %s: %s iters vs bench %s" % (r["spec"], r["iters_to_target"], bench[r["spec"]]))
+        matched += 1
+hard(matched >= 4, "only %d fault=0 rows matched BENCH_comm.json specs" % matched)
+
+# Informational: how the censored variants absorb drops vs dense GADMM.
+for rate in [r for r in rates if r > 0]:
+    by_kind = {r["spec"].split(":")[0]: r["bits_degradation"]
+               for r in rows if r["fault_rate"] == rate}
+    print("chaos gate: fault=%s bits degradation — gadmm %s, cgadmm %s, cqgadmm %s"
+          % (rate, by_kind.get("gadmm"), by_kind.get("cgadmm"), by_kind.get("cqgadmm")))
+print("chaos gate OK: %d rows, %d replays bit-identical, %d fault=0 rows matched bench" %
+      (len(rows), len(rows), matched))
+EOF
+}
+if ! chaos_gate; then
+  echo "==> chaos deterministic gate failed — not retrying"
+  exit 3
+fi
+
 echo "CI OK"

@@ -1,0 +1,361 @@
+//! Deterministic fault injection on the communication path.
+//!
+//! The paper's D-GADMM analysis (§6) proves convergence under a
+//! time-varying worker topology, and the censored follow-ups target
+//! exactly the lossy wireless regimes where links drop. This module turns
+//! those claims into replayable experiments: a seeded [`FaultSchedule`]
+//! decides — as a *pure function of `(seed, worker, iteration)`* — whether
+//! a given broadcast slot is lost, whether a worker is inside a crash or
+//! partition window, and how large the modeled straggler delay of a slot
+//! would be. Nothing reads a clock or an arrival order, so the same seed
+//! replays the same fault pattern bit-for-bit at any execution width and
+//! on both the sequential engines and the distributed coordinator (the
+//! "schedule-not-clock" argument; see docs/adr/006-fault-injection.md).
+//!
+//! Faults compose with the existing [`LinkPolicy`] seam rather than adding
+//! a new code path: [`FaultyLink`] wraps any policy and turns a dropped
+//! slot into [`Msg::Skip`] *without invoking the inner policy*, so a
+//! quantizer's anchor/RNG and a censor schedule advance only on slots that
+//! actually reach the air — the same discipline [`Censored`] follows — and
+//! the [`Meter`](super::Meter) closed forms stay exact (a dropped slot
+//! charges 0 bits and 0 TC, like a censored one).
+//!
+//! Crash + rejoin deliberately adds no recovery machinery of its own: a
+//! crashed worker is one whose broadcasts all drop for a window, and
+//! recovery maps onto D-GADMM's re-chaining slot re-map (duals and links
+//! travel with the physical worker), which the chaos tests pin.
+//!
+//! [`LinkPolicy`]: super::policy::LinkPolicy
+//! [`Censored`]: super::policy::Censored
+
+use super::policy::LinkPolicy;
+use super::quantize::Msg;
+use crate::util::rng::Pcg64;
+
+/// Shared validation for the `fault=` drop-rate knob: spec strings, JSON,
+/// and direct construction all funnel through this so the accepted domain
+/// cannot drift between entry points. `p = 0` is legal and means "no
+/// faults" (the degeneracy the property tests pin: a rate-0 faulted engine
+/// is trace-identical to the unfaulted one); `p = 1` is rejected because a
+/// link that never transmits cannot converge.
+pub fn validate_fault_rate(p: f64) -> Result<(), String> {
+    if !p.is_finite() || !(0.0..1.0).contains(&p) {
+        return Err(format!("fault rate must be finite and in [0, 1), got {p}"));
+    }
+    Ok(())
+}
+
+/// A worker that crashes at `crash_at` and rejoins at `rejoin_at`: every
+/// broadcast slot with `crash_at <= k < rejoin_at` is lost.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CrashWindow {
+    pub worker: usize,
+    pub crash_at: usize,
+    pub rejoin_at: usize,
+}
+
+/// A network partition over `[from, until)`: the listed island is cut off
+/// from the main component, so its members' broadcasts are lost until the
+/// partition heals. (Links are sender-side broadcasts, so the cut is
+/// modeled from the island's side; the main component keeps its cached
+/// views of the islanders, exactly as under censoring.)
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PartitionWindow {
+    pub island: Vec<usize>,
+    pub from: usize,
+    pub until: usize,
+}
+
+/// Stream salts for the per-slot draws. Distinct salts keep the drop coin
+/// and the straggler delay of the same slot statistically independent.
+const DROP_STREAM: u64 = 0xfa_17d0;
+const DELAY_STREAM: u64 = 0xfa_17de;
+
+/// Pareto straggler-delay shape: heavy-tailed (infinite variance for
+/// `alpha <= 2`) with minimum `STRAGGLER_XM` and mean `xm·α/(α−1) = 3×`
+/// the fastest slot — the classic "one slow worker dominates the round"
+/// regime the chaos driver quantifies.
+pub const STRAGGLER_ALPHA: f64 = 1.5;
+/// Minimum (unit) slot latency of the straggler model.
+pub const STRAGGLER_XM: f64 = 1.0;
+
+/// A seeded, replayable fault plan: per-slot drop probability plus
+/// explicit crash and partition windows. Every query is a pure function of
+/// the schedule and its arguments — the schedule holds no mutable state,
+/// so querying slots out of order (or from several threads at once) can
+/// never change an answer.
+#[derive(Clone, Debug)]
+pub struct FaultSchedule {
+    seed: u64,
+    drop: f64,
+    crashes: Vec<CrashWindow>,
+    partitions: Vec<PartitionWindow>,
+}
+
+impl FaultSchedule {
+    /// Panics on an invalid rate; parse-time entry points call
+    /// [`validate_fault_rate`] first and surface the same message as an
+    /// error instead (mirroring [`CensorSchedule::new`]).
+    ///
+    /// [`CensorSchedule::new`]: super::policy::CensorSchedule::new
+    pub fn new(seed: u64, drop: f64) -> FaultSchedule {
+        if let Err(e) = validate_fault_rate(drop) {
+            panic!("{e}");
+        }
+        FaultSchedule { seed, drop, crashes: Vec::new(), partitions: Vec::new() }
+    }
+
+    /// Add a crash window: `worker` transmits nothing in
+    /// `[crash_at, rejoin_at)`.
+    pub fn with_crash(mut self, worker: usize, crash_at: usize, rejoin_at: usize) -> FaultSchedule {
+        assert!(crash_at < rejoin_at, "crash window [{crash_at}, {rejoin_at}) is empty");
+        self.crashes.push(CrashWindow { worker, crash_at, rejoin_at });
+        self
+    }
+
+    /// Add a partition window: the `island` workers are cut off over
+    /// `[from, until)` and heal afterwards.
+    pub fn with_partition(mut self, island: &[usize], from: usize, until: usize) -> FaultSchedule {
+        assert!(from < until, "partition window [{from}, {until}) is empty");
+        self.partitions.push(PartitionWindow { island: island.to_vec(), from, until });
+        self
+    }
+
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    pub fn drop_rate(&self) -> f64 {
+        self.drop
+    }
+
+    /// Is `worker` inside one of its crash windows at iteration `k`?
+    pub fn is_crashed(&self, worker: usize, k: usize) -> bool {
+        self.crashes
+            .iter()
+            .any(|c| c.worker == worker && (c.crash_at..c.rejoin_at).contains(&k))
+    }
+
+    /// Is `worker` cut off by a partition at iteration `k`?
+    pub fn is_partitioned(&self, worker: usize, k: usize) -> bool {
+        self.partitions
+            .iter()
+            .any(|p| (p.from..p.until).contains(&k) && p.island.contains(&worker))
+    }
+
+    /// One independent generator per `(worker, k)` slot: the slot index is
+    /// splitmix-finalized into the seed and the worker selects the stream,
+    /// so each slot's draw is decorrelated from its neighbours and — the
+    /// determinism contract — independent of every other query.
+    fn slot_rng(&self, worker: usize, k: usize, stream: u64) -> Pcg64 {
+        let mut z = self.seed ^ (k as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15);
+        z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+        z ^= z >> 31;
+        Pcg64::new(z, stream ^ ((worker as u64) << 24))
+    }
+
+    /// Does `worker`'s broadcast at iteration `k` drop? True inside any
+    /// crash/partition window, else a per-slot Bernoulli(`drop`) draw.
+    pub fn drops(&self, worker: usize, k: usize) -> bool {
+        if self.is_crashed(worker, k) || self.is_partitioned(worker, k) {
+            return true;
+        }
+        self.drop > 0.0 && self.slot_rng(worker, k, DROP_STREAM).coin(self.drop)
+    }
+
+    /// Modeled (not wall-clock) latency of the slot, in units of the
+    /// fastest slot: Pareto(`STRAGGLER_XM`, `STRAGGLER_ALPHA`) via inverse
+    /// transform `xm·u^(−1/α)`. The chaos driver sums per-round maxima to
+    /// report straggler-dominated round time; nothing in the engines ever
+    /// *waits* on this number, which is what keeps chaos runs replayable.
+    pub fn straggler_delay(&self, worker: usize, k: usize) -> f64 {
+        let u = 1.0 - self.slot_rng(worker, k, DELAY_STREAM).next_f64(); // (0, 1]
+        STRAGGLER_XM * u.powf(-1.0 / STRAGGLER_ALPHA)
+    }
+}
+
+/// Wrap a link policy with a fault schedule: a dropped slot becomes
+/// [`Msg::Skip`] and the inner policy is *not* invoked, so its compressor
+/// anchor, rounding RNG, and censor threshold state advance exactly as
+/// they would on the receiving side (which saw nothing).
+pub struct FaultyLink {
+    inner: Box<dyn LinkPolicy>,
+    schedule: FaultSchedule,
+    worker: usize,
+}
+
+impl FaultyLink {
+    pub fn new(inner: Box<dyn LinkPolicy>, schedule: FaultSchedule, worker: usize) -> FaultyLink {
+        FaultyLink { inner, schedule, worker }
+    }
+}
+
+impl LinkPolicy for FaultyLink {
+    fn describe(&self) -> String {
+        format!("faulty({},p={})", self.inner.describe(), self.schedule.drop_rate())
+    }
+
+    fn message_bits(&self) -> f64 {
+        self.inner.message_bits()
+    }
+
+    fn transmit(&mut self, k: usize, model: &[f64]) -> Msg {
+        if self.schedule.drops(self.worker, k) {
+            return Msg::Skip;
+        }
+        self.inner.transmit(k, model)
+    }
+
+    fn public_view(&self) -> &[f64] {
+        self.inner.public_view()
+    }
+}
+
+/// Wrap one link per worker (link `w` answers to the schedule as worker
+/// `w`). Both the sequential engines and the coordinator wire factory
+/// funnel through this, so the two execution paths drop the same slots.
+pub fn faulty_links(
+    links: Vec<Box<dyn LinkPolicy>>,
+    schedule: &FaultSchedule,
+) -> Vec<Box<dyn LinkPolicy>> {
+    links
+        .into_iter()
+        .enumerate()
+        .map(|(w, link)| Box::new(FaultyLink::new(link, schedule.clone(), w)) as Box<dyn LinkPolicy>)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::policy::{dense_links, quant_links, Censored, EverySlot};
+    use crate::comm::quantize::{DenseCompressor, StochasticQuantizer};
+
+    #[test]
+    fn rate_domain_is_validated() {
+        assert!(validate_fault_rate(0.0).is_ok(), "rate 0 disables faults");
+        assert!(validate_fault_rate(0.5).is_ok());
+        assert!(validate_fault_rate(1.0).is_err(), "a never-transmitting link is rejected");
+        assert!(validate_fault_rate(-0.1).is_err());
+        assert!(validate_fault_rate(f64::NAN).is_err());
+        assert!(validate_fault_rate(f64::INFINITY).is_err());
+    }
+
+    #[test]
+    fn schedule_is_a_pure_function_of_seed_worker_slot() {
+        let a = FaultSchedule::new(7, 0.3);
+        let b = FaultSchedule::new(7, 0.3);
+        // Same answers whatever the query order — there is no hidden state.
+        let forward: Vec<bool> = (0..200).map(|k| a.drops(2, k)).collect();
+        let backward: Vec<bool> = (0..200).rev().map(|k| b.drops(2, k)).collect();
+        assert_eq!(forward, backward.into_iter().rev().collect::<Vec<_>>());
+        // And re-asking never changes an answer.
+        for k in 0..200 {
+            assert_eq!(a.drops(2, k), forward[k]);
+            assert_eq!(a.straggler_delay(2, k).to_bits(), a.straggler_delay(2, k).to_bits());
+        }
+    }
+
+    #[test]
+    fn different_seeds_and_workers_decorrelate() {
+        let a = FaultSchedule::new(1, 0.5);
+        let b = FaultSchedule::new(2, 0.5);
+        let slots = 400;
+        let same_seed = (0..slots).filter(|&k| a.drops(0, k) == b.drops(0, k)).count();
+        let same_worker = (0..slots).filter(|&k| a.drops(0, k) == a.drops(1, k)).count();
+        // Independent fair-ish coins agree about half the time; total
+        // agreement would mean the mixing collapsed.
+        assert!((slots / 4..3 * slots / 4).contains(&same_seed), "seed mixing collapsed: {same_seed}");
+        assert!((slots / 4..3 * slots / 4).contains(&same_worker), "worker mixing collapsed: {same_worker}");
+    }
+
+    #[test]
+    fn drop_rate_is_roughly_honored() {
+        let s = FaultSchedule::new(11, 0.2);
+        let n = 20_000;
+        let drops = (0..n).filter(|&k| s.drops(3, k)).count();
+        let frac = drops as f64 / n as f64;
+        assert!((frac - 0.2).abs() < 0.02, "empirical drop rate {frac}");
+    }
+
+    #[test]
+    fn rate_zero_never_drops_and_windows_still_fire() {
+        let s = FaultSchedule::new(5, 0.0).with_crash(1, 10, 20).with_partition(&[0, 2], 30, 35);
+        for k in 0..50 {
+            assert_eq!(s.drops(1, k), (10..20).contains(&k), "crash window at k={k}");
+            assert_eq!(s.drops(0, k), (30..35).contains(&k), "partition window at k={k}");
+            assert_eq!(s.drops(2, k), (30..35).contains(&k), "partition window at k={k}");
+            assert!(!s.drops(3, k), "worker 3 is in no window and the rate is 0");
+        }
+        assert!(s.is_crashed(1, 10) && !s.is_crashed(1, 20), "window is half-open");
+        assert!(s.is_partitioned(2, 34) && !s.is_partitioned(2, 35));
+    }
+
+    #[test]
+    fn straggler_delays_are_heavy_tailed_above_xm() {
+        let s = FaultSchedule::new(3, 0.0);
+        let n = 5_000;
+        let delays: Vec<f64> = (0..n).map(|k| s.straggler_delay(0, k)).collect();
+        assert!(delays.iter().all(|&d| d >= STRAGGLER_XM), "Pareto support starts at xm");
+        let mean = delays.iter().sum::<f64>() / n as f64;
+        // E[Pareto(1, 1.5)] = 3; the heavy tail makes the sample mean
+        // noisy, so only sanity-bound it.
+        assert!(mean > 1.5 && mean < 6.0, "sample mean {mean}");
+        let big = delays.iter().filter(|&&d| d > 10.0).count();
+        assert!(big > 0, "no tail events in {n} draws");
+    }
+
+    #[test]
+    fn dropped_slot_is_skip_and_leaves_inner_state_untouched() {
+        // Mirror of the censor test: two same-seed quantized links, one
+        // behind a schedule that drops slot 0 — after both transmit slot 1
+        // the rounding streams must still agree, because a dropped slot
+        // consumes no RNG and moves no anchor.
+        let mk = || Box::new(StochasticQuantizer::for_worker(4, 4, 9, 0));
+        let schedule = FaultSchedule::new(0, 0.0).with_crash(0, 0, 1);
+        let mut a = FaultyLink::new(Box::new(EverySlot::new(mk())), schedule, 0);
+        let mut b = EverySlot::new(mk());
+        let dropped = a.transmit(0, &[0.1, 0.2, -0.1, 0.0]);
+        assert!(dropped.is_skip());
+        assert_eq!(dropped.payload_bits(), 0.0, "a dropped slot charges no bits");
+        let x = [1.5, -2.5, 0.5, 3.0];
+        let ma = a.transmit(1, &x);
+        let mb = b.transmit(1, &x);
+        assert!(!ma.is_skip());
+        assert_eq!(a.public_view(), b.public_view(), "rounding streams diverged");
+        assert_eq!(ma.payload_bits(), mb.payload_bits());
+    }
+
+    #[test]
+    fn faults_compose_with_censoring() {
+        // Faults wrap *outside* the censor policy: a dropped slot skips
+        // the censor check entirely, so the censor threshold still decays
+        // by iteration index, not by transmission count.
+        let schedule = FaultSchedule::new(0, 0.0).with_crash(0, 0, 2);
+        let inner = Censored::new(Box::new(DenseCompressor::new(2)), 1.0, 0.5);
+        let mut link = FaultyLink::new(Box::new(inner), schedule, 0);
+        assert!(link.transmit(0, &[5.0, 5.0]).is_skip(), "dropped despite a big move");
+        assert!(link.transmit(1, &[5.0, 5.0]).is_skip());
+        // k=2: rejoined; ‖(5,5)‖ ≈ 7.07 ≥ 0.25 ⇒ transmits.
+        assert!(!link.transmit(2, &[5.0, 5.0]).is_skip());
+        assert_eq!(link.public_view(), &[5.0, 5.0]);
+        // k=3: threshold 0.125, tiny move ⇒ the *censor* skips now.
+        assert!(link.transmit(3, &[5.0, 5.05]).is_skip());
+    }
+
+    #[test]
+    fn factory_wraps_one_link_per_worker() {
+        let schedule = FaultSchedule::new(1, 0.0).with_crash(1, 0, 5);
+        let mut links = faulty_links(dense_links(2, 3), &schedule);
+        assert_eq!(links.len(), 3);
+        assert!(links[0].describe().starts_with("faulty(dense"));
+        // Only worker 1 is inside the crash window.
+        assert!(!links[0].transmit(0, &[1.0, 1.0]).is_skip());
+        assert!(links[1].transmit(0, &[1.0, 1.0]).is_skip());
+        assert!(!links[2].transmit(0, &[1.0, 1.0]).is_skip());
+        // message_bits passes through the wrapper.
+        let q = faulty_links(quant_links(3, 2, 8, 1), &schedule);
+        assert_eq!(q[0].message_bits(), 3.0 * 8.0 + 64.0);
+    }
+}

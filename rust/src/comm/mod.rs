@@ -15,14 +15,20 @@
 //! either rely on the meter's default payload (a dense `d`-vector of f64,
 //! set once per run by the driver) or pass the exact size through the
 //! `*_bits` variants (the quantized engines do). See [`quantize`] for the
-//! compressors that shrink those payloads, and [`policy`] for the
+//! compressors that shrink those payloads, [`policy`] for the
 //! [`LinkPolicy`] seam that additionally decides *whether* a slot is
 //! occupied at all (censored slots charge nothing and are tallied in
-//! [`Meter::censored`]).
+//! [`Meter::censored`]), and [`fault`] for the seeded fault-injection
+//! layer that drops slots through the same seam (a dropped slot is
+//! indistinguishable from a censored one to the meter: 0 TC, 0 bits).
 
+pub mod fault;
 pub mod policy;
 pub mod quantize;
 
+pub use fault::{
+    faulty_links, validate_fault_rate, CrashWindow, FaultSchedule, FaultyLink, PartitionWindow,
+};
 pub use policy::{
     censored_dense_links, censored_quant_links, dense_links, quant_links, validate_censor_params,
     CensorSchedule, Censored, EverySlot, LinkPolicy,

@@ -27,7 +27,7 @@
 
 pub mod worker;
 
-use crate::comm::{dense_links, LinkPolicy, Meter};
+use crate::comm::{dense_links, faulty_links, FaultSchedule, LinkPolicy, Meter};
 use crate::metrics::{IterRecord, Trace};
 use crate::model::Problem;
 use crate::optim::RunOptions;
@@ -143,11 +143,19 @@ pub fn train_graph_spec<'p>(
         ));
     }
     let (rho, links, name) = match *spec {
-        AlgoSpec::Ggadmm { rho, graph: kind, .. } => (
-            rho,
-            dense_links(problem.dim, n),
-            format!("GGADMM-dist(rho={rho},graph={kind})"),
-        ),
+        AlgoSpec::Ggadmm { rho, graph: kind, fault, .. } => {
+            // Same fault layer as AlgoSpec::chain_wire: wrap the per-worker
+            // policies, keyed by the run seed, so a faulted distributed
+            // GGADMM run replays the faulted sequential engine bit-for-bit.
+            let mut links = dense_links(problem.dim, n);
+            let mut name = format!("GGADMM-dist(rho={rho},graph={kind})");
+            if fault > 0.0 {
+                links = faulty_links(links, &FaultSchedule::new(seed, fault));
+                name.pop();
+                name.push_str(&format!(",fault={fault})"));
+            }
+            (rho, links, name)
+        }
         _ => match spec.chain_wire(problem.dim, n, seed) {
             Some(wire) => (wire.rho, wire.links, wire.name),
             None => {
@@ -178,8 +186,8 @@ pub fn train_with<'p>(
     // Delegate to the single wire factory (AlgoSpec::chain_wire) so this
     // legacy entry point can never drift from the spec-driven path.
     let (spec, seed) = match quant {
-        Some(q) => (AlgoSpec::Qgadmm { rho, bits: q.bits, threads: 1 }, q.seed),
-        None => (AlgoSpec::Gadmm { rho, threads: 1 }, 0),
+        Some(q) => (AlgoSpec::Qgadmm { rho, bits: q.bits, fault: 0.0, threads: 1 }, q.seed),
+        None => (AlgoSpec::Gadmm { rho, fault: 0.0, threads: 1 }, 0),
     };
     train_spec(problem, solvers, &spec, seed, chain, costs, opts)
         .expect("GADMM/Q-GADMM are static-chain specs")
@@ -188,8 +196,14 @@ pub fn train_with<'p>(
 /// The policy- and topology-generic distributed trainer: one worker thread
 /// per shard, one [`LinkPolicy`] per worker on the wire, one mirrored dual
 /// per graph edge.
+///
+/// Public because it is the chaos harness's entry point for *custom* wire
+/// configurations — e.g. wrapping a spec's links in a
+/// [`crate::comm::FaultSchedule`] with explicit crash windows
+/// (`rust/tests/chaos.rs`); the spec-driven paths above cover the plain
+/// `fault=p` knob.
 #[allow(clippy::too_many_arguments)]
-fn train_links<'p>(
+pub fn train_links<'p>(
     problem: &'p Problem,
     solvers: Vec<Box<dyn LocalSolver + Send + 'p>>,
     rho: f64,
@@ -437,7 +451,7 @@ mod tests {
         let p = Problem::from_dataset(&ds, 5);
         let opts = RunOptions::with_target(1e-5, 4000);
         let costs = UnitCosts;
-        let spec = AlgoSpec::Ggadmm { rho: 3.0, graph: GraphKind::Star, threads: 1 };
+        let spec = AlgoSpec::Ggadmm { rho: 3.0, graph: GraphKind::Star, fault: 0.0, threads: 1 };
         let graph = GraphKind::Star.build(5, &crate::topology::Placement::random(
             5, 10.0, &mut Pcg64::seeded(9),
         )).unwrap();
@@ -470,7 +484,7 @@ mod tests {
         let opts = RunOptions::with_target(1e-4, 100);
         let costs = UnitCosts;
         let graph = BipartiteGraph::star(6).unwrap();
-        let spec = AlgoSpec::Ggadmm { rho: 1.0, graph: GraphKind::Star, threads: 1 };
+        let spec = AlgoSpec::Ggadmm { rho: 1.0, graph: GraphKind::Star, fault: 0.0, threads: 1 };
         let err = train_graph_spec(&p, native_solvers(&p), &spec, 1, graph, &costs, &opts)
             .unwrap_err();
         assert!(err.contains("graph has 6 workers"), "{err}");

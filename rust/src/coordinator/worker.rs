@@ -15,7 +15,10 @@
 //! A censored slot still sends a [`Msg::Skip`] through the channel — it
 //! models the receiver's *timeout* (the receiver learns nothing and keeps
 //! its cached view), not a transmission; the leader bills it as a censored
-//! slot with zero payload bits.
+//! slot with zero payload bits. A slot dropped by the fault-injection
+//! layer ([`crate::comm::FaultyLink`]) travels the exact same way, which
+//! is why chaos runs need no worker-side changes: to a receiver, a lost
+//! transmission and a censored one are the same timeout.
 
 use crate::comm::{Decoder, LinkPolicy, Msg};
 use crate::model::LocalLoss;

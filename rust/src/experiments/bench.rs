@@ -308,9 +308,15 @@ fn par_roster(spec: &BenchSpec) -> Vec<AlgoSpec> {
         rho: spec.rho,
         tau: 15,
         mode: RechainMode::Free,
+        fault: 0.0,
         threads: 1,
     });
-    roster.push(AlgoSpec::Ggadmm { rho: spec.rho, graph: GraphKind::Complete, threads: 1 });
+    roster.push(AlgoSpec::Ggadmm {
+        rho: spec.rho,
+        graph: GraphKind::Complete,
+        fault: 0.0,
+        threads: 1,
+    });
     roster
 }
 

@@ -44,10 +44,10 @@ pub fn censored_to_target(trace: &Trace, workers: usize) -> Option<f64> {
 /// and `BENCH_comm.json` always measure the same grid.
 pub fn comparison_roster(rho: f64, bits: u32, tau: f64, mu: f64) -> Vec<AlgoSpec> {
     vec![
-        AlgoSpec::Gadmm { rho, threads: 1 },
-        AlgoSpec::Qgadmm { rho, bits, threads: 1 },
-        AlgoSpec::Cgadmm { rho, tau, mu, threads: 1 },
-        AlgoSpec::Cqgadmm { rho, bits, tau, mu, threads: 1 },
+        AlgoSpec::Gadmm { rho, fault: 0.0, threads: 1 },
+        AlgoSpec::Qgadmm { rho, bits, fault: 0.0, threads: 1 },
+        AlgoSpec::Cgadmm { rho, tau, mu, fault: 0.0, threads: 1 },
+        AlgoSpec::Cqgadmm { rho, bits, tau, mu, fault: 0.0, threads: 1 },
     ]
 }
 

@@ -1,0 +1,351 @@
+//! `gadmm chaos` — the fault-injection robustness grid (`BENCH_chaos.json`).
+//!
+//! Every group engine (GADMM / Q-GADMM / C-GADMM / CQ-GADMM / D-GADMM /
+//! GGADMM) runs on the bench grid at a ladder of seeded per-slot drop
+//! rates (`fault=p`, see `docs/adr/006-fault-injection.md`), and every
+//! cell runs **twice** with the same seed: the schedule is a pure function
+//! of `(seed, worker, iteration)`, so the replay must take the exact same
+//! deterministic path (`Trace::same_path`) — the reproducibility claim
+//! `ci.sh` gates on. Per engine the driver reports convergence / TC /
+//! bits degradation relative to that engine's own clean (`fault=0`) row,
+//! which is what makes the robustness ordering visible: censoring already
+//! tolerates silent slots, so the censored variants degrade more
+//! gracefully in bits-to-target than dense GADMM when the network starts
+//! dropping transmissions.
+//!
+//! The drop schedule leaves wall-clock out of the results by design
+//! (schedule-not-clock); the heavy-tailed straggler model is surfaced as a
+//! *modeled* per-iteration delay column instead, computed from the same
+//! [`FaultSchedule`] without ever sleeping.
+
+use super::bench::{grid, BenchSpec};
+use super::censor::{censored_to_target, comparison_roster};
+use super::run_engine;
+use crate::comm::FaultSchedule;
+use crate::metrics::Trace;
+use crate::model::Problem;
+use crate::optim::{RechainMode, RunOptions};
+use crate::session::AlgoSpec;
+use crate::topology::graph::GraphKind;
+use crate::topology::UnitCosts;
+use crate::util::json::Json;
+use crate::util::table::{fmt_count, Table};
+
+/// Drop-rate ladder of the CI smoke: clean baseline + two lossy rungs.
+pub const QUICK_FAULT_RATES: &[f64] = &[0.0, 0.05, 0.15];
+
+/// Drop-rate ladder of the paper-scale grid.
+pub const FULL_FAULT_RATES: &[f64] = &[0.0, 0.02, 0.05, 0.1, 0.2];
+
+/// Iterations sampled when estimating the modeled straggler delay.
+const STRAGGLER_SAMPLE_ITERS: usize = 200;
+
+/// One chaos cell: a spec at one drop rate, run twice with the same seed.
+pub struct ChaosRow {
+    /// The faulted spec (`fault` set to [`ChaosRow::fault`]).
+    pub spec: AlgoSpec,
+    /// The per-slot drop rate of this cell.
+    pub fault: f64,
+    pub trace: Trace,
+    /// The determinism re-run: same spec, same seed, fresh engine.
+    pub replay: Trace,
+    /// Modeled synchronous-round straggler delay (mean over iterations of
+    /// the slowest worker's Pareto draw) — latency the schedule *would*
+    /// add, never actually slept.
+    pub straggler_delay: f64,
+}
+
+impl ChaosRow {
+    /// Whether the re-run took the exact same deterministic path — the
+    /// seeded-replay invariant, re-checked on every chaos run.
+    pub fn identical(&self) -> bool {
+        self.trace.same_path(&self.replay)
+    }
+}
+
+pub struct ChaosOutput {
+    pub rows: Vec<ChaosRow>,
+    pub rendered: String,
+    pub report: Json,
+}
+
+impl ChaosOutput {
+    /// Whether every cell replayed bit-identically (the `ci.sh` headline).
+    pub fn all_identical(&self) -> bool {
+        self.rows.iter().all(ChaosRow::identical)
+    }
+}
+
+/// All six group engines at one parameterization: the four chain link
+/// policies (shared with `gadmm bench` via [`comparison_roster`]) plus
+/// re-chaining D-GADMM and complete-bipartite GGADMM.
+pub fn chaos_roster(rho: f64, bits: u32, tau: f64, mu: f64) -> Vec<AlgoSpec> {
+    let mut roster = comparison_roster(rho, bits, tau, mu);
+    roster.push(AlgoSpec::Dgadmm {
+        rho,
+        tau: 15,
+        mode: RechainMode::Free,
+        fault: 0.0,
+        threads: 1,
+    });
+    roster.push(AlgoSpec::Ggadmm {
+        rho,
+        graph: GraphKind::Complete,
+        fault: 0.0,
+        threads: 1,
+    });
+    roster
+}
+
+/// Mean over sampled iterations of the slowest worker's straggler draw —
+/// the synchronous-round latency model (every round waits for its slowest
+/// transmitter).
+fn modeled_straggler_delay(schedule: &FaultSchedule, workers: usize, iters: usize) -> f64 {
+    let sample = iters.clamp(1, STRAGGLER_SAMPLE_ITERS);
+    let mut total = 0.0;
+    for k in 0..sample {
+        let worst = (0..workers)
+            .map(|w| schedule.straggler_delay(w, k))
+            .fold(f64::NEG_INFINITY, f64::max);
+        total += worst;
+    }
+    total / sample as f64
+}
+
+/// Run the chaos grid: every roster engine at every drop rate, twice.
+/// Reuses [`grid`] — the same problem, ρ, and target as `gadmm bench` —
+/// so the `fault=0` rows are directly comparable against
+/// `BENCH_comm.json` (the `ci.sh` cross-check).
+pub fn run(quick: bool, seed: u64) -> ChaosOutput {
+    let spec = grid(quick);
+    let rates = if quick { QUICK_FAULT_RATES } else { FULL_FAULT_RATES };
+    run_with(&spec, rates, quick, seed)
+}
+
+/// [`run`] on an explicit grid and rate ladder (tests shrink both).
+pub fn run_with(spec: &BenchSpec, rates: &[f64], quick: bool, seed: u64) -> ChaosOutput {
+    let ds = spec.dataset.build(seed);
+    let problem = Problem::from_dataset(&ds, spec.workers);
+    let costs = UnitCosts;
+    let opts =
+        RunOptions::with_target(spec.target, spec.max_iters).with_stride(spec.record_stride);
+    let roster = chaos_roster(spec.rho, spec.bits, spec.tau, spec.mu);
+
+    let mut rows = Vec::with_capacity(roster.len() * rates.len());
+    for algo in &roster {
+        for &rate in rates {
+            let faulted = algo.with_fault(rate);
+            let trace = run_engine(&mut *faulted.build(&problem, seed), &problem, &costs, &opts);
+            let replay = run_engine(&mut *faulted.build(&problem, seed), &problem, &costs, &opts);
+            let schedule = FaultSchedule::new(seed, rate);
+            let straggler_delay = modeled_straggler_delay(
+                &schedule,
+                spec.workers,
+                trace.records.last().map(|r| r.iter).unwrap_or(1),
+            );
+            rows.push(ChaosRow {
+                spec: faulted,
+                fault: rate,
+                trace,
+                replay,
+                straggler_delay,
+            });
+        }
+    }
+
+    // Degradation is measured against the same engine's own clean row, so
+    // the ratios isolate the fault response from the engines' very
+    // different absolute bit budgets.
+    let baseline = |row: &ChaosRow| -> Option<(f64, f64)> {
+        let clean = rows
+            .iter()
+            .find(|r| r.fault == 0.0 && r.spec.kind() == row.spec.kind())?;
+        Some((
+            clean.trace.iters_to_target()? as f64,
+            clean.trace.bits_to_target()?,
+        ))
+    };
+    let degradation = |row: &ChaosRow| -> (Option<f64>, Option<f64>) {
+        match baseline(row) {
+            Some((iters0, bits0)) => (
+                row.trace.iters_to_target().map(|k| k as f64 / iters0),
+                row.trace.bits_to_target().map(|b| b / bits0),
+            ),
+            None => (None, None),
+        }
+    };
+
+    let mut table = Table::new(vec![
+        "Algorithm",
+        "fault",
+        "iters→target",
+        "TC→target",
+        "bits→target",
+        "iters ×",
+        "bits ×",
+        "straggler/it",
+        "replay",
+    ]);
+    for row in &rows {
+        let t = &row.trace;
+        let (iters_x, bits_x) = degradation(row);
+        table.row(vec![
+            t.algorithm.clone(),
+            format!("{}", row.fault),
+            t.iters_to_target().map(fmt_count).unwrap_or_else(|| "—".into()),
+            t.tc_to_target()
+                .map(|c| fmt_count(c as usize))
+                .unwrap_or_else(|| "—".into()),
+            t.bits_to_target()
+                .map(|b| format!("{b:.3e}"))
+                .unwrap_or_else(|| "—".into()),
+            iters_x.map(|x| format!("{x:.2}")).unwrap_or_else(|| "—".into()),
+            bits_x.map(|x| format!("{x:.2}")).unwrap_or_else(|| "—".into()),
+            format!("{:.2}", row.straggler_delay),
+            if row.identical() { "identical".into() } else { "DIVERGED".into() },
+        ]);
+    }
+    let rendered = format!(
+        "\nchaos — {} (N={}, rho={}, b={}, tau={}, mu={}), target {:.0e}, drop rates {:?}{}\n{}",
+        spec.dataset.name(),
+        spec.workers,
+        spec.rho,
+        spec.bits,
+        spec.tau,
+        spec.mu,
+        spec.target,
+        rates,
+        if quick { " [quick]" } else { "" },
+        table.render()
+    );
+
+    let report = Json::obj()
+        .set("experiment", "bench_chaos")
+        .set("quick", quick)
+        .set("dataset", spec.dataset.name())
+        .set("workers", spec.workers)
+        .set("rho", spec.rho)
+        .set("bits", spec.bits as usize)
+        .set("tau", spec.tau)
+        .set("mu", spec.mu)
+        .set("target", spec.target)
+        .set("seed", seed as usize)
+        .set("fault_rates", Json::Arr(rates.iter().map(|&r| Json::Num(r)).collect()))
+        .set(
+            "all_identical",
+            rows.iter().all(ChaosRow::identical),
+        )
+        .set(
+            "rows",
+            Json::Arr(
+                rows.iter()
+                    .map(|row| {
+                        let t = &row.trace;
+                        let (iters_x, bits_x) = degradation(row);
+                        Json::obj()
+                            .set("spec", row.spec.spec_string())
+                            .set("algorithm", t.algorithm.as_str())
+                            .set("fault_rate", row.fault)
+                            .set(
+                                "iters_to_target",
+                                t.iters_to_target()
+                                    .map(|k| Json::Num(k as f64))
+                                    .unwrap_or(Json::Null),
+                            )
+                            .set(
+                                "tc_to_target",
+                                t.tc_to_target().map(Json::Num).unwrap_or(Json::Null),
+                            )
+                            .set(
+                                "censored_to_target",
+                                censored_to_target(t, spec.workers)
+                                    .map(Json::Num)
+                                    .unwrap_or(Json::Null),
+                            )
+                            .set(
+                                "bits_to_target",
+                                t.bits_to_target().map(Json::Num).unwrap_or(Json::Null),
+                            )
+                            .set(
+                                "iters_degradation",
+                                iters_x.map(Json::Num).unwrap_or(Json::Null),
+                            )
+                            .set(
+                                "bits_degradation",
+                                bits_x.map(Json::Num).unwrap_or(Json::Null),
+                            )
+                            .set("modeled_straggler_delay", row.straggler_delay)
+                            .set("identical", row.identical())
+                            .set("final_error", t.final_error())
+                    })
+                    .collect(),
+            ),
+        );
+    ChaosOutput {
+        rows,
+        rendered,
+        report,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::DatasetKind;
+    use crate::session::{DEFAULT_CENSOR_MU, DEFAULT_CENSOR_TAU};
+
+    fn tiny_grid() -> BenchSpec {
+        BenchSpec {
+            dataset: DatasetKind::SyntheticLinreg,
+            workers: 4,
+            rho: 5.0,
+            bits: 8,
+            tau: DEFAULT_CENSOR_TAU,
+            mu: DEFAULT_CENSOR_MU,
+            target: 1e-2,
+            max_iters: 4_000,
+            record_stride: 1,
+        }
+    }
+
+    #[test]
+    fn roster_covers_all_six_group_engines() {
+        let kinds: Vec<&str> = chaos_roster(5.0, 8, 1.0, 0.93)
+            .iter()
+            .map(|s| s.kind())
+            .collect();
+        assert_eq!(kinds, ["gadmm", "qgadmm", "cgadmm", "cqgadmm", "dgadmm", "ggadmm"]);
+    }
+
+    #[test]
+    fn grid_replays_bit_identically_and_reports_degradation() {
+        let out = run_with(&tiny_grid(), &[0.0, 0.1], true, 7);
+        assert_eq!(out.rows.len(), 12, "6 engines × 2 rates");
+        assert!(out.all_identical(), "a seeded chaos run must replay exactly");
+        for row in &out.rows {
+            assert!(
+                row.trace.iters_to_target().is_some(),
+                "{} at fault={} did not converge ({})",
+                row.spec,
+                row.fault,
+                row.trace.final_error()
+            );
+            assert!(row.straggler_delay >= 1.0, "Pareto delays sit above xm");
+        }
+        // Clean rows degrade by exactly 1×; faulted rows should not beat
+        // their own clean baseline by more than ADMM's nonmonotone noise.
+        let iters: Vec<usize> =
+            out.rows.iter().map(|r| r.trace.iters_to_target().unwrap()).collect();
+        for pair in iters.chunks(2) {
+            assert!(
+                pair[1] as f64 >= pair[0] as f64 * 0.8,
+                "faulted {} ≪ clean {}",
+                pair[1],
+                pair[0]
+            );
+        }
+        assert!(out.report.path("all_identical").is_some());
+        assert_eq!(out.report.path("experiment").unwrap().as_str(), Some("bench_chaos"));
+        assert!(out.rendered.contains("chaos"));
+    }
+}

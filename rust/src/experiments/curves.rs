@@ -77,7 +77,7 @@ impl Figure {
     pub fn roster(&self) -> Vec<AlgoSpec> {
         let xi = self.lag_xi();
         let mut roster: Vec<AlgoSpec> =
-            self.rhos().into_iter().map(|rho| AlgoSpec::Gadmm { rho, threads: 1 }).collect();
+            self.rhos().into_iter().map(|rho| AlgoSpec::Gadmm { rho, fault: 0.0, threads: 1 }).collect();
         roster.extend([
             AlgoSpec::Gd,
             AlgoSpec::Lag { variant: LagVariant::Wk, xi },
@@ -166,7 +166,7 @@ mod tests {
         let roster = Figure::Fig2.roster();
         // 3 GADMM ρ points + 7 baselines, in plot order.
         assert_eq!(roster.len(), 10);
-        assert_eq!(roster[0], AlgoSpec::Gadmm { rho: 3.0, threads: 1 });
+        assert_eq!(roster[0], AlgoSpec::Gadmm { rho: 3.0, fault: 0.0, threads: 1 });
         assert_eq!(roster[3], AlgoSpec::Gd);
         assert_eq!(
             roster[4],

@@ -115,7 +115,7 @@ pub fn run_panel(
         }
         // GADMM: build the Appendix-D chain for this placement and run.
         let logical = chain::rechain(workers, &costs, &mut rng);
-        let mut g = AlgoSpec::Gadmm { rho, threads: 1 }.build_in(&BuildCtx {
+        let mut g = AlgoSpec::Gadmm { rho, fault: 0.0, threads: 1 }.build_in(&BuildCtx {
             problem: &problem,
             costs: &costs,
             seed,
@@ -181,7 +181,7 @@ pub fn run_acv(target: f64, max_iters: usize, seed: u64) -> (Trace, Json) {
     let problem = Problem::from_dataset(&ds, 4);
     let opts = RunOptions::with_target(target, max_iters);
     let trace = run_engine(
-        &mut *AlgoSpec::Gadmm { rho: 1.0, threads: 1 }.build(&problem, seed),
+        &mut *AlgoSpec::Gadmm { rho: 1.0, fault: 0.0, threads: 1 }.build(&problem, seed),
         &problem,
         &UnitCosts,
         &opts,

@@ -90,7 +90,7 @@ pub fn run(
         let costs = DynamicCosts::new(initial_model.clone());
         let mut chain_rng = Pcg64::new(seed, 0xc4a1);
         let logical = chain::rechain(workers, &costs, &mut chain_rng);
-        let mut engine = AlgoSpec::Gadmm { rho, threads: 1 }.build_in(&BuildCtx {
+        let mut engine = AlgoSpec::Gadmm { rho, fault: 0.0, threads: 1 }.build_in(&BuildCtx {
             problem: &problem,
             costs: &costs,
             seed,
@@ -114,7 +114,7 @@ pub fn run(
     let dgadmm = {
         let costs = DynamicCosts::new(initial_model);
         let spec =
-            AlgoSpec::Dgadmm { rho, tau: coherence, mode: RechainMode::Announced, threads: 1 };
+            AlgoSpec::Dgadmm { rho, tau: coherence, mode: RechainMode::Announced, fault: 0.0, threads: 1 };
         let mut engine = spec.build_in(&BuildCtx {
             problem: &problem,
             costs: &costs,

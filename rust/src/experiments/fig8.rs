@@ -38,8 +38,8 @@ pub fn run(workers: usize, rho: f64, target: f64, max_iters: usize, seed: u64) -
     // sequence), and standard parameter-server ADMM (star topology).
     let logical = chain::rechain(workers, &costs, &mut rng);
     let roster: [(AlgoSpec, Option<Chain>); 3] = [
-        (AlgoSpec::Gadmm { rho, threads: 1 }, Some(logical)),
-        (AlgoSpec::Dgadmm { rho, tau: 1, mode: RechainMode::Free, threads: 1 }, None),
+        (AlgoSpec::Gadmm { rho, fault: 0.0, threads: 1 }, Some(logical)),
+        (AlgoSpec::Dgadmm { rho, tau: 1, mode: RechainMode::Free, fault: 0.0, threads: 1 }, None),
         (AlgoSpec::Admm { rho }, None),
     ];
     let traces: Vec<Trace> = roster

@@ -21,9 +21,14 @@
 //! * [`bench::run_par`] — the serial-vs-pool execution-backend grid
 //!   (`BENCH_par.json`: wall clocks, speedup, per-phase compute seconds,
 //!   bit-identity check; see `docs/PERFORMANCE.md`)
+//! * [`chaos::run`]    — the fault-injection robustness grid behind
+//!   `gadmm chaos` (`BENCH_chaos.json`: all six group engines × a ladder
+//!   of seeded drop rates, each cell replayed for bit-identity; see
+//!   `docs/adr/006-fault-injection.md`)
 
 pub mod bench;
 pub mod censor;
+pub mod chaos;
 pub mod curves;
 pub mod fig6;
 pub mod fig7;

@@ -49,8 +49,8 @@ pub fn run(
 
     // Dense GADMM followed by one Q-GADMM per bit-width, at the same ρ so
     // the comparison isolates quantization.
-    let mut roster = vec![AlgoSpec::Gadmm { rho, threads: 1 }];
-    roster.extend(bits.iter().map(|&b| AlgoSpec::Qgadmm { rho, bits: b, threads: 1 }));
+    let mut roster = vec![AlgoSpec::Gadmm { rho, fault: 0.0, threads: 1 }];
+    roster.extend(bits.iter().map(|&b| AlgoSpec::Qgadmm { rho, bits: b, fault: 0.0, threads: 1 }));
     let traces = run_roster(&roster, &problem, &costs, &opts, seed);
 
     let dense_bits = traces[0].bits_to_target();

@@ -54,7 +54,7 @@ fn roster_for(kind: DatasetKind) -> Vec<AlgoSpec> {
     vec![
         AlgoSpec::Lag { variant: LagVariant::Ps, xi },
         AlgoSpec::Lag { variant: LagVariant::Wk, xi },
-        AlgoSpec::Gadmm { rho: rho_for(kind), threads: 1 },
+        AlgoSpec::Gadmm { rho: rho_for(kind), fault: 0.0, threads: 1 },
         AlgoSpec::Gd,
     ]
 }

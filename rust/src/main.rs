@@ -17,6 +17,8 @@
 //! gadmm graph  [--workers 24] [--rho 5] [--radius 2.5,3.5,5] [--quick]
 //! gadmm bench  [--quick] [--threads K] [--out results/]
 //!              — writes BENCH_comm.json + BENCH_par.json (serial vs pool)
+//! gadmm chaos  [--quick] [--out results/]
+//!              — writes BENCH_chaos.json (fault-injection robustness grid)
 //! gadmm all   — every table and figure, reports under results/
 //! ```
 
@@ -24,7 +26,8 @@ use gadmm::config::{validate_quant_bits, DatasetKind, RunConfig};
 use gadmm::coordinator;
 use gadmm::data::partition_even;
 use gadmm::experiments::{
-    bench, censor, curves, fig6, fig7, fig8, graph, qgadmm, table1, write_report, write_trace_csv,
+    bench, censor, chaos, curves, fig6, fig7, fig8, graph, qgadmm, table1, write_report,
+    write_trace_csv,
 };
 use gadmm::model::Problem;
 use gadmm::optim::RunOptions;
@@ -281,6 +284,21 @@ fn dispatch(sub: &str, args: &Args) -> Result<(), String> {
             println!("report: {}", path.display());
             Ok(())
         }
+        "chaos" => {
+            let quick = args.flag("quick");
+            let seed = args.get_u64("seed", 1)?;
+            let out = chaos::run(quick, seed);
+            println!("{}", out.rendered);
+            let path = write_report(&out_dir(args), "BENCH_chaos", &out.report)
+                .map_err(|e| e.to_string())?;
+            println!("report: {}", path.display());
+            if !out.all_identical() {
+                return Err(
+                    "seeded chaos replay diverged — the fault layer lost determinism".into()
+                );
+            }
+            Ok(())
+        }
         "all" => {
             for s in [
                 "table1", "fig2", "fig3", "fig4", "fig5", "fig6", "fig7", "fig8", "qgadmm",
@@ -361,8 +379,8 @@ fn cmd_train(args: &Args) -> Result<(), String> {
             parsed
         }
         None => match cfg.quant_bits {
-            Some(bits) => AlgoSpec::Qgadmm { rho: cfg.rho, bits, threads: 1 },
-            None => AlgoSpec::Gadmm { rho: cfg.rho, threads: 1 },
+            Some(bits) => AlgoSpec::Qgadmm { rho: cfg.rho, bits, fault: 0.0, threads: 1 },
+            None => AlgoSpec::Gadmm { rho: cfg.rho, fault: 0.0, threads: 1 },
         },
     };
     if spec.threads() > 1 {
@@ -515,12 +533,13 @@ fn cmd_sweep(args: &Args) -> Result<(), String> {
         // end-to-end (parse → build → run → report) on every CI run.
         SweepSpec {
             algos: vec![
-                AlgoSpec::Gadmm { rho: 5.0, threads: 1 },
+                AlgoSpec::Gadmm { rho: 5.0, fault: 0.0, threads: 1 },
                 AlgoSpec::Gd,
                 AlgoSpec::Cgadmm {
                     rho: 5.0,
                     tau: gadmm::session::DEFAULT_CENSOR_TAU,
                     mu: gadmm::session::DEFAULT_CENSOR_MU,
+                    fault: 0.0,
                     threads: 1,
                 },
                 AlgoSpec::Cqgadmm {
@@ -528,6 +547,7 @@ fn cmd_sweep(args: &Args) -> Result<(), String> {
                     bits: 8,
                     tau: gadmm::session::DEFAULT_CENSOR_TAU,
                     mu: gadmm::session::DEFAULT_CENSOR_MU,
+                    fault: 0.0,
                     threads: 1,
                 },
             ],
@@ -617,7 +637,12 @@ subcommands:
            (--threads K sets the pooled column's width; --quick for CI;
             every group engine accepts 'threads=K' in its spec string,
             e.g. --algos 'gadmm:rho=5,threads=4' — bit-identical, faster)
-  all      every table/figure above (train/sweep/bench excluded);
+  chaos    fault-injection robustness grid -> BENCH_chaos.json
+           (all six group engines x seeded drop rates, every cell run
+            twice and checked for bit-identical replay; --quick for CI;
+            every group engine accepts 'fault=p' in its spec string,
+            e.g. --algos 'cqgadmm:rho=5,fault=0.1')
+  all      every table/figure above (train/sweep/bench/chaos excluded);
            JSON reports under results/
 
 common options: --out DIR (default results/), --csv, --seed S";

@@ -72,6 +72,13 @@ impl<'a> Cgadmm<'a> {
         self.core.set_threads(threads);
     }
 
+    /// See [`GroupAdmmCore::install_faults`] — the `fault=p` spec knob
+    /// routes here. A dropped slot bypasses the censor check entirely, so
+    /// the censor threshold still decays by iteration index.
+    pub fn install_faults(&mut self, schedule: &crate::comm::FaultSchedule) {
+        self.core.install_faults(schedule);
+    }
+
     pub fn chain(&self) -> &Chain {
         self.core.chain()
     }
@@ -159,6 +166,13 @@ impl<'a> Cqgadmm<'a> {
     /// See [`GroupAdmmCore::set_threads`] — bit-identical at any width.
     pub fn set_threads(&mut self, threads: usize) {
         self.core.set_threads(threads);
+    }
+
+    /// See [`GroupAdmmCore::install_faults`] — the `fault=p` spec knob
+    /// routes here. A dropped slot touches neither the censor schedule nor
+    /// the quantizer.
+    pub fn install_faults(&mut self, schedule: &crate::comm::FaultSchedule) {
+        self.core.install_faults(schedule);
     }
 
     pub fn chain(&self) -> &Chain {

@@ -58,7 +58,7 @@
 //! `docs/adr/005-exec-backend.md`).
 
 use super::exec::{Exec, SlotSlice, SlotWriter};
-use crate::comm::{LinkPolicy, Meter, Msg};
+use crate::comm::{faulty_links, FaultSchedule, LinkPolicy, Meter, Msg};
 use crate::linalg::vector as vec_ops;
 use crate::model::Problem;
 use crate::topology::chain::Chain;
@@ -228,6 +228,21 @@ impl<'a> GroupAdmmCore<'a> {
     /// are homogeneous across workers and constant-size).
     pub fn message_bits(&self) -> f64 {
         self.links[0].message_bits()
+    }
+
+    /// Wrap every link policy with a seeded [`FaultSchedule`]: worker `w`'s
+    /// broadcast at iteration `k` becomes [`Msg::Skip`] whenever the
+    /// schedule drops `(w, k)`, with the wrapped policy left untouched on
+    /// dropped slots (its quantizer RNG/anchor and censor threshold state
+    /// advance only on slots that reach the air). Like the dual and the
+    /// link itself, the wrapper travels with the *physical* worker across
+    /// D-GADMM re-chains, so a crash window keeps following its worker
+    /// through slot re-maps. Call before the first `step`; faults compose
+    /// (wrapping twice ORs the schedules), but the spec layer installs at
+    /// most one.
+    pub fn install_faults(&mut self, schedule: &FaultSchedule) {
+        let links = std::mem::take(&mut self.links);
+        self.links = faulty_links(links, schedule);
     }
 
     /// One full iteration `k`: head phase, tail phase, dual ascent. Each
@@ -685,6 +700,31 @@ mod tests {
         assert_eq!(ma.tc_unit, mb.tc_unit);
         assert_eq!(ma.bits, mb.bits);
         assert_eq!(ma.tc_energy, mb.tc_energy);
+    }
+
+    #[test]
+    fn installed_faults_drop_slots_and_meter_them_like_censoring() {
+        let p = problem(6, 4);
+        let mut core =
+            GroupAdmmCore::new(&p, 3.0, Chain::sequential(4), dense_links(p.dim, 4));
+        core.install_faults(&FaultSchedule::new(1, 0.0).with_crash(2, 0, 3));
+        let costs = UnitCosts;
+        let mut meter = Meter::new(&costs);
+        core.step(0, &mut meter);
+        assert_eq!(meter.censored, 1, "only the crashed worker's slot drops");
+        assert_eq!(meter.tc_unit, 3.0);
+        // The crashed worker's public view stays frozen while its private
+        // iterate keeps solving.
+        assert!(core.hats()[2].iter().all(|&x| x == 0.0));
+        assert!(core.thetas()[2].iter().any(|&x| x != 0.0));
+        for k in 1..3 {
+            core.step(k, &mut meter);
+        }
+        assert_eq!(meter.censored, 3);
+        // Rejoin at k=3: the slot transmits again and the view catches up.
+        core.step(3, &mut meter);
+        assert_eq!(meter.censored, 3);
+        assert_eq!(core.hats()[2], core.thetas()[2]);
     }
 
     #[test]

@@ -136,6 +136,15 @@ impl<'a> Dgadmm<'a> {
         self.inner.set_threads(threads);
     }
 
+    /// See [`crate::optim::GroupAdmmCore::install_faults`] — the `fault=p`
+    /// spec knob routes here. The fault wrappers travel with the physical
+    /// worker across re-chains (links are indexed by worker, not chain
+    /// position), so a crash window keeps tracking the same worker no
+    /// matter how often the logical chain is rebuilt.
+    pub fn install_faults(&mut self, schedule: &crate::comm::FaultSchedule) {
+        self.inner.install_faults(schedule);
+    }
+
     /// Builder-style override of the dual handling across re-chains.
     pub fn with_dual_handling(mut self, duals: DualHandling) -> Self {
         self.duals = duals;

@@ -99,6 +99,12 @@ impl<'a> Ggadmm<'a> {
         self.core.set_threads(threads);
     }
 
+    /// See [`GroupAdmmCore::install_faults`] — the `fault=p` spec knob
+    /// routes here.
+    pub fn install_faults(&mut self, schedule: &crate::comm::FaultSchedule) {
+        self.core.install_faults(schedule);
+    }
+
     /// The communication topology.
     pub fn graph(&self) -> &BipartiteGraph {
         self.core.graph()

@@ -68,6 +68,12 @@ impl<'a> Qgadmm<'a> {
         self.core.set_threads(threads);
     }
 
+    /// See [`GroupAdmmCore::install_faults`] — the `fault=p` spec knob
+    /// routes here.
+    pub fn install_faults(&mut self, schedule: &crate::comm::FaultSchedule) {
+        self.core.install_faults(schedule);
+    }
+
     pub fn chain(&self) -> &Chain {
         self.core.chain()
     }

@@ -9,8 +9,8 @@
 //! [`AlgoSpec::build`] registry (see `docs/adr/002-algospec-registry.md`).
 
 use crate::comm::{
-    censored_dense_links, censored_quant_links, dense_links, quant_links, validate_censor_params,
-    LinkPolicy,
+    censored_dense_links, censored_quant_links, dense_links, faulty_links, quant_links,
+    validate_censor_params, validate_fault_rate, FaultSchedule, LinkPolicy,
 };
 use crate::config::validate_quant_bits;
 use crate::model::Problem;
@@ -57,19 +57,21 @@ pub enum AlgoSpec {
     /// intra-group execution width (the paper's "heads update in
     /// parallel", realized on a pool — results are bit-identical at any
     /// width, see `docs/adr/005-exec-backend.md`); every group engine
-    /// carries it and 1 means serial.
-    Gadmm { rho: f64, threads: usize },
+    /// carries it and 1 means serial. `fault` is the seeded per-slot drop
+    /// rate of the chaos harness (`docs/adr/006-fault-injection.md`);
+    /// every group engine carries it and 0 means a perfect network.
+    Gadmm { rho: f64, fault: f64, threads: usize },
     /// Q-GADMM: GADMM with stochastically quantized model exchange.
-    Qgadmm { rho: f64, bits: u32, threads: usize },
+    Qgadmm { rho: f64, bits: u32, fault: f64, threads: usize },
     /// C-GADMM: GADMM with slots censored under the threshold `τ·μ^k`.
-    Cgadmm { rho: f64, tau: f64, mu: f64, threads: usize },
+    Cgadmm { rho: f64, tau: f64, mu: f64, fault: f64, threads: usize },
     /// CQ-GADMM: censoring composed with stochastic quantization.
-    Cqgadmm { rho: f64, bits: u32, tau: f64, mu: f64, threads: usize },
+    Cqgadmm { rho: f64, bits: u32, tau: f64, mu: f64, fault: f64, threads: usize },
     /// GGADMM: group ADMM generalized to an arbitrary bipartite graph
     /// (`graph = chain | complete | star | rgg:radius=R`).
-    Ggadmm { rho: f64, graph: GraphKind, threads: usize },
+    Ggadmm { rho: f64, graph: GraphKind, fault: f64, threads: usize },
     /// D-GADMM: GADMM re-chaining every `tau` iterations.
-    Dgadmm { rho: f64, tau: usize, mode: RechainMode, threads: usize },
+    Dgadmm { rho: f64, tau: usize, mode: RechainMode, fault: f64, threads: usize },
     /// LAG-WK / LAG-PS with trigger scale ξ.
     Lag { variant: LagVariant, xi: f64 },
     /// Cycle-IAG / R-IAG.
@@ -170,33 +172,48 @@ impl AlgoSpec {
         )
     }
 
-    /// Canonical CLI string; `parse` inverts this exactly. The execution
-    /// width is serialized as a trailing `,threads=K` only when K > 1, so
+    /// Canonical CLI string; `parse` inverts this exactly. The fault rate
+    /// is serialized as `,fault=p` only when p > 0 and the execution
+    /// width as a trailing `,threads=K` only when K > 1, so unfaulted
     /// serial specs keep their historical canonical strings.
     pub fn spec_string(&self) -> String {
         match *self {
-            AlgoSpec::Gadmm { rho, threads } => {
-                format!("gadmm:rho={rho}{}", threads_suffix(threads))
+            AlgoSpec::Gadmm { rho, fault, threads } => {
+                format!("gadmm:rho={rho}{}{}", fault_suffix(fault), threads_suffix(threads))
             }
-            AlgoSpec::Qgadmm { rho, bits, threads } => {
-                format!("qgadmm:rho={rho},bits={bits}{}", threads_suffix(threads))
-            }
-            AlgoSpec::Cgadmm { rho, tau, mu, threads } => {
-                format!("cgadmm:rho={rho},tau={tau},mu={mu}{}", threads_suffix(threads))
-            }
-            AlgoSpec::Cqgadmm { rho, bits, tau, mu, threads } => {
+            AlgoSpec::Qgadmm { rho, bits, fault, threads } => {
                 format!(
-                    "cqgadmm:rho={rho},bits={bits},tau={tau},mu={mu}{}",
+                    "qgadmm:rho={rho},bits={bits}{}{}",
+                    fault_suffix(fault),
                     threads_suffix(threads)
                 )
             }
-            AlgoSpec::Ggadmm { rho, graph, threads } => {
-                format!("ggadmm:rho={rho},graph={graph}{}", threads_suffix(threads))
-            }
-            AlgoSpec::Dgadmm { rho, tau, mode, threads } => {
+            AlgoSpec::Cgadmm { rho, tau, mu, fault, threads } => {
                 format!(
-                    "dgadmm:rho={rho},tau={tau},mode={}{}",
+                    "cgadmm:rho={rho},tau={tau},mu={mu}{}{}",
+                    fault_suffix(fault),
+                    threads_suffix(threads)
+                )
+            }
+            AlgoSpec::Cqgadmm { rho, bits, tau, mu, fault, threads } => {
+                format!(
+                    "cqgadmm:rho={rho},bits={bits},tau={tau},mu={mu}{}{}",
+                    fault_suffix(fault),
+                    threads_suffix(threads)
+                )
+            }
+            AlgoSpec::Ggadmm { rho, graph, fault, threads } => {
+                format!(
+                    "ggadmm:rho={rho},graph={graph}{}{}",
+                    fault_suffix(fault),
+                    threads_suffix(threads)
+                )
+            }
+            AlgoSpec::Dgadmm { rho, tau, mode, fault, threads } => {
+                format!(
+                    "dgadmm:rho={rho},tau={tau},mode={}{}{}",
                     mode_str(mode),
+                    fault_suffix(fault),
                     threads_suffix(threads)
                 )
             }
@@ -220,7 +237,7 @@ impl AlgoSpec {
     /// use gadmm::session::AlgoSpec;
     ///
     /// let spec = AlgoSpec::parse("qgadmm:rho=3,bits=4").unwrap();
-    /// assert_eq!(spec, AlgoSpec::Qgadmm { rho: 3.0, bits: 4, threads: 1 });
+    /// assert_eq!(spec, AlgoSpec::Qgadmm { rho: 3.0, bits: 4, fault: 0.0, threads: 1 });
     /// assert_eq!(spec.spec_string(), "qgadmm:rho=3,bits=4");
     ///
     /// // The generalized-graph engine takes its topology as a knob:
@@ -233,8 +250,15 @@ impl AlgoSpec {
     /// assert_eq!(par.threads(), 4);
     /// assert_eq!(par.spec_string(), "gadmm:rho=5,threads=4");
     ///
+    /// // … and a seeded per-slot drop rate (0 = perfect network): the
+    /// // chaos harness's fault-injection knob.
+    /// let faulty = AlgoSpec::parse("gadmm:rho=5,fault=0.1").unwrap();
+    /// assert_eq!(faulty.fault_rate(), 0.1);
+    /// assert_eq!(faulty.spec_string(), "gadmm:rho=5,fault=0.1");
+    ///
     /// assert!(AlgoSpec::parse("gadmm:rho=-1").is_err());
     /// assert!(AlgoSpec::parse("gadmm:threads=0").is_err());
+    /// assert!(AlgoSpec::parse("gadmm:fault=1").is_err());
     /// assert!(AlgoSpec::parse("ggadmm:graph=ring").is_err());
     /// ```
     pub fn parse(s: &str) -> Result<AlgoSpec, String> {
@@ -247,11 +271,13 @@ impl AlgoSpec {
         let spec = match kind {
             "gadmm" => AlgoSpec::Gadmm {
                 rho: params.take_rho(5.0)?,
+                fault: params.take_fault()?,
                 threads: params.take_threads()?,
             },
             "qgadmm" => AlgoSpec::Qgadmm {
                 rho: params.take_rho(5.0)?,
                 bits: validate_quant_bits(params.take_u64("bits", 8)?)?,
+                fault: params.take_fault()?,
                 threads: params.take_threads()?,
             },
             "cgadmm" => {
@@ -260,6 +286,7 @@ impl AlgoSpec {
                     rho: params.take_rho(5.0)?,
                     tau,
                     mu,
+                    fault: params.take_fault()?,
                     threads: params.take_threads()?,
                 }
             }
@@ -270,6 +297,7 @@ impl AlgoSpec {
                     bits: validate_quant_bits(params.take_u64("bits", 8)?)?,
                     tau,
                     mu,
+                    fault: params.take_fault()?,
                     threads: params.take_threads()?,
                 }
             }
@@ -277,6 +305,7 @@ impl AlgoSpec {
                 rho: params.take_rho(5.0)?,
                 graph: GraphKind::parse(&params.take_str("graph", "chain")?)
                     .map_err(|e| format!("ggadmm: {e}"))?,
+                fault: params.take_fault()?,
                 threads: params.take_threads()?,
             },
             "dgadmm" => AlgoSpec::Dgadmm {
@@ -290,6 +319,7 @@ impl AlgoSpec {
                     "announced" => RechainMode::Announced,
                     other => return Err(format!("unknown dgadmm mode '{other}' (free|announced)")),
                 },
+                fault: params.take_fault()?,
                 threads: params.take_threads()?,
             },
             "lag" => AlgoSpec::Lag {
@@ -323,28 +353,36 @@ impl AlgoSpec {
     }
 
     /// JSON form: a flat object tagged by `algo`; inverse of `from_json`.
-    /// Like [`AlgoSpec::spec_string`], the `threads` key is emitted only
-    /// when the execution width is > 1.
+    /// Like [`AlgoSpec::spec_string`], the `fault` key is emitted only at
+    /// a nonzero drop rate and the `threads` key only when the execution
+    /// width is > 1.
     pub fn to_json(&self) -> Json {
         let j = Json::obj().set("algo", self.kind());
         match *self {
-            AlgoSpec::Gadmm { rho, threads } => threads_json(j.set("rho", rho), threads),
-            AlgoSpec::Qgadmm { rho, bits, threads } => {
-                threads_json(j.set("rho", rho).set("bits", bits as usize), threads)
+            AlgoSpec::Gadmm { rho, fault, threads } => {
+                threads_json(fault_json(j.set("rho", rho), fault), threads)
             }
-            AlgoSpec::Cgadmm { rho, tau, mu, threads } => {
-                threads_json(j.set("rho", rho).set("tau", tau).set("mu", mu), threads)
-            }
-            AlgoSpec::Cqgadmm { rho, bits, tau, mu, threads } => threads_json(
-                j.set("rho", rho).set("bits", bits as usize).set("tau", tau).set("mu", mu),
+            AlgoSpec::Qgadmm { rho, bits, fault, threads } => threads_json(
+                fault_json(j.set("rho", rho).set("bits", bits as usize), fault),
                 threads,
             ),
-            AlgoSpec::Ggadmm { rho, graph, threads } => threads_json(
-                j.set("rho", rho).set("graph", graph.to_string().as_str()),
+            AlgoSpec::Cgadmm { rho, tau, mu, fault, threads } => threads_json(
+                fault_json(j.set("rho", rho).set("tau", tau).set("mu", mu), fault),
                 threads,
             ),
-            AlgoSpec::Dgadmm { rho, tau, mode, threads } => threads_json(
-                j.set("rho", rho).set("tau", tau).set("mode", mode_str(mode)),
+            AlgoSpec::Cqgadmm { rho, bits, tau, mu, fault, threads } => threads_json(
+                fault_json(
+                    j.set("rho", rho).set("bits", bits as usize).set("tau", tau).set("mu", mu),
+                    fault,
+                ),
+                threads,
+            ),
+            AlgoSpec::Ggadmm { rho, graph, fault, threads } => threads_json(
+                fault_json(j.set("rho", rho).set("graph", graph.to_string().as_str()), fault),
+                threads,
+            ),
+            AlgoSpec::Dgadmm { rho, tau, mode, fault, threads } => threads_json(
+                fault_json(j.set("rho", rho).set("tau", tau).set("mode", mode_str(mode)), fault),
                 threads,
             ),
             AlgoSpec::Lag { variant, xi } => {
@@ -406,28 +444,45 @@ impl AlgoSpec {
                 .clone()
                 .unwrap_or_else(|| Chain::sequential(p.num_workers()))
         };
+        // The fault schedule is seeded by the *run* seed, so the same spec
+        // replayed with the same seed drops the same slots — schedule, not
+        // clock (`docs/adr/006-fault-injection.md`). Rate 0 installs
+        // nothing: the engine is byte-for-byte the unfaulted one.
+        let schedule = |fault: f64| FaultSchedule::new(ctx.seed, fault);
         match *self {
-            AlgoSpec::Gadmm { rho, threads } => {
+            AlgoSpec::Gadmm { rho, fault, threads } => {
                 let mut e = Gadmm::with_chain(p, rho, chain());
                 e.set_threads(threads);
+                if fault > 0.0 {
+                    e.install_faults(&schedule(fault));
+                }
                 Box::new(e)
             }
-            AlgoSpec::Qgadmm { rho, bits, threads } => {
+            AlgoSpec::Qgadmm { rho, bits, fault, threads } => {
                 let mut e = Qgadmm::with_chain(p, rho, bits, ctx.seed, chain());
                 e.set_threads(threads);
+                if fault > 0.0 {
+                    e.install_faults(&schedule(fault));
+                }
                 Box::new(e)
             }
-            AlgoSpec::Cgadmm { rho, tau, mu, threads } => {
+            AlgoSpec::Cgadmm { rho, tau, mu, fault, threads } => {
                 let mut e = Cgadmm::with_chain(p, rho, tau, mu, chain());
                 e.set_threads(threads);
+                if fault > 0.0 {
+                    e.install_faults(&schedule(fault));
+                }
                 Box::new(e)
             }
-            AlgoSpec::Cqgadmm { rho, bits, tau, mu, threads } => {
+            AlgoSpec::Cqgadmm { rho, bits, tau, mu, fault, threads } => {
                 let mut e = Cqgadmm::with_chain(p, rho, bits, tau, mu, ctx.seed, chain());
                 e.set_threads(threads);
+                if fault > 0.0 {
+                    e.install_faults(&schedule(fault));
+                }
                 Box::new(e)
             }
-            AlgoSpec::Ggadmm { rho, graph, threads } => {
+            AlgoSpec::Ggadmm { rho, graph, fault, threads } => {
                 let mut e = match ctx.placement {
                     Some(pl) => match Ggadmm::with_placement(p, rho, graph, pl) {
                         Ok(e) => e,
@@ -436,11 +491,17 @@ impl AlgoSpec {
                     None => Ggadmm::new(p, rho, graph, ctx.seed),
                 };
                 e.set_threads(threads);
+                if fault > 0.0 {
+                    e.install_faults(&schedule(fault));
+                }
                 Box::new(e)
             }
-            AlgoSpec::Dgadmm { rho, tau, mode, threads } => {
+            AlgoSpec::Dgadmm { rho, tau, mode, fault, threads } => {
                 let mut e = Dgadmm::new(p, rho, tau, mode, ctx.costs, ctx.seed);
                 e.set_threads(threads);
+                if fault > 0.0 {
+                    e.install_faults(&schedule(fault));
+                }
                 Box::new(e)
             }
             AlgoSpec::Lag { variant, xi } => {
@@ -469,29 +530,41 @@ impl AlgoSpec {
         // The `threads` knob is a *sequential-engine* execution width; the
         // coordinator is already one-thread-per-worker, so the wire
         // configuration deliberately ignores it.
-        match *self {
-            AlgoSpec::Gadmm { rho, .. } => Some(ChainWire {
+        let mut wire = match *self {
+            AlgoSpec::Gadmm { rho, .. } => ChainWire {
                 rho,
                 links: dense_links(dim, n),
                 name: format!("GADMM-dist(rho={rho})"),
-            }),
-            AlgoSpec::Qgadmm { rho, bits, .. } => Some(ChainWire {
+            },
+            AlgoSpec::Qgadmm { rho, bits, .. } => ChainWire {
                 rho,
                 links: quant_links(dim, n, bits, seed),
                 name: format!("Q-GADMM-dist(rho={rho},b={bits})"),
-            }),
-            AlgoSpec::Cgadmm { rho, tau, mu, .. } => Some(ChainWire {
+            },
+            AlgoSpec::Cgadmm { rho, tau, mu, .. } => ChainWire {
                 rho,
                 links: censored_dense_links(dim, n, tau, mu),
                 name: format!("C-GADMM-dist(rho={rho},tau={tau},mu={mu})"),
-            }),
-            AlgoSpec::Cqgadmm { rho, bits, tau, mu, .. } => Some(ChainWire {
+            },
+            AlgoSpec::Cqgadmm { rho, bits, tau, mu, .. } => ChainWire {
                 rho,
                 links: censored_quant_links(dim, n, bits, tau, mu, seed),
                 name: format!("CQ-GADMM-dist(rho={rho},b={bits},tau={tau},mu={mu})"),
-            }),
-            _ => None,
+            },
+            _ => return None,
+        };
+        // Fault injection wraps the very same per-worker policies on both
+        // execution paths, and the schedule is keyed by (seed, worker, k)
+        // alone — which is what makes a faulted distributed run replay the
+        // faulted sequential engine bit-for-bit.
+        let fault = self.fault_rate();
+        if fault > 0.0 {
+            let links = std::mem::take(&mut wire.links);
+            wire.links = faulty_links(links, &FaultSchedule::new(seed, fault));
+            wire.name.pop();
+            wire.name.push_str(&format!(",fault={fault})"));
         }
+        Some(wire)
     }
 
     /// The intra-group execution width (`threads=K` knob) — how many pool
@@ -528,18 +601,55 @@ impl AlgoSpec {
         self
     }
 
+    /// The seeded per-slot drop rate (`fault=p` knob); baselines without
+    /// the link-policy seam always report 0.
+    pub fn fault_rate(&self) -> f64 {
+        match *self {
+            AlgoSpec::Gadmm { fault, .. }
+            | AlgoSpec::Qgadmm { fault, .. }
+            | AlgoSpec::Cgadmm { fault, .. }
+            | AlgoSpec::Cqgadmm { fault, .. }
+            | AlgoSpec::Ggadmm { fault, .. }
+            | AlgoSpec::Dgadmm { fault, .. } => fault,
+            _ => 0.0,
+        }
+    }
+
+    /// Copy of this spec with its fault rate replaced (identity for the
+    /// baselines, which have no link-policy seam to drop slots through).
+    /// The chaos driver uses this to sweep one roster across drop rates.
+    /// Panics on a rate outside [0, 1), like [`FaultSchedule::new`].
+    pub fn with_fault(mut self, rate: f64) -> AlgoSpec {
+        if let Err(e) = validate_fault_rate(rate) {
+            panic!("{e}");
+        }
+        match &mut self {
+            AlgoSpec::Gadmm { fault, .. }
+            | AlgoSpec::Qgadmm { fault, .. }
+            | AlgoSpec::Cgadmm { fault, .. }
+            | AlgoSpec::Cqgadmm { fault, .. }
+            | AlgoSpec::Ggadmm { fault, .. }
+            | AlgoSpec::Dgadmm { fault, .. } => *fault = rate,
+            _ => {}
+        }
+        self
+    }
+
     /// One exemplar spec per engine the registry can build — the source of
     /// truth for "every `optim` engine is reachable from a spec".
     pub fn registry() -> Vec<AlgoSpec> {
         vec![
-            AlgoSpec::Gadmm { rho: 5.0, threads: 1 },
+            AlgoSpec::Gadmm { rho: 5.0, fault: 0.0, threads: 1 },
             // The pooled execution backend, reachable as a spec knob.
-            AlgoSpec::Gadmm { rho: 5.0, threads: 2 },
-            AlgoSpec::Qgadmm { rho: 5.0, bits: 8, threads: 1 },
+            AlgoSpec::Gadmm { rho: 5.0, fault: 0.0, threads: 2 },
+            // The fault-injection layer, reachable as a spec knob.
+            AlgoSpec::Gadmm { rho: 5.0, fault: 0.1, threads: 1 },
+            AlgoSpec::Qgadmm { rho: 5.0, bits: 8, fault: 0.0, threads: 1 },
             AlgoSpec::Cgadmm {
                 rho: 5.0,
                 tau: DEFAULT_CENSOR_TAU,
                 mu: DEFAULT_CENSOR_MU,
+                fault: 0.0,
                 threads: 1,
             },
             AlgoSpec::Cqgadmm {
@@ -547,11 +657,23 @@ impl AlgoSpec {
                 bits: 8,
                 tau: DEFAULT_CENSOR_TAU,
                 mu: DEFAULT_CENSOR_MU,
+                fault: 0.0,
                 threads: 1,
             },
-            AlgoSpec::Ggadmm { rho: 5.0, graph: GraphKind::Chain, threads: 1 },
-            AlgoSpec::Ggadmm { rho: 5.0, graph: GraphKind::Rgg { radius: 3.5 }, threads: 1 },
-            AlgoSpec::Dgadmm { rho: 1.0, tau: 15, mode: RechainMode::Free, threads: 1 },
+            AlgoSpec::Ggadmm { rho: 5.0, graph: GraphKind::Chain, fault: 0.0, threads: 1 },
+            AlgoSpec::Ggadmm {
+                rho: 5.0,
+                graph: GraphKind::Rgg { radius: 3.5 },
+                fault: 0.0,
+                threads: 1,
+            },
+            AlgoSpec::Dgadmm {
+                rho: 1.0,
+                tau: 15,
+                mode: RechainMode::Free,
+                fault: 0.0,
+                threads: 1,
+            },
             AlgoSpec::Lag { variant: LagVariant::Wk, xi: 0.05 },
             AlgoSpec::Lag { variant: LagVariant::Ps, xi: 0.05 },
             AlgoSpec::Iag { order: IagOrder::Cyclic },
@@ -584,6 +706,25 @@ impl std::str::FromStr for AlgoSpec {
     type Err = String;
     fn from_str(s: &str) -> Result<AlgoSpec, String> {
         AlgoSpec::parse(s)
+    }
+}
+
+/// `,fault=p` canonical-string suffix — empty at the perfect-network
+/// default, so unfaulted specs keep their historical canonical strings.
+fn fault_suffix(fault: f64) -> String {
+    if fault > 0.0 {
+        format!(",fault={fault}")
+    } else {
+        String::new()
+    }
+}
+
+/// Attach the `fault` JSON key — omitted at the perfect-network default.
+fn fault_json(j: Json, fault: f64) -> Json {
+    if fault > 0.0 {
+        j.set("fault", fault)
+    } else {
+        j
     }
 }
 
@@ -690,6 +831,16 @@ impl<'s> Params<'s> {
             .map_err(|e| format!("{}: {e}", self.kind))
     }
 
+    /// The per-slot drop rate `fault=p` (default 0 = perfect network),
+    /// validated through the single shared check
+    /// ([`validate_fault_rate`]) so CLI, JSON, and the schedule
+    /// constructor agree on the domain and the message.
+    fn take_fault(&mut self) -> Result<f64, String> {
+        let p = self.take_f64("fault", 0.0)?;
+        validate_fault_rate(p).map_err(|e| format!("{}: {e}", self.kind))?;
+        Ok(p)
+    }
+
     fn take_f64(&mut self, key: &str, default: f64) -> Result<f64, String> {
         match self.take(key) {
             None => Ok(default),
@@ -743,10 +894,13 @@ mod tests {
 
     #[test]
     fn parse_defaults_and_errors() {
-        assert_eq!(AlgoSpec::parse("gadmm").unwrap(), AlgoSpec::Gadmm { rho: 5.0, threads: 1 });
+        assert_eq!(
+            AlgoSpec::parse("gadmm").unwrap(),
+            AlgoSpec::Gadmm { rho: 5.0, fault: 0.0, threads: 1 }
+        );
         assert_eq!(
             AlgoSpec::parse("qgadmm:rho=3,bits=4").unwrap(),
-            AlgoSpec::Qgadmm { rho: 3.0, bits: 4, threads: 1 }
+            AlgoSpec::Qgadmm { rho: 3.0, bits: 4, fault: 0.0, threads: 1 }
         );
         assert_eq!(
             AlgoSpec::parse(" lag:variant=ps ").unwrap(),
@@ -779,7 +933,10 @@ mod tests {
         let j = par.to_json();
         assert_eq!(j.path("threads").unwrap().as_usize(), Some(2));
         assert_eq!(AlgoSpec::from_json(&j).unwrap(), par);
-        assert!(AlgoSpec::Gadmm { rho: 3.0, threads: 1 }.to_json().path("threads").is_none());
+        assert!(AlgoSpec::Gadmm { rho: 3.0, fault: 0.0, threads: 1 }
+            .to_json()
+            .path("threads")
+            .is_none());
         // Domain errors funnel through the single shared validator.
         assert_eq!(validate_exec_threads(1).unwrap(), 1);
         assert_eq!(validate_exec_threads(1024).unwrap(), 1024);
@@ -793,6 +950,56 @@ mod tests {
     }
 
     #[test]
+    fn fault_knob_parses_round_trips_and_validates() {
+        // Every group engine accepts the drop rate; the perfect network is
+        // the default and stays out of the canonical forms.
+        for kind in ["gadmm", "qgadmm", "cgadmm", "cqgadmm", "ggadmm", "dgadmm"] {
+            let faulty = AlgoSpec::parse(&format!("{kind}:fault=0.1")).unwrap();
+            assert_eq!(faulty.fault_rate(), 0.1, "{kind}");
+            assert!(faulty.spec_string().contains("fault=0.1"), "{kind}");
+            assert_eq!(AlgoSpec::parse(&faulty.spec_string()).unwrap(), faulty, "{kind}");
+            let clean = AlgoSpec::parse(kind).unwrap();
+            assert_eq!(clean.fault_rate(), 0.0, "{kind}");
+            assert!(!clean.spec_string().contains("fault"), "{kind}");
+            assert_eq!(clean.with_fault(0.1), faulty, "{kind}");
+            assert_eq!(faulty.with_fault(0.0), clean, "{kind}");
+        }
+        // The knob composes with the others in canonical order.
+        let full = AlgoSpec::parse("cqgadmm:rho=3,bits=4,fault=0.05,threads=2").unwrap();
+        assert_eq!(
+            full.spec_string(),
+            "cqgadmm:rho=3,bits=4,tau=1,mu=0.93,fault=0.05,threads=2"
+        );
+        assert_eq!(AlgoSpec::parse(&full.spec_string()).unwrap(), full);
+        // JSON funnels through the same path and omits the clean default.
+        let faulty = AlgoSpec::parse("gadmm:rho=3,fault=0.2").unwrap();
+        let j = faulty.to_json();
+        assert_eq!(j.path("fault").unwrap().as_f64(), Some(0.2));
+        assert_eq!(AlgoSpec::from_json(&j).unwrap(), faulty);
+        assert!(AlgoSpec::Gadmm { rho: 3.0, fault: 0.0, threads: 1 }
+            .to_json()
+            .path("fault")
+            .is_none());
+        // Domain errors funnel through the single shared validator.
+        assert!(validate_fault_rate(0.0).is_ok());
+        assert!(validate_fault_rate(0.999).is_ok());
+        assert!(validate_fault_rate(1.0).is_err());
+        assert!(validate_fault_rate(-0.1).is_err());
+        assert!(AlgoSpec::parse("gadmm:fault=1").is_err());
+        assert!(AlgoSpec::parse("gadmm:fault=-0.5").is_err());
+        assert!(AlgoSpec::parse("gadmm:fault=nope").is_err());
+        assert!(AlgoSpec::parse("gd:fault=0.1").is_err(), "baselines reject the knob");
+        assert_eq!(AlgoSpec::Gd.fault_rate(), 0.0);
+        assert_eq!(AlgoSpec::Gd.with_fault(0.3), AlgoSpec::Gd);
+        // A faulted static-chain wire is the unfaulted wire wrapped in the
+        // fault layer, and says so in its distributed display name.
+        let wire = faulty.chain_wire(4, 6, 1).unwrap();
+        assert_eq!(wire.links.len(), 6);
+        assert!(wire.name.contains("fault=0.2"), "{}", wire.name);
+        assert!(wire.links[0].describe().contains("faulty"), "{}", wire.links[0].describe());
+    }
+
+    #[test]
     fn censor_specs_parse_with_defaults_and_validate() {
         assert_eq!(
             AlgoSpec::parse("cgadmm").unwrap(),
@@ -800,17 +1007,24 @@ mod tests {
                 rho: 5.0,
                 tau: DEFAULT_CENSOR_TAU,
                 mu: DEFAULT_CENSOR_MU,
+                fault: 0.0,
                 threads: 1
             }
         );
         assert_eq!(
             AlgoSpec::parse("cqgadmm:rho=3,bits=4,tau=0.5,mu=0.9").unwrap(),
-            AlgoSpec::Cqgadmm { rho: 3.0, bits: 4, tau: 0.5, mu: 0.9, threads: 1 }
+            AlgoSpec::Cqgadmm { rho: 3.0, bits: 4, tau: 0.5, mu: 0.9, fault: 0.0, threads: 1 }
         );
         // tau=0 is the legal "never censor" degeneracy.
         assert_eq!(
             AlgoSpec::parse("cgadmm:tau=0").unwrap(),
-            AlgoSpec::Cgadmm { rho: 5.0, tau: 0.0, mu: DEFAULT_CENSOR_MU, threads: 1 }
+            AlgoSpec::Cgadmm {
+                rho: 5.0,
+                tau: 0.0,
+                mu: DEFAULT_CENSOR_MU,
+                fault: 0.0,
+                threads: 1
+            }
         );
         let e = AlgoSpec::parse("cgadmm:mu=1").unwrap_err();
         assert!(e.contains("mu must be in (0, 1)"), "{e}");

@@ -36,7 +36,7 @@ pub struct SweepSpec {
 impl Default for SweepSpec {
     fn default() -> Self {
         SweepSpec {
-            algos: vec![AlgoSpec::Gadmm { rho: 5.0, threads: 1 }, AlgoSpec::Gd],
+            algos: vec![AlgoSpec::Gadmm { rho: 5.0, fault: 0.0, threads: 1 }, AlgoSpec::Gd],
             datasets: vec![DatasetKind::SyntheticLinreg],
             workers: vec![24],
             seeds: vec![1],
@@ -388,7 +388,7 @@ mod tests {
 
     fn small_spec() -> SweepSpec {
         SweepSpec {
-            algos: vec![AlgoSpec::Gadmm { rho: 3.0, threads: 1 }, AlgoSpec::Gd],
+            algos: vec![AlgoSpec::Gadmm { rho: 3.0, fault: 0.0, threads: 1 }, AlgoSpec::Gd],
             datasets: vec![DatasetKind::SyntheticLinreg],
             workers: vec![4],
             seeds: vec![1, 2],
@@ -403,7 +403,7 @@ mod tests {
         let spec = small_spec();
         let cells = spec.cells();
         assert_eq!(cells.len(), 4);
-        assert_eq!(cells[0].algo, AlgoSpec::Gadmm { rho: 3.0, threads: 1 });
+        assert_eq!(cells[0].algo, AlgoSpec::Gadmm { rho: 3.0, fault: 0.0, threads: 1 });
         assert_eq!(cells[1].algo, AlgoSpec::Gd);
         assert_eq!(cells[0].seed, 1);
         assert_eq!(cells[2].seed, 2);
@@ -443,13 +443,13 @@ mod tests {
         // sweep's own thread count or the machine's clamp budget.
         let mut serial = small_spec();
         serial.algos = vec![
-            AlgoSpec::Gadmm { rho: 3.0, threads: 1 },
-            AlgoSpec::Qgadmm { rho: 3.0, bits: 8, threads: 1 },
+            AlgoSpec::Gadmm { rho: 3.0, fault: 0.0, threads: 1 },
+            AlgoSpec::Qgadmm { rho: 3.0, bits: 8, fault: 0.0, threads: 1 },
         ];
         let mut wide = small_spec();
         wide.algos = vec![
-            AlgoSpec::Gadmm { rho: 3.0, threads: 4 },
-            AlgoSpec::Qgadmm { rho: 3.0, bits: 8, threads: 4 },
+            AlgoSpec::Gadmm { rho: 3.0, fault: 0.0, threads: 4 },
+            AlgoSpec::Qgadmm { rho: 3.0, bits: 8, fault: 0.0, threads: 4 },
         ];
         let a = SweepRunner::new(1).run(&serial).unwrap();
         let b = SweepRunner::new(2).run(&wide).unwrap();

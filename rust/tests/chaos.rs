@@ -1,0 +1,131 @@
+//! Crash/rejoin chaos pins on the paper's linreg configuration: a worker
+//! that goes dark for a window of iterations (every broadcast dropped by
+//! the seeded [`FaultSchedule`]) must leave the rest of the fleet running
+//! on its cached public view, rejoin seamlessly, and still converge to the
+//! paper's 1e-4 target — on the sequential engines, on the distributed
+//! coordinator (bit-for-bit against the sequential path), and through
+//! D-GADMM's re-chaining, whose slot re-map is the recovery story
+//! (docs/adr/006-fault-injection.md): duals and fault wrappers travel with
+//! the physical worker, so a crash window survives any chain rebuild.
+
+use gadmm::comm::{dense_links, faulty_links, FaultSchedule};
+use gadmm::coordinator;
+use gadmm::data::synthetic;
+use gadmm::linalg::vector as vec_ops;
+use gadmm::model::Problem;
+use gadmm::optim::{run, Dgadmm, Gadmm, RechainMode, RunOptions};
+use gadmm::runtime::{LocalSolver, NativeSolver};
+use gadmm::topology::chain::Chain;
+use gadmm::topology::graph::BipartiteGraph;
+use gadmm::topology::UnitCosts;
+use gadmm::util::rng::Pcg64;
+
+/// The paper's linreg configuration (same as the exec-backend pins).
+fn paper_linreg() -> Problem {
+    let ds = synthetic::linreg(120, 8, &mut Pcg64::seeded(1));
+    Problem::from_dataset(&ds, 6)
+}
+
+fn native_solvers(p: &Problem) -> Vec<Box<dyn LocalSolver + Send + '_>> {
+    (0..p.num_workers())
+        .map(|w| Box::new(NativeSolver::new(&*p.losses[w])) as Box<dyn LocalSolver + Send + '_>)
+        .collect()
+}
+
+/// Worker 2 crashes at iteration 10 and rejoins at 25 (15 lost slots).
+fn crash_schedule() -> FaultSchedule {
+    FaultSchedule::new(7, 0.0).with_crash(2, 10, 25)
+}
+
+#[test]
+fn crashed_worker_rejoins_and_sequential_gadmm_converges() {
+    let p = paper_linreg();
+    let opts = RunOptions::with_target(1e-4, 10_000);
+    let costs = UnitCosts;
+    let mut g = Gadmm::new(&p, 5.0);
+    g.install_faults(&crash_schedule());
+    let trace = run(&mut g, &p, &costs, &opts);
+    assert!(
+        trace.iters_to_target().is_some(),
+        "GADMM did not recover from the crash window: final err {}",
+        trace.final_error()
+    );
+    // The crash really bit: exactly the 15 windowed slots are missing from
+    // the unit TC (dense links never censor on their own).
+    let last = trace.records.last().unwrap();
+    assert!(last.iter >= 25, "converged before the rejoin — the window is vacuous");
+    assert_eq!(last.tc_unit, (last.iter * 6 - 15) as f64, "TC deficit ≠ crash window");
+}
+
+#[test]
+fn crash_chaos_run_is_bit_identical_across_execution_paths() {
+    // The same crash schedule through coordinator::train_links — the chaos
+    // harness's custom-wire entry point — must reproduce the sequential
+    // faulted engine record by record: same convergence point, same slot
+    // and bit accounting, bitwise-equal consensus violation. (Only the
+    // monitoring objective may differ by float-summation order.)
+    let p = paper_linreg();
+    let opts = RunOptions::with_target(1e-4, 10_000);
+    let costs = UnitCosts;
+
+    let mut seq = Gadmm::new(&p, 5.0);
+    seq.install_faults(&crash_schedule());
+    let seq_trace = run(&mut seq, &p, &costs, &opts);
+
+    let links = faulty_links(dense_links(p.dim, 6), &crash_schedule());
+    let dist = coordinator::train_links(
+        &p,
+        native_solvers(&p),
+        5.0,
+        BipartiteGraph::from_chain(&Chain::sequential(6)),
+        &costs,
+        &opts,
+        links,
+        "GADMM-chaos(rho=5,crash=2@10..25)".into(),
+    );
+
+    assert_eq!(dist.trace.iters_to_target(), seq_trace.iters_to_target());
+    assert_eq!(dist.trace.records.len(), seq_trace.records.len());
+    for (a, b) in dist.trace.records.iter().zip(&seq_trace.records) {
+        assert!(
+            (a.obj_err - b.obj_err).abs() <= 1e-9 * (1.0 + b.obj_err),
+            "iter {}: {} vs {}",
+            a.iter,
+            a.obj_err,
+            b.obj_err
+        );
+        assert_eq!(a.tc_unit, b.tc_unit, "iter {}: TC mismatch", a.iter);
+        assert_eq!(a.bits, b.bits, "iter {}: bit accounting mismatch", a.iter);
+        assert_eq!(a.acv, b.acv, "iter {}: ACV mismatch", a.iter);
+    }
+    for (a, b) in dist.thetas.iter().zip(seq.thetas()) {
+        assert!(vec_ops::dist2(a, b) < 1e-12, "final model mismatch");
+    }
+}
+
+#[test]
+fn crashed_dgadmm_worker_recovers_through_rechaining() {
+    // The crash-as-rechain story: D-GADMM rebuilds its logical chain every
+    // τ iterations, and the fault wrappers are indexed by *physical*
+    // worker, so the crash window keeps tracking worker 3 through every
+    // re-map — and the run still converges to the paper's target. τ=1
+    // (free mode) re-chains on every iteration, the strongest exercise of
+    // the slot re-map.
+    let p = paper_linreg();
+    let opts = RunOptions::with_target(1e-4, 20_000);
+    let costs = UnitCosts;
+    let mut e = Dgadmm::new(&p, 5.0, 1, RechainMode::Free, &costs, 3);
+    e.install_faults(&FaultSchedule::new(3, 0.0).with_crash(3, 15, 45));
+    let trace = run(&mut e, &p, &costs, &opts);
+    assert!(
+        trace.iters_to_target().is_some(),
+        "D-GADMM did not recover from the crash window: final err {}",
+        trace.final_error()
+    );
+    let last = trace.records.last().unwrap();
+    assert!(last.iter >= 45, "converged before the rejoin — the window is vacuous");
+    // Free-mode re-chaining charges nothing, so the only TC deficit is the
+    // 30-slot crash window — proof the window followed the worker across
+    // every chain rebuild instead of smearing over chain positions.
+    assert_eq!(last.tc_unit, (last.iter * 6 - 30) as f64, "TC deficit ≠ crash window");
+}

@@ -182,7 +182,7 @@ fn censored_distributed_matches_sequential_cgadmm() {
     let ds = synthetic::linreg(120, 8, &mut Pcg64::seeded(11));
     let p = Problem::from_dataset(&ds, 6);
     let opts = RunOptions::with_target(1e-5, 4_000);
-    let spec = AlgoSpec::Cgadmm { rho: 5.0, tau: 1.0, mu: 0.93, threads: 1 };
+    let spec = AlgoSpec::Cgadmm { rho: 5.0, tau: 1.0, mu: 0.93, fault: 0.0, threads: 1 };
     assert_dist_matches_seq(&p, spec, 3, &opts);
     // The run censored something (otherwise this test is vacuous): TC at
     // convergence below k·N.
@@ -198,7 +198,7 @@ fn censored_quantized_distributed_matches_sequential_cqgadmm() {
     let opts = RunOptions::with_target(1e-5, 5_000);
     assert_dist_matches_seq(
         &p,
-        AlgoSpec::Cqgadmm { rho: 5.0, bits: 8, tau: 1.0, mu: 0.93, threads: 1 },
+        AlgoSpec::Cqgadmm { rho: 5.0, bits: 8, tau: 1.0, mu: 0.93, fault: 0.0, threads: 1 },
         17,
         &opts,
     );
@@ -212,10 +212,10 @@ fn all_static_chain_specs_distribute_bit_identically() {
     let p = Problem::from_dataset(&ds, 4);
     let opts = RunOptions::with_target(1e-4, 3_000);
     for spec in [
-        AlgoSpec::Gadmm { rho: 3.0, threads: 1 },
-        AlgoSpec::Qgadmm { rho: 3.0, bits: 6, threads: 1 },
-        AlgoSpec::Cgadmm { rho: 3.0, tau: 0.5, mu: 0.9, threads: 1 },
-        AlgoSpec::Cqgadmm { rho: 3.0, bits: 6, tau: 0.5, mu: 0.9, threads: 1 },
+        AlgoSpec::Gadmm { rho: 3.0, fault: 0.0, threads: 1 },
+        AlgoSpec::Qgadmm { rho: 3.0, bits: 6, fault: 0.0, threads: 1 },
+        AlgoSpec::Cgadmm { rho: 3.0, tau: 0.5, mu: 0.9, fault: 0.0, threads: 1 },
+        AlgoSpec::Cqgadmm { rho: 3.0, bits: 6, tau: 0.5, mu: 0.9, fault: 0.0, threads: 1 },
     ] {
         assert_dist_matches_seq(&p, spec, 9, &opts);
     }
@@ -231,7 +231,7 @@ fn tau_zero_distributed_cqgadmm_equals_distributed_qgadmm() {
     let cq = coordinator::train_spec(
         &p,
         native_solvers(&p),
-        &AlgoSpec::Cqgadmm { rho: 3.0, bits: 8, tau: 0.0, mu: 0.93, threads: 1 },
+        &AlgoSpec::Cqgadmm { rho: 3.0, bits: 8, tau: 0.0, mu: 0.93, fault: 0.0, threads: 1 },
         21,
         Chain::sequential(4),
         &costs,
@@ -241,7 +241,7 @@ fn tau_zero_distributed_cqgadmm_equals_distributed_qgadmm() {
     let q = coordinator::train_spec(
         &p,
         native_solvers(&p),
-        &AlgoSpec::Qgadmm { rho: 3.0, bits: 8, threads: 1 },
+        &AlgoSpec::Qgadmm { rho: 3.0, bits: 8, fault: 0.0, threads: 1 },
         21,
         Chain::sequential(4),
         &costs,
@@ -259,6 +259,83 @@ fn tau_zero_distributed_cqgadmm_equals_distributed_qgadmm() {
 }
 
 #[test]
+fn faulted_chain_specs_distribute_bit_identically() {
+    // Chaos equivalence on a chain: a `fault=p` spec drops the same seeded
+    // slots on both execution paths — in the sequential core the dropped
+    // broadcast is a Msg::Skip from the installed FaultyLink, on the wire
+    // it is the same Skip travelling as a receiver timeout — so the
+    // distributed trace must stay bit-identical to the sequential one
+    // (slot and bit accounting included) at nonzero drop rates.
+    let ds = synthetic::linreg(120, 6, &mut Pcg64::seeded(19));
+    let p = Problem::from_dataset(&ds, 6);
+    let opts = RunOptions::with_target(1e-4, 8_000);
+    for spec in [
+        AlgoSpec::Gadmm { rho: 3.0, fault: 0.1, threads: 1 },
+        AlgoSpec::Qgadmm { rho: 3.0, bits: 8, fault: 0.1, threads: 1 },
+        AlgoSpec::Cqgadmm { rho: 3.0, bits: 8, tau: 0.5, mu: 0.93, fault: 0.05, threads: 1 },
+    ] {
+        assert_dist_matches_seq(&p, spec, 23, &opts);
+    }
+    // The pin is not vacuous: the faulted GADMM run really lost slots
+    // (unit TC strictly below the k·N of a clean run).
+    let spec = AlgoSpec::Gadmm { rho: 3.0, fault: 0.1, threads: 1 };
+    let seq = run(&mut *spec.build(&p, 23), &p, &UnitCosts, &opts);
+    let last = seq.records.last().expect("trace has records");
+    assert!(
+        last.tc_unit < (last.iter * 6) as f64,
+        "fault=0.1 dropped nothing: tc {} at iter {}",
+        last.tc_unit,
+        last.iter
+    );
+}
+
+#[test]
+fn faulted_star_ggadmm_distributed_matches_sequential() {
+    // Chaos equivalence off the chain: the graph coordinator wraps its
+    // dense links in the same seed-keyed FaultSchedule the sequential
+    // engine installs, so a faulted GGADMM star run matches the faulted
+    // sequential engine record by record.
+    use gadmm::optim::Ggadmm;
+    use gadmm::topology::graph::GraphKind;
+    use gadmm::topology::Placement;
+
+    let ds = synthetic::linreg(100, 6, &mut Pcg64::seeded(5));
+    let p = Problem::from_dataset(&ds, 5);
+    let opts = RunOptions::with_target(1e-4, 8_000);
+    let costs = UnitCosts;
+    let spec = AlgoSpec::Ggadmm { rho: 3.0, graph: GraphKind::Star, fault: 0.1, threads: 1 };
+    let graph = GraphKind::Star
+        .build(5, &Placement::random(5, 10.0, &mut Pcg64::seeded(9)))
+        .unwrap();
+    let dist = coordinator::train_graph_spec(&p, native_solvers(&p), &spec, 1, graph, &costs, &opts)
+        .unwrap();
+    let mut seq = Ggadmm::new(&p, 3.0, GraphKind::Star, 1);
+    seq.install_faults(&gadmm::comm::FaultSchedule::new(1, 0.1));
+    let seq_trace = run(&mut seq, &p, &costs, &opts);
+    assert_eq!(dist.trace.iters_to_target(), seq_trace.iters_to_target());
+    assert_eq!(dist.trace.records.len(), seq_trace.records.len());
+    for (a, b) in dist.trace.records.iter().zip(&seq_trace.records) {
+        assert!(
+            (a.obj_err - b.obj_err).abs() <= 1e-9 * (1.0 + b.obj_err),
+            "iter {}: {} vs {}",
+            a.iter,
+            a.obj_err,
+            b.obj_err
+        );
+        assert_eq!(a.tc_unit, b.tc_unit, "iter {}: TC mismatch", a.iter);
+        assert_eq!(a.bits, b.bits, "iter {}: bit accounting mismatch", a.iter);
+    }
+    for (a, b) in dist.thetas.iter().zip(seq.thetas()) {
+        assert!(vec_ops::dist2(a, b) < 1e-9, "final model mismatch");
+    }
+    assert!(
+        dist.trace.algorithm.contains("fault=0.1"),
+        "the distributed name must surface the drop rate: {}",
+        dist.trace.algorithm
+    );
+}
+
+#[test]
 fn dgadmm_spec_still_rejected_by_coordinator() {
     let ds = synthetic::linreg(80, 5, &mut Pcg64::seeded(15));
     let p = Problem::from_dataset(&ds, 4);
@@ -266,7 +343,7 @@ fn dgadmm_spec_still_rejected_by_coordinator() {
     let err = coordinator::train_spec(
         &p,
         native_solvers(&p),
-        &AlgoSpec::Dgadmm { rho: 1.0, tau: 15, mode: optim::RechainMode::Free, threads: 1 },
+        &AlgoSpec::Dgadmm { rho: 1.0, tau: 15, mode: optim::RechainMode::Free, fault: 0.0, threads: 1 },
         1,
         Chain::sequential(4),
         &UnitCosts,

@@ -2,20 +2,23 @@
 //! chain validity, Lyapunov monotonicity (Theorem 2), tail dual
 //! feasibility (eq. 20), primal-residual decay, TC accounting, the
 //! Q-GADMM quantizer (roundtrip error bound, stochastic-rounding
-//! unbiasedness, range shrinkage, bit-exact accounting), and the
+//! unbiasedness, range shrinkage, bit-exact accounting), the
 //! bipartite-graph generalization (RGG 2-coloring validity, GGADMM's
-//! chain degeneracy, star-graph metering closed form).
+//! chain degeneracy, star-graph metering closed form), and the fault
+//! layer (seed-pure schedules with bit-identical chaos replays, rate-0
+//! degeneracy to the unfaulted engines, zero-bit dropped slots).
 
 use gadmm::comm::{
-    CensorSchedule, Meter, QuantizedMsg, StochasticQuantizer, RANGE_OVERHEAD_BITS,
+    CensorSchedule, FaultSchedule, Meter, QuantizedMsg, StochasticQuantizer, RANGE_OVERHEAD_BITS,
 };
 use gadmm::data::synthetic;
 use gadmm::linalg::vector as vec_ops;
 use gadmm::model::Problem;
 use gadmm::optim::{run, solver, Cqgadmm, Engine, Gadmm, Ggadmm, Qgadmm, RunOptions};
 use gadmm::prop_assert;
+use gadmm::session::AlgoSpec;
 use gadmm::topology::chain::{self, Chain};
-use gadmm::topology::graph::BipartiteGraph;
+use gadmm::topology::graph::{BipartiteGraph, GraphKind};
 use gadmm::topology::{EnergyCostModel, Placement, UnitCosts};
 use gadmm::util::prop::check;
 use gadmm::util::rng::Pcg64;
@@ -549,6 +552,181 @@ fn prop_cqgadmm_tau_zero_degenerates_to_qgadmm() {
             for (a, b) in cq.hats().iter().zip(q.hats()) {
                 prop_assert!(a == b, "public views diverged");
             }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_fault_schedule_is_seed_pure_and_chaos_runs_replay_bit_identically() {
+    // The tentpole reproducibility claim: a FaultSchedule is a pure
+    // function of (seed, worker, k), so two schedules with the same seed
+    // agree on every slot, and a faulted engine run replays its exact
+    // trace — bitwise, via Trace::same_path — on a fresh build, at any
+    // execution width (threads=2 included), for every group engine.
+    check(
+        "fault-replay-determinism",
+        1616,
+        8,
+        |rng| {
+            let n = 2 * rng.range(2, 5);
+            let fault = rng.uniform(0.02, 0.3);
+            let rho = 1.0 + rng.range(0, 5) as f64;
+            let which = rng.range(0, 6);
+            (n, fault, rho, which, rng.next_u64(), rng.next_u64())
+        },
+        |(n, fault, rho, which, data_seed, run_seed)| {
+            // Schedule purity: same seed → same drop decisions and the
+            // same delay bits, whatever the query order.
+            let a = FaultSchedule::new(*run_seed, *fault);
+            let b = FaultSchedule::new(*run_seed, *fault);
+            for w in 0..*n {
+                for k in 0..100 {
+                    prop_assert!(a.drops(w, k) == b.drops(w, k), "drop diverged at ({w},{k})");
+                    prop_assert!(
+                        a.straggler_delay(w, k).to_bits() == b.straggler_delay(w, k).to_bits(),
+                        "delay diverged at ({w},{k})"
+                    );
+                }
+            }
+            let specs = [
+                format!("gadmm:rho={rho}"),
+                format!("qgadmm:rho={rho},bits=8"),
+                format!("cgadmm:rho={rho},tau=1,mu=0.93"),
+                format!("cqgadmm:rho={rho},bits=8,tau=1,mu=0.93"),
+                format!("dgadmm:rho={rho},tau=15,mode=free"),
+                format!("ggadmm:rho={rho},graph=complete"),
+            ];
+            let spec = AlgoSpec::parse(&specs[*which]).unwrap().with_fault(*fault);
+            let ds = synthetic::linreg(20 * n, 6, &mut Pcg64::seeded(*data_seed));
+            let p = Problem::from_dataset(&ds, *n);
+            let opts = RunOptions::with_target(1e-3, 1_500);
+            let costs = UnitCosts;
+            let first = run(&mut *spec.build(&p, *run_seed), &p, &costs, &opts);
+            let replay = run(&mut *spec.build(&p, *run_seed), &p, &costs, &opts);
+            prop_assert!(
+                first.same_path(&replay),
+                "{spec} (fault={fault}) did not replay bit-identically"
+            );
+            let wide = run(
+                &mut *spec.with_threads(2).build(&p, *run_seed),
+                &p,
+                &costs,
+                &opts,
+            );
+            prop_assert!(
+                first.same_path(&wide),
+                "{spec} (fault={fault}) diverged between serial and threads=2"
+            );
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_fault_rate_zero_degenerates_to_unfaulted_engine() {
+    // Mirror of the τ=0 censoring pin: installing the fault layer at drop
+    // rate 0 must be a pure pass-through — the wrapped engine takes the
+    // plain `gadmm:` / `ggadmm:` spec's exact path (Trace::same_path). At
+    // the spec level rate 0 is the identity: the suffix is omitted, so the
+    // faulted and plain specs are literally equal.
+    check(
+        "fault-rate0-degeneracy",
+        1717,
+        8,
+        |rng| {
+            let n = 2 * rng.range(2, 5);
+            let rho = 1.0 + rng.range(0, 5) as f64;
+            (n, rho, rng.next_u64(), rng.next_u64())
+        },
+        |(n, rho, data_seed, run_seed)| {
+            let gadmm_spec = AlgoSpec::parse(&format!("gadmm:rho={rho}")).unwrap();
+            prop_assert!(
+                gadmm_spec.with_fault(0.0) == gadmm_spec,
+                "fault=0 must be the spec identity"
+            );
+            prop_assert!(
+                AlgoSpec::parse(&format!("gadmm:rho={rho},fault=0")).unwrap().spec_string()
+                    == gadmm_spec.spec_string(),
+                "fault=0 must be omitted from the canonical spec string"
+            );
+            let ds = synthetic::linreg(20 * n, 5, &mut Pcg64::seeded(*data_seed));
+            let p = Problem::from_dataset(&ds, *n);
+            let opts = RunOptions::with_target(1e-4, 2_000);
+            let costs = UnitCosts;
+            let schedule = FaultSchedule::new(*run_seed, 0.0);
+
+            let plain_g = run(&mut *gadmm_spec.build(&p, *run_seed), &p, &costs, &opts);
+            let mut faulted = Gadmm::new(&p, *rho);
+            faulted.install_faults(&schedule);
+            let faulted_g = run(&mut faulted, &p, &costs, &opts);
+            prop_assert!(
+                faulted_g.same_path(&plain_g),
+                "rate-0 faulted GADMM diverged from the plain gadmm: spec"
+            );
+
+            let ggadmm_spec =
+                AlgoSpec::parse(&format!("ggadmm:rho={rho},graph=complete")).unwrap();
+            let plain_gg = run(&mut *ggadmm_spec.build(&p, *run_seed), &p, &costs, &opts);
+            let mut faulted = Ggadmm::new(&p, *rho, GraphKind::Complete, *run_seed);
+            faulted.install_faults(&schedule);
+            let faulted_gg = run(&mut faulted, &p, &costs, &opts);
+            prop_assert!(
+                faulted_gg.same_path(&plain_gg),
+                "rate-0 faulted GGADMM diverged from the plain ggadmm: spec"
+            );
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_dropped_slots_charge_exactly_zero_bits() {
+    // Meter closed form under faults: a crash window of known size gives a
+    // deterministic drop count, and every dropped slot must contribute 0
+    // bits, 0 unit TC, and one censored tick — so after k iterations of
+    // dense GADMM, bits = (k·N − dropped)·64·d exactly.
+    check(
+        "fault-zero-bit-drops",
+        1818,
+        20,
+        |rng| {
+            let n = 2 * rng.range(2, 5);
+            let d = rng.range(3, 8);
+            let w = rng.range(0, n);
+            let crash_at = rng.range(0, 5);
+            let rejoin_at = crash_at + rng.range(1, 8);
+            let iters = rejoin_at + rng.range(0, 10);
+            (n, d, w, crash_at, rejoin_at, iters, rng.next_u64())
+        },
+        |(n, d, w, crash_at, rejoin_at, iters, seed)| {
+            let ds = synthetic::linreg(20 * n, *d, &mut Pcg64::seeded(*seed));
+            let p = Problem::from_dataset(&ds, *n);
+            let mut g = Gadmm::new(&p, 2.0);
+            g.install_faults(&FaultSchedule::new(*seed, 0.0).with_crash(*w, *crash_at, *rejoin_at));
+            let costs = UnitCosts;
+            let mut meter = Meter::new(&costs);
+            for k in 0..*iters {
+                g.step(k, &mut meter);
+            }
+            let dropped = rejoin_at.min(iters) - crash_at.min(iters);
+            let transmitted = iters * n - dropped;
+            let want_bits = transmitted as f64 * 64.0 * *d as f64;
+            prop_assert!(
+                meter.bits == want_bits,
+                "bits {} ≠ (k·N − dropped)·64·d = {want_bits}",
+                meter.bits
+            );
+            prop_assert!(
+                meter.tc_unit == transmitted as f64,
+                "tc_unit {} ≠ {transmitted}",
+                meter.tc_unit
+            );
+            prop_assert!(
+                meter.censored == dropped,
+                "censored {} ≠ dropped {dropped}",
+                meter.censored
+            );
             Ok(())
         },
     );

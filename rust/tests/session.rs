@@ -56,12 +56,12 @@ fn spec_builds_match_direct_construction() {
     let via_spec = |spec: AlgoSpec| optim::run(&mut *spec.build(&problem, seed), &problem, &costs, &opts);
 
     let direct_gadmm = optim::run(&mut Gadmm::new(&problem, 3.0), &problem, &costs, &opts);
-    assert!(via_spec(AlgoSpec::Gadmm { rho: 3.0, threads: 1 }).same_path(&direct_gadmm));
+    assert!(via_spec(AlgoSpec::Gadmm { rho: 3.0, fault: 0.0, threads: 1 }).same_path(&direct_gadmm));
 
     let direct_qgadmm =
         optim::run(&mut Qgadmm::new(&problem, 3.0, 8, seed), &problem, &costs, &opts);
     assert!(
-        via_spec(AlgoSpec::Qgadmm { rho: 3.0, bits: 8, threads: 1 }).same_path(&direct_qgadmm)
+        via_spec(AlgoSpec::Qgadmm { rho: 3.0, bits: 8, fault: 0.0, threads: 1 }).same_path(&direct_qgadmm)
     );
 
     let mut lag = Lag::new(&problem, LagVariant::Wk);
@@ -81,7 +81,7 @@ fn spec_builds_match_direct_construction() {
 #[test]
 fn sweep_is_deterministic_across_thread_counts() {
     let spec = SweepSpec {
-        algos: vec![AlgoSpec::Gadmm { rho: 3.0, threads: 1 }, AlgoSpec::Gd],
+        algos: vec![AlgoSpec::Gadmm { rho: 3.0, fault: 0.0, threads: 1 }, AlgoSpec::Gd],
         datasets: vec![DatasetKind::SyntheticLinreg],
         workers: vec![4, 6],
         seeds: vec![1],
@@ -106,7 +106,7 @@ fn sweep_is_deterministic_across_thread_counts() {
 #[test]
 fn sweep_report_carries_the_grid() {
     let spec = SweepSpec {
-        algos: vec![AlgoSpec::Gadmm { rho: 5.0, threads: 1 }],
+        algos: vec![AlgoSpec::Gadmm { rho: 5.0, fault: 0.0, threads: 1 }],
         datasets: vec![DatasetKind::SyntheticLinreg],
         workers: vec![4],
         seeds: vec![1],
@@ -130,7 +130,7 @@ fn sinks_stream_exactly_the_recorded_trace() {
     let mut csv = CsvSink::new(Vec::new());
     let mut mem = MemorySink::new();
     let trace = {
-        let mut engine = AlgoSpec::Gadmm { rho: 3.0, threads: 1 }.build(&problem, 1);
+        let mut engine = AlgoSpec::Gadmm { rho: 3.0, fault: 0.0, threads: 1 }.build(&problem, 1);
         let mut sinks: Vec<&mut dyn TraceSink> = vec![&mut csv, &mut mem];
         optim::run_with_sinks(&mut *engine, &problem, &UnitCosts, &opts, &mut sinks)
     };
@@ -155,7 +155,7 @@ fn coordinator_accepts_gadmm_specs_and_rejects_others() {
     let result = coordinator::train_spec(
         &problem,
         solvers(&problem),
-        &AlgoSpec::Gadmm { rho: 2.0, threads: 1 },
+        &AlgoSpec::Gadmm { rho: 2.0, fault: 0.0, threads: 1 },
         1,
         Chain::sequential(4),
         &UnitCosts,
@@ -163,7 +163,7 @@ fn coordinator_accepts_gadmm_specs_and_rejects_others() {
     )
     .unwrap();
     let seq = optim::run(
-        &mut *AlgoSpec::Gadmm { rho: 2.0, threads: 1 }.build(&problem, 1),
+        &mut *AlgoSpec::Gadmm { rho: 2.0, fault: 0.0, threads: 1 }.build(&problem, 1),
         &problem,
         &UnitCosts,
         &opts,
