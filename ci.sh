@@ -161,4 +161,80 @@ if ! chaos_gate; then
   exit 3
 fi
 
+echo "==> smoke: gadmm serve + netbench (TCP transport vs in-process coordinator)"
+# Gate (all deterministic — exit 3, never retried): a real lead + 2-worker
+# deployment over localhost must reproduce the same-seed `gadmm train` run
+# exactly (iters/TC/bits to target), and the netbench --quick grid must
+# report every distributable engine bit-identical across the network with
+# nonzero wire traffic. A divergence here means the transport perturbed
+# the algorithm — the exact bug class docs/adr/007-transport-seam.md rules
+# out by construction.
+net_gate() {
+  ./target/release/gadmm train --workers 2 --rho 5 --dataset synthetic-linreg \
+      --target 1e-3 --max-iters 20000 --seed 1 --out target/ci-net || return 3
+  local addr="127.0.0.1:47113"
+  # Start order is free (workers retry the dial until the lead binds), so
+  # backgrounding the workers before the lead is safe, not racy.
+  ./target/release/gadmm serve --worker "$addr" --rank 0 &
+  local w0=$!
+  ./target/release/gadmm serve --worker "$addr" --rank 1 &
+  local w1=$!
+  if ! ./target/release/gadmm serve --lead "$addr" --workers 2 --rho 5 \
+      --dataset synthetic-linreg --target 1e-3 --max-iters 20000 --seed 1 \
+      --timeout-ms 60000 --out target/ci-net; then
+    kill "$w0" "$w1" 2>/dev/null || true
+    return 3
+  fi
+  wait "$w0" || return 3
+  wait "$w1" || return 3
+  python3 - <<'EOF' || return 3
+import json, sys
+
+def hard(cond, msg):  # deterministic failure: never retried
+    if not cond:
+        print("net gate (deterministic): %s" % msg)
+        sys.exit(3)
+
+with open("target/ci-net/train.json") as f:
+    train = json.load(f)["trace"]
+with open("target/ci-net/serve.json") as f:
+    serve = json.load(f)["trace"]
+
+for key in ("iters_to_target", "tc_to_target", "bits_to_target"):
+    hard(train[key] is not None, "train did not reach the target (%s is null)" % key)
+    hard(train[key] == serve[key],
+         "train vs serve %s: %s != %s" % (key, train[key], serve[key]))
+print("net gate: serve reproduced train exactly (iters %s, bits %s)"
+      % (train["iters_to_target"], train["bits_to_target"]))
+EOF
+  ./target/release/gadmm netbench --quick --out target/ci-netbench || return 3
+  test -f target/ci-netbench/BENCH_net.json || return 3
+  python3 - <<'EOF'
+import json, sys
+
+def hard(cond, msg):  # deterministic failure: never retried
+    if not cond:
+        print("netbench gate (deterministic): %s" % msg)
+        sys.exit(3)
+
+with open("target/ci-netbench/BENCH_net.json") as f:
+    report = json.load(f)
+
+hard(report["experiment"] == "bench_net", "wrong experiment %r" % report["experiment"])
+rows = report["rows"]
+hard(len(rows) == 6, "expected the six distributable engines, got %d rows" % len(rows))
+diverged = [r["spec"] for r in rows if not r["identical"]]
+hard(not diverged, "networked run diverged from in-process for: %s" % diverged)
+hard(report["all_identical"], "all_identical flag disagrees with the rows")
+silent = [r["spec"] for r in rows if r["wire_bytes"] <= 0]
+hard(not silent, "rows reported no wire traffic: %s" % silent)
+print("netbench gate OK: 6 engines bit-identical over TCP, wire bytes %s"
+      % sum(r["wire_bytes"] for r in rows))
+EOF
+}
+if ! net_gate; then
+  echo "==> net deterministic gate failed — not retrying"
+  exit 3
+fi
+
 echo "CI OK"

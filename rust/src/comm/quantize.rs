@@ -76,7 +76,7 @@ impl QuantizedMsg {
 }
 
 /// A wire message on the model-exchange path.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub enum Msg {
     /// Uncompressed model (64 bits per coordinate).
     Dense(Vec<f64>),

@@ -24,7 +24,13 @@
 //! The per-worker subproblem solve is behind [`crate::runtime::LocalSolver`],
 //! so the same coordinator runs the pure-rust native path and the
 //! AOT-compiled PJRT path (python never on this path).
+//!
+//! Both actors talk to the medium through the [`transport`] seam: the
+//! in-process channel transport lives here, the TCP transport (one OS
+//! process per worker, `gadmm serve`) in [`crate::net`]. The two produce
+//! bit-identical runs — see `docs/adr/007-transport-seam.md`.
 
+pub mod transport;
 pub mod worker;
 
 use crate::comm::{dense_links, faulty_links, FaultSchedule, LinkPolicy, Meter};
@@ -38,7 +44,8 @@ use crate::topology::graph::BipartiteGraph;
 use crate::topology::LinkCosts;
 use std::sync::mpsc;
 use std::time::Instant;
-use worker::{LeaderMsg, NeighborLink, Report, WorkerCtx, WorkerMsg};
+use transport::{ChannelLeaderTransport, ChannelWorkerTransport, LeaderTransport, TransportError};
+use worker::{LeaderMsg, NeighborInfo, Report, WorkerCtx, WorkerMsg};
 
 /// Outcome of a distributed training run.
 pub struct TrainResult {
@@ -142,32 +149,46 @@ pub fn train_graph_spec<'p>(
             graph.len()
         ));
     }
-    let (rho, links, name) = match *spec {
+    let (rho, links, name) = spec_wire(spec, problem.dim, n, seed)?;
+    Ok(train_links(problem, solvers, rho, graph, costs, opts, links, name))
+}
+
+/// Map a static group-ADMM spec to its per-worker wire configuration
+/// `(rho, link policies, display name)` — the single factory behind
+/// [`train_graph_spec`] *and* the TCP runtime ([`crate::net`]). Every
+/// execution path building its links here is what makes sequential,
+/// channel, and multi-process runs bit-identical for the same `seed`:
+/// there is only one place where policies (and their per-worker RNG
+/// streams and fault schedules) come from.
+pub fn spec_wire(
+    spec: &AlgoSpec,
+    dim: usize,
+    n: usize,
+    seed: u64,
+) -> Result<(f64, Vec<Box<dyn LinkPolicy>>, String), String> {
+    match *spec {
         AlgoSpec::Ggadmm { rho, graph: kind, fault, .. } => {
             // Same fault layer as AlgoSpec::chain_wire: wrap the per-worker
             // policies, keyed by the run seed, so a faulted distributed
             // GGADMM run replays the faulted sequential engine bit-for-bit.
-            let mut links = dense_links(problem.dim, n);
+            let mut links = dense_links(dim, n);
             let mut name = format!("GGADMM-dist(rho={rho},graph={kind})");
             if fault > 0.0 {
                 links = faulty_links(links, &FaultSchedule::new(seed, fault));
                 name.pop();
                 name.push_str(&format!(",fault={fault})"));
             }
-            (rho, links, name)
+            Ok((rho, links, name))
         }
-        _ => match spec.chain_wire(problem.dim, n, seed) {
-            Some(wire) => (wire.rho, wire.links, wire.name),
-            None => {
-                return Err(format!(
-                    "'{}' has no static per-worker wire configuration — the graph coordinator \
-                     runs GGADMM and the static chain-wire specs only",
-                    spec.spec_string()
-                ))
-            }
+        _ => match spec.chain_wire(dim, n, seed) {
+            Some(wire) => Ok((wire.rho, wire.links, wire.name)),
+            None => Err(format!(
+                "'{}' has no static per-worker wire configuration — the graph coordinator \
+                 runs GGADMM and the static chain-wire specs only",
+                spec.spec_string()
+            )),
         },
-    };
-    Ok(train_links(problem, solvers, rho, graph, costs, opts, links, name))
+    }
 }
 
 /// [`train`] with an optional quantized communication path: when `quant`
@@ -197,11 +218,49 @@ pub fn train_with<'p>(
 /// per shard, one [`LinkPolicy`] per worker on the wire, one mirrored dual
 /// per graph edge.
 ///
-/// Public because it is the chaos harness's entry point for *custom* wire
-/// configurations — e.g. wrapping a spec's links in a
-/// [`crate::comm::FaultSchedule`] with explicit crash windows
-/// (`rust/tests/chaos.rs`); the spec-driven paths above cover the plain
-/// `fault=p` knob.
+/// This is the entry point for *custom* wire configurations — anything the
+/// declarative [`AlgoSpec`] paths above cannot express. The chaos harness
+/// (`rust/tests/chaos.rs`) routes here to wrap a spec's links in a
+/// [`crate::comm::FaultSchedule`] with explicit crash windows, and the TCP
+/// runtime ([`crate::net`]) mirrors this function's worker wiring over
+/// sockets; the spec-driven paths above cover the plain `fault=p` knob.
+/// Workers run on OS threads inside this process and exchange models over
+/// channels through the [`transport`] seam, so a trace produced here is
+/// bit-identical to a `gadmm serve` run of the same spec and seed.
+///
+/// `links[w]` is worker w's outbound [`LinkPolicy`]; all policies must
+/// report the same `message_bits()` slot size. The link policies carry the
+/// compression/censoring behaviour, so this function needs no algorithm
+/// knob beyond `rho`.
+///
+/// ```
+/// use gadmm::comm::dense_links;
+/// use gadmm::coordinator::train_links;
+/// use gadmm::model::Problem;
+/// use gadmm::optim::RunOptions;
+/// use gadmm::runtime::{LocalSolver, NativeSolver};
+/// use gadmm::topology::chain::Chain;
+/// use gadmm::topology::graph::BipartiteGraph;
+/// use gadmm::topology::UnitCosts;
+/// use gadmm::util::rng::Pcg64;
+///
+/// let ds = gadmm::data::synthetic::linreg(40, 4, &mut Pcg64::seeded(1));
+/// let p = Problem::from_dataset(&ds, 4);
+/// let solvers: Vec<Box<dyn LocalSolver + Send + '_>> = (0..4)
+///     .map(|w| Box::new(NativeSolver::new(&*p.losses[w])) as Box<dyn LocalSolver + Send + '_>)
+///     .collect();
+/// let result = train_links(
+///     &p,
+///     solvers,
+///     3.0,
+///     BipartiteGraph::from_chain(&Chain::sequential(4)),
+///     &UnitCosts,
+///     &RunOptions::with_target(1e-3, 2000),
+///     dense_links(p.dim, 4),
+///     "GADMM-dist(custom)".into(),
+/// );
+/// assert!(result.trace.iters_to_target().is_some());
+/// ```
 #[allow(clippy::too_many_arguments)]
 pub fn train_links<'p>(
     problem: &'p Problem,
@@ -234,10 +293,7 @@ pub fn train_links<'p>(
         (0..n).map(|_| mpsc::channel::<LeaderMsg>()).unzip();
     let (report_tx, report_rx) = mpsc::channel::<Report>();
 
-    let mut trace = Trace::new(&name, &problem.name, opts.target);
-    let mut thetas: Vec<Vec<f64>> = vec![vec![0.0; d]; n];
-
-    std::thread::scope(|scope| {
+    let (trace, thetas) = std::thread::scope(|scope| {
         // Spawn workers.
         for (w, ((solver, policy), (cmd_rx, model_rx))) in solvers
             .into_iter()
@@ -245,15 +301,22 @@ pub fn train_links<'p>(
             .zip(cmd_rxs.into_iter().zip(model_rxs.into_iter()))
             .enumerate()
         {
-            let neighbors = graph
+            let neighbors: Vec<NeighborInfo> = graph
                 .adjacency(w)
                 .iter()
-                .map(|er| NeighborLink {
-                    id: er.neighbor,
-                    origin: er.origin,
-                    tx: model_txs[er.neighbor].clone(),
-                })
+                .map(|er| NeighborInfo { id: er.neighbor, origin: er.origin })
                 .collect();
+            let channel = ChannelWorkerTransport {
+                id: w,
+                neighbor_txs: graph
+                    .adjacency(w)
+                    .iter()
+                    .map(|er| (er.neighbor, model_txs[er.neighbor].clone()))
+                    .collect(),
+                inbox: model_rx,
+                commands: cmd_rx,
+                report: report_tx.clone(),
+            };
             let ctx = WorkerCtx {
                 id: w,
                 is_head: graph.is_head(w),
@@ -263,78 +326,107 @@ pub fn train_links<'p>(
                 solver,
                 loss: &*problem.losses[w],
                 policy,
-                inbox: model_rx,
-                commands: cmd_rx,
-                report: report_tx.clone(),
+                transport: Box::new(channel),
             };
-            scope.spawn(move || worker::run_worker(ctx));
+            scope.spawn(move || worker::run_worker(ctx).expect("worker transport"));
         }
         drop(report_tx);
         drop(model_txs);
 
-        // Leader loop. The default payload matches the actual wire size so
-        // any default-variant charge stays consistent with `slot_bits`.
-        let mut meter = Meter::new(costs);
-        meter.set_payload_bits(slot_bits);
-        let t0 = Instant::now();
-        for k in 0..opts.max_iters {
-            for tx in &cmd_txs {
-                tx.send(LeaderMsg::Iterate).expect("worker alive");
-            }
-            // Collect N reports for this iteration.
-            let mut obj = 0.0;
-            let mut sent_by_worker: Vec<Option<f64>> = vec![None; n];
-            for _ in 0..n {
-                let rep = report_rx.recv().expect("worker alive");
-                obj += rep.loss_value;
-                sent_by_worker[rep.id] = rep.sent;
-                thetas[rep.id] = rep.theta;
-            }
-            // Charge communication structurally: every worker's slot comes
-            // up once, over two rounds (heads then tails), through the
-            // same shared billing the sequential core uses. Transmitted
-            // slots are billed with the payload the worker actually sent;
-            // censored slots tick the censored counter and cost nothing.
-            crate::comm::charge_graph_phase(&mut meter, &graph, true, &sent_by_worker);
-            crate::comm::charge_graph_phase(&mut meter, &graph, false, &sent_by_worker);
-            let obj_err = (obj - problem.f_star).abs();
-            // Same stride-thinning contract as optim::run: the final
-            // iteration is always flushed so convergence metrics stay exact.
-            let done = opts.is_final(k + 1, obj_err);
-            if done || opts.record_this(k + 1) {
-                trace.push(IterRecord {
-                    iter: k + 1,
-                    obj_err,
-                    tc_unit: meter.tc_unit,
-                    tc_energy: meter.tc_energy,
-                    bits: meter.bits,
-                    rounds: meter.rounds,
-                    elapsed: t0.elapsed(),
-                    acv: graph.acv(&thetas),
-                });
-            }
-            if done {
-                break;
-            }
-        }
-        for tx in &cmd_txs {
-            let _ = tx.send(LeaderMsg::Shutdown);
-        }
+        let mut leader = ChannelLeaderTransport { cmd_txs, report_rx };
+        lead_loop(&name, problem, &graph, costs, opts, slot_bits, &mut leader)
+            .expect("worker alive")
     });
 
-    let consensus = {
-        let mut mean = vec![0.0; d];
-        for t in &thetas {
-            crate::linalg::vector::axpy(1.0, t, &mut mean);
-        }
-        crate::linalg::vector::scale(1.0 / n as f64, &mut mean);
-        mean
-    };
+    let consensus = consensus_of(&thetas);
     TrainResult {
         trace,
         thetas,
         consensus,
     }
+}
+
+/// Consensus mean of a set of per-worker models.
+pub fn consensus_of(thetas: &[Vec<f64>]) -> Vec<f64> {
+    let d = thetas.first().map(Vec::len).unwrap_or(0);
+    let mut mean = vec![0.0; d];
+    for t in thetas {
+        crate::linalg::vector::axpy(1.0, t, &mut mean);
+    }
+    crate::linalg::vector::scale(1.0 / thetas.len().max(1) as f64, &mut mean);
+    mean
+}
+
+/// The leader's side of a distributed run, generic over the medium: drive
+/// `opts.max_iters` barriers through `transport`, bill communication
+/// structurally per phase, record the trace, and send the final
+/// [`LeaderMsg::Shutdown`]. Returns the trace and the final per-worker
+/// models.
+///
+/// [`train_links`] calls this over in-process channels;
+/// [`crate::net::lead`] calls it over per-worker TCP control streams. The
+/// loop itself is transport-blind, which is the heart of the bit-identity
+/// argument in `docs/adr/007-transport-seam.md`: everything it does is a
+/// pure function of the reports it collects.
+pub fn lead_loop(
+    name: &str,
+    problem: &Problem,
+    graph: &BipartiteGraph,
+    costs: &dyn LinkCosts,
+    opts: &RunOptions,
+    slot_bits: f64,
+    transport: &mut dyn LeaderTransport,
+) -> Result<(Trace, Vec<Vec<f64>>), TransportError> {
+    let n = problem.num_workers();
+    let d = problem.dim;
+    let mut trace = Trace::new(name, &problem.name, opts.target);
+    let mut thetas: Vec<Vec<f64>> = vec![vec![0.0; d]; n];
+    // The default payload matches the actual wire size so any
+    // default-variant charge stays consistent with `slot_bits`.
+    let mut meter = Meter::new(costs);
+    meter.set_payload_bits(slot_bits);
+    let t0 = Instant::now();
+    for k in 0..opts.max_iters {
+        transport.broadcast_command(LeaderMsg::Iterate)?;
+        // Collect N reports for this iteration.
+        let mut obj = 0.0;
+        let mut sent_by_worker: Vec<Option<f64>> = vec![None; n];
+        for rep in transport.collect_reports()? {
+            obj += rep.loss_value;
+            sent_by_worker[rep.id] = rep.sent;
+            thetas[rep.id] = rep.theta;
+        }
+        // Charge communication structurally: every worker's slot comes
+        // up once, over two rounds (heads then tails), through the
+        // same shared billing the sequential core uses. Transmitted
+        // slots are billed with the payload the worker actually sent;
+        // censored slots tick the censored counter and cost nothing.
+        crate::comm::charge_graph_phase(&mut meter, graph, true, &sent_by_worker);
+        crate::comm::charge_graph_phase(&mut meter, graph, false, &sent_by_worker);
+        let obj_err = (obj - problem.f_star).abs();
+        // Same stride-thinning contract as optim::run: the final
+        // iteration is always flushed so convergence metrics stay exact.
+        let done = opts.is_final(k + 1, obj_err);
+        if done || opts.record_this(k + 1) {
+            trace.push(IterRecord {
+                iter: k + 1,
+                obj_err,
+                tc_unit: meter.tc_unit,
+                tc_energy: meter.tc_energy,
+                bits: meter.bits,
+                rounds: meter.rounds,
+                elapsed: t0.elapsed(),
+                acv: graph.acv(&thetas),
+            });
+        }
+        if done {
+            break;
+        }
+    }
+    // Best-effort shutdown: by this point the run is complete, so a peer
+    // that already went away must not turn success into failure.
+    let _ = transport.broadcast_command(LeaderMsg::Shutdown);
+    Ok((trace, thetas))
 }
 
 #[cfg(test)]

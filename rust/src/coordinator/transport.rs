@@ -1,0 +1,273 @@
+//! Transport seam between the coordinator's actors and the medium that
+//! carries their messages.
+//!
+//! The worker loop ([`super::worker::run_worker`]) and the leader loop
+//! ([`super::lead_loop`]) are written against two small traits —
+//! [`WorkerTransport`] and [`LeaderTransport`] — instead of concrete
+//! channels. Two implementations exist:
+//!
+//! * the in-process channel transport in this module (one OS thread per
+//!   worker, `std::sync::mpsc` fan-out), used by
+//!   [`super::train_links`]; and
+//! * the TCP transport in [`crate::net`] (one OS *process* per worker,
+//!   framed streams over sockets), used by `gadmm serve`.
+//!
+//! The seam is deliberately message-shaped, not byte-shaped: a transport
+//! moves whole [`Msg`] payloads, [`LeaderMsg`] commands, and [`Report`]s.
+//! Everything algorithmic — link policies, decoders, duals, billing —
+//! stays above the seam, which is why the two transports produce
+//! bit-identical runs (see `docs/adr/007-transport-seam.md`).
+
+use super::worker::{LeaderMsg, Report, WorkerMsg};
+use crate::comm::Msg;
+use std::sync::mpsc::{Receiver, Sender};
+
+/// Transport-layer failure. The channel transport can only hit the
+/// disconnect arms (a peer thread died); the TCP transport additionally
+/// maps socket timeouts and malformed frames here.
+#[derive(Debug)]
+pub enum TransportError {
+    /// A peer's stream or channel closed for good.
+    Disconnected {
+        /// Rank of the peer that went away.
+        rank: usize,
+        /// Human-readable cause (I/O error text, "channel closed", …).
+        detail: String,
+    },
+    /// A blocking read ran out the configured budget.
+    Timeout {
+        /// Rank of the peer that failed to produce a frame in time.
+        rank: usize,
+        /// The budget that elapsed, in milliseconds.
+        ms: u64,
+    },
+    /// A frame arrived but did not make sense (codec or handshake bug).
+    Protocol(String),
+}
+
+impl std::fmt::Display for TransportError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            TransportError::Disconnected { rank, detail } => {
+                write!(f, "worker {rank} disconnected: {detail}")
+            }
+            TransportError::Timeout { rank, ms } => {
+                write!(f, "worker {rank} timed out after {ms} ms")
+            }
+            TransportError::Protocol(msg) => write!(f, "protocol error: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for TransportError {}
+
+/// What a worker needs from the medium: leader commands in, one broadcast
+/// out per iteration, one inbound payload per neighbour, reports back.
+///
+/// The iteration index `k` is advisory — the channel transport ignores it;
+/// the TCP transport stamps it on model frames so a receiver recovering
+/// from a timeout can discard stale slots.
+pub trait WorkerTransport: Send {
+    /// Block for the next leader command. A transport whose command path
+    /// can close cleanly (leader exited) should return
+    /// [`LeaderMsg::Shutdown`] rather than an error.
+    fn next_command(&mut self) -> Result<LeaderMsg, TransportError>;
+
+    /// Deliver this iteration's single link-policy output to every
+    /// neighbour. A censored slot is broadcast too, as an explicit
+    /// [`Msg::Skip`]: the marker *is* the simulated timeout, and sending it
+    /// keeps deterministic runs identical across transports.
+    fn broadcast(&mut self, k: usize, msg: &Msg) -> Result<(), TransportError>;
+
+    /// Block until one payload from every neighbour has arrived; returns
+    /// `(sender_rank, payload)` pairs in arrival order. A TCP transport
+    /// may substitute [`Msg::Skip`] for a neighbour that missed its read
+    /// deadline (the real-network analogue of a censored slot).
+    fn collect(&mut self, k: usize) -> Result<Vec<(usize, Msg)>, TransportError>;
+
+    /// Send the end-of-iteration monitoring report to the leader.
+    fn report(&mut self, rep: Report) -> Result<(), TransportError>;
+}
+
+/// Forwarding impl so an owner can lend its transport to
+/// [`super::worker::run_worker`] (which consumes its `WorkerCtx`) and
+/// still use it afterwards — the TCP worker sends its `Bye` accounting
+/// frame over the same streams once the loop returns.
+impl<T: WorkerTransport + ?Sized> WorkerTransport for &mut T {
+    fn next_command(&mut self) -> Result<LeaderMsg, TransportError> {
+        (**self).next_command()
+    }
+
+    fn broadcast(&mut self, k: usize, msg: &Msg) -> Result<(), TransportError> {
+        (**self).broadcast(k, msg)
+    }
+
+    fn collect(&mut self, k: usize) -> Result<Vec<(usize, Msg)>, TransportError> {
+        (**self).collect(k)
+    }
+
+    fn report(&mut self, rep: Report) -> Result<(), TransportError> {
+        (**self).report(rep)
+    }
+}
+
+/// What the leader needs from the medium: commands out to every worker,
+/// one report per worker back.
+pub trait LeaderTransport {
+    /// Send `cmd` to every worker.
+    fn broadcast_command(&mut self, cmd: LeaderMsg) -> Result<(), TransportError>;
+
+    /// Block until every worker has reported this iteration; order is
+    /// arbitrary (reports carry their worker id).
+    fn collect_reports(&mut self) -> Result<Vec<Report>, TransportError>;
+}
+
+/// In-process [`WorkerTransport`] over `std::sync::mpsc` channels — the
+/// medium [`super::train_links`] wires up inside one process.
+pub struct ChannelWorkerTransport {
+    /// This worker's rank (stamped on outgoing model messages).
+    pub id: usize,
+    /// Per-neighbour senders into the neighbours' inboxes, in the graph's
+    /// deterministic adjacency order.
+    pub neighbor_txs: Vec<(usize, Sender<WorkerMsg>)>,
+    /// This worker's inbox for neighbour model messages.
+    pub inbox: Receiver<WorkerMsg>,
+    /// Leader command channel.
+    pub commands: Receiver<LeaderMsg>,
+    /// Report channel back to the leader.
+    pub report: Sender<Report>,
+}
+
+impl WorkerTransport for ChannelWorkerTransport {
+    fn next_command(&mut self) -> Result<LeaderMsg, TransportError> {
+        // A closed command channel means the leader is gone: treat it as
+        // an orderly shutdown, exactly as the pre-seam worker loop did.
+        Ok(self.commands.recv().unwrap_or(LeaderMsg::Shutdown))
+    }
+
+    fn broadcast(&mut self, _k: usize, msg: &Msg) -> Result<(), TransportError> {
+        for (_, tx) in &self.neighbor_txs {
+            // A neighbour that already shut down simply misses the send;
+            // the leader notices through its own report collection.
+            let _ = tx.send(WorkerMsg { from: self.id, payload: msg.clone() });
+        }
+        Ok(())
+    }
+
+    fn collect(&mut self, _k: usize) -> Result<Vec<(usize, Msg)>, TransportError> {
+        let mut got = Vec::with_capacity(self.neighbor_txs.len());
+        for _ in 0..self.neighbor_txs.len() {
+            let msg = self.inbox.recv().map_err(|_| TransportError::Disconnected {
+                rank: self.id,
+                detail: "a neighbor's channel closed mid-iteration".into(),
+            })?;
+            got.push((msg.from, msg.payload));
+        }
+        Ok(got)
+    }
+
+    fn report(&mut self, rep: Report) -> Result<(), TransportError> {
+        let id = rep.id;
+        self.report.send(rep).map_err(|_| TransportError::Disconnected {
+            rank: id,
+            detail: "leader report channel closed".into(),
+        })
+    }
+}
+
+/// In-process [`LeaderTransport`] counterpart of
+/// [`ChannelWorkerTransport`].
+pub struct ChannelLeaderTransport {
+    /// Per-worker command senders, indexed by rank.
+    pub cmd_txs: Vec<Sender<LeaderMsg>>,
+    /// Shared report receiver (every worker holds a sender clone).
+    pub report_rx: Receiver<Report>,
+}
+
+impl LeaderTransport for ChannelLeaderTransport {
+    fn broadcast_command(&mut self, cmd: LeaderMsg) -> Result<(), TransportError> {
+        for (rank, tx) in self.cmd_txs.iter().enumerate() {
+            tx.send(cmd).map_err(|_| TransportError::Disconnected {
+                rank,
+                detail: "worker command channel closed".into(),
+            })?;
+        }
+        Ok(())
+    }
+
+    fn collect_reports(&mut self) -> Result<Vec<Report>, TransportError> {
+        let n = self.cmd_txs.len();
+        let mut reps = Vec::with_capacity(n);
+        for _ in 0..n {
+            reps.push(self.report_rx.recv().map_err(|_| TransportError::Disconnected {
+                rank: usize::MAX,
+                detail: "all worker report channels closed".into(),
+            })?);
+        }
+        Ok(reps)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc;
+
+    #[test]
+    fn error_display_names_the_rank() {
+        let e = TransportError::Disconnected { rank: 3, detail: "eof".into() };
+        assert_eq!(e.to_string(), "worker 3 disconnected: eof");
+        let t = TransportError::Timeout { rank: 1, ms: 500 };
+        assert_eq!(t.to_string(), "worker 1 timed out after 500 ms");
+        let p = TransportError::Protocol("bad frame".into());
+        assert_eq!(p.to_string(), "protocol error: bad frame");
+    }
+
+    #[test]
+    fn channel_worker_transport_roundtrips() {
+        let (nb_tx, nb_rx) = mpsc::channel::<WorkerMsg>();
+        let (my_tx, my_rx) = mpsc::channel::<WorkerMsg>();
+        let (cmd_tx, cmd_rx) = mpsc::channel::<LeaderMsg>();
+        let (rep_tx, rep_rx) = mpsc::channel::<Report>();
+        let mut t = ChannelWorkerTransport {
+            id: 0,
+            neighbor_txs: vec![(1, nb_tx)],
+            inbox: my_rx,
+            commands: cmd_rx,
+            report: rep_tx,
+        };
+
+        cmd_tx.send(LeaderMsg::Iterate).unwrap();
+        assert!(matches!(t.next_command().unwrap(), LeaderMsg::Iterate));
+
+        t.broadcast(0, &Msg::Dense(vec![1.0, 2.0])).unwrap();
+        let out = nb_rx.recv().unwrap();
+        assert_eq!(out.from, 0);
+
+        my_tx.send(WorkerMsg { from: 1, payload: Msg::Skip }).unwrap();
+        let got = t.collect(0).unwrap();
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0].0, 1);
+        assert!(got[0].1.is_skip());
+
+        t.report(Report { id: 0, loss_value: 1.5, theta: vec![0.0], sent: None }).unwrap();
+        assert_eq!(rep_rx.recv().unwrap().loss_value, 1.5);
+
+        // Dropping the leader's command sender reads as a clean shutdown.
+        drop(cmd_tx);
+        assert!(matches!(t.next_command().unwrap(), LeaderMsg::Shutdown));
+    }
+
+    #[test]
+    fn channel_leader_transport_collects_by_count() {
+        let (cmd_tx, cmd_rx) = mpsc::channel::<LeaderMsg>();
+        let (rep_tx, rep_rx) = mpsc::channel::<Report>();
+        let mut t = ChannelLeaderTransport { cmd_txs: vec![cmd_tx], report_rx: rep_rx };
+        t.broadcast_command(LeaderMsg::Iterate).unwrap();
+        assert!(matches!(cmd_rx.recv().unwrap(), LeaderMsg::Iterate));
+        rep_tx.send(Report { id: 0, loss_value: 2.0, theta: vec![], sent: Some(64.0) }).unwrap();
+        let reps = t.collect_reports().unwrap();
+        assert_eq!(reps.len(), 1);
+        assert_eq!(reps[0].sent, Some(64.0));
+    }
+}

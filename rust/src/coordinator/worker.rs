@@ -1,10 +1,13 @@
 //! Worker actor: owns its shard state and exchanges models with its
-//! neighbour set over channels. The body of `run_worker` is the group-ADMM
-//! iteration from the worker's point of view — Algorithm 1 when the graph
-//! is a chain, GGADMM on any other bipartite topology — with the model
-//! exchange going through the pluggable [`LinkPolicy`] seam, so the same
-//! actor runs dense GADMM/GGADMM, quantized Q-GADMM, and censored
-//! C-GADMM / CQ-GADMM traffic.
+//! neighbour set over a pluggable [`WorkerTransport`]. The body of
+//! `run_worker` is the group-ADMM iteration from the worker's point of
+//! view — Algorithm 1 when the graph is a chain, GGADMM on any other
+//! bipartite topology — with the model exchange going through the
+//! pluggable [`LinkPolicy`] seam, so the same actor runs dense
+//! GADMM/GGADMM, quantized Q-GADMM, and censored C-GADMM / CQ-GADMM
+//! traffic — and through the transport seam, so the same actor runs as an
+//! in-process thread (channels) or a standalone OS process (TCP, see
+//! [`crate::net`]).
 //!
 //! Per incident edge the worker holds a mirrored copy of the edge's dual
 //! λ_e and a receiver-side [`Decoder`] tracking that neighbour's public
@@ -12,7 +15,7 @@
 //! models, so the mirrored copies stay bit-identical fleet-wide without
 //! ever sending a dual.
 //!
-//! A censored slot still sends a [`Msg::Skip`] through the channel — it
+//! A censored slot still sends a [`Msg::Skip`] through the transport — it
 //! models the receiver's *timeout* (the receiver learns nothing and keeps
 //! its cached view), not a transmission; the leader bills it as a censored
 //! slot with zero payload bits. A slot dropped by the fault-injection
@@ -20,12 +23,13 @@
 //! is why chaos runs need no worker-side changes: to a receiver, a lost
 //! transmission and a censored one are the same timeout.
 
+use super::transport::{TransportError, WorkerTransport};
 use crate::comm::{Decoder, LinkPolicy, Msg};
 use crate::model::LocalLoss;
 use crate::runtime::LocalSolver;
-use std::sync::mpsc::{Receiver, Sender};
 
 /// Leader → worker control messages.
+#[derive(Clone, Copy, Debug)]
 pub enum LeaderMsg {
     /// Run one full group-ADMM iteration (head phase, tail phase, dual
     /// update) and report.
@@ -45,6 +49,7 @@ pub struct WorkerMsg {
 
 /// Worker → leader monitoring report (instrumentation, not algorithm
 /// state — the leader never feeds models back).
+#[derive(Clone, Debug, PartialEq)]
 pub struct Report {
     /// Physical id of the reporting worker.
     pub id: usize,
@@ -59,8 +64,10 @@ pub struct Report {
     pub sent: Option<f64>,
 }
 
-/// One edge of the worker's neighbour set, as the worker sees it.
-pub struct NeighborLink {
+/// One edge of the worker's neighbour set, as the worker sees it. How the
+/// neighbour is *reached* is the transport's business; this is only the
+/// algorithmic view.
+pub struct NeighborInfo {
     /// Physical id of the neighbour.
     pub id: usize,
     /// Whether this worker is the *origin* endpoint of the shared edge —
@@ -69,11 +76,9 @@ pub struct NeighborLink {
     /// sees `−λ_e` and ascends `λ_e += ρ(θ̂_nb − θ̂_own)` (the same value,
     /// computed from the same public models).
     pub origin: bool,
-    /// Channel to the neighbour's inbox.
-    pub tx: Sender<WorkerMsg>,
 }
 
-/// Everything a worker thread owns.
+/// Everything a worker owns.
 pub struct WorkerCtx<'a> {
     /// Physical worker id.
     pub id: usize,
@@ -82,7 +87,7 @@ pub struct WorkerCtx<'a> {
     /// Incident edges in the graph's deterministic adjacency order — the
     /// order the subproblem accumulates coupling terms (left-then-right on
     /// a chain).
-    pub neighbors: Vec<NeighborLink>,
+    pub neighbors: Vec<NeighborInfo>,
     /// Effective ρ (paper units scaled by the problem normalization).
     pub rho: f64,
     /// Model dimension.
@@ -96,16 +101,15 @@ pub struct WorkerCtx<'a> {
     /// Its public view is the model every neighbour currently holds for
     /// this worker.
     pub policy: Box<dyn LinkPolicy + 'a>,
-    /// Inbox for neighbour model messages.
-    pub inbox: Receiver<WorkerMsg>,
-    /// Leader command channel.
-    pub commands: Receiver<LeaderMsg>,
-    /// Report channel back to the leader.
-    pub report: Sender<Report>,
+    /// The medium: in-process channels or framed TCP streams.
+    pub transport: Box<dyn WorkerTransport + 'a>,
 }
 
-/// Worker main loop.
-pub fn run_worker(mut ctx: WorkerCtx<'_>) {
+/// Worker main loop. Returns `Ok(())` on an orderly shutdown; a transport
+/// error aborts the loop and surfaces to the spawner (the in-process
+/// coordinator treats it as fatal, a TCP worker process exits nonzero
+/// with the message).
+pub fn run_worker(mut ctx: WorkerCtx<'_>) -> Result<(), TransportError> {
     let d = ctx.dim;
     let deg = ctx.neighbors.len();
     let mut theta = vec![0.0; d];
@@ -122,9 +126,9 @@ pub fn run_worker(mut ctx: WorkerCtx<'_>) {
     let mut k = 0usize;
 
     loop {
-        match ctx.commands.recv() {
-            Err(_) | Ok(LeaderMsg::Shutdown) => return,
-            Ok(LeaderMsg::Iterate) => {}
+        match ctx.transport.next_command()? {
+            LeaderMsg::Shutdown => return Ok(()),
+            LeaderMsg::Iterate => {}
         }
 
         let sent;
@@ -132,14 +136,14 @@ pub fn run_worker(mut ctx: WorkerCtx<'_>) {
             // Head phase: solve against cached (iteration-k) tail models,
             // then broadcast; finally receive the fresh tail models.
             theta = solve_local(&ctx, &mut q, &theta, &decoders, &lambda);
-            sent = send_model(&mut ctx, k, &theta);
-            recv_models(&ctx, &mut decoders);
+            sent = send_model(&mut ctx, k, &theta)?;
+            recv_models(&mut ctx, k, &mut decoders)?;
         } else {
             // Tail phase: wait for fresh head models first (eq. 13 uses
             // θ^{k+1} of every head neighbour), then solve and send back.
-            recv_models(&ctx, &mut decoders);
+            recv_models(&mut ctx, k, &mut decoders)?;
             theta = solve_local(&ctx, &mut q, &theta, &decoders, &lambda);
-            sent = send_model(&mut ctx, k, &theta);
+            sent = send_model(&mut ctx, k, &theta)?;
         }
 
         // Dual updates (eq. 15, per edge) on the *public* models, purely
@@ -164,14 +168,13 @@ pub fn run_worker(mut ctx: WorkerCtx<'_>) {
         }
 
         k += 1;
-        ctx.report
-            .send(Report {
-                id: ctx.id,
-                loss_value: ctx.loss.value(&theta),
-                theta: theta.clone(),
-                sent,
-            })
-            .expect("leader alive");
+        let rep = Report {
+            id: ctx.id,
+            loss_value: ctx.loss.value(&theta),
+            theta: theta.clone(),
+            sent,
+        };
+        ctx.transport.report(rep)?;
     }
 }
 
@@ -210,38 +213,44 @@ fn solve_local(
 /// Run the link policy once and broadcast its message (possibly a
 /// [`Msg::Skip`]); returns the exact payload bits on the wire, or `None`
 /// for a censored slot.
-fn send_model(ctx: &mut WorkerCtx<'_>, k: usize, theta: &[f64]) -> Option<f64> {
+fn send_model(
+    ctx: &mut WorkerCtx<'_>,
+    k: usize,
+    theta: &[f64],
+) -> Result<Option<f64>, TransportError> {
     // One policy decision per iteration, shared by all receivers — a real
-    // radio broadcasts a single payload; channel fan-out models the
+    // radio broadcasts a single payload; transport fan-out models the
     // neighbour set receiving that single transmission.
     let msg = ctx.policy.transmit(k, theta);
     let sent = match &msg {
         Msg::Skip => None,
         m => Some(m.payload_bits()),
     };
-    for nb in &ctx.neighbors {
-        let _ = nb.tx.send(WorkerMsg {
-            from: ctx.id,
-            payload: msg.clone(),
-        });
-    }
-    sent
+    ctx.transport.broadcast(k, &msg)?;
+    Ok(sent)
 }
 
 /// Receive one message from every neighbour (in arrival order) and apply
-/// each to that neighbour's decoder.
-fn recv_models(ctx: &WorkerCtx<'_>, decoders: &mut [Decoder]) {
-    for _ in 0..ctx.neighbors.len() {
-        let msg = ctx.inbox.recv().expect("neighbor alive");
+/// each to that neighbour's decoder. Application is per-neighbour
+/// independent (each message touches only its sender's decoder), so any
+/// arrival interleaving yields the same post-state — the fact that keeps
+/// channel and TCP runs bit-identical.
+fn recv_models(
+    ctx: &mut WorkerCtx<'_>,
+    k: usize,
+    decoders: &mut [Decoder],
+) -> Result<(), TransportError> {
+    for (from, payload) in ctx.transport.collect(k)? {
         let i = ctx
             .neighbors
             .iter()
-            .position(|nb| nb.id == msg.from)
+            .position(|nb| nb.id == from)
             .unwrap_or_else(|| {
-                panic!("worker {} received model from non-neighbor {}", ctx.id, msg.from)
+                panic!("worker {} received model from non-neighbor {}", ctx.id, from)
             });
-        decoders[i].apply(&msg.payload);
+        decoders[i].apply(&payload);
     }
+    Ok(())
 }
 
 #[cfg(test)]

@@ -25,6 +25,11 @@
 //!   `gadmm chaos` (`BENCH_chaos.json`: all six group engines × a ladder
 //!   of seeded drop rates, each cell replayed for bit-identity; see
 //!   `docs/adr/006-fault-injection.md`)
+//! * [`netbench::run`] — the networked-vs-in-process grid behind
+//!   `gadmm netbench` (`BENCH_net.json`: every distributable engine run
+//!   through the channel coordinator and as a real localhost
+//!   lead + worker-process deployment, with a bit-identity column and
+//!   real wire-byte accounting; see `docs/adr/007-transport-seam.md`)
 
 pub mod bench;
 pub mod censor;
@@ -34,6 +39,7 @@ pub mod fig6;
 pub mod fig7;
 pub mod fig8;
 pub mod graph;
+pub mod netbench;
 pub mod qgadmm;
 pub mod table1;
 

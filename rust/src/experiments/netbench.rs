@@ -1,0 +1,338 @@
+//! `gadmm netbench` — the networked-vs-in-process grid (`BENCH_net.json`).
+//!
+//! For every distributable engine on the bench grid (the four chain link
+//! policies shared with `gadmm bench`, plus star and RGG GGADMM), the
+//! driver runs the workload twice: once through the in-process channel
+//! coordinator and once as a real localhost deployment — lead in-process
+//! on an ephemeral port, one spawned OS **process** per worker (`gadmm
+//! serve --worker`). Each row reports both wall clocks, the real wire
+//! bytes the fleet moved (frame headers and handshake included, from the
+//! workers' `Bye` accounting), and the headline `identical` column:
+//! `Trace::same_path` *plus* bitwise equality of every final model. The
+//! `all_identical` field is what `ci.sh`'s net gate asserts.
+
+use super::bench::{grid, BenchSpec};
+use super::censor::comparison_roster;
+use crate::coordinator::{self, TrainResult};
+use crate::model::Problem;
+use crate::net::lead::{run_lead_on, ServeConfig};
+use crate::net::DEFAULT_TIMEOUT_MS;
+use crate::optim::RunOptions;
+use crate::runtime::{LocalSolver, NativeSolver};
+use crate::session::AlgoSpec;
+use crate::topology::chain::Chain;
+use crate::topology::graph::{GraphKind, DEFAULT_RGG_RADIUS};
+use crate::topology::{Placement, UnitCosts};
+use crate::util::json::Json;
+use crate::util::rng::Pcg64;
+use crate::util::table::{fmt_count, Table};
+use std::net::TcpListener;
+use std::path::Path;
+use std::process::{Child, Command, Stdio};
+use std::time::Instant;
+
+/// Placement-area side used by `gadmm train`'s default geometry
+/// (`RunConfig::default().area_side`) — mirrored so netbench RGG rows are
+/// the same topology a `gadmm train --algo ggadmm:…` run would build.
+const AREA_SIDE: f64 = 10.0;
+
+/// One netbench cell: the same spec through both execution media.
+pub struct NetRow {
+    pub spec: AlgoSpec,
+    /// The in-process channel-coordinator run.
+    pub inproc: TrainResult,
+    /// The multi-process localhost run.
+    pub net: TrainResult,
+    pub inproc_wall_seconds: f64,
+    pub net_wall_seconds: f64,
+    /// Real bytes the whole fleet wrote to sockets.
+    pub wire_bytes: u64,
+}
+
+impl NetRow {
+    /// Bit-identity across media: same deterministic trace path *and*
+    /// bitwise-equal final models.
+    pub fn identical(&self) -> bool {
+        self.inproc.trace.same_path(&self.net.trace)
+            && bitwise_eq(&self.inproc.thetas, &self.net.thetas)
+    }
+}
+
+pub struct NetbenchOutput {
+    pub rows: Vec<NetRow>,
+    pub rendered: String,
+    pub report: Json,
+}
+
+impl NetbenchOutput {
+    /// Whether every engine crossed the network bit-identically — the
+    /// `ci.sh` net-gate headline.
+    pub fn all_identical(&self) -> bool {
+        self.rows.iter().all(NetRow::identical)
+    }
+}
+
+/// Bitwise (`f64::to_bits`) equality of two model sets — stricter than
+/// `==` (distinguishes `-0.0`, would catch a NaN slot too).
+fn bitwise_eq(a: &[Vec<f64>], b: &[Vec<f64>]) -> bool {
+    a.len() == b.len()
+        && a.iter().zip(b).all(|(x, y)| {
+            x.len() == y.len()
+                && x.iter().zip(y).all(|(p, q)| p.to_bits() == q.to_bits())
+        })
+}
+
+/// The distributable roster: the four chain engines of `gadmm bench`'s
+/// comparison grid plus the two non-chain GGADMM topologies.
+pub fn net_roster(rho: f64, bits: u32, tau: f64, mu: f64) -> Vec<AlgoSpec> {
+    let mut roster = comparison_roster(rho, bits, tau, mu);
+    roster.push(AlgoSpec::Ggadmm {
+        rho,
+        graph: GraphKind::Star,
+        fault: 0.0,
+        threads: 1,
+    });
+    roster.push(AlgoSpec::Ggadmm {
+        rho,
+        graph: GraphKind::Rgg { radius: DEFAULT_RGG_RADIUS },
+        fault: 0.0,
+        threads: 1,
+    });
+    roster
+}
+
+/// Run the netbench grid (same problem, ρ, and target as `gadmm bench`,
+/// so rows are comparable against `BENCH_comm.json`). `exe` is the
+/// `gadmm` binary to spawn workers from.
+pub fn run(quick: bool, seed: u64, exe: &Path) -> Result<NetbenchOutput, String> {
+    let spec = grid(quick);
+    let roster = net_roster(spec.rho, spec.bits, spec.tau, spec.mu);
+    run_with(&spec, &roster, quick, seed, exe)
+}
+
+/// [`run`] on an explicit grid and roster (tests shrink both).
+pub fn run_with(
+    spec: &BenchSpec,
+    roster: &[AlgoSpec],
+    quick: bool,
+    seed: u64,
+    exe: &Path,
+) -> Result<NetbenchOutput, String> {
+    let ds = spec.dataset.build(seed);
+    let problem = Problem::from_dataset(&ds, spec.workers);
+    let opts =
+        RunOptions::with_target(spec.target, spec.max_iters).with_stride(spec.record_stride);
+
+    let mut rows = Vec::with_capacity(roster.len());
+    for algo in roster {
+        let t0 = Instant::now();
+        let inproc = run_inproc(algo, &problem, seed, &opts)?;
+        let inproc_wall_seconds = t0.elapsed().as_secs_f64();
+
+        let t0 = Instant::now();
+        let outcome = run_net(algo, spec, seed, &opts, exe)?;
+        let net_wall_seconds = t0.elapsed().as_secs_f64();
+
+        rows.push(NetRow {
+            spec: *algo,
+            inproc,
+            net: outcome.result,
+            inproc_wall_seconds,
+            net_wall_seconds,
+            wire_bytes: outcome.wire_bytes,
+        });
+    }
+
+    let mut table = Table::new(vec![
+        "Algorithm",
+        "iters→target",
+        "bits→target",
+        "inproc s",
+        "net s",
+        "wire bytes",
+        "identical",
+    ]);
+    for row in &rows {
+        let t = &row.inproc.trace;
+        table.row(vec![
+            t.algorithm.clone(),
+            t.iters_to_target().map(fmt_count).unwrap_or_else(|| "—".into()),
+            t.bits_to_target()
+                .map(|b| format!("{b:.3e}"))
+                .unwrap_or_else(|| "—".into()),
+            format!("{:.3}", row.inproc_wall_seconds),
+            format!("{:.3}", row.net_wall_seconds),
+            fmt_count(row.wire_bytes as usize),
+            if row.identical() { "identical".into() } else { "DIVERGED".into() },
+        ]);
+    }
+    let rendered = format!(
+        "\nnetbench — {} (N={}, rho={}, b={}, tau={}, mu={}), target {:.0e}, \
+         lead + {} worker processes on localhost{}\n{}",
+        spec.dataset.name(),
+        spec.workers,
+        spec.rho,
+        spec.bits,
+        spec.tau,
+        spec.mu,
+        spec.target,
+        spec.workers,
+        if quick { " [quick]" } else { "" },
+        table.render()
+    );
+
+    let report = Json::obj()
+        .set("experiment", "bench_net")
+        .set("quick", quick)
+        .set("dataset", spec.dataset.name())
+        .set("workers", spec.workers)
+        .set("rho", spec.rho)
+        .set("bits", spec.bits as usize)
+        .set("tau", spec.tau)
+        .set("mu", spec.mu)
+        .set("target", spec.target)
+        .set("seed", seed as usize)
+        .set("all_identical", rows.iter().all(NetRow::identical))
+        .set(
+            "rows",
+            Json::Arr(
+                rows.iter()
+                    .map(|row| {
+                        let t = &row.net.trace;
+                        Json::obj()
+                            .set("spec", row.spec.spec_string())
+                            .set("algorithm", t.algorithm.as_str())
+                            .set(
+                                "iters_to_target",
+                                t.iters_to_target()
+                                    .map(|k| Json::Num(k as f64))
+                                    .unwrap_or(Json::Null),
+                            )
+                            .set(
+                                "bits_to_target",
+                                t.bits_to_target().map(Json::Num).unwrap_or(Json::Null),
+                            )
+                            .set("identical", row.identical())
+                            .set("inproc_wall_seconds", row.inproc_wall_seconds)
+                            .set("net_wall_seconds", row.net_wall_seconds)
+                            .set("wire_bytes", row.wire_bytes)
+                            .set("final_error", t.final_error())
+                    })
+                    .collect(),
+            ),
+        );
+    Ok(NetbenchOutput { rows, rendered, report })
+}
+
+/// The in-process reference: the channel coordinator with native solvers
+/// (the exact path `gadmm train` takes), seeded identically to the net run.
+fn run_inproc(
+    algo: &AlgoSpec,
+    problem: &Problem,
+    seed: u64,
+    opts: &RunOptions,
+) -> Result<TrainResult, String> {
+    let n = problem.num_workers();
+    let solvers: Vec<Box<dyn LocalSolver + Send + '_>> = (0..n)
+        .map(|w| Box::new(NativeSolver::new(&*problem.losses[w])) as _)
+        .collect();
+    match *algo {
+        AlgoSpec::Ggadmm { graph: kind, .. } => {
+            let placement = Placement::random(n, AREA_SIDE, &mut Pcg64::new(seed, 0x7a41));
+            let graph = kind.build(n, &placement)?;
+            coordinator::train_graph_spec(problem, solvers, algo, seed, graph, &UnitCosts, opts)
+        }
+        _ => coordinator::train_spec(
+            problem,
+            solvers,
+            algo,
+            seed,
+            Chain::sequential(n),
+            &UnitCosts,
+            opts,
+        ),
+    }
+}
+
+/// Kills any still-running children on scope exit, so a failed lead run
+/// never leaks worker processes.
+struct Fleet(Vec<Child>);
+
+impl Drop for Fleet {
+    fn drop(&mut self) {
+        for child in &mut self.0 {
+            let _ = child.kill();
+            let _ = child.wait();
+        }
+    }
+}
+
+/// The networked run: lead in-process on an ephemeral localhost port, one
+/// spawned `gadmm serve --worker` OS process per rank.
+fn run_net(
+    algo: &AlgoSpec,
+    spec: &BenchSpec,
+    seed: u64,
+    opts: &RunOptions,
+    exe: &Path,
+) -> Result<crate::net::lead::ServeOutcome, String> {
+    let listener = TcpListener::bind("127.0.0.1:0")
+        .map_err(|e| format!("could not bind a localhost port: {e}"))?;
+    let addr = listener
+        .local_addr()
+        .map_err(|e| format!("no local address: {e}"))?
+        .to_string();
+
+    let mut fleet = Fleet(Vec::with_capacity(spec.workers));
+    for rank in 0..spec.workers {
+        let child = Command::new(exe)
+            .args(["serve", "--worker", &addr, "--rank", &rank.to_string()])
+            .stdin(Stdio::null())
+            .stdout(Stdio::null())
+            .stderr(Stdio::null())
+            .spawn()
+            .map_err(|e| format!("could not spawn worker {rank} from {}: {e}", exe.display()))?;
+        fleet.0.push(child);
+    }
+
+    let cfg = ServeConfig {
+        workers: spec.workers,
+        spec: *algo,
+        dataset: spec.dataset,
+        seed,
+        opts: opts.clone(),
+        timeout_ms: DEFAULT_TIMEOUT_MS,
+        area_side: AREA_SIDE,
+    };
+    let outcome = run_lead_on(listener, &cfg)?;
+    // An orderly shutdown reached every worker; reap them (Drop would
+    // kill, which is only for the error path).
+    for child in &mut fleet.0 {
+        let _ = child.wait();
+    }
+    fleet.0.clear();
+    Ok(outcome)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bitwise_eq_is_strict() {
+        let a = vec![vec![0.0, 1.0]];
+        assert!(bitwise_eq(&a, &a.clone()));
+        assert!(!bitwise_eq(&a, &[vec![-0.0, 1.0]]));
+        assert!(!bitwise_eq(&a, &[vec![0.0]]));
+        assert!(!bitwise_eq(&a, &[]));
+    }
+
+    #[test]
+    fn net_roster_is_the_six_distributable_engines() {
+        let roster = net_roster(5.0, 8, 1.0, 0.93);
+        assert_eq!(roster.len(), 6);
+        assert!(matches!(roster[0], AlgoSpec::Gadmm { .. }));
+        assert!(matches!(roster[4], AlgoSpec::Ggadmm { graph: GraphKind::Star, .. }));
+        assert!(matches!(roster[5], AlgoSpec::Ggadmm { graph: GraphKind::Rgg { .. }, .. }));
+    }
+}

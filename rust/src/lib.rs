@@ -31,6 +31,7 @@ pub mod experiments;
 pub mod linalg;
 pub mod metrics;
 pub mod model;
+pub mod net;
 pub mod optim;
 pub mod runtime;
 pub mod session;

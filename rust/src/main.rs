@@ -19,6 +19,13 @@
 //!              — writes BENCH_comm.json + BENCH_par.json (serial vs pool)
 //! gadmm chaos  [--quick] [--out results/]
 //!              — writes BENCH_chaos.json (fault-injection robustness grid)
+//! gadmm serve  --lead ADDR --workers N [--algo SPEC | --rho R] [--dataset D]
+//!              [--target T] [--max-iters K] [--seed S] [--timeout-ms MS]
+//! gadmm serve  --worker ADDR --rank I [--timeout-ms MS]
+//!              — networked runtime: one lead + N worker processes over TCP,
+//!                bit-identical to the in-process coordinator
+//! gadmm netbench [--quick] [--out results/]
+//!              — writes BENCH_net.json (in-process vs localhost processes)
 //! gadmm all   — every table and figure, reports under results/
 //! ```
 
@@ -26,9 +33,10 @@ use gadmm::config::{validate_quant_bits, DatasetKind, RunConfig};
 use gadmm::coordinator;
 use gadmm::data::partition_even;
 use gadmm::experiments::{
-    bench, censor, chaos, curves, fig6, fig7, fig8, graph, qgadmm, table1, write_report,
-    write_trace_csv,
+    bench, censor, chaos, curves, fig6, fig7, fig8, graph, netbench, qgadmm, table1,
+    write_report, write_trace_csv,
 };
+use gadmm::net;
 use gadmm::model::Problem;
 use gadmm::optim::RunOptions;
 use gadmm::runtime::{artifacts_dir, service::PjrtService, Manifest, NativeSolver};
@@ -68,6 +76,26 @@ fn dispatch(sub: &str, args: &Args) -> Result<(), String> {
     match sub {
         "train" => cmd_train(args),
         "sweep" => cmd_sweep(args),
+        "serve" => cmd_serve(args),
+        "netbench" => {
+            let quick = args.flag("quick");
+            let seed = args.get_u64("seed", 1)?;
+            let exe = std::env::current_exe()
+                .map_err(|e| format!("could not locate the gadmm binary to spawn workers: {e}"))?;
+            let out = netbench::run(quick, seed, &exe)?;
+            println!("{}", out.rendered);
+            let path = write_report(&out_dir(args), "BENCH_net", &out.report)
+                .map_err(|e| e.to_string())?;
+            println!("report: {}", path.display());
+            if !out.all_identical() {
+                return Err(
+                    "networked run diverged from the in-process coordinator — the transport \
+                     broke bit-identity"
+                        .into(),
+                );
+            }
+            Ok(())
+        }
         "table1" => {
             let workers = args.get_usize_list("workers", &[14, 20, 24, 26])?;
             let target = args.get_f64("target", 1e-4)?;
@@ -512,6 +540,108 @@ fn cmd_train(args: &Args) -> Result<(), String> {
     Ok(())
 }
 
+/// `gadmm serve`: the networked runtime. `--worker` runs one rank as a
+/// plain process (everything else arrives from the lead at handshake);
+/// `--lead` runs the control plane, prints the train-style summary, and
+/// writes `serve.csv` + `serve.json`.
+fn cmd_serve(args: &Args) -> Result<(), String> {
+    let timeout_override = match args.get("timeout-ms") {
+        Some(_) => {
+            let ms = args.get_u64("timeout-ms", net::DEFAULT_TIMEOUT_MS)?;
+            if ms == 0 {
+                return Err("--timeout-ms must be positive".into());
+            }
+            Some(ms)
+        }
+        None => None,
+    };
+    match (args.get("lead"), args.get("worker")) {
+        (Some(_), Some(_)) => Err("--lead and --worker are mutually exclusive".into()),
+        (None, None) => {
+            Err("serve needs --lead ADDR or --worker ADDR (see `gadmm help`)".into())
+        }
+        (None, Some(addr)) => {
+            let addr = addr.to_string();
+            if args.get("rank").is_none() {
+                return Err("--worker needs --rank I (assigned by the deployment)".into());
+            }
+            let rank = args.get_usize("rank", 0)?;
+            net::worker::run_remote_worker(&addr, rank, timeout_override)
+        }
+        (Some(addr), None) => {
+            let addr = addr.to_string();
+            let workers = args.get_usize("workers", 2)?;
+            // Same spec surface as `gadmm train`: --algo takes any
+            // distributable spec string verbatim and conflicts with the
+            // legacy --rho knob.
+            let spec = match args.get("algo") {
+                Some(s) => {
+                    if args.get("rho").is_some() {
+                        return Err(format!(
+                            "--rho conflicts with --algo (put it in the spec string, e.g. '{}:rho=…')",
+                            s.split(':').next().unwrap_or(s)
+                        ));
+                    }
+                    AlgoSpec::parse(s)?
+                }
+                None => AlgoSpec::Gadmm { rho: args.get_f64("rho", 5.0)?, fault: 0.0, threads: 1 },
+            };
+            let dataset = DatasetKind::parse(&args.get_string("dataset", "synthetic-linreg"))?;
+            let target = args.get_f64("target", 1e-4)?;
+            let max_iters = args.get_usize("max-iters", 300_000)?;
+            let seed = args.get_u64("seed", 1)?;
+            let timeout_ms = timeout_override.unwrap_or(net::DEFAULT_TIMEOUT_MS);
+            let cfg = net::lead::ServeConfig {
+                workers,
+                spec,
+                dataset,
+                seed,
+                opts: RunOptions::with_target(target, max_iters),
+                // area_side mirrors `gadmm train`'s default geometry so an
+                // RGG serve run builds the same topology as the same-seed
+                // in-process run.
+                timeout_ms,
+                area_side: RunConfig::default().area_side,
+            };
+            let out = net::lead::run_lead(&addr, &cfg)?;
+            let trace = &out.result.trace;
+            match trace.iters_to_target() {
+                Some(k) => println!(
+                    "converged: {} iterations, TC {}, {:.3e} payload bits, final err {:.3e}",
+                    k,
+                    trace.tc_to_target().unwrap_or(f64::NAN),
+                    trace.bits_to_target().unwrap_or(f64::NAN),
+                    trace.final_error()
+                ),
+                None => println!(
+                    "did not reach {target:.0e} within {max_iters} iterations (final err {:.3e})",
+                    trace.final_error()
+                ),
+            }
+            println!("wire bytes (whole fleet, headers included): {}", out.wire_bytes);
+            let dir = out_dir(args);
+            write_trace_csv(&dir, "serve", trace).map_err(|e| e.to_string())?;
+            write_report(
+                &dir,
+                "serve",
+                &gadmm::util::json::Json::obj()
+                    .set("experiment", "serve")
+                    .set("dataset", dataset.name())
+                    .set("workers", workers)
+                    .set("seed", seed)
+                    .set("target", target)
+                    .set("max_iters", max_iters)
+                    .set("timeout_ms", timeout_ms)
+                    .set("wire_bytes", out.wire_bytes)
+                    .set("algo", spec.to_json())
+                    .set("trace", trace.to_json(200)),
+            )
+            .map_err(|e| e.to_string())?;
+            Ok(())
+        }
+    }
+}
+
 /// `gadmm sweep`: run a declarative grid (algorithms × datasets × worker
 /// counts × seeds) across a thread pool and report cell-keyed traces.
 fn cmd_sweep(args: &Args) -> Result<(), String> {
@@ -642,7 +772,17 @@ subcommands:
             twice and checked for bit-identical replay; --quick for CI;
             every group engine accepts 'fault=p' in its spec string,
             e.g. --algos 'cqgadmm:rho=5,fault=0.1')
-  all      every table/figure above (train/sweep/bench/chaos excluded);
-           JSON reports under results/
+  serve    networked runtime over TCP, bit-identical to the in-process
+           coordinator (docs/adr/007-transport-seam.md)
+           --lead ADDR --workers N [--algo SPEC | --rho R] --dataset D
+                       --target T --max-iters K --seed S --timeout-ms MS
+                       (writes serve.csv + serve.json under --out)
+           --worker ADDR --rank I [--timeout-ms MS]
+                       (the whole run config arrives from the lead)
+  netbench in-process vs real localhost worker processes on the bench
+           grid -> BENCH_net.json (wall clocks, wire bytes, and a
+           bit-identity column per engine; --quick for CI)
+  all      every table/figure above (train/sweep/bench/chaos/serve/
+           netbench excluded); JSON reports under results/
 
 common options: --out DIR (default results/), --csv, --seed S";

@@ -1,0 +1,620 @@
+//! Wire codec for the TCP transport: length-prefixed frames with a
+//! compact-JSON header and a binary payload.
+//!
+//! ```text
+//! ┌────────────┬──────────────┬─────────────┬───────────────┐
+//! │ u32 LE len │ JSON header  │ u32 LE len  │ binary payload│
+//! └────────────┴──────────────┴─────────────┴───────────────┘
+//! ```
+//!
+//! The header (parsed by the zero-dependency [`crate::util::json`]) names
+//! the frame type and carries small integral fields; every f64 that the
+//! algorithm consumes — model coordinates, quantizer range, loss values —
+//! travels in the payload as raw little-endian bytes. That split is what
+//! makes the transport bit-transparent: floats never go through decimal
+//! formatting, so a TCP run replays an in-process run bit for bit
+//! (`docs/adr/007-transport-seam.md`).
+//!
+//! Payload sizes equal the [`Meter`](crate::comm::Meter)'s accounting: a
+//! dense model is exactly `64·d` payload bits, a quantized one
+//! `64 + n·b` bits (range word + bit-packed levels, LSB-first, zero-padded
+//! to a byte boundary), a censored slot zero. The `payload_bits_exact`
+//! test pins this against [`Msg::payload_bits`].
+
+use crate::comm::{Msg, QuantizedMsg};
+use crate::coordinator::worker::Report;
+use crate::session::AlgoSpec;
+use crate::util::json::{self, Json};
+use std::io::{Read, Write};
+
+/// Cap on the JSON header of a single frame (1 MiB). Headers are tiny in
+/// practice (the largest, `Setup`, scales with the edge list); the cap
+/// exists so a corrupt or hostile length prefix cannot trigger an
+/// unbounded allocation.
+pub const MAX_HEADER_BYTES: u32 = 1 << 20;
+/// Cap on the binary payload of a single frame (64 MiB ≈ an 8M-coordinate
+/// dense f64 model — far above any model this crate trains).
+pub const MAX_PAYLOAD_BYTES: u32 = 1 << 26;
+
+/// Everything the lead needs to hand a worker at handshake: the algorithm,
+/// the data partition recipe, the topology, and the peer directory.
+///
+/// The worker *rebuilds* its shard from `(dataset, seed, workers)` with the
+/// same deterministic constructors the lead uses, rather than receiving
+/// floats — the partition assignment is the rank, and determinism does the
+/// rest.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Setup {
+    /// Declarative algorithm spec (round-trips via `AlgoSpec::to_json`).
+    pub spec: AlgoSpec,
+    /// Dataset recipe name (`DatasetKind::name`).
+    pub dataset: String,
+    /// Run seed: drives the dataset build, quantizers, and fault schedule.
+    pub seed: u64,
+    /// Fleet size (the problem shards into this many parts).
+    pub workers: usize,
+    /// Mesh read deadline in milliseconds; a missed slot decodes as
+    /// [`Msg::Skip`].
+    pub timeout_ms: u64,
+    /// Head-group worker ids of the bipartite graph.
+    pub heads: Vec<usize>,
+    /// Tail-group worker ids.
+    pub tails: Vec<usize>,
+    /// Graph edges in insertion order — the order fixes adjacency order
+    /// and dual orientation on every worker, identically to the lead.
+    pub edges: Vec<(usize, usize)>,
+    /// Listener address of every worker, indexed by rank (for the mesh).
+    pub peers: Vec<String>,
+}
+
+/// One frame of the `gadmm serve` protocol.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Frame {
+    /// Worker → lead: first frame on the control stream. `addr` is the
+    /// worker's own mesh listener.
+    Hello {
+        /// The connecting worker's rank.
+        rank: usize,
+        /// The worker's mesh listener address (`ip:port`).
+        addr: String,
+    },
+    /// Lead → worker: the run recipe (see [`Setup`]).
+    SetupFrame(Setup),
+    /// Worker → worker: identifies the initiating side of a mesh stream.
+    Peer {
+        /// Rank of the connecting worker.
+        rank: usize,
+    },
+    /// Worker → lead: mesh fully connected, ready to iterate.
+    Ready {
+        /// Rank of the ready worker.
+        rank: usize,
+    },
+    /// Lead → worker: run one group-ADMM iteration.
+    Iterate,
+    /// Lead → worker: terminate cleanly.
+    Shutdown,
+    /// Worker → worker: one link-policy output (dense, quantized, or an
+    /// explicit censored-slot marker), stamped with the sender's iteration
+    /// so a receiver recovering from a timeout can discard stale slots.
+    Model {
+        /// Rank of the sending worker.
+        from: usize,
+        /// Sender's iteration counter.
+        k: usize,
+        /// The wire payload.
+        msg: Msg,
+    },
+    /// Worker → lead: end-of-iteration monitoring report. Loss and model
+    /// travel in the binary payload.
+    ReportFrame(Report),
+    /// Worker → lead: final frame before exit, carrying the worker's wire
+    /// byte counters for the netbench accounting.
+    Bye {
+        /// Rank of the departing worker.
+        rank: usize,
+        /// Bytes this worker wrote to its sockets.
+        sent_bytes: u64,
+        /// Bytes this worker read from its sockets.
+        recv_bytes: u64,
+    },
+}
+
+/// Pack `levels` (each < 2^bits) LSB-first into bytes, zero-padded to a
+/// byte boundary — `ceil(n·bits / 8)` bytes, so the pre-padding bit count
+/// is exactly the `n·b` the Meter charges.
+pub fn pack_levels(levels: &[u32], bits: u32) -> Vec<u8> {
+    let total_bits = levels.len() * bits as usize;
+    let mut out = vec![0u8; total_bits.div_ceil(8)];
+    let mut pos = 0usize;
+    for &level in levels {
+        for b in 0..bits as usize {
+            if (level >> b) & 1 == 1 {
+                out[(pos + b) / 8] |= 1 << ((pos + b) % 8);
+            }
+        }
+        pos += bits as usize;
+    }
+    out
+}
+
+/// Inverse of [`pack_levels`].
+pub fn unpack_levels(bytes: &[u8], bits: u32, n: usize) -> Result<Vec<u32>, String> {
+    let total_bits = n * bits as usize;
+    if bytes.len() != total_bits.div_ceil(8) {
+        return Err(format!(
+            "quantized payload is {} bytes, expected {} for n={n} bits={bits}",
+            bytes.len(),
+            total_bits.div_ceil(8)
+        ));
+    }
+    let mut levels = vec![0u32; n];
+    for (i, level) in levels.iter_mut().enumerate() {
+        let pos = i * bits as usize;
+        for b in 0..bits as usize {
+            if (bytes[(pos + b) / 8] >> ((pos + b) % 8)) & 1 == 1 {
+                *level |= 1 << b;
+            }
+        }
+    }
+    Ok(levels)
+}
+
+fn f64s_to_bytes(xs: &[f64]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(xs.len() * 8);
+    for x in xs {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+    out
+}
+
+fn bytes_to_f64s(bytes: &[u8]) -> Result<Vec<f64>, String> {
+    if bytes.len() % 8 != 0 {
+        return Err(format!("payload length {} is not a multiple of 8", bytes.len()));
+    }
+    Ok(bytes
+        .chunks_exact(8)
+        .map(|c| f64::from_le_bytes(c.try_into().expect("8-byte chunk")))
+        .collect())
+}
+
+fn usize_field(h: &Json, key: &str) -> Result<usize, String> {
+    h.get(key)
+        .and_then(Json::as_usize)
+        .ok_or_else(|| format!("frame header missing numeric '{key}'"))
+}
+
+fn str_field<'a>(h: &'a Json, key: &str) -> Result<&'a str, String> {
+    h.get(key)
+        .and_then(Json::as_str)
+        .ok_or_else(|| format!("frame header missing string '{key}'"))
+}
+
+fn usize_list(h: &Json, key: &str) -> Result<Vec<usize>, String> {
+    h.get(key)
+        .and_then(Json::as_arr)
+        .ok_or_else(|| format!("frame header missing array '{key}'"))?
+        .iter()
+        .map(|v| v.as_usize().ok_or_else(|| format!("non-numeric entry in '{key}'")))
+        .collect()
+}
+
+impl Frame {
+    /// Split into `(header, payload)` — the two blocks of the wire format.
+    pub fn to_parts(&self) -> (Json, Vec<u8>) {
+        match self {
+            Frame::Hello { rank, addr } => (
+                Json::obj().set("t", "hello").set("rank", *rank).set("addr", addr.as_str()),
+                Vec::new(),
+            ),
+            Frame::SetupFrame(s) => {
+                let edges: Vec<Json> = s
+                    .edges
+                    .iter()
+                    .map(|&(a, b)| Json::Arr(vec![Json::Num(a as f64), Json::Num(b as f64)]))
+                    .collect();
+                let peers: Vec<Json> =
+                    s.peers.iter().map(|p| Json::Str(p.clone())).collect();
+                (
+                    Json::obj()
+                        .set("t", "setup")
+                        .set("spec", s.spec.to_json())
+                        .set("dataset", s.dataset.as_str())
+                        .set("seed", s.seed)
+                        .set("workers", s.workers)
+                        .set("timeout_ms", s.timeout_ms)
+                        .set("heads", s.heads.clone())
+                        .set("tails", s.tails.clone())
+                        .set("edges", Json::Arr(edges))
+                        .set("peers", Json::Arr(peers)),
+                    Vec::new(),
+                )
+            }
+            Frame::Peer { rank } => {
+                (Json::obj().set("t", "peer").set("rank", *rank), Vec::new())
+            }
+            Frame::Ready { rank } => {
+                (Json::obj().set("t", "ready").set("rank", *rank), Vec::new())
+            }
+            Frame::Iterate => (Json::obj().set("t", "iterate"), Vec::new()),
+            Frame::Shutdown => (Json::obj().set("t", "shutdown"), Vec::new()),
+            Frame::Model { from, k, msg } => {
+                let h = Json::obj().set("t", "model").set("from", *from).set("k", *k);
+                match msg {
+                    Msg::Dense(v) => (
+                        h.set("kind", "dense").set("n", v.len()),
+                        f64s_to_bytes(v),
+                    ),
+                    Msg::Quantized(q) => {
+                        // Range word first, then the bit-packed levels:
+                        // 64 + n·b bits before byte padding, matching
+                        // QuantizedMsg::payload_bits exactly.
+                        let mut payload = q.range.to_le_bytes().to_vec();
+                        payload.extend_from_slice(&pack_levels(&q.levels, q.bits_per_coord));
+                        (
+                            h.set("kind", "quant")
+                                .set("bits", q.bits_per_coord as usize)
+                                .set("n", q.levels.len()),
+                            payload,
+                        )
+                    }
+                    Msg::Skip => (h.set("kind", "skip"), Vec::new()),
+                }
+            }
+            Frame::ReportFrame(r) => {
+                let mut h = Json::obj().set("t", "report").set("id", r.id);
+                h = match r.sent {
+                    Some(bits) => h.set("sent", bits),
+                    None => h.set("sent", Json::Null),
+                };
+                // Loss first, then θ: floats stay binary end to end.
+                let mut payload = r.loss_value.to_le_bytes().to_vec();
+                payload.extend_from_slice(&f64s_to_bytes(&r.theta));
+                (h, payload)
+            }
+            Frame::Bye { rank, sent_bytes, recv_bytes } => (
+                Json::obj()
+                    .set("t", "bye")
+                    .set("rank", *rank)
+                    .set("sent_bytes", *sent_bytes)
+                    .set("recv_bytes", *recv_bytes),
+                Vec::new(),
+            ),
+        }
+    }
+
+    /// Rebuild a frame from its header and payload blocks.
+    pub fn from_parts(header: &Json, payload: &[u8]) -> Result<Frame, String> {
+        let t = str_field(header, "t")?;
+        match t {
+            "hello" => Ok(Frame::Hello {
+                rank: usize_field(header, "rank")?,
+                addr: str_field(header, "addr")?.to_string(),
+            }),
+            "setup" => {
+                let spec_json = header.get("spec").ok_or("setup frame missing 'spec'")?;
+                let edges = header
+                    .get("edges")
+                    .and_then(Json::as_arr)
+                    .ok_or("setup frame missing 'edges'")?
+                    .iter()
+                    .map(|pair| {
+                        let xs = pair.as_arr().filter(|xs| xs.len() == 2);
+                        match xs {
+                            Some(xs) => Ok((
+                                xs[0].as_usize().ok_or("non-numeric edge endpoint")?,
+                                xs[1].as_usize().ok_or("non-numeric edge endpoint")?,
+                            )),
+                            None => Err("edge is not a 2-element array".to_string()),
+                        }
+                    })
+                    .collect::<Result<Vec<_>, String>>()?;
+                let peers = header
+                    .get("peers")
+                    .and_then(Json::as_arr)
+                    .ok_or("setup frame missing 'peers'")?
+                    .iter()
+                    .map(|p| p.as_str().map(str::to_string).ok_or("non-string peer address"))
+                    .collect::<Result<Vec<_>, &str>>()?;
+                Ok(Frame::SetupFrame(Setup {
+                    spec: AlgoSpec::from_json(spec_json)?,
+                    dataset: str_field(header, "dataset")?.to_string(),
+                    seed: usize_field(header, "seed")? as u64,
+                    workers: usize_field(header, "workers")?,
+                    timeout_ms: usize_field(header, "timeout_ms")? as u64,
+                    heads: usize_list(header, "heads")?,
+                    tails: usize_list(header, "tails")?,
+                    edges,
+                    peers,
+                }))
+            }
+            "peer" => Ok(Frame::Peer { rank: usize_field(header, "rank")? }),
+            "ready" => Ok(Frame::Ready { rank: usize_field(header, "rank")? }),
+            "iterate" => Ok(Frame::Iterate),
+            "shutdown" => Ok(Frame::Shutdown),
+            "model" => {
+                let from = usize_field(header, "from")?;
+                let k = usize_field(header, "k")?;
+                let msg = match str_field(header, "kind")? {
+                    "dense" => {
+                        let n = usize_field(header, "n")?;
+                        let v = bytes_to_f64s(payload)?;
+                        if v.len() != n {
+                            return Err(format!("dense payload has {} coords, header says {n}", v.len()));
+                        }
+                        Msg::Dense(v)
+                    }
+                    "quant" => {
+                        let n = usize_field(header, "n")?;
+                        let bits = usize_field(header, "bits")? as u32;
+                        if !(1..=32).contains(&bits) {
+                            return Err(format!("quantized bits {bits} out of range"));
+                        }
+                        if payload.len() < 8 {
+                            return Err("quantized payload shorter than its range word".into());
+                        }
+                        let range = f64::from_le_bytes(payload[..8].try_into().expect("8 bytes"));
+                        let levels = unpack_levels(&payload[8..], bits, n)?;
+                        Msg::Quantized(QuantizedMsg { range, bits_per_coord: bits, levels })
+                    }
+                    "skip" => Msg::Skip,
+                    other => return Err(format!("unknown model kind '{other}'")),
+                };
+                Ok(Frame::Model { from, k, msg })
+            }
+            "report" => {
+                if payload.len() < 8 {
+                    return Err("report payload shorter than its loss word".into());
+                }
+                let loss_value = f64::from_le_bytes(payload[..8].try_into().expect("8 bytes"));
+                let theta = bytes_to_f64s(&payload[8..])?;
+                let sent = match header.get("sent") {
+                    Some(Json::Null) | None => None,
+                    Some(v) => Some(v.as_f64().ok_or("non-numeric 'sent' in report")?),
+                };
+                Ok(Frame::ReportFrame(Report {
+                    id: usize_field(header, "id")?,
+                    loss_value,
+                    theta,
+                    sent,
+                }))
+            }
+            "bye" => Ok(Frame::Bye {
+                rank: usize_field(header, "rank")?,
+                sent_bytes: usize_field(header, "sent_bytes")? as u64,
+                recv_bytes: usize_field(header, "recv_bytes")? as u64,
+            }),
+            other => Err(format!("unknown frame type '{other}'")),
+        }
+    }
+
+    /// Serialize to the full length-prefixed wire form.
+    pub fn encode(&self) -> Vec<u8> {
+        let (header, payload) = self.to_parts();
+        let header_bytes = header.to_string_compact().into_bytes();
+        let mut out = Vec::with_capacity(8 + header_bytes.len() + payload.len());
+        out.extend_from_slice(&(header_bytes.len() as u32).to_le_bytes());
+        out.extend_from_slice(&header_bytes);
+        out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        out.extend_from_slice(&payload);
+        out
+    }
+}
+
+/// Write one frame to a stream (single `write_all`: frames are small and
+/// a partial frame would desynchronize the stream).
+pub fn write_frame(w: &mut impl Write, frame: &Frame) -> std::io::Result<()> {
+    w.write_all(&frame.encode())
+}
+
+fn invalid<T>(msg: String) -> std::io::Result<T> {
+    Err(std::io::Error::new(std::io::ErrorKind::InvalidData, msg))
+}
+
+/// Read one frame from a stream. Length prefixes are validated against
+/// [`MAX_HEADER_BYTES`] / [`MAX_PAYLOAD_BYTES`] before allocating; codec
+/// failures surface as `InvalidData` so transports can separate "peer
+/// closed" (EOF / reset) from "peer spoke garbage".
+pub fn read_frame(r: &mut impl Read) -> std::io::Result<Frame> {
+    let mut len4 = [0u8; 4];
+    r.read_exact(&mut len4)?;
+    let header_len = u32::from_le_bytes(len4);
+    if header_len == 0 || header_len > MAX_HEADER_BYTES {
+        return invalid(format!("frame header length {header_len} out of bounds"));
+    }
+    let mut header_bytes = vec![0u8; header_len as usize];
+    r.read_exact(&mut header_bytes)?;
+    r.read_exact(&mut len4)?;
+    let payload_len = u32::from_le_bytes(len4);
+    if payload_len > MAX_PAYLOAD_BYTES {
+        return invalid(format!("frame payload length {payload_len} out of bounds"));
+    }
+    let mut payload = vec![0u8; payload_len as usize];
+    r.read_exact(&mut payload)?;
+
+    let text = match std::str::from_utf8(&header_bytes) {
+        Ok(t) => t,
+        Err(e) => return invalid(format!("frame header is not utf-8: {e}")),
+    };
+    let header = match json::parse(text) {
+        Ok(h) => h,
+        Err(e) => return invalid(format!("frame header: {e}")),
+    };
+    match Frame::from_parts(&header, &payload) {
+        Ok(f) => Ok(f),
+        Err(e) => invalid(e),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::session::AlgoSpec;
+
+    fn roundtrip(f: &Frame) -> Frame {
+        let bytes = f.encode();
+        let mut cursor = &bytes[..];
+        let back = read_frame(&mut cursor).expect("decodes");
+        assert!(cursor.is_empty(), "frame fully consumed");
+        back
+    }
+
+    #[test]
+    fn control_frames_roundtrip() {
+        for f in [
+            Frame::Hello { rank: 3, addr: "127.0.0.1:4242".into() },
+            Frame::Peer { rank: 1 },
+            Frame::Ready { rank: 0 },
+            Frame::Iterate,
+            Frame::Shutdown,
+            Frame::Bye { rank: 2, sent_bytes: 12345, recv_bytes: 678 },
+        ] {
+            assert_eq!(roundtrip(&f), f);
+        }
+    }
+
+    #[test]
+    fn setup_roundtrips_with_spec_and_graph() {
+        let setup = Setup {
+            spec: AlgoSpec::Cqgadmm { rho: 5.0, bits: 8, tau: 1.0, mu: 0.93, fault: 0.1, threads: 1 },
+            dataset: "synthetic-linreg".into(),
+            seed: 7,
+            workers: 4,
+            timeout_ms: 30_000,
+            heads: vec![0, 2],
+            tails: vec![1, 3],
+            edges: vec![(0, 1), (1, 2), (2, 3)],
+            peers: vec!["a:1".into(), "b:2".into(), "c:3".into(), "d:4".into()],
+        };
+        assert_eq!(roundtrip(&Frame::SetupFrame(setup.clone())), Frame::SetupFrame(setup));
+    }
+
+    #[test]
+    fn dense_model_is_bit_transparent() {
+        // Values chosen to break decimal round-tripping if floats ever
+        // went through the JSON header: subnormals, -0.0, ulp-separated.
+        let v = vec![f64::MIN_POSITIVE / 2.0, -0.0, 1.0 + f64::EPSILON, -1e300];
+        let f = Frame::Model { from: 1, k: 9, msg: Msg::Dense(v.clone()) };
+        match roundtrip(&f) {
+            Frame::Model { msg: Msg::Dense(back), .. } => {
+                for (a, b) in v.iter().zip(&back) {
+                    assert_eq!(a.to_bits(), b.to_bits());
+                }
+            }
+            other => panic!("wrong frame back: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn quantized_model_roundtrips() {
+        let q = QuantizedMsg {
+            range: 0.37,
+            bits_per_coord: 3,
+            levels: vec![0, 7, 5, 1, 6, 2, 3], // n·b = 21 bits → 3 bytes packed
+        };
+        let f = Frame::Model { from: 0, k: 1, msg: Msg::Quantized(q.clone()) };
+        match roundtrip(&f) {
+            Frame::Model { msg: Msg::Quantized(back), .. } => assert_eq!(back, q),
+            other => panic!("wrong frame back: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn payload_bits_exact() {
+        // The wire payload must carry exactly the bits the Meter charges
+        // (padded only to the byte boundary the payload lives in).
+        let dense = Msg::Dense(vec![1.5; 10]);
+        let (_, p) = Frame::Model { from: 0, k: 0, msg: dense.clone() }.to_parts();
+        assert_eq!(p.len() as f64 * 8.0, dense.payload_bits());
+
+        let quant = Msg::Quantized(QuantizedMsg {
+            range: 1.0,
+            bits_per_coord: 8,
+            levels: vec![17; 6],
+        });
+        let (_, p) = Frame::Model { from: 0, k: 0, msg: quant.clone() }.to_parts();
+        // 64 + 6·8 = 112 bits = 14 bytes, byte-aligned with no padding.
+        assert_eq!(p.len() as f64 * 8.0, quant.payload_bits());
+
+        // Non-byte-aligned level block: 64 + 7·3 = 85 bits → 11 bytes with
+        // 3 padding bits.
+        let odd = Msg::Quantized(QuantizedMsg {
+            range: 1.0,
+            bits_per_coord: 3,
+            levels: vec![5; 7],
+        });
+        let (_, p) = Frame::Model { from: 0, k: 0, msg: odd.clone() }.to_parts();
+        assert_eq!(p.len(), (odd.payload_bits() as usize).div_ceil(8));
+
+        let (_, p) = Frame::Model { from: 0, k: 0, msg: Msg::Skip }.to_parts();
+        assert!(p.is_empty());
+    }
+
+    #[test]
+    fn report_loss_travels_binary() {
+        let r = Report {
+            id: 2,
+            loss_value: f64::INFINITY, // a diverging loss must survive the wire
+            theta: vec![0.1, -0.2, 0.3],
+            sent: None,
+        };
+        match roundtrip(&Frame::ReportFrame(r)) {
+            Frame::ReportFrame(back) => {
+                assert_eq!(back.id, 2);
+                assert!(back.loss_value.is_infinite());
+                assert_eq!(back.theta, vec![0.1, -0.2, 0.3]);
+                assert_eq!(back.sent, None);
+            }
+            other => panic!("wrong frame back: {other:?}"),
+        }
+        let r = Report { id: 0, loss_value: 1.0, theta: vec![], sent: Some(704.0) };
+        match roundtrip(&Frame::ReportFrame(r)) {
+            Frame::ReportFrame(back) => assert_eq!(back.sent, Some(704.0)),
+            other => panic!("wrong frame back: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn pack_unpack_levels_edge_cases() {
+        // Full 32-bit levels survive.
+        let levels = vec![u32::MAX, 0, 0x8000_0001];
+        let packed = pack_levels(&levels, 32);
+        assert_eq!(unpack_levels(&packed, 32, 3).unwrap(), levels);
+        // 1-bit packing: 8 levels per byte, LSB-first.
+        let bitsy = vec![1, 0, 1, 1, 0, 0, 0, 1, 1];
+        let packed = pack_levels(&bitsy, 1);
+        assert_eq!(packed.len(), 2);
+        assert_eq!(packed[0], 0b1000_1101);
+        assert_eq!(unpack_levels(&packed, 1, 9).unwrap(), bitsy);
+        // Length mismatch is an error, not a truncation.
+        assert!(unpack_levels(&packed, 1, 17).is_err());
+    }
+
+    #[test]
+    fn malformed_frames_are_invalid_data_not_panics() {
+        // Truncated stream.
+        let bytes = Frame::Iterate.encode();
+        for cut in 0..bytes.len() {
+            let mut cursor = &bytes[..cut];
+            assert!(read_frame(&mut cursor).is_err());
+        }
+        // Oversized header length prefix.
+        let mut evil = (MAX_HEADER_BYTES + 1).to_le_bytes().to_vec();
+        evil.extend_from_slice(&[0u8; 16]);
+        let err = read_frame(&mut &evil[..]).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::InvalidData);
+        // Valid JSON, unknown frame type.
+        let header = b"{\"t\":\"warp\"}";
+        let mut bytes = (header.len() as u32).to_le_bytes().to_vec();
+        bytes.extend_from_slice(header);
+        bytes.extend_from_slice(&0u32.to_le_bytes());
+        let err = read_frame(&mut &bytes[..]).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::InvalidData);
+        assert!(err.to_string().contains("unknown frame type"), "{err}");
+        // Garbage header bytes.
+        let mut bytes = 3u32.to_le_bytes().to_vec();
+        bytes.extend_from_slice(b"@@@");
+        bytes.extend_from_slice(&0u32.to_le_bytes());
+        assert!(read_frame(&mut &bytes[..]).is_err());
+    }
+}

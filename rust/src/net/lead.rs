@@ -1,0 +1,265 @@
+//! The lead side of `gadmm serve`: control plane only. The lead owns no
+//! model state and never sees a model message — exactly the in-process
+//! leader's job description, so it literally runs
+//! [`coordinator::lead_loop`] over a [`TcpLeaderTransport`].
+//!
+//! The lead is the single source of run configuration: it builds the
+//! problem and graph locally (deterministically from `(dataset, seed)`),
+//! derives the wire name and slot size from the same
+//! [`coordinator::spec_wire`] factory the workers use, distributes the
+//! [`Setup`] recipe at handshake, and collects the final trace.
+
+use super::frame::{read_frame, write_frame, Frame, Setup};
+use super::{accept_deadline, is_timeout, CountingStream};
+use crate::config::DatasetKind;
+use crate::coordinator::transport::{LeaderTransport, TransportError};
+use crate::coordinator::worker::{LeaderMsg, Report};
+use crate::coordinator::{self, TrainResult};
+use crate::model::Problem;
+use crate::optim::RunOptions;
+use crate::session::AlgoSpec;
+use crate::topology::chain::Chain;
+use crate::topology::graph::BipartiteGraph;
+use crate::topology::{Placement, UnitCosts};
+use crate::util::rng::Pcg64;
+use std::net::TcpListener;
+use std::time::{Duration, Instant};
+
+/// Everything `gadmm serve --lead` needs beyond the listen address.
+pub struct ServeConfig {
+    /// Fleet size (the dataset shards into this many parts).
+    pub workers: usize,
+    /// Declarative algorithm spec; rejected unless it has a static
+    /// per-worker wire (same rule as the in-process coordinator).
+    pub spec: AlgoSpec,
+    /// Dataset recipe.
+    pub dataset: DatasetKind,
+    /// Run seed: dataset build, placement, quantizers, fault schedule.
+    pub seed: u64,
+    /// Convergence target / iteration cap / record stride.
+    pub opts: RunOptions,
+    /// Handshake budget and blocking-read deadline, distributed to the
+    /// workers as their mesh deadline (`--timeout-ms`).
+    pub timeout_ms: u64,
+    /// Side of the square placement area for RGG topologies (matches
+    /// `gadmm train`'s default geometry).
+    pub area_side: f64,
+}
+
+/// What a completed `serve` run yields.
+pub struct ServeOutcome {
+    /// Trace + final models, same shape as the in-process coordinator.
+    pub result: TrainResult,
+    /// Total bytes actually written to sockets by the whole fleet (every
+    /// byte is sent by exactly one endpoint: lead commands + worker
+    /// reports + mesh models, frame headers and handshake included).
+    pub wire_bytes: u64,
+}
+
+/// [`LeaderTransport`] over one framed control stream per worker, indexed
+/// by rank.
+pub struct TcpLeaderTransport {
+    /// Control streams, index = rank.
+    controls: Vec<CountingStream>,
+    /// Report-read deadline in milliseconds.
+    timeout_ms: u64,
+}
+
+impl LeaderTransport for TcpLeaderTransport {
+    fn broadcast_command(&mut self, cmd: LeaderMsg) -> Result<(), TransportError> {
+        let frame = match cmd {
+            LeaderMsg::Iterate => Frame::Iterate,
+            LeaderMsg::Shutdown => Frame::Shutdown,
+        };
+        for (rank, stream) in self.controls.iter_mut().enumerate() {
+            write_frame(stream, &frame)
+                .map_err(|e| TransportError::Disconnected { rank, detail: e.to_string() })?;
+        }
+        Ok(())
+    }
+
+    fn collect_reports(&mut self) -> Result<Vec<Report>, TransportError> {
+        let mut reps = Vec::with_capacity(self.controls.len());
+        for (rank, stream) in self.controls.iter_mut().enumerate() {
+            match read_frame(stream) {
+                Ok(Frame::ReportFrame(rep)) => {
+                    if rep.id != rank {
+                        return Err(TransportError::Protocol(format!(
+                            "control stream {rank} delivered a report from {}",
+                            rep.id
+                        )));
+                    }
+                    reps.push(rep);
+                }
+                Ok(other) => {
+                    return Err(TransportError::Protocol(format!(
+                        "expected a report from worker {rank}, got {other:?}"
+                    )))
+                }
+                Err(e) if is_timeout(&e) => {
+                    return Err(TransportError::Timeout { rank, ms: self.timeout_ms })
+                }
+                Err(e) => {
+                    return Err(TransportError::Disconnected { rank, detail: e.to_string() })
+                }
+            }
+        }
+        Ok(reps)
+    }
+}
+
+impl TcpLeaderTransport {
+    /// Bytes the lead itself wrote (commands + setup frames).
+    fn sent_bytes(&self) -> u64 {
+        self.controls.iter().map(CountingStream::sent_bytes).sum()
+    }
+
+    /// Drain the workers' `Bye` frames and sum their sent-byte counters.
+    /// Best-effort: the run already succeeded, so a worker that exited
+    /// without saying goodbye costs accounting accuracy, not the run.
+    fn collect_byes(&mut self) -> u64 {
+        let mut total = 0;
+        for (rank, stream) in self.controls.iter_mut().enumerate() {
+            match read_frame(stream) {
+                Ok(Frame::Bye { sent_bytes, .. }) => total += sent_bytes,
+                Ok(other) => log::warn!("worker {rank}: expected bye, got {other:?}"),
+                Err(e) => log::warn!("worker {rank}: no bye frame: {e}"),
+            }
+        }
+        total
+    }
+}
+
+/// Bind `addr` and run the lead to completion (see [`run_lead_on`]).
+pub fn run_lead(addr: &str, cfg: &ServeConfig) -> Result<ServeOutcome, String> {
+    let listener =
+        TcpListener::bind(addr).map_err(|e| format!("could not bind lead on {addr}: {e}"))?;
+    run_lead_on(listener, cfg)
+}
+
+/// Run the lead on an already-bound listener — the entry point for tests
+/// and `netbench`, which bind port 0 and need the address before spawning
+/// worker processes.
+pub fn run_lead_on(listener: TcpListener, cfg: &ServeConfig) -> Result<ServeOutcome, String> {
+    let n = cfg.workers;
+    if n < 2 {
+        return Err("serve needs at least 2 workers".into());
+    }
+
+    // Everything the run derives is a pure function of (spec, dataset,
+    // seed, n) — the same derivation `gadmm train` performs, which is why
+    // the two are comparable run-for-run.
+    let ds = cfg.dataset.build(cfg.seed);
+    let problem = Problem::from_dataset(&ds, n);
+    let graph = match cfg.spec {
+        AlgoSpec::Ggadmm { graph: kind, .. } => {
+            let placement =
+                Placement::random(n, cfg.area_side, &mut Pcg64::new(cfg.seed, 0x7a41));
+            kind.build(n, &placement)?
+        }
+        _ => {
+            if n % 2 != 0 {
+                return Err(format!("chain group ADMM requires an even worker count, got {n}"));
+            }
+            BipartiteGraph::from_chain(&Chain::sequential(n))
+        }
+    };
+    let (_rho, links, name) = coordinator::spec_wire(&cfg.spec, problem.dim, n, cfg.seed)?;
+    let slot_bits = links[0].message_bits();
+    drop(links); // the lead never touches a model; workers build their own
+
+    let (controls, peers) = accept_fleet(&listener, n, cfg.timeout_ms)?;
+    let mut transport = TcpLeaderTransport { controls, timeout_ms: cfg.timeout_ms };
+
+    let setup = Setup {
+        spec: cfg.spec,
+        dataset: cfg.dataset.name().to_string(),
+        seed: cfg.seed,
+        workers: n,
+        timeout_ms: cfg.timeout_ms,
+        heads: graph.heads().to_vec(),
+        tails: graph.tails().to_vec(),
+        edges: graph.edges().to_vec(),
+        peers,
+    };
+    for (rank, stream) in transport.controls.iter_mut().enumerate() {
+        write_frame(stream, &Frame::SetupFrame(setup.clone()))
+            .map_err(|e| format!("worker {rank} disconnected during setup: {e}"))?;
+    }
+    for (rank, stream) in transport.controls.iter_mut().enumerate() {
+        match read_frame(stream) {
+            Ok(Frame::Ready { .. }) => {}
+            Ok(other) => return Err(format!("worker {rank}: expected ready, got {other:?}")),
+            Err(e) if is_timeout(&e) => {
+                return Err(format!(
+                    "worker {rank} did not become ready within {} ms",
+                    cfg.timeout_ms
+                ))
+            }
+            Err(e) => return Err(format!("worker {rank} disconnected during mesh setup: {e}")),
+        }
+    }
+    log::info!("lead: {n} workers ready, running {name}");
+
+    match coordinator::lead_loop(
+        &name,
+        &problem,
+        &graph,
+        &UnitCosts,
+        &cfg.opts,
+        slot_bits,
+        &mut transport,
+    ) {
+        Ok((trace, thetas)) => {
+            let wire_bytes = transport.sent_bytes() + transport.collect_byes();
+            let consensus = coordinator::consensus_of(&thetas);
+            Ok(ServeOutcome {
+                result: TrainResult { trace, thetas, consensus },
+                wire_bytes,
+            })
+        }
+        Err(e) => {
+            // Release whoever is still alive, then surface the clean error
+            // (it names the rank that broke the barrier).
+            let _ = transport.broadcast_command(LeaderMsg::Shutdown);
+            Err(e.to_string())
+        }
+    }
+}
+
+/// Accept `n` Hellos and return `(control streams, mesh peer directory)`,
+/// both indexed by rank.
+fn accept_fleet(
+    listener: &TcpListener,
+    n: usize,
+    timeout_ms: u64,
+) -> Result<(Vec<CountingStream>, Vec<String>), String> {
+    let deadline = Instant::now() + Duration::from_millis(timeout_ms);
+    let mut controls: Vec<Option<CountingStream>> = (0..n).map(|_| None).collect();
+    let mut peers: Vec<Option<String>> = vec![None; n];
+    for got in 0..n {
+        let what = format!("{n} workers ({got} connected)");
+        let stream = accept_deadline(listener, deadline, &what)?;
+        stream
+            .set_read_timeout(Some(Duration::from_millis(timeout_ms)))
+            .map_err(|e| format!("socket setup failed: {e}"))?;
+        let mut cs = CountingStream::new(stream);
+        match read_frame(&mut cs) {
+            Ok(Frame::Hello { rank, addr }) => {
+                if rank >= n {
+                    return Err(format!("worker announced rank {rank}, fleet size is {n}"));
+                }
+                if controls[rank].is_some() {
+                    return Err(format!("two workers announced rank {rank}"));
+                }
+                peers[rank] = Some(addr);
+                controls[rank] = Some(cs);
+            }
+            Ok(other) => return Err(format!("expected hello, got {other:?}")),
+            Err(e) => return Err(format!("handshake failed: {e}")),
+        }
+    }
+    let controls = controls.into_iter().map(|c| c.expect("all ranks seen")).collect();
+    let peers = peers.into_iter().map(|p| p.expect("all ranks seen")).collect();
+    Ok((controls, peers))
+}

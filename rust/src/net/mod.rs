@@ -1,0 +1,200 @@
+//! TCP transport subsystem: the same coordinator, across OS processes.
+//!
+//! `gadmm serve` stands the [`crate::coordinator`] actors up as real
+//! processes on a real network: one **lead** process (control plane: it
+//! owns no model state, exactly like the in-process leader) and N
+//! **worker** processes. Model traffic is *decentralized* — workers hold
+//! direct per-neighbour TCP streams (the mesh) and never route a model
+//! through the lead, mirroring the paper's neighbour-set-only
+//! communication structure.
+//!
+//! Protocol (all frames through [`frame`]):
+//!
+//! 1. each worker connects to the lead, binds its own mesh listener, and
+//!    sends `Hello{rank, addr}`;
+//! 2. the lead sends every worker a [`frame::Setup`]: the [`AlgoSpec`],
+//!    dataset recipe + seed (the data-partition assignment *is* the rank —
+//!    shards are rebuilt deterministically, never shipped), the bipartite
+//!    graph, the read-timeout, and the peer directory;
+//! 3. workers build the mesh (lower rank dials higher rank; `Peer{rank}`
+//!    identifies the dialer) and send `Ready`;
+//! 4. the lead drives the run through the exact
+//!    [`crate::coordinator::lead_loop`] the in-process path uses:
+//!    `Iterate` barriers out, `Report`s back, meter billing in between;
+//! 5. `Shutdown`, then each worker sends `Bye` with its wire-byte
+//!    counters (netbench accounting) and exits.
+//!
+//! Runs are **bit-identical** to the in-process coordinator for every
+//! static group engine, with or without `fault=p` — pinned by
+//! `rust/tests/net.rs`, argued in `docs/adr/007-transport-seam.md`.
+//!
+//! [`AlgoSpec`]: crate::session::AlgoSpec
+
+pub mod frame;
+pub mod lead;
+pub mod worker;
+
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::time::{Duration, Instant};
+
+/// Default blocking-read budget (and handshake budget) in milliseconds.
+/// Generous relative to any iteration time in this crate: in deterministic
+/// runs the deadline never fires, so `Msg::Skip` substitution stays a
+/// fault-recovery path, never a silent perturbation.
+pub const DEFAULT_TIMEOUT_MS: u64 = 30_000;
+
+/// How long a worker keeps re-dialing a peer that has not bound yet.
+pub(crate) const CONNECT_RETRY_MS: u64 = 250;
+
+/// A [`TcpStream`] that counts the bytes crossing it, so `netbench` can
+/// report real wire bytes (headers and handshake included) next to the
+/// Meter's payload-bits accounting. `TCP_NODELAY` is set on construction:
+/// frames are latency-bound barrier traffic, not throughput streams.
+pub struct CountingStream {
+    inner: TcpStream,
+    sent: u64,
+    recv: u64,
+}
+
+impl CountingStream {
+    /// Wrap a connected stream (sets `TCP_NODELAY`, best-effort).
+    pub fn new(inner: TcpStream) -> CountingStream {
+        let _ = inner.set_nodelay(true);
+        CountingStream { inner, sent: 0, recv: 0 }
+    }
+
+    /// Bytes written so far.
+    pub fn sent_bytes(&self) -> u64 {
+        self.sent
+    }
+
+    /// Bytes read so far.
+    pub fn recv_bytes(&self) -> u64 {
+        self.recv
+    }
+
+    /// The underlying stream (for timeouts and addresses).
+    pub fn get_ref(&self) -> &TcpStream {
+        &self.inner
+    }
+}
+
+impl Read for CountingStream {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        let n = self.inner.read(buf)?;
+        self.recv += n as u64;
+        Ok(n)
+    }
+}
+
+impl Write for CountingStream {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        let n = self.inner.write(buf)?;
+        self.sent += n as u64;
+        Ok(n)
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        self.inner.flush()
+    }
+}
+
+/// Does this I/O error mean "the deadline elapsed" (as opposed to "the
+/// peer went away")? Both `TimedOut` and `WouldBlock` occur in the wild
+/// for `SO_RCVTIMEO` expiry, platform-dependently.
+pub(crate) fn is_timeout(e: &std::io::Error) -> bool {
+    matches!(
+        e.kind(),
+        std::io::ErrorKind::TimedOut | std::io::ErrorKind::WouldBlock
+    )
+}
+
+/// Dial `addr`, retrying every [`CONNECT_RETRY_MS`] for up to `budget_ms`
+/// — workers race their peers' (and the lead's) listener binds, so the
+/// first dials legitimately land on nothing.
+pub(crate) fn connect_retry(addr: &str, budget_ms: u64) -> Result<TcpStream, String> {
+    let deadline = Instant::now() + Duration::from_millis(budget_ms);
+    loop {
+        match TcpStream::connect(addr) {
+            Ok(s) => return Ok(s),
+            Err(e) => {
+                if Instant::now() >= deadline {
+                    return Err(format!("could not connect to {addr} within {budget_ms} ms: {e}"));
+                }
+                std::thread::sleep(Duration::from_millis(CONNECT_RETRY_MS));
+            }
+        }
+    }
+}
+
+/// Accept one connection with a deadline (std's `TcpListener` has no
+/// native accept timeout): poll non-blocking with a short sleep. The
+/// accepted stream is returned in blocking mode.
+pub(crate) fn accept_deadline(
+    listener: &TcpListener,
+    deadline: Instant,
+    what: &str,
+) -> Result<TcpStream, String> {
+    listener
+        .set_nonblocking(true)
+        .map_err(|e| format!("listener setup failed: {e}"))?;
+    loop {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                stream
+                    .set_nonblocking(false)
+                    .map_err(|e| format!("accepted stream setup failed: {e}"))?;
+                return Ok(stream);
+            }
+            Err(e) if is_timeout(&e) => {
+                if Instant::now() >= deadline {
+                    return Err(format!("timed out waiting for {what}"));
+                }
+                std::thread::sleep(Duration::from_millis(10));
+            }
+            Err(e) => return Err(format!("accept failed while waiting for {what}: {e}")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::frame::{read_frame, write_frame, Frame};
+
+    #[test]
+    fn counting_stream_counts_frames_both_ways() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = std::thread::spawn(move || {
+            let mut s = CountingStream::new(TcpStream::connect(addr).unwrap());
+            write_frame(&mut s, &Frame::Peer { rank: 7 }).unwrap();
+            let back = read_frame(&mut s).unwrap();
+            (s.sent_bytes(), s.recv_bytes(), back)
+        });
+        let (stream, _) = listener.accept().unwrap();
+        let mut server = CountingStream::new(stream);
+        let got = read_frame(&mut server).unwrap();
+        assert_eq!(got, Frame::Peer { rank: 7 });
+        write_frame(&mut server, &Frame::Iterate).unwrap();
+        let (client_sent, client_recv, back) = client.join().unwrap();
+        assert_eq!(back, Frame::Iterate);
+        // Byte conservation: what one side sent, the other received.
+        assert_eq!(client_sent, server.recv_bytes());
+        assert_eq!(client_recv, server.sent_bytes());
+        assert!(client_sent > 0 && client_recv > 0);
+    }
+
+    #[test]
+    fn connect_retry_times_out_cleanly() {
+        // A bound-then-dropped listener leaves a port with (very likely)
+        // nothing on it; the retry loop must give up with a clean error.
+        let addr = {
+            let l = TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap().to_string()
+        };
+        let err = connect_retry(&addr, 300).unwrap_err();
+        assert!(err.contains("could not connect"), "{err}");
+    }
+}

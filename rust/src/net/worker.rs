@@ -1,0 +1,321 @@
+//! The worker side of `gadmm serve`: a standalone OS process that joins
+//! the lead, rebuilds its shard deterministically from the handshake
+//! recipe, wires the neighbour mesh, and runs the *unchanged*
+//! [`run_worker`] loop over a [`TcpWorkerTransport`].
+//!
+//! Nothing algorithmic lives here: the link policy, solver, duals, and
+//! decoders come from the same factories the in-process paths use
+//! ([`coordinator::spec_wire`], [`NativeSolver`]), which is what makes a
+//! multi-process run replay an in-process run bit for bit.
+
+use super::frame::{read_frame, write_frame, Frame, Setup};
+use super::{accept_deadline, connect_retry, is_timeout, CountingStream, DEFAULT_TIMEOUT_MS};
+use crate::comm::Msg;
+use crate::config::DatasetKind;
+use crate::coordinator::transport::{TransportError, WorkerTransport};
+use crate::coordinator::worker::{run_worker, LeaderMsg, NeighborInfo, Report, WorkerCtx};
+use crate::coordinator;
+use crate::model::Problem;
+use crate::runtime::NativeSolver;
+use crate::topology::graph::BipartiteGraph;
+use std::net::TcpListener;
+use std::time::{Duration, Instant};
+
+/// [`WorkerTransport`] over framed TCP streams: one control stream to the
+/// lead, one mesh stream per neighbour (held in the graph's deterministic
+/// adjacency order).
+pub struct TcpWorkerTransport {
+    /// This worker's rank.
+    rank: usize,
+    /// Mesh read deadline; a missed slot becomes [`Msg::Skip`].
+    timeout_ms: u64,
+    /// Control stream to the lead (commands in, reports out).
+    control: CountingStream,
+    /// `(neighbor rank, stream)` in adjacency order.
+    mesh: Vec<(usize, CountingStream)>,
+}
+
+impl WorkerTransport for TcpWorkerTransport {
+    fn next_command(&mut self) -> Result<LeaderMsg, TransportError> {
+        // No deadline here: between iterations the lead legitimately takes
+        // its time. If the lead process dies the OS closes the stream and
+        // the blocking read returns EOF — treated as an orderly shutdown,
+        // mirroring the channel transport's closed-command-channel case.
+        match read_frame(&mut self.control) {
+            Ok(Frame::Iterate) => Ok(LeaderMsg::Iterate),
+            Ok(Frame::Shutdown) => Ok(LeaderMsg::Shutdown),
+            Ok(other) => Err(TransportError::Protocol(format!(
+                "expected a command frame from the lead, got {other:?}"
+            ))),
+            Err(_) => Ok(LeaderMsg::Shutdown),
+        }
+    }
+
+    fn broadcast(&mut self, k: usize, msg: &Msg) -> Result<(), TransportError> {
+        for (nb, stream) in &mut self.mesh {
+            write_frame(stream, &Frame::Model { from: self.rank, k, msg: msg.clone() })
+                .map_err(|e| TransportError::Disconnected { rank: *nb, detail: e.to_string() })?;
+        }
+        Ok(())
+    }
+
+    fn collect(&mut self, k: usize) -> Result<Vec<(usize, Msg)>, TransportError> {
+        let mut got = Vec::with_capacity(self.mesh.len());
+        for (nb, stream) in &mut self.mesh {
+            let msg = loop {
+                match read_frame(stream) {
+                    Ok(Frame::Model { from, k: kf, msg }) => {
+                        if from != *nb {
+                            return Err(TransportError::Protocol(format!(
+                                "mesh stream to worker {nb} delivered a model from {from}"
+                            )));
+                        }
+                        if kf < k {
+                            // A slot we already wrote off as timed out at
+                            // iteration kf finally arrived: drop it, the
+                            // decoder kept its cached view.
+                            continue;
+                        }
+                        if kf > k {
+                            return Err(TransportError::Protocol(format!(
+                                "worker {nb} is at iteration {kf}, expected {k} (lost barrier sync)"
+                            )));
+                        }
+                        break msg;
+                    }
+                    Ok(other) => {
+                        return Err(TransportError::Protocol(format!(
+                            "expected a model frame from worker {nb}, got {other:?}"
+                        )))
+                    }
+                    Err(e) if is_timeout(&e) => {
+                        // The real-network analogue of a censored slot: the
+                        // receiver learns nothing and keeps its cached view.
+                        // Billing is untouched — the lead charges senders
+                        // from their own reports, not receivers.
+                        log::warn!(
+                            "worker {}: neighbor {nb} missed the {} ms slot deadline at k={k}; \
+                             treating as Skip",
+                            self.rank,
+                            self.timeout_ms
+                        );
+                        break Msg::Skip;
+                    }
+                    Err(e) => {
+                        return Err(TransportError::Disconnected {
+                            rank: *nb,
+                            detail: e.to_string(),
+                        })
+                    }
+                }
+            };
+            got.push((*nb, msg));
+        }
+        Ok(got)
+    }
+
+    fn report(&mut self, rep: Report) -> Result<(), TransportError> {
+        let rank = self.rank;
+        write_frame(&mut self.control, &Frame::ReportFrame(rep))
+            .map_err(|e| TransportError::Disconnected { rank, detail: e.to_string() })
+    }
+}
+
+impl TcpWorkerTransport {
+    /// Total bytes this process wrote to / read from all its sockets.
+    fn wire_totals(&self) -> (u64, u64) {
+        let mut sent = self.control.sent_bytes();
+        let mut recv = self.control.recv_bytes();
+        for (_, s) in &self.mesh {
+            sent += s.sent_bytes();
+            recv += s.recv_bytes();
+        }
+        (sent, recv)
+    }
+
+    /// Send the final accounting frame (the `Bye` itself is not counted).
+    fn send_bye(&mut self) -> std::io::Result<()> {
+        let (sent_bytes, recv_bytes) = self.wire_totals();
+        let rank = self.rank;
+        write_frame(&mut self.control, &Frame::Bye { rank, sent_bytes, recv_bytes })
+    }
+}
+
+/// Run one worker process: connect to the lead at `lead_addr`, handshake,
+/// iterate until `Shutdown`, send `Bye`, return. `timeout_override_ms`
+/// (the CLI's `--timeout-ms`) replaces the lead-distributed mesh deadline.
+///
+/// Errors are strings ready for `main`'s stderr; an orderly run returns
+/// `Ok(())` even if the lead vanished after the work was done.
+pub fn run_remote_worker(
+    lead_addr: &str,
+    rank: usize,
+    timeout_override_ms: Option<u64>,
+) -> Result<(), String> {
+    let handshake_ms = timeout_override_ms.unwrap_or(DEFAULT_TIMEOUT_MS);
+
+    // Control stream first; the lead may not have finished binding yet.
+    let control_tcp = connect_retry(lead_addr, handshake_ms)?;
+    let local_ip = control_tcp
+        .local_addr()
+        .map_err(|e| format!("no local address: {e}"))?
+        .ip();
+    // The mesh listener binds before Hello, so by the time the lead has
+    // every Hello (and only then sends Setup), every peer is dialable.
+    let listener = TcpListener::bind((local_ip, 0))
+        .map_err(|e| format!("could not bind mesh listener: {e}"))?;
+    let mesh_addr = listener
+        .local_addr()
+        .map_err(|e| format!("no mesh listener address: {e}"))?
+        .to_string();
+
+    let mut control = CountingStream::new(control_tcp);
+    write_frame(&mut control, &Frame::Hello { rank, addr: mesh_addr })
+        .map_err(|e| format!("handshake with lead failed: {e}"))?;
+
+    control
+        .get_ref()
+        .set_read_timeout(Some(Duration::from_millis(handshake_ms)))
+        .map_err(|e| format!("socket setup failed: {e}"))?;
+    let setup = match read_frame(&mut control) {
+        Ok(Frame::SetupFrame(s)) => s,
+        Ok(other) => return Err(format!("expected setup from lead, got {other:?}")),
+        Err(e) if is_timeout(&e) => {
+            return Err(format!(
+                "lead sent no setup within {handshake_ms} ms (are all workers up?)"
+            ))
+        }
+        Err(e) => return Err(format!("handshake with lead failed: {e}")),
+    };
+    // Commands have no deadline (see next_command).
+    control
+        .get_ref()
+        .set_read_timeout(None)
+        .map_err(|e| format!("socket setup failed: {e}"))?;
+
+    let timeout_ms = timeout_override_ms.unwrap_or(setup.timeout_ms);
+    let (problem, graph, rho, policy) = rebuild(&setup, rank)?;
+    let mesh = connect_mesh(&setup, rank, &graph, &listener, timeout_ms)?;
+
+    write_frame(&mut control, &Frame::Ready { rank })
+        .map_err(|e| format!("handshake with lead failed: {e}"))?;
+    log::info!(
+        "worker {rank}/{}: mesh up ({} neighbors), spec {}",
+        setup.workers,
+        mesh.len(),
+        setup.spec.spec_string()
+    );
+
+    let mut transport = TcpWorkerTransport { rank, timeout_ms, control, mesh };
+    let neighbors: Vec<NeighborInfo> = graph
+        .adjacency(rank)
+        .iter()
+        .map(|er| NeighborInfo { id: er.neighbor, origin: er.origin })
+        .collect();
+    let ctx = WorkerCtx {
+        id: rank,
+        is_head: graph.is_head(rank),
+        neighbors,
+        rho: rho * problem.data_weight,
+        dim: problem.dim,
+        solver: Box::new(NativeSolver::new(&*problem.losses[rank])),
+        loss: &*problem.losses[rank],
+        policy,
+        transport: Box::new(&mut transport),
+    };
+    run_worker(ctx).map_err(|e| e.to_string())?;
+
+    // Best-effort: a lead that already exited loses only byte accounting.
+    if let Err(e) = transport.send_bye() {
+        log::warn!("worker {rank}: could not send bye: {e}");
+    }
+    Ok(())
+}
+
+/// Rebuild problem, graph, and this rank's link policy from the handshake
+/// recipe — through the same deterministic constructors and the single
+/// [`coordinator::spec_wire`] factory the lead and the in-process paths
+/// use.
+#[allow(clippy::type_complexity)]
+fn rebuild(
+    setup: &Setup,
+    rank: usize,
+) -> Result<(Problem, BipartiteGraph, f64, Box<dyn crate::comm::LinkPolicy>), String> {
+    let n = setup.workers;
+    if rank >= n {
+        return Err(format!("rank {rank} out of range for {n} workers"));
+    }
+    if setup.peers.len() != n {
+        return Err(format!("peer directory has {} entries for {n} workers", setup.peers.len()));
+    }
+    let dataset = DatasetKind::parse(&setup.dataset)?;
+    let ds = dataset.build(setup.seed);
+    let problem = Problem::from_dataset(&ds, n);
+    let graph =
+        BipartiteGraph::new(setup.heads.clone(), setup.tails.clone(), setup.edges.clone())?;
+    if graph.len() != n {
+        return Err(format!("graph has {} workers but the setup says {n}", graph.len()));
+    }
+    let (rho, links, _name) = coordinator::spec_wire(&setup.spec, problem.dim, n, setup.seed)?;
+    let policy = links
+        .into_iter()
+        .nth(rank)
+        .ok_or_else(|| format!("no link policy for rank {rank}"))?;
+    Ok((problem, graph, rho, policy))
+}
+
+/// Build the neighbour mesh: the lower rank dials, the higher rank
+/// accepts, and a `Peer{rank}` frame identifies every dialer. Dial-first
+/// then accept is deadlock-free — connects land in the kernel backlog of
+/// listeners that all bound before any `Setup` was sent.
+fn connect_mesh(
+    setup: &Setup,
+    rank: usize,
+    graph: &BipartiteGraph,
+    listener: &TcpListener,
+    timeout_ms: u64,
+) -> Result<Vec<(usize, CountingStream)>, String> {
+    let deadline = Instant::now() + Duration::from_millis(timeout_ms);
+    let adjacency = graph.adjacency(rank);
+    let mut by_id: Vec<Option<CountingStream>> = (0..setup.workers).map(|_| None).collect();
+
+    for er in adjacency {
+        if er.neighbor > rank {
+            let stream = connect_retry(&setup.peers[er.neighbor], timeout_ms)?;
+            let mut cs = CountingStream::new(stream);
+            write_frame(&mut cs, &Frame::Peer { rank })
+                .map_err(|e| format!("mesh handshake with worker {} failed: {e}", er.neighbor))?;
+            by_id[er.neighbor] = Some(cs);
+        }
+    }
+
+    let expected_dialers = adjacency.iter().filter(|er| er.neighbor < rank).count();
+    for _ in 0..expected_dialers {
+        let stream = accept_deadline(listener, deadline, "mesh peers")?;
+        stream
+            .set_read_timeout(Some(Duration::from_millis(timeout_ms)))
+            .map_err(|e| format!("socket setup failed: {e}"))?;
+        let mut cs = CountingStream::new(stream);
+        let peer = match read_frame(&mut cs) {
+            Ok(Frame::Peer { rank: p }) => p,
+            Ok(other) => return Err(format!("expected a peer frame on the mesh, got {other:?}")),
+            Err(e) => return Err(format!("mesh handshake failed: {e}")),
+        };
+        let valid = peer < rank && adjacency.iter().any(|er| er.neighbor == peer);
+        if !valid || by_id[peer].is_some() {
+            return Err(format!("unexpected mesh dialer: worker {peer}"));
+        }
+        by_id[peer] = Some(cs);
+    }
+
+    // Adjacency order, and the steady-state read deadline on every stream.
+    let mut mesh = Vec::with_capacity(adjacency.len());
+    for er in adjacency {
+        let cs = by_id[er.neighbor].take().expect("mesh stream for every neighbor");
+        cs.get_ref()
+            .set_read_timeout(Some(Duration::from_millis(timeout_ms)))
+            .map_err(|e| format!("socket setup failed: {e}"))?;
+        mesh.push((er.neighbor, cs));
+    }
+    Ok(mesh)
+}

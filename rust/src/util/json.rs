@@ -244,9 +244,17 @@ pub struct ParseError {
     pub message: String,
 }
 
+/// Maximum container nesting accepted by [`parse`]. This module is the
+/// wire-header format of the TCP transport ([`crate::net`]), so the parser
+/// must hold up against adversarial input: unbounded `[[[[…` would
+/// otherwise recurse to a stack overflow. 128 is far above anything the
+/// codebase emits (traces nest 4 deep).
+pub const MAX_DEPTH: usize = 128;
+
 struct Parser<'a> {
     bytes: &'a [u8],
     pos: usize,
+    depth: usize,
 }
 
 /// Parse a JSON document. Trailing whitespace is allowed; trailing garbage
@@ -255,6 +263,7 @@ pub fn parse(text: &str) -> Result<Json, ParseError> {
     let mut p = Parser {
         bytes: text.as_bytes(),
         pos: 0,
+        depth: 0,
     };
     p.skip_ws();
     let v = p.value()?;
@@ -314,12 +323,24 @@ impl<'a> Parser<'a> {
         }
     }
 
+    /// Track container nesting; errors past [`MAX_DEPTH`] instead of
+    /// recursing toward a stack overflow on adversarial input.
+    fn enter(&mut self) -> Result<(), ParseError> {
+        self.depth += 1;
+        if self.depth > MAX_DEPTH {
+            return Err(self.err("maximum nesting depth exceeded"));
+        }
+        Ok(())
+    }
+
     fn object(&mut self) -> Result<Json, ParseError> {
         self.expect(b'{')?;
+        self.enter()?;
         let mut pairs = Vec::new();
         self.skip_ws();
         if self.peek() == Some(b'}') {
             self.pos += 1;
+            self.depth -= 1;
             return Ok(Json::Obj(pairs));
         }
         loop {
@@ -337,6 +358,7 @@ impl<'a> Parser<'a> {
                 }
                 Some(b'}') => {
                     self.pos += 1;
+                    self.depth -= 1;
                     return Ok(Json::Obj(pairs));
                 }
                 _ => return Err(self.err("expected ',' or '}' in object")),
@@ -346,10 +368,12 @@ impl<'a> Parser<'a> {
 
     fn array(&mut self) -> Result<Json, ParseError> {
         self.expect(b'[')?;
+        self.enter()?;
         let mut items = Vec::new();
         self.skip_ws();
         if self.peek() == Some(b']') {
             self.pos += 1;
+            self.depth -= 1;
             return Ok(Json::Arr(items));
         }
         loop {
@@ -362,6 +386,7 @@ impl<'a> Parser<'a> {
                 }
                 Some(b']') => {
                     self.pos += 1;
+                    self.depth -= 1;
                     return Ok(Json::Arr(items));
                 }
                 _ => return Err(self.err("expected ',' or ']' in array")),
@@ -442,9 +467,15 @@ impl<'a> Parser<'a> {
             }
         }
         let s = std::str::from_utf8(&self.bytes[start..self.pos]).unwrap();
-        s.parse::<f64>()
-            .map(Json::Num)
-            .map_err(|_| self.err("invalid number"))
+        let x = s.parse::<f64>().map_err(|_| self.err("invalid number"))?;
+        // `1e999` parses to f64 infinity, but JSON has no Inf (and this
+        // parser checks wire headers, where a smuggled Inf would corrupt
+        // downstream arithmetic silently). `NaN`/`Infinity` literals never
+        // reach here — value() rejects the leading letter.
+        if !x.is_finite() {
+            return Err(self.err("number out of range"));
+        }
+        Ok(Json::Num(x))
     }
 }
 
@@ -511,5 +542,95 @@ mod tests {
     #[test]
     fn unicode_escape() {
         assert_eq!(parse("\"\\u0041\"").unwrap(), Json::Str("A".into()));
+    }
+
+    // The tests below pin the parser's behaviour as the TCP wire-header
+    // format (docs/adr/007-transport-seam.md): escapes, nesting depth,
+    // truncation, non-finite rejection, and error-offset accuracy.
+
+    #[test]
+    fn escape_edge_cases() {
+        // All nine escape forms, both directions where the writer emits them.
+        assert_eq!(parse(r#""\"\\\/\b\f\n\r\t""#).unwrap(),
+            Json::Str("\"\\/\u{8}\u{c}\n\r\t".into()));
+        // Control characters round-trip through \uXXXX.
+        let v = Json::Str("\u{1}\u{1f}".into());
+        assert_eq!(v.to_string_compact(), "\"\\u0001\\u001f\"");
+        assert_eq!(parse(&v.to_string_compact()).unwrap(), v);
+        // Highest BMP code point is accepted; a lone surrogate cannot be a
+        // char, so it decodes to U+FFFD rather than corrupting the string.
+        assert_eq!(parse("\"\\uffff\"").unwrap(), Json::Str("\u{ffff}".into()));
+        assert_eq!(parse("\"\\ud800\"").unwrap(), Json::Str("\u{fffd}".into()));
+        // Unknown escapes are errors, not passthrough.
+        assert!(parse(r#""\x41""#).is_err());
+    }
+
+    #[test]
+    fn nesting_depth_is_bounded() {
+        // MAX_DEPTH containers parse fine…
+        let ok = "[".repeat(MAX_DEPTH) + &"]".repeat(MAX_DEPTH);
+        assert!(parse(&ok).is_ok());
+        // …one more is rejected with the depth message, not a stack overflow.
+        let deep = "[".repeat(MAX_DEPTH + 1) + &"]".repeat(MAX_DEPTH + 1);
+        let err = parse(&deep).unwrap_err();
+        assert!(err.message.contains("nesting depth"), "{err}");
+        // Mixed object/array nesting shares the same counter: 100 objects
+        // plus 100 arrays overflows even though neither kind alone would.
+        let mixed = "{\"a\":".repeat(100) + &"[".repeat(100);
+        let err = parse(&mixed).unwrap_err();
+        assert!(err.message.contains("nesting depth"), "{err}");
+    }
+
+    #[test]
+    fn truncated_documents_error_cleanly() {
+        for doc in ["{", "[1, 2", "{\"a\":", "\"ab", "\"ab\\", "\"a\\u00", "12e", "-"] {
+            assert!(parse(doc).is_err(), "{doc:?} should not parse");
+        }
+        // Truncated \u escape names itself.
+        let err = parse("\"a\\u00").unwrap_err();
+        assert!(err.message.contains("truncated \\u escape"), "{err}");
+    }
+
+    #[test]
+    fn non_finite_numbers_rejected() {
+        // Literals never start a number.
+        for doc in ["NaN", "Infinity", "-Infinity", "inf", "[NaN]"] {
+            assert!(parse(doc).is_err(), "{doc:?} should not parse");
+        }
+        // Overflow to Inf is caught after parsing.
+        let err = parse("1e999").unwrap_err();
+        assert!(err.message.contains("number out of range"), "{err}");
+        assert!(parse("-1e999").is_err());
+        // The writer already refuses to emit non-finite numbers.
+        assert_eq!(Json::Num(f64::NAN).to_string_compact(), "null");
+        assert_eq!(Json::Num(f64::INFINITY).to_string_compact(), "null");
+        // Large-but-finite survives.
+        assert!(parse("1e308").is_ok());
+    }
+
+    #[test]
+    fn parse_error_offsets_are_accurate() {
+        // Offset points at the offending byte (or just past a consumed token).
+        let err = parse("[1, 2, x]").unwrap_err();
+        assert_eq!(err.offset, 7);
+        assert!(err.message.contains("expected a JSON value"), "{err}");
+
+        let err = parse("\"ab").unwrap_err();
+        assert_eq!(err.offset, 3);
+        assert!(err.message.contains("unterminated string"), "{err}");
+
+        let err = parse("{\"a\" 1}").unwrap_err();
+        assert_eq!(err.offset, 5);
+        assert!(err.message.contains("expected ':'"), "{err}");
+
+        let err = parse("12 34").unwrap_err();
+        assert_eq!(err.offset, 3);
+        assert!(err.message.contains("trailing characters"), "{err}");
+
+        // Display carries both offset and message for log lines.
+        assert_eq!(
+            parse("@").unwrap_err().to_string(),
+            "json parse error at byte 0: expected a JSON value"
+        );
     }
 }

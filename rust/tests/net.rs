@@ -1,0 +1,167 @@
+//! End-to-end pins for the TCP transport subsystem (`gadmm serve`).
+//!
+//! The headline tests spawn **real OS worker processes** (the `gadmm`
+//! binary itself, via `CARGO_BIN_EXE_gadmm`) against an in-process lead on
+//! an ephemeral localhost port and assert bit-identity against the channel
+//! coordinator: same deterministic trace path (`Trace::same_path`) and
+//! bitwise-equal final models, for all six distributable engines, with and
+//! without fault injection. This is the repo's strongest reproducibility
+//! claim — the network is not allowed to perturb a single bit — argued in
+//! `docs/adr/007-transport-seam.md`.
+
+use gadmm::config::DatasetKind;
+use gadmm::experiments::bench::BenchSpec;
+use gadmm::experiments::netbench;
+use gadmm::net::frame::{read_frame, write_frame, Frame, Setup};
+use gadmm::net::lead::{run_lead_on, ServeConfig};
+use gadmm::net::worker::run_remote_worker;
+use gadmm::optim::RunOptions;
+use gadmm::session::{AlgoSpec, DEFAULT_CENSOR_MU, DEFAULT_CENSOR_TAU};
+use std::net::{TcpListener, TcpStream};
+use std::path::Path;
+
+/// The `gadmm` binary the worker fleet is spawned from.
+const EXE: &str = env!("CARGO_BIN_EXE_gadmm");
+
+/// A seconds-long grid: small N, loose target — enough iterations to
+/// exercise both phases, quantizer state, censor thresholds, and the
+/// barrier protocol many hundreds of times.
+fn tiny_grid() -> BenchSpec {
+    BenchSpec {
+        dataset: DatasetKind::SyntheticLinreg,
+        workers: 4,
+        rho: 5.0,
+        bits: 8,
+        tau: DEFAULT_CENSOR_TAU,
+        mu: DEFAULT_CENSOR_MU,
+        target: 1e-2,
+        max_iters: 5_000,
+        record_stride: 1,
+    }
+}
+
+#[test]
+fn six_engines_are_bit_identical_over_localhost() {
+    let grid = tiny_grid();
+    let roster = netbench::net_roster(grid.rho, grid.bits, grid.tau, grid.mu);
+    let out = netbench::run_with(&grid, &roster, true, 1, Path::new(EXE)).unwrap();
+    assert_eq!(out.rows.len(), 6);
+    for row in &out.rows {
+        assert!(
+            row.identical(),
+            "{} diverged across the network",
+            row.spec.spec_string()
+        );
+        assert!(row.wire_bytes > 0, "{} reported no wire traffic", row.spec.spec_string());
+        // The runs did real work, not a 0-iteration no-op agreement.
+        assert!(!row.net.trace.records.is_empty());
+    }
+    assert!(out.all_identical());
+    let text = out.report.to_string_pretty();
+    assert!(text.contains("bench_net"), "report must carry the experiment tag");
+}
+
+#[test]
+fn fault_injected_runs_cross_the_network_bit_identically() {
+    // fault=p drops slots via the seeded schedule *inside* the link
+    // policies; the explicit Skip frames must carry the censoring across
+    // the wire so the faulted nets replay the faulted channel runs exactly.
+    let grid = tiny_grid();
+    let roster: Vec<AlgoSpec> = netbench::net_roster(grid.rho, grid.bits, grid.tau, grid.mu)
+        .into_iter()
+        .map(|s| s.with_fault(0.1))
+        .collect();
+    let out = netbench::run_with(&grid, &roster, true, 1, Path::new(EXE)).unwrap();
+    assert_eq!(out.rows.len(), 6);
+    for row in &out.rows {
+        assert!(
+            row.identical(),
+            "{} diverged across the network under fault injection",
+            row.spec.spec_string()
+        );
+    }
+}
+
+#[test]
+fn setup_frames_roundtrip_every_distributable_spec() {
+    for spec in netbench::net_roster(5.0, 8, DEFAULT_CENSOR_TAU, DEFAULT_CENSOR_MU) {
+        for spec in [spec, spec.with_fault(0.1)] {
+            let setup = Setup {
+                spec,
+                dataset: "synthetic-linreg".to_string(),
+                seed: 7,
+                workers: 4,
+                timeout_ms: 1234,
+                heads: vec![0, 2],
+                tails: vec![1, 3],
+                edges: vec![(0, 1), (1, 2), (2, 3)],
+                peers: (0..4).map(|r| format!("127.0.0.1:500{r}")).collect(),
+            };
+            let frame = Frame::SetupFrame(setup);
+            let bytes = frame.encode();
+            let back = read_frame(&mut bytes.as_slice()).unwrap();
+            assert_eq!(back, frame, "{} did not survive the wire", spec.spec_string());
+        }
+    }
+}
+
+#[test]
+fn lead_names_the_rank_that_disconnects_mid_run() {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+
+    // Rank 0: a real worker, with a short mesh timeout so its dead
+    // neighbour costs it a second instead of the 30 s default.
+    let w0_addr = addr.clone();
+    let w0 = std::thread::spawn(move || run_remote_worker(&w0_addr, 0, Some(1000)));
+
+    // Rank 1: handshakes correctly, reads the first Iterate, then silently
+    // dies — control closed without a report, mesh left dangling open (the
+    // nastiest failure mode: a peer that stops talking without hanging up).
+    let w1_addr = addr.clone();
+    let w1 = std::thread::spawn(move || {
+        let mesh_listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let mesh_addr = mesh_listener.local_addr().unwrap().to_string();
+        let mut control = TcpStream::connect(&w1_addr).unwrap();
+        write_frame(&mut control, &Frame::Hello { rank: 1, addr: mesh_addr }).unwrap();
+        match read_frame(&mut control).unwrap() {
+            Frame::SetupFrame(s) => assert_eq!(s.workers, 2),
+            other => panic!("expected setup, got {other:?}"),
+        }
+        // Lower rank dials higher: accept rank 0's mesh stream.
+        let (mut mesh, _) = mesh_listener.accept().unwrap();
+        match read_frame(&mut mesh).unwrap() {
+            Frame::Peer { rank: 0 } => {}
+            other => panic!("expected peer 0, got {other:?}"),
+        }
+        write_frame(&mut control, &Frame::Ready { rank: 1 }).unwrap();
+        match read_frame(&mut control).unwrap() {
+            Frame::Iterate => {}
+            other => panic!("expected iterate, got {other:?}"),
+        }
+        drop(control);
+        // Keep the mesh socket open while the lead notices the dead
+        // control stream, so the failure is detected *there*, by rank.
+        std::thread::sleep(std::time::Duration::from_secs(3));
+        drop(mesh);
+    });
+
+    let cfg = ServeConfig {
+        workers: 2,
+        spec: AlgoSpec::Gadmm { rho: 5.0, fault: 0.0, threads: 1 },
+        dataset: DatasetKind::SyntheticLinreg,
+        seed: 1,
+        opts: RunOptions::with_target(1e-2, 200),
+        timeout_ms: 10_000,
+        area_side: 10.0,
+    };
+    let err = run_lead_on(listener, &cfg).unwrap_err();
+    assert!(
+        err.contains("worker 1"),
+        "lead must name the rank that went away, got: {err}"
+    );
+    // No hang: both worker threads wind down (rank 0 exits on the lead's
+    // shutdown broadcast or its own transport error — either is orderly).
+    let _ = w0.join().unwrap();
+    w1.join().unwrap();
+}
