@@ -237,4 +237,59 @@ if ! net_gate; then
   exit 3
 fi
 
+echo "==> smoke: gadmm scale --quick (massive-N sweep -> BENCH_scale.json)"
+# Gate: the report must exist with every replay/pool determinism column
+# true (hard, deterministic — exit 3, never retried), and wall-clock per
+# iteration must grow sub-quadratically across consecutive rungs of the
+# quick N ladder per topology (a machine-independent *ratio* check, but
+# still wall-clock — exit 1, retried once on a noisy runner).
+scale_gate() {
+  ./target/release/gadmm scale --quick --out target/ci-scale || return 3
+  test -f target/ci-scale/BENCH_scale.json || return 3
+  python3 - <<'EOF'
+import json, sys
+
+def hard(cond, msg):  # deterministic failure: never retried
+    if not cond:
+        print("scale gate (deterministic): %s" % msg)
+        sys.exit(3)
+
+with open("target/ci-scale/BENCH_scale.json") as f:
+    report = json.load(f)
+
+hard(report["experiment"] == "bench_scale", "wrong experiment %r" % report["experiment"])
+rows = report["rows"]
+hard(len(rows) >= 6, "expected >= 3 rungs x 2 topologies, got %d rows" % len(rows))
+
+diverged = ["%s N=%d" % (r["topology"], r["n"]) for r in rows
+            if not (r["replay_identical"] and r["pool_identical"])]
+hard(not diverged, "determinism columns failed for: %s" % diverged)
+hard(report["all_identical"], "all_identical flag disagrees with the rows")
+
+# Sub-quadratic scaling: for consecutive ladder rungs n1 < n2 within a
+# topology, wall/iter must not grow by (n2/n1)^2 or worse.
+noisy = []
+for topo in ("chain", "rgg"):
+    ladder = sorted((r["n"], r["wall_per_iter_us"]) for r in rows if r["topology"] == topo)
+    hard(len(ladder) >= 3, "topology %s has %d rungs" % (topo, len(ladder)))
+    for (n1, t1), (n2, t2) in zip(ladder, ladder[1:]):
+        hard(t1 > 0 and t2 > 0, "%s: nonpositive wall/iter at N=%d/%d" % (topo, n1, n2))
+        if t2 / t1 >= (n2 / n1) ** 2:
+            noisy.append("%s N=%d->%d: %.1f -> %.1f us/iter" % (topo, n1, n2, t1, t2))
+if noisy:
+    print("scale gate (wall-clock): per-iteration cost grew quadratically or worse: %s" % noisy)
+    sys.exit(1)
+print("scale gate OK: %d rows deterministic, wall/iter sub-quadratic on both ladders" % len(rows))
+EOF
+}
+rc=0
+scale_gate || rc=$?
+if [ "$rc" -eq 1 ]; then
+  echo "==> scale wall-clock gate failed once (timing is noisy); re-running"
+  scale_gate
+elif [ "$rc" -ne 0 ]; then
+  echo "==> scale deterministic gate failed — not retrying"
+  exit "$rc"
+fi
+
 echo "CI OK"

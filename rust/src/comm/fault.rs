@@ -29,7 +29,7 @@
 //! [`Censored`]: super::policy::Censored
 
 use super::policy::LinkPolicy;
-use super::quantize::Msg;
+use super::quantize::{Msg, MsgBuf};
 use crate::util::rng::Pcg64;
 
 /// Shared validation for the `fault=` drop-rate knob: spec strings, JSON,
@@ -205,6 +205,16 @@ impl LinkPolicy for FaultyLink {
             return Msg::Skip;
         }
         self.inner.transmit(k, model)
+    }
+
+    fn transmit_into(&mut self, k: usize, model: &[f64], out: &mut MsgBuf) {
+        // Same drop decision as `transmit`; the inner policy is not
+        // invoked on a dropped slot, so its state advances identically.
+        if self.schedule.drops(self.worker, k) {
+            out.set_skip();
+            return;
+        }
+        self.inner.transmit_into(k, model, out);
     }
 
     fn public_view(&self) -> &[f64] {

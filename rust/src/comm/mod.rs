@@ -34,8 +34,8 @@ pub use policy::{
     CensorSchedule, Censored, EverySlot, LinkPolicy,
 };
 pub use quantize::{
-    Compressor, Decoder, DenseCompressor, Msg, QuantizedMsg, StochasticQuantizer, FP64_BITS,
-    RANGE_OVERHEAD_BITS,
+    Compressor, Decoder, DenseCompressor, Msg, MsgBuf, MsgBufKind, QuantizedMsg,
+    StochasticQuantizer, FP64_BITS, RANGE_OVERHEAD_BITS,
 };
 
 use crate::topology::graph::BipartiteGraph;

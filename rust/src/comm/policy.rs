@@ -23,7 +23,7 @@
 //! wire state for the same `(seed, worker)` — the invariant the
 //! distributed-equivalence tests pin. See docs/adr/003-link-policy.md.
 
-use super::quantize::{Compressor, DenseCompressor, Msg, StochasticQuantizer};
+use super::quantize::{Compressor, DenseCompressor, Msg, MsgBuf, StochasticQuantizer};
 use crate::linalg::vector as vec_ops;
 
 /// Shared validation for the censoring knobs: every entry point (spec
@@ -107,6 +107,16 @@ pub trait LinkPolicy: Send {
     /// the slot is actually transmitted.
     fn transmit(&mut self, k: usize, model: &[f64]) -> Msg;
 
+    /// Allocation-free decide-and-encode: rewrite the caller's reusable
+    /// [`MsgBuf`] in place. The decision logic, state advance, and payload
+    /// bits are identical to [`LinkPolicy::transmit`] — skipped slots mark
+    /// the buffer [`MsgBuf::is_skip`] without touching the inner
+    /// compressor. The default bridges through the allocating path so
+    /// third-party policies keep working.
+    fn transmit_into(&mut self, k: usize, model: &[f64], out: &mut MsgBuf) {
+        out.set_msg(&self.transmit(k, model));
+    }
+
     /// The receivers' current view of this sender's model — unchanged
     /// across censored slots.
     fn public_view(&self) -> &[f64];
@@ -134,6 +144,10 @@ impl LinkPolicy for EverySlot {
 
     fn transmit(&mut self, _k: usize, model: &[f64]) -> Msg {
         self.inner.compress(model)
+    }
+
+    fn transmit_into(&mut self, _k: usize, model: &[f64], out: &mut MsgBuf) {
+        self.inner.encode_into(model, out);
     }
 
     fn public_view(&self) -> &[f64] {
@@ -185,6 +199,17 @@ impl LinkPolicy for Censored {
             return Msg::Skip;
         }
         self.inner.compress(model)
+    }
+
+    fn transmit_into(&mut self, k: usize, model: &[f64], out: &mut MsgBuf) {
+        // Same gate as `transmit` (the schedule advances exactly once per
+        // slot either way); on a skip the inner compressor stays untouched.
+        let thr = self.schedule.threshold(k);
+        if vec_ops::dist2(model, self.inner.public_view()) < thr {
+            out.set_skip();
+            return;
+        }
+        self.inner.encode_into(model, out);
     }
 
     fn public_view(&self) -> &[f64] {

@@ -62,16 +62,25 @@ impl QuantizedMsg {
     /// previously transmitted model. Pure function of the message and
     /// `prev`, so sender and receivers agree bit-for-bit.
     pub fn decode(&self, prev: &[f64]) -> Vec<f64> {
+        let mut out = prev.to_vec();
+        self.decode_into(&mut out);
+        out
+    }
+
+    /// Allocation-free decode: update the receiver's mirror in place.
+    /// Per-coordinate arithmetic is identical to [`QuantizedMsg::decode`]
+    /// (each output reads only its own `prev` coordinate, so in-place is
+    /// safe); a degenerate `range == 0` message leaves `prev` untouched.
+    pub fn decode_into(&self, prev: &mut [f64]) {
         assert_eq!(prev.len(), self.levels.len());
         if self.range == 0.0 {
-            return prev.to_vec();
+            return;
         }
         let max_level = ((1u64 << self.bits_per_coord) - 1) as f64;
         let step = 2.0 * self.range / max_level;
-        prev.iter()
-            .zip(&self.levels)
-            .map(|(&p, &idx)| (p - self.range) + idx as f64 * step)
-            .collect()
+        for (p, &idx) in prev.iter_mut().zip(&self.levels) {
+            *p = (*p - self.range) + idx as f64 * step;
+        }
     }
 }
 
@@ -106,6 +115,124 @@ impl Msg {
     }
 }
 
+/// What a [`MsgBuf`] currently holds.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MsgBufKind {
+    Dense,
+    Quantized,
+    Skip,
+}
+
+/// A reusable, caller-owned encoding buffer: the allocation-free
+/// counterpart of [`Msg`] for the in-process hot path.
+///
+/// [`Msg`] owns its payload (`Vec<f64>` / `Vec<u32>`), which costs one
+/// heap allocation per transmit — fine on the wire (net/frame.rs keeps
+/// speaking `Msg`), wasteful in the sequential engines where the message
+/// is consumed immediately. A `MsgBuf` holds both payload shapes at their
+/// steady-state capacity and is rewritten in place by
+/// [`Compressor::encode_into`] / `LinkPolicy::transmit_into`. Bit
+/// accounting matches [`Msg::payload_bits`] case for case.
+#[derive(Clone, Debug)]
+pub struct MsgBuf {
+    kind: MsgBufKind,
+    dense: Vec<f64>,
+    qrange: f64,
+    qbits: u32,
+    levels: Vec<u32>,
+}
+
+impl MsgBuf {
+    /// An empty (skip) buffer with both payloads preallocated for
+    /// dimension `dim`, so steady-state rewrites never grow it.
+    pub fn new(dim: usize) -> MsgBuf {
+        MsgBuf {
+            kind: MsgBufKind::Skip,
+            dense: vec![0.0; dim],
+            qrange: 0.0,
+            qbits: 0,
+            levels: vec![0; dim],
+        }
+    }
+
+    pub fn kind(&self) -> MsgBufKind {
+        self.kind
+    }
+
+    /// Whether the buffer holds a censored/dropped slot.
+    pub fn is_skip(&self) -> bool {
+        self.kind == MsgBufKind::Skip
+    }
+
+    /// Exact payload size in bits — the same accounting as
+    /// [`Msg::payload_bits`] for the equivalent message.
+    pub fn payload_bits(&self) -> f64 {
+        match self.kind {
+            MsgBufKind::Dense => self.dense.len() as f64 * FP64_BITS,
+            MsgBufKind::Quantized => {
+                self.levels.len() as f64 * self.qbits as f64 + RANGE_OVERHEAD_BITS
+            }
+            MsgBufKind::Skip => 0.0,
+        }
+    }
+
+    /// Mark the buffer as a censored/dropped slot (payload left in place,
+    /// never read).
+    pub fn set_skip(&mut self) {
+        self.kind = MsgBufKind::Skip;
+    }
+
+    /// Rewrite as a dense payload copied from `model`.
+    pub fn set_dense(&mut self, model: &[f64]) {
+        self.kind = MsgBufKind::Dense;
+        self.dense.resize(model.len(), 0.0);
+        self.dense.copy_from_slice(model);
+    }
+
+    /// Rewrite as a quantized payload: sets the header and sizes the level
+    /// buffer (zero-filled) for the encoder to fill in place.
+    pub fn begin_quantized(&mut self, range: f64, bits: u32, dim: usize) {
+        self.kind = MsgBufKind::Quantized;
+        self.qrange = range;
+        self.qbits = bits;
+        self.levels.clear();
+        self.levels.resize(dim, 0);
+    }
+
+    /// Mutable access to the quantized level indices (valid after
+    /// [`MsgBuf::begin_quantized`]).
+    pub fn levels_mut(&mut self) -> &mut [u32] {
+        &mut self.levels
+    }
+
+    /// Copy an owned [`Msg`] into the buffer — the default-impl bridge for
+    /// third-party compressors that only implement the allocating path.
+    pub fn set_msg(&mut self, msg: &Msg) {
+        match msg {
+            Msg::Dense(v) => self.set_dense(v),
+            Msg::Quantized(q) => {
+                self.begin_quantized(q.range, q.bits_per_coord, q.levels.len());
+                self.levels.copy_from_slice(&q.levels);
+            }
+            Msg::Skip => self.set_skip(),
+        }
+    }
+
+    /// Materialize the equivalent owned [`Msg`] (allocates — wire path and
+    /// tests only, never the steady-state loop).
+    pub fn to_msg(&self) -> Msg {
+        match self.kind {
+            MsgBufKind::Dense => Msg::Dense(self.dense.clone()),
+            MsgBufKind::Quantized => Msg::Quantized(QuantizedMsg {
+                range: self.qrange,
+                bits_per_coord: self.qbits,
+                levels: self.levels.clone(),
+            }),
+            MsgBufKind::Skip => Msg::Skip,
+        }
+    }
+}
+
 /// Sender-side compression state for one worker's broadcasts.
 ///
 /// Implementations may carry state across calls (the quantizer tracks the
@@ -123,6 +250,16 @@ pub trait Compressor: Send {
 
     /// Encode `model` for one broadcast and advance the sender state.
     fn compress(&mut self, model: &[f64]) -> Msg;
+
+    /// Allocation-free encode: rewrite the caller's reusable [`MsgBuf`] in
+    /// place instead of allocating a [`Msg`]. State advance, payload bits,
+    /// and (for stateful compressors) RNG consumption are identical to
+    /// [`Compressor::compress`] — the shipped compressors route both
+    /// methods through one arithmetic path. The default bridges through
+    /// the allocating path so third-party compressors keep working.
+    fn encode_into(&mut self, model: &[f64], out: &mut MsgBuf) {
+        out.set_msg(&self.compress(model));
+    }
 
     /// The receivers' current view of this sender's model (what the last
     /// [`Compressor::compress`] reconstructed to).
@@ -154,6 +291,11 @@ impl Compressor for DenseCompressor {
     fn compress(&mut self, model: &[f64]) -> Msg {
         self.last.copy_from_slice(model);
         Msg::Dense(model.to_vec())
+    }
+
+    fn encode_into(&mut self, model: &[f64], out: &mut MsgBuf) {
+        self.last.copy_from_slice(model);
+        out.set_dense(model);
     }
 
     fn public_view(&self) -> &[f64] {
@@ -195,8 +337,25 @@ impl StochasticQuantizer {
     }
 
     /// Quantize `model` against the previously transmitted model and
-    /// advance the anchor to the reconstruction.
+    /// advance the anchor to the reconstruction. Allocating wrapper over
+    /// [`StochasticQuantizer::encode_buf`], the single arithmetic path.
     pub fn encode(&mut self, model: &[f64]) -> QuantizedMsg {
+        let mut buf = MsgBuf::new(model.len());
+        self.encode_buf(model, &mut buf);
+        match buf.to_msg() {
+            Msg::Quantized(q) => q,
+            _ => unreachable!("encode_buf always writes a quantized payload"),
+        }
+    }
+
+    /// Allocation-free encode into a reusable buffer. Bit-identical to the
+    /// historical allocating `encode`: the range fold, the finiteness
+    /// check, the degenerate zero-range path (which consumes *no* RNG and
+    /// leaves the anchor untouched), and the per-coordinate stochastic
+    /// rounding all run in the same order — the anchor advance fuses the
+    /// old `prev = msg.decode(&prev)` into the same loop, coordinate `i`
+    /// reading only its own old `prev[i]` (exactly what `decode` computed).
+    pub fn encode_buf(&mut self, model: &[f64], out: &mut MsgBuf) {
         assert_eq!(model.len(), self.prev.len());
         let range = model
             .iter()
@@ -210,34 +369,26 @@ impl StochasticQuantizer {
         if range == 0.0 || !range.is_finite() || !finite {
             // Nothing moved (or the iterate diverged to non-finite values):
             // transmit the degenerate range; receivers keep `prev`.
-            return QuantizedMsg {
-                range: 0.0,
-                bits_per_coord: self.bits,
-                levels: vec![0; model.len()],
-            };
+            out.begin_quantized(0.0, self.bits, model.len());
+            return;
         }
+        out.begin_quantized(range, self.bits, model.len());
         let max_level = ((1u64 << self.bits) - 1) as f64;
         let step = 2.0 * range / max_level;
-        let levels: Vec<u32> = model
-            .iter()
-            .zip(&self.prev)
-            .map(|(&x, &p)| {
-                let pos = (x - (p - range)) / step;
-                let lo = pos.floor();
-                let frac = pos - lo;
-                // Stochastic rounding: up with probability `frac`, so the
-                // reconstruction is unbiased.
-                let idx = lo + if self.rng.next_f64() < frac { 1.0 } else { 0.0 };
-                idx.clamp(0.0, max_level) as u32
-            })
-            .collect();
-        let msg = QuantizedMsg {
-            range,
-            bits_per_coord: self.bits,
-            levels,
-        };
-        self.prev = msg.decode(&self.prev);
-        msg
+        let levels = out.levels_mut();
+        for (i, (&x, p)) in model.iter().zip(self.prev.iter_mut()).enumerate() {
+            let pos = (x - (*p - range)) / step;
+            let lo = pos.floor();
+            let frac = pos - lo;
+            // Stochastic rounding: up with probability `frac`, so the
+            // reconstruction is unbiased.
+            let idx = lo + if self.rng.next_f64() < frac { 1.0 } else { 0.0 };
+            let idx = idx.clamp(0.0, max_level) as u32;
+            levels[i] = idx;
+            // Advance the anchor to the reconstruction (= decode of this
+            // coordinate against the old anchor).
+            *p = (*p - range) + idx as f64 * step;
+        }
     }
 }
 
@@ -253,6 +404,10 @@ impl Compressor for StochasticQuantizer {
 
     fn compress(&mut self, model: &[f64]) -> Msg {
         Msg::Quantized(self.encode(model))
+    }
+
+    fn encode_into(&mut self, model: &[f64], out: &mut MsgBuf) {
+        self.encode_buf(model, out);
     }
 
     fn public_view(&self) -> &[f64] {
@@ -282,7 +437,7 @@ impl Decoder {
                 self.prev.copy_from_slice(v);
             }
             Msg::Quantized(q) => {
-                self.prev = q.decode(&self.prev);
+                q.decode_into(&mut self.prev);
             }
             Msg::Skip => {}
         }
@@ -390,5 +545,69 @@ mod tests {
     #[test]
     fn describe_labels_bits() {
         assert_eq!(StochasticQuantizer::new(2, 8, 0).describe(), "q8");
+    }
+
+    /// encode_into is compress with the allocation removed: same messages,
+    /// same RNG consumption, same anchors, for dense and quantized senders
+    /// (zero-delta and moving slots interleaved).
+    #[test]
+    fn encode_into_matches_compress_bitwise() {
+        let mut rng = Pcg64::seeded(21);
+        let mut qa = StochasticQuantizer::new(6, 5, 17);
+        let mut qb = StochasticQuantizer::new(6, 5, 17);
+        let mut da = DenseCompressor::new(6);
+        let mut db = DenseCompressor::new(6);
+        let mut buf = MsgBuf::new(6);
+        let mut x = vec![0.0; 6];
+        for round in 0..10 {
+            if round % 3 != 2 {
+                x = rng.normal_vec(6); // round % 3 == 2 resends ⇒ zero delta
+            }
+            let msg = qa.compress(&x);
+            qb.encode_into(&x, &mut buf);
+            assert_eq!(buf.to_msg(), msg, "round {round}");
+            assert_eq!(buf.payload_bits(), msg.payload_bits());
+            assert_eq!(qa.public_view(), qb.public_view(), "anchors diverged");
+            let msg = da.compress(&x);
+            db.encode_into(&x, &mut buf);
+            assert_eq!(buf.to_msg(), msg);
+            assert_eq!(buf.payload_bits(), msg.payload_bits());
+            assert_eq!(da.public_view(), db.public_view());
+        }
+    }
+
+    #[test]
+    fn msg_buf_accounting_matches_msg() {
+        let mut buf = MsgBuf::new(4);
+        assert!(buf.is_skip());
+        assert_eq!(buf.kind(), MsgBufKind::Skip);
+        assert_eq!(buf.payload_bits(), Msg::Skip.payload_bits());
+        buf.set_dense(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(buf.payload_bits(), 4.0 * FP64_BITS);
+        assert_eq!(buf.to_msg(), Msg::Dense(vec![1.0, 2.0, 3.0, 4.0]));
+        let q = QuantizedMsg { range: 0.5, bits_per_coord: 3, levels: vec![0, 7, 3, 1] };
+        buf.set_msg(&Msg::Quantized(q.clone()));
+        assert_eq!(buf.payload_bits(), q.payload_bits());
+        assert_eq!(buf.to_msg(), Msg::Quantized(q));
+        buf.set_skip();
+        assert!(buf.is_skip());
+        assert_eq!(buf.payload_bits(), 0.0);
+    }
+
+    #[test]
+    fn decode_into_is_decode_in_place() {
+        let mut q = StochasticQuantizer::new(5, 6, 3);
+        let msg = q.encode(&[1.0, -2.0, 0.5, 3.0, -0.25]);
+        let prev = vec![0.0; 5];
+        let fresh = msg.decode(&prev);
+        let mut in_place = prev.clone();
+        msg.decode_into(&mut in_place);
+        assert_eq!(fresh, in_place);
+        // Degenerate range: both forms keep the mirror untouched.
+        let degenerate = QuantizedMsg { range: 0.0, bits_per_coord: 6, levels: vec![0; 5] };
+        let mut kept = fresh.clone();
+        degenerate.decode_into(&mut kept);
+        assert_eq!(kept, fresh);
+        assert_eq!(degenerate.decode(&fresh), fresh);
     }
 }

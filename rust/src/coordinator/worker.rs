@@ -113,6 +113,10 @@ pub fn run_worker(mut ctx: WorkerCtx<'_>) -> Result<(), TransportError> {
     let d = ctx.dim;
     let deg = ctx.neighbors.len();
     let mut theta = vec![0.0; d];
+    // Double buffer for the subproblem solve: the new iterate is written
+    // into `theta_next` (warm-started from `theta`) and the two are
+    // swapped — no per-iteration allocation on the solve path.
+    let mut theta_next = vec![0.0; d];
     // Mirrored per-edge duals, aligned with ctx.neighbors. Each edge's dual
     // is tracked by both endpoints from its update rule, which every
     // endpoint can evaluate locally because it sees both public models.
@@ -135,14 +139,16 @@ pub fn run_worker(mut ctx: WorkerCtx<'_>) -> Result<(), TransportError> {
         if ctx.is_head {
             // Head phase: solve against cached (iteration-k) tail models,
             // then broadcast; finally receive the fresh tail models.
-            theta = solve_local(&ctx, &mut q, &theta, &decoders, &lambda);
+            solve_local(&ctx, &mut q, &theta, &decoders, &lambda, &mut theta_next);
+            std::mem::swap(&mut theta, &mut theta_next);
             sent = send_model(&mut ctx, k, &theta)?;
             recv_models(&mut ctx, k, &mut decoders)?;
         } else {
             // Tail phase: wait for fresh head models first (eq. 13 uses
             // θ^{k+1} of every head neighbour), then solve and send back.
             recv_models(&mut ctx, k, &mut decoders)?;
-            theta = solve_local(&ctx, &mut q, &theta, &decoders, &lambda);
+            solve_local(&ctx, &mut q, &theta, &decoders, &lambda, &mut theta_next);
+            std::mem::swap(&mut theta, &mut theta_next);
             sent = send_model(&mut ctx, k, &theta)?;
         }
 
@@ -181,14 +187,16 @@ pub fn run_worker(mut ctx: WorkerCtx<'_>) -> Result<(), TransportError> {
 /// Solve the local subproblem against the cached neighbour views: the
 /// linear term accumulates `±λ_e − ρ·θ̂_nb` per incident edge in adjacency
 /// order, the quadratic coefficient is `ρ·deg` — exactly the sequential
-/// core's arithmetic.
+/// core's arithmetic. Writes the new iterate into the caller-owned `out`
+/// buffer (warm-started from `theta_cur`, which may not alias `out`).
 fn solve_local(
     ctx: &WorkerCtx<'_>,
     q: &mut [f64],
     theta_cur: &[f64],
     decoders: &[Decoder],
     lambda: &[Vec<f64>],
-) -> Vec<f64> {
+    out: &mut [f64],
+) {
     let d = ctx.dim;
     q.iter_mut().for_each(|x| *x = 0.0);
     let mut couplings = 0.0;
@@ -207,7 +215,7 @@ fn solve_local(
         couplings += 1.0;
     }
     let c = ctx.rho * couplings;
-    ctx.solver.prox_argmin(q, c, theta_cur)
+    ctx.solver.prox_argmin_into(q, c, theta_cur, out);
 }
 
 /// Run the link policy once and broadcast its message (possibly a

@@ -64,6 +64,30 @@ mod tests {
     }
 
     #[test]
+    fn massive_worker_counts_reconstruct_the_dataset() {
+        // The scale sweep's regime: thousands of workers, 1–2 samples
+        // each. Concatenating the shards in worker order must reproduce
+        // the dataset row-for-row (and target-for-target) exactly.
+        let ds = synthetic::linreg(1200, 4, &mut Pcg64::seeded(7));
+        for n in [600, 1199, 1200] {
+            let shards = partition_even(&ds, n);
+            assert_eq!(shards.len(), n);
+            let mut row = 0usize;
+            for (w, s) in shards.iter().enumerate() {
+                assert_eq!(s.worker, w);
+                assert!(s.features.rows >= 1, "worker {w} got an empty shard");
+                assert_eq!(s.features.rows, s.targets.len());
+                for i in 0..s.features.rows {
+                    assert_eq!(s.features.row(i), ds.features.row(row));
+                    assert_eq!(s.targets[i], ds.targets[row]);
+                    row += 1;
+                }
+            }
+            assert_eq!(row, 1200, "n={n} shards did not tile the dataset");
+        }
+    }
+
+    #[test]
     #[should_panic(expected = "cannot split")]
     fn too_many_workers_panics() {
         let ds = synthetic::linreg(10, 3, &mut Pcg64::seeded(3));

@@ -30,6 +30,11 @@
 //!   through the channel coordinator and as a real localhost
 //!   lead + worker-process deployment, with a bit-identity column and
 //!   real wire-byte accounting; see `docs/adr/007-transport-seam.md`)
+//! * [`scale::run`]    — the massive-N scaling sweep behind `gadmm scale`
+//!   (`BENCH_scale.json`: chain + RGG ladders to N=4096, wall and
+//!   per-phase µs/iteration, peak RSS, replay + serial-vs-pool
+//!   determinism columns; see `docs/PERFORMANCE.md` and
+//!   `docs/adr/008-flat-arena-and-alloc-free-hot-path.md`)
 
 pub mod bench;
 pub mod censor;
@@ -41,6 +46,7 @@ pub mod fig8;
 pub mod graph;
 pub mod netbench;
 pub mod qgadmm;
+pub mod scale;
 pub mod table1;
 
 use crate::metrics::Trace;

@@ -1,0 +1,406 @@
+//! `gadmm scale` — the massive-N scaling harness behind `BENCH_scale.json`.
+//!
+//! Sweeps the worker axis N ∈ {16 … 4096} (`--quick`: {16, 64, 256}) on
+//! the two topology families the arena work targets:
+//!
+//! * **chain** — the paper's logical chain ([`Gadmm`]) under unit costs;
+//! * **rgg**   — GGADMM on a 2-colored random geometric graph over a
+//!   placement whose area grows ∝ N (constant spatial density, so the
+//!   expected degree — and with it per-worker work — stays flat across
+//!   the ladder), metered by the lazy [`EnergyCostModel`].
+//!
+//! Each cell runs a *fixed* iteration budget (convergence time is the
+//! comm benchmarks' business; this one isolates cost **per iteration**)
+//! and records: graph + engine build seconds, run wall seconds, wall
+//! µs/iteration, the [`PhaseClock`](crate::comm::PhaseClock) per-phase
+//! µs/iteration attribution, peak RSS (`VmHWM`, Linux), and two
+//! determinism columns — a seeded replay and a serial-vs-pool rerun, both
+//! checked with [`Trace::same_path`]. The replay/pool columns prove the
+//! sweep is deterministic at every N; bit-identity *to the pre-arena
+//! code* is pinned separately by the frozen `refactor_pin`/`exec_par`
+//! suites, which ran unmodified across the arena refactor.
+//!
+//! Methodology and the expected curve shape are documented in
+//! `docs/PERFORMANCE.md` § "Scaling the worker axis"; `ci.sh`'s
+//! `scale_gate` asserts the quick ladder's wall/iter grows
+//! sub-quadratically.
+
+use super::run_engine;
+use crate::data::synthetic;
+use crate::metrics::Trace;
+use crate::model::Problem;
+use crate::optim::{Gadmm, Ggadmm, RunOptions};
+use crate::topology::graph::{GraphKind, DEFAULT_RGG_RADIUS};
+use crate::topology::{EnergyCostModel, LinkCosts, Placement, UnitCosts};
+use crate::util::json::Json;
+use crate::util::rng::Pcg64;
+use crate::util::table::{fmt_count, Table};
+use std::time::Instant;
+
+/// Feature dimension of the synthetic linreg workload. Small on purpose:
+/// the sweep measures how cost scales in N, so per-worker solve cost is
+/// held at the cheap cached-Cholesky floor.
+const DIM: usize = 8;
+
+/// ρ for the linreg ladder (the chain engines' pinned linreg regime).
+const RHO: f64 = 5.0;
+
+/// Pool width of the serial-vs-pool determinism column. 2 is enough: the
+/// claim being re-checked is ownership-not-ordering bit-identity, not
+/// speedup (that is `gadmm bench`'s job).
+const POOL_THREADS: usize = 2;
+
+/// RNG stream salt for the sweep's placements (distinct from GGADMM's
+/// seed-derived placement stream and every other consumer of the seed).
+const PLACEMENT_SALT: u64 = 0x5363; // "Sc"
+
+/// Reference area: N=16 workers in the paper's Fig. 6 square. Larger N
+/// scale the side as √(N/16), holding density at 0.16 workers/m².
+const BASE_SIDE: f64 = 10.0;
+const BASE_N: usize = 16;
+
+/// One cell of the sweep.
+pub struct ScaleRow {
+    /// `chain` or `rgg`.
+    pub topology: String,
+    pub n: usize,
+    /// Fixed iteration budget the cell ran.
+    pub iters: usize,
+    /// Dataset + placement + graph + engine construction, seconds.
+    pub build_seconds: f64,
+    /// Timed-run wall seconds (stepping + metering only).
+    pub wall_seconds: f64,
+    /// The timed run's trace (phase clock, final error).
+    pub trace: Trace,
+    /// Seeded replay took the identical deterministic path.
+    pub replay_identical: bool,
+    /// `threads=POOL_THREADS` rerun took the identical path.
+    pub pool_identical: bool,
+    /// `VmHWM` after this cell, kB (0 off Linux). Monotone over the
+    /// process: within one sweep the largest-N row carries the true peak.
+    pub peak_rss_kb: u64,
+}
+
+impl ScaleRow {
+    /// Wall microseconds per iteration — the scaling curve's y-axis.
+    pub fn wall_per_iter_us(&self) -> f64 {
+        self.wall_seconds / self.iters as f64 * 1e6
+    }
+
+    pub fn identical(&self) -> bool {
+        self.replay_identical && self.pool_identical
+    }
+}
+
+pub struct ScaleOutput {
+    pub rows: Vec<ScaleRow>,
+    pub rendered: String,
+    pub report: Json,
+}
+
+impl ScaleOutput {
+    /// Whether every cell replayed and pooled bit-identically (the
+    /// headline `ci.sh` gates on).
+    pub fn all_identical(&self) -> bool {
+        self.rows.iter().all(ScaleRow::identical)
+    }
+}
+
+/// Peak resident set (`VmHWM`) of this process in kB; 0 where
+/// `/proc/self/status` is unavailable (non-Linux). The kernel value is a
+/// high-water mark — it never decreases — so per-row readings are lower
+/// bounds dominated by the largest N run so far.
+pub fn peak_rss_kb() -> u64 {
+    #[cfg(target_os = "linux")]
+    {
+        if let Ok(status) = std::fs::read_to_string("/proc/self/status") {
+            for line in status.lines() {
+                if let Some(rest) = line.strip_prefix("VmHWM:") {
+                    if let Some(kb) = rest.split_whitespace().next() {
+                        return kb.parse().unwrap_or(0);
+                    }
+                }
+            }
+        }
+        0
+    }
+    #[cfg(not(target_os = "linux"))]
+    {
+        0
+    }
+}
+
+/// The N ladder: CI-quick tops out in the hundreds (seconds, and enough
+/// rungs for the sub-quadratic ratio gate); the full sweep reaches the
+/// ISSUE's ≥ 2048 territory. Every rung is even (the chain engines'
+/// even-N requirement).
+pub fn ladder(quick: bool) -> &'static [usize] {
+    if quick {
+        &[16, 64, 256]
+    } else {
+        &[16, 64, 256, 1024, 2048, 4096]
+    }
+}
+
+/// Iteration budget per cell. Small: linreg at these sizes moves
+/// per-iteration cost by orders of magnitude across the ladder, and the
+/// budget only needs to average out timer noise.
+pub fn iteration_budget(quick: bool) -> usize {
+    if quick {
+        30
+    } else {
+        50
+    }
+}
+
+/// Placement side for `n` workers at the constant reference density.
+fn side_for(n: usize) -> f64 {
+    BASE_SIDE * (n as f64 / BASE_N as f64).sqrt()
+}
+
+/// The sweep's workload: enough rows that every worker holds ≥ 2 samples
+/// (an over-determined local system once m/n ≥ d would need m ≥ n·d; the
+/// prox is well-posed regardless because c > 0 regularizes the solve).
+fn dataset_rows(n: usize) -> usize {
+    (2 * n).max(256)
+}
+
+/// Run one engine for the fixed budget and return (trace, wall seconds).
+fn timed(
+    engine: &mut dyn crate::optim::Engine,
+    problem: &Problem,
+    costs: &dyn LinkCosts,
+    opts: &RunOptions,
+) -> (Trace, f64) {
+    let t0 = Instant::now();
+    let trace = run_engine(engine, problem, costs, opts);
+    (trace, t0.elapsed().as_secs_f64())
+}
+
+/// One chain cell: GADMM on the logical chain, unit link costs.
+fn chain_row(n: usize, iters: usize, seed: u64) -> ScaleRow {
+    let opts = RunOptions::with_target(0.0, iters);
+    let costs = UnitCosts;
+    let build0 = Instant::now();
+    let ds = synthetic::linreg(dataset_rows(n), DIM, &mut Pcg64::seeded(seed));
+    let problem = Problem::from_dataset(&ds, n);
+    let mut engine = Gadmm::new(&problem, RHO);
+    let build_seconds = build0.elapsed().as_secs_f64();
+
+    let (trace, wall_seconds) = timed(&mut engine, &problem, &costs, &opts);
+    // Determinism columns. Sharing `problem` (and so the linreg Cholesky
+    // caches) across reruns is exact: a cached factor is bitwise the
+    // factor a fresh solve would compute, unlike logreg's stateful
+    // Hessian anchor — which is why this ladder is linreg-only.
+    let replay = timed(&mut Gadmm::new(&problem, RHO), &problem, &costs, &opts).0;
+    let mut pooled_engine = Gadmm::new(&problem, RHO);
+    pooled_engine.set_threads(POOL_THREADS);
+    let pooled = timed(&mut pooled_engine, &problem, &costs, &opts).0;
+
+    ScaleRow {
+        topology: "chain".into(),
+        n,
+        iters,
+        build_seconds,
+        wall_seconds,
+        replay_identical: trace.same_path(&replay),
+        pool_identical: trace.same_path(&pooled),
+        trace,
+        peak_rss_kb: peak_rss_kb(),
+    }
+}
+
+/// One RGG cell: GGADMM on a 2-colored random geometric graph at
+/// constant density, metered by the per-call [`EnergyCostModel`].
+fn rgg_row(n: usize, iters: usize, seed: u64) -> Result<ScaleRow, String> {
+    let opts = RunOptions::with_target(0.0, iters);
+    let kind = GraphKind::Rgg {
+        radius: DEFAULT_RGG_RADIUS,
+    };
+    let build0 = Instant::now();
+    let ds = synthetic::linreg(dataset_rows(n), DIM, &mut Pcg64::seeded(seed));
+    let problem = Problem::from_dataset(&ds, n);
+    let placement = Placement::random(n, side_for(n), &mut Pcg64::new(seed, PLACEMENT_SALT));
+    let mut engine = Ggadmm::with_placement(&problem, RHO, kind, &placement)?;
+    let costs = EnergyCostModel::new(&placement, placement.central_worker());
+    let build_seconds = build0.elapsed().as_secs_f64();
+
+    let (trace, wall_seconds) = timed(&mut engine, &problem, &costs, &opts);
+    let replay = timed(
+        &mut Ggadmm::with_placement(&problem, RHO, kind, &placement)?,
+        &problem,
+        &costs,
+        &opts,
+    )
+    .0;
+    let mut pooled_engine = Ggadmm::with_placement(&problem, RHO, kind, &placement)?;
+    pooled_engine.set_threads(POOL_THREADS);
+    let pooled = timed(&mut pooled_engine, &problem, &costs, &opts).0;
+
+    Ok(ScaleRow {
+        topology: "rgg".into(),
+        n,
+        iters,
+        build_seconds,
+        wall_seconds,
+        replay_identical: trace.same_path(&replay),
+        pool_identical: trace.same_path(&pooled),
+        trace,
+        peak_rss_kb: peak_rss_kb(),
+    })
+}
+
+/// The `gadmm scale` entry point.
+pub fn run(quick: bool, seed: u64) -> Result<ScaleOutput, String> {
+    run_ladder(ladder(quick), iteration_budget(quick), quick, seed)
+}
+
+/// [`run`] on an explicit ladder (tests shrink it below CI size).
+pub fn run_ladder(
+    ns: &[usize],
+    iters: usize,
+    quick: bool,
+    seed: u64,
+) -> Result<ScaleOutput, String> {
+    let mut rows = Vec::with_capacity(2 * ns.len());
+    for &n in ns {
+        rows.push(chain_row(n, iters, seed));
+        rows.push(rgg_row(n, iters, seed)?);
+        log::info!("scale: N={n} done ({} kB peak RSS)", peak_rss_kb());
+    }
+    let out = render(rows, iters, quick, seed);
+    Ok(out)
+}
+
+fn render(rows: Vec<ScaleRow>, iters: usize, quick: bool, seed: u64) -> ScaleOutput {
+    let mut table = Table::new(vec![
+        "Topology",
+        "N",
+        "build s",
+        "wall s",
+        "µs/iter",
+        "head/tail/dual µs/iter",
+        "replay",
+        "pool",
+        "peak RSS MB",
+    ]);
+    for row in &rows {
+        let p = &row.trace.phase;
+        let us = |s: f64| s / row.iters as f64 * 1e6;
+        table.row(vec![
+            row.topology.clone(),
+            fmt_count(row.n),
+            format!("{:.3}", row.build_seconds),
+            format!("{:.3}", row.wall_seconds),
+            format!("{:.1}", row.wall_per_iter_us()),
+            format!(
+                "{:.1}/{:.1}/{:.1}",
+                us(p.head_seconds),
+                us(p.tail_seconds),
+                us(p.dual_seconds)
+            ),
+            if row.replay_identical { "yes".into() } else { "DIVERGED".into() },
+            if row.pool_identical { "yes".into() } else { "DIVERGED".into() },
+            format!("{:.1}", row.peak_rss_kb as f64 / 1024.0),
+        ]);
+    }
+    let rendered = format!(
+        "\nscale — linreg d={DIM}, rho={RHO}, {iters} iters/cell, pool of {POOL_THREADS}{}\n{}",
+        if quick { " [quick]" } else { "" },
+        table.render()
+    );
+    let all_identical = rows.iter().all(ScaleRow::identical);
+    let report = Json::obj()
+        .set("experiment", "bench_scale")
+        .set("quick", quick)
+        .set("seed", seed as usize)
+        .set("iters", iters)
+        .set("dim", DIM)
+        .set("rho", RHO)
+        .set("pool_threads", POOL_THREADS)
+        .set("rgg_radius", DEFAULT_RGG_RADIUS)
+        .set("all_identical", all_identical)
+        .set("peak_rss_kb", peak_rss_kb() as usize)
+        .set(
+            "rows",
+            Json::Arr(
+                rows.iter()
+                    .map(|row| {
+                        let p = &row.trace.phase;
+                        Json::obj()
+                            .set("topology", row.topology.as_str())
+                            .set("n", row.n)
+                            .set("iters", row.iters)
+                            .set("build_seconds", row.build_seconds)
+                            .set("wall_seconds", row.wall_seconds)
+                            .set("wall_per_iter_us", row.wall_per_iter_us())
+                            .set(
+                                "phase_seconds",
+                                Json::obj()
+                                    .set("head", p.head_seconds)
+                                    .set("tail", p.tail_seconds)
+                                    .set("dual", p.dual_seconds),
+                            )
+                            .set("replay_identical", row.replay_identical)
+                            .set("pool_identical", row.pool_identical)
+                            .set("peak_rss_kb", row.peak_rss_kb as usize)
+                            .set("final_error", row.trace.final_error())
+                    })
+                    .collect(),
+            ),
+        );
+    ScaleOutput {
+        rows,
+        rendered,
+        report,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tiny_ladder_is_deterministic_on_both_topologies() {
+        let out = run_ladder(&[8, 16], 5, true, 1).unwrap();
+        assert_eq!(out.rows.len(), 4, "chain + rgg per rung");
+        assert!(out.all_identical(), "scale sweep lost determinism");
+        for row in &out.rows {
+            assert!(row.wall_seconds > 0.0 && row.build_seconds >= 0.0);
+            assert!(row.wall_per_iter_us() > 0.0);
+            assert!(
+                row.trace.phase.total_seconds() > 0.0,
+                "{} N={} attributed no phase time",
+                row.topology,
+                row.n
+            );
+            assert!(row.trace.final_error().is_finite());
+        }
+        assert_eq!(out.rows[0].topology, "chain");
+        assert_eq!(out.rows[1].topology, "rgg");
+        assert_eq!(
+            out.report.path("experiment").unwrap().as_str(),
+            Some("bench_scale")
+        );
+        assert_eq!(
+            out.report.path("all_identical").unwrap(),
+            &Json::Bool(true)
+        );
+        assert_eq!(out.report.path("rows").unwrap().as_arr().unwrap().len(), 4);
+        assert!(out.rendered.contains("scale —"));
+    }
+
+    #[test]
+    fn ladders_are_even_and_reach_the_issue_floor() {
+        assert!(ladder(false).iter().all(|n| n % 2 == 0));
+        assert!(ladder(true).iter().all(|n| n % 2 == 0));
+        assert!(*ladder(false).last().unwrap() >= 2048);
+        assert!(*ladder(true).last().unwrap() <= 256, "quick stays CI-sized");
+    }
+
+    #[cfg(target_os = "linux")]
+    #[test]
+    fn peak_rss_is_reported_on_linux() {
+        assert!(peak_rss_kb() > 0);
+    }
+}

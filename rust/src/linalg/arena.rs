@@ -1,0 +1,153 @@
+//! Flat, d-strided storage for per-worker model state.
+//!
+//! The GADMM engines keep three per-worker vector families (`θ`, `θ̂`, `λ`)
+//! alive across every iteration. Storing them as `Vec<Vec<f64>>` costs one
+//! heap allocation per row and scatters rows across the heap; at N in the
+//! thousands the pointer chase dominates the O(d) arithmetic of a phase
+//! task. An [`Arena`] packs all rows into one contiguous buffer with a
+//! fixed stride, so slot `i` is the slice `data[i·d .. (i+1)·d]` — one
+//! allocation total, sequential row access, and a raw base pointer the
+//! executor can hand out as disjoint strided slots
+//! (see `optim::exec::ArenaSlots`).
+//!
+//! The type intentionally quacks like `&[Vec<f64>]` at read sites:
+//! `arena[i]` indexes a row, `&arena` iterates rows as `&[f64]`, and rows
+//! compare against `Vec<f64>`/`&[f64]` with the standard slice `PartialEq`
+//! — so accessors that migrated from `Vec<Vec<f64>>` keep their call-site
+//! idioms (see docs/adr/008-flat-arena-and-alloc-free-hot-path.md).
+
+use std::ops::Index;
+
+/// Contiguous `slots × dim` row-major storage; every row ("slot") is one
+/// worker- or edge-indexed vector of fixed dimension `dim`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Arena {
+    data: Vec<f64>,
+    slots: usize,
+    dim: usize,
+}
+
+impl Arena {
+    /// All-zero arena with `slots` rows of dimension `dim`.
+    pub fn zeros(slots: usize, dim: usize) -> Arena {
+        Arena { data: vec![0.0; slots * dim], slots, dim }
+    }
+
+    /// Number of rows.
+    pub fn slots(&self) -> usize {
+        self.slots
+    }
+
+    /// Row dimension `d` (the stride).
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.slots == 0
+    }
+
+    /// Row `i` as a slice.
+    pub fn slot(&self, i: usize) -> &[f64] {
+        debug_assert!(i < self.slots);
+        &self.data[i * self.dim..(i + 1) * self.dim]
+    }
+
+    /// Row `i` as a mutable slice.
+    pub fn slot_mut(&mut self, i: usize) -> &mut [f64] {
+        debug_assert!(i < self.slots);
+        &mut self.data[i * self.dim..(i + 1) * self.dim]
+    }
+
+    /// Iterate rows in slot order.
+    pub fn iter(&self) -> std::slice::ChunksExact<'_, f64> {
+        // chunks_exact(0) panics; a dimension-0 arena has no data, so any
+        // positive chunk size yields the correct empty iterator.
+        self.data.chunks_exact(self.dim.max(1))
+    }
+
+    /// The whole backing buffer (rows concatenated in slot order).
+    pub fn as_flat(&self) -> &[f64] {
+        &self.data
+    }
+
+    /// Mutable backing buffer — the escape hatch `ArenaSlots` uses to hand
+    /// out disjoint rows across threads.
+    pub fn as_flat_mut(&mut self) -> &mut [f64] {
+        &mut self.data
+    }
+
+    /// Zero every row.
+    pub fn fill(&mut self, v: f64) {
+        self.data.iter_mut().for_each(|x| *x = v);
+    }
+}
+
+impl Index<usize> for Arena {
+    type Output = [f64];
+
+    fn index(&self, i: usize) -> &[f64] {
+        self.slot(i)
+    }
+}
+
+impl<'a> IntoIterator for &'a Arena {
+    type Item = &'a [f64];
+    type IntoIter = std::slice::ChunksExact<'a, f64>;
+
+    fn into_iter(self) -> Self::IntoIter {
+        self.iter()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rows_are_disjoint_strided_slices() {
+        let mut a = Arena::zeros(3, 4);
+        a.slot_mut(1).copy_from_slice(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(a.slot(0), &[0.0; 4]);
+        assert_eq!(a.slot(1), &[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(a.slot(2), &[0.0; 4]);
+        assert_eq!(a.as_flat()[4..8], [1.0, 2.0, 3.0, 4.0]);
+        assert_eq!((a.slots(), a.dim()), (3, 4));
+    }
+
+    #[test]
+    fn quacks_like_a_slice_of_rows() {
+        let mut a = Arena::zeros(2, 2);
+        a.slot_mut(0).copy_from_slice(&[1.0, 2.0]);
+        a.slot_mut(1).copy_from_slice(&[3.0, 4.0]);
+        // Index + row comparison against plain vectors.
+        assert_eq!(&a[0], &[1.0, 2.0][..]);
+        let rows: Vec<Vec<f64>> = a.iter().map(|r| r.to_vec()).collect();
+        assert_eq!(rows, vec![vec![1.0, 2.0], vec![3.0, 4.0]]);
+        // `&Arena` iterates rows, like `&[Vec<f64>]` used to.
+        let mut it = (&a).into_iter();
+        assert_eq!(it.next(), Some(&[1.0, 2.0][..]));
+        assert_eq!(it.next(), Some(&[3.0, 4.0][..]));
+        assert_eq!(it.next(), None);
+        // Whole-arena equality.
+        assert_eq!(a, a.clone());
+        assert_ne!(a, Arena::zeros(2, 2));
+    }
+
+    #[test]
+    fn zero_sized_arenas_are_inert() {
+        let a = Arena::zeros(0, 4);
+        assert!(a.is_empty());
+        assert_eq!(a.iter().count(), 0);
+        let b = Arena::zeros(3, 0);
+        assert_eq!(b.iter().count(), 0);
+        assert_eq!(b.as_flat().len(), 0);
+    }
+
+    #[test]
+    fn fill_overwrites_every_row() {
+        let mut a = Arena::zeros(2, 3);
+        a.fill(7.0);
+        assert!(a.iter().all(|r| r.iter().all(|&x| x == 7.0)));
+    }
+}

@@ -288,6 +288,32 @@ mod tests {
     }
 
     #[test]
+    fn slice_rows_at_massive_shard_counts() {
+        // The scale sweep shards thousands of rows into thousands of
+        // 1–2-row slices: every slice must be an exact contiguous copy,
+        // including the empty and full-range edge cases.
+        let rows = 4096;
+        let cols = 3;
+        let data: Vec<f64> = (0..rows * cols).map(|v| v as f64).collect();
+        let a = Matrix::from_vec(rows, cols, data);
+        let full = a.slice_rows(0, rows);
+        assert_eq!((full.rows, full.cols), (rows, cols));
+        assert_eq!(full.data, a.data);
+        let empty = a.slice_rows(100, 100);
+        assert_eq!((empty.rows, empty.data.len()), (0, 0));
+        // 2048 two-row shards tile the matrix exactly.
+        let mut seen = 0usize;
+        for w in 0..2048 {
+            let s = a.slice_rows(2 * w, 2 * w + 2);
+            assert_eq!(s.rows, 2);
+            assert_eq!(s.row(0), a.row(2 * w));
+            assert_eq!(s.row(1), a.row(2 * w + 1));
+            seen += s.rows;
+        }
+        assert_eq!(seen, rows);
+    }
+
+    #[test]
     fn add_diag() {
         let mut a = Matrix::zeros(3, 3);
         a.add_diag(2.5);

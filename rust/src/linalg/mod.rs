@@ -4,9 +4,11 @@
 //! paper's workloads (d ≤ a few hundred features) and are the native
 //! backend's hot path. See EXPERIMENTS.md §Perf for measurements.
 
+pub mod arena;
 pub mod cholesky;
 pub mod matrix;
 pub mod vector;
 
+pub use arena::Arena;
 pub use cholesky::{solve_spd, Cholesky, FactorError};
 pub use matrix::Matrix;

@@ -26,6 +26,8 @@
 //!                bit-identical to the in-process coordinator
 //! gadmm netbench [--quick] [--out results/]
 //!              — writes BENCH_net.json (in-process vs localhost processes)
+//! gadmm scale [--quick] [--out results/]
+//!              — writes BENCH_scale.json (massive-N chain/RGG scaling sweep)
 //! gadmm all   — every table and figure, reports under results/
 //! ```
 
@@ -33,7 +35,7 @@ use gadmm::config::{validate_quant_bits, DatasetKind, RunConfig};
 use gadmm::coordinator;
 use gadmm::data::partition_even;
 use gadmm::experiments::{
-    bench, censor, chaos, curves, fig6, fig7, fig8, graph, netbench, qgadmm, table1,
+    bench, censor, chaos, curves, fig6, fig7, fig8, graph, netbench, qgadmm, scale, table1,
     write_report, write_trace_csv,
 };
 use gadmm::net;
@@ -310,6 +312,23 @@ fn dispatch(sub: &str, args: &Args) -> Result<(), String> {
             let path = write_report(&out_dir(args), "BENCH_par", &par.report)
                 .map_err(|e| e.to_string())?;
             println!("report: {}", path.display());
+            Ok(())
+        }
+        "scale" => {
+            let quick = args.flag("quick");
+            let seed = args.get_u64("seed", 1)?;
+            let out = scale::run(quick, seed)?;
+            println!("{}", out.rendered);
+            let path = write_report(&out_dir(args), "BENCH_scale", &out.report)
+                .map_err(|e| e.to_string())?;
+            println!("report: {}", path.display());
+            if !out.all_identical() {
+                return Err(
+                    "scale sweep diverged across replay or pool reruns — the hot path lost \
+                     determinism"
+                        .into(),
+                );
+            }
             Ok(())
         }
         "chaos" => {
@@ -782,6 +801,9 @@ subcommands:
   netbench in-process vs real localhost worker processes on the bench
            grid -> BENCH_net.json (wall clocks, wire bytes, and a
            bit-identity column per engine; --quick for CI)
+  scale    massive-N scaling sweep -> BENCH_scale.json (chain + RGG
+           ladders to N=4096, wall + per-phase us/iteration, peak RSS,
+           replay and serial-vs-pool determinism columns; --quick for CI)
   all      every table/figure above (train/sweep/bench/chaos/serve/
            netbench excluded); JSON reports under results/
 

@@ -158,17 +158,28 @@ impl LocalLoss for LinRegLoss {
     }
 
     /// Closed form: `(2G + cI)θ = 2Xᵀy − q` via the cached Cholesky.
-    fn prox_argmin(&self, q: &[f64], c: f64, _warm: &[f64]) -> Vec<f64> {
+    ///
+    /// `warm` is ignored *by design*, not by omission: a direct solve has
+    /// no iteration to warm-start, so the warm-start parameter — advisory
+    /// per the trait contract — cannot change the answer. The tests pin
+    /// bitwise-identical output across arbitrary `warm` values.
+    fn prox_argmin(&self, q: &[f64], c: f64, warm: &[f64]) -> Vec<f64> {
+        let mut out = vec![0.0; self.dim()];
+        self.prox_argmin_into(q, c, warm, &mut out);
+        out
+    }
+
+    /// Allocation-free closed form: build the rhs `2Xᵀy − q` directly in
+    /// `out` and back-substitute through the cached factor in place. In
+    /// steady state (factor cached) this performs zero heap allocations —
+    /// the property `rust/tests/alloc_free.rs` pins for the whole engine.
+    fn prox_argmin_into(&self, q: &[f64], c: f64, _warm: &[f64], out: &mut [f64]) {
         assert!(c > 0.0, "prox_argmin requires c > 0");
         let factor = self.factor_for(c);
-        let mut rhs: Vec<f64> = self
-            .xty
-            .iter()
-            .zip(q)
-            .map(|(t, qi)| 2.0 * t - qi)
-            .collect();
-        factor.solve_in_place(&mut rhs);
-        rhs
+        for ((o, t), qi) in out.iter_mut().zip(&self.xty).zip(q) {
+            *o = 2.0 * t - qi;
+        }
+        factor.solve_in_place(out);
     }
 }
 
@@ -249,6 +260,24 @@ mod tests {
         assert_eq!(loss.factors.lock().unwrap().len(), 1);
         let _ = loss.prox_argmin(&q1, 4.0, &vec![0.0; 4]);
         assert_eq!(loss.factors.lock().unwrap().len(), 2);
+    }
+
+    /// The trait documents linreg's direct solve as legitimately ignoring
+    /// `warm`: pin bitwise-identical output for wildly different warm
+    /// starts, on both the allocating and the into- paths.
+    #[test]
+    fn warm_start_is_legitimately_ignored_by_the_direct_solve() {
+        let loss = sample_loss(30, 5, 13);
+        let q = vec![0.7, -0.3, 2.0, 0.0, -1.1];
+        let c = 3.0;
+        let warms = [vec![0.0; 5], vec![1e6; 5], vec![f64::NAN; 5]];
+        let reference = loss.prox_argmin(&q, c, &warms[0]);
+        for warm in &warms {
+            assert_eq!(loss.prox_argmin(&q, c, warm), reference);
+            let mut out = vec![f64::NAN; 5];
+            loss.prox_argmin_into(&q, c, warm, &mut out);
+            assert_eq!(out, reference, "into-variant must also ignore warm");
+        }
     }
 
     #[test]

@@ -33,12 +33,28 @@ pub struct LogRegLoss {
     /// gradient + O(d²) back-substitution. Keyed by the (c) coefficient;
     /// invalidated whenever the anchor θ drifts or progress stalls.
     hess_cache: std::sync::Mutex<Option<HessCache>>,
+    /// §Perf: reusable Newton buffers for [`LocalLoss::prox_argmin_into`].
+    /// One worker's loss is solved by exactly one phase task at a time, so
+    /// the lock is uncontended; holding the buffers here (not per call)
+    /// makes the steady-state prox allocation-free on the cache-hit path.
+    workspace: std::sync::Mutex<Workspace>,
 }
 
 struct HessCache {
     c_bits: u64,
     anchor: Vec<f64>,
     factor: Cholesky,
+}
+
+/// Scratch for one Newton solve: sized lazily on first use, then reused.
+#[derive(Default)]
+struct Workspace {
+    grad: Vec<f64>,
+    step: Vec<f64>,
+    cand: Vec<f64>,
+    weights: Vec<f64>,
+    margins: Vec<f64>,
+    coeff: Vec<f64>,
 }
 
 /// Newton solver tolerance on the subproblem gradient norm.
@@ -64,6 +80,7 @@ impl LogRegLoss {
             weight: w,
             smoothness,
             hess_cache: std::sync::Mutex::new(None),
+            workspace: std::sync::Mutex::new(Workspace::default()),
         }
     }
 
@@ -73,31 +90,64 @@ impl LogRegLoss {
 
     /// Margins z_i = y_i · x_iᵀθ.
     fn margins(&self, theta: &[f64]) -> Vec<f64> {
-        let mut z = self.x.matvec(theta);
+        let mut z = Vec::new();
+        self.margins_into(theta, &mut z);
+        z
+    }
+
+    /// Allocation-free margins into a reusable buffer.
+    fn margins_into(&self, theta: &[f64], z: &mut Vec<f64>) {
+        z.resize(self.x.rows, 0.0);
+        self.x.matvec_into(theta, z);
         for (zi, yi) in z.iter_mut().zip(&self.y) {
             *zi *= yi;
         }
-        z
     }
 
     /// Gradient and Hessian weights of the data term at θ:
     /// g = Σ −y_i σ(−z_i) x_i,  w_i = σ(z_i)σ(−z_i).
     fn grad_weights(&self, theta: &[f64], grad: &mut [f64], weights: &mut Vec<f64>) {
-        let z = self.margins(theta);
+        let mut z = Vec::new();
+        let mut coeff = Vec::new();
+        self.grad_weights_ws(theta, grad, weights, &mut z, &mut coeff);
+    }
+
+    /// Workspace form of [`LogRegLoss::grad_weights`]: same arithmetic in
+    /// the same order, writing into caller-owned buffers.
+    fn grad_weights_ws(
+        &self,
+        theta: &[f64],
+        grad: &mut [f64],
+        weights: &mut Vec<f64>,
+        z: &mut Vec<f64>,
+        coeff: &mut Vec<f64>,
+    ) {
+        self.margins_into(theta, z);
         weights.clear();
+        coeff.clear();
         // coefficient per sample for the gradient: −y_i σ(−z_i)
         let w = self.weight;
-        let coeff: Vec<f64> = z
-            .iter()
-            .zip(&self.y)
-            .map(|(&zi, &yi)| {
-                let s = vec_ops::sigmoid(-zi);
-                weights.push(w * s * (1.0 - s));
-                -w * yi * s
-            })
-            .collect();
-        self.x.tmatvec_into(&coeff, grad);
+        for (&zi, &yi) in z.iter().zip(&self.y) {
+            let s = vec_ops::sigmoid(-zi);
+            weights.push(w * s * (1.0 - s));
+            coeff.push(-w * yi * s);
+        }
+        self.x.tmatvec_into(coeff, grad);
         vec_ops::axpy(self.mu, theta, grad);
+    }
+
+    /// `f(θ)` with the margins buffer supplied by the caller — the
+    /// allocation-free form of [`LocalLoss::value`] the Newton line
+    /// search uses.
+    fn value_with(&self, theta: &[f64], z: &mut Vec<f64>) -> f64 {
+        self.margins_into(theta, z);
+        let data: f64 = z.iter().map(|&zi| vec_ops::log1p_exp(-zi)).sum();
+        self.weight * data + 0.5 * self.mu * vec_ops::norm2_sq(theta)
+    }
+
+    /// Subproblem objective `φ(θ) = f(θ) + ⟨q,θ⟩ + (c/2)‖θ‖²`.
+    fn phi_with(&self, theta: &[f64], q: &[f64], c: f64, z: &mut Vec<f64>) -> f64 {
+        self.value_with(theta, z) + vec_ops::dot(q, theta) + 0.5 * c * vec_ops::norm2_sq(theta)
     }
 }
 
@@ -111,9 +161,8 @@ impl LocalLoss for LogRegLoss {
     }
 
     fn value(&self, theta: &[f64]) -> f64 {
-        let z = self.margins(theta);
-        let data: f64 = z.iter().map(|&zi| vec_ops::log1p_exp(-zi)).sum();
-        self.weight * data + 0.5 * self.mu * vec_ops::norm2_sq(theta)
+        let mut z = Vec::new();
+        self.value_with(theta, &mut z)
     }
 
     fn grad_into(&self, theta: &[f64], out: &mut [f64]) {
@@ -143,23 +192,38 @@ impl LocalLoss for LogRegLoss {
         out.add_diag(self.mu);
     }
 
-    /// Damped Newton on `φ(θ) = f(θ) + ⟨q,θ⟩ + (c/2)‖θ‖²`:
-    /// `H = XᵀWX + (μ+c)I`, `∇φ = ∇f + q + cθ`; backtracking line search on
-    /// the Newton decrement guards the (rare) far-from-optimum starts. A
-    /// stale-Hessian cache accelerates warm-started calls (see `hess_cache`);
-    /// gradients stay exact, so the solution is unchanged.
+    /// Damped Newton on `φ(θ) = f(θ) + ⟨q,θ⟩ + (c/2)‖θ‖²` — a thin wrapper
+    /// over [`LocalLoss::prox_argmin_into`], which is the single arithmetic
+    /// path for this solve.
     fn prox_argmin(&self, q: &[f64], c: f64, warm: &[f64]) -> Vec<f64> {
+        let mut out = vec![0.0; self.dim()];
+        self.prox_argmin_into(q, c, warm, &mut out);
+        out
+    }
+
+    /// Damped Newton into the caller's buffer: `H = XᵀWX + (μ+c)I`,
+    /// `∇φ = ∇f + q + cθ`; backtracking line search on the Newton decrement
+    /// guards the (rare) far-from-optimum starts. A stale-Hessian cache
+    /// accelerates warm-started calls (see `hess_cache`); gradients stay
+    /// exact, so the solution is unchanged. All per-step vectors live in
+    /// the loss's reusable [`Workspace`], so the steady-state cache-hit
+    /// path performs zero heap allocations.
+    fn prox_argmin_into(&self, q: &[f64], c: f64, warm: &[f64], out: &mut [f64]) {
         let d = self.dim();
-        let mut theta = warm.to_vec();
-        let mut grad = vec![0.0; d];
-        let mut weights: Vec<f64> = Vec::with_capacity(self.x.rows);
+        debug_assert_eq!(out.len(), d);
+        out.copy_from_slice(warm); // `out` is the Newton iterate θ
+        let mut ws_guard = self.workspace.lock().unwrap();
+        let ws = &mut *ws_guard;
+        ws.grad.resize(d, 0.0);
+        ws.step.resize(d, 0.0);
+        ws.cand.resize(d, 0.0);
         let mut prev_gnorm = f64::INFINITY;
         for _ in 0..NEWTON_MAX_ITERS {
-            self.grad_weights(&theta, &mut grad, &mut weights);
+            self.grad_weights_ws(out, &mut ws.grad, &mut ws.weights, &mut ws.margins, &mut ws.coeff);
             for i in 0..d {
-                grad[i] += q[i] + c * theta[i];
+                ws.grad[i] += q[i] + c * out[i];
             }
-            let gnorm = vec_ops::norm2(&grad);
+            let gnorm = vec_ops::norm2(&ws.grad);
             if gnorm < NEWTON_TOL {
                 break;
             }
@@ -168,53 +232,50 @@ impl LocalLoss for LogRegLoss {
             let mut cache_guard = self.hess_cache.lock().unwrap();
             let cache_ok = cache_guard.as_ref().is_some_and(|hc| {
                 hc.c_bits == c.to_bits()
-                    && vec_ops::dist2(&hc.anchor, &theta) < 0.05 * (1.0 + vec_ops::norm2(&theta))
+                    && vec_ops::dist2(&hc.anchor, out) < 0.05 * (1.0 + vec_ops::norm2(out))
                     && gnorm < 0.7 * prev_gnorm
             }) || (prev_gnorm.is_infinite()
                 && cache_guard.as_ref().is_some_and(|hc| {
                     hc.c_bits == c.to_bits()
-                        && vec_ops::dist2(&hc.anchor, &theta)
-                            < 0.05 * (1.0 + vec_ops::norm2(&theta))
+                        && vec_ops::dist2(&hc.anchor, out)
+                            < 0.05 * (1.0 + vec_ops::norm2(out))
                 }));
             if !cache_ok {
-                let mut h = self.x.weighted_gram(&weights);
+                let mut h = self.x.weighted_gram(&ws.weights);
                 h.add_diag(self.mu + c);
                 let factor =
                     Cholesky::factor(&h).expect("logistic Hessian + (μ+c)I is SPD");
                 *cache_guard = Some(HessCache {
                     c_bits: c.to_bits(),
-                    anchor: theta.clone(),
+                    anchor: out.to_vec(),
                     factor,
                 });
             }
             let factor = &cache_guard.as_ref().unwrap().factor;
             prev_gnorm = gnorm;
-            let mut step = grad.clone();
-            factor.solve_in_place(&mut step);
+            ws.step.copy_from_slice(&ws.grad);
+            factor.solve_in_place(&mut ws.step);
             drop(cache_guard);
             // §Perf: near the solution the full Newton/stale-Newton step is
             // always accepted — skip the two φ evaluations of the line
             // search entirely once the gradient is tiny.
             if gnorm < 1e-6 {
-                for (t, s) in theta.iter_mut().zip(&step) {
+                for (t, s) in out.iter_mut().zip(&ws.step) {
                     *t -= s;
                 }
                 continue;
             }
             // Backtracking on φ.
-            let phi = |t: &[f64]| self.value(t) + vec_ops::dot(q, t) + 0.5 * c * vec_ops::norm2_sq(t);
-            let phi0 = phi(&theta);
-            let slope = vec_ops::dot(&grad, &step); // ≥ 0, descent dir is −step
+            let phi0 = self.phi_with(out, q, c, &mut ws.margins);
+            let slope = vec_ops::dot(&ws.grad, &ws.step); // ≥ 0, descent dir is −step
             let mut alpha = 1.0;
             let mut accepted = false;
             for _ in 0..30 {
-                let cand: Vec<f64> = theta
-                    .iter()
-                    .zip(&step)
-                    .map(|(t, s)| t - alpha * s)
-                    .collect();
-                if phi(&cand) <= phi0 - 1e-4 * alpha * slope {
-                    theta = cand;
+                for ((cd, t), s) in ws.cand.iter_mut().zip(out.iter()).zip(&ws.step) {
+                    *cd = t - alpha * s;
+                }
+                if self.phi_with(&ws.cand, q, c, &mut ws.margins) <= phi0 - 1e-4 * alpha * slope {
+                    out.copy_from_slice(&ws.cand);
                     accepted = true;
                     break;
                 }
@@ -225,7 +286,6 @@ impl LocalLoss for LogRegLoss {
                 break;
             }
         }
-        theta
     }
 }
 

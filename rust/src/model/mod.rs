@@ -51,8 +51,28 @@ pub trait LocalLoss: Send + Sync {
     fn add_hessian(&self, theta: &[f64], out: &mut crate::linalg::Matrix);
 
     /// Solve the canonical subproblem `argmin f(θ) + ⟨q,θ⟩ + (c/2)‖θ‖²`.
-    /// `warm` is the current iterate (used to warm-start iterative solvers).
+    ///
+    /// `warm` is the current iterate. Its contract is *advisory*: it may
+    /// only affect how fast an iterative solver reaches the minimizer,
+    /// never which minimizer it reaches (the subproblem is strongly convex
+    /// for `c > 0`, so the answer is unique). Direct solvers legitimately
+    /// ignore it — linreg's closed form `(2XᵀX + cI)θ = 2Xᵀy − q` has no
+    /// iteration to warm-start, which `LinRegLoss` tests pin by asserting
+    /// bitwise-identical output across arbitrary `warm` values.
     fn prox_argmin(&self, q: &[f64], c: f64, warm: &[f64]) -> Vec<f64>;
+
+    /// Allocation-free variant of [`LocalLoss::prox_argmin`]: write the
+    /// minimizer into the caller-owned `out` buffer (length `d`). This is
+    /// the engines' steady-state hot path — implementations should reuse
+    /// cached factorizations/workspaces and avoid per-call heap traffic.
+    ///
+    /// `warm` and `out` may not alias (the core passes a scratch copy of
+    /// the pre-update iterate as `warm` and the iterate's own slot as
+    /// `out`). The default falls back to the allocating path so third-party
+    /// losses keep working unchanged.
+    fn prox_argmin_into(&self, q: &[f64], c: f64, warm: &[f64], out: &mut [f64]) {
+        out.copy_from_slice(&self.prox_argmin(q, c, warm));
+    }
 }
 
 /// First-order optimality residual of the canonical subproblem — used by
@@ -96,6 +116,43 @@ mod tests {
                 let theta = loss.prox_argmin(&q, c, &warm);
                 let r = prox_residual(loss.as_ref(), &theta, &q, c);
                 assert!(r < 1e-6, "residual {r} for c={c}");
+            }
+        }
+    }
+
+    /// The allocation-free variant is the same solve: bitwise-identical
+    /// output for both loss families, fresh and warm-started. Paired
+    /// instances (one per path) keep the logreg stale-Hessian cache
+    /// evolving identically on both sides, so the comparison is exact.
+    #[test]
+    fn prox_argmin_into_is_bitwise_the_allocating_path() {
+        let mut rng = Pcg64::seeded(33);
+        let lin = synthetic::linreg(60, 8, &mut rng);
+        let log = synthetic::logreg(60, 8, &mut rng);
+        let lin_shard = &partition_even(&lin, 3)[0];
+        let log_shard = &partition_even(&log, 3)[0];
+        let mk_pair = |fresh: &dyn Fn() -> Box<dyn LocalLoss>| (fresh(), fresh());
+        let pairs: Vec<(Box<dyn LocalLoss>, Box<dyn LocalLoss>)> = vec![
+            mk_pair(&|| {
+                Box::new(LinRegLoss::new(lin_shard.features.clone(), lin_shard.targets.clone()))
+            }),
+            mk_pair(&|| {
+                Box::new(LogRegLoss::new(
+                    log_shard.features.clone(),
+                    log_shard.targets.clone(),
+                    1e-3,
+                ))
+            }),
+        ];
+        for (alloc_loss, into_loss) in &pairs {
+            let mut warm = vec![0.0; 8];
+            for c in [0.5, 2.0] {
+                let q = rng.normal_vec(8);
+                let alloc = alloc_loss.prox_argmin(&q, c, &warm);
+                let mut out = vec![f64::NAN; 8];
+                into_loss.prox_argmin_into(&q, c, &warm, &mut out);
+                assert_eq!(alloc, out, "into-variant diverged at c={c}");
+                warm = alloc; // next round warm-starts from the solution
             }
         }
     }

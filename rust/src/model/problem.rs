@@ -75,11 +75,22 @@ impl Problem {
     /// `Σ_n f_n(θ_n)` — the paper's metric (i).
     pub fn objective_per_worker(&self, thetas: &[Vec<f64>]) -> f64 {
         assert_eq!(thetas.len(), self.losses.len());
-        self.losses
-            .iter()
-            .zip(thetas)
-            .map(|(l, t)| l.value(t))
-            .sum()
+        self.objective_rows(thetas.iter().map(|t| t.as_slice()))
+    }
+
+    /// [`Self::objective_per_worker`] over any row iterator — the single
+    /// arithmetic implementation, shared by the `Vec<Vec<f64>>`-state
+    /// engines and the flat-[`crate::linalg::Arena`] group core (which
+    /// streams `Arena::iter` through this without materializing rows).
+    pub fn objective_rows<'b>(&self, thetas: impl Iterator<Item = &'b [f64]>) -> f64 {
+        let mut sum = 0.0;
+        let mut count = 0usize;
+        for (l, t) in self.losses.iter().zip(thetas) {
+            sum += l.value(t);
+            count += 1;
+        }
+        assert_eq!(count, self.losses.len(), "need one iterate per worker");
+        sum
     }
 
     /// Objective error `|Σ f_n(θ_n) − F*|`.

@@ -83,13 +83,13 @@ impl<'a> Cgadmm<'a> {
         self.core.chain()
     }
 
-    /// Private full-precision iterates.
-    pub fn thetas(&self) -> &[Vec<f64>] {
+    /// Private full-precision iterates, one row per worker.
+    pub fn thetas(&self) -> &crate::linalg::Arena {
         self.core.thetas()
     }
 
     /// Public (last-transmitted) models — stale on censored links.
-    pub fn hats(&self) -> &[Vec<f64>] {
+    pub fn hats(&self) -> &crate::linalg::Arena {
         self.core.hats()
     }
 
@@ -179,13 +179,13 @@ impl<'a> Cqgadmm<'a> {
         self.core.chain()
     }
 
-    /// Private full-precision iterates.
-    pub fn thetas(&self) -> &[Vec<f64>] {
+    /// Private full-precision iterates, one row per worker.
+    pub fn thetas(&self) -> &crate::linalg::Arena {
         self.core.thetas()
     }
 
     /// Public quantized models — stale on censored links.
-    pub fn hats(&self) -> &[Vec<f64>] {
+    pub fn hats(&self) -> &crate::linalg::Arena {
         self.core.hats()
     }
 

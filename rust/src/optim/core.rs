@@ -57,13 +57,31 @@
 //! construction (pinned for every engine in `rust/tests/exec_par.rs`; see
 //! `docs/adr/005-exec-backend.md`).
 
-use super::exec::{Exec, SlotSlice, SlotWriter};
-use crate::comm::{faulty_links, FaultSchedule, LinkPolicy, Meter, Msg};
+use super::exec::{ArenaSlots, Exec, SlotWriter};
+use crate::comm::{faulty_links, FaultSchedule, LinkPolicy, Meter, MsgBuf};
 use crate::linalg::vector as vec_ops;
+use crate::linalg::Arena;
 use crate::model::Problem;
 use crate::topology::chain::Chain;
 use crate::topology::graph::BipartiteGraph;
 use std::time::Instant;
+
+/// Per-execution-lane scratch for the phase task: the subproblem's linear
+/// term `q` and the warm-start snapshot of the worker's previous iterate
+/// (the prox solve writes its answer straight into the worker's arena row,
+/// so the warm start must be copied out first — `warm` and `out` may not
+/// alias, see [`crate::model::LocalLoss::prox_argmin_into`]). The serial
+/// backend owns one; each pool lane allocates its own per dispatch.
+struct LaneScratch {
+    q: Vec<f64>,
+    warm: Vec<f64>,
+}
+
+impl LaneScratch {
+    fn new(d: usize) -> LaneScratch {
+        LaneScratch { q: vec![0.0; d], warm: vec![0.0; d] }
+    }
+}
 
 pub struct GroupAdmmCore<'a> {
     problem: &'a Problem,
@@ -79,37 +97,45 @@ pub struct GroupAdmmCore<'a> {
     /// GGADMM on a non-chain graph). Chain-specific dual handling
     /// (D-GADMM re-chaining, the feasibility sweeps) requires it.
     chain: Option<Chain>,
-    /// Private full-precision primal iterate per *physical* worker.
-    theta: Vec<Vec<f64>>,
+    /// Private full-precision primal iterates, one d-row per *physical*
+    /// worker, in one flat d-strided [`Arena`] (one allocation for the
+    /// whole state — the row layout is pinned bit-identical to the old
+    /// `Vec<Vec<f64>>` because only the storage changed, never the
+    /// arithmetic; see docs/adr/008-flat-arena-and-alloc-free-hot-path.md).
+    theta: Arena,
     /// Public model per physical worker — what every neighbour (and the
     /// dual ascent) sees: the link policy's current receiver view. A
     /// broadcast link has one public view shared by all incident edges, so
     /// the per-edge receiver slots coincide and are stored once.
-    hat: Vec<Vec<f64>>,
-    /// Dual variables, one per graph edge, indexed through `lambda_slot`.
-    /// On a chain, edge `(order[p], order[p+1])` stores its dual at slot
-    /// `order[p]` — the *physical worker* at the edge's left endpoint —
-    /// so λ travels with the worker across D-GADMM re-chains (paper
-    /// eq. 90) exactly as before the graph generalization; the slot of the
-    /// last-position worker is unused (kept zero). On a general graph the
-    /// slot is simply the edge index.
-    lambda: Vec<Vec<f64>>,
+    hat: Arena,
+    /// Dual variables, one row per graph edge, indexed through
+    /// `lambda_slot`. On a chain, edge `(order[p], order[p+1])` stores its
+    /// dual at slot `order[p]` — the *physical worker* at the edge's left
+    /// endpoint — so λ travels with the worker across D-GADMM re-chains
+    /// (paper eq. 90) exactly as before the graph generalization; the slot
+    /// of the last-position worker is unused (kept zero). On a general
+    /// graph the slot is simply the edge index.
+    lambda: Arena,
     /// Edge index → `lambda` slot.
     lambda_slot: Vec<usize>,
     /// Per-worker sender-side link policy (travels with the physical
     /// worker across D-GADMM re-chains, like the dual).
     links: Vec<Box<dyn LinkPolicy>>,
+    /// Per-worker reusable wire buffer the link policy encodes into
+    /// ([`crate::comm::LinkPolicy::transmit_into`]) — the allocation-free
+    /// replacement for building a fresh [`crate::comm::Msg`] per slot.
+    bufs: Vec<MsgBuf>,
     /// Payload bits of this iteration's broadcast per worker; `None` =
     /// censored. Written in the update phases, billed in `meter_phase`.
     sent: Vec<Option<f64>>,
     /// Execution backend for the head/tail/dual phases (serial by
     /// default); see [`GroupAdmmCore::set_threads`].
     exec: Exec,
-    /// Serial-path scratch for the subproblem's linear term (zeroed per
-    /// worker inside the phase task). Pool lanes allocate their own
-    /// scratch per dispatch instead — the serial default stays at zero
-    /// per-iteration allocations, as before the backend seam.
-    scratch: Vec<f64>,
+    /// Serial-path scratch (zeroed/overwritten per worker inside the phase
+    /// task). Pool lanes allocate their own scratch per dispatch instead —
+    /// the serial default performs zero steady-state allocations per
+    /// iteration (pinned by `rust/tests/alloc_free.rs`).
+    scratch: LaneScratch,
 }
 
 impl<'a> GroupAdmmCore<'a> {
@@ -167,14 +193,15 @@ impl<'a> GroupAdmmCore<'a> {
             rho_eff: rho * problem.data_weight,
             graph,
             chain: None,
-            theta: vec![vec![0.0; d]; n],
-            hat: vec![vec![0.0; d]; n],
-            lambda: vec![vec![0.0; d]; lambda_len],
+            theta: Arena::zeros(n, d),
+            hat: Arena::zeros(n, d),
+            lambda: Arena::zeros(lambda_len, d),
             lambda_slot,
             links,
+            bufs: (0..n).map(|_| MsgBuf::new(d)).collect(),
             sent: vec![None; n],
             exec: Exec::Serial,
-            scratch: vec![0.0; d],
+            scratch: LaneScratch::new(d),
         }
     }
 
@@ -205,22 +232,22 @@ impl<'a> GroupAdmmCore<'a> {
         &self.graph
     }
 
-    /// Private full-precision iterates.
-    pub fn thetas(&self) -> &[Vec<f64>] {
+    /// Private full-precision iterates, one row per worker.
+    pub fn thetas(&self) -> &Arena {
         &self.theta
     }
 
     /// Public models (the network-wide view; equals `thetas` bit-for-bit
-    /// under dense always-transmit links).
-    pub fn hats(&self) -> &[Vec<f64>] {
+    /// under dense always-transmit links), one row per worker.
+    pub fn hats(&self) -> &Arena {
         &self.hat
     }
 
-    /// Dual variables. On a chain, indexed by physical worker — entry `w`
+    /// Dual variables. On a chain, indexed by physical worker — row `w`
     /// is the dual of the link from `w` to its current right neighbour
-    /// (the last-position worker's entry is identically zero). On a
+    /// (the last-position worker's row is identically zero). On a
     /// general graph, indexed by edge.
-    pub fn lambdas(&self) -> &[Vec<f64>] {
+    pub fn lambdas(&self) -> &Arena {
         &self.lambda
     }
 
@@ -275,17 +302,19 @@ impl<'a> GroupAdmmCore<'a> {
             let rho_eff = *rho_eff;
             let graph: &BipartiteGraph = graph;
             let lambda_slot: &[usize] = lambda_slot;
-            let hat: &[Vec<f64>] = hat;
-            let duals = SlotWriter::new(lambda);
+            let hat: &Arena = hat;
+            let duals = ArenaSlots::new(lambda);
             exec.for_each_indexed(graph.num_edges(), || (), |_, e| {
                 let (u, v) = graph.edges()[e];
                 // SAFETY: dual slots are distinct per edge (edge index on a
                 // general graph; distinct left-endpoint workers on a
-                // chain), so each task writes a unique slot and nothing
+                // chain), so each task writes a unique row and nothing
                 // else aliases `lambda` during this region.
                 let lam = unsafe { duals.slot_mut(lambda_slot[e]) };
+                let hu = hat.slot(u);
+                let hv = hat.slot(v);
                 for j in 0..d {
-                    lam[j] += rho_eff * (hat[u][j] - hat[v][j]);
+                    lam[j] += rho_eff * (hu[j] - hv[j]);
                 }
             });
         }
@@ -316,6 +345,7 @@ impl<'a> GroupAdmmCore<'a> {
             theta,
             hat,
             links,
+            bufs,
             sent,
             exec,
             scratch,
@@ -325,67 +355,72 @@ impl<'a> GroupAdmmCore<'a> {
         let rho_eff = *rho_eff;
         let problem: &Problem = *problem;
         let graph: &BipartiteGraph = graph;
-        let lambda: &[Vec<f64>] = lambda;
+        let lambda: &Arena = lambda;
         let lambda_slot: &[usize] = lambda_slot;
         let group: &[usize] = if head_phase { graph.heads() } else { graph.tails() };
-        // `hat` is the one array read *and* written within a phase (own
-        // slot written, other group's slots read), so it rides the
-        // read+write SlotSlice; everything else is write-only per task —
-        // SlotWriter, which is what lets the `Send`-but-not-`Sync` link
-        // policies cross threads.
-        let theta = SlotWriter::new(theta);
-        let hat = SlotSlice::new(hat);
+        // `theta` and `hat` are arenas, handed out as disjoint strided rows
+        // through ArenaSlots (`hat` is the one arena read *and* written
+        // within a phase: own row written, other group's rows read);
+        // everything else is write-only per task — SlotWriter, which is
+        // what lets the `Send`-but-not-`Sync` link policies cross threads.
+        let theta = ArenaSlots::new(theta);
+        let hat = ArenaSlots::new(hat);
         let links = SlotWriter::new(links);
+        let bufs = SlotWriter::new(bufs);
         let sent = SlotWriter::new(sent);
-        let task = |q: &mut Vec<f64>, i: usize| {
+        let task = |s: &mut LaneScratch, i: usize| {
             let w = group[i];
             // SAFETY: `group` lists each worker exactly once
             // (BipartiteGraph validates the head/tail partition), so
-            // slot `w` of theta/hat/links/sent is written by this task
-            // alone; every neighbour is in the *other* group (edges
+            // row/slot `w` of theta/hat/links/bufs/sent is written by this
+            // task alone; every neighbour is in the *other* group (edges
             // only join head↔tail), so the `hat` reads below never
-            // alias a slot written in this phase.
+            // alias a row written in this phase.
             unsafe {
                 let theta_w = theta.slot_mut(w);
                 let hat_w = hat.slot_mut(w);
                 let link_w = links.slot_mut(w);
+                let buf_w = bufs.slot_mut(w);
                 let sent_w = sent.slot_mut(w);
-                q.iter_mut().for_each(|x| *x = 0.0);
+                s.q.iter_mut().for_each(|x| *x = 0.0);
                 let mut couplings = 0.0;
                 for er in graph.adjacency(w) {
-                    let lam = &lambda[lambda_slot[er.edge]];
-                    let nb: &Vec<f64> = hat.slot(er.neighbor);
+                    let lam = lambda.slot(lambda_slot[er.edge]);
+                    let nb = hat.slot(er.neighbor);
                     if er.origin {
                         for j in 0..d {
-                            q[j] += lam[j] - rho_eff * nb[j];
+                            s.q[j] += lam[j] - rho_eff * nb[j];
                         }
                     } else {
                         for j in 0..d {
-                            q[j] += -lam[j] - rho_eff * nb[j];
+                            s.q[j] += -lam[j] - rho_eff * nb[j];
                         }
                     }
                     couplings += 1.0;
                 }
                 let c = rho_eff * couplings;
-                *theta_w = problem.losses[w].prox_argmin(q, c, theta_w);
-                let msg = link_w.transmit(k, theta_w);
-                *sent_w = match &msg {
-                    Msg::Skip => None,
-                    m => Some(m.payload_bits()),
-                };
+                // The prox solve writes straight into the worker's arena
+                // row, so snapshot the previous iterate first: it is both
+                // the warm start and, semantically, the old `theta_w` the
+                // allocating path passed by reference.
+                s.warm.copy_from_slice(theta_w);
+                problem.losses[w].prox_argmin_into(&s.q, c, &s.warm, theta_w);
+                link_w.transmit_into(k, theta_w, buf_w);
+                *sent_w = if buf_w.is_skip() { None } else { Some(buf_w.payload_bits()) };
                 hat_w.copy_from_slice(link_w.public_view());
             }
         };
         if matches!(&*exec, Exec::Serial) {
             // Serial fast path: reuse the engine-owned scratch, so the
-            // default backend performs zero per-phase allocations exactly
-            // like the pre-seam loop. The task zeroes the scratch per
-            // worker, so this is bit-identical to a fresh buffer.
+            // default backend performs zero per-phase allocations
+            // (pinned by `rust/tests/alloc_free.rs`). The task zeroes or
+            // fully overwrites the scratch per worker, so this is
+            // bit-identical to a fresh buffer.
             for i in 0..group.len() {
                 task(&mut *scratch, i);
             }
         } else {
-            exec.for_each_indexed(group.len(), || vec![0.0; d], &task);
+            exec.for_each_indexed(group.len(), || LaneScratch::new(d), &task);
         }
     }
 
@@ -398,14 +433,14 @@ impl<'a> GroupAdmmCore<'a> {
 
     /// The paper's objective `Σ_n f_n(θ_n^k)` at the private iterates.
     pub fn objective(&self) -> f64 {
-        self.problem.objective_per_worker(&self.theta)
+        self.problem.objective_rows(self.theta.iter())
     }
 
     /// Average consensus violation over the graph's edges, on the private
     /// iterates ([`BipartiteGraph::acv`] — along a chain this is exactly
     /// the paper's ACV).
     pub fn acv(&self) -> f64 {
-        self.graph.acv(&self.theta)
+        self.graph.acv_with(|w| self.theta.slot(w))
     }
 
     /// Replace the logical chain (D-GADMM re-chaining; chain mode only).
@@ -436,7 +471,7 @@ impl<'a> GroupAdmmCore<'a> {
     pub fn reinit_duals_for_chain(&mut self) {
         let feas = self.feasible_duals();
         for (w, f) in feas.into_iter().enumerate() {
-            self.lambda[w] = f;
+            self.lambda.slot_mut(w).copy_from_slice(&f);
         }
     }
 
@@ -453,7 +488,7 @@ impl<'a> GroupAdmmCore<'a> {
         let mut g = vec![0.0; d];
         for p in 0..n - 1 {
             let w = chain.order[p];
-            self.problem.losses[w].grad_into(&self.theta[w], &mut g);
+            self.problem.losses[w].grad_into(self.theta.slot(w), &mut g);
             for j in 0..d {
                 running[j] -= g[j];
             }
@@ -472,12 +507,13 @@ impl<'a> GroupAdmmCore<'a> {
         let n = chain.len();
         let last = chain.order[n - 1];
         for w in 0..n {
+            let lam = self.lambda.slot_mut(w);
             if w == last {
-                self.lambda[w].iter_mut().for_each(|x| *x = 0.0);
+                lam.iter_mut().for_each(|x| *x = 0.0);
                 continue;
             }
-            for j in 0..self.problem.dim {
-                self.lambda[w][j] += gamma * (feas[w][j] - self.lambda[w][j]);
+            for (l, f) in lam.iter_mut().zip(&feas[w]) {
+                *l += gamma * (f - *l);
             }
         }
     }
@@ -496,12 +532,13 @@ impl<'a> GroupAdmmCore<'a> {
         let n = chain.len();
         let last = chain.order[n - 1];
         for w in 0..n {
+            let lam = self.lambda.slot_mut(w);
             if w == last {
-                self.lambda[w].iter_mut().for_each(|x| *x = 0.0);
+                lam.iter_mut().for_each(|x| *x = 0.0);
                 continue;
             }
-            for j in 0..self.problem.dim {
-                self.lambda[w][j] += new_feas[w][j] - old_feas[w][j];
+            for (j, l) in lam.iter_mut().enumerate() {
+                *l += new_feas[w][j] - old_feas[w][j];
             }
         }
     }
@@ -513,7 +550,7 @@ impl<'a> GroupAdmmCore<'a> {
         for t in &self.theta {
             vec_ops::axpy(1.0, t, &mut mean);
         }
-        vec_ops::scale(1.0 / self.theta.len() as f64, &mut mean);
+        vec_ops::scale(1.0 / self.theta.slots() as f64, &mut mean);
         mean
     }
 
@@ -523,7 +560,7 @@ impl<'a> GroupAdmmCore<'a> {
         self.graph
             .edges()
             .iter()
-            .map(|&(u, v)| vec_ops::sub(&self.theta[u], &self.theta[v]))
+            .map(|&(u, v)| vec_ops::sub(self.theta.slot(u), self.theta.slot(v)))
             .collect()
     }
 
@@ -535,9 +572,9 @@ impl<'a> GroupAdmmCore<'a> {
     pub fn tail_dual_residual(&self) -> f64 {
         let mut worst: f64 = 0.0;
         for &w in self.graph.tails() {
-            let mut g = self.problem.losses[w].grad(&self.theta[w]);
+            let mut g = self.problem.losses[w].grad(self.theta.slot(w));
             for er in self.graph.adjacency(w) {
-                let lam = &self.lambda[self.lambda_slot[er.edge]];
+                let lam = self.lambda.slot(self.lambda_slot[er.edge]);
                 if er.origin {
                     for j in 0..g.len() {
                         g[j] += lam[j];
@@ -562,16 +599,16 @@ impl<'a> GroupAdmmCore<'a> {
         let mut v = 0.0;
         for p in 0..n - 1 {
             let w = chain.order[p];
-            v += vec_ops::dist2(&self.lambda[w], &lambda_star[p]).powi(2) / self.rho_eff;
+            v += vec_ops::dist2(self.lambda.slot(w), &lambda_star[p]).powi(2) / self.rho_eff;
         }
         for p in (0..n).step_by(2) {
             if p > 0 {
                 let left = chain.order[p - 1];
-                v += self.rho_eff * vec_ops::dist2(&self.theta[left], theta_star).powi(2);
+                v += self.rho_eff * vec_ops::dist2(self.theta.slot(left), theta_star).powi(2);
             }
             if p + 1 < n {
                 let right = chain.order[p + 1];
-                v += self.rho_eff * vec_ops::dist2(&self.theta[right], theta_star).powi(2);
+                v += self.rho_eff * vec_ops::dist2(self.theta.slot(right), theta_star).powi(2);
             }
         }
         v

@@ -155,7 +155,7 @@ impl<'a> Dgadmm<'a> {
         self.inner.chain()
     }
 
-    pub fn thetas(&self) -> &[Vec<f64>] {
+    pub fn thetas(&self) -> &crate::linalg::Arena {
         self.inner.thetas()
     }
 

@@ -41,6 +41,7 @@
 //! assert_eq!(exec.threads(), 4);
 //! ```
 
+use crate::linalg::Arena;
 use std::any::Any;
 use std::marker::PhantomData;
 use std::ops::Range;
@@ -419,6 +420,84 @@ impl<'a, T> SlotWriter<'a, T> {
     }
 }
 
+/// Strided counterpart of [`SlotSlice`] for a flat [`Arena`]: hands out
+/// the arena's *rows* as disjoint `&mut [f64]` slots — plus shared reads
+/// of the untouched rows — to concurrent tasks. This is what lets the
+/// core keep its per-worker `θ`/`θ̂`/`λ` state in one contiguous buffer
+/// (no per-row heap allocation, sequential access) while preserving the
+/// exact "each worker owns its slot" discipline the determinism argument
+/// rests on: ownership of disjoint memory, not execution order, decides
+/// the result, so any thread count produces bit-identical state.
+///
+/// The accessor contracts mirror [`SlotSlice`]: per parallel region, a row
+/// is either written by exactly one task or only read.
+pub struct ArenaSlots<'a> {
+    ptr: *mut f64,
+    slots: usize,
+    dim: usize,
+    _borrow: PhantomData<&'a mut [f64]>,
+}
+
+// SAFETY: rows are disjoint `[f64]` ranges of one buffer. Under the
+// accessor contracts each row has either one exclusive writer or only
+// shared readers per parallel region — exactly the access pattern a
+// pre-split `&mut [f64]` would permit, and `f64` is `Send + Sync`.
+unsafe impl Send for ArenaSlots<'_> {}
+unsafe impl Sync for ArenaSlots<'_> {}
+
+impl<'a> ArenaSlots<'a> {
+    /// Take exclusive ownership of `arena` for the view's lifetime.
+    pub fn new(arena: &'a mut Arena) -> ArenaSlots<'a> {
+        let slots = arena.slots();
+        let dim = arena.dim();
+        ArenaSlots {
+            ptr: arena.as_flat_mut().as_mut_ptr(),
+            slots,
+            dim,
+            _borrow: PhantomData,
+        }
+    }
+
+    /// Number of rows.
+    pub fn len(&self) -> usize {
+        self.slots
+    }
+
+    /// Whether the view has no rows.
+    pub fn is_empty(&self) -> bool {
+        self.slots == 0
+    }
+
+    /// Row dimension (the stride).
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Exclusive access to row `i`.
+    ///
+    /// # Safety
+    ///
+    /// For the duration of the current parallel region, row `i` must be
+    /// accessed by *this call's task only* — no other task may read or
+    /// write it through any accessor.
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn slot_mut(&self, i: usize) -> &mut [f64] {
+        assert!(i < self.slots, "row {i} out of bounds for {} rows", self.slots);
+        std::slice::from_raw_parts_mut(self.ptr.add(i * self.dim), self.dim)
+    }
+
+    /// Shared access to row `i`.
+    ///
+    /// # Safety
+    ///
+    /// No task may concurrently hold `slot_mut(i)` during the current
+    /// parallel region.
+    pub unsafe fn slot(&self, i: usize) -> &[f64] {
+        assert!(i < self.slots, "row {i} out of bounds for {} rows", self.slots);
+        std::slice::from_raw_parts(self.ptr.add(i * self.dim), self.dim)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -555,6 +634,37 @@ mod tests {
     /// Helper keeping the unsafe slot write in one audited place.
     unsafe fn slot_set(slots: &SlotWriter<'_, std::cell::Cell<usize>>, i: usize) {
         slots.slot_mut(i).set(i + 7);
+    }
+
+    #[test]
+    fn arena_slots_distribute_disjoint_rows_identically_at_any_width() {
+        // The strided analog of `serial_and_pool_fill_identically`: every
+        // task writes only its own arena row and reads a row no same-batch
+        // task writes, so serial and pooled execution agree bitwise.
+        let fill = |threads: usize| -> Arena {
+            let exec = Exec::new(threads);
+            let mut arena = Arena::zeros(9, 3);
+            for (i, v) in arena.as_flat_mut().iter_mut().enumerate() {
+                *v = i as f64; // seed rows so cross-row reads are visible
+            }
+            let slots = ArenaSlots::new(&mut arena);
+            assert_eq!((slots.len(), slots.dim()), (9, 3));
+            assert!(!slots.is_empty());
+            // Tasks 0..4 each write row i from a read of row i+5 — rows
+            // 5..9 are read-only in this region, rows 0..4 single-writer.
+            exec.for_each_indexed(4, || (), |_, i| unsafe {
+                let src = slots.slot(i + 5).to_vec();
+                let dst = slots.slot_mut(i);
+                for (d, s) in dst.iter_mut().zip(&src) {
+                    *d = s * 10.0 + i as f64;
+                }
+            });
+            arena
+        };
+        let serial = fill(1);
+        let pooled = fill(4);
+        assert_eq!(serial, pooled);
+        assert_eq!(serial.slot(0), &[150.0, 160.0, 170.0]);
     }
 
     #[test]

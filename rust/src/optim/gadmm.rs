@@ -64,13 +64,13 @@ impl<'a> Gadmm<'a> {
         self.core.chain()
     }
 
-    pub fn thetas(&self) -> &[Vec<f64>] {
+    pub fn thetas(&self) -> &crate::linalg::Arena {
         self.core.thetas()
     }
 
-    /// Duals indexed by physical worker (entry for the last-position worker
-    /// is identically zero).
-    pub fn lambdas(&self) -> &[Vec<f64>] {
+    /// Duals indexed by physical worker (the row for the last-position
+    /// worker is identically zero).
+    pub fn lambdas(&self) -> &crate::linalg::Arena {
         self.core.lambdas()
     }
 

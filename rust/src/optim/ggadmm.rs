@@ -110,13 +110,13 @@ impl<'a> Ggadmm<'a> {
         self.core.graph()
     }
 
-    /// Private full-precision iterates.
-    pub fn thetas(&self) -> &[Vec<f64>] {
+    /// Private full-precision iterates, one row per worker.
+    pub fn thetas(&self) -> &crate::linalg::Arena {
         self.core.thetas()
     }
 
-    /// Per-edge dual variables, indexed by graph edge.
-    pub fn lambdas(&self) -> &[Vec<f64>] {
+    /// Per-edge dual variables, one row per graph edge.
+    pub fn lambdas(&self) -> &crate::linalg::Arena {
         self.core.lambdas()
     }
 

@@ -78,13 +78,13 @@ impl<'a> Qgadmm<'a> {
         self.core.chain()
     }
 
-    /// Private full-precision iterates.
-    pub fn thetas(&self) -> &[Vec<f64>] {
+    /// Private full-precision iterates, one row per worker.
+    pub fn thetas(&self) -> &crate::linalg::Arena {
         self.core.thetas()
     }
 
-    /// Public quantized models (the network-wide view).
-    pub fn hats(&self) -> &[Vec<f64>] {
+    /// Public quantized models (the network-wide view), one row per worker.
+    pub fn hats(&self) -> &crate::linalg::Arena {
         self.core.hats()
     }
 

@@ -26,6 +26,15 @@ use std::path::{Path, PathBuf};
 /// [`service`] module provides `Send` handles in front of PJRT.
 pub trait LocalSolver {
     fn prox_argmin(&self, q: &[f64], c: f64, warm: &[f64]) -> Vec<f64>;
+
+    /// Allocation-free variant: solve into a caller-owned buffer (`warm`
+    /// and `out` may not alias). The default falls back to the allocating
+    /// path; backends whose loss supports
+    /// [`LocalLoss::prox_argmin_into`] override it so the coordinator's
+    /// steady-state iteration stays allocation-free.
+    fn prox_argmin_into(&self, q: &[f64], c: f64, warm: &[f64], out: &mut [f64]) {
+        out.copy_from_slice(&self.prox_argmin(q, c, warm));
+    }
 }
 
 /// Native backend: delegates to the loss's own solve.
@@ -42,6 +51,10 @@ impl<'a> NativeSolver<'a> {
 impl LocalSolver for NativeSolver<'_> {
     fn prox_argmin(&self, q: &[f64], c: f64, warm: &[f64]) -> Vec<f64> {
         self.loss.prox_argmin(q, c, warm)
+    }
+
+    fn prox_argmin_into(&self, q: &[f64], c: f64, warm: &[f64], out: &mut [f64]) {
+        self.loss.prox_argmin_into(q, c, warm, out);
     }
 }
 
@@ -146,6 +159,10 @@ mod tests {
         let a = solver.prox_argmin(&q, 2.0, &vec![0.0; 5]);
         let b = p.losses[0].prox_argmin(&q, 2.0, &vec![0.0; 5]);
         assert_eq!(a, b);
+        // The allocation-free variant takes the identical path.
+        let mut out = vec![f64::NAN; 5];
+        solver.prox_argmin_into(&q, 2.0, &vec![0.0; 5], &mut out);
+        assert_eq!(a, out);
     }
 
     #[test]

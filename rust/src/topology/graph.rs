@@ -207,11 +207,18 @@ impl BipartiteGraph {
     /// sequential core and the distributed coordinator report, so the two
     /// execution paths cannot drift on the metric.
     pub fn acv(&self, thetas: &[Vec<f64>]) -> f64 {
+        self.acv_with(|w| thetas[w].as_slice())
+    }
+
+    /// [`Self::acv`] against any worker-id → model-row lookup — the single
+    /// arithmetic implementation, shared by the `Vec<Vec<f64>>`-state
+    /// callers and the flat-[`crate::linalg::Arena`] group core (which
+    /// passes `|w| arena.slot(w)` without materializing rows).
+    pub fn acv_with<'a>(&self, theta: impl Fn(usize) -> &'a [f64]) -> f64 {
         let mut total = 0.0;
         for &(u, v) in &self.edges {
-            total += crate::linalg::vector::norm1(&crate::linalg::vector::sub(
-                &thetas[u], &thetas[v],
-            ));
+            total +=
+                crate::linalg::vector::norm1(&crate::linalg::vector::sub(theta(u), theta(v)));
         }
         total / self.len() as f64
     }
@@ -317,10 +324,20 @@ impl BipartiteGraph {
         if !(radius.is_finite() && radius > 0.0) {
             return Err(format!("rgg radius must be positive and finite, got {radius}"));
         }
-        // Proximity adjacency (symmetric, id-ordered).
-        let near: Vec<Vec<usize>> = (0..n)
-            .map(|a| (0..n).filter(|&b| b != a && placement.distance(a, b) <= radius).collect())
-            .collect();
+        let near = near_lists(placement, radius);
+        BipartiteGraph::random_geometric_from_near(&near, placement)
+    }
+
+    /// Build the RGG from precomputed proximity lists (one id-ascending
+    /// list per worker). Split out so the grid-bucketed [`near_lists`] and
+    /// the O(N²) test reference can feed the identical downstream pipeline —
+    /// the property test proving the bucketed generator produces the *same
+    /// graph* compares the two through this seam.
+    fn random_geometric_from_near(
+        near: &[Vec<usize>],
+        placement: &Placement,
+    ) -> Result<BipartiteGraph, String> {
+        let n = placement.len();
         // BFS 2-coloring per component; component membership in visit order.
         let mut color = vec![None::<bool>; n];
         let mut components: Vec<Vec<usize>> = Vec::new();
@@ -380,6 +397,69 @@ impl BipartiteGraph {
         let tails = (0..n).filter(|&w| color[w] == Some(false)).collect();
         BipartiteGraph::new(heads, tails, edges)
     }
+}
+
+/// Symmetric proximity lists for the RGG generator, one id-ascending list
+/// per worker, grid-bucketed so construction is O(N·deg) instead of O(N²):
+/// workers are binned into square cells at least `radius` wide, and each
+/// worker's candidates come from its own and the 8 surrounding cells only —
+/// any pair within `radius` shares a cell or sits in adjacent cells, so no
+/// neighbour is missed. Candidates still pass the exact
+/// `placement.distance(a, b) <= radius` filter and are sorted ascending,
+/// making the output byte-identical to the all-pairs scan (property-tested
+/// against [`near_lists_quadratic`]). This is what lets `gadmm scale` build
+/// RGG topologies at N in the thousands in near-linear time.
+fn near_lists(placement: &Placement, radius: f64) -> Vec<Vec<usize>> {
+    let n = placement.len();
+    let side = placement.side;
+    // Cell count per axis: floor(side/radius) keeps every cell ≥ radius
+    // wide (the 3×3 neighbourhood guarantee); capped at n so the bucket
+    // table never exceeds O(N²) entries, floored at 1 for tiny areas.
+    let dims = if side.is_finite() && side > 0.0 {
+        ((side / radius).floor() as usize).clamp(1, n.max(1))
+    } else {
+        1
+    };
+    let cell_w = side / dims as f64;
+    let cell_of = |x: f64| -> usize {
+        if cell_w > 0.0 {
+            ((x / cell_w).floor().max(0.0) as usize).min(dims - 1)
+        } else {
+            0
+        }
+    };
+    let mut buckets: Vec<Vec<usize>> = vec![Vec::new(); dims * dims];
+    for (w, &(x, y)) in placement.positions.iter().enumerate() {
+        buckets[cell_of(y) * dims + cell_of(x)].push(w);
+    }
+    (0..n)
+        .map(|a| {
+            let (x, y) = placement.positions[a];
+            let (cx, cy) = (cell_of(x), cell_of(y));
+            let mut out: Vec<usize> = Vec::new();
+            for gy in cy.saturating_sub(1)..=(cy + 1).min(dims - 1) {
+                for gx in cx.saturating_sub(1)..=(cx + 1).min(dims - 1) {
+                    for &b in &buckets[gy * dims + gx] {
+                        if b != a && placement.distance(a, b) <= radius {
+                            out.push(b);
+                        }
+                    }
+                }
+            }
+            out.sort_unstable();
+            out
+        })
+        .collect()
+}
+
+/// The original all-pairs proximity scan, kept as the oracle the bucketed
+/// [`near_lists`] is property-tested against.
+#[cfg(test)]
+fn near_lists_quadratic(placement: &Placement, radius: f64) -> Vec<Vec<usize>> {
+    let n = placement.len();
+    (0..n)
+        .map(|a| (0..n).filter(|&b| b != a && placement.distance(a, b) <= radius).collect())
+        .collect()
 }
 
 /// Serializable topology selector shared by the `ggadmm` algorithm spec and
@@ -585,6 +665,29 @@ mod tests {
         let sparse = BipartiteGraph::random_geometric(&p, 2.0).unwrap();
         let dense = BipartiteGraph::random_geometric(&p, 6.0).unwrap();
         assert!(dense.avg_degree() > sparse.avg_degree());
+    }
+
+    #[test]
+    fn bucketed_near_lists_match_the_quadratic_oracle() {
+        // Property test: across randomized placements, worker counts, and
+        // radii (including radius > side, where the grid degenerates to one
+        // cell, and tiny radii that exercise heavy stitching), the bucketed
+        // proximity scan is byte-identical to the all-pairs oracle and the
+        // downstream generator therefore produces the *same graph*.
+        for seed in 0..8u64 {
+            let mut rng = Pcg64::seeded(seed);
+            let n = 8 + 7 * seed as usize;
+            let p = Placement::random(n, 10.0, &mut rng);
+            for radius in [0.5, 1.7, 3.5, 8.0, 25.0] {
+                let fast = near_lists(&p, radius);
+                let slow = near_lists_quadratic(&p, radius);
+                assert_eq!(fast, slow, "n={n} radius={radius} seed={seed}");
+                let a = BipartiteGraph::random_geometric_from_near(&fast, &p).unwrap();
+                let b = BipartiteGraph::random_geometric_from_near(&slow, &p).unwrap();
+                assert_eq!(a, b, "n={n} radius={radius} seed={seed}");
+                assert_eq!(a, BipartiteGraph::random_geometric(&p, radius).unwrap());
+            }
+        }
     }
 
     #[test]

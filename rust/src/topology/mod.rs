@@ -95,15 +95,20 @@ impl LinkCosts for UnitCosts {
 
 /// The paper's free-space energy model (Fig. 6): energy to sustain the
 /// target rate over each link.
+///
+/// Link energies are computed per call from the stored placement — the
+/// model is O(N) to build and hold, not O(N²), so the massive-N scaling
+/// driver can stand one up at thousands of workers without materialising
+/// a pairwise table. [`tx_energy`]`(distance)` is a handful of flops, far
+/// cheaper than the meter bookkeeping around each lookup.
 #[derive(Clone, Debug)]
 pub struct EnergyCostModel {
-    /// Pairwise worker→worker energies.
-    link_energy: Vec<f64>,
-    /// Worker→server energies.
-    uplink_energy: Vec<f64>,
-    /// Server broadcast energy (max over downlinks).
+    /// Physical positions the per-call link energies derive from.
+    placement: Placement,
+    /// Central controller index (its own uplink is free).
+    server: usize,
+    /// Server broadcast energy (max over downlinks) — one O(N) pass.
     broadcast_energy: f64,
-    n: usize,
 }
 
 /// Paper constants: rate 10 Mbps, bandwidth 2 MHz, noise density 1e−6.
@@ -124,40 +129,34 @@ pub fn tx_energy(distance: f64) -> f64 {
 
 impl EnergyCostModel {
     pub fn new(placement: &Placement, server: usize) -> EnergyCostModel {
-        let n = placement.len();
-        let mut link_energy = vec![0.0; n * n];
-        for a in 0..n {
-            for b in 0..n {
-                if a != b {
-                    link_energy[a * n + b] = tx_energy(placement.distance(a, b));
-                }
-            }
-        }
-        let uplink_energy: Vec<f64> = (0..n)
-            .map(|w| {
-                if w == server {
-                    0.0
-                } else {
-                    tx_energy(placement.distance(w, server))
-                }
-            })
-            .collect();
-        let broadcast_energy = uplink_energy.iter().cloned().fold(0.0, f64::max);
+        // Broadcast is bottlenecked by the weakest downlink; the max is a
+        // run-long constant, so it is the one thing worth precomputing.
+        let broadcast_energy = (0..placement.len())
+            .filter(|&w| w != server)
+            .map(|w| tx_energy(placement.distance(w, server)))
+            .fold(0.0, f64::max);
         EnergyCostModel {
-            link_energy,
-            uplink_energy,
+            placement: placement.clone(),
+            server,
             broadcast_energy,
-            n,
         }
     }
 }
 
 impl LinkCosts for EnergyCostModel {
     fn link(&self, from: usize, to: usize) -> f64 {
-        self.link_energy[from * self.n + to]
+        if from == to {
+            0.0
+        } else {
+            tx_energy(self.placement.distance(from, to))
+        }
     }
     fn uplink(&self, n: usize) -> f64 {
-        self.uplink_energy[n]
+        if n == self.server {
+            0.0
+        } else {
+            tx_energy(self.placement.distance(n, self.server))
+        }
     }
     fn server_broadcast(&self) -> f64 {
         self.broadcast_energy
