@@ -292,4 +292,51 @@ elif [ "$rc" -ne 0 ]; then
   exit "$rc"
 fi
 
+echo "==> smoke: gadmm layers --quick (L-FGADMM layer-schedule grid -> BENCH_layers.json)"
+# Gate (all deterministic — exit 3, never retried): the report must exist
+# with >= 2 period configs, every cell's seeded replay must be
+# bit-identical (the subcommand itself also hard-fails on divergence), and
+# the acceptance headline must hold: at least one lazy period plan reaches
+# the target with strictly fewer total bits than every-round exchange.
+layers_gate() {
+  ./target/release/gadmm layers --quick --out target/ci-layers || return 3
+  test -f target/ci-layers/BENCH_layers.json || return 3
+  python3 - <<'EOF'
+import json, sys
+
+def hard(cond, msg):  # deterministic failure: never retried
+    if not cond:
+        print("layers gate (deterministic): %s" % msg)
+        sys.exit(3)
+
+with open("target/ci-layers/BENCH_layers.json") as f:
+    report = json.load(f)
+
+hard(report["experiment"] == "bench_layers", "wrong experiment %r" % report["experiment"])
+rows = report["rows"]
+hard(len(rows) >= 2, "need >= 2 period configs, got %d" % len(rows))
+
+# Reproducibility: every layer-scheduled run replays bit-identically.
+diverged = [r["periods"] for r in rows if not r["replay_identical"]]
+hard(not diverged, "layer-schedule replay diverged for: %s" % diverged)
+hard(report["all_identical"], "all_identical flag disagrees with the rows")
+
+# Acceptance headline: a lazy plan beats the every-round baseline's bits.
+base = rows[0]
+hard(base["periods"].split("-") == ["1"] * len(base["lens"]),
+     "row 0 is not the every-round baseline: %r" % base["periods"])
+hard("bits_to_target" in base, "the baseline plan did not reach the target")
+winners = [r["periods"] for r in rows[1:]
+           if "bits_to_target" in r and r["bits_to_target"] < base["bits_to_target"]]
+hard(report["bits_win"], "bits_win flag is false")
+hard(winners, "no lazy plan undercut the baseline's %s bits" % base["bits_to_target"])
+print("layers gate OK: %d plans replay bit-identical; lazy plan(s) %s beat the baseline's bits"
+      % (len(rows), winners))
+EOF
+}
+if ! layers_gate; then
+  echo "==> layers deterministic gate failed — not retrying"
+  exit 3
+fi
+
 echo "CI OK"

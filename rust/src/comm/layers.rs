@@ -1,0 +1,398 @@
+//! Layer-scheduled transmission: the L-FGADMM communication pattern.
+//!
+//! L-FGADMM (Elgabli et al., 2019) cuts communication by exchanging
+//! *large layers less often*: layer `ℓ` of a block-structured model
+//! travels only every `period_ℓ` rounds. Between transmissions every
+//! receiver keeps its last public copy of that layer — exactly the
+//! [`Msg::Skip`] semantics the censored variants already use, applied
+//! per layer instead of per model, and charged 0 bits.
+//!
+//! [`LayerScheduled`] composes over the existing [`LinkPolicy`] seam: it
+//! holds one *inner* policy per layer (dense, quantized, or censored —
+//! anything), consults the schedule `k mod period_ℓ == 0`, and assembles
+//! the due layers' encodings into one [`Msg::Layers`] broadcast. A layer
+//! that is due but censored by its inner policy is simply absent from
+//! the chunk list; a slot where nothing travels at all degenerates to
+//! [`Msg::Skip`]. Iteration 0 transmits every layer (`0 mod p == 0`), so
+//! receivers are never left with uninitialized state.
+//!
+//! The schedule is a pure function of `(k, periods)` — no data-dependent
+//! state — which is what keeps the sequential engines, the channel
+//! coordinator, and the TCP transport bit-identical for `lfgadmm:` specs
+//! (see docs/adr/009-block-layout-lfgadmm.md).
+
+use super::policy::{Censored, EverySlot, LinkPolicy};
+use super::quantize::{DenseCompressor, LayerChunk, Msg, MsgBuf, StochasticQuantizer};
+use crate::linalg::BlockLayout;
+
+/// Per-layer seed perturbation for quantized layer links (golden-ratio
+/// multiplier keeps distinct layers on distinct rounding streams).
+const LAYER_SEED_MIX: u64 = 0x9e37_79b9_7f4a_7c15;
+
+/// Shared validation for a layer plan: block lengths must be non-empty,
+/// positive, and sum to the model dimension; periods must be ≥ 1, one per
+/// block. Every entry point (spec strings, JSON, engine constructors)
+/// funnels through this so the accepted domain cannot drift.
+pub fn validate_layer_plan(lens: &[usize], periods: &[usize], dim: usize) -> Result<(), String> {
+    if lens.is_empty() {
+        return Err("layer plan needs at least one block".to_string());
+    }
+    if lens.iter().any(|&l| l == 0) {
+        return Err("layer plan blocks must be non-empty".to_string());
+    }
+    let total: usize = lens.iter().sum();
+    if total != dim {
+        return Err(format!(
+            "layer lengths sum to {total} but the model dimension is {dim}"
+        ));
+    }
+    if periods.len() != lens.len() {
+        return Err(format!(
+            "{} layers but {} periods",
+            lens.len(),
+            periods.len()
+        ));
+    }
+    if periods.iter().any(|&p| p == 0) {
+        return Err("layer periods must be ≥ 1".to_string());
+    }
+    Ok(())
+}
+
+/// Sender-side state of one worker's layer-scheduled broadcast link.
+pub struct LayerScheduled {
+    layout: BlockLayout,
+    periods: Vec<usize>,
+    /// One inner policy per layer, operating on that layer's flat slice.
+    inner: Vec<Box<dyn LinkPolicy>>,
+    /// Assembled full-dimension public view: per layer, what receivers
+    /// currently hold (fresh where transmitted, stale elsewhere).
+    view: Vec<f64>,
+}
+
+impl LayerScheduled {
+    pub fn new(
+        layout: BlockLayout,
+        periods: Vec<usize>,
+        inner: Vec<Box<dyn LinkPolicy>>,
+    ) -> LayerScheduled {
+        if let Err(e) = validate_layer_plan(layout.lens(), &periods, layout.dim()) {
+            panic!("{e}");
+        }
+        assert_eq!(inner.len(), layout.num_blocks(), "one inner policy per layer");
+        for (l, link) in inner.iter().enumerate() {
+            assert_eq!(
+                link.public_view().len(),
+                layout.len(l),
+                "inner policy {l} sized for the wrong layer"
+            );
+        }
+        let view = vec![0.0; layout.dim()];
+        LayerScheduled { layout, periods, inner, view }
+    }
+
+    /// Whether layer `l` is scheduled for transmission at iteration `k`.
+    pub fn due(&self, k: usize, l: usize) -> bool {
+        k % self.periods[l] == 0
+    }
+
+    pub fn layout(&self) -> &BlockLayout {
+        &self.layout
+    }
+
+    pub fn periods(&self) -> &[usize] {
+        &self.periods
+    }
+}
+
+impl LinkPolicy for LayerScheduled {
+    fn describe(&self) -> String {
+        let parts: Vec<String> = (0..self.layout.num_blocks())
+            .map(|l| format!("{}@{}:{}", self.layout.len(l), self.periods[l], self.inner[l].describe()))
+            .collect();
+        format!("layers({})", parts.join(","))
+    }
+
+    /// Wire size with every layer transmitted (the k = 0 slot); scheduled
+    /// slots are smaller, and the meter reads the per-slot truth off each
+    /// message.
+    fn message_bits(&self) -> f64 {
+        self.inner.iter().map(|p| p.message_bits()).sum()
+    }
+
+    fn transmit(&mut self, k: usize, model: &[f64]) -> Msg {
+        assert_eq!(model.len(), self.layout.dim(), "model does not match layout dim");
+        let mut chunks = Vec::new();
+        for l in 0..self.layout.num_blocks() {
+            if k % self.periods[l] != 0 {
+                continue;
+            }
+            let msg = self.inner[l].transmit(k, self.layout.block(model, l));
+            self.view[self.layout.range(l)].copy_from_slice(self.inner[l].public_view());
+            if !msg.is_skip() {
+                chunks.push(LayerChunk { offset: self.layout.offset(l), msg });
+            }
+        }
+        if chunks.is_empty() {
+            Msg::Skip
+        } else {
+            Msg::Layers(chunks)
+        }
+    }
+
+    /// Same schedule, same inner calls, same state advance as
+    /// [`LinkPolicy::transmit`], writing into the reusable buffer: due
+    /// layers are pushed as chunks, inner-censored ones retracted, and a
+    /// chunkless slot degenerates to a skip.
+    fn transmit_into(&mut self, k: usize, model: &[f64], out: &mut MsgBuf) {
+        assert_eq!(model.len(), self.layout.dim(), "model does not match layout dim");
+        out.begin_layers();
+        for l in 0..self.layout.num_blocks() {
+            if k % self.periods[l] != 0 {
+                continue;
+            }
+            let censored = {
+                let chunk = out.push_layer(self.layout.offset(l));
+                self.inner[l].transmit_into(k, self.layout.block(model, l), chunk);
+                chunk.is_skip()
+            };
+            if censored {
+                out.retract_layer();
+            }
+            self.view[self.layout.range(l)].copy_from_slice(self.inner[l].public_view());
+        }
+        if out.num_layers() == 0 {
+            out.set_skip();
+        }
+    }
+
+    fn public_view(&self) -> &[f64] {
+        &self.view
+    }
+}
+
+/// Build per-layer inner policies for all `n` workers via `mk(worker,
+/// layer, layer_len)` and wrap them in [`LayerScheduled`].
+fn build_links(
+    layout: &BlockLayout,
+    periods: &[usize],
+    n: usize,
+    mk: impl Fn(usize, usize, usize) -> Box<dyn LinkPolicy>,
+) -> Vec<Box<dyn LinkPolicy>> {
+    (0..n)
+        .map(|w| {
+            let inner: Vec<Box<dyn LinkPolicy>> = (0..layout.num_blocks())
+                .map(|l| mk(w, l, layout.len(l)))
+                .collect();
+            Box::new(LayerScheduled::new(layout.clone(), periods.to_vec(), inner))
+                as Box<dyn LinkPolicy>
+        })
+        .collect()
+}
+
+/// Dense layer-scheduled links for all `n` workers (L-FGADMM).
+pub fn layer_dense_links(
+    layout: &BlockLayout,
+    periods: &[usize],
+    n: usize,
+) -> Vec<Box<dyn LinkPolicy>> {
+    build_links(layout, periods, n, |_, _, len| {
+        Box::new(EverySlot::new(Box::new(DenseCompressor::new(len))))
+    })
+}
+
+/// Quantized layer-scheduled links: layer `l` of worker `w` quantizes on
+/// its own `(seed, w, l)` rounding stream, so sequential and distributed
+/// runs stay bit-identical per layer.
+pub fn layer_quant_links(
+    layout: &BlockLayout,
+    periods: &[usize],
+    n: usize,
+    bits: u32,
+    seed: u64,
+) -> Vec<Box<dyn LinkPolicy>> {
+    build_links(layout, periods, n, |w, l, len| {
+        let layer_seed = seed.wrapping_add((l as u64).wrapping_mul(LAYER_SEED_MIX));
+        Box::new(EverySlot::new(Box::new(StochasticQuantizer::for_worker(
+            len, bits, layer_seed, w,
+        ))))
+    })
+}
+
+/// Censored dense layer-scheduled links: each layer carries its own
+/// decaying censor gate over the layer slice.
+pub fn layer_censored_dense_links(
+    layout: &BlockLayout,
+    periods: &[usize],
+    n: usize,
+    tau: f64,
+    mu: f64,
+) -> Vec<Box<dyn LinkPolicy>> {
+    build_links(layout, periods, n, |_, _, len| {
+        Box::new(Censored::new(Box::new(DenseCompressor::new(len)), tau, mu))
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::quantize::Decoder;
+    use crate::comm::FP64_BITS;
+    use crate::util::rng::Pcg64;
+
+    fn dense_link(lens: Vec<usize>, periods: Vec<usize>) -> LayerScheduled {
+        let layout = BlockLayout::new(lens);
+        let inner: Vec<Box<dyn LinkPolicy>> = layout
+            .lens()
+            .iter()
+            .map(|&len| {
+                Box::new(EverySlot::new(Box::new(DenseCompressor::new(len))))
+                    as Box<dyn LinkPolicy>
+            })
+            .collect();
+        LayerScheduled::new(layout, periods, inner)
+    }
+
+    #[test]
+    fn validate_layer_plan_domains() {
+        assert!(validate_layer_plan(&[3, 2], &[1, 2], 5).is_ok());
+        assert!(validate_layer_plan(&[], &[], 0).is_err());
+        assert!(validate_layer_plan(&[3, 0], &[1, 1], 3).is_err());
+        assert!(validate_layer_plan(&[3, 2], &[1, 1], 6).is_err());
+        assert!(validate_layer_plan(&[3, 2], &[1], 5).is_err());
+        assert!(validate_layer_plan(&[3, 2], &[1, 0], 5).is_err());
+    }
+
+    #[test]
+    fn schedule_transmits_every_layer_at_k0_and_by_period_after() {
+        let mut link = dense_link(vec![2, 3], vec![1, 2]);
+        assert!(link.due(0, 0) && link.due(0, 1), "all layers due at k=0");
+        let model = [1.0, 2.0, 3.0, 4.0, 5.0];
+        match link.transmit(0, &model) {
+            Msg::Layers(chunks) => {
+                assert_eq!(chunks.len(), 2);
+                assert_eq!(chunks[0].offset, 0);
+                assert_eq!(chunks[1].offset, 2);
+                assert_eq!(chunks[1].msg, Msg::Dense(vec![3.0, 4.0, 5.0]));
+            }
+            other => panic!("expected layered message, got {other:?}"),
+        }
+        assert_eq!(link.public_view(), model.as_slice());
+        // k=1: only layer 0 (period 1) travels; layer 1 goes stale.
+        let model2 = [9.0, 8.0, 7.0, 6.0, 5.0];
+        let msg = link.transmit(1, &model2);
+        assert_eq!(msg.payload_bits(), 2.0 * FP64_BITS);
+        assert_eq!(link.public_view(), &[9.0, 8.0, 3.0, 4.0, 5.0]);
+        // k=2: both due again.
+        let msg = link.transmit(2, &model2);
+        assert_eq!(msg.payload_bits(), 5.0 * FP64_BITS);
+        assert_eq!(link.public_view(), model2.as_slice());
+    }
+
+    #[test]
+    fn receiver_decoder_tracks_assembled_view() {
+        let mut link = dense_link(vec![2, 2], vec![1, 3]);
+        let mut dec = Decoder::new(4);
+        let mut rng = Pcg64::seeded(7);
+        for k in 0..10 {
+            let model = rng.normal_vec(4);
+            let msg = link.transmit(k, &model);
+            dec.apply(&msg);
+            assert_eq!(dec.view(), link.public_view(), "k={k}");
+        }
+    }
+
+    #[test]
+    fn transmit_into_matches_transmit_bitwise() {
+        let layout = vec![3, 2, 1];
+        let periods = vec![1, 2, 3];
+        let mut a = dense_link(layout.clone(), periods.clone());
+        let mut b = dense_link(layout, periods);
+        let mut buf = MsgBuf::new(0);
+        let mut rng = Pcg64::seeded(13);
+        for k in 0..12 {
+            let model = rng.normal_vec(6);
+            let msg = a.transmit(k, &model);
+            b.transmit_into(k, &model, &mut buf);
+            assert_eq!(buf.to_msg(), msg, "k={k}");
+            assert_eq!(buf.payload_bits(), msg.payload_bits(), "k={k}");
+            assert_eq!(a.public_view(), b.public_view(), "views diverged at k={k}");
+        }
+    }
+
+    #[test]
+    fn censored_layer_is_absent_and_all_censored_slot_skips() {
+        // Inner censors with a huge threshold: every due layer is censored
+        // until the threshold decays, so early slots are pure skips.
+        let layout = BlockLayout::new(vec![2, 2]);
+        let inner: Vec<Box<dyn LinkPolicy>> = vec![
+            Box::new(Censored::new(Box::new(DenseCompressor::new(2)), 1e9, 0.5)),
+            Box::new(EverySlot::new(Box::new(DenseCompressor::new(2)))),
+        ];
+        let mut link = LayerScheduled::new(layout, vec![1, 2], inner);
+        // k=0: layer 0 censored, layer 1 transmits → one chunk.
+        let msg = link.transmit(0, &[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(msg.payload_bits(), 2.0 * FP64_BITS);
+        assert_eq!(link.public_view(), &[0.0, 0.0, 3.0, 4.0]);
+        // k=1: only layer 0 due, censored → the slot degenerates to Skip.
+        let msg = link.transmit(1, &[1.0, 2.0, 3.0, 4.0]);
+        assert!(msg.is_skip());
+        assert_eq!(msg.payload_bits(), 0.0);
+        // Allocation-free path agrees.
+        let mut buf = MsgBuf::new(0);
+        link.transmit_into(2, &[1.0, 2.0, 3.0, 4.0], &mut buf);
+        assert!(buf.is_skip());
+    }
+
+    #[test]
+    fn quantized_layers_stay_on_distinct_streams() {
+        let layout = BlockLayout::new(vec![2, 2]);
+        let links = layer_quant_links(&layout, &[1, 1], 2, 8, 5);
+        assert_eq!(links.len(), 2);
+        let mut link = links.into_iter().next().unwrap();
+        let msg = link.transmit(0, &[0.5, -0.5, 1.5, -1.5]);
+        match msg {
+            Msg::Layers(chunks) => {
+                assert_eq!(chunks.len(), 2);
+                for c in &chunks {
+                    assert!(matches!(c.msg, Msg::Quantized(_)));
+                }
+                // d·b + range overhead per chunk.
+                let bits: f64 = chunks.iter().map(|c| c.msg.payload_bits()).sum();
+                assert_eq!(bits, 2.0 * (2.0 * 8.0 + 64.0));
+            }
+            other => panic!("expected layered message, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn single_block_period_one_has_whole_model_bits() {
+        // The degeneracy the refactor pins rely on: one block, period 1
+        // transmits the full model every slot at dense cost.
+        let mut link = dense_link(vec![4], vec![1]);
+        for k in 0..5 {
+            let model = [k as f64; 4];
+            let msg = link.transmit(k, &model);
+            assert_eq!(msg.payload_bits(), 4.0 * FP64_BITS);
+            assert_eq!(link.public_view(), model.as_slice());
+        }
+    }
+
+    #[test]
+    fn factories_build_one_link_per_worker() {
+        let layout = BlockLayout::new(vec![3, 2]);
+        assert_eq!(layer_dense_links(&layout, &[1, 2], 4).len(), 4);
+        assert_eq!(layer_censored_dense_links(&layout, &[1, 2], 6, 1.0, 0.9).len(), 6);
+        let links = layer_quant_links(&layout, &[1, 2], 2, 4, 3);
+        assert_eq!(links[0].message_bits(), (3.0 * 4.0 + 64.0) + (2.0 * 4.0 + 64.0));
+        assert!(links[0].describe().starts_with("layers(3@1:q4,2@2:q4"));
+    }
+
+    #[test]
+    #[should_panic(expected = "does not match layout dim")]
+    fn wrong_dimension_rejected() {
+        // Layout of dim 5; transmitting a dim-6 model must panic.
+        let mut link = dense_link(vec![3, 2], vec![1, 1]);
+        let _ = link.transmit(0, &[0.0; 6]);
+    }
+}

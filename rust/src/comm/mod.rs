@@ -23,18 +23,23 @@
 //! indistinguishable from a censored one to the meter: 0 TC, 0 bits).
 
 pub mod fault;
+pub mod layers;
 pub mod policy;
 pub mod quantize;
 
 pub use fault::{
     faulty_links, validate_fault_rate, CrashWindow, FaultSchedule, FaultyLink, PartitionWindow,
 };
+pub use layers::{
+    layer_censored_dense_links, layer_dense_links, layer_quant_links, validate_layer_plan,
+    LayerScheduled,
+};
 pub use policy::{
     censored_dense_links, censored_quant_links, dense_links, quant_links, validate_censor_params,
     CensorSchedule, Censored, EverySlot, LinkPolicy,
 };
 pub use quantize::{
-    Compressor, Decoder, DenseCompressor, Msg, MsgBuf, MsgBufKind, QuantizedMsg,
+    Compressor, Decoder, DenseCompressor, LayerChunk, Msg, MsgBuf, MsgBufKind, QuantizedMsg,
     StochasticQuantizer, FP64_BITS, RANGE_OVERHEAD_BITS,
 };
 

@@ -84,6 +84,19 @@ impl QuantizedMsg {
     }
 }
 
+/// One layer's slice of a layered broadcast ([`Msg::Layers`]): an inner
+/// payload applied at a flat `offset` into the receiver's mirror. The
+/// inner message is [`Msg::Dense`] or [`Msg::Quantized`] — never another
+/// `Layers`, and never `Skip` (a stale or censored layer is simply absent
+/// from the chunk list).
+#[derive(Clone, Debug, PartialEq)]
+pub struct LayerChunk {
+    /// Flat offset of this layer in the model vector.
+    pub offset: usize,
+    /// The layer's encoded payload.
+    pub msg: Msg,
+}
+
 /// A wire message on the model-exchange path.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Msg {
@@ -91,6 +104,12 @@ pub enum Msg {
     Dense(Vec<f64>),
     /// Q-GADMM quantized difference from the previously transmitted model.
     Quantized(QuantizedMsg),
+    /// L-FGADMM layered broadcast: only the scheduled (and uncensored)
+    /// layers travel, each as an independently encoded chunk at its flat
+    /// offset. Receivers keep their cached view of every absent layer —
+    /// per-layer `Skip` semantics. Payload bits are the sum of the chunks;
+    /// the untransmitted remainder of the model costs nothing.
+    Layers(Vec<LayerChunk>),
     /// Censored slot: the sender's model change fell under its censoring
     /// threshold, so nothing occupies the medium. Receivers keep their
     /// cached view of the sender (C-GADMM / CQ-GADMM semantics). In the
@@ -105,6 +124,7 @@ impl Msg {
         match self {
             Msg::Dense(v) => v.len() as f64 * FP64_BITS,
             Msg::Quantized(q) => q.payload_bits(),
+            Msg::Layers(chunks) => chunks.iter().map(|c| c.msg.payload_bits()).sum(),
             Msg::Skip => 0.0,
         }
     }
@@ -120,6 +140,7 @@ impl Msg {
 pub enum MsgBufKind {
     Dense,
     Quantized,
+    Layers,
     Skip,
 }
 
@@ -140,6 +161,13 @@ pub struct MsgBuf {
     qrange: f64,
     qbits: u32,
     levels: Vec<u32>,
+    /// Reusable per-layer chunk buffers for [`MsgBufKind::Layers`]:
+    /// `(flat offset, inner buffer)`. Only the first `layers_active`
+    /// entries are live; the rest keep their capacity for reuse. Grows
+    /// only while a new high-water mark of simultaneous layers is seen —
+    /// iteration 0 transmits every layer, so steady state never grows it.
+    layers: Vec<(usize, MsgBuf)>,
+    layers_active: usize,
 }
 
 impl MsgBuf {
@@ -152,6 +180,8 @@ impl MsgBuf {
             qrange: 0.0,
             qbits: 0,
             levels: vec![0; dim],
+            layers: Vec::new(),
+            layers_active: 0,
         }
     }
 
@@ -172,6 +202,10 @@ impl MsgBuf {
             MsgBufKind::Quantized => {
                 self.levels.len() as f64 * self.qbits as f64 + RANGE_OVERHEAD_BITS
             }
+            MsgBufKind::Layers => self.layers[..self.layers_active]
+                .iter()
+                .map(|(_, b)| b.payload_bits())
+                .sum(),
             MsgBufKind::Skip => 0.0,
         }
     }
@@ -205,6 +239,42 @@ impl MsgBuf {
         &mut self.levels
     }
 
+    /// Rewrite as a layered payload with no chunks yet; fill with
+    /// [`MsgBuf::push_layer`]. Existing chunk buffers keep their capacity.
+    pub fn begin_layers(&mut self) {
+        self.kind = MsgBufKind::Layers;
+        self.layers_active = 0;
+    }
+
+    /// Append one layer chunk at flat `offset` and return its inner buffer
+    /// for the encoder to fill. Reuses a retired chunk buffer when one is
+    /// available; allocates only at a new high-water mark of simultaneous
+    /// layers (iteration 0 of a layered schedule, when every layer is due).
+    pub fn push_layer(&mut self, offset: usize) -> &mut MsgBuf {
+        debug_assert_eq!(self.kind, MsgBufKind::Layers);
+        if self.layers_active == self.layers.len() {
+            self.layers.push((offset, MsgBuf::new(0)));
+        }
+        let slot = &mut self.layers[self.layers_active];
+        slot.0 = offset;
+        self.layers_active += 1;
+        &mut slot.1
+    }
+
+    /// Discard the most recently pushed layer chunk (the inner policy
+    /// censored it); its buffer is retained for reuse.
+    pub fn retract_layer(&mut self) {
+        debug_assert_eq!(self.kind, MsgBufKind::Layers);
+        debug_assert!(self.layers_active > 0);
+        self.layers_active -= 1;
+    }
+
+    /// Number of live layer chunks (valid after [`MsgBuf::begin_layers`]).
+    pub fn num_layers(&self) -> usize {
+        debug_assert_eq!(self.kind, MsgBufKind::Layers);
+        self.layers_active
+    }
+
     /// Copy an owned [`Msg`] into the buffer — the default-impl bridge for
     /// third-party compressors that only implement the allocating path.
     pub fn set_msg(&mut self, msg: &Msg) {
@@ -213,6 +283,12 @@ impl MsgBuf {
             Msg::Quantized(q) => {
                 self.begin_quantized(q.range, q.bits_per_coord, q.levels.len());
                 self.levels.copy_from_slice(&q.levels);
+            }
+            Msg::Layers(chunks) => {
+                self.begin_layers();
+                for c in chunks {
+                    self.push_layer(c.offset).set_msg(&c.msg);
+                }
             }
             Msg::Skip => self.set_skip(),
         }
@@ -228,6 +304,12 @@ impl MsgBuf {
                 bits_per_coord: self.qbits,
                 levels: self.levels.clone(),
             }),
+            MsgBufKind::Layers => Msg::Layers(
+                self.layers[..self.layers_active]
+                    .iter()
+                    .map(|(off, b)| LayerChunk { offset: *off, msg: b.to_msg() })
+                    .collect(),
+            ),
             MsgBufKind::Skip => Msg::Skip,
         }
     }
@@ -430,7 +512,9 @@ impl Decoder {
 
     /// Apply one message and return the sender's current public model.
     /// A censored slot ([`Msg::Skip`]) leaves the cached view untouched —
-    /// exactly what a receiver that heard nothing would do.
+    /// exactly what a receiver that heard nothing would do. A layered
+    /// message updates only the flat ranges its chunks cover; every stale
+    /// layer keeps the cached view, per-layer `Skip` semantics.
     pub fn apply(&mut self, msg: &Msg) -> &[f64] {
         match msg {
             Msg::Dense(v) => {
@@ -438,6 +522,22 @@ impl Decoder {
             }
             Msg::Quantized(q) => {
                 q.decode_into(&mut self.prev);
+            }
+            Msg::Layers(chunks) => {
+                for c in chunks {
+                    match &c.msg {
+                        Msg::Dense(v) => {
+                            self.prev[c.offset..c.offset + v.len()].copy_from_slice(v);
+                        }
+                        Msg::Quantized(q) => {
+                            q.decode_into(&mut self.prev[c.offset..c.offset + q.levels.len()]);
+                        }
+                        Msg::Skip => {}
+                        Msg::Layers(_) => {
+                            panic!("nested layered messages are not supported")
+                        }
+                    }
+                }
             }
             Msg::Skip => {}
         }
@@ -592,6 +692,78 @@ mod tests {
         buf.set_skip();
         assert!(buf.is_skip());
         assert_eq!(buf.payload_bits(), 0.0);
+    }
+
+    #[test]
+    fn layered_msg_bits_sum_chunks() {
+        let msg = Msg::Layers(vec![
+            LayerChunk { offset: 0, msg: Msg::Dense(vec![1.0, 2.0, 3.0]) },
+            LayerChunk {
+                offset: 5,
+                msg: Msg::Quantized(QuantizedMsg {
+                    range: 0.5,
+                    bits_per_coord: 4,
+                    levels: vec![1, 2],
+                }),
+            },
+        ]);
+        assert_eq!(msg.payload_bits(), 3.0 * FP64_BITS + 2.0 * 4.0 + RANGE_OVERHEAD_BITS);
+        assert!(!msg.is_skip());
+        assert_eq!(Msg::Layers(vec![]).payload_bits(), 0.0);
+    }
+
+    #[test]
+    fn decoder_applies_layer_chunks_at_offsets_only() {
+        let mut d = Decoder::new(6);
+        d.apply(&Msg::Dense(vec![9.0; 6]));
+        // Chunk covering [1, 3): the rest of the mirror must stay cached.
+        let msg = Msg::Layers(vec![LayerChunk {
+            offset: 1,
+            msg: Msg::Dense(vec![1.0, 2.0]),
+        }]);
+        assert_eq!(d.apply(&msg), &[9.0, 1.0, 2.0, 9.0, 9.0, 9.0]);
+        // A quantized chunk decodes against the cached slice.
+        let mut q = StochasticQuantizer::new(2, 8, 3);
+        // Anchor the quantizer at the mirror's current [4, 6) slice.
+        let _ = q.encode(&[9.0, 9.0]);
+        let qm = q.encode(&[7.0, 8.0]);
+        let view = q.public_view().to_vec();
+        d.apply(&Msg::Layers(vec![LayerChunk { offset: 4, msg: Msg::Quantized(qm) }]));
+        assert_eq!(&d.view()[4..6], view.as_slice());
+        assert_eq!(&d.view()[..4], &[9.0, 1.0, 2.0, 9.0]);
+    }
+
+    #[test]
+    fn msg_buf_layers_roundtrip_and_reuse() {
+        let mut buf = MsgBuf::new(0);
+        buf.begin_layers();
+        buf.push_layer(0).set_dense(&[1.0, 2.0]);
+        buf.push_layer(7).set_dense(&[3.0]);
+        assert_eq!(buf.num_layers(), 2);
+        assert_eq!(buf.kind(), MsgBufKind::Layers);
+        assert_eq!(buf.payload_bits(), 3.0 * FP64_BITS);
+        let msg = buf.to_msg();
+        assert_eq!(msg.payload_bits(), buf.payload_bits());
+        // Round-trip through set_msg preserves structure.
+        let mut buf2 = MsgBuf::new(0);
+        buf2.set_msg(&msg);
+        assert_eq!(buf2.to_msg(), msg);
+        // Retract drops the last chunk; reuse rewrites in place.
+        buf.retract_layer();
+        assert_eq!(buf.num_layers(), 1);
+        assert_eq!(buf.payload_bits(), 2.0 * FP64_BITS);
+        buf.begin_layers();
+        assert_eq!(buf.num_layers(), 0);
+        assert_eq!(buf.payload_bits(), 0.0);
+        buf.push_layer(4).set_dense(&[5.0, 6.0, 7.0]);
+        match buf.to_msg() {
+            Msg::Layers(chunks) => {
+                assert_eq!(chunks.len(), 1);
+                assert_eq!(chunks[0].offset, 4);
+                assert_eq!(chunks[0].msg, Msg::Dense(vec![5.0, 6.0, 7.0]));
+            }
+            other => panic!("expected layered message, got {other:?}"),
+        }
     }
 
     #[test]

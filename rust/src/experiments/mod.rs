@@ -35,6 +35,11 @@
 //!   per-phase µs/iteration, peak RSS, replay + serial-vs-pool
 //!   determinism columns; see `docs/PERFORMANCE.md` and
 //!   `docs/adr/008-flat-arena-and-alloc-free-hot-path.md`)
+//! * [`layers::run`]   — the L-FGADMM layer-schedule grid behind
+//!   `gadmm layers` (`BENCH_layers.json`: period plans on the
+//!   block-structured MLP, per-layer bits breakdown, replay determinism
+//!   and the lazy-plan bits win; see
+//!   `docs/adr/009-block-layout-lfgadmm.md`)
 
 pub mod bench;
 pub mod censor;
@@ -44,6 +49,7 @@ pub mod fig6;
 pub mod fig7;
 pub mod fig8;
 pub mod graph;
+pub mod layers;
 pub mod netbench;
 pub mod qgadmm;
 pub mod scale;

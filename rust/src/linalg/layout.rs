@@ -1,0 +1,131 @@
+//! Block structure over a flat parameter vector.
+//!
+//! The model layer stores every worker's parameters as one contiguous
+//! `d`-slice inside an [`super::Arena`] — the allocation-free hot path
+//! depends on that flatness. Deep models are nevertheless *layered*:
+//! L-FGADMM (Elgabli et al., 2019) exchanges large layers less often than
+//! small ones, and per-layer compression composes censoring/quantization
+//! blockwise. A [`BlockLayout`] is the bridge: a list of `(offset, len)`
+//! blocks tiling `0..dim`, so layer-aware code slices the flat vector
+//! without the state ever leaving the arena. See
+//! docs/adr/009-block-layout-lfgadmm.md.
+
+/// Contiguous, exhaustive partition of a flat `dim`-vector into blocks
+/// ("layers"). Block `ℓ` occupies `offset(ℓ) .. offset(ℓ) + len(ℓ)`;
+/// blocks are stored in order and tile the vector exactly.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct BlockLayout {
+    lens: Vec<usize>,
+    offsets: Vec<usize>,
+}
+
+impl BlockLayout {
+    /// Layout from block lengths; offsets are the exclusive prefix sums.
+    /// Every block must be non-empty.
+    pub fn new(lens: Vec<usize>) -> BlockLayout {
+        assert!(!lens.is_empty(), "layout needs at least one block");
+        assert!(lens.iter().all(|&l| l > 0), "layout blocks must be non-empty");
+        let mut offsets = Vec::with_capacity(lens.len());
+        let mut off = 0usize;
+        for &l in &lens {
+            offsets.push(off);
+            off += l;
+        }
+        BlockLayout { lens, offsets }
+    }
+
+    /// The blockless layout: one block covering the whole vector. This is
+    /// what flat models (linreg/logreg) carry, and what every layer-aware
+    /// code path must degenerate to exactly (the pin tests rely on it).
+    pub fn single(dim: usize) -> BlockLayout {
+        BlockLayout::new(vec![dim])
+    }
+
+    /// Number of blocks.
+    pub fn num_blocks(&self) -> usize {
+        self.lens.len()
+    }
+
+    /// Total dimension (sum of block lengths).
+    pub fn dim(&self) -> usize {
+        self.offsets.last().unwrap() + self.lens.last().unwrap()
+    }
+
+    /// Length of block `l`.
+    pub fn len(&self, l: usize) -> usize {
+        self.lens[l]
+    }
+
+    /// Starting offset of block `l` in the flat vector.
+    pub fn offset(&self, l: usize) -> usize {
+        self.offsets[l]
+    }
+
+    /// Block lengths in order.
+    pub fn lens(&self) -> &[usize] {
+        &self.lens
+    }
+
+    /// The half-open flat range of block `l`.
+    pub fn range(&self, l: usize) -> std::ops::Range<usize> {
+        self.offsets[l]..self.offsets[l] + self.lens[l]
+    }
+
+    /// Slice block `l` out of a flat vector.
+    pub fn block<'v>(&self, v: &'v [f64], l: usize) -> &'v [f64] {
+        &v[self.range(l)]
+    }
+
+    /// Mutable slice of block `l` in a flat vector.
+    pub fn block_mut<'v>(&self, v: &'v mut [f64], l: usize) -> &'v mut [f64] {
+        &mut v[self.range(l)]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn offsets_are_prefix_sums() {
+        let lay = BlockLayout::new(vec![48, 6, 6, 1]);
+        assert_eq!(lay.num_blocks(), 4);
+        assert_eq!(lay.dim(), 61);
+        assert_eq!(lay.offset(0), 0);
+        assert_eq!(lay.offset(1), 48);
+        assert_eq!(lay.offset(2), 54);
+        assert_eq!(lay.offset(3), 60);
+        assert_eq!(lay.range(2), 54..60);
+        assert_eq!(lay.lens(), &[48, 6, 6, 1]);
+    }
+
+    #[test]
+    fn single_covers_everything() {
+        let lay = BlockLayout::single(7);
+        assert_eq!(lay.num_blocks(), 1);
+        assert_eq!(lay.dim(), 7);
+        assert_eq!(lay.range(0), 0..7);
+    }
+
+    #[test]
+    fn block_slicing() {
+        let lay = BlockLayout::new(vec![2, 3]);
+        let mut v = vec![1.0, 2.0, 3.0, 4.0, 5.0];
+        assert_eq!(lay.block(&v, 0), &[1.0, 2.0]);
+        assert_eq!(lay.block(&v, 1), &[3.0, 4.0, 5.0]);
+        lay.block_mut(&mut v, 1)[0] = 9.0;
+        assert_eq!(v[2], 9.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "non-empty")]
+    fn empty_block_rejected() {
+        let _ = BlockLayout::new(vec![3, 0, 2]);
+    }
+
+    #[test]
+    #[should_panic(expected = "at least one block")]
+    fn empty_layout_rejected() {
+        let _ = BlockLayout::new(vec![]);
+    }
+}

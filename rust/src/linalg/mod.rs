@@ -6,9 +6,11 @@
 
 pub mod arena;
 pub mod cholesky;
+pub mod layout;
 pub mod matrix;
 pub mod vector;
 
 pub use arena::Arena;
 pub use cholesky::{solve_spd, Cholesky, FactorError};
+pub use layout::BlockLayout;
 pub use matrix::Matrix;

@@ -28,6 +28,9 @@
 //!              — writes BENCH_net.json (in-process vs localhost processes)
 //! gadmm scale [--quick] [--out results/]
 //!              — writes BENCH_scale.json (massive-N chain/RGG scaling sweep)
+//! gadmm layers [--quick] [--out results/]
+//!              — writes BENCH_layers.json (L-FGADMM layer-schedule grid
+//!                on the block-structured MLP)
 //! gadmm all   — every table and figure, reports under results/
 //! ```
 
@@ -35,8 +38,8 @@ use gadmm::config::{validate_quant_bits, DatasetKind, RunConfig};
 use gadmm::coordinator;
 use gadmm::data::partition_even;
 use gadmm::experiments::{
-    bench, censor, chaos, curves, fig6, fig7, fig8, graph, netbench, qgadmm, scale, table1,
-    write_report, write_trace_csv,
+    bench, censor, chaos, curves, fig6, fig7, fig8, graph, layers, netbench, qgadmm, scale,
+    table1, write_report, write_trace_csv,
 };
 use gadmm::net;
 use gadmm::model::Problem;
@@ -327,6 +330,21 @@ fn dispatch(sub: &str, args: &Args) -> Result<(), String> {
                     "scale sweep diverged across replay or pool reruns — the hot path lost \
                      determinism"
                         .into(),
+                );
+            }
+            Ok(())
+        }
+        "layers" => {
+            let quick = args.flag("quick");
+            let seed = args.get_u64("seed", 1)?;
+            let out = layers::run(quick, seed);
+            println!("{}", out.rendered);
+            let path = write_report(&out_dir(args), "BENCH_layers", &out.report)
+                .map_err(|e| e.to_string())?;
+            println!("report: {}", path.display());
+            if !out.all_identical() {
+                return Err(
+                    "layer-schedule replay diverged — L-FGADMM lost determinism".into()
                 );
             }
             Ok(())
@@ -804,6 +822,10 @@ subcommands:
   scale    massive-N scaling sweep -> BENCH_scale.json (chain + RGG
            ladders to N=4096, wall + per-phase us/iteration, peak RSS,
            replay and serial-vs-pool determinism columns; --quick for CI)
+  layers   L-FGADMM layer-schedule grid on the block-structured MLP ->
+           BENCH_layers.json (period plans, per-layer bits breakdown,
+           replay determinism, lazy-plan bits win; --quick for CI; specs
+           accept 'lfgadmm:rho=5,layers=48-6-6-1,periods=2-1-1-1')
   all      every table/figure above (train/sweep/bench/chaos/serve/
            netbench excluded); JSON reports under results/
 

@@ -1,0 +1,444 @@
+//! Hand-coded two-layer perceptron — the repo's first block-structured,
+//! genuinely nonconvex workload (the L-FGADMM target model).
+//!
+//! Architecture, on a flat parameter vector `θ` of dimension
+//! `H·I + H + H + 1` with the natural [`BlockLayout`] `[H·I, H, H, 1]`:
+//!
+//! ```text
+//!   h   = tanh(W1·x + b1 + c0)       W1: H×I (block 0)   b1: H (block 1)
+//!   out = W2ᵀ·h + b2                 W2: H   (block 2)   b2: 1 (block 3)
+//!   f(θ) = w · Σ_i (out_i − y_i)²
+//! ```
+//!
+//! `c0` is a *fixed* per-unit offset inside the activation — part of the
+//! architecture, not a parameter. It matters because the engines
+//! zero-initialize: at `θ = 0` a plain tanh MLP sits on a saddle where
+//! every gradient except `b2`'s vanishes identically (all hidden units
+//! are zero and interchangeable), so no first-order method ever leaves
+//! it. Seed-derived offsets break both the saddle and the hidden-unit
+//! permutation symmetry.
+//!
+//! The data is teacher-student and noiseless (`y = f(x; θ_teacher)`
+//! exactly), so the global optimum is known by construction: `F* = 0` at
+//! `θ* = θ_teacher` — the same objective-error metric the convex
+//! workloads use, with no reference solve (there is no closed form and
+//! no convex Newton path for this loss).
+//!
+//! Forward/backward are explicit per-sample loops, like logreg's damped
+//! Newton path — no autodiff. The canonical prox subproblem
+//! `argmin f(θ) + ⟨q,θ⟩ + (c/2)‖θ‖²` has no closed form; it is solved by
+//! gradient descent with Armijo backtracking in a per-worker workspace,
+//! warm-started from the current iterate. The solver keeps no state
+//! across calls (unlike logreg's stale-Hessian anchor), so replays that
+//! share one loss instance are exact.
+
+use super::{LocalLoss, Problem};
+use crate::data::{partition_even, Dataset, Task};
+use crate::linalg::{vector as vec_ops, BlockLayout, Matrix};
+use crate::util::rng::Pcg64;
+
+/// RNG stream tag for MLP problem generation ("mlp").
+const MLP_STREAM: u64 = 0x6d_6c70;
+
+/// Default architecture of [`mlp_problem`]: 8 inputs → 6 tanh units → 1.
+pub const MLP_INPUT_DIM: usize = 8;
+pub const MLP_HIDDEN_DIM: usize = 6;
+
+/// Teacher weight scale and fixed-offset range for [`mlp_problem`].
+const TEACHER_SCALE: f64 = 0.7;
+const C0_SCALE: f64 = 0.8;
+
+/// Prox GD: tolerance on `‖∇φ‖`, iteration caps, Armijo constants.
+const PROX_TOL: f64 = 1e-9;
+const PROX_MAX_ITERS: usize = 80;
+const PROX_MAX_BACKTRACKS: usize = 40;
+const ARMIJO_C: f64 = 1e-4;
+/// Accepted steps grow the next trial stepsize by this factor, so the
+/// solver recovers from an overly conservative curvature estimate.
+const STEP_GROWTH: f64 = 1.5;
+
+/// Worker-local MLP squared loss `f(θ) = w·Σ_i (mlp(x_i; θ) − y_i)²`.
+#[derive(Debug)]
+pub struct MlpLoss {
+    x: Matrix,
+    y: Vec<f64>,
+    /// Fixed per-unit activation offsets (length `H`) — architecture, not
+    /// parameters; shared by every worker and by the teacher.
+    c0: Vec<f64>,
+    input_dim: usize,
+    hidden_dim: usize,
+    /// Normalization weight `w` on the data term (the library uses
+    /// `1/m_total`).
+    weight: f64,
+    /// Curvature heuristic for the GD stepsize (see [`MlpLoss::smoothness`]).
+    smoothness: f64,
+    /// Reusable GD buffers: one worker's loss is solved by exactly one
+    /// phase task at a time, so the lock is uncontended; holding the
+    /// buffers here makes the steady-state prox allocation-free.
+    workspace: std::sync::Mutex<Workspace>,
+}
+
+/// Scratch for one prox solve: sized lazily on first use, then reused.
+#[derive(Debug, Default)]
+struct Workspace {
+    /// Per-sample hidden activations (length `H`).
+    hidden: Vec<f64>,
+    grad: Vec<f64>,
+    cand: Vec<f64>,
+}
+
+impl MlpLoss {
+    /// `x`: `m × I` features, `y`: length-`m` real targets, `c0`: length-`H`
+    /// fixed offsets, `w`: shared normalization weight.
+    pub fn new(x: Matrix, y: Vec<f64>, c0: Vec<f64>, w: f64) -> MlpLoss {
+        assert_eq!(x.rows, y.len());
+        assert!(!c0.is_empty(), "need at least one hidden unit");
+        assert!(w > 0.0);
+        let (input_dim, hidden_dim) = (x.cols, c0.len());
+        // Curvature heuristic: `|∂out/∂θ|² ≤ ~(1 + ‖x‖²)` per sample (tanh
+        // and its derivative are bounded by 1), so the Gauss–Newton part of
+        // the Hessian is bounded by `2w·Σ(1 + ‖x_i‖²)` up to O(1) factors.
+        // Good enough for an initial 1/L stepsize; Armijo does the rest.
+        let smoothness = 2.0
+            * w
+            * (0..x.rows)
+                .map(|i| 1.0 + vec_ops::norm2_sq(x.row(i)))
+                .sum::<f64>();
+        MlpLoss {
+            x,
+            y,
+            c0,
+            input_dim,
+            hidden_dim,
+            weight: w,
+            smoothness,
+            workspace: std::sync::Mutex::new(Workspace::default()),
+        }
+    }
+
+    pub fn from_shard(shard: &crate::data::Shard, c0: &[f64], w: f64) -> MlpLoss {
+        MlpLoss::new(shard.features.clone(), shard.targets.clone(), c0.to_vec(), w)
+    }
+
+    /// The natural per-tensor layout `[H·I, H, H, 1]` of this architecture.
+    pub fn layout(&self) -> BlockLayout {
+        mlp_layout(self.input_dim, self.hidden_dim)
+    }
+
+    /// One sample's forward pass: fills `hidden` (length `H`) and returns
+    /// the scalar output. `theta` is the flat parameter vector.
+    #[inline]
+    fn forward_sample(&self, theta: &[f64], xi: &[f64], hidden: &mut [f64]) -> f64 {
+        let (i_dim, h) = (self.input_dim, self.hidden_dim);
+        let w1 = &theta[..h * i_dim];
+        let b1 = &theta[h * i_dim..h * i_dim + h];
+        let w2 = &theta[h * i_dim + h..h * i_dim + 2 * h];
+        let b2 = theta[h * i_dim + 2 * h];
+        for u in 0..h {
+            let z = vec_ops::dot(&w1[u * i_dim..(u + 1) * i_dim], xi) + b1[u] + self.c0[u];
+            hidden[u] = z.tanh();
+        }
+        vec_ops::dot(w2, hidden) + b2
+    }
+
+    /// `f(θ)` with the hidden buffer supplied by the caller — the
+    /// allocation-free form of [`LocalLoss::value`] the GD line search uses.
+    fn value_ws(&self, theta: &[f64], hidden: &mut Vec<f64>) -> f64 {
+        hidden.resize(self.hidden_dim, 0.0);
+        let mut sum = 0.0;
+        for i in 0..self.x.rows {
+            let e = self.forward_sample(theta, self.x.row(i), hidden) - self.y[i];
+            sum += e * e;
+        }
+        self.weight * sum
+    }
+
+    /// `∇f(θ)` into `grad` — explicit backward pass, per sample:
+    /// `ce = 2w·e`, `gW2 += ce·h`, `gb2 += ce`,
+    /// `dh_u = ce·W2_u·(1 − h_u²)`, `gW1_u += dh_u·x`, `gb1_u += dh_u`.
+    fn grad_ws(&self, theta: &[f64], grad: &mut [f64], hidden: &mut Vec<f64>) {
+        let (i_dim, h) = (self.input_dim, self.hidden_dim);
+        hidden.resize(h, 0.0);
+        grad.iter_mut().for_each(|g| *g = 0.0);
+        let w2 = &theta[h * i_dim + h..h * i_dim + 2 * h];
+        for i in 0..self.x.rows {
+            let xi = self.x.row(i);
+            let out = self.forward_sample(theta, xi, hidden);
+            let ce = 2.0 * self.weight * (out - self.y[i]);
+            let (gw1, rest) = grad.split_at_mut(h * i_dim);
+            let (gb1, rest) = rest.split_at_mut(h);
+            let (gw2, gb2) = rest.split_at_mut(h);
+            gb2[0] += ce;
+            for u in 0..h {
+                let hu = hidden[u];
+                gw2[u] += ce * hu;
+                let dh = ce * w2[u] * (1.0 - hu * hu);
+                vec_ops::axpy(dh, xi, &mut gw1[u * i_dim..(u + 1) * i_dim]);
+                gb1[u] += dh;
+            }
+        }
+    }
+
+    /// Subproblem objective `φ(θ) = f(θ) + ⟨q,θ⟩ + (c/2)‖θ‖²`.
+    fn phi_ws(&self, theta: &[f64], q: &[f64], c: f64, hidden: &mut Vec<f64>) -> f64 {
+        self.value_ws(theta, hidden)
+            + vec_ops::dot(q, theta)
+            + 0.5 * c * vec_ops::norm2_sq(theta)
+    }
+}
+
+impl LocalLoss for MlpLoss {
+    fn dim(&self) -> usize {
+        self.hidden_dim * self.input_dim + 2 * self.hidden_dim + 1
+    }
+
+    fn num_samples(&self) -> usize {
+        self.x.rows
+    }
+
+    fn value(&self, theta: &[f64]) -> f64 {
+        let mut ws = self.workspace.lock().unwrap();
+        self.value_ws(theta, &mut ws.hidden)
+    }
+
+    fn grad_into(&self, theta: &[f64], out: &mut [f64]) {
+        let mut ws = self.workspace.lock().unwrap();
+        self.grad_ws(theta, out, &mut ws.hidden)
+    }
+
+    /// Curvature *heuristic*, not a certified Lipschitz bound (the loss is
+    /// nonconvex): the Gauss–Newton scale `2w·Σ(1 + ‖x_i‖²)`. Used for the
+    /// initial prox stepsize; line searches guard the slack.
+    fn smoothness(&self) -> f64 {
+        self.smoothness
+    }
+
+    fn add_hessian(&self, _theta: &[f64], _out: &mut Matrix) {
+        unimplemented!(
+            "MlpLoss has no Hessian path: the nonconvex MLP workload never \
+             routes through the convex reference solver (F* = 0 by teacher-\
+             student construction)"
+        );
+    }
+
+    fn prox_argmin(&self, q: &[f64], c: f64, warm: &[f64]) -> Vec<f64> {
+        let mut out = vec![0.0; self.dim()];
+        self.prox_argmin_into(q, c, warm, &mut out);
+        out
+    }
+
+    /// Gradient descent with Armijo backtracking on
+    /// `φ(θ) = f(θ) + ⟨q,θ⟩ + (c/2)‖θ‖²`, warm-started from the current
+    /// iterate. Initial stepsize `1/(c + L_heur)`; accepted steps grow the
+    /// trial stepsize by [`STEP_GROWTH`], rejected trials halve it (up to
+    /// [`PROX_MAX_BACKTRACKS`] halvings — a full failure means the step is
+    /// numerically negligible and the solve stops). All per-step vectors
+    /// live in the loss's reusable [`Workspace`], so the steady-state prox
+    /// performs zero heap allocations.
+    fn prox_argmin_into(&self, q: &[f64], c: f64, warm: &[f64], out: &mut [f64]) {
+        let d = self.dim();
+        debug_assert_eq!(out.len(), d);
+        out.copy_from_slice(warm);
+        let mut ws_guard = self.workspace.lock().unwrap();
+        let ws = &mut *ws_guard;
+        ws.grad.resize(d, 0.0);
+        ws.cand.resize(d, 0.0);
+        let Workspace { hidden, grad, cand } = ws;
+        let mut alpha = 1.0 / (c + self.smoothness);
+        let mut f_cur = self.phi_ws(out, q, c, hidden);
+        for _ in 0..PROX_MAX_ITERS {
+            self.grad_ws(out, grad, hidden);
+            for i in 0..d {
+                grad[i] += q[i] + c * out[i];
+            }
+            let gn2 = vec_ops::norm2_sq(grad);
+            if gn2.sqrt() < PROX_TOL {
+                break;
+            }
+            let mut a = alpha;
+            let mut accepted = false;
+            for _ in 0..PROX_MAX_BACKTRACKS {
+                for i in 0..d {
+                    cand[i] = out[i] - a * grad[i];
+                }
+                let f_new = self.phi_ws(cand, q, c, hidden);
+                if f_new <= f_cur - ARMIJO_C * a * gn2 {
+                    out.copy_from_slice(cand);
+                    f_cur = f_new;
+                    alpha = a * STEP_GROWTH;
+                    accepted = true;
+                    break;
+                }
+                a *= 0.5;
+            }
+            if !accepted {
+                break;
+            }
+        }
+    }
+}
+
+/// The natural per-tensor layout of the `I → H → 1` architecture.
+pub fn mlp_layout(input_dim: usize, hidden_dim: usize) -> BlockLayout {
+    BlockLayout::new(vec![hidden_dim * input_dim, hidden_dim, hidden_dim, 1])
+}
+
+/// Build the teacher-student MLP problem: `m` standard-normal inputs
+/// through a seed-derived teacher network (weights `~0.7·N(0,1)`, fixed
+/// offsets `c0 ~ U(−0.8, 0.8)` shared with the students), split evenly
+/// over `n_workers`. Noiseless targets make the optimum exact:
+/// `θ* = θ_teacher`, `F* = 0`.
+pub fn mlp_problem(m: usize, n_workers: usize, seed: u64) -> Problem {
+    let (i_dim, h_dim) = (MLP_INPUT_DIM, MLP_HIDDEN_DIM);
+    let layout = mlp_layout(i_dim, h_dim);
+    let dim = layout.dim();
+    let mut rng = Pcg64::new(seed, MLP_STREAM);
+    let c0: Vec<f64> = (0..h_dim).map(|_| rng.uniform(-C0_SCALE, C0_SCALE)).collect();
+    let teacher: Vec<f64> = (0..dim).map(|_| TEACHER_SCALE * rng.normal()).collect();
+    let mut features = Matrix::zeros(m, i_dim);
+    for v in features.data.iter_mut() {
+        *v = rng.normal();
+    }
+    // Noiseless teacher targets, evaluated with the same forward pass the
+    // students use (one throwaway loss over the full set).
+    let full = MlpLoss::new(features.clone(), vec![0.0; m], c0.clone(), 1.0);
+    let mut hidden = vec![0.0; h_dim];
+    let targets: Vec<f64> = (0..m)
+        .map(|i| full.forward_sample(&teacher, features.row(i), &mut hidden))
+        .collect();
+    let ds = Dataset {
+        name: format!("mlp{i_dim}x{h_dim}-m{m}"),
+        task: Task::LinearRegression,
+        features,
+        targets,
+    };
+    let w = 1.0 / m as f64;
+    let losses: Vec<Box<dyn LocalLoss>> = partition_even(&ds, n_workers)
+        .iter()
+        .map(|s| Box::new(MlpLoss::from_shard(s, &c0, w)) as Box<dyn LocalLoss>)
+        .collect();
+    Problem {
+        name: format!("{}-N{}", ds.name, n_workers),
+        task: Task::LinearRegression,
+        losses,
+        dim,
+        layout,
+        theta_star: teacher,
+        f_star: 0.0,
+        data_weight: w,
+        logreg_mu: 0.0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::prox_residual;
+
+    fn sample_loss(m: usize, seed: u64) -> (MlpLoss, Vec<f64>) {
+        let mut rng = Pcg64::seeded(seed);
+        let (i_dim, h_dim) = (4, 3);
+        let c0: Vec<f64> = (0..h_dim).map(|_| rng.uniform(-0.8, 0.8)).collect();
+        let dim = h_dim * i_dim + 2 * h_dim + 1;
+        let teacher: Vec<f64> = (0..dim).map(|_| 0.7 * rng.normal()).collect();
+        let mut x = Matrix::zeros(m, i_dim);
+        for v in x.data.iter_mut() {
+            *v = rng.normal();
+        }
+        let probe = MlpLoss::new(x.clone(), vec![0.0; m], c0.clone(), 1.0);
+        let mut hidden = vec![0.0; h_dim];
+        let y: Vec<f64> = (0..m)
+            .map(|i| probe.forward_sample(&teacher, x.row(i), &mut hidden))
+            .collect();
+        (MlpLoss::new(x, y, c0, 1.0 / m as f64), teacher)
+    }
+
+    #[test]
+    fn value_is_zero_at_teacher_and_positive_elsewhere() {
+        let (loss, teacher) = sample_loss(30, 1);
+        assert!(loss.value(&teacher) < 1e-24);
+        let zero = vec![0.0; loss.dim()];
+        assert!(loss.value(&zero) > 1e-3, "targets should not be trivially zero");
+    }
+
+    #[test]
+    fn gradient_is_nonzero_at_origin() {
+        // The whole point of the fixed c0 offsets: θ = 0 (the engines'
+        // initialization) must not be a stationary point of any block.
+        let (loss, _) = sample_loss(30, 2);
+        let g = loss.grad(&vec![0.0; loss.dim()]);
+        let lay = loss.layout();
+        for l in 0..lay.num_blocks() {
+            let bn = vec_ops::norm2(lay.block(&g, l));
+            assert!(bn > 1e-10, "block {l} gradient vanished at the origin: {bn}");
+        }
+    }
+
+    #[test]
+    fn grad_matches_finite_difference() {
+        let (loss, _) = sample_loss(20, 3);
+        let mut rng = Pcg64::seeded(4);
+        let theta: Vec<f64> = (0..loss.dim()).map(|_| 0.5 * rng.normal()).collect();
+        let g = loss.grad(&theta);
+        let eps = 1e-6;
+        for j in 0..loss.dim() {
+            let mut tp = theta.clone();
+            tp[j] += eps;
+            let mut tm = theta.clone();
+            tm[j] -= eps;
+            let fd = (loss.value(&tp) - loss.value(&tm)) / (2.0 * eps);
+            assert!(
+                (g[j] - fd).abs() < 1e-6 * (1.0 + fd.abs()),
+                "j={j}: {} vs {fd}",
+                g[j]
+            );
+        }
+    }
+
+    #[test]
+    fn prox_reaches_first_order_optimality() {
+        let (loss, _) = sample_loss(40, 5);
+        let mut rng = Pcg64::seeded(6);
+        for c in [0.5, 2.0] {
+            let q: Vec<f64> = (0..loss.dim()).map(|_| 0.1 * rng.normal()).collect();
+            let theta = loss.prox_argmin(&q, c, &vec![0.0; loss.dim()]);
+            let r = prox_residual(&loss, &theta, &q, c);
+            assert!(r < 1e-6, "residual {r} at c={c}");
+        }
+    }
+
+    #[test]
+    fn prox_into_is_bitwise_the_allocating_path() {
+        let (loss, _) = sample_loss(40, 7);
+        let q = vec![0.05; loss.dim()];
+        let warm = vec![0.0; loss.dim()];
+        let alloc = loss.prox_argmin(&q, 1.0, &warm);
+        let mut out = vec![f64::NAN; loss.dim()];
+        loss.prox_argmin_into(&q, 1.0, &warm, &mut out);
+        assert_eq!(alloc, out);
+    }
+
+    #[test]
+    fn problem_builder_shapes_and_optimum() {
+        let p = mlp_problem(80, 4, 9);
+        assert_eq!(p.num_workers(), 4);
+        assert_eq!(p.dim, MLP_HIDDEN_DIM * MLP_INPUT_DIM + 2 * MLP_HIDDEN_DIM + 1);
+        assert_eq!(p.layout.lens(), &[48, 6, 6, 1]);
+        assert_eq!(p.layout.dim(), p.dim);
+        assert_eq!(p.f_star, 0.0);
+        // Teacher parameters are the exact optimum of the noiseless fit.
+        assert!(p.objective(&p.theta_star) < 1e-22);
+        let mut g = vec![0.0; p.dim];
+        p.global_grad(&p.theta_star, &mut g);
+        assert!(vec_ops::norm2(&g) < 1e-10);
+    }
+
+    #[test]
+    fn problem_builder_is_deterministic() {
+        let a = mlp_problem(40, 2, 11);
+        let b = mlp_problem(40, 2, 11);
+        assert_eq!(a.theta_star, b.theta_star);
+        let probe = vec![0.1; a.dim];
+        assert_eq!(a.objective(&probe).to_bits(), b.objective(&probe).to_bits());
+    }
+}

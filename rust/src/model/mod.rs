@@ -14,10 +14,12 @@
 
 pub mod linreg;
 pub mod logreg;
+pub mod mlp;
 pub mod problem;
 
 pub use linreg::LinRegLoss;
 pub use logreg::LogRegLoss;
+pub use mlp::{mlp_layout, mlp_problem, MlpLoss};
 pub use problem::Problem;
 
 /// A worker-local, closed, proper, convex loss `f_n`.

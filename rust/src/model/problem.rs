@@ -2,7 +2,7 @@
 
 use super::{LinRegLoss, LocalLoss, LogRegLoss};
 use crate::data::{partition_even, Dataset, Task};
-use crate::linalg::vector as vec_ops;
+use crate::linalg::{vector as vec_ops, BlockLayout};
 
 /// Default ridge coefficient per worker for logistic regression (makes θ*
 /// unique; part of the objective for every algorithm).
@@ -16,6 +16,11 @@ pub struct Problem {
     pub task: Task,
     pub losses: Vec<Box<dyn LocalLoss>>,
     pub dim: usize,
+    /// Block structure of the flat parameter vector: a single full-width
+    /// block for the flat models (linreg/logreg), the natural per-tensor
+    /// blocks for layered models (MLP). Layer-aware code (L-FGADMM, the
+    /// `gadmm layers` driver) reads this; everything else ignores it.
+    pub layout: BlockLayout,
     pub theta_star: Vec<f64>,
     pub f_star: f64,
     /// Shared data-term normalization weight (1/m_total) — needed by the
@@ -55,6 +60,7 @@ impl Problem {
             task: ds.task,
             losses,
             dim,
+            layout: BlockLayout::single(dim),
             theta_star,
             f_star,
             data_weight: w,

@@ -21,7 +21,7 @@
 //! to a byte boundary), a censored slot zero. The `payload_bits_exact`
 //! test pins this against [`Msg::payload_bits`].
 
-use crate::comm::{Msg, QuantizedMsg};
+use crate::comm::{LayerChunk, Msg, QuantizedMsg};
 use crate::coordinator::worker::Report;
 use crate::session::AlgoSpec;
 use crate::util::json::{self, Json};
@@ -259,6 +259,43 @@ impl Frame {
                         )
                     }
                     Msg::Skip => (h.set("kind", "skip"), Vec::new()),
+                    Msg::Layers(chunks) => {
+                        // Per-chunk metadata in the header, chunk payloads
+                        // concatenated byte-aligned in wire order. Each
+                        // chunk reuses the dense/quant encodings above, so
+                        // floats stay binary end to end here too.
+                        let mut meta = Vec::with_capacity(chunks.len());
+                        let mut payload = Vec::new();
+                        for c in chunks {
+                            let m = Json::obj().set("off", c.offset);
+                            match &c.msg {
+                                Msg::Dense(v) => {
+                                    meta.push(m.set("kind", "dense").set("n", v.len()));
+                                    payload.extend_from_slice(&f64s_to_bytes(v));
+                                }
+                                Msg::Quantized(q) => {
+                                    meta.push(
+                                        m.set("kind", "quant")
+                                            .set("bits", q.bits_per_coord as usize)
+                                            .set("n", q.levels.len()),
+                                    );
+                                    payload.extend_from_slice(&q.range.to_le_bytes());
+                                    payload.extend_from_slice(&pack_levels(
+                                        &q.levels,
+                                        q.bits_per_coord,
+                                    ));
+                                }
+                                // A skip chunk carries no payload; the link
+                                // layer never emits one but the codec stays
+                                // total over the Msg type.
+                                Msg::Skip => meta.push(m.set("kind", "skip")),
+                                Msg::Layers(_) => {
+                                    panic!("nested layered messages are not supported")
+                                }
+                            }
+                        }
+                        (h.set("kind", "layers").set("chunks", Json::Arr(meta)), payload)
+                    }
                 }
             }
             Frame::ReportFrame(r) => {
@@ -358,6 +395,56 @@ impl Frame {
                         Msg::Quantized(QuantizedMsg { range, bits_per_coord: bits, levels })
                     }
                     "skip" => Msg::Skip,
+                    "layers" => {
+                        let metas = header
+                            .get("chunks")
+                            .and_then(Json::as_arr)
+                            .ok_or("layers model missing 'chunks'")?;
+                        let mut chunks = Vec::with_capacity(metas.len());
+                        let mut pos = 0usize;
+                        for m in metas {
+                            let offset = usize_field(m, "off")?;
+                            let msg = match str_field(m, "kind")? {
+                                "dense" => {
+                                    let n = usize_field(m, "n")?;
+                                    let end = pos + n * 8;
+                                    let bytes = payload
+                                        .get(pos..end)
+                                        .ok_or("layer chunk overruns its payload")?;
+                                    pos = end;
+                                    Msg::Dense(bytes_to_f64s(bytes)?)
+                                }
+                                "quant" => {
+                                    let n = usize_field(m, "n")?;
+                                    let bits = usize_field(m, "bits")? as u32;
+                                    if !(1..=32).contains(&bits) {
+                                        return Err(format!("quantized bits {bits} out of range"));
+                                    }
+                                    let end = pos + 8 + (n * bits as usize).div_ceil(8);
+                                    let bytes = payload
+                                        .get(pos..end)
+                                        .ok_or("layer chunk overruns its payload")?;
+                                    pos = end;
+                                    let range =
+                                        f64::from_le_bytes(bytes[..8].try_into().expect("8 bytes"));
+                                    let levels = unpack_levels(&bytes[8..], bits, n)?;
+                                    Msg::Quantized(QuantizedMsg { range, bits_per_coord: bits, levels })
+                                }
+                                "skip" => Msg::Skip,
+                                other => {
+                                    return Err(format!("unknown layer chunk kind '{other}'"))
+                                }
+                            };
+                            chunks.push(LayerChunk { offset, msg });
+                        }
+                        if pos != payload.len() {
+                            return Err(format!(
+                                "layers payload has {} trailing bytes",
+                                payload.len() - pos
+                            ));
+                        }
+                        Msg::Layers(chunks)
+                    }
                     other => return Err(format!("unknown model kind '{other}'")),
                 };
                 Ok(Frame::Model { from, k, msg })
@@ -517,6 +604,52 @@ mod tests {
             Frame::Model { msg: Msg::Quantized(back), .. } => assert_eq!(back, q),
             other => panic!("wrong frame back: {other:?}"),
         }
+    }
+
+    #[test]
+    fn layered_model_roundtrips_bit_transparent() {
+        // A mixed layered broadcast: dense chunk, quantized chunk, and a
+        // skip chunk, at non-contiguous offsets. Floats must survive the
+        // wire bitwise, like the flat dense path.
+        let msg = Msg::Layers(vec![
+            LayerChunk {
+                offset: 0,
+                msg: Msg::Dense(vec![f64::MIN_POSITIVE / 2.0, -0.0, 1.0 + f64::EPSILON]),
+            },
+            LayerChunk {
+                offset: 7,
+                msg: Msg::Quantized(QuantizedMsg {
+                    range: 0.37,
+                    bits_per_coord: 3,
+                    levels: vec![0, 7, 5, 1, 6], // 15 bits → padded to 2 bytes
+                }),
+            },
+            LayerChunk { offset: 12, msg: Msg::Skip },
+        ]);
+        let f = Frame::Model { from: 2, k: 5, msg: msg.clone() };
+        match roundtrip(&f) {
+            Frame::Model { from, k, msg: back } => {
+                assert_eq!(from, 2);
+                assert_eq!(k, 5);
+                assert_eq!(back, msg);
+                match (&back, &msg) {
+                    (Msg::Layers(a), Msg::Layers(b)) => match (&a[0].msg, &b[0].msg) {
+                        (Msg::Dense(x), Msg::Dense(y)) => {
+                            for (xi, yi) in x.iter().zip(y) {
+                                assert_eq!(xi.to_bits(), yi.to_bits());
+                            }
+                        }
+                        _ => panic!("first chunk should stay dense"),
+                    },
+                    _ => panic!("layered message should stay layered"),
+                }
+            }
+            other => panic!("wrong frame back: {other:?}"),
+        }
+        // Truncating the payload is InvalidData, not a panic.
+        let bytes = f.encode();
+        let mut cursor = &bytes[..bytes.len() - 1];
+        assert!(read_frame(&mut cursor).is_err());
     }
 
     #[test]

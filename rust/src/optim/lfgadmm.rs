@@ -1,0 +1,252 @@
+//! L-FGADMM — layer-wise GADMM over block-structured models.
+//!
+//! The follow-up paper (Elgabli et al., "L-FGADMM: Layer-Wise Federated
+//! Group ADMM", 2019) observes that in deep models the per-round payload
+//! is dominated by a few large layers, and that GADMM's chain structure
+//! survives exchanging *each layer on its own clock*: layer `ℓ` travels
+//! every `period_ℓ` rounds, and between transmissions every neighbour
+//! keeps its last public copy of that layer — the same stale-public-view
+//! mechanics the censored variants use, applied per layer and charged
+//! 0 bits.
+//!
+//! This engine is [`GroupAdmmCore`] with [`LayerScheduled`] dense links
+//! ([`crate::comm::layer_dense_links`]): the head/tail/dual arithmetic is
+//! untouched, duals integrate the *public* disagreement every round (so
+//! sequential, channel, and TCP runs stay bit-identical — the distributed
+//! workers never need to know the schedule of their neighbours), and the
+//! meter bills exactly the layers on the wire. With a single block at
+//! period 1 it degenerates to [`super::Gadmm`] bit-for-bit (pinned in
+//! `rust/tests/refactor_pin.rs`).
+//!
+//! **Stability regime.** Stale layers inject a perturbation the dual
+//! ascent re-integrates every round; empirically periods ∈ {1, 2} (the
+//! paper's every-other-round regime for the largest layer) converge,
+//! while period ≥ 3 on a majority of the mass diverges for every ρ we
+//! tried. The `gadmm layers` driver and docs/EXPERIMENTS.md quantify
+//! this; the spec grammar still accepts any period ≥ 1.
+
+use super::core::GroupAdmmCore;
+use super::Engine;
+use crate::comm::{layer_dense_links, Meter};
+use crate::linalg::BlockLayout;
+use crate::model::Problem;
+use crate::topology::chain::Chain;
+
+/// Render a layer plan the way the spec grammar writes it:
+/// `layers=48-6-6-1,periods=1-2-1-1`.
+pub fn layer_plan_string(lens: &[usize], periods: &[usize]) -> String {
+    let join = |xs: &[usize]| {
+        xs.iter().map(|x| x.to_string()).collect::<Vec<_>>().join("-")
+    };
+    format!("layers={},periods={}", join(lens), join(periods))
+}
+
+pub struct Lfgadmm<'a> {
+    core: GroupAdmmCore<'a>,
+    lens: Vec<usize>,
+    periods: Vec<usize>,
+}
+
+impl<'a> Lfgadmm<'a> {
+    /// L-FGADMM with an explicit block layout and per-layer periods, on
+    /// the identity chain. Panics unless the layout tiles `problem.dim`
+    /// and carries one period ≥ 1 per block (the
+    /// [`crate::comm::validate_layer_plan`] domain).
+    pub fn new(
+        problem: &'a Problem,
+        rho: f64,
+        layout: BlockLayout,
+        periods: Vec<usize>,
+    ) -> Lfgadmm<'a> {
+        let chain = Chain::sequential(problem.num_workers());
+        Lfgadmm::with_chain(problem, rho, layout, periods, chain)
+    }
+
+    /// L-FGADMM on an explicit logical chain.
+    pub fn with_chain(
+        problem: &'a Problem,
+        rho: f64,
+        layout: BlockLayout,
+        periods: Vec<usize>,
+        chain: Chain,
+    ) -> Lfgadmm<'a> {
+        assert_eq!(
+            layout.dim(),
+            problem.dim,
+            "layer plan is for dimension {} but the problem has {}",
+            layout.dim(),
+            problem.dim
+        );
+        let links = layer_dense_links(&layout, &periods, problem.num_workers());
+        Lfgadmm {
+            lens: layout.lens().to_vec(),
+            periods,
+            core: GroupAdmmCore::new(problem, rho, chain, links),
+        }
+    }
+
+    /// L-FGADMM on the problem's own block structure ([`Problem::layout`])
+    /// — the natural per-tensor blocks for the MLP, a single full-width
+    /// block for the flat models.
+    pub fn on_problem_layout(problem: &'a Problem, rho: f64, periods: Vec<usize>) -> Lfgadmm<'a> {
+        Lfgadmm::new(problem, rho, problem.layout.clone(), periods)
+    }
+
+    /// ρ in the paper's units (see [`GroupAdmmCore::rho`]).
+    pub fn rho(&self) -> f64 {
+        self.core.rho
+    }
+
+    /// Block lengths of the layer plan.
+    pub fn lens(&self) -> &[usize] {
+        &self.lens
+    }
+
+    /// Per-layer transmission periods.
+    pub fn periods(&self) -> &[usize] {
+        &self.periods
+    }
+
+    /// See [`GroupAdmmCore::set_threads`] — the `threads=K` spec knob
+    /// routes here; any width is bit-identical.
+    pub fn set_threads(&mut self, threads: usize) {
+        self.core.set_threads(threads);
+    }
+
+    /// See [`GroupAdmmCore::install_faults`] — the `fault=p` spec knob
+    /// routes here. A dropped slot freezes the whole broadcast (every
+    /// layer goes stale at once) without advancing the schedule's inner
+    /// policies.
+    pub fn install_faults(&mut self, schedule: &crate::comm::FaultSchedule) {
+        self.core.install_faults(schedule);
+    }
+
+    pub fn chain(&self) -> &Chain {
+        self.core.chain()
+    }
+
+    pub fn thetas(&self) -> &crate::linalg::Arena {
+        self.core.thetas()
+    }
+
+    /// Duals indexed by physical worker (the row for the last-position
+    /// worker is identically zero).
+    pub fn lambdas(&self) -> &crate::linalg::Arena {
+        self.core.lambdas()
+    }
+
+    /// Consensus average of the worker models (final model export).
+    pub fn consensus_mean(&self) -> Vec<f64> {
+        self.core.consensus_mean()
+    }
+
+    /// Primal residuals r_{p,p+1} = θ_p − θ_{p+1} along the chain.
+    pub fn primal_residuals(&self) -> Vec<Vec<f64>> {
+        self.core.primal_residuals()
+    }
+}
+
+impl Engine for Lfgadmm<'_> {
+    fn name(&self) -> String {
+        format!(
+            "L-FGADMM(rho={},{})",
+            self.core.rho,
+            layer_plan_string(&self.lens, &self.periods)
+        )
+    }
+
+    fn step(&mut self, k: usize, meter: &mut Meter) {
+        self.core.step(k, meter);
+    }
+
+    fn objective(&self) -> f64 {
+        self.core.objective()
+    }
+
+    fn acv(&self) -> f64 {
+        self.core.acv()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+    use crate::model::mlp_problem;
+    use crate::optim::{run, Gadmm, RunOptions};
+    use crate::topology::UnitCosts;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn name_carries_the_layer_plan() {
+        let p = mlp_problem(40, 4, 1);
+        let e = Lfgadmm::on_problem_layout(&p, 0.5, vec![2, 1, 1, 1]);
+        assert_eq!(
+            e.name(),
+            "L-FGADMM(rho=0.5,layers=48-6-6-1,periods=2-1-1-1)"
+        );
+    }
+
+    #[test]
+    fn converges_on_the_mlp_with_a_period_2_first_layer() {
+        let p = mlp_problem(240, 4, 1);
+        let mut e = Lfgadmm::on_problem_layout(&p, 0.5, vec![2, 1, 1, 1]);
+        let trace = run(&mut e, &p, &UnitCosts, &RunOptions::with_target(1e-3, 2000));
+        assert!(
+            trace.iters_to_target().is_some(),
+            "final err {}",
+            trace.final_error()
+        );
+    }
+
+    /// Single block + period 1 is GADMM: same trace, record for record.
+    #[test]
+    fn single_block_period_one_matches_gadmm() {
+        let ds = synthetic::linreg(120, 8, &mut Pcg64::seeded(1));
+        let p = Problem::from_dataset(&ds, 6);
+        let opts = RunOptions::with_target(1e-4, 3000);
+        let mut base = Gadmm::new(&p, 5.0);
+        let base_trace = run(&mut base, &p, &UnitCosts, &opts);
+        let mut layered = Lfgadmm::on_problem_layout(&p, 5.0, vec![1]);
+        let layered_trace = run(&mut layered, &p, &UnitCosts, &opts);
+        assert_eq!(base_trace.converged_at, layered_trace.converged_at);
+        assert_eq!(base_trace.records.len(), layered_trace.records.len());
+        for (a, b) in base_trace.records.iter().zip(&layered_trace.records) {
+            assert!(a.same_measurements(b), "diverged at k={}", a.iter);
+        }
+    }
+
+    /// Stale layers cut bits: the period-2 first layer reaches the same
+    /// target with strictly fewer total bits than whole-model exchange.
+    #[test]
+    fn period_2_first_layer_beats_whole_model_bits_on_the_mlp() {
+        let p = mlp_problem(240, 4, 1);
+        let opts = RunOptions::with_target(1e-3, 2000);
+        let mut dense = Lfgadmm::on_problem_layout(&p, 0.5, vec![1, 1, 1, 1]);
+        let dense_trace = run(&mut dense, &p, &UnitCosts, &opts);
+        let mut lazy = Lfgadmm::on_problem_layout(&p, 0.5, vec![2, 1, 1, 1]);
+        let lazy_trace = run(&mut lazy, &p, &UnitCosts, &opts);
+        let (db, lb) = (dense_trace.bits_to_target(), lazy_trace.bits_to_target());
+        assert!(db.is_some() && lb.is_some(), "both configs must converge");
+        assert!(
+            lb.unwrap() < db.unwrap(),
+            "layered {lb:?} should undercut dense {db:?}"
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "even N")]
+    fn odd_worker_count_rejected() {
+        let ds = synthetic::linreg(30, 4, &mut Pcg64::seeded(6));
+        let p = Problem::from_dataset(&ds, 5);
+        let _ = Lfgadmm::on_problem_layout(&p, 1.0, vec![1]);
+    }
+
+    #[test]
+    #[should_panic(expected = "layer plan is for dimension")]
+    fn mismatched_layout_rejected() {
+        let ds = synthetic::linreg(30, 4, &mut Pcg64::seeded(6));
+        let p = Problem::from_dataset(&ds, 4);
+        let _ = Lfgadmm::new(&p, 1.0, BlockLayout::new(vec![3, 2]), vec![1, 1]);
+    }
+}

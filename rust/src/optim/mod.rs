@@ -1,6 +1,7 @@
 //! Optimization engines: the group-ADMM family — GADMM, D-GADMM, Q-GADMM,
-//! C-GADMM, CQ-GADMM, and the bipartite-graph-generalized GGADMM, all thin
-//! configurations of the policy- and topology-parameterized
+//! C-GADMM, CQ-GADMM, the layer-scheduled L-FGADMM, and the
+//! bipartite-graph-generalized GGADMM, all thin configurations of the
+//! policy- and topology-parameterized
 //! [`GroupAdmmCore`] — and every baseline the paper evaluates against
 //! (standard ADMM, GD, DGD, LAG-PS/WK, Cycle-IAG, R-IAG, decentralized
 //! dual averaging), plus the shared run driver and the high-precision
@@ -23,6 +24,7 @@ pub mod gd;
 pub mod ggadmm;
 pub mod iag;
 pub mod lag;
+pub mod lfgadmm;
 pub mod qgadmm;
 pub mod solver;
 
@@ -38,6 +40,7 @@ pub use gd::Gd;
 pub use ggadmm::Ggadmm;
 pub use iag::{Iag, IagOrder};
 pub use lag::{Lag, LagVariant};
+pub use lfgadmm::Lfgadmm;
 pub use qgadmm::Qgadmm;
 
 use crate::comm::Meter;

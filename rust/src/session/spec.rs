@@ -9,14 +9,16 @@
 //! [`AlgoSpec::build`] registry (see `docs/adr/002-algospec-registry.md`).
 
 use crate::comm::{
-    censored_dense_links, censored_quant_links, dense_links, faulty_links, quant_links,
-    validate_censor_params, validate_fault_rate, FaultSchedule, LinkPolicy,
+    censored_dense_links, censored_quant_links, dense_links, faulty_links, layer_dense_links,
+    quant_links, validate_censor_params, validate_fault_rate, validate_layer_plan, FaultSchedule,
+    LinkPolicy,
 };
 use crate::config::validate_quant_bits;
+use crate::linalg::BlockLayout;
 use crate::model::Problem;
 use crate::optim::{
     Admm, Cgadmm, Cqgadmm, Dgadmm, Dgd, DualAvg, Engine, Gadmm, Gd, Ggadmm, Iag, IagOrder, Lag,
-    LagVariant, Qgadmm, RechainMode,
+    LagVariant, Lfgadmm, Qgadmm, RechainMode,
 };
 use crate::topology::chain::Chain;
 use crate::topology::graph::GraphKind;
@@ -46,6 +48,85 @@ pub fn validate_exec_threads(threads: u64) -> Result<usize, String> {
 /// Default engine costs for the context-free [`AlgoSpec::build`] path.
 static UNIT_COSTS: UnitCosts = UnitCosts;
 
+/// Most layer blocks an `lfgadmm:` spec can carry. Specs are `Copy` values
+/// stored in flat rosters, so the plan lives in fixed-size arrays; 8 blocks
+/// comfortably covers the hand-coded models (the MLP has 4).
+pub const MAX_SPEC_LAYERS: usize = 8;
+
+/// A layer plan carried *by value* inside an [`AlgoSpec`]: block lengths
+/// plus per-layer transmission periods. The empty plan (`count == 0`,
+/// written as an `lfgadmm:` spec with no `layers=` key) means "one
+/// full-width block at period 1" — the GADMM degeneracy — and resolves
+/// against whatever model dimension the spec is built on, identically on
+/// the sequential and the wire path (neither needs the problem in hand).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LayerPlan {
+    count: usize,
+    lens: [usize; MAX_SPEC_LAYERS],
+    periods: [usize; MAX_SPEC_LAYERS],
+}
+
+impl LayerPlan {
+    /// The whole-model degeneracy: a single full-width block, period 1.
+    pub fn whole_model() -> LayerPlan {
+        LayerPlan { count: 0, lens: [0; MAX_SPEC_LAYERS], periods: [0; MAX_SPEC_LAYERS] }
+    }
+
+    /// An explicit plan. Length agreement, positivity, and the block cap
+    /// are checked here; the Σ lens = dim check waits for
+    /// [`LayerPlan::resolve`], where the model dimension is known.
+    pub fn new(lens: &[usize], periods: &[usize]) -> Result<LayerPlan, String> {
+        if lens.is_empty() {
+            return Err("layers= needs at least one block".into());
+        }
+        if lens.len() > MAX_SPEC_LAYERS {
+            return Err(format!(
+                "layers= accepts at most {MAX_SPEC_LAYERS} blocks, got {}",
+                lens.len()
+            ));
+        }
+        if lens.iter().any(|&l| l == 0) {
+            return Err("layers= blocks must be non-empty".into());
+        }
+        if periods.len() != lens.len() {
+            return Err(format!("{} layers but {} periods", lens.len(), periods.len()));
+        }
+        if periods.iter().any(|&p| p == 0) {
+            return Err("periods= entries must be ≥ 1".into());
+        }
+        let mut plan = LayerPlan::whole_model();
+        plan.count = lens.len();
+        plan.lens[..lens.len()].copy_from_slice(lens);
+        plan.periods[..periods.len()].copy_from_slice(periods);
+        Ok(plan)
+    }
+
+    pub fn is_whole_model(&self) -> bool {
+        self.count == 0
+    }
+
+    /// Explicit block lengths (empty for the whole-model plan).
+    pub fn lens(&self) -> &[usize] {
+        &self.lens[..self.count]
+    }
+
+    /// Explicit per-layer periods (empty for the whole-model plan).
+    pub fn periods(&self) -> &[usize] {
+        &self.periods[..self.count]
+    }
+
+    /// Resolve against a concrete model dimension: the whole-model plan
+    /// becomes a single `dim`-wide block at period 1, an explicit plan is
+    /// validated to tile `dim` exactly.
+    pub fn resolve(&self, dim: usize) -> Result<(BlockLayout, Vec<usize>), String> {
+        if self.count == 0 {
+            return Ok((BlockLayout::single(dim), vec![1]));
+        }
+        validate_layer_plan(self.lens(), self.periods(), dim)?;
+        Ok((BlockLayout::new(self.lens().to_vec()), self.periods().to_vec()))
+    }
+}
+
 /// A serializable description of one algorithm configuration.
 ///
 /// Parameters carried here are exactly the ones the paper sweeps; seeds,
@@ -67,6 +148,10 @@ pub enum AlgoSpec {
     Cgadmm { rho: f64, tau: f64, mu: f64, fault: f64, threads: usize },
     /// CQ-GADMM: censoring composed with stochastic quantization.
     Cqgadmm { rho: f64, bits: u32, tau: f64, mu: f64, fault: f64, threads: usize },
+    /// L-FGADMM: GADMM with per-*layer* transmission periods over a
+    /// block-structured model (`layers=48-6-6-1,periods=1-2-1-1`); stale
+    /// layers reuse the receiver's last public copy at 0 bits.
+    Lfgadmm { rho: f64, layers: LayerPlan, fault: f64, threads: usize },
     /// GGADMM: group ADMM generalized to an arbitrary bipartite graph
     /// (`graph = chain | complete | star | rgg:radius=R`).
     Ggadmm { rho: f64, graph: GraphKind, fault: f64, threads: usize },
@@ -113,6 +198,7 @@ impl AlgoSpec {
             AlgoSpec::Qgadmm { .. } => "qgadmm",
             AlgoSpec::Cgadmm { .. } => "cgadmm",
             AlgoSpec::Cqgadmm { .. } => "cqgadmm",
+            AlgoSpec::Lfgadmm { .. } => "lfgadmm",
             AlgoSpec::Ggadmm { .. } => "ggadmm",
             AlgoSpec::Dgadmm { .. } => "dgadmm",
             AlgoSpec::Lag { .. } => "lag",
@@ -131,6 +217,7 @@ impl AlgoSpec {
             AlgoSpec::Qgadmm { .. } => "Q-GADMM",
             AlgoSpec::Cgadmm { .. } => "C-GADMM",
             AlgoSpec::Cqgadmm { .. } => "CQ-GADMM",
+            AlgoSpec::Lfgadmm { .. } => "L-FGADMM",
             AlgoSpec::Ggadmm { .. } => "GGADMM",
             AlgoSpec::Dgadmm { .. } => "D-GADMM",
             AlgoSpec::Lag { variant: LagVariant::Wk, .. } => "LAG-WK",
@@ -155,6 +242,7 @@ impl AlgoSpec {
                 | AlgoSpec::Qgadmm { .. }
                 | AlgoSpec::Cgadmm { .. }
                 | AlgoSpec::Cqgadmm { .. }
+                | AlgoSpec::Lfgadmm { .. }
                 | AlgoSpec::Dgadmm { .. }
                 | AlgoSpec::Ggadmm { graph: GraphKind::Chain, .. }
         )
@@ -169,6 +257,7 @@ impl AlgoSpec {
                 | AlgoSpec::Qgadmm { .. }
                 | AlgoSpec::Cgadmm { .. }
                 | AlgoSpec::Cqgadmm { .. }
+                | AlgoSpec::Lfgadmm { .. }
         )
     }
 
@@ -198,6 +287,14 @@ impl AlgoSpec {
             AlgoSpec::Cqgadmm { rho, bits, tau, mu, fault, threads } => {
                 format!(
                     "cqgadmm:rho={rho},bits={bits},tau={tau},mu={mu}{}{}",
+                    fault_suffix(fault),
+                    threads_suffix(threads)
+                )
+            }
+            AlgoSpec::Lfgadmm { rho, layers, fault, threads } => {
+                format!(
+                    "lfgadmm:rho={rho}{}{}{}",
+                    layers_suffix(&layers),
                     fault_suffix(fault),
                     threads_suffix(threads)
                 )
@@ -243,6 +340,14 @@ impl AlgoSpec {
     /// // The generalized-graph engine takes its topology as a knob:
     /// let g = AlgoSpec::parse("ggadmm:rho=5,graph=rgg:radius=2.5").unwrap();
     /// assert_eq!(g.label(), "GGADMM");
+    ///
+    /// // Layer-wise L-FGADMM: dash-separated block lengths and per-layer
+    /// // transmission periods (layers without periods default to 1).
+    /// let lf = AlgoSpec::parse("lfgadmm:rho=5,layers=4-2,periods=1-2").unwrap();
+    /// assert_eq!(lf.label(), "L-FGADMM");
+    /// assert_eq!(lf.spec_string(), "lfgadmm:rho=5,layers=4-2,periods=1-2");
+    /// assert!(AlgoSpec::parse("lfgadmm:layers=4-0").is_err());
+    /// assert!(AlgoSpec::parse("lfgadmm:periods=1-2").is_err());
     ///
     /// // Every group engine accepts an execution width (1 = serial);
     /// // width never changes results, only wall-clock.
@@ -301,6 +406,29 @@ impl AlgoSpec {
                     threads: params.take_threads()?,
                 }
             }
+            "lfgadmm" => {
+                let lens = params.take_usize_list("layers")?;
+                let periods = params.take_usize_list("periods")?;
+                let layers = match (lens, periods) {
+                    (None, None) => LayerPlan::whole_model(),
+                    (None, Some(_)) => {
+                        return Err("lfgadmm periods= requires an explicit layers= plan".into())
+                    }
+                    (Some(l), None) => {
+                        let ones = vec![1; l.len()];
+                        LayerPlan::new(&l, &ones).map_err(|e| format!("lfgadmm: {e}"))?
+                    }
+                    (Some(l), Some(p)) => {
+                        LayerPlan::new(&l, &p).map_err(|e| format!("lfgadmm: {e}"))?
+                    }
+                };
+                AlgoSpec::Lfgadmm {
+                    rho: params.take_rho(5.0)?,
+                    layers,
+                    fault: params.take_fault()?,
+                    threads: params.take_threads()?,
+                }
+            }
             "ggadmm" => AlgoSpec::Ggadmm {
                 rho: params.take_rho(5.0)?,
                 graph: GraphKind::parse(&params.take_str("graph", "chain")?)
@@ -344,7 +472,7 @@ impl AlgoSpec {
             other => {
                 return Err(format!(
                     "unknown algorithm '{other}' (expected one of gadmm, qgadmm, cgadmm, \
-                     cqgadmm, ggadmm, dgadmm, lag, iag, gd, dgd, dualavg, admm)"
+                     cqgadmm, lfgadmm, ggadmm, dgadmm, lag, iag, gd, dgd, dualavg, admm)"
                 ))
             }
         };
@@ -377,6 +505,16 @@ impl AlgoSpec {
                 ),
                 threads,
             ),
+            AlgoSpec::Lfgadmm { rho, layers, fault, threads } => {
+                let j = j.set("rho", rho);
+                let j = if layers.is_whole_model() {
+                    j
+                } else {
+                    j.set("layers", dash_join(layers.lens()).as_str())
+                        .set("periods", dash_join(layers.periods()).as_str())
+                };
+                threads_json(fault_json(j, fault), threads)
+            }
             AlgoSpec::Ggadmm { rho, graph, fault, threads } => threads_json(
                 fault_json(j.set("rho", rho).set("graph", graph.to_string().as_str()), fault),
                 threads,
@@ -482,6 +620,18 @@ impl AlgoSpec {
                 }
                 Box::new(e)
             }
+            AlgoSpec::Lfgadmm { rho, layers, fault, threads } => {
+                let (layout, periods) = match layers.resolve(p.dim) {
+                    Ok(r) => r,
+                    Err(e) => panic!("lfgadmm: {e}"),
+                };
+                let mut e = Lfgadmm::with_chain(p, rho, layout, periods, chain());
+                e.set_threads(threads);
+                if fault > 0.0 {
+                    e.install_faults(&schedule(fault));
+                }
+                Box::new(e)
+            }
             AlgoSpec::Ggadmm { rho, graph, fault, threads } => {
                 let mut e = match ctx.placement {
                     Some(pl) => match Ggadmm::with_placement(p, rho, graph, pl) {
@@ -551,6 +701,23 @@ impl AlgoSpec {
                 links: censored_quant_links(dim, n, bits, tau, mu, seed),
                 name: format!("CQ-GADMM-dist(rho={rho},b={bits},tau={tau},mu={mu})"),
             },
+            AlgoSpec::Lfgadmm { rho, layers, .. } => {
+                // The plan resolves against the same `dim` on both paths,
+                // so the wire's schedule is exactly the sequential one.
+                let (layout, periods) = match layers.resolve(dim) {
+                    Ok(r) => r,
+                    Err(e) => panic!("lfgadmm: {e}"),
+                };
+                ChainWire {
+                    rho,
+                    links: layer_dense_links(&layout, &periods, n),
+                    name: format!(
+                        "L-FGADMM-dist(rho={rho},layers={},periods={})",
+                        dash_join(layout.lens()),
+                        dash_join(&periods)
+                    ),
+                }
+            }
             _ => return None,
         };
         // Fault injection wraps the very same per-worker policies on both
@@ -576,6 +743,7 @@ impl AlgoSpec {
             | AlgoSpec::Qgadmm { threads, .. }
             | AlgoSpec::Cgadmm { threads, .. }
             | AlgoSpec::Cqgadmm { threads, .. }
+            | AlgoSpec::Lfgadmm { threads, .. }
             | AlgoSpec::Ggadmm { threads, .. }
             | AlgoSpec::Dgadmm { threads, .. } => threads,
             _ => 1,
@@ -594,6 +762,7 @@ impl AlgoSpec {
             | AlgoSpec::Qgadmm { threads, .. }
             | AlgoSpec::Cgadmm { threads, .. }
             | AlgoSpec::Cqgadmm { threads, .. }
+            | AlgoSpec::Lfgadmm { threads, .. }
             | AlgoSpec::Ggadmm { threads, .. }
             | AlgoSpec::Dgadmm { threads, .. } => *threads = width,
             _ => {}
@@ -609,6 +778,7 @@ impl AlgoSpec {
             | AlgoSpec::Qgadmm { fault, .. }
             | AlgoSpec::Cgadmm { fault, .. }
             | AlgoSpec::Cqgadmm { fault, .. }
+            | AlgoSpec::Lfgadmm { fault, .. }
             | AlgoSpec::Ggadmm { fault, .. }
             | AlgoSpec::Dgadmm { fault, .. } => fault,
             _ => 0.0,
@@ -628,6 +798,7 @@ impl AlgoSpec {
             | AlgoSpec::Qgadmm { fault, .. }
             | AlgoSpec::Cgadmm { fault, .. }
             | AlgoSpec::Cqgadmm { fault, .. }
+            | AlgoSpec::Lfgadmm { fault, .. }
             | AlgoSpec::Ggadmm { fault, .. }
             | AlgoSpec::Dgadmm { fault, .. } => *fault = rate,
             _ => {}
@@ -657,6 +828,16 @@ impl AlgoSpec {
                 bits: 8,
                 tau: DEFAULT_CENSOR_TAU,
                 mu: DEFAULT_CENSOR_MU,
+                fault: 0.0,
+                threads: 1,
+            },
+            // Layer-wise L-FGADMM. The registry exemplar carries the
+            // whole-model plan (resolves against any problem dimension);
+            // explicit plans are dimension-bound and covered by the
+            // lfgadmm-specific tests.
+            AlgoSpec::Lfgadmm {
+                rho: 5.0,
+                layers: LayerPlan::whole_model(),
                 fault: 0.0,
                 threads: 1,
             },
@@ -725,6 +906,22 @@ fn fault_json(j: Json, fault: f64) -> Json {
         j.set("fault", fault)
     } else {
         j
+    }
+}
+
+/// Dash-joined integer list, the spec grammar's layer-plan notation
+/// (`48-6-6-1`).
+fn dash_join(xs: &[usize]) -> String {
+    xs.iter().map(|x| x.to_string()).collect::<Vec<_>>().join("-")
+}
+
+/// `,layers=…,periods=…` canonical-string suffix — empty for the
+/// whole-model plan, so plain `lfgadmm:rho=5` stays canonical.
+fn layers_suffix(layers: &LayerPlan) -> String {
+    if layers.is_whole_model() {
+        String::new()
+    } else {
+        format!(",layers={},periods={}", dash_join(layers.lens()), dash_join(layers.periods()))
     }
 }
 
@@ -839,6 +1036,25 @@ impl<'s> Params<'s> {
         let p = self.take_f64("fault", 0.0)?;
         validate_fault_rate(p).map_err(|e| format!("{}: {e}", self.kind))?;
         Ok(p)
+    }
+
+    /// A dash-separated integer list (`layers=48-6-6-1`); `None` when the
+    /// key is absent, so the caller can distinguish "omitted" from empty.
+    fn take_usize_list(&mut self, key: &str) -> Result<Option<Vec<usize>>, String> {
+        match self.take(key) {
+            None => Ok(None),
+            Some(v) => v
+                .split('-')
+                .map(|p| p.trim().parse::<usize>())
+                .collect::<Result<Vec<usize>, _>>()
+                .map(Some)
+                .map_err(|_| {
+                    format!(
+                        "{} {key} expects a dash-separated list of integers, got '{v}'",
+                        self.kind
+                    )
+                }),
+        }
     }
 
     fn take_f64(&mut self, key: &str, default: f64) -> Result<f64, String> {
@@ -1037,6 +1253,83 @@ mod tests {
     }
 
     #[test]
+    fn lfgadmm_layer_plans_parse_round_trip_and_resolve() {
+        // Plain lfgadmm is the whole-model degeneracy; the plan stays out
+        // of the canonical forms.
+        let whole = AlgoSpec::parse("lfgadmm").unwrap();
+        assert_eq!(
+            whole,
+            AlgoSpec::Lfgadmm {
+                rho: 5.0,
+                layers: LayerPlan::whole_model(),
+                fault: 0.0,
+                threads: 1
+            }
+        );
+        assert_eq!(whole.spec_string(), "lfgadmm:rho=5");
+        assert!(whole.to_json().path("layers").is_none());
+        // An explicit plan round-trips through the CLI string and JSON.
+        let lf = AlgoSpec::parse("lfgadmm:rho=3,layers=3-1,periods=1-2").unwrap();
+        assert_eq!(lf.spec_string(), "lfgadmm:rho=3,layers=3-1,periods=1-2");
+        assert_eq!(AlgoSpec::parse(&lf.spec_string()).unwrap(), lf);
+        let j = lf.to_json();
+        assert_eq!(j.path("layers").unwrap().as_str(), Some("3-1"));
+        assert_eq!(j.path("periods").unwrap().as_str(), Some("1-2"));
+        assert_eq!(AlgoSpec::from_json(&j).unwrap(), lf);
+        // layers= without periods= defaults every period to 1.
+        let l1 = AlgoSpec::parse("lfgadmm:layers=3-1").unwrap();
+        assert_eq!(l1.spec_string(), "lfgadmm:rho=5,layers=3-1,periods=1-1");
+        // Fault and threads knobs compose in canonical order.
+        let full = AlgoSpec::parse("lfgadmm:rho=3,layers=3-1,periods=1-2,fault=0.1,threads=2")
+            .unwrap();
+        assert_eq!(
+            full.spec_string(),
+            "lfgadmm:rho=3,layers=3-1,periods=1-2,fault=0.1,threads=2"
+        );
+        assert_eq!(AlgoSpec::parse(&full.spec_string()).unwrap(), full);
+        // Domain errors.
+        assert!(AlgoSpec::parse("lfgadmm:periods=1-2").is_err());
+        assert!(AlgoSpec::parse("lfgadmm:layers=3-1,periods=1").is_err());
+        assert!(AlgoSpec::parse("lfgadmm:layers=0-4").is_err());
+        assert!(AlgoSpec::parse("lfgadmm:layers=3-1,periods=1-0").is_err());
+        assert!(AlgoSpec::parse("lfgadmm:layers=1-1-1-1-1-1-1-1-1").is_err());
+        assert!(AlgoSpec::parse("lfgadmm:layers=two").is_err());
+        // The plan resolves only against a matching model dimension.
+        let plan = LayerPlan::new(&[3, 1], &[1, 2]).unwrap();
+        assert!(plan.resolve(4).is_ok());
+        assert!(plan.resolve(5).is_err());
+        let (layout, periods) = LayerPlan::whole_model().resolve(7).unwrap();
+        assert_eq!(layout.lens(), &[7]);
+        assert_eq!(periods, vec![1]);
+        // The wire factory carries the plan in its distributed name.
+        let wire = lf.chain_wire(4, 6, 9).unwrap();
+        assert_eq!(wire.links.len(), 6);
+        assert_eq!(wire.name, "L-FGADMM-dist(rho=3,layers=3-1,periods=1-2)");
+        // … and fault wrapping splices into the name like the other specs.
+        let wire = full.chain_wire(4, 6, 9).unwrap();
+        assert!(wire.name.ends_with(",fault=0.1)"), "{}", wire.name);
+        assert!(wire.links[0].describe().contains("faulty"));
+    }
+
+    #[test]
+    fn lfgadmm_builds_on_its_problem_dimension() {
+        let ds = synthetic::linreg(40, 4, &mut Pcg64::seeded(2));
+        let problem = Problem::from_dataset(&ds, 4);
+        let spec = AlgoSpec::parse("lfgadmm:rho=3,layers=3-1,periods=1-2").unwrap();
+        let engine = spec.build(&problem, 7);
+        assert!(engine.name().starts_with("L-FGADMM(rho=3"), "{}", engine.name());
+    }
+
+    #[test]
+    #[should_panic(expected = "layer lengths sum to")]
+    fn lfgadmm_build_rejects_a_mismatched_plan() {
+        let ds = synthetic::linreg(40, 6, &mut Pcg64::seeded(2));
+        let problem = Problem::from_dataset(&ds, 4);
+        let spec = AlgoSpec::parse("lfgadmm:layers=3-1").unwrap();
+        let _ = spec.build(&problem, 7);
+    }
+
+    #[test]
     fn chain_wire_covers_exactly_the_static_chain_specs() {
         for spec in AlgoSpec::registry() {
             let wire = spec.chain_wire(4, 6, 1);
@@ -1058,8 +1351,8 @@ mod tests {
             names.push(engine.name());
         }
         for expected in [
-            "GADMM(", "Q-GADMM(", "C-GADMM(", "CQ-GADMM(", "GGADMM(", "D-GADMM(", "LAG-WK",
-            "LAG-PS", "Cycle-IAG", "R-IAG", "GD", "DGD", "DualAvg", "ADMM(",
+            "GADMM(", "Q-GADMM(", "C-GADMM(", "CQ-GADMM(", "L-FGADMM(", "GGADMM(", "D-GADMM(",
+            "LAG-WK", "LAG-PS", "Cycle-IAG", "R-IAG", "GD", "DGD", "DualAvg", "ADMM(",
         ] {
             assert!(
                 names.iter().any(|n| n.starts_with(expected)),

@@ -222,6 +222,31 @@ fn all_static_chain_specs_distribute_bit_identically() {
 }
 
 #[test]
+fn layer_scheduled_distributed_matches_sequential_lfgadmm() {
+    // The layer schedule is k-pure and lives inside the shared LinkPolicy,
+    // so a stale layer is absent from the wire message on both execution
+    // paths at exactly the same rounds: the channel run must reproduce the
+    // sequential L-FGADMM engine's slot, bit, and ACV accounting exactly.
+    let ds = synthetic::linreg(120, 6, &mut Pcg64::seeded(13));
+    let p = Problem::from_dataset(&ds, 4);
+    let opts = RunOptions::with_target(1e-5, 5_000);
+    let spec = AlgoSpec::parse("lfgadmm:rho=5,layers=4-2,periods=1-2").unwrap();
+    assert_dist_matches_seq(&p, spec, 13, &opts);
+    // Not vacuous: the period-2 tail layer really stales — bits at
+    // convergence strictly below the every-round dense closed form k·N·64·d.
+    let seq = run(&mut *spec.build(&p, 13), &p, &UnitCosts, &opts);
+    let k = seq.iters_to_target().expect("L-FGADMM converges on the pin config") as f64;
+    assert!(
+        seq.bits_to_target().unwrap() < k * 4.0 * 64.0 * 6.0,
+        "period-2 layer staled nothing"
+    );
+    // Chaos composes with the schedule on the wire as well: seeded drops
+    // hit the same slots on both paths, layered payloads included.
+    let faulted = AlgoSpec::parse("lfgadmm:rho=5,layers=4-2,periods=1-2,fault=0.1").unwrap();
+    assert_dist_matches_seq(&p, faulted, 13, &opts);
+}
+
+#[test]
 fn tau_zero_distributed_cqgadmm_equals_distributed_qgadmm() {
     // Degeneracy holds across the wire too: τ=0 censoring is Q-GADMM.
     let ds = synthetic::linreg(80, 5, &mut Pcg64::seeded(14));

@@ -83,8 +83,34 @@ fn fault_injected_runs_cross_the_network_bit_identically() {
 }
 
 #[test]
+fn layer_scheduled_spec_is_bit_identical_over_localhost() {
+    // L-FGADMM crosses the transport seam end to end: the Setup frame
+    // carries the layer plan, every spawned worker rebuilds the same
+    // k-pure LayerScheduled links from it, and the scheduled layers travel
+    // as layered frames (a stale layer is simply absent) — so a real
+    // lead + 4-worker-process deployment must replay the channel
+    // coordinator bit for bit, including the period-2 layer's idle rounds.
+    let grid = tiny_grid();
+    let roster = [AlgoSpec::parse("lfgadmm:rho=5,layers=30-20,periods=1-2").unwrap()];
+    let out = netbench::run_with(&grid, &roster, true, 1, Path::new(EXE)).unwrap();
+    assert_eq!(out.rows.len(), 1);
+    let row = &out.rows[0];
+    assert!(
+        row.identical(),
+        "{} diverged across the network",
+        row.spec.spec_string()
+    );
+    assert!(row.wire_bytes > 0, "no wire traffic recorded");
+    assert!(!row.net.trace.records.is_empty(), "net run did no work");
+}
+
+#[test]
 fn setup_frames_roundtrip_every_distributable_spec() {
-    for spec in netbench::net_roster(5.0, 8, DEFAULT_CENSOR_TAU, DEFAULT_CENSOR_MU) {
+    let lfgadmm = AlgoSpec::parse("lfgadmm:rho=5,layers=30-20,periods=1-2").unwrap();
+    for spec in netbench::net_roster(5.0, 8, DEFAULT_CENSOR_TAU, DEFAULT_CENSOR_MU)
+        .into_iter()
+        .chain([lfgadmm])
+    {
         for spec in [spec, spec.with_fault(0.1)] {
             let setup = Setup {
                 spec,

@@ -4,17 +4,24 @@
 //! Q-GADMM quantizer (roundtrip error bound, stochastic-rounding
 //! unbiasedness, range shrinkage, bit-exact accounting), the
 //! bipartite-graph generalization (RGG 2-coloring validity, GGADMM's
-//! chain degeneracy, star-graph metering closed form), and the fault
+//! chain degeneracy, star-graph metering closed form), the fault
 //! layer (seed-pure schedules with bit-identical chaos replays, rate-0
-//! degeneracy to the unfaulted engines, zero-bit dropped slots).
+//! degeneracy to the unfaulted engines, zero-bit dropped slots), the MLP
+//! loss (central-difference gradient check, prox stationarity and
+//! in-place bitwise twin across random shapes), and the L-FGADMM layer
+//! schedule (per-layer bits closed form on dense, quantized, and faulted
+//! links; censored layered transmit/transmit_into twin).
 
 use gadmm::comm::{
-    CensorSchedule, FaultSchedule, Meter, QuantizedMsg, StochasticQuantizer, RANGE_OVERHEAD_BITS,
+    layer_censored_dense_links, layer_quant_links, CensorSchedule, Decoder, FaultSchedule, Meter,
+    Msg, MsgBuf, QuantizedMsg, StochasticQuantizer, FP64_BITS, RANGE_OVERHEAD_BITS,
 };
 use gadmm::data::synthetic;
-use gadmm::linalg::vector as vec_ops;
-use gadmm::model::Problem;
-use gadmm::optim::{run, solver, Cqgadmm, Engine, Gadmm, Ggadmm, Qgadmm, RunOptions};
+use gadmm::linalg::{vector as vec_ops, BlockLayout, Matrix};
+use gadmm::model::{prox_residual, LocalLoss, MlpLoss, Problem};
+use gadmm::optim::{
+    run, solver, Cqgadmm, Engine, Gadmm, Ggadmm, GroupAdmmCore, Lfgadmm, Qgadmm, RunOptions,
+};
 use gadmm::prop_assert;
 use gadmm::session::AlgoSpec;
 use gadmm::topology::chain::{self, Chain};
@@ -892,6 +899,330 @@ fn prop_star_graph_meter_matches_closed_form() {
                 (meter.tc_energy - expect_energy).abs() <= 1e-9 * (1.0 + expect_energy),
                 "energy {} != closed form {expect_energy}",
                 meter.tc_energy
+            );
+            Ok(())
+        },
+    );
+}
+
+/// Build a random MLP loss (random shape, random data) plus a probe
+/// point scaled to keep the tanh units away from saturation.
+fn rand_mlp(rng: &mut Pcg64) -> (MlpLoss, Vec<f64>) {
+    let i_dim = rng.range(2, 6);
+    let h_dim = rng.range(2, 5);
+    let m = rng.range(5, 25);
+    let c0: Vec<f64> = (0..h_dim).map(|_| rng.uniform(-0.8, 0.8)).collect();
+    let mut x = Matrix::zeros(m, i_dim);
+    for v in x.data.iter_mut() {
+        *v = rng.normal();
+    }
+    let y: Vec<f64> = (0..m).map(|_| rng.normal()).collect();
+    let loss = MlpLoss::new(x, y, c0, 1.0 / m as f64);
+    let theta: Vec<f64> = (0..loss.dim()).map(|_| 0.5 * rng.normal()).collect();
+    (loss, theta)
+}
+
+#[test]
+fn prop_mlp_gradient_matches_central_differences() {
+    // The hand-coded backward pass against second-order central
+    // differences, across random architectures, datasets, and probe
+    // points — the contract every MLP prox solve leans on.
+    check(
+        "mlp-grad-central-fd",
+        1919,
+        15,
+        rand_mlp,
+        |(loss, theta)| {
+            let g = loss.grad(theta);
+            let eps = 1e-6;
+            let mut tp = theta.clone();
+            let mut tm = theta.clone();
+            for j in 0..loss.dim() {
+                tp[j] = theta[j] + eps;
+                tm[j] = theta[j] - eps;
+                let fd = (loss.value(&tp) - loss.value(&tm)) / (2.0 * eps);
+                prop_assert!(
+                    (g[j] - fd).abs() <= 1e-6 * (1.0 + fd.abs()),
+                    "coordinate {j}: analytic {} vs central difference {fd}",
+                    g[j]
+                );
+                tp[j] = theta[j];
+                tm[j] = theta[j];
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_mlp_prox_is_stationary_and_into_is_bitwise() {
+    // The GD prox solver must land on a first-order stationary point of
+    // φ(θ) = f(θ) + ⟨q,θ⟩ + (c/2)‖θ‖², and the allocation-free in-place
+    // path must take the allocating path's exact arithmetic route.
+    check(
+        "mlp-prox-stationary",
+        2020,
+        10,
+        |rng| {
+            let (loss, warm) = rand_mlp(rng);
+            let q: Vec<f64> = (0..loss.dim()).map(|_| 0.1 * rng.normal()).collect();
+            let c = rng.uniform(0.5, 4.0);
+            (loss, warm, q, c)
+        },
+        |(loss, warm, q, c)| {
+            let theta = loss.prox_argmin(q, *c, warm);
+            let r = prox_residual(loss, &theta, q, *c);
+            prop_assert!(r < 1e-6, "prox residual {r} at c={c}");
+            let mut out = vec![f64::NAN; loss.dim()];
+            loss.prox_argmin_into(q, *c, warm, &mut out);
+            prop_assert!(
+                theta.iter().zip(&out).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "prox_argmin_into diverged from prox_argmin"
+            );
+            Ok(())
+        },
+    );
+}
+
+/// Random layer plan: 1–4 blocks of 1–4 coordinates, periods in [1, max].
+fn rand_layer_plan(rng: &mut Pcg64, max_period: usize) -> (Vec<usize>, Vec<usize>) {
+    let blocks = rng.range(1, 5);
+    let lens: Vec<usize> = (0..blocks).map(|_| rng.range(1, 5)).collect();
+    let periods: Vec<usize> = (0..blocks).map(|_| rng.range(1, max_period + 1)).collect();
+    (lens, periods)
+}
+
+#[test]
+fn prop_lfgadmm_dense_bits_closed_form() {
+    // The layer meter's headline closed form: after K iterations of dense
+    // L-FGADMM, bits = Σ_ℓ ⌈K/p_ℓ⌉·N·64·len_ℓ (layer ℓ is due whenever
+    // k ≡ 0 mod p_ℓ, so it travels ⌈K/p_ℓ⌉ times from each worker), a
+    // slot with no due layer is a censored tick, and every other slot
+    // bills exactly one unit transmission.
+    check(
+        "lfgadmm-dense-bits",
+        2121,
+        15,
+        |rng| {
+            let n = 2 * rng.range(2, 5);
+            let (lens, periods) = rand_layer_plan(rng, 3);
+            let d: usize = lens.iter().sum();
+            (synthetic::linreg(20 * n, d, rng), n, lens, periods, rng.range(1, 15))
+        },
+        |(ds, n, lens, periods, iters)| {
+            let p = Problem::from_dataset(ds, *n);
+            let mut e = Lfgadmm::new(&p, 2.0, BlockLayout::new(lens.clone()), periods.clone());
+            let costs = UnitCosts;
+            let mut meter = Meter::new(&costs);
+            for k in 0..*iters {
+                e.step(k, &mut meter);
+            }
+            let want_bits: f64 = lens
+                .iter()
+                .zip(periods)
+                .map(|(&l, &pr)| iters.div_ceil(pr) as f64 * *n as f64 * FP64_BITS * l as f64)
+                .sum();
+            prop_assert!(
+                meter.bits == want_bits,
+                "bits {} ≠ Σ ⌈K/p⌉·N·64·len = {want_bits} (lens {lens:?}, periods {periods:?})",
+                meter.bits
+            );
+            let busy = (0..*iters).filter(|k| periods.iter().any(|p| k % p == 0)).count();
+            prop_assert!(
+                meter.tc_unit == (busy * n) as f64,
+                "tc_unit {} ≠ busy·N = {}",
+                meter.tc_unit,
+                busy * n
+            );
+            prop_assert!(
+                meter.censored == (iters - busy) * n,
+                "censored {} ≠ (K − busy)·N = {}",
+                meter.censored,
+                (iters - busy) * n
+            );
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_lfgadmm_quantized_layer_bits_closed_form() {
+    // Quantized layer chunks bill exactly len·b + 64 range-overhead bits
+    // per transmitted layer: bits = Σ_ℓ ⌈K/p_ℓ⌉·N·(len_ℓ·b + 64).
+    check(
+        "lfgadmm-quant-bits",
+        2222,
+        12,
+        |rng| {
+            let n = 2 * rng.range(2, 4);
+            let (lens, periods) = rand_layer_plan(rng, 2);
+            let d: usize = lens.iter().sum();
+            let bits = rng.range(2, 11) as u32;
+            (
+                synthetic::linreg(20 * n, d, rng),
+                n,
+                lens,
+                periods,
+                bits,
+                rng.next_u64(),
+                rng.range(1, 11),
+            )
+        },
+        |(ds, n, lens, periods, bits, seed, iters)| {
+            let p = Problem::from_dataset(ds, *n);
+            let layout = BlockLayout::new(lens.clone());
+            let links = layer_quant_links(&layout, periods, *n, *bits, *seed);
+            let mut core =
+                GroupAdmmCore::new(&p, 2.0, gadmm::topology::chain::Chain::sequential(*n), links);
+            let costs = UnitCosts;
+            let mut meter = Meter::new(&costs);
+            for k in 0..*iters {
+                core.step(k, &mut meter);
+            }
+            let want_bits: f64 = lens
+                .iter()
+                .zip(periods)
+                .map(|(&l, &pr)| {
+                    iters.div_ceil(pr) as f64
+                        * *n as f64
+                        * (l as f64 * *bits as f64 + RANGE_OVERHEAD_BITS)
+                })
+                .sum();
+            prop_assert!(
+                meter.bits == want_bits,
+                "bits {} ≠ Σ ⌈K/p⌉·N·(len·b + 64) = {want_bits} (b={bits})",
+                meter.bits
+            );
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_layered_censored_twin_and_decoder_consistency() {
+    // The censored layered link: the allocation-free transmit_into must be
+    // bitwise the allocating transmit (message, payload bits, sender
+    // view), a layered payload must bill exactly the sum of its chunks,
+    // and a receiver replaying the stream through a Decoder must track the
+    // sender's assembled public view — censored-due layers simply absent.
+    check(
+        "layer-censored-twin",
+        2323,
+        25,
+        |rng| {
+            let (lens, periods) = rand_layer_plan(rng, 3);
+            let d: usize = lens.iter().sum();
+            let tau = rng.uniform(0.0, 2.0);
+            let mu = rng.uniform(0.5, 0.99);
+            let stream: Vec<Vec<f64>> = (0..12).map(|_| rng.normal_vec(d)).collect();
+            (lens, periods, tau, mu, stream)
+        },
+        |(lens, periods, tau, mu, stream)| {
+            let layout = BlockLayout::new(lens.clone());
+            let mut a = layer_censored_dense_links(&layout, periods, 1, *tau, *mu)
+                .pop()
+                .unwrap();
+            let mut b = layer_censored_dense_links(&layout, periods, 1, *tau, *mu)
+                .pop()
+                .unwrap();
+            let mut buf = MsgBuf::new(0);
+            let mut dec = Decoder::new(layout.dim());
+            for (k, model) in stream.iter().enumerate() {
+                let msg = a.transmit(k, model);
+                b.transmit_into(k, model, &mut buf);
+                prop_assert!(buf.to_msg() == msg, "k={k}: in-place message diverged");
+                prop_assert!(
+                    buf.payload_bits() == msg.payload_bits(),
+                    "k={k}: in-place payload bits diverged"
+                );
+                if let Msg::Layers(chunks) = &msg {
+                    let per_chunk: f64 = chunks.iter().map(|c| c.msg.payload_bits()).sum();
+                    prop_assert!(
+                        msg.payload_bits() == per_chunk,
+                        "k={k}: layered payload is not the sum of its chunks"
+                    );
+                }
+                dec.apply(&msg);
+                prop_assert!(
+                    dec.view() == a.public_view(),
+                    "k={k}: receiver view diverged from the sender's"
+                );
+                prop_assert!(
+                    a.public_view() == b.public_view(),
+                    "k={k}: twin sender views diverged"
+                );
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_lfgadmm_faulted_bits_closed_form() {
+    // Faults compose with the layer schedule: replaying the pure
+    // FaultSchedule gives the exact expected meter — a dropped slot is a
+    // censored tick whatever was due, every surviving slot bills its due
+    // layers' dense bits, and an empty schedule slot censors too.
+    check(
+        "lfgadmm-fault-bits",
+        2424,
+        12,
+        |rng| {
+            let n = 2 * rng.range(2, 5);
+            let (lens, periods) = rand_layer_plan(rng, 3);
+            let d: usize = lens.iter().sum();
+            let fault = rng.uniform(0.05, 0.35);
+            (
+                synthetic::linreg(20 * n, d, rng),
+                n,
+                lens,
+                periods,
+                fault,
+                rng.next_u64(),
+                rng.range(1, 15),
+            )
+        },
+        |(ds, n, lens, periods, fault, seed, iters)| {
+            let p = Problem::from_dataset(ds, *n);
+            let mut e = Lfgadmm::new(&p, 2.0, BlockLayout::new(lens.clone()), periods.clone());
+            let schedule = FaultSchedule::new(*seed, *fault);
+            e.install_faults(&schedule);
+            let costs = UnitCosts;
+            let mut meter = Meter::new(&costs);
+            for k in 0..*iters {
+                e.step(k, &mut meter);
+            }
+            let (mut want_bits, mut want_tx, mut want_cens) = (0.0f64, 0usize, 0usize);
+            for k in 0..*iters {
+                let slot_bits: f64 = lens
+                    .iter()
+                    .zip(periods)
+                    .filter(|(_, &pr)| k % pr == 0)
+                    .map(|(&l, _)| FP64_BITS * l as f64)
+                    .sum();
+                for w in 0..*n {
+                    if schedule.drops(w, k) || slot_bits == 0.0 {
+                        want_cens += 1;
+                    } else {
+                        want_bits += slot_bits;
+                        want_tx += 1;
+                    }
+                }
+            }
+            prop_assert!(
+                meter.bits == want_bits,
+                "bits {} ≠ fault-replayed closed form {want_bits}",
+                meter.bits
+            );
+            prop_assert!(
+                meter.tc_unit == want_tx as f64,
+                "tc_unit {} ≠ {want_tx}",
+                meter.tc_unit
+            );
+            prop_assert!(
+                meter.censored == want_cens,
+                "censored {} ≠ {want_cens}",
+                meter.censored
             );
             Ok(())
         },

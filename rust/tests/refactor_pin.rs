@@ -14,9 +14,9 @@
 use gadmm::comm::{Compressor, Meter, StochasticQuantizer};
 use gadmm::config::DatasetKind;
 use gadmm::data::synthetic;
-use gadmm::linalg::vector as vec_ops;
-use gadmm::model::Problem;
-use gadmm::optim::{run, Dgadmm, Engine, Gadmm, Qgadmm, RechainMode, RunOptions};
+use gadmm::linalg::{vector as vec_ops, BlockLayout};
+use gadmm::model::{mlp_problem, Problem};
+use gadmm::optim::{run, Dgadmm, Engine, Gadmm, Lfgadmm, Qgadmm, RechainMode, RunOptions};
 use gadmm::topology::chain::{self, Chain};
 use gadmm::topology::{EnergyCostModel, LinkCosts, Placement, UnitCosts};
 use gadmm::util::rng::Pcg64;
@@ -539,4 +539,66 @@ fn ggadmm_chain_paper_logreg_trace_is_bit_identical_to_gadmm() {
     let ds = synthetic::logreg(120, 6, &mut Pcg64::seeded(2));
     let p = Problem::from_dataset(&ds, 4);
     assert_ggadmm_chain_matches_gadmm(&p, 0.3, &RunOptions::with_target(1e-4, 6_000));
+}
+
+/// Whole-model degeneracy pin of the layer-wise generalization: an
+/// `lfgadmm:` spec with a single full-width block at period 1 transmits
+/// the entire model every round, so it must take GADMM's exact path —
+/// bitwise measurements (including the bits column: one dense chunk of
+/// `64·d` equals a dense broadcast) and the identical convergence point.
+/// Engine names differ by design ("L-FGADMM(…)" vs "GADMM(…)"), so they
+/// are normalized before the `Trace::same_path` comparison.
+fn assert_lfgadmm_whole_model_matches_gadmm(p: &Problem, rho: f64, opts: &RunOptions) {
+    let costs = UnitCosts;
+    let mut g = run(&mut Gadmm::new(p, rho), p, &costs, opts);
+    let spec =
+        gadmm::session::AlgoSpec::parse(&format!("lfgadmm:rho={rho},layers={},periods=1", p.dim))
+            .expect("valid lfgadmm spec");
+    let mut lf = run(&mut *spec.build(p, 1), p, &costs, opts);
+    g.algorithm = "group-admm".into();
+    lf.algorithm = "group-admm".into();
+    assert!(lf.same_path(&g), "L-FGADMM(single block, period 1) diverged from GADMM");
+    assert!(lf.iters_to_target().is_some());
+}
+
+#[test]
+fn lfgadmm_single_block_period1_linreg_trace_is_bit_identical_to_gadmm() {
+    let ds = DatasetKind::SyntheticLinreg.build(1);
+    let p = Problem::from_dataset(&ds, 6);
+    assert_lfgadmm_whole_model_matches_gadmm(&p, 5.0, &RunOptions::with_target(1e-3, 20_000));
+}
+
+#[test]
+fn lfgadmm_single_block_period1_logreg_trace_is_bit_identical_to_gadmm() {
+    let ds = synthetic::logreg(120, 6, &mut Pcg64::seeded(2));
+    let p = Problem::from_dataset(&ds, 4);
+    assert_lfgadmm_whole_model_matches_gadmm(&p, 0.3, &RunOptions::with_target(1e-4, 6_000));
+}
+
+/// Block-structure degeneracy pin on the MLP: with every layer at
+/// period 1 the per-tensor schedule transmits the whole model every
+/// round, chunked — the same values land in the same receiver views, and
+/// the layered bits (`Σ_ℓ 64·len_ℓ`) re-add to the blockless `64·d`. The
+/// run must be `same_path`-identical to a single full-width block, so
+/// the block decomposition itself provably changes nothing at period 1.
+#[test]
+fn lfgadmm_mlp_every_layer_period1_matches_blockless_reference() {
+    let p = mlp_problem(240, 4, 1);
+    let opts = RunOptions::with_target(1e-3, 600);
+    let costs = UnitCosts;
+    let mut blocked =
+        run(&mut Lfgadmm::on_problem_layout(&p, 0.5, vec![1; 4]), &p, &costs, &opts);
+    let mut flat = run(
+        &mut Lfgadmm::new(&p, 0.5, BlockLayout::new(vec![p.dim]), vec![1]),
+        &p,
+        &costs,
+        &opts,
+    );
+    blocked.algorithm = "group-admm".into();
+    flat.algorithm = "group-admm".into();
+    assert!(
+        blocked.same_path(&flat),
+        "per-tensor blocks at period 1 diverged from the blockless reference"
+    );
+    assert!(blocked.iters_to_target().is_some(), "MLP run missed the pin target");
 }
