@@ -339,4 +339,68 @@ if ! layers_gate; then
   exit 3
 fi
 
+echo "==> smoke: gadmm stream --quick (out-of-core S-GADMM ladder -> BENCH_stream.json)"
+# Gate: the report must exist with every replay and file-backed-vs-in-memory
+# identity column true, the streamed standardizer bitwise-equal to the
+# in-memory path, and the acceptance headline — every non-degenerate
+# stream-scale S-GADMM cell converges at fewer per-iteration FLOPs than the
+# exact prox (all deterministic — exit 3, never retried). The peak-RSS
+# comparison (file-backed build below the in-memory build's high-water
+# mark) depends on allocator behavior, so that half alone is exit 1 and
+# gets one re-run.
+stream_gate() {
+  ./target/release/gadmm stream --quick --out target/ci-stream || return 3
+  test -f target/ci-stream/BENCH_stream.json || return 3
+  python3 - <<'EOF'
+import json, sys
+
+def hard(cond, msg):  # deterministic failure: never retried
+    if not cond:
+        print("stream gate (deterministic): %s" % msg)
+        sys.exit(3)
+
+with open("target/ci-stream/BENCH_stream.json") as f:
+    report = json.load(f)
+
+hard(report["experiment"] == "bench_stream", "wrong experiment %r" % report["experiment"])
+rows = report["rows"]
+hard(len(rows) >= 8, "expected the quick ladder (>= 8 cells), got %d rows" % len(rows))
+
+# Reproducibility, twice over: every cell's seeded replay is bit-identical,
+# and the file-backed build drives the identical trajectory as in-memory.
+bad_replay = [r["algorithm"] for r in rows if not r["replay_identical"]]
+hard(not bad_replay, "seeded replay diverged for: %s" % bad_replay)
+bad_file = [r["algorithm"] for r in rows if not r["file_backed_identical"]]
+hard(not bad_file, "file-backed build diverged from in-memory for: %s" % bad_file)
+hard(report["all_identical"], "all_identical flag disagrees with the rows")
+hard(report["standardize_matches"], "streamed standardizer != Dataset::standardize")
+
+# Acceptance headline: on the stream-scale shards, every non-degenerate
+# stochastic cell reaches the target at fewer per-iteration FLOPs than
+# the full-batch prox (the degenerate batch >= m_s cells are GADMM).
+hard(report["flops_win"], "stream-scale S-GADMM did not undercut full-batch FLOPs/iter")
+converged = sum(1 for r in rows if r["converged"])
+hard(converged == len(rows), "only %d/%d cells reached the target" % (converged, len(rows)))
+
+# RSS comparison (wall-of-allocator, not arithmetic): the out-of-core
+# build's high-water mark must sit below the in-memory build's.
+if not report["rss_ok"]:
+    print("stream gate (rss): file-backed peak %s kB not below in-memory peak %s kB"
+          % (report["rss_file_kb"], report["rss_mem_kb"]))
+    sys.exit(1)
+print("stream gate OK: %d cells replay + file==mem bit-identical, FLOPs win holds, "
+      "peak RSS %s kB (file) < %s kB (mem)"
+      % (len(rows), report["rss_file_kb"], report["rss_mem_kb"]))
+EOF
+}
+rc=0
+stream_gate || rc=$?
+if [ "$rc" -eq 1 ]; then
+  echo "==> stream RSS gate failed once (allocator high-water marks vary); re-running"
+  stream_gate
+elif [ "$rc" -ne 0 ]; then
+  echo "==> stream deterministic gate failed — not retrying"
+  exit "$rc"
+fi
+
 echo "CI OK"

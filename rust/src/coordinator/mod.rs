@@ -35,9 +35,9 @@ pub mod worker;
 
 use crate::comm::{dense_links, faulty_links, FaultSchedule, LinkPolicy, Meter};
 use crate::metrics::{IterRecord, Trace};
-use crate::model::Problem;
+use crate::model::{Problem, StochasticProx};
 use crate::optim::RunOptions;
-use crate::runtime::LocalSolver;
+use crate::runtime::{LocalSolver, NativeSolver};
 use crate::session::AlgoSpec;
 use crate::topology::chain::Chain;
 use crate::topology::graph::BipartiteGraph;
@@ -151,6 +151,46 @@ pub fn train_graph_spec<'p>(
     }
     let (rho, links, name) = spec_wire(spec, problem.dim, n, seed)?;
     Ok(train_links(problem, solvers, rho, graph, costs, opts, links, name))
+}
+
+/// Worker `rank`'s subproblem solver for `spec`: the exact prox
+/// ([`NativeSolver`]) for every engine except S-GADMM, whose primal update
+/// is a seeded [`StochasticProx`] minibatch loop. This is the solver-side
+/// twin of [`spec_wire`]: every execution medium (sequential engine,
+/// in-process channels, TCP workers) builds its solver here with the same
+/// `(seed, rank)`, which is what keeps the stochastic trajectory — not
+/// just the wire state — bit-identical across media. Fails when the spec's
+/// solver cannot be built on this problem (e.g. S-GADMM on a loss without
+/// a per-sample view).
+pub fn spec_solver<'p>(
+    problem: &'p Problem,
+    spec: &AlgoSpec,
+    seed: u64,
+    rank: usize,
+) -> Result<Box<dyn LocalSolver + Send + 'p>, String> {
+    match *spec {
+        AlgoSpec::Sgadmm { batch, epochs, .. } => Ok(Box::new(StochasticProx::new(
+            &*problem.losses[rank],
+            batch,
+            epochs,
+            seed,
+            rank,
+        )?)),
+        _ => Ok(Box::new(NativeSolver::new(&*problem.losses[rank]))),
+    }
+}
+
+/// [`spec_solver`] for every worker, in rank order — the roster the
+/// channel coordinator and the in-process netbench path feed to
+/// [`train_spec`]/[`train_links`].
+pub fn spec_solvers<'p>(
+    problem: &'p Problem,
+    spec: &AlgoSpec,
+    seed: u64,
+) -> Result<Vec<Box<dyn LocalSolver + Send + 'p>>, String> {
+    (0..problem.num_workers())
+        .map(|w| spec_solver(problem, spec, seed, w))
+        .collect()
 }
 
 /// Map a static group-ADMM spec to its per-worker wire configuration
@@ -478,6 +518,59 @@ mod tests {
         for (a, b) in result.thetas.iter().zip(seq.thetas()) {
             assert!(crate::linalg::vector::dist2(a, b) < 1e-9);
         }
+    }
+
+    #[test]
+    fn distributed_sgadmm_matches_sequential_engine() {
+        // The stochastic-prox coordinator path vs the sequential S-GADMM
+        // engine: same (seed, rank) solvers via spec_solvers, same wire via
+        // chain_wire, so the minibatch trajectory must replay bit-for-bit.
+        // The leader sums worker losses in arrival order, so obj_err is
+        // compared to floating-point noise (not bitwise), like the GADMM
+        // equivalence test above.
+        let ds = synthetic::linreg(240, 8, &mut Pcg64::seeded(1));
+        let p = Problem::from_dataset(&ds, 4);
+        let opts = RunOptions::with_target(1e-4, 8000);
+        let costs = UnitCosts;
+        let spec = AlgoSpec::Sgadmm { rho: 5.0, batch: 16, epochs: 2.0, fault: 0.0, threads: 1 };
+        let seed = 7;
+        let chain = Chain::sequential(4);
+
+        let solvers = spec_solvers(&p, &spec, seed).unwrap();
+        let result =
+            train_spec(&p, solvers, &spec, seed, chain.clone(), &costs, &opts).unwrap();
+        let mut seq =
+            crate::optim::Sgadmm::with_chain(&p, 5.0, 16, 2.0, seed, chain).unwrap();
+        let seq_trace = run(&mut seq, &p, &costs, &opts);
+
+        assert_eq!(result.trace.iters_to_target(), seq_trace.iters_to_target());
+        for (a, b) in result.trace.records.iter().zip(&seq_trace.records) {
+            assert!(
+                (a.obj_err - b.obj_err).abs() <= 1e-9 * (1.0 + b.obj_err),
+                "iter {}: {} vs {}",
+                a.iter,
+                a.obj_err,
+                b.obj_err
+            );
+            assert_eq!(a.tc_unit, b.tc_unit);
+        }
+        for (a, b) in result.thetas.iter().zip(seq.thetas()) {
+            assert!(crate::linalg::vector::dist2(a, b) < 1e-9);
+        }
+        assert!(result.trace.algorithm.starts_with("S-GADMM-dist"));
+    }
+
+    #[test]
+    fn spec_solver_rejects_sgadmm_on_a_viewless_loss() {
+        let p = crate::model::mlp_problem(24, 2, 5);
+        let spec = AlgoSpec::Sgadmm { rho: 1.0, batch: 4, epochs: 1.0, fault: 0.0, threads: 1 };
+        let err = spec_solvers(&p, &spec, 1).unwrap_err();
+        assert!(err.contains("per-sample view"), "{err}");
+        // Every other spec gets the exact native prox.
+        let ds = synthetic::linreg(40, 4, &mut Pcg64::seeded(8));
+        let p = Problem::from_dataset(&ds, 4);
+        let gadmm = AlgoSpec::Gadmm { rho: 5.0, fault: 0.0, threads: 1 };
+        assert_eq!(spec_solvers(&p, &gadmm, 1).unwrap().len(), 4);
     }
 
     #[test]

@@ -13,9 +13,14 @@
 
 pub mod partition;
 pub mod real;
+pub mod source;
 pub mod synthetic;
 
-pub use partition::partition_even;
+pub use partition::{partition_bounds, partition_checked, partition_even};
+pub use source::{
+    materialize, minibatch_indices, ChunkBuf, FileBackedSource, InMemorySource, SampleSource,
+    Standardizer, SyntheticStream,
+};
 
 use crate::linalg::Matrix;
 
@@ -99,6 +104,35 @@ mod tests {
             let var: f64 = (0..m).map(|i| ds.features.at(i, j).powi(2)).sum::<f64>() / m as f64;
             assert!(mean.abs() < 1e-10, "col {j} mean {mean}");
             assert!((var - 1.0).abs() < 1e-8, "col {j} var {var}");
+        }
+    }
+
+    #[test]
+    fn standardize_zero_variance_column_is_finite() {
+        // A constant column has var = 0; the 1e-12 std floor must map it to
+        // exactly zero (x − mean = 0) rather than NaN/inf, and leave the
+        // other columns untouched by the edge case.
+        let mut ds = synthetic::linreg(40, 3, &mut Pcg64::seeded(4));
+        for i in 0..40 {
+            *ds.features.at_mut(i, 1) = 2.5;
+        }
+        ds.standardize(false);
+        for i in 0..40 {
+            assert_eq!(ds.features.at(i, 1), 0.0, "row {i}");
+            assert!(ds.features.at(i, 0).is_finite());
+            assert!(ds.features.at(i, 2).is_finite());
+        }
+    }
+
+    #[test]
+    fn standardize_keeps_bias_column() {
+        let mut ds = synthetic::linreg(30, 4, &mut Pcg64::seeded(6));
+        for i in 0..30 {
+            *ds.features.at_mut(i, 3) = 1.0;
+        }
+        ds.standardize(true);
+        for i in 0..30 {
+            assert_eq!(ds.features.at(i, 3), 1.0, "bias column must survive");
         }
     }
 }

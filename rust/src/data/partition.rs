@@ -2,33 +2,64 @@
 
 use super::{Dataset, Shard};
 
-/// Evenly partition samples into `n_workers` contiguous shards. When the
-/// sample count is not divisible, the first `m % n` workers receive one
-/// extra sample (the paper's real datasets, e.g. 252 samples over 20
-/// workers, need this).
-pub fn partition_even(ds: &Dataset, n_workers: usize) -> Vec<Shard> {
+/// Contiguous `(lo, hi)` row bounds of an even partition: when the sample
+/// count is not divisible, the first `m % n` workers receive one extra
+/// sample. Shared by the in-memory sharder and the streaming problem
+/// builder so both tile samples identically.
+pub fn partition_bounds(m: usize, n_workers: usize) -> Vec<(usize, usize)> {
     assert!(n_workers >= 1);
-    let m = ds.num_samples();
     assert!(
         m >= n_workers,
         "cannot split {m} samples across {n_workers} workers"
     );
     let base = m / n_workers;
     let extra = m % n_workers;
-    let mut shards = Vec::with_capacity(n_workers);
+    let mut bounds = Vec::with_capacity(n_workers);
     let mut lo = 0usize;
     for w in 0..n_workers {
-        let take = base + usize::from(w < extra);
-        let hi = lo + take;
-        shards.push(Shard {
-            worker: w,
-            features: ds.features.slice_rows(lo, hi),
-            targets: ds.targets[lo..hi].to_vec(),
-        });
+        let hi = lo + base + usize::from(w < extra);
+        bounds.push((lo, hi));
         lo = hi;
     }
     debug_assert_eq!(lo, m);
-    shards
+    bounds
+}
+
+/// Checked bounds for the streaming path: rejects (rather than panics on)
+/// impossible splits, and additionally rejects shards of size 0 or 1 — a
+/// one-sample shard makes the local prox objective rank-deficient and a
+/// minibatch over it meaningless. The in-memory [`partition_even`] keeps
+/// allowing size-1 shards because the massive-N topology sweep relies on
+/// them.
+pub fn partition_checked(m: usize, n_workers: usize) -> Result<Vec<(usize, usize)>, String> {
+    if n_workers == 0 {
+        return Err("cannot partition across 0 workers".to_string());
+    }
+    if m < 2 * n_workers {
+        let w = n_workers - 1;
+        let size = m.saturating_sub(w * 2).min(1);
+        return Err(format!(
+            "streaming partition needs ≥ 2 samples per worker: {m} samples across \
+             {n_workers} workers leaves worker {w} with a size-{size} shard"
+        ));
+    }
+    Ok(partition_bounds(m, n_workers))
+}
+
+/// Evenly partition samples into `n_workers` contiguous shards. When the
+/// sample count is not divisible, the first `m % n` workers receive one
+/// extra sample (the paper's real datasets, e.g. 252 samples over 20
+/// workers, need this).
+pub fn partition_even(ds: &Dataset, n_workers: usize) -> Vec<Shard> {
+    partition_bounds(ds.num_samples(), n_workers)
+        .into_iter()
+        .enumerate()
+        .map(|(w, (lo, hi))| Shard {
+            worker: w,
+            features: ds.features.slice_rows(lo, hi),
+            targets: ds.targets[lo..hi].to_vec(),
+        })
+        .collect()
 }
 
 #[cfg(test)]
@@ -61,6 +92,46 @@ mod tests {
         let sizes: Vec<usize> = shards.iter().map(|s| s.features.rows).collect();
         assert_eq!(sizes.iter().filter(|&&s| s == 13).count(), 12);
         assert_eq!(sizes.iter().filter(|&&s| s == 12).count(), 8);
+    }
+
+    #[test]
+    fn uneven_bounds_tile_without_gaps() {
+        // N not dividing m: every (lo, hi) abuts the next, larger shards
+        // come first, and the total is exact — for a spread of awkward
+        // (m, n) pairs including m barely above n.
+        for (m, n) in [(7, 3), (100, 7), (252, 20), (13, 6), (1201, 8)] {
+            let bounds = partition_bounds(m, n);
+            assert_eq!(bounds.len(), n, "m={m} n={n}");
+            assert_eq!(bounds[0].0, 0);
+            assert_eq!(bounds[n - 1].1, m);
+            for w in 1..n {
+                assert_eq!(bounds[w].0, bounds[w - 1].1, "gap at worker {w}");
+            }
+            let sizes: Vec<usize> = bounds.iter().map(|(lo, hi)| hi - lo).collect();
+            for w in 1..n {
+                assert!(sizes[w - 1] >= sizes[w], "larger shards must come first");
+            }
+            assert_eq!(sizes.iter().sum::<usize>(), m);
+        }
+    }
+
+    #[test]
+    fn checked_partition_rejects_degenerate_shards() {
+        // Size-0 and size-1 shards are errors (with a readable message),
+        // not panics, on the streaming path.
+        for (m, n) in [(10, 11), (10, 10), (19, 10), (3, 2), (0, 1)] {
+            let err = partition_checked(m, n).unwrap_err();
+            assert!(
+                err.contains("≥ 2 samples per worker"),
+                "(m={m}, n={n}): {err}"
+            );
+        }
+        assert!(partition_checked(0, 0).is_err());
+        // The boundary case m = 2n is accepted with all-size-2 shards.
+        let bounds = partition_checked(20, 10).unwrap();
+        assert!(bounds.iter().all(|(lo, hi)| hi - lo == 2));
+        // And agrees with the unchecked bounds when valid.
+        assert_eq!(partition_checked(252, 20).unwrap(), partition_bounds(252, 20));
     }
 
     #[test]

@@ -1,0 +1,681 @@
+//! Out-of-core sample sources: chunked row access behind one trait.
+//!
+//! Every engine so far assumed a worker's shard is a small dense in-memory
+//! matrix. `SampleSource` breaks that assumption: it exposes a dataset as
+//! `num_samples × dim` rows readable in contiguous chunks through a caller-
+//! owned, reusable [`ChunkBuf`], so the full design matrix never has to be
+//! resident. Three impls:
+//!
+//! - [`InMemorySource`] wraps an existing [`Dataset`] (the trivial case, and
+//!   the bit-identity oracle for the others);
+//! - [`FileBackedSource`] reads a binary row-major f64 file on demand via
+//!   positioned reads — no mmap, zero-dep, thread-safe (`&self` reads);
+//! - [`SyntheticStream`] generates rows *per-row-seeded*, so any chunk of it
+//!   can be produced independently without materializing the prefix. This is
+//!   what lets `gadmm stream` build datasets 10–50× larger than a
+//!   RAM-comfortable shard and still write them to disk chunk by chunk.
+//!
+//! The seeded minibatch sampler ([`minibatch_indices`]) lives here too: it is
+//! a pure function of `(seed, worker, draw)` so the stochastic engines replay
+//! bit-identically across threads and across the sequential/channel/TCP
+//! media (ADR-010).
+
+use std::fs::File;
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+
+use super::{synthetic, Dataset, Task};
+use crate::linalg::Matrix;
+use crate::util::rng::Pcg64;
+
+/// Magic tag of the file-backed format ("GADMMDS1" as LE bytes).
+pub const FILE_MAGIC: u64 = 0x3153_444d_4d44_4147;
+
+/// Chunked row access to a dataset that may not fit in memory.
+pub trait SampleSource: Send + Sync {
+    /// Dataset name (feeds `Problem` naming, so traces from different
+    /// sources over the same rows compare equal).
+    fn name(&self) -> &str;
+    fn task(&self) -> Task;
+    fn num_samples(&self) -> usize;
+    fn dim(&self) -> usize;
+    /// Read rows `lo..hi` into `buf`. `buf` must have been created with
+    /// `ChunkBuf::new(self.dim(), cap)` for some `cap ≥ hi − lo`; the read
+    /// reuses its storage and allocates nothing in steady state.
+    fn read_chunk(&self, lo: usize, hi: usize, buf: &mut ChunkBuf) -> Result<(), String>;
+}
+
+/// Reusable chunk buffer: one flat feature block + targets + raw-byte
+/// scratch, sized once at construction. Chunked loops hand the same buffer
+/// to every `read_chunk` call, so the steady state is allocation-free.
+#[derive(Debug)]
+pub struct ChunkBuf {
+    dim: usize,
+    rows: usize,
+    features: Vec<f64>,
+    targets: Vec<f64>,
+    bytes: Vec<u8>,
+}
+
+impl ChunkBuf {
+    pub fn new(dim: usize, capacity_rows: usize) -> ChunkBuf {
+        assert!(dim > 0 && capacity_rows > 0, "empty chunk buffer");
+        ChunkBuf {
+            dim,
+            rows: 0,
+            features: vec![0.0; capacity_rows * dim],
+            targets: vec![0.0; capacity_rows],
+            bytes: vec![0u8; capacity_rows * (dim + 1) * 8],
+        }
+    }
+
+    pub fn capacity_rows(&self) -> usize {
+        self.targets.len()
+    }
+
+    /// Rows held by the last `read_chunk`.
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Feature row `i` of the current chunk.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        debug_assert!(i < self.rows);
+        &self.features[i * self.dim..(i + 1) * self.dim]
+    }
+
+    /// Target of row `i` of the current chunk.
+    #[inline]
+    pub fn target(&self, i: usize) -> f64 {
+        debug_assert!(i < self.rows);
+        self.targets[i]
+    }
+
+    /// Flat feature block of the current chunk (`rows × dim`, row-major).
+    pub fn features(&self) -> &[f64] {
+        &self.features[..self.rows * self.dim]
+    }
+
+    pub fn targets(&self) -> &[f64] {
+        &self.targets[..self.rows]
+    }
+
+    /// Reset for an incoming chunk of `rows` rows; panics past capacity so a
+    /// mis-sized loop fails loudly instead of reallocating silently.
+    fn reset(&mut self, rows: usize) -> (&mut [f64], &mut [f64]) {
+        assert!(
+            rows <= self.capacity_rows(),
+            "chunk of {rows} rows exceeds buffer capacity {}",
+            self.capacity_rows()
+        );
+        self.rows = rows;
+        (
+            &mut self.features[..rows * self.dim],
+            &mut self.targets[..rows],
+        )
+    }
+}
+
+/// Deterministic seeded minibatch sampler shared by every stochastic
+/// component: fills `out` with with-replacement indices in `[0, m)`. A fresh
+/// generator is built per draw from `(seed, worker, draw)`, so the sequence
+/// is replay-identical regardless of which thread or process performs the
+/// draw, and draw `t` can be regenerated without replaying draws `0..t`.
+pub fn minibatch_indices(seed: u64, worker: usize, draw: u64, m: usize, out: &mut [usize]) {
+    assert!(m > 0, "cannot sample from an empty shard");
+    let stream = 0x5bd1_e995_0000_0000u64 ^ ((worker as u64) << 32) ^ draw;
+    let mut rng = Pcg64::new(seed, stream);
+    for slot in out.iter_mut() {
+        *slot = rng.below(m as u64) as usize;
+    }
+}
+
+/// In-memory source wrapping a [`Dataset`] — the oracle the out-of-core
+/// paths are pinned bit-identical against.
+pub struct InMemorySource {
+    ds: Dataset,
+}
+
+impl InMemorySource {
+    pub fn new(ds: Dataset) -> InMemorySource {
+        InMemorySource { ds }
+    }
+
+    pub fn dataset(&self) -> &Dataset {
+        &self.ds
+    }
+
+    pub fn into_dataset(self) -> Dataset {
+        self.ds
+    }
+}
+
+impl SampleSource for InMemorySource {
+    fn name(&self) -> &str {
+        &self.ds.name
+    }
+
+    fn task(&self) -> Task {
+        self.ds.task
+    }
+
+    fn num_samples(&self) -> usize {
+        self.ds.num_samples()
+    }
+
+    fn dim(&self) -> usize {
+        self.ds.dim()
+    }
+
+    fn read_chunk(&self, lo: usize, hi: usize, buf: &mut ChunkBuf) -> Result<(), String> {
+        check_range(lo, hi, self.num_samples())?;
+        let d = self.dim();
+        let (feat, targ) = buf.reset(hi - lo);
+        feat.copy_from_slice(&self.ds.features.data[lo * d..hi * d]);
+        targ.copy_from_slice(&self.ds.targets[lo..hi]);
+        Ok(())
+    }
+}
+
+fn check_range(lo: usize, hi: usize, m: usize) -> Result<(), String> {
+    if lo > hi || hi > m {
+        return Err(format!("chunk range {lo}..{hi} out of bounds for {m} rows"));
+    }
+    Ok(())
+}
+
+/// Out-of-core source over a binary row-major f64 file.
+///
+/// Layout: a 32-byte header `[magic, rows, dim, task]` (u64 LE each; task
+/// 0 = linreg, 1 = logreg), then `rows` records of `dim` features + 1 target
+/// (f64 LE). Reads go through `read_exact_at` on a shared handle — `&self`,
+/// no seek state, safe to feed a thread pool.
+pub struct FileBackedSource {
+    file: File,
+    path: PathBuf,
+    name: String,
+    task: Task,
+    rows: usize,
+    dim: usize,
+}
+
+impl FileBackedSource {
+    /// Stream `src` to `path` chunk by chunk (peak memory = one chunk), then
+    /// open the result. The returned source keeps `src`'s name, so problems
+    /// built from either compare equal in traces.
+    pub fn create(
+        path: &Path,
+        src: &dyn SampleSource,
+        chunk_rows: usize,
+    ) -> Result<FileBackedSource, String> {
+        let (m, d) = (src.num_samples(), src.dim());
+        let mut file = File::create(path).map_err(|e| format!("create {path:?}: {e}"))?;
+        let task_tag: u64 = match src.task() {
+            Task::LinearRegression => 0,
+            Task::LogisticRegression => 1,
+        };
+        let mut header = [0u8; 32];
+        header[0..8].copy_from_slice(&FILE_MAGIC.to_le_bytes());
+        header[8..16].copy_from_slice(&(m as u64).to_le_bytes());
+        header[16..24].copy_from_slice(&(d as u64).to_le_bytes());
+        header[24..32].copy_from_slice(&task_tag.to_le_bytes());
+        file.write_all(&header).map_err(|e| format!("write {path:?}: {e}"))?;
+        let mut buf = ChunkBuf::new(d, chunk_rows.max(1).min(m.max(1)));
+        let mut record = Vec::with_capacity((d + 1) * 8 * buf.capacity_rows());
+        let mut lo = 0;
+        while lo < m {
+            let hi = (lo + buf.capacity_rows()).min(m);
+            src.read_chunk(lo, hi, &mut buf)?;
+            record.clear();
+            for i in 0..buf.rows() {
+                for &v in buf.row(i) {
+                    record.extend_from_slice(&v.to_le_bytes());
+                }
+                record.extend_from_slice(&buf.target(i).to_le_bytes());
+            }
+            file.write_all(&record).map_err(|e| format!("write {path:?}: {e}"))?;
+            lo = hi;
+        }
+        file.flush().map_err(|e| format!("flush {path:?}: {e}"))?;
+        drop(file);
+        Self::open_named(path, src.name())
+    }
+
+    /// Open an existing file; the source is named after the file stem.
+    pub fn open(path: &Path) -> Result<FileBackedSource, String> {
+        let name = path
+            .file_stem()
+            .map(|s| s.to_string_lossy().into_owned())
+            .unwrap_or_else(|| "file-backed".to_string());
+        Self::open_named(path, &name)
+    }
+
+    /// Open with an explicit dataset name (used when the file is a spill of
+    /// a known dataset and traces should keep the original problem name).
+    pub fn open_named(path: &Path, name: &str) -> Result<FileBackedSource, String> {
+        let file = File::open(path).map_err(|e| format!("open {path:?}: {e}"))?;
+        let mut header = [0u8; 32];
+        read_exact_at(&file, &mut header, 0).map_err(|e| format!("read {path:?}: {e}"))?;
+        let word = |k: usize| u64::from_le_bytes(header[k * 8..(k + 1) * 8].try_into().unwrap());
+        if word(0) != FILE_MAGIC {
+            return Err(format!("{path:?} is not a gadmm sample file (bad magic)"));
+        }
+        let (rows, dim, task_tag) = (word(1) as usize, word(2) as usize, word(3));
+        let task = match task_tag {
+            0 => Task::LinearRegression,
+            1 => Task::LogisticRegression,
+            t => return Err(format!("{path:?}: unknown task tag {t}")),
+        };
+        if dim == 0 {
+            return Err(format!("{path:?}: zero-dimension sample file"));
+        }
+        let expected = 32 + (rows as u64) * ((dim as u64) + 1) * 8;
+        let actual = file
+            .metadata()
+            .map_err(|e| format!("stat {path:?}: {e}"))?
+            .len();
+        if actual != expected {
+            return Err(format!(
+                "{path:?}: truncated sample file ({actual} bytes, expected {expected})"
+            ));
+        }
+        Ok(FileBackedSource {
+            file,
+            path: path.to_path_buf(),
+            name: name.to_string(),
+            task,
+            rows,
+            dim,
+        })
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+}
+
+#[cfg(unix)]
+fn read_exact_at(file: &File, buf: &mut [u8], offset: u64) -> std::io::Result<()> {
+    use std::os::unix::fs::FileExt;
+    file.read_exact_at(buf, offset)
+}
+
+#[cfg(not(unix))]
+fn read_exact_at(file: &File, buf: &mut [u8], offset: u64) -> std::io::Result<()> {
+    // Fallback for non-unix hosts: a seeking read on a cloned handle.
+    use std::io::{Read, Seek, SeekFrom};
+    let mut f = file.try_clone()?;
+    f.seek(SeekFrom::Start(offset))?;
+    f.read_exact(buf)
+}
+
+impl SampleSource for FileBackedSource {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn task(&self) -> Task {
+        self.task
+    }
+
+    fn num_samples(&self) -> usize {
+        self.rows
+    }
+
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn read_chunk(&self, lo: usize, hi: usize, buf: &mut ChunkBuf) -> Result<(), String> {
+        check_range(lo, hi, self.rows)?;
+        assert_eq!(buf.dim, self.dim, "chunk buffer dim mismatch");
+        let d = self.dim;
+        let stride = (d + 1) * 8;
+        let rows = hi - lo;
+        let nbytes = rows * stride;
+        assert!(
+            rows <= buf.capacity_rows(),
+            "chunk of {rows} rows exceeds buffer capacity {}",
+            buf.capacity_rows()
+        );
+        let offset = 32 + (lo * stride) as u64;
+        read_exact_at(&self.file, &mut buf.bytes[..nbytes], offset)
+            .map_err(|e| format!("read {:?}: {e}", self.path))?;
+        buf.rows = rows;
+        // Disjoint field borrows: bytes is read while features/targets are
+        // written, so split the struct instead of going through `reset`.
+        let ChunkBuf {
+            features,
+            targets,
+            bytes,
+            ..
+        } = buf;
+        for i in 0..rows {
+            let rec = i * stride;
+            for j in 0..d {
+                let k = rec + j * 8;
+                features[i * d + j] = f64::from_le_bytes(bytes[k..k + 8].try_into().unwrap());
+            }
+            let k = rec + d * 8;
+            targets[i] = f64::from_le_bytes(bytes[k..k + 8].try_into().unwrap());
+        }
+        Ok(())
+    }
+}
+
+/// Synthetic stream with per-row-seeded generation: row `i` draws from its
+/// own PCG stream, so `read_chunk(lo, hi)` is a pure function of the row
+/// range — chunk boundaries do not change the data, unlike the sequential
+/// generators in [`super::synthetic`]. Statistically it matches that module:
+/// column scaling `kappa^(−j/(2(d−1)))`, row scaling `1 + 2i/(m−1)`,
+/// `y = xᵀθ₀ + 0.1ε` (linreg) / `sign(xᵀθ₀/√d + 0.3ε)` (logreg).
+pub struct SyntheticStream {
+    name: String,
+    task: Task,
+    m: usize,
+    d: usize,
+    seed: u64,
+    theta0: Vec<f64>,
+    col_scale: Vec<f64>,
+}
+
+impl SyntheticStream {
+    pub fn new(task: Task, m: usize, d: usize, kappa: f64, seed: u64) -> SyntheticStream {
+        assert!(m > 0 && d > 0, "empty stream");
+        assert!(kappa >= 1.0);
+        let theta0 = Pcg64::new(seed, 0x7e7a_0001).normal_vec(d);
+        let col_scale: Vec<f64> = (0..d)
+            .map(|j| {
+                if d > 1 {
+                    kappa.powf(-(j as f64) / (2.0 * (d as f64 - 1.0)))
+                } else {
+                    1.0
+                }
+            })
+            .collect();
+        let kind = match task {
+            Task::LinearRegression => "linreg",
+            Task::LogisticRegression => "logreg",
+        };
+        SyntheticStream {
+            name: format!("stream-{kind}-{m}x{d}"),
+            task,
+            m,
+            d,
+            seed,
+            theta0,
+            col_scale,
+        }
+    }
+
+    /// Generate row `i` into `feat`, returning the target.
+    fn gen_row(&self, i: usize, feat: &mut [f64]) -> f64 {
+        let mut rng = Pcg64::new(self.seed, 0x7031_0000_0000u64 ^ (i as u64));
+        let rs = synthetic::row_scale(i, self.m);
+        let mut z = 0.0;
+        for j in 0..self.d {
+            let v = rng.normal() * self.col_scale[j] * rs;
+            feat[j] = v;
+            z += v * self.theta0[j];
+        }
+        match self.task {
+            Task::LinearRegression => z + 0.1 * rng.normal(),
+            Task::LogisticRegression => {
+                let margin = z / (self.d as f64).sqrt();
+                if margin + 0.3 * rng.normal() >= 0.0 {
+                    1.0
+                } else {
+                    -1.0
+                }
+            }
+        }
+    }
+}
+
+impl SampleSource for SyntheticStream {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn task(&self) -> Task {
+        self.task
+    }
+
+    fn num_samples(&self) -> usize {
+        self.m
+    }
+
+    fn dim(&self) -> usize {
+        self.d
+    }
+
+    fn read_chunk(&self, lo: usize, hi: usize, buf: &mut ChunkBuf) -> Result<(), String> {
+        check_range(lo, hi, self.m)?;
+        let d = self.d;
+        let (feat, targ) = buf.reset(hi - lo);
+        for (k, i) in (lo..hi).enumerate() {
+            targ[k] = self.gen_row(i, &mut feat[k * d..(k + 1) * d]);
+        }
+        Ok(())
+    }
+}
+
+/// Materialize a source into an in-memory [`Dataset`] via chunked reads.
+/// Only sane for sources that fit in RAM — the stream driver uses it to
+/// build the in-memory arm of the RSS comparison.
+pub fn materialize(src: &dyn SampleSource, chunk_rows: usize) -> Result<Dataset, String> {
+    let (m, d) = (src.num_samples(), src.dim());
+    let mut features = vec![0.0; m * d];
+    let mut targets = vec![0.0; m];
+    let mut buf = ChunkBuf::new(d, chunk_rows.max(1).min(m.max(1)));
+    let mut lo = 0;
+    while lo < m {
+        let hi = (lo + buf.capacity_rows()).min(m);
+        src.read_chunk(lo, hi, &mut buf)?;
+        features[lo * d..hi * d].copy_from_slice(buf.features());
+        targets[lo..hi].copy_from_slice(buf.targets());
+        lo = hi;
+    }
+    Ok(Dataset {
+        name: src.name().to_string(),
+        task: src.task(),
+        features: Matrix::from_vec(m, d, features),
+        targets,
+    })
+}
+
+/// Two-pass streaming standardizer. `fit` accumulates per-column mean and
+/// variance over chunks in ascending row order — the *same* floating-point
+/// operand order as [`Dataset::standardize`] — so applying it reproduces the
+/// in-memory result bit for bit.
+pub struct Standardizer {
+    pub mean: Vec<f64>,
+    pub std: Vec<f64>,
+}
+
+impl Standardizer {
+    pub fn fit(
+        src: &dyn SampleSource,
+        has_bias: bool,
+        chunk_rows: usize,
+    ) -> Result<Standardizer, String> {
+        let (m, d) = (src.num_samples(), src.dim());
+        let dlim = if has_bias { d - 1 } else { d };
+        let mut mean = vec![0.0; d];
+        let mut std = vec![1.0; d];
+        let mut buf = ChunkBuf::new(d, chunk_rows.max(1).min(m.max(1)));
+        // Pass 1: column means, rows ascending within each column. Chunks
+        // arrive row-major, but per-column accumulators summed across
+        // ascending chunks add the exact same values in the exact same
+        // order as the column-major in-memory loop.
+        let mut lo = 0;
+        while lo < m {
+            let hi = (lo + buf.capacity_rows()).min(m);
+            src.read_chunk(lo, hi, &mut buf)?;
+            for i in 0..buf.rows() {
+                let row = buf.row(i);
+                for (j, acc) in mean.iter_mut().take(dlim).enumerate() {
+                    *acc += row[j];
+                }
+            }
+            lo = hi;
+        }
+        for acc in mean.iter_mut().take(dlim) {
+            *acc /= m as f64;
+        }
+        // Pass 2: centered second moments, same ordering argument.
+        let mut var = vec![0.0; d];
+        lo = 0;
+        while lo < m {
+            let hi = (lo + buf.capacity_rows()).min(m);
+            src.read_chunk(lo, hi, &mut buf)?;
+            for i in 0..buf.rows() {
+                let row = buf.row(i);
+                for (j, acc) in var.iter_mut().take(dlim).enumerate() {
+                    let c = row[j] - mean[j];
+                    *acc += c * c;
+                }
+            }
+            lo = hi;
+        }
+        for j in 0..dlim {
+            var[j] /= m as f64;
+            std[j] = var[j].sqrt().max(1e-12);
+        }
+        if has_bias {
+            mean[d - 1] = 0.0;
+        }
+        Ok(Standardizer { mean, std })
+    }
+
+    /// Standardize one feature row in place (`(x − mean) / std` per column;
+    /// bias column untouched because its mean is 0 and std is 1).
+    pub fn apply_row(&self, row: &mut [f64]) {
+        debug_assert_eq!(row.len(), self.mean.len());
+        for (j, x) in row.iter_mut().enumerate() {
+            *x = (*x - self.mean[j]) / self.std[j];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+
+    fn tmp_path(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("gadmm-src-{tag}-{}", std::process::id()))
+    }
+
+    #[test]
+    fn in_memory_chunks_match_dataset_rows() {
+        let ds = synthetic::linreg(37, 5, &mut Pcg64::seeded(1));
+        let src = InMemorySource::new(ds.clone());
+        let mut buf = ChunkBuf::new(5, 8);
+        let mut lo = 0;
+        while lo < 37 {
+            let hi = (lo + 8).min(37);
+            src.read_chunk(lo, hi, &mut buf).unwrap();
+            for i in 0..buf.rows() {
+                assert_eq!(buf.row(i), ds.features.row(lo + i));
+                assert_eq!(buf.target(i), ds.targets[lo + i]);
+            }
+            lo = hi;
+        }
+    }
+
+    #[test]
+    fn file_backed_round_trips_bitwise() {
+        let ds = synthetic::logreg(41, 4, &mut Pcg64::seeded(2));
+        let src = InMemorySource::new(ds.clone());
+        let path = tmp_path("roundtrip");
+        let fb = FileBackedSource::create(&path, &src, 7).unwrap();
+        assert_eq!(fb.name(), ds.name);
+        assert_eq!(fb.task(), Task::LogisticRegression);
+        assert_eq!((fb.num_samples(), fb.dim()), (41, 4));
+        let back = materialize(&fb, 9).unwrap();
+        assert_eq!(back.features.data, ds.features.data);
+        assert_eq!(back.targets, ds.targets);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn open_rejects_bad_files() {
+        let path = tmp_path("bad");
+        std::fs::write(&path, b"definitely not a sample file").unwrap();
+        let err = FileBackedSource::open(&path).unwrap_err();
+        assert!(err.contains("magic") || err.contains("truncated"), "{err}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn synthetic_stream_is_chunk_invariant() {
+        let s = SyntheticStream::new(Task::LinearRegression, 53, 6, 100.0, 9);
+        let whole = materialize(&s, 53).unwrap();
+        for chunk in [1usize, 7, 13, 52] {
+            let again = materialize(&s, chunk).unwrap();
+            assert_eq!(again.features.data, whole.features.data, "chunk={chunk}");
+            assert_eq!(again.targets, whole.targets, "chunk={chunk}");
+        }
+    }
+
+    #[test]
+    fn synthetic_stream_statistics_are_sane() {
+        let s = SyntheticStream::new(Task::LogisticRegression, 400, 8, 50.0, 4);
+        let ds = materialize(&s, 64).unwrap();
+        assert!(ds.targets.iter().all(|&y| y == 1.0 || y == -1.0));
+        let pos = ds.targets.iter().filter(|&&y| y > 0.0).count();
+        assert!(pos > 60 && pos < 340, "pos={pos}");
+        // Row scaling grows along the index, as in data::synthetic.
+        let head: f64 = ds.features.row(0).iter().map(|x| x * x).sum();
+        let tail: f64 = ds.features.row(399).iter().map(|x| x * x).sum();
+        assert!(tail > head);
+    }
+
+    #[test]
+    fn minibatch_sampler_is_pure_and_seed_sensitive() {
+        let mut a = [0usize; 16];
+        let mut b = [0usize; 16];
+        minibatch_indices(7, 3, 11, 100, &mut a);
+        minibatch_indices(7, 3, 11, 100, &mut b);
+        assert_eq!(a, b);
+        assert!(a.iter().all(|&i| i < 100));
+        minibatch_indices(7, 3, 12, 100, &mut b);
+        assert_ne!(a, b, "draw index must matter");
+        minibatch_indices(7, 4, 11, 100, &mut b);
+        assert_ne!(a, b, "worker id must matter");
+        minibatch_indices(8, 3, 11, 100, &mut b);
+        assert_ne!(a, b, "seed must matter");
+    }
+
+    #[test]
+    fn streamed_standardizer_matches_in_memory_bitwise() {
+        for has_bias in [false, true] {
+            let mut ds = synthetic::linreg(61, 5, &mut Pcg64::seeded(5));
+            let src = InMemorySource::new(ds.clone());
+            let st = Standardizer::fit(&src, has_bias, 10).unwrap();
+            ds.standardize(has_bias);
+            let mut streamed = src.into_dataset();
+            for i in 0..streamed.features.rows {
+                let d = streamed.features.cols;
+                st.apply_row(&mut streamed.features.data[i * d..(i + 1) * d]);
+            }
+            assert_eq!(streamed.features.data, ds.features.data, "bias={has_bias}");
+        }
+    }
+
+    #[test]
+    fn chunk_buf_overflow_panics() {
+        let s = SyntheticStream::new(Task::LinearRegression, 10, 3, 1.0, 1);
+        let mut buf = ChunkBuf::new(3, 4);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            s.read_chunk(0, 5, &mut buf).unwrap();
+        }));
+        assert!(r.is_err(), "oversized chunk must panic, not reallocate");
+    }
+}

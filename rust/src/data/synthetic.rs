@@ -48,7 +48,7 @@ fn gaussian_design(m: usize, d: usize, kappa: f64, rng: &mut Pcg64) -> Matrix {
 /// chain-order-dependent duals stay stable under per-iteration re-chaining
 /// (the paper's Fig. 8 regime). The gradient baselines' 10⁴⁺-iteration
 /// counts come from the design's conditioning (κ), not from heterogeneity.
-fn row_scale(i: usize, m: usize) -> f64 {
+pub(crate) fn row_scale(i: usize, m: usize) -> f64 {
     1.0 + 2.0 * (i as f64) / (m.max(2) as f64 - 1.0)
 }
 

@@ -40,6 +40,12 @@
 //!   block-structured MLP, per-layer bits breakdown, replay determinism
 //!   and the lazy-plan bits win; see
 //!   `docs/adr/009-block-layout-lfgadmm.md`)
+//! * [`stream::run`]   — the out-of-core data-axis sweep behind
+//!   `gadmm stream` (`BENCH_stream.json`: file-backed streaming shards
+//!   vs in-memory builds, full-batch GADMM vs S-GADMM across a batch
+//!   ladder, per-iteration FLOPs, peak RSS, replay + file≡mem +
+//!   streamed-standardize identity pins; see
+//!   `docs/adr/010-sample-source-and-stochastic-prox.md`)
 
 pub mod bench;
 pub mod censor;
@@ -53,6 +59,7 @@ pub mod layers;
 pub mod netbench;
 pub mod qgadmm;
 pub mod scale;
+pub mod stream;
 pub mod table1;
 
 use crate::metrics::Trace;

@@ -18,7 +18,6 @@ use crate::model::Problem;
 use crate::net::lead::{run_lead_on, ServeConfig};
 use crate::net::DEFAULT_TIMEOUT_MS;
 use crate::optim::RunOptions;
-use crate::runtime::{LocalSolver, NativeSolver};
 use crate::session::AlgoSpec;
 use crate::topology::chain::Chain;
 use crate::topology::graph::{GraphKind, DEFAULT_RGG_RADIUS};
@@ -224,8 +223,9 @@ pub fn run_with(
     Ok(NetbenchOutput { rows, rendered, report })
 }
 
-/// The in-process reference: the channel coordinator with native solvers
-/// (the exact path `gadmm train` takes), seeded identically to the net run.
+/// The in-process reference: the channel coordinator with the spec's own
+/// solvers (exact prox, or S-GADMM's seeded stochastic prox — the exact
+/// path `gadmm train` takes), seeded identically to the net run.
 fn run_inproc(
     algo: &AlgoSpec,
     problem: &Problem,
@@ -233,9 +233,7 @@ fn run_inproc(
     opts: &RunOptions,
 ) -> Result<TrainResult, String> {
     let n = problem.num_workers();
-    let solvers: Vec<Box<dyn LocalSolver + Send + '_>> = (0..n)
-        .map(|w| Box::new(NativeSolver::new(&*problem.losses[w])) as _)
-        .collect();
+    let solvers = coordinator::spec_solvers(problem, algo, seed)?;
     match *algo {
         AlgoSpec::Ggadmm { graph: kind, .. } => {
             let placement = Placement::random(n, AREA_SIDE, &mut Pcg64::new(seed, 0x7a41));

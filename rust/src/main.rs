@@ -28,6 +28,9 @@
 //!              — writes BENCH_net.json (in-process vs localhost processes)
 //! gadmm scale [--quick] [--out results/]
 //!              — writes BENCH_scale.json (massive-N chain/RGG scaling sweep)
+//! gadmm stream [--quick] [--out results/]
+//!              — writes BENCH_stream.json (out-of-core file-backed shards +
+//!                stochastic-subproblem S-GADMM vs full-batch GADMM)
 //! gadmm layers [--quick] [--out results/]
 //!              — writes BENCH_layers.json (L-FGADMM layer-schedule grid
 //!                on the block-structured MLP)
@@ -39,12 +42,12 @@ use gadmm::coordinator;
 use gadmm::data::partition_even;
 use gadmm::experiments::{
     bench, censor, chaos, curves, fig6, fig7, fig8, graph, layers, netbench, qgadmm, scale,
-    table1, write_report, write_trace_csv,
+    stream, table1, write_report, write_trace_csv,
 };
 use gadmm::net;
 use gadmm::model::Problem;
 use gadmm::optim::RunOptions;
-use gadmm::runtime::{artifacts_dir, service::PjrtService, Manifest, NativeSolver};
+use gadmm::runtime::{artifacts_dir, service::PjrtService, Manifest};
 use gadmm::session::{AlgoSpec, SweepRunner, SweepSpec};
 use gadmm::topology::{chain, EnergyCostModel, Placement, UnitCosts};
 use gadmm::util::cli::Args;
@@ -334,6 +337,23 @@ fn dispatch(sub: &str, args: &Args) -> Result<(), String> {
             }
             Ok(())
         }
+        "stream" => {
+            let quick = args.flag("quick");
+            let seed = args.get_u64("seed", 1)?;
+            let out = stream::run(quick, seed)?;
+            println!("{}", out.rendered);
+            let path = write_report(&out_dir(args), "BENCH_stream", &out.report)
+                .map_err(|e| e.to_string())?;
+            println!("report: {}", path.display());
+            if !out.all_identical() {
+                return Err(
+                    "streaming sweep broke an identity pin — file-backed shards or the \
+                     seeded minibatch replay diverged"
+                        .into(),
+                );
+            }
+            Ok(())
+        }
         "layers" => {
             let quick = args.flag("quick");
             let seed = args.get_u64("seed", 1)?;
@@ -437,8 +457,8 @@ fn cmd_train(args: &Args) -> Result<(), String> {
             let parsed = AlgoSpec::parse(s)?;
             if !parsed.is_static_chain() && !matches!(parsed, AlgoSpec::Ggadmm { .. }) {
                 return Err(format!(
-                    "--algo must name a static-topology engine (gadmm, qgadmm, cgadmm, \
-                     cqgadmm, ggadmm), got '{s}'"
+                    "--algo must name a static-topology engine (gadmm, sgadmm, qgadmm, \
+                     cgadmm, cqgadmm, lfgadmm, ggadmm), got '{s}'"
                 ));
             }
             parsed
@@ -497,12 +517,10 @@ fn cmd_train(args: &Args) -> Result<(), String> {
     let quant_seed = cfg.quant_seed_or_default();
     let result = match backend.as_str() {
         "native" => {
-            let solvers = (0..cfg.workers)
-                .map(|w| {
-                    Box::new(NativeSolver::new(&*problem.losses[w]))
-                        as Box<dyn gadmm::runtime::LocalSolver + Send + '_>
-                })
-                .collect();
+            // The spec picks its own per-worker solver (exact prox, or
+            // S-GADMM's seeded stochastic prox) through the same factory
+            // the TCP workers use.
+            let solvers = coordinator::spec_solvers(&problem, &spec, quant_seed)?;
             match graph_topology {
                 Some(g) => coordinator::train_graph_spec(
                     &problem, solvers, &spec, quant_seed, g, &costs, &opts,
@@ -513,6 +531,13 @@ fn cmd_train(args: &Args) -> Result<(), String> {
             }
         }
         "pjrt" => {
+            if matches!(spec, AlgoSpec::Sgadmm { .. }) {
+                return Err(
+                    "sgadmm runs its stochastic prox on the native backend only (the PJRT \
+                     artifacts compile the exact subproblem solve)"
+                        .into(),
+                );
+            }
             let manifest = Manifest::load(&artifacts_dir())?;
             let shards = partition_even(&ds, cfg.workers);
             let service = PjrtService::spawn(
@@ -822,6 +847,11 @@ subcommands:
   scale    massive-N scaling sweep -> BENCH_scale.json (chain + RGG
            ladders to N=4096, wall + per-phase us/iteration, peak RSS,
            replay and serial-vs-pool determinism columns; --quick for CI)
+  stream   out-of-core data-axis sweep -> BENCH_stream.json (file-backed
+           streaming shards vs in-memory, stochastic-subproblem S-GADMM
+           vs full-batch GADMM: iters/TC/bits/FLOPs to target, peak RSS,
+           replay + file-backed identity columns; --quick for CI; specs
+           accept 'sgadmm:rho=5,batch=64,epochs=1')
   layers   L-FGADMM layer-schedule grid on the block-structured MLP ->
            BENCH_layers.json (period plans, per-layer bits breakdown,
            replay determinism, lazy-plan bits win; --quick for CI; specs

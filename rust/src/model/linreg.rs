@@ -181,6 +181,19 @@ impl LocalLoss for LinRegLoss {
         }
         factor.solve_in_place(out);
     }
+
+    /// Squared loss is a plain sum over rows: expose it for the stochastic
+    /// prox. The weight is *not* folded into `x`/`y` (only into the cached
+    /// Gram products), so the view carries it explicitly.
+    fn sample_view(&self) -> Option<super::SampleView<'_>> {
+        Some(super::SampleView {
+            x: &self.x,
+            y: &self.y,
+            weight: self.weight,
+            mu: 0.0,
+            task: crate::data::Task::LinearRegression,
+        })
+    }
 }
 
 #[cfg(test)]

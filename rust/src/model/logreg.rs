@@ -287,6 +287,18 @@ impl LocalLoss for LogRegLoss {
             }
         }
     }
+
+    /// The data term is a sum of per-sample logistic losses; the ridge term
+    /// `(μ/2)‖θ‖²` sits outside the sum, so the view reports it via `mu`.
+    fn sample_view(&self) -> Option<super::SampleView<'_>> {
+        Some(super::SampleView {
+            x: &self.x,
+            y: &self.y,
+            weight: self.weight,
+            mu: self.mu,
+            task: crate::data::Task::LogisticRegression,
+        })
+    }
 }
 
 #[cfg(test)]

@@ -16,11 +16,28 @@ pub mod linreg;
 pub mod logreg;
 pub mod mlp;
 pub mod problem;
+pub mod stochastic;
 
 pub use linreg::LinRegLoss;
 pub use logreg::LogRegLoss;
 pub use mlp::{mlp_layout, mlp_problem, MlpLoss};
 pub use problem::Problem;
+pub use stochastic::StochasticProx;
+
+/// Borrowed per-sample view of a loss whose data term is a sum over rows —
+/// the seam [`StochasticProx`] needs to form minibatch variance-reduced
+/// gradients without knowing the loss family. `mu` is the ridge coefficient
+/// *outside* the per-sample sum (0 for linreg).
+#[derive(Clone, Copy)]
+pub struct SampleView<'a> {
+    pub x: &'a crate::linalg::Matrix,
+    pub y: &'a [f64],
+    /// Normalization weight on the data term (the library uses 1/m_total).
+    pub weight: f64,
+    /// Ridge coefficient of the `(μ/2)‖θ‖²` term (not per-sample).
+    pub mu: f64,
+    pub task: crate::data::Task,
+}
 
 /// A worker-local, closed, proper, convex loss `f_n`.
 pub trait LocalLoss: Send + Sync {
@@ -74,6 +91,13 @@ pub trait LocalLoss: Send + Sync {
     /// losses keep working unchanged.
     fn prox_argmin_into(&self, q: &[f64], c: f64, warm: &[f64], out: &mut [f64]) {
         out.copy_from_slice(&self.prox_argmin(q, c, warm));
+    }
+
+    /// Per-sample view of the data term, if this loss is a sum over rows.
+    /// Losses without one (e.g. the MLP) return `None` and cannot feed
+    /// [`StochasticProx`]; everything else in the system ignores this.
+    fn sample_view(&self) -> Option<SampleView<'_>> {
+        None
     }
 }
 

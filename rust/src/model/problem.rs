@@ -1,8 +1,8 @@
 //! A distributed problem instance: N worker losses + the reference optimum.
 
 use super::{LinRegLoss, LocalLoss, LogRegLoss};
-use crate::data::{partition_even, Dataset, Task};
-use crate::linalg::{vector as vec_ops, BlockLayout};
+use crate::data::{partition_checked, partition_even, ChunkBuf, Dataset, SampleSource, Shard, Task};
+use crate::linalg::{vector as vec_ops, BlockLayout, Matrix};
 
 /// Default ridge coefficient per worker for logistic regression (makes θ*
 /// unique; part of the objective for every algorithm).
@@ -36,11 +36,68 @@ impl Problem {
     /// see [`crate::optim::solver`]).
     pub fn from_dataset(ds: &Dataset, n_workers: usize) -> Problem {
         let shards = partition_even(ds, n_workers);
+        Problem::from_shards(&ds.name, ds.task, ds.dim(), ds.num_samples(), &shards, n_workers)
+    }
+
+    /// Build from a [`SampleSource`] without ever materializing the full
+    /// dataset in memory at once: shard bounds come from
+    /// [`partition_checked`], and each shard is assembled from
+    /// `chunk_rows`-row reads through one reusable [`ChunkBuf`] — so the
+    /// transient footprint beyond the shards themselves is a single chunk.
+    /// Rows round-trip bitwise through the source, so the resulting losses
+    /// (and therefore every engine trajectory on them) are bit-identical
+    /// to [`Problem::from_dataset`] on the materialized dataset — pinned
+    /// in `rust/tests/properties.rs`.
+    pub fn from_source(
+        src: &dyn SampleSource,
+        n_workers: usize,
+        chunk_rows: usize,
+    ) -> Result<Problem, String> {
+        if chunk_rows == 0 {
+            return Err("from_source chunk_rows must be ≥ 1".into());
+        }
+        let m = src.num_samples();
+        let d = src.dim();
+        let bounds = partition_checked(m, n_workers)?;
+        let mut buf = ChunkBuf::new(d, chunk_rows);
+        let mut shards = Vec::with_capacity(n_workers);
+        for (w, &(lo, hi)) in bounds.iter().enumerate() {
+            let rows = hi - lo;
+            let mut features = Vec::with_capacity(rows * d);
+            let mut targets = Vec::with_capacity(rows);
+            let mut at = lo;
+            while at < hi {
+                let end = (at + buf.capacity_rows()).min(hi);
+                src.read_chunk(at, end, &mut buf)?;
+                features.extend_from_slice(buf.features());
+                targets.extend_from_slice(buf.targets());
+                at = end;
+            }
+            shards.push(Shard {
+                worker: w,
+                features: Matrix::from_vec(rows, d, features),
+                targets,
+            });
+        }
+        Ok(Problem::from_shards(src.name(), src.task(), d, m, &shards, n_workers))
+    }
+
+    /// The single loss-construction core behind [`Problem::from_dataset`]
+    /// and [`Problem::from_source`]: same weights, same ridge, same
+    /// reference solve, so the two entry points can never drift.
+    fn from_shards(
+        name: &str,
+        task: Task,
+        dim: usize,
+        m_total: usize,
+        shards: &[Shard],
+        n_workers: usize,
+    ) -> Problem {
         // Normalize by the total sample count: the global objective is the
         // mean loss, keeping local curvature O(1) across dataset sizes so a
         // single ρ regime (the paper's 1–7) is meaningful everywhere.
-        let w = 1.0 / ds.num_samples() as f64;
-        let losses: Vec<Box<dyn LocalLoss>> = match ds.task {
+        let w = 1.0 / m_total as f64;
+        let losses: Vec<Box<dyn LocalLoss>> = match task {
             Task::LinearRegression => shards
                 .iter()
                 .map(|s| Box::new(LinRegLoss::from_shard(s, w)) as Box<dyn LocalLoss>)
@@ -53,11 +110,10 @@ impl Problem {
                 })
                 .collect(),
         };
-        let dim = ds.dim();
         let (theta_star, f_star) = crate::optim::solver::solve_reference(&losses, dim);
         Problem {
-            name: format!("{}-N{}", ds.name, n_workers),
-            task: ds.task,
+            name: format!("{name}-N{n_workers}"),
+            task,
             losses,
             dim,
             layout: BlockLayout::single(dim),
@@ -160,6 +216,37 @@ mod tests {
         let mut g = vec![0.0; p.dim];
         p.global_grad(&p.theta_star, &mut g);
         assert!(vec_ops::norm2(&g) < 1e-7, "‖∇F(θ*)‖ = {}", vec_ops::norm2(&g));
+    }
+
+    #[test]
+    fn from_source_matches_from_dataset_bitwise() {
+        // Uneven split (97 across 4) + a chunk size that straddles shard
+        // boundaries: the streamed build must reproduce the in-memory one
+        // exactly — name, reference solve, and every loss evaluation.
+        let ds = synthetic::linreg(97, 6, &mut Pcg64::seeded(5));
+        let mem = Problem::from_dataset(&ds, 4);
+        let src = crate::data::InMemorySource::new(ds);
+        let streamed = Problem::from_source(&src, 4, 13).unwrap();
+        assert_eq!(streamed.name, mem.name);
+        assert_eq!(streamed.dim, mem.dim);
+        assert_eq!(streamed.f_star.to_bits(), mem.f_star.to_bits());
+        for (a, b) in streamed.theta_star.iter().zip(&mem.theta_star) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        let probe = vec![0.3; mem.dim];
+        for (la, lb) in streamed.losses.iter().zip(&mem.losses) {
+            assert_eq!(la.value(&probe).to_bits(), lb.value(&probe).to_bits());
+            assert_eq!(la.num_samples(), lb.num_samples());
+        }
+    }
+
+    #[test]
+    fn from_source_rejects_degenerate_splits() {
+        let ds = synthetic::linreg(10, 3, &mut Pcg64::seeded(6));
+        let src = crate::data::InMemorySource::new(ds);
+        let err = Problem::from_source(&src, 8, 4).unwrap_err();
+        assert!(err.contains("≥ 2 samples per worker"), "{err}");
+        assert!(Problem::from_source(&src, 2, 0).is_err());
     }
 
     #[test]

@@ -1,0 +1,378 @@
+//! Stochastic prox solver: SVRG on the canonical GADMM subproblem.
+//!
+//! Full-batch GADMM solves `argmin f(θ) + ⟨q,θ⟩ + (c/2)‖θ‖²` exactly every
+//! iteration — an O(m_s·d) (logreg) or amortized-O(d²) (linreg) solve whose
+//! cost stops being free once shards leave RAM-comfortable sizes. S-GADMM
+//! replaces that solve with a fixed budget of variance-reduced minibatch
+//! steps per outer iteration:
+//!
+//! - every `R` prox calls the *anchor* `θ̃` is refreshed at the incoming
+//!   warm start, the per-sample gradient coefficients at `θ̃` are cached and
+//!   the full data gradient `ḡ = ∇f(θ̃)` (data term only) is computed once;
+//! - each inner step `s` draws a with-replacement minibatch through the
+//!   deterministic sampler ([`crate::data::minibatch_indices`]) and steps
+//!   along the SVRG estimate
+//!   `(m/B)·Σ_B (coeff_i(θ) − coeff_i(θ̃))·x_i + ḡ + q + (c+μ)·θ`
+//!   with the decaying stepsize `η_s = η₀ / (1 + s/S)`,
+//!   `η₀ = 1.8 / (L + c)`.
+//!
+//! The decay is the stability mechanism, not a tuning nicety: a constant
+//! step at the same scale diverges at paper conditioning once the epoch
+//! budget grows (it resets every call, so consecutive outer iterations stay
+//! exchangeable). Determinism: the minibatch sequence is a pure function of
+//! `(seed, worker, draw)`, the workspace is preallocated at construction,
+//! and every call runs the same arithmetic in the same order — so S-GADMM
+//! replays bit-identically across threads and across the sequential/
+//! channel/TCP media, and the steady state allocates nothing (ADR-010).
+//!
+//! `batch ≥ m_s` delegates verbatim to the inner loss's exact prox: the
+//! degenerate configuration *is* plain GADMM, which the property tests pin
+//! via `same_path`.
+
+use std::sync::Mutex;
+
+use super::{LocalLoss, SampleView};
+use crate::data::{minibatch_indices, Task};
+use crate::linalg::vector as vec_ops;
+use crate::runtime::LocalSolver;
+
+/// Numerator of the base stepsize `η₀ = ETA_SCALE / (L + c)`.
+pub const ETA_SCALE: f64 = 1.8;
+/// Anchor refresh period in prox calls.
+pub const ANCHOR_REFRESH: u64 = 8;
+
+/// SVRG prox solver over a loss exposing a per-sample view.
+///
+/// Implements both [`LocalLoss`] (so `GroupAdmmCore` engines can swap it in
+/// for the exact loss — value/gradient/Hessian delegate to the inner loss,
+/// only the prox changes) and [`LocalSolver`] (so the channel coordinator
+/// and the TCP worker plug it into the same seam as `NativeSolver`).
+pub struct StochasticProx<'a> {
+    inner: &'a dyn LocalLoss,
+    view: SampleView<'a>,
+    batch: usize,
+    /// Inner steps per prox call: `max(1, round(epochs · m_s / batch))`.
+    steps: usize,
+    seed: u64,
+    worker: usize,
+    m: usize,
+    ws: Mutex<Workspace>,
+}
+
+/// Preallocated per-solver state; one prox call runs at a time per worker,
+/// so the lock is uncontended (same discipline as logreg's workspace).
+struct Workspace {
+    /// Prox calls served so far (drives anchor refresh + sampler draws).
+    calls: u64,
+    /// Anchor point θ̃ (d).
+    anchor: Vec<f64>,
+    /// Cached per-sample gradient coefficients at θ̃ (m_s).
+    anchor_coeff: Vec<f64>,
+    /// Full data gradient at θ̃ (d).
+    gbar: Vec<f64>,
+    /// Minibatch gradient-difference accumulator (d).
+    gd: Vec<f64>,
+    /// Minibatch indices (batch).
+    idx: Vec<usize>,
+}
+
+impl<'a> StochasticProx<'a> {
+    /// `epochs` is the per-outer-iteration data budget: `epochs = 1` means
+    /// the inner steps touch ≈ m_s samples per prox call. Fractional values
+    /// are the normal operating point at scale (e.g. 0.1).
+    pub fn new(
+        inner: &'a dyn LocalLoss,
+        batch: usize,
+        epochs: f64,
+        seed: u64,
+        worker: usize,
+    ) -> Result<StochasticProx<'a>, String> {
+        if batch == 0 {
+            return Err("sgadmm batch must be ≥ 1".to_string());
+        }
+        if !(epochs > 0.0 && epochs.is_finite()) {
+            return Err(format!("sgadmm epochs must be positive and finite, got {epochs}"));
+        }
+        let view = inner.sample_view().ok_or_else(|| {
+            "loss exposes no per-sample view (stochastic prox supports linreg/logreg shards)"
+                .to_string()
+        })?;
+        let m = inner.num_samples();
+        if m == 0 {
+            return Err("stochastic prox over an empty shard".to_string());
+        }
+        let d = inner.dim();
+        let steps = ((epochs * m as f64 / batch as f64).round() as usize).max(1);
+        Ok(StochasticProx {
+            inner,
+            view,
+            batch,
+            steps,
+            seed,
+            worker,
+            m,
+            ws: Mutex::new(Workspace {
+                calls: 0,
+                anchor: vec![0.0; d],
+                anchor_coeff: vec![0.0; m],
+                gbar: vec![0.0; d],
+                gd: vec![0.0; d],
+                idx: vec![0; batch],
+            }),
+        })
+    }
+
+    /// True when `batch ≥ m_s` and every call delegates to the exact prox.
+    pub fn is_degenerate(&self) -> bool {
+        self.batch >= self.m
+    }
+
+    pub fn steps_per_call(&self) -> usize {
+        self.steps
+    }
+
+    /// Per-sample gradient coefficient `coeff_i(θ)`: the scalar such that
+    /// sample `i` contributes `coeff_i(θ)·x_i` to the data gradient.
+    #[inline]
+    fn coeff_at(&self, i: usize, theta: &[f64]) -> f64 {
+        let xi = self.view.x.row(i);
+        let yi = self.view.y[i];
+        match self.view.task {
+            Task::LinearRegression => {
+                2.0 * self.view.weight * (vec_ops::dot(xi, theta) - yi)
+            }
+            Task::LogisticRegression => {
+                let z = yi * vec_ops::dot(xi, theta);
+                -self.view.weight * yi / (1.0 + z.exp())
+            }
+        }
+    }
+
+    /// The inexact prox: SVRG inner loop from the warm start.
+    fn solve_into(&self, q: &[f64], c: f64, warm: &[f64], out: &mut [f64]) {
+        if self.is_degenerate() {
+            // batch ≥ m_s: the minibatch is the full shard — run the exact
+            // prox verbatim so S-GADMM degenerates to plain GADMM bitwise.
+            self.inner.prox_argmin_into(q, c, warm, out);
+            return;
+        }
+        let d = self.inner.dim();
+        debug_assert_eq!(out.len(), d);
+        let mut guard = self.ws.lock().unwrap();
+        let ws = &mut *guard;
+        let t = ws.calls;
+        ws.calls = t + 1;
+        if t % ANCHOR_REFRESH == 0 {
+            ws.anchor.copy_from_slice(warm);
+            for i in 0..self.m {
+                ws.anchor_coeff[i] = self.coeff_at(i, &ws.anchor);
+            }
+            self.view.x.tmatvec_into(&ws.anchor_coeff, &mut ws.gbar);
+        }
+        out.copy_from_slice(warm);
+        let eta0 = ETA_SCALE / (self.inner.smoothness() + c);
+        let scale = self.m as f64 / self.batch as f64;
+        let s_total = self.steps as f64;
+        let cmu = c + self.view.mu;
+        for s in 0..self.steps {
+            let draw = t * self.steps as u64 + s as u64;
+            minibatch_indices(self.seed, self.worker, draw, self.m, &mut ws.idx);
+            for v in ws.gd.iter_mut() {
+                *v = 0.0;
+            }
+            for &i in ws.idx.iter() {
+                // Cached anchor coefficients are bitwise what coeff_at
+                // would recompute — the anchor never moves between
+                // refreshes.
+                let dc = self.coeff_at(i, out) - ws.anchor_coeff[i];
+                vec_ops::axpy(dc, self.view.x.row(i), &mut ws.gd);
+            }
+            let eta = eta0 / (1.0 + s as f64 / s_total);
+            for k in 0..d {
+                let g = scale * ws.gd[k] + ws.gbar[k] + q[k] + cmu * out[k];
+                out[k] -= eta * g;
+            }
+        }
+    }
+}
+
+impl LocalLoss for StochasticProx<'_> {
+    fn dim(&self) -> usize {
+        self.inner.dim()
+    }
+
+    fn num_samples(&self) -> usize {
+        self.inner.num_samples()
+    }
+
+    fn value(&self, theta: &[f64]) -> f64 {
+        self.inner.value(theta)
+    }
+
+    fn grad_into(&self, theta: &[f64], out: &mut [f64]) {
+        self.inner.grad_into(theta, out)
+    }
+
+    fn smoothness(&self) -> f64 {
+        self.inner.smoothness()
+    }
+
+    fn add_hessian(&self, theta: &[f64], out: &mut crate::linalg::Matrix) {
+        self.inner.add_hessian(theta, out)
+    }
+
+    fn prox_argmin(&self, q: &[f64], c: f64, warm: &[f64]) -> Vec<f64> {
+        let mut out = vec![0.0; self.dim()];
+        self.solve_into(q, c, warm, &mut out);
+        out
+    }
+
+    fn prox_argmin_into(&self, q: &[f64], c: f64, warm: &[f64], out: &mut [f64]) {
+        self.solve_into(q, c, warm, out);
+    }
+
+    fn sample_view(&self) -> Option<SampleView<'_>> {
+        Some(self.view)
+    }
+}
+
+impl LocalSolver for StochasticProx<'_> {
+    fn prox_argmin(&self, q: &[f64], c: f64, warm: &[f64]) -> Vec<f64> {
+        LocalLoss::prox_argmin(self, q, c, warm)
+    }
+
+    fn prox_argmin_into(&self, q: &[f64], c: f64, warm: &[f64], out: &mut [f64]) {
+        self.solve_into(q, c, warm, out);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{partition_even, synthetic};
+    use crate::model::{LinRegLoss, LogRegLoss};
+    use crate::util::rng::Pcg64;
+
+    fn losses(seed: u64) -> (LinRegLoss, LogRegLoss) {
+        let mut rng = Pcg64::seeded(seed);
+        let lin = synthetic::linreg(90, 6, &mut rng);
+        let log = synthetic::logreg(90, 6, &mut rng);
+        let ls = &partition_even(&lin, 3)[1];
+        let gs = &partition_even(&log, 3)[1];
+        (
+            LinRegLoss::from_shard(ls, 1.0 / 90.0),
+            LogRegLoss::from_shard(gs, 1e-3 / 3.0, 1.0 / 90.0),
+        )
+    }
+
+    #[test]
+    fn degenerate_batch_is_bitwise_the_exact_prox() {
+        let (lin, log) = losses(1);
+        let mut rng = Pcg64::seeded(2);
+        for loss in [&lin as &dyn LocalLoss, &log as &dyn LocalLoss] {
+            let m = loss.num_samples();
+            for batch in [m, m + 5, 10 * m] {
+                let sp = StochasticProx::new(loss, batch, 1.0, 7, 0).unwrap();
+                assert!(sp.is_degenerate());
+                let q = rng.normal_vec(6);
+                let warm = rng.normal_vec(6);
+                let exact = loss.prox_argmin(&q, 0.9, &warm);
+                let mut out = vec![f64::NAN; 6];
+                LocalLoss::prox_argmin_into(&sp, &q, 0.9, &warm, &mut out);
+                assert_eq!(out, exact, "batch={batch}");
+            }
+        }
+    }
+
+    #[test]
+    fn replays_bitwise_for_the_same_seed_and_call_sequence() {
+        let (lin, _) = losses(3);
+        let a = StochasticProx::new(&lin, 8, 1.0, 11, 2).unwrap();
+        let b = StochasticProx::new(&lin, 8, 1.0, 11, 2).unwrap();
+        let mut rng = Pcg64::seeded(4);
+        let mut warm = vec![0.0; 6];
+        for _ in 0..12 {
+            let q = rng.normal_vec(6);
+            let mut oa = vec![0.0; 6];
+            let mut ob = vec![f64::NAN; 6];
+            LocalLoss::prox_argmin_into(&a, &q, 1.3, &warm, &mut oa);
+            LocalLoss::prox_argmin_into(&b, &q, 1.3, &warm, &mut ob);
+            assert_eq!(oa, ob);
+            warm = oa;
+        }
+    }
+
+    #[test]
+    fn seed_and_worker_change_the_trajectory() {
+        let (lin, _) = losses(5);
+        let base = StochasticProx::new(&lin, 8, 1.0, 11, 2).unwrap();
+        let other_seed = StochasticProx::new(&lin, 8, 1.0, 12, 2).unwrap();
+        let other_worker = StochasticProx::new(&lin, 8, 1.0, 11, 3).unwrap();
+        let q = vec![0.2; 6];
+        let warm = vec![0.1; 6];
+        let a = LocalLoss::prox_argmin(&base, &q, 1.0, &warm);
+        let b = LocalLoss::prox_argmin(&other_seed, &q, 1.0, &warm);
+        let c = LocalLoss::prox_argmin(&other_worker, &q, 1.0, &warm);
+        assert_ne!(a, b);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn inner_steps_descend_the_prox_objective() {
+        // φ(θ) = f(θ) + ⟨q,θ⟩ + (c/2)‖θ‖²: the SVRG steps must beat the
+        // warm start for both loss families.
+        let (lin, log) = losses(7);
+        let mut rng = Pcg64::seeded(8);
+        let phi = |loss: &dyn LocalLoss, th: &[f64], q: &[f64], c: f64| {
+            loss.value(th) + vec_ops::dot(q, th) + 0.5 * c * vec_ops::norm2_sq(th)
+        };
+        for loss in [&lin as &dyn LocalLoss, &log as &dyn LocalLoss] {
+            let sp = StochasticProx::new(loss, 6, 2.0, 21, 1).unwrap();
+            let c = 0.8;
+            let q = rng.normal_vec(6);
+            let warm = rng.normal_vec(6);
+            let before = phi(loss, &warm, &q, c);
+            let out = LocalLoss::prox_argmin(&sp, &q, c, &warm);
+            let after = phi(loss, &out, &q, c);
+            assert!(after < before, "{after} !< {before}");
+        }
+    }
+
+    #[test]
+    fn repeated_calls_approach_the_exact_prox() {
+        // Iterating the inexact prox on a *fixed* subproblem must drift
+        // toward the exact minimizer (the anchor refresh re-centers the
+        // variance reduction every R calls).
+        let (lin, _) = losses(9);
+        let sp = StochasticProx::new(&lin, 8, 2.0, 31, 0).unwrap();
+        let q = vec![0.05, -0.02, 0.01, 0.0, 0.03, -0.04];
+        let c = 1.0;
+        let exact = lin.prox_argmin(&q, c, &vec![0.0; 6]);
+        let mut th = vec![0.0; 6];
+        for _ in 0..60 {
+            let mut next = vec![0.0; 6];
+            LocalLoss::prox_argmin_into(&sp, &q, c, &th, &mut next);
+            th = next;
+        }
+        let d2 = vec_ops::dist2(&th, &exact);
+        assert!(d2 < 1e-3, "dist² to exact prox {d2}");
+    }
+
+    #[test]
+    fn mlp_loss_is_rejected_with_a_clear_error() {
+        let p = crate::model::mlp_problem(24, 2, 10);
+        let err = StochasticProx::new(&*p.losses[0], 4, 1.0, 1, 0).unwrap_err();
+        assert!(err.contains("per-sample view"), "{err}");
+    }
+
+    #[test]
+    fn bad_parameters_are_rejected() {
+        let (lin, _) = losses(11);
+        assert!(StochasticProx::new(&lin, 0, 1.0, 1, 0).is_err());
+        assert!(StochasticProx::new(&lin, 8, 0.0, 1, 0).is_err());
+        assert!(StochasticProx::new(&lin, 8, f64::NAN, 1, 0).is_err());
+        // Budget rounding: epochs·m/B below one step still runs one step.
+        let sp = StochasticProx::new(&lin, 8, 1e-6, 1, 0).unwrap();
+        assert_eq!(sp.steps_per_call(), 1);
+    }
+}

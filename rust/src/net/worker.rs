@@ -5,8 +5,9 @@
 //!
 //! Nothing algorithmic lives here: the link policy, solver, duals, and
 //! decoders come from the same factories the in-process paths use
-//! ([`coordinator::spec_wire`], [`NativeSolver`]), which is what makes a
-//! multi-process run replay an in-process run bit for bit.
+//! ([`coordinator::spec_wire`], [`coordinator::spec_solver`]), which is
+//! what makes a multi-process run replay an in-process run bit for bit —
+//! including S-GADMM's seeded minibatch trajectory.
 
 use super::frame::{read_frame, write_frame, Frame, Setup};
 use super::{accept_deadline, connect_retry, is_timeout, CountingStream, DEFAULT_TIMEOUT_MS};
@@ -16,7 +17,6 @@ use crate::coordinator::transport::{TransportError, WorkerTransport};
 use crate::coordinator::worker::{run_worker, LeaderMsg, NeighborInfo, Report, WorkerCtx};
 use crate::coordinator;
 use crate::model::Problem;
-use crate::runtime::NativeSolver;
 use crate::topology::graph::BipartiteGraph;
 use std::net::TcpListener;
 use std::time::{Duration, Instant};
@@ -218,7 +218,7 @@ pub fn run_remote_worker(
         neighbors,
         rho: rho * problem.data_weight,
         dim: problem.dim,
-        solver: Box::new(NativeSolver::new(&*problem.losses[rank])),
+        solver: coordinator::spec_solver(&problem, &setup.spec, setup.seed, rank)?,
         loss: &*problem.losses[rank],
         policy,
         transport: Box::new(&mut transport),

@@ -61,7 +61,7 @@ use super::exec::{ArenaSlots, Exec, SlotWriter};
 use crate::comm::{faulty_links, FaultSchedule, LinkPolicy, Meter, MsgBuf};
 use crate::linalg::vector as vec_ops;
 use crate::linalg::Arena;
-use crate::model::Problem;
+use crate::model::{LocalLoss, Problem};
 use crate::topology::chain::Chain;
 use crate::topology::graph::BipartiteGraph;
 use std::time::Instant;
@@ -128,6 +128,12 @@ pub struct GroupAdmmCore<'a> {
     /// Payload bits of this iteration's broadcast per worker; `None` =
     /// censored. Written in the update phases, billed in `meter_phase`.
     sent: Vec<Option<f64>>,
+    /// Optional per-worker prox override ([`GroupAdmmCore::set_prox`]):
+    /// when set, the phase task solves the local subproblem through these
+    /// solvers instead of `problem.losses` — the seam S-GADMM uses to swap
+    /// the exact prox for a stochastic one while objectives, gradients,
+    /// duals, and metering stay on the true losses.
+    prox: Option<Vec<Box<dyn LocalLoss + 'a>>>,
     /// Execution backend for the head/tail/dual phases (serial by
     /// default); see [`GroupAdmmCore::set_threads`].
     exec: Exec,
@@ -200,6 +206,7 @@ impl<'a> GroupAdmmCore<'a> {
             links,
             bufs: (0..n).map(|_| MsgBuf::new(d)).collect(),
             sent: vec![None; n],
+            prox: None,
             exec: Exec::Serial,
             scratch: LaneScratch::new(d),
         }
@@ -219,6 +226,19 @@ impl<'a> GroupAdmmCore<'a> {
     /// Current execution width (1 = serial).
     pub fn threads(&self) -> usize {
         self.exec.threads()
+    }
+
+    /// Install per-worker prox solvers that replace `problem.losses` in the
+    /// phase solve only. Everything else — objective, ACV, dual-feasibility
+    /// sweeps, metering — keeps reading the true losses, so an inexact
+    /// solver changes *where* the iterates go, never how they are measured.
+    pub fn set_prox(&mut self, solvers: Vec<Box<dyn LocalLoss + 'a>>) {
+        assert_eq!(
+            solvers.len(),
+            self.problem.num_workers(),
+            "need one prox solver per worker"
+        );
+        self.prox = Some(solvers);
     }
 
     /// The logical chain. Panics on a general-graph core — use
@@ -347,6 +367,7 @@ impl<'a> GroupAdmmCore<'a> {
             links,
             bufs,
             sent,
+            prox,
             exec,
             scratch,
             ..
@@ -354,6 +375,7 @@ impl<'a> GroupAdmmCore<'a> {
         let d = problem.dim;
         let rho_eff = *rho_eff;
         let problem: &Problem = *problem;
+        let prox: Option<&[Box<dyn LocalLoss + 'a>]> = prox.as_deref();
         let graph: &BipartiteGraph = graph;
         let lambda: &Arena = lambda;
         let lambda_slot: &[usize] = lambda_slot;
@@ -404,7 +426,10 @@ impl<'a> GroupAdmmCore<'a> {
                 // the warm start and, semantically, the old `theta_w` the
                 // allocating path passed by reference.
                 s.warm.copy_from_slice(theta_w);
-                problem.losses[w].prox_argmin_into(&s.q, c, &s.warm, theta_w);
+                match prox {
+                    Some(p) => p[w].prox_argmin_into(&s.q, c, &s.warm, theta_w),
+                    None => problem.losses[w].prox_argmin_into(&s.q, c, &s.warm, theta_w),
+                }
                 link_w.transmit_into(k, theta_w, buf_w);
                 *sent_w = if buf_w.is_skip() { None } else { Some(buf_w.payload_bits()) };
                 hat_w.copy_from_slice(link_w.public_view());

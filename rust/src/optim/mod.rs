@@ -26,6 +26,7 @@ pub mod iag;
 pub mod lag;
 pub mod lfgadmm;
 pub mod qgadmm;
+pub mod sgadmm;
 pub mod solver;
 
 pub use self::core::GroupAdmmCore;
@@ -42,6 +43,7 @@ pub use iag::{Iag, IagOrder};
 pub use lag::{Lag, LagVariant};
 pub use lfgadmm::Lfgadmm;
 pub use qgadmm::Qgadmm;
+pub use sgadmm::Sgadmm;
 
 use crate::comm::Meter;
 use crate::metrics::{IterRecord, Trace};

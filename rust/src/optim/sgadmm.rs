@@ -1,0 +1,204 @@
+//! S-GADMM — GADMM with stochastic local subproblems.
+//!
+//! Identical to [`super::Gadmm`] in topology, communication pattern, dual
+//! ascent, and metering; the only change is the primal update, which runs
+//! [`StochasticProx`]'s budgeted SVRG inner loop instead of the exact prox
+//! (see `model/stochastic.rs` for the algorithm and its determinism
+//! argument). The engine is therefore exactly as communication-efficient as
+//! GADMM per iteration while each iteration touches `O(epochs · m_s)`
+//! samples instead of solving an `m_s`-sample subproblem to optimality —
+//! the trade the `gadmm stream` driver measures at out-of-core scale.
+//!
+//! With `batch ≥ m_s` the stochastic prox delegates verbatim to the exact
+//! one, so the degenerate configuration reproduces plain GADMM bit for bit
+//! (pinned in `rust/tests/properties.rs`, mirroring the τ=0 censor pins).
+
+use super::core::GroupAdmmCore;
+use super::Engine;
+use crate::comm::{dense_links, Meter};
+use crate::model::{LocalLoss, Problem, StochasticProx};
+use crate::topology::chain::Chain;
+
+pub struct Sgadmm<'a> {
+    core: GroupAdmmCore<'a>,
+    batch: usize,
+    epochs: f64,
+}
+
+impl<'a> Sgadmm<'a> {
+    /// S-GADMM on the identity chain.
+    pub fn new(
+        problem: &'a Problem,
+        rho: f64,
+        batch: usize,
+        epochs: f64,
+        seed: u64,
+    ) -> Result<Sgadmm<'a>, String> {
+        Sgadmm::with_chain(
+            problem,
+            rho,
+            batch,
+            epochs,
+            seed,
+            Chain::sequential(problem.num_workers()),
+        )
+    }
+
+    /// S-GADMM on an explicit logical chain. Fails when a worker's loss has
+    /// no per-sample view (e.g. the MLP) or the batch/epochs knobs are
+    /// invalid. `seed` drives every worker's minibatch sampler — the same
+    /// seed must reach all media for cross-medium bit-identity, which the
+    /// spec layer guarantees by routing the session's quantizer seed here.
+    pub fn with_chain(
+        problem: &'a Problem,
+        rho: f64,
+        batch: usize,
+        epochs: f64,
+        seed: u64,
+        chain: Chain,
+    ) -> Result<Sgadmm<'a>, String> {
+        let n = problem.num_workers();
+        let mut solvers: Vec<Box<dyn LocalLoss + 'a>> = Vec::with_capacity(n);
+        for w in 0..n {
+            solvers.push(Box::new(StochasticProx::new(
+                &*problem.losses[w],
+                batch,
+                epochs,
+                seed,
+                w,
+            )?));
+        }
+        let links = dense_links(problem.dim, n);
+        let mut core = GroupAdmmCore::new(problem, rho, chain, links);
+        core.set_prox(solvers);
+        Ok(Sgadmm { core, batch, epochs })
+    }
+
+    pub fn rho(&self) -> f64 {
+        self.core.rho
+    }
+
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    pub fn epochs(&self) -> f64 {
+        self.epochs
+    }
+
+    /// See [`GroupAdmmCore::set_threads`]; any width is bit-identical
+    /// (the stochastic prox state is per-worker, not per-lane).
+    pub fn set_threads(&mut self, threads: usize) {
+        self.core.set_threads(threads);
+    }
+
+    /// See [`GroupAdmmCore::install_faults`].
+    pub fn install_faults(&mut self, schedule: &crate::comm::FaultSchedule) {
+        self.core.install_faults(schedule);
+    }
+
+    pub fn chain(&self) -> &Chain {
+        self.core.chain()
+    }
+
+    pub fn thetas(&self) -> &crate::linalg::Arena {
+        self.core.thetas()
+    }
+}
+
+impl Engine for Sgadmm<'_> {
+    fn name(&self) -> String {
+        format!(
+            "S-GADMM(rho={},batch={},epochs={})",
+            self.core.rho, self.batch, self.epochs
+        )
+    }
+
+    fn step(&mut self, k: usize, meter: &mut Meter) {
+        self.core.step(k, meter);
+    }
+
+    fn objective(&self) -> f64 {
+        self.core.objective()
+    }
+
+    fn acv(&self) -> f64 {
+        self.core.acv()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+    use crate::optim::{run, Gadmm, RunOptions};
+    use crate::topology::UnitCosts;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn converges_on_linreg() {
+        let ds = synthetic::linreg(240, 8, &mut Pcg64::seeded(1));
+        let p = Problem::from_dataset(&ds, 4);
+        let mut e = Sgadmm::new(&p, 5.0, 16, 2.0, 7).unwrap();
+        let trace = run(&mut e, &p, &UnitCosts, &RunOptions::with_target(1e-4, 8000));
+        assert!(
+            trace.iters_to_target().is_some(),
+            "final err {}",
+            trace.final_error()
+        );
+    }
+
+    #[test]
+    fn converges_on_logreg() {
+        let ds = synthetic::logreg(240, 6, &mut Pcg64::seeded(2));
+        let p = Problem::from_dataset(&ds, 4);
+        let mut e = Sgadmm::new(&p, 0.3, 16, 2.0, 7).unwrap();
+        let trace = run(&mut e, &p, &UnitCosts, &RunOptions::with_target(1e-4, 8000));
+        assert!(
+            trace.iters_to_target().is_some(),
+            "final err {}",
+            trace.final_error()
+        );
+    }
+
+    #[test]
+    fn replays_bitwise_for_the_same_seed() {
+        let ds = synthetic::linreg(120, 6, &mut Pcg64::seeded(3));
+        let p = Problem::from_dataset(&ds, 4);
+        let run_once = || {
+            let mut e = Sgadmm::new(&p, 5.0, 8, 1.0, 11).unwrap();
+            run(&mut e, &p, &UnitCosts, &RunOptions::with_target(1e-4, 200))
+        };
+        let (a, b) = (run_once(), run_once());
+        assert!(a.same_path(&b), "same seed must replay bitwise");
+        let mut c = Sgadmm::new(&p, 5.0, 8, 1.0, 12).unwrap();
+        let tc = run(&mut c, &p, &UnitCosts, &RunOptions::with_target(1e-4, 200));
+        assert!(!a.same_path(&tc), "different seed must change the path");
+    }
+
+    #[test]
+    fn charges_the_same_wire_as_gadmm() {
+        // The stochastic prox changes compute only: per-iteration TC and
+        // bits are exactly GADMM's.
+        let ds = synthetic::linreg(120, 6, &mut Pcg64::seeded(4));
+        let p = Problem::from_dataset(&ds, 4);
+        let mut s = Sgadmm::new(&p, 5.0, 8, 1.0, 7).unwrap();
+        let mut g = Gadmm::new(&p, 5.0);
+        let costs = UnitCosts;
+        let (mut ms, mut mg) = (Meter::new(&costs), Meter::new(&costs));
+        for k in 0..10 {
+            s.step(k, &mut ms);
+            g.step(k, &mut mg);
+        }
+        assert_eq!(ms.tc_unit, mg.tc_unit);
+        assert_eq!(ms.bits, mg.bits);
+        assert_eq!(ms.rounds, mg.rounds);
+    }
+
+    #[test]
+    fn mlp_problem_is_rejected() {
+        let p = crate::model::mlp_problem(24, 2, 5);
+        let err = Sgadmm::new(&p, 1.0, 4, 1.0, 1).unwrap_err();
+        assert!(err.contains("per-sample view"), "{err}");
+    }
+}

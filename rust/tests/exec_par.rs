@@ -124,6 +124,29 @@ fn randomized_configs_are_invariant_across_widths_1_2_4() {
 }
 
 #[test]
+fn sgadmm_is_bit_identical_across_widths_1_2_4() {
+    // S-GADMM's stochastic prox adds per-worker mutable state (anchor,
+    // call counter, minibatch scratch) to the pooled phase tasks. The
+    // state is owned per worker — never per lane — and the sampler is a
+    // pure function of (seed, worker, draw), so width must stay a pure
+    // wall-clock knob for the stochastic engine too. batch 8 < m_s = 20
+    // keeps the SVRG path (not the degenerate exact-prox delegation) on
+    // every worker.
+    let problem = linreg_problem(6, 5);
+    let opts = RunOptions::with_target(1e-4, 2_000);
+    let spec = AlgoSpec::parse("sgadmm:rho=5,batch=8,epochs=1").unwrap();
+    let serial = run_at(spec, 1, &problem, &opts);
+    assert!(!serial.records.is_empty(), "sgadmm serial run produced no records");
+    for width in [2usize, 4] {
+        let pooled = run_at(spec, width, &problem, &opts);
+        assert!(
+            serial.same_path(&pooled),
+            "sgadmm diverged between serial and threads={width}"
+        );
+    }
+}
+
+#[test]
 fn width_does_not_change_engine_names_or_seeds() {
     // The knob must be invisible everywhere results are keyed: engine
     // display names (trace identity) and sweep cell engine seeds.

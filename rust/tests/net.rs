@@ -105,11 +105,39 @@ fn layer_scheduled_spec_is_bit_identical_over_localhost() {
 }
 
 #[test]
+fn stochastic_spec_is_bit_identical_over_localhost() {
+    // S-GADMM crosses the transport seam end to end: the Setup frame
+    // carries (spec, seed), every spawned worker process rebuilds its own
+    // seeded StochasticProx through coordinator::spec_solver, and the
+    // minibatch draws — a pure function of (seed, worker, draw) — replay
+    // the channel coordinator's exactly, so a real lead + 4-process
+    // deployment must take the identical deterministic path.
+    let grid = tiny_grid();
+    let roster = [AlgoSpec::parse("sgadmm:rho=5,batch=64,epochs=2").unwrap()];
+    let out = netbench::run_with(&grid, &roster, true, 1, Path::new(EXE)).unwrap();
+    assert_eq!(out.rows.len(), 1);
+    let row = &out.rows[0];
+    assert!(
+        row.identical(),
+        "{} diverged across the network",
+        row.spec.spec_string()
+    );
+    assert!(row.wire_bytes > 0, "no wire traffic recorded");
+    assert!(!row.net.trace.records.is_empty(), "net run did no work");
+    assert!(
+        row.net.trace.algorithm.starts_with("S-GADMM-dist("),
+        "unexpected engine label {}",
+        row.net.trace.algorithm
+    );
+}
+
+#[test]
 fn setup_frames_roundtrip_every_distributable_spec() {
     let lfgadmm = AlgoSpec::parse("lfgadmm:rho=5,layers=30-20,periods=1-2").unwrap();
+    let sgadmm = AlgoSpec::parse("sgadmm:rho=5,batch=64,epochs=2").unwrap();
     for spec in netbench::net_roster(5.0, 8, DEFAULT_CENSOR_TAU, DEFAULT_CENSOR_MU)
         .into_iter()
-        .chain([lfgadmm])
+        .chain([lfgadmm, sgadmm])
     {
         for spec in [spec, spec.with_fault(0.1)] {
             let setup = Setup {
